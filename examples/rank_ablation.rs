@@ -1,0 +1,61 @@
+//! Figure-2-style rank ablation on one model: sweep the low-rank budget
+//! (0/5/10/20/30% of the matrix size) and plot average task accuracy +
+//! PPL against the FP16 and QuaRot baselines.
+//!
+//!   cargo run --release --example rank_ablation -- [--model nano] [--fast]
+//!       [--group 32]
+
+use anyhow::Result;
+use lrc::data::Corpus;
+use lrc::experiments::{self, EvalBudget};
+use lrc::pipeline::Method;
+use lrc::quant::QuantConfig;
+use lrc::runtime::{Engine, ModelArtifacts};
+use lrc::util::{render_table, Args};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let model = args.get_or("model", "nano");
+    let group = args.get("group").and_then(|g| g.parse().ok());
+    let budget = if args.has("fast") { EvalBudget::fast() } else { EvalBudget::full() };
+
+    let art = lrc::artifacts_dir();
+    let engine = Engine::cpu()?;
+    let arts = ModelArtifacts::load(&art.join("models").join(&model))?;
+    let corpus = Corpus::load(&art.join("corpus/wiki_syn.txt"))?;
+    let tasks = experiments::load_tasks(&art, budget)?;
+
+    let fp = experiments::evaluate_graph(&engine, &arts, "fwd_fp_b8", None,
+                                         &corpus, &tasks, budget, "FP16")?;
+    let mut rows = vec![fp.cells()];
+
+    for pct in [0usize, 5, 10, 20, 30] {
+        let graph = experiments::quant_graph_name(pct, group, false, 8);
+        let method = if pct == 0 { Method::Quarot } else { Method::Lrc };
+        let cfg = QuantConfig { a_group: group,
+                                rank_pct: pct as f64 / 100.0,
+                                ..Default::default() };
+        let (mut scores, _) = experiments::quantize_and_evaluate(
+            &engine, &arts, &corpus, &tasks, &graph, method, &cfg, 128,
+            budget)?;
+        scores.label = if pct == 0 { "QuaRot (rank 0)".into() }
+                       else { format!("LRC rank {pct}%") };
+        eprintln!("  {} done", scores.label);
+        rows.push(scores.cells());
+    }
+
+    println!("\nFigure-2-shaped sweep for `{model}` (group {group:?}):\n");
+    println!("{}", render_table(&experiments::TABLE_HEADERS, &rows));
+
+    // ascii sparkline of avg accuracy vs rank
+    println!("avg accuracy vs rank budget:");
+    let fp_avg: f64 = rows[0].last().unwrap().parse().unwrap();
+    for row in &rows[1..] {
+        let avg: f64 = row.last().unwrap().parse().unwrap();
+        let bars = ((avg / fp_avg.max(1e-9)) * 50.0) as usize;
+        println!("  {:<16} {} {:.3}", row[0], "#".repeat(bars.min(60)), avg);
+    }
+    println!("  {:<16} {} {:.3}  (FP16 reference)", "FP16",
+             "#".repeat(50), fp_avg);
+    Ok(())
+}

@@ -1,0 +1,109 @@
+//! Serving demo: quantize the `small` model with LRC, then serve scoring
+//! requests through the dynamic-batching coordinator and report
+//! latency/throughput — the serving-paper e2e driver.
+//!
+//!   cargo run --release --example serve_quantized -- [--requests 128]
+//!       [--concurrency 16] [--max-wait-ms 5] [--fp]
+//!
+//! Compares the W4A4+LRC pipeline against the FP16 graph under identical
+//! traffic (open-loop batch of closed-loop clients).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use lrc::coordinator::{BatchPolicy, ServerConfig, ServerHandle};
+use lrc::data::Corpus;
+use lrc::pipeline::Method;
+use lrc::quant::QuantConfig;
+use lrc::runtime::{Engine, ModelArtifacts};
+use lrc::util::Args;
+
+fn drive(handle: Arc<ServerHandle>, seqs: Vec<Vec<i32>>, n_requests: usize,
+         concurrency: usize) -> Result<f64> {
+    let done = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+    let t0 = Instant::now();
+    let mut clients = Vec::new();
+    for c in 0..concurrency {
+        let h = handle.clone();
+        let d = done.clone();
+        let seqs = seqs.clone();
+        clients.push(std::thread::spawn(move || -> Result<f64> {
+            let mut nll = 0.0;
+            let mut i = c;
+            let mut sent = 0;
+            while d.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+                < n_requests
+            {
+                let rx = h.submit(seqs[i % seqs.len()].clone())?;
+                let resp = rx.recv()?;
+                nll += resp.mean_nll;
+                i += concurrency;
+                sent += 1;
+            }
+            Ok(if sent > 0 { nll / sent as f64 } else { 0.0 })
+        }));
+    }
+    let mut mean = 0.0;
+    for c in clients {
+        mean += c.join().expect("client panicked")?;
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    println!("  wall time {elapsed:.2}s, mean client NLL {:.3}",
+             mean / concurrency as f64);
+    Ok(elapsed)
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let n_requests = args.get_usize("requests", 128);
+    let concurrency = args.get_usize("concurrency", 16);
+    let art = lrc::artifacts_dir();
+    let model_dir = art.join("models/small");
+
+    // 1. quantize (or reuse) the LRC-10% bundle
+    let quant_dir = model_dir.join("quant/LRC1_fwd_w4a4_r10_b8");
+    if !quant_dir.join("manifest.json").exists() {
+        println!("quantizing small with LRC(1) @ 10% ...");
+        let engine = Engine::cpu()?;
+        let arts = ModelArtifacts::load(&model_dir)?;
+        let corpus = Corpus::load(&art.join("corpus/wiki_syn.txt"))?;
+        lrc::pipeline::quantize_and_save(
+            &engine, &arts, &corpus, "fwd_w4a4_r10_b8", Method::Lrc,
+            &QuantConfig::default(), 128)?;
+    }
+
+    let corpus = Corpus::load(&art.join("corpus/wiki_syn.txt"))?;
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 5) as u64),
+        max_queue: 4096,
+    };
+
+    let variants: Vec<(&str, String, Option<std::path::PathBuf>)> = if args.has("fp") {
+        vec![("FP16", "fwd_fp".into(), None)]
+    } else {
+        vec![
+            ("FP16", "fwd_fp".into(), None),
+            ("W4A4+LRC(10%)", "fwd_w4a4_r10".into(), Some(quant_dir.clone())),
+        ]
+    };
+
+    for (label, prefix, quant) in variants {
+        println!("\n== serving {label} ({n_requests} requests, \
+                  {concurrency} concurrent clients) ==");
+        let handle = Arc::new(ServerHandle::start(ServerConfig {
+            model_dir: model_dir.clone(),
+            graph_prefix: prefix,
+            quant_dir: quant,
+            policy: policy.clone(),
+        })?);
+        let seqs = corpus.eval_sequences(handle.seq_len, 64);
+        drive(handle.clone(), seqs, n_requests, concurrency)?;
+        let snap = Arc::try_unwrap(handle)
+            .map_err(|_| anyhow::anyhow!("clients still hold the server"))?
+            .shutdown();
+        println!("{}", snap.render());
+    }
+    Ok(())
+}

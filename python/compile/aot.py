@@ -1,0 +1,427 @@
+"""AOT exporter — the single build-time entry point (`make artifacts`).
+
+Emits everything the self-contained rust binary needs:
+
+  artifacts/
+    corpus/{wiki_syn,alpaca_syn}.txt      calibration + eval text
+    tasks/{pq,hs,ae,ac,wg,la}_syn.json    lm-eval-substitute suites
+    ckpt/<model>.npz                      trained fp checkpoints (cache)
+    train_log_<model>.json                loss curves (EXPERIMENTS.md §E2E)
+    models/<model>/weights.bin            rotated fp32 tensor bundle
+    models/<model>/manifest.json          tensor table + model config
+    models/<model>/graphs.json            HLO graph registry (param order!)
+    models/<model>/<graph>.hlo.txt        lowered HLO text, one per variant
+    models/<model>/golden_*.json          logits goldens for rust tests
+    models/<model>/golden_quant/          a quant bundle for runtime goldens
+    micro/*.hlo.txt + micro/graphs.json   Tables 6–8 micro-latency graphs
+
+HLO is emitted as *text* via mlir→XlaComputation→as_hlo_text() — the
+xla_extension 0.5.1 proto parser rejects jax≥0.5 serialized protos
+(64-bit instruction ids); the text parser reassigns ids cleanly.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as D
+from . import lrc as A
+from . import model as M
+from . import train as T
+
+FORMAT = "lrc-bundle-v1"
+RANK_PCTS = [0, 5, 10, 20, 30]       # Figure 2/4 sweep (0 == QuaRot)
+ACT_GROUP = 32                       # paper's 128, scaled to tiny dims
+EVAL_BATCH = 8
+TRAIN_STEPS = {"nano": 500, "small": 400, "moe": 350}
+
+# Tables 6–8 micro-latency: paper dims / 16, ranks / 16.
+MICRO_DIMS = [(688, 256), (864, 320), (1792, 512)]
+MICRO_RANKS = [0, 8, 16, 32, 64]
+MICRO_M = 512                        # tokens per microbench call
+
+
+# ---------------------------------------------------------------------------
+# HLO lowering
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(fn, *specs) -> str:
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def f32spec(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def i32spec(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# tensor bundles (shared binary format with rust: f32 LE + json manifest)
+# ---------------------------------------------------------------------------
+
+def write_bundle(dirpath: str, tensors: dict[str, np.ndarray],
+                 extra: dict | None = None, bin_name: str = "weights.bin",
+                 manifest_name: str = "manifest.json") -> None:
+    os.makedirs(dirpath, exist_ok=True)
+    table, offset = [], 0
+    with open(os.path.join(dirpath, bin_name), "wb") as f:
+        for name, arr in tensors.items():
+            a = np.ascontiguousarray(np.asarray(arr, np.float32))
+            f.write(a.tobytes())
+            table.append({"name": name, "shape": list(a.shape),
+                          "offset": offset})
+            offset += a.size
+    man = {"format": FORMAT, "bin": bin_name, "tensors": table}
+    if extra:
+        man.update(extra)
+    with open(os.path.join(dirpath, manifest_name), "w") as f:
+        json.dump(man, f, indent=1)
+
+
+# ---------------------------------------------------------------------------
+# graph builders — each returns (fn, specs, param_names)
+# ---------------------------------------------------------------------------
+
+def fp_param_names(cfg) -> list[str]:
+    return [n for n, _ in M.param_spec(cfg)]
+
+
+def build_fwd_fp(cfg, batch):
+    names = fp_param_names(cfg)
+    shapes = dict(M.param_spec(cfg))
+
+    def fn(*args):
+        params = dict(zip(names, args[:-1]))
+        return (M.forward(params, args[-1], cfg, rotated=True),)
+
+    specs = [f32spec(*shapes[n]) for n in names] + \
+        [i32spec(batch, cfg.seq_len)]
+    return fn, specs, [f"fp:{n}" for n in names] + ["tokens"]
+
+
+def quant_layer_ranks(cfg, pct: float) -> dict[str, int]:
+    shapes = dict(M.param_spec(cfg))
+    return {ln: A.rank_for_pct(shapes[ln][0], shapes[ln][1], pct / 100.0)
+            for ln in M.quantized_layer_names(cfg)}
+
+
+def build_fwd_quant(cfg, batch, pct: float, a_group, identity_qa=False):
+    """Quantized forward: fp params minus quantized weights, plus per-layer
+    (wq[, u, v], clip) in quantized_layer_names order, plus tokens."""
+    qnames = M.quantized_layer_names(cfg)
+    ranks = quant_layer_ranks(cfg, pct)
+    shapes = dict(M.param_spec(cfg))
+    fpnames = [n for n in fp_param_names(cfg) if n not in qnames]
+    setting = M.QuantSetting(rank_pct=pct / 100.0, a_group=a_group,
+                             identity_qa=identity_qa)
+
+    specs, pnames = [], []
+    for n in fpnames:
+        specs.append(f32spec(*shapes[n]))
+        pnames.append(f"fp:{n}")
+    for ln in qnames:
+        dout, din = shapes[ln]
+        specs.append(f32spec(dout, din))
+        pnames.append(f"q:{ln}:wq")
+        if ranks[ln] > 0:
+            specs.append(f32spec(dout, ranks[ln]))
+            pnames.append(f"q:{ln}:u")
+            specs.append(f32spec(din, ranks[ln]))
+            pnames.append(f"q:{ln}:v")
+        if not identity_qa:
+            # weight-only graphs never read the clip scalar; emitting it
+            # would get DCE'd and break the positional param contract
+            specs.append(f32spec(1))
+            pnames.append(f"q:{ln}:clip")
+    specs.append(i32spec(batch, cfg.seq_len))
+    pnames.append("tokens")
+
+    def fn(*args):
+        it = iter(args)
+        params = {n: next(it) for n in fpnames}
+        qparams = {}
+        for ln in qnames:
+            qp = {"wq": next(it)}
+            if ranks[ln] > 0:
+                qp["u"] = next(it)
+                qp["v"] = next(it)
+            if not identity_qa:
+                qp["clip"] = next(it)[0]
+            qparams[ln] = qp
+        tokens = next(it)
+        return (M.forward(params, tokens, cfg, rotated=True,
+                          qparams=qparams, setting=setting),)
+
+    return fn, specs, pnames, ranks
+
+
+def build_acts(cfg, batch):
+    """Calibration graph: one flat f32 vector concatenating every collected
+    activation (manifest records offsets) — single-output keeps the rust
+    side trivial."""
+    names = fp_param_names(cfg)
+    shapes = dict(M.param_spec(cfg))
+    anames = M.activation_names(cfg)
+
+    def fn(*args):
+        params = dict(zip(names, args[:-1]))
+        logits, acts = M.forward(params, args[-1], cfg, rotated=True,
+                                 collect_acts=True)
+        # trailing logits checksum keeps head/ln_f parameters live (XLA
+        # would otherwise DCE them and re-number the remaining params,
+        # breaking the manifest's positional contract with rust)
+        parts = [acts[a].reshape(-1) for a in anames]
+        parts.append(jnp.sum(logits).reshape(1))
+        return (jnp.concatenate(parts),)
+
+    specs = [f32spec(*shapes[n]) for n in names] + \
+        [i32spec(batch, cfg.seq_len)]
+
+    # offsets table
+    rows = batch * cfg.seq_len
+    table, off = [], 0
+    for a in anames:
+        dim = cfg.d_ff if "ffn_had" in a else cfg.d_model
+        table.append({"name": a, "rows": rows, "dim": dim, "offset": off})
+        off += rows * dim
+    return fn, specs, [f"fp:{n}" for n in names] + ["tokens"], table
+
+
+# ---------------------------------------------------------------------------
+# micro-latency graphs (Tables 6–8)
+# ---------------------------------------------------------------------------
+
+def build_micro(dout, din, rank):
+    from .kernels import quant as kq
+    if rank == 0:
+        def fn(x, w, clip):
+            return (kq.w4a4_linear(x, w, clip[0]),)
+        specs = [f32spec(MICRO_M, din), f32spec(dout, din), f32spec(1)]
+        names = ["x", "w", "clip"]
+    else:
+        def fn(x, w, u, v, clip):
+            return (kq.w4a4_linear(x, w, clip[0], u, v),)
+        specs = [f32spec(MICRO_M, din), f32spec(dout, din),
+                 f32spec(dout, rank), f32spec(din, rank), f32spec(1)]
+        names = ["x", "w", "u", "v", "clip"]
+    return fn, specs, names
+
+
+def build_micro_fp(dout, din):
+    def fn(x, w):
+        return (x @ w.T,)
+    return fn, [f32spec(MICRO_M, din), f32spec(dout, din)], ["x", "w"]
+
+
+# ---------------------------------------------------------------------------
+# goldens
+# ---------------------------------------------------------------------------
+
+def logits_digest(logits: np.ndarray) -> dict:
+    flat = np.asarray(logits, np.float64).reshape(-1)
+    return {"shape": list(logits.shape),
+            "head": [float(v) for v in flat[:256]],
+            "sum": float(flat.sum()), "abs_sum": float(np.abs(flat).sum())}
+
+
+def make_goldens(cfg, params_f32, out_dir, seed=123):
+    """Golden logits for the rust runtime integration tests.
+
+    golden_fp:    fp graph on a fixed batch.
+    golden_quant: RTN-quantized weights + small random U,V through the
+                  quantized graph (validates the kernel path end-to-end).
+    """
+    rng = np.random.RandomState(seed)
+    tokens = rng.randint(0, cfg.vocab, (EVAL_BATCH, cfg.seq_len)).astype(np.int32)
+    logits = M.forward(params_f32, jnp.array(tokens), cfg, rotated=True)
+    with open(os.path.join(out_dir, "golden_fp.json"), "w") as f:
+        json.dump({"graph": f"fwd_fp_b{EVAL_BATCH}",
+                   "tokens": tokens.reshape(-1).tolist(),
+                   "logits": logits_digest(np.asarray(logits))}, f)
+
+    # quant golden at rank pct 10, per-token act quant
+    pct = 10
+    ranks = quant_layer_ranks(cfg, pct)
+    shapes = dict(M.param_spec(cfg))
+    qtensors, qparams = {}, {}
+    for ln in M.quantized_layer_names(cfg):
+        dout, din = shapes[ln]
+        w = np.asarray(params_f32[ln], np.float64)
+        wq = A.rtn_quantize(w, 4)
+        k = ranks[ln]
+        u = rng.randn(dout, k).astype(np.float32) * 0.01
+        v = rng.randn(din, k).astype(np.float32) * 0.01
+        qtensors[f"{ln}.wq"] = wq.astype(np.float32)
+        qtensors[f"{ln}.u"] = u
+        qtensors[f"{ln}.v"] = v
+        qtensors[f"{ln}.clip"] = np.array([0.9], np.float32)
+        qparams[ln] = {"wq": jnp.asarray(wq, jnp.float32),
+                       "u": jnp.asarray(u), "v": jnp.asarray(v),
+                       "clip": jnp.float32(0.9)}
+    write_bundle(os.path.join(out_dir, "golden_quant"), qtensors,
+                 extra={"kind": "quant", "rank_pct": pct, "a_group": None})
+    setting = M.QuantSetting(rank_pct=pct / 100.0)
+    qlogits = M.forward(params_f32, jnp.array(tokens), cfg, rotated=True,
+                        qparams=qparams, setting=setting)
+    with open(os.path.join(out_dir, "golden_quant.json"), "w") as f:
+        json.dump({"graph": f"fwd_w4a4_r{pct}_b{EVAL_BATCH}",
+                   "tokens": tokens.reshape(-1).tolist(),
+                   "logits": logits_digest(np.asarray(qlogits))}, f)
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def export_model(cfg, art_dir: str, fast: bool = False) -> None:
+    mdir = os.path.join(art_dir, "models", cfg.name)
+    os.makedirs(mdir, exist_ok=True)
+    ckpt = os.path.join(art_dir, "ckpt", f"{cfg.name}.npz")
+    os.makedirs(os.path.dirname(ckpt), exist_ok=True)
+
+    if os.path.exists(ckpt):
+        params = T.load_params(ckpt)
+        print(f"[aot] {cfg.name}: loaded cached checkpoint")
+    else:
+        with open(os.path.join(art_dir, "corpus", "wiki_syn.txt")) as f:
+            corpus = f.read()
+        steps = 50 if fast else TRAIN_STEPS[cfg.name]
+        params, _ = T.train(
+            cfg, corpus, steps=steps,
+            log_path=os.path.join(art_dir, f"train_log_{cfg.name}.json"))
+        T.save_params(params, ckpt)
+
+    # QuaRot stage (1): rotation fusion; everything downstream sees only
+    # the rotated model.
+    rotated = M.fuse_rotations(params, cfg)
+    params_f32 = M.params_to_f32(rotated)
+    write_bundle(mdir, {k: np.asarray(v) for k, v in params_f32.items()},
+                 extra={"kind": "model", "model": {
+                     "name": cfg.name, "d_model": cfg.d_model,
+                     "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+                     "d_ff": cfg.d_ff, "n_experts": cfg.n_experts,
+                     "seq_len": cfg.seq_len, "vocab": cfg.vocab,
+                     "param_count": cfg.param_count()}})
+
+    graphs = {}
+
+    def emit(name, fn, specs, pnames, **meta):
+        path = os.path.join(mdir, f"{name}.hlo.txt")
+        if not os.path.exists(path):
+            text = to_hlo_text(fn, *specs)
+            with open(path, "w") as f:
+                f.write(text)
+        graphs[name] = {"file": f"{name}.hlo.txt", "params": pnames, **meta}
+        print(f"[aot] {cfg.name}: {name} ok")
+
+    # fp forwards
+    for b in (1, EVAL_BATCH):
+        fn, specs, pnames = build_fwd_fp(cfg, b)
+        emit(f"fwd_fp_b{b}", fn, specs, pnames, batch=b)
+
+    # activation collection
+    fn, specs, pnames, table = build_acts(cfg, EVAL_BATCH)
+    emit(f"acts_b{EVAL_BATCH}", fn, specs, pnames, batch=EVAL_BATCH,
+         acts=table)
+
+    # W4A4 sweeps
+    pcts = [0, 10] if fast else RANK_PCTS
+    for pct in pcts:
+        for grp in (None, ACT_GROUP):
+            fn, specs, pnames, ranks = build_fwd_quant(
+                cfg, EVAL_BATCH, pct, grp)
+            tag = f"fwd_w4a4_r{pct}" + (f"_g{grp}" if grp else "")
+            emit(f"{tag}_b{EVAL_BATCH}", fn, specs, pnames, batch=EVAL_BATCH,
+                 quant={"rank_pct": pct, "a_group": grp, "ranks": ranks,
+                        "weight_only": False})
+
+    # weight-only (Table 3)
+    for pct in (0, 10):
+        fn, specs, pnames, ranks = build_fwd_quant(
+            cfg, EVAL_BATCH, pct, None, identity_qa=True)
+        emit(f"fwd_w4_r{pct}_b{EVAL_BATCH}", fn, specs, pnames,
+             batch=EVAL_BATCH,
+             quant={"rank_pct": pct, "a_group": None, "ranks": ranks,
+                    "weight_only": True})
+
+    # serving buckets (LRC-10 variant) for the coordinator demo
+    if cfg.name == "small" and not fast:
+        for b in (1, 4):
+            fn, specs, pnames, ranks = build_fwd_quant(cfg, b, 10, None)
+            emit(f"fwd_w4a4_r10_b{b}", fn, specs, pnames, batch=b,
+                 quant={"rank_pct": 10, "a_group": None, "ranks": ranks,
+                        "weight_only": False})
+
+    with open(os.path.join(mdir, "graphs.json"), "w") as f:
+        json.dump({"format": FORMAT, "graphs": graphs}, f, indent=1)
+
+    make_goldens(cfg, params_f32, mdir)
+    print(f"[aot] {cfg.name}: goldens ok")
+
+
+def export_micro(art_dir: str) -> None:
+    mdir = os.path.join(art_dir, "micro")
+    os.makedirs(mdir, exist_ok=True)
+    graphs = {}
+    for dout, din in MICRO_DIMS:
+        fn, specs, names = build_micro_fp(dout, din)
+        name = f"micro_fp_{dout}x{din}"
+        path = os.path.join(mdir, f"{name}.hlo.txt")
+        if not os.path.exists(path):
+            open(path, "w").write(to_hlo_text(fn, *specs))
+        graphs[name] = {"file": f"{name}.hlo.txt", "dout": dout, "din": din,
+                        "rank": None, "m": MICRO_M, "params": names}
+        for rank in MICRO_RANKS:
+            fn, specs, names = build_micro(dout, din, rank)
+            name = f"micro_w4a4_{dout}x{din}_r{rank}"
+            path = os.path.join(mdir, f"{name}.hlo.txt")
+            if not os.path.exists(path):
+                open(path, "w").write(to_hlo_text(fn, *specs))
+            graphs[name] = {"file": f"{name}.hlo.txt", "dout": dout,
+                            "din": din, "rank": rank, "m": MICRO_M,
+                            "params": names}
+        print(f"[aot] micro {dout}x{din} ok")
+    with open(os.path.join(mdir, "graphs.json"), "w") as f:
+        json.dump({"format": FORMAT, "graphs": graphs}, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="nano,small,moe")
+    ap.add_argument("--fast", action="store_true",
+                    help="tiny training + reduced graph set (CI smoke)")
+    ap.add_argument("--skip-micro", action="store_true")
+    args = ap.parse_args()
+
+    art = os.path.abspath(args.out_dir)
+    os.makedirs(art, exist_ok=True)
+    if not os.path.exists(os.path.join(art, "corpus", "wiki_syn.txt")):
+        D.write_all(art)
+        print("[aot] corpora + tasks ok")
+
+    for name in args.models.split(","):
+        export_model(M.CONFIGS[name], art, fast=args.fast)
+    if not args.skip_micro:
+        export_micro(art)
+
+    with open(os.path.join(art, "STAMP"), "w") as f:
+        f.write("ok\n")
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,267 @@
+"""Synthetic corpora + downstream-task generation (WikiText-2 / Alpaca substitutes).
+
+The paper calibrates on 128 random WikiText-2 sequences and evaluates on
+lm-eval tasks. We cannot ship those datasets, so we generate two seeded,
+grammar-based corpora with the statistical properties the LRC algorithm
+exploits: a heavy-tailed token distribution, long-range topical structure
+(paragraphs reuse topic nouns) and therefore non-isotropic activation
+covariances.  Everything is deterministic given the seed; python writes the
+corpus files into artifacts/ and rust only ever *reads* them, so both layers
+see byte-identical data.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import random
+
+# ---------------------------------------------------------------------------
+# Vocabulary for the grammar.  Word inventories are grouped by topic so that
+# a paragraph drawn from one topic has a distinct unigram distribution —
+# this is what gives activations their low-rank-friendly structure.
+# ---------------------------------------------------------------------------
+
+TOPICS = {
+    "astronomy": {
+        "nouns": ["star", "comet", "orbit", "nebula", "telescope", "planet",
+                  "galaxy", "eclipse", "meteor", "satellite"],
+        "verbs": ["orbits", "observes", "radiates", "collapses", "drifts",
+                  "illuminates"],
+        "adjs": ["distant", "luminous", "frozen", "massive", "faint"],
+    },
+    "cooking": {
+        "nouns": ["flour", "oven", "broth", "spice", "skillet", "dough",
+                  "butter", "recipe", "garlic", "stew"],
+        "verbs": ["simmers", "rises", "caramelizes", "seasons", "folds",
+                  "bakes"],
+        "adjs": ["savory", "crisp", "tender", "fragrant", "golden"],
+    },
+    "seafaring": {
+        "nouns": ["harbor", "mast", "current", "compass", "hull", "tide",
+                  "anchor", "sail", "voyage", "lighthouse"],
+        "verbs": ["navigates", "drifts", "moors", "charts", "weathers",
+                  "signals"],
+        "adjs": ["salted", "weathered", "northern", "calm", "restless"],
+    },
+    "machinery": {
+        "nouns": ["gear", "piston", "lathe", "turbine", "valve", "bearing",
+                  "flywheel", "boiler", "gauge", "workshop"],
+        "verbs": ["rotates", "compresses", "grinds", "hums", "calibrates",
+                  "aligns"],
+        "adjs": ["polished", "worn", "precise", "heavy", "idle"],
+    },
+    "botany": {
+        "nouns": ["fern", "meadow", "pollen", "root", "canopy", "moss",
+                  "seedling", "orchard", "bark", "petal"],
+        "verbs": ["blooms", "withers", "spreads", "anchors", "absorbs",
+                  "unfurls"],
+        "adjs": ["verdant", "dormant", "wild", "fragile", "ancient"],
+    },
+}
+
+DETERMINERS = ["the", "a", "every", "that", "each"]
+CONNECTIVES = ["and then", "while", "because", "although", "so that",
+               "before", "after which"]
+ADVERBS = ["slowly", "quietly", "often", "rarely", "steadily", "suddenly"]
+
+TOPIC_NAMES = sorted(TOPICS.keys())
+
+
+def _zipf_choice(rng: random.Random, items: list[str]) -> str:
+    """Pick with a Zipf-like bias so token frequencies are heavy tailed."""
+    n = len(items)
+    # weight 1/(rank+1)
+    total = sum(1.0 / (i + 1) for i in range(n))
+    r = rng.random() * total
+    acc = 0.0
+    for i in range(n):
+        acc += 1.0 / (i + 1)
+        if r <= acc:
+            return items[i]
+    return items[-1]
+
+
+def _sentence(rng: random.Random, topic: str) -> str:
+    t = TOPICS[topic]
+    det = _zipf_choice(rng, DETERMINERS)
+    adj = _zipf_choice(rng, t["adjs"])
+    noun = _zipf_choice(rng, t["nouns"])
+    verb = _zipf_choice(rng, t["verbs"])
+    parts = [det, adj, noun, verb]
+    if rng.random() < 0.6:
+        parts.append(_zipf_choice(rng, ADVERBS))
+    if rng.random() < 0.5:
+        det2 = _zipf_choice(rng, DETERMINERS)
+        noun2 = _zipf_choice(rng, t["nouns"])
+        parts += ["near", det2, noun2]
+    if rng.random() < 0.35:
+        conn = _zipf_choice(rng, CONNECTIVES)
+        noun3 = _zipf_choice(rng, t["nouns"])
+        verb2 = _zipf_choice(rng, t["verbs"])
+        parts += [conn, "the", noun3, verb2]
+    return " ".join(parts) + "."
+
+
+def _paragraph(rng: random.Random, topic: str, n_sent: int) -> str:
+    return " ".join(_sentence(rng, topic) for _ in range(n_sent))
+
+
+def gen_wiki_syn(seed: int = 1234, n_paragraphs: int = 1200) -> str:
+    """Encyclopedia-style corpus: titled paragraphs, one topic each."""
+    rng = random.Random(seed)
+    out = []
+    for _ in range(n_paragraphs):
+        topic = rng.choice(TOPIC_NAMES)
+        noun = rng.choice(TOPICS[topic]["nouns"])
+        title = f"= {noun.capitalize()} =\n"
+        out.append(title + _paragraph(rng, topic, rng.randint(3, 7)) + "\n")
+    return "\n".join(out)
+
+
+def gen_alpaca_syn(seed: int = 4321, n_items: int = 900) -> str:
+    """Instruction-formatted corpus (Alpaca substitute)."""
+    rng = random.Random(seed)
+    templates = [
+        ("describe the {n}", "{s}"),
+        ("explain how the {n} {v}", "{s}"),
+        ("write a note about a {a} {n}", "{s}"),
+        ("summarize the state of the {n}", "{s}"),
+    ]
+    out = []
+    for _ in range(n_items):
+        topic = rng.choice(TOPIC_NAMES)
+        t = TOPICS[topic]
+        instr_t, _ = rng.choice(templates)
+        instr = instr_t.format(
+            n=rng.choice(t["nouns"]), v=rng.choice(t["verbs"]),
+            a=rng.choice(t["adjs"]))
+        resp = _paragraph(rng, topic, rng.randint(1, 3))
+        out.append(
+            f"### Instruction:\n{instr}\n### Response:\n{resp}\n")
+    return "\n".join(out)
+
+
+# ---------------------------------------------------------------------------
+# Downstream tasks — lm-eval substitutes.
+#
+# Each task is a list of items {prompt, choices[4], answer}.  The model is
+# scored by length-normalised log-probability of each choice given the
+# prompt, exactly the lm-eval protocol for PIQA/HellaSwag/ARC/etc.  The six
+# suites differ in how the distractors are corrupted, giving a graded
+# difficulty profile similar to the paper's task spread.
+# ---------------------------------------------------------------------------
+
+def _corrupt_swap_topic(rng, topic, sent):
+    """Replace topic nouns with nouns from another topic (easy)."""
+    other = rng.choice([t for t in TOPIC_NAMES if t != topic])
+    words = sent.split()
+    nouns = set(TOPICS[topic]["nouns"])
+    out = [rng.choice(TOPICS[other]["nouns"]) if w.strip(".") in nouns else w
+           for w in words]
+    return " ".join(out)
+
+
+def _corrupt_shuffle(rng, topic, sent):
+    """Shuffle interior words (breaks syntax, medium)."""
+    words = sent.split()
+    if len(words) > 3:
+        mid = words[1:-1]
+        rng.shuffle(mid)
+        words = [words[0]] + mid + [words[-1]]
+    return " ".join(words)
+
+
+def _corrupt_verbs(rng, topic, sent):
+    """Swap verbs for out-of-topic verbs (harder: syntax stays legal)."""
+    other = rng.choice([t for t in TOPIC_NAMES if t != topic])
+    words = sent.split()
+    verbs = set(TOPICS[topic]["verbs"])
+    out = [rng.choice(TOPICS[other]["verbs"]) if w.strip(".") in verbs else w
+           for w in words]
+    return " ".join(out)
+
+
+def _corrupt_chars(rng, topic, sent):
+    """Typo noise (easy for a byte-level model)."""
+    chars = list(sent)
+    n = max(2, len(chars) // 10)
+    for _ in range(n):
+        i = rng.randrange(len(chars))
+        chars[i] = chr(ord("a") + rng.randrange(26))
+    return "".join(chars)
+
+
+def _corrupt_adj(rng, topic, sent):
+    """Swap adjectives across topics (hardest: minimal edit)."""
+    other = rng.choice([t for t in TOPIC_NAMES if t != topic])
+    words = sent.split()
+    adjs = set(TOPICS[topic]["adjs"])
+    out = [rng.choice(TOPICS[other]["adjs"]) if w.strip(".") in adjs else w
+           for w in words]
+    return " ".join(out)
+
+
+def _corrupt_truncate_wrong(rng, topic, sent):
+    """Continuation from a different topic entirely (lambada-ish)."""
+    other = rng.choice([t for t in TOPIC_NAMES if t != topic])
+    return _sentence(rng, other)
+
+
+TASK_SPECS = {
+    # name            corruption                 n_items
+    "pq_syn": (_corrupt_swap_topic, 200),    # PIQA analogue (easy)
+    "hs_syn": (_corrupt_truncate_wrong, 200),  # HellaSwag analogue
+    "ae_syn": (_corrupt_chars, 200),         # ARC-easy analogue
+    "ac_syn": (_corrupt_adj, 200),           # ARC-challenge analogue (hard)
+    "wg_syn": (_corrupt_verbs, 200),         # Winogrande analogue
+    "la_syn": (_corrupt_shuffle, 200),       # Lambada analogue
+}
+
+
+def gen_task(name: str, seed: int = 777) -> dict:
+    corrupt, n_items = TASK_SPECS[name]
+    rng = random.Random(seed + hash(name) % 100000)
+    items = []
+    for _ in range(n_items):
+        topic = rng.choice(TOPIC_NAMES)
+        prompt = _paragraph(rng, topic, 2) + " "
+        correct = _sentence(rng, topic)
+        distractors = []
+        seen = {correct}
+        while len(distractors) < 3:
+            d = corrupt(rng, topic, _sentence(rng, topic))
+            if d not in seen:
+                distractors.append(d)
+                seen.add(d)
+        answer = rng.randrange(4)
+        choices = distractors[:answer] + [correct] + distractors[answer:]
+        items.append({"prompt": prompt, "choices": choices, "answer": answer})
+    return {"name": name, "items": items}
+
+
+def write_all(out_dir: str, seed: int = 1234) -> None:
+    """Write corpora + tasks under `out_dir` (artifacts/)."""
+    corpus_dir = os.path.join(out_dir, "corpus")
+    task_dir = os.path.join(out_dir, "tasks")
+    os.makedirs(corpus_dir, exist_ok=True)
+    os.makedirs(task_dir, exist_ok=True)
+    with open(os.path.join(corpus_dir, "wiki_syn.txt"), "w") as f:
+        f.write(gen_wiki_syn(seed))
+    with open(os.path.join(corpus_dir, "alpaca_syn.txt"), "w") as f:
+        f.write(gen_alpaca_syn(seed + 1))
+    for name in TASK_SPECS:
+        with open(os.path.join(task_dir, f"{name}.json"), "w") as f:
+            json.dump(gen_task(name, seed + 2), f)
+
+
+# Byte-level tokenizer: the vocabulary is simply 0..255.
+VOCAB_SIZE = 256
+
+
+def tokenize(text: str) -> list[int]:
+    return list(text.encode("utf-8", errors="ignore"))
+
+
+def detokenize(ids) -> str:
+    return bytes(int(i) % 256 for i in ids).decode("utf-8", errors="ignore")

@@ -1,0 +1,192 @@
+"""Pallas kernel for the paper's fused W4A4 + low-rank-correction linear.
+
+This is the compute hot-spot of the whole system (Fig. 1 of the paper):
+
+    y = Ŵ · Q_a(x)  +  U Vᵀ x
+
+with Q_a the on-the-fly per-token int4 quantizer.  The paper (§C.2) measures
+that a *naive* implementation — separate int4 GEMM and fp16 low-rank GEMM —
+loses latency to data movement even at rank 128, and speculates that a fused
+kernel computing the low-rank path "in parallel with the low-bitwidth
+computation" would recover it.  This kernel is that fusion, expressed for
+the TPU memory hierarchy:
+
+  * grid over (M-tiles × N-tiles); each program owns an (bm × bn) output block
+  * the x-tile [bm, din] is loaded HBM→VMEM **once** per M-row and reused by
+    both the quantized matmul and the (x@V)@Uᵀ side path — the correction
+    rides on traffic the main GEMM already pays for (the GPU analogue would
+    be sharing the threadblock's smem staging of x)
+  * activation quantization (scale = c·max|x|/7, round, clip) happens in
+    registers/VMEM on the resident tile, never re-reading HBM
+  * the MXU-facing contractions are plain `jnp.dot`s on the tile so Mosaic
+    can map them onto the systolic array; int4 weights arrive dequantized —
+    on-grid values (q·s), numerically identical to int-domain accumulate +
+    rescale
+
+VMEM per program at the default bm=256, bn=256, din=512, k=64 (f32):
+x 256·512 + w 256·512 + u 256·64 + v 512·64 + acc 256·256  ≈ 1.4 MB « 16 MB.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, and interpret-mode lowers the kernel into plain HLO that both
+pytest and the rust runtime execute bit-identically.
+
+Tile-size choice (§Perf, EXPERIMENTS.md): measured on the CPU-PJRT path at
+m=1024, 256×128, k=9 — bm/bn 64→19.5 ms, 128→10.0 ms, 256→4.2 ms vs the
+fused-jnp roofline 3.2 ms; 256 recovers 0.77× of roofline while keeping
+the VMEM footprint ~1.4 MB (64-tiles pay per-program grid overhead that
+dominates at these sizes on both CPU-interpret and Mosaic).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import INT4_MAXQ
+
+# Default tile sizes (see VMEM budget + §Perf sweep above).
+BM = 256
+BN = 256
+
+
+def _pick_block(dim: int, pref: int) -> int:
+    """Largest divisor of `dim` that is <= pref (tiles must divide evenly)."""
+    b = min(pref, dim)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+# ---------------------------------------------------------------------------
+# fused W4A4 (+ low-rank) linear
+# ---------------------------------------------------------------------------
+
+def _w4a4_kernel(x_ref, w_ref, clip_ref, o_ref, *, group):
+    """One (bm, bn) output block, no low-rank path."""
+    x = x_ref[...]                       # [bm, din]
+    if group is None:
+        amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+        s = clip_ref[0] * amax / INT4_MAXQ + 1e-12
+        q = jnp.clip(jnp.round(x / s), -8.0, 7.0)
+        xq = q * s
+    else:
+        bm, din = x.shape
+        xg = x.reshape(bm, din // group, group)
+        amax = jnp.max(jnp.abs(xg), axis=-1, keepdims=True)
+        s = clip_ref[0] * amax / INT4_MAXQ + 1e-12
+        q = jnp.clip(jnp.round(xg / s), -8.0, 7.0)
+        xq = (q * s).reshape(bm, din)
+    o_ref[...] = jnp.dot(xq, w_ref[...].T)
+
+
+def _w4a4_lr_kernel(x_ref, w_ref, u_ref, v_ref, clip_ref, o_ref, *, group):
+    """One (bm, bn) output block with the fused low-rank side path.
+
+    The same resident x tile feeds both contractions: quantized copy into
+    the main GEMM, unquantized copy into (x@V)@Uᵀ.
+    """
+    x = x_ref[...]                       # [bm, din] — loaded once
+    if group is None:
+        amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+        s = clip_ref[0] * amax / INT4_MAXQ + 1e-12
+        q = jnp.clip(jnp.round(x / s), -8.0, 7.0)
+        xq = q * s
+    else:
+        bm, din = x.shape
+        xg = x.reshape(bm, din // group, group)
+        amax = jnp.max(jnp.abs(xg), axis=-1, keepdims=True)
+        s = clip_ref[0] * amax / INT4_MAXQ + 1e-12
+        q = jnp.clip(jnp.round(xg / s), -8.0, 7.0)
+        xq = (q * s).reshape(bm, din)
+    acc = jnp.dot(xq, w_ref[...].T)      # quantized path  [bm, bn]
+    t = jnp.dot(x, v_ref[...])           # unquantized path: [bm, k]
+    acc = acc + jnp.dot(t, u_ref[...].T)  # [bm, bn]
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("group", "bm", "bn"))
+def w4a4_linear(x, wq, clip, u=None, v=None, *, group=None, bm=BM, bn=BN):
+    """Fused quantized linear:  y = Ŵ·Q_a(x) + U Vᵀ x.
+
+    x    [m, din] f32 — unquantized activations
+    wq   [dout, din] f32 — dequantized int4 weights (values on the grid)
+    clip scalar (f32 array or float) — activation clip factor c
+    u    [dout, k], v [din, k] — optional low-rank correction (None → skip)
+    group — activation quantization groupsize (None → per-token)
+    """
+    m, din = x.shape
+    dout = wq.shape[0]
+    bm = _pick_block(m, bm)
+    bn = _pick_block(dout, bn)
+    clip_arr = jnp.asarray(clip, dtype=x.dtype).reshape(1)
+    grid = (m // bm, dout // bn)
+    if u is None:
+        return pl.pallas_call(
+            functools.partial(_w4a4_kernel, group=group),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, din), lambda i, j: (i, 0)),
+                pl.BlockSpec((bn, din), lambda i, j: (j, 0)),
+                pl.BlockSpec((1,), lambda i, j: (0,)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((m, dout), x.dtype),
+            interpret=True,
+        )(x, wq, clip_arr)
+    k = u.shape[1]
+    return pl.pallas_call(
+        functools.partial(_w4a4_lr_kernel, group=group),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, din), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, din), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((din, k), lambda i, j: (0, 0)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, dout), x.dtype),
+        interpret=True,
+    )(x, wq, u, v, clip_arr)
+
+
+# ---------------------------------------------------------------------------
+# online Hadamard (FWHT) kernel — QuaRot's runtime rotation of the
+# down-projection input.  Butterfly stages run entirely on the VMEM-resident
+# tile; HBM traffic is exactly one read + one write of x.
+# ---------------------------------------------------------------------------
+
+def _fwht_kernel(x_ref, o_ref):
+    x = x_ref[...]                      # [bm, d]
+    bm, d = x.shape
+    h = 1
+    while h < d:
+        x = x.reshape(bm, d // (2 * h), 2, h)
+        a = x[:, :, 0, :]
+        b = x[:, :, 1, :]
+        x = jnp.stack([a + b, a - b], axis=2)
+        h *= 2
+    o_ref[...] = x.reshape(bm, d) * (1.0 / jnp.sqrt(float(d)))
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def fwht(x, *, bm=BM):
+    """Normalized Walsh–Hadamard transform along the last dim (power of 2)."""
+    orig = x.shape
+    d = orig[-1]
+    assert d & (d - 1) == 0, f"FWHT needs power-of-two dim, got {d}"
+    x2 = x.reshape(-1, d)
+    m = x2.shape[0]
+    bm_ = _pick_block(m, bm)
+    out = pl.pallas_call(
+        _fwht_kernel,
+        grid=(m // bm_,),
+        in_specs=[pl.BlockSpec((bm_, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm_, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), x.dtype),
+        interpret=True,
+    )(x2)
+    return out.reshape(orig)

@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its `ref_*` counterpart to float tolerance (pytest sweeps shapes
+and dtypes).  They are also what the L2 model *could* use directly — the
+kernels exist to express the HBM↔VMEM schedule, not different math.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INT4_MAXQ = 7.0  # symmetric signed int4 grid: [-8, 7]; we clip to +-7 like QuaRot
+
+
+def ref_act_quant(x: jnp.ndarray, clip) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-token (row-wise) symmetric int4 quantization of activations.
+
+    Returns (q, s) with q integer-valued floats in [-8, 7] and per-row scale
+    s such that x ≈ q * s.  `clip` is the paper's hyper-parameter c in
+    s = c * max|x| / 7.
+    """
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    s = clip * amax / INT4_MAXQ + 1e-12
+    q = jnp.clip(jnp.round(x / s), -8.0, 7.0)
+    return q, s
+
+
+def ref_act_quant_grouped(x: jnp.ndarray, clip,
+                          group: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Group-wise activation quantization: one scale per (row, group of
+    `group` input channels) — the paper's Table-2 'groupsize 128' setting."""
+    *lead, d = x.shape
+    assert d % group == 0, f"d={d} not divisible by group={group}"
+    xg = x.reshape(*lead, d // group, group)
+    amax = jnp.max(jnp.abs(xg), axis=-1, keepdims=True)
+    s = clip * amax / INT4_MAXQ + 1e-12
+    q = jnp.clip(jnp.round(xg / s), -8.0, 7.0)
+    return q.reshape(x.shape), jnp.broadcast_to(s, xg.shape).reshape(x.shape)
+
+
+def ref_w4a4_linear(x: jnp.ndarray, wq: jnp.ndarray, clip,
+                    u: jnp.ndarray | None = None,
+                    v: jnp.ndarray | None = None,
+                    group: int | None = None) -> jnp.ndarray:
+    """The paper's Fig.-1 forward:  y = Ŵ · Qa(x) + U Vᵀ x.
+
+    x  [..., din]   unquantized activations
+    wq [dout, din]  *dequantized* quantized weights (values on the int4 grid
+                    times their scale — int-domain compute is numerically
+                    identical after scaling)
+    u  [dout, k], v [din, k]  full-precision low-rank correction
+    """
+    if group is None:
+        q, s = ref_act_quant(x, clip)
+        y = (q * s) @ wq.T
+    else:
+        q, s = ref_act_quant_grouped(x, clip, group)
+        y = (q * s) @ wq.T
+    if u is not None and v is not None:
+        y = y + (x @ v) @ u.T
+    return y
+
+
+def ref_fwht(x: jnp.ndarray) -> jnp.ndarray:
+    """Normalized fast Walsh–Hadamard transform along the last dim.
+
+    Equivalent to x @ H_d / sqrt(d) with H the {+1,-1} Hadamard matrix
+    (Sylvester construction).  Used for QuaRot's *online* rotation of the
+    down-projection input.
+    """
+    d = x.shape[-1]
+    assert d & (d - 1) == 0, f"FWHT needs a power-of-two dim, got {d}"
+    orig = x.shape
+    x = x.reshape(-1, d)
+    h = 1
+    while h < d:
+        x = x.reshape(-1, d // (2 * h), 2, h)
+        a = x[:, :, 0, :]
+        b = x[:, :, 1, :]
+        x = jnp.stack([a + b, a - b], axis=2)
+        h *= 2
+    return (x.reshape(orig)) / jnp.sqrt(float(d))
+
+
+def hadamard_matrix(d: int) -> jnp.ndarray:
+    """Explicit normalized Hadamard matrix (for fusion into weights)."""
+    assert d & (d - 1) == 0
+    h = jnp.array([[1.0]])
+    while h.shape[0] < d:
+        h = jnp.block([[h, h], [h, -h]])
+    return h / jnp.sqrt(float(d))

@@ -1,0 +1,335 @@
+"""The paper's algorithms, in float64 numpy (build-time reference path).
+
+Implements, faithful to the pseudo-code in the paper's Appendix B:
+
+  * RTN weight quantization (per-channel symmetric, optional groupsize)
+  * GPTQ (Frantar et al., 2022) — the Update-Quant subroutine's solver
+  * Algorithm 4  Init-LR      (Prop. 3.4 closed form)
+  * Algorithm 3  Update-LR    (Prop. 3.3 closed form)
+  * Algorithm 2  Update-Quant (Prop. 3.1 reduction to layer-wise GPTQ)
+  * Algorithm 1  LRC          (alternating minimization driver)
+  * the SVD baseline (LQER-style low-rank of the *weight* error)
+  * the unconstrained oracle W̃ of Prop. 3.4 (perfect-quantizer bound)
+
+All covariance math is float64 — the paper: "We found that computation of
+these matrices required 64-bit precision for numerical accuracy."
+
+Shape conventions follow the paper: W [dout, din], X [din, n] activations
+as columns;  the runtime forward is y = Ŵ·Q_a(x) + U Vᵀ x.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+INT4_MAXQ = 7.0
+
+
+# ---------------------------------------------------------------------------
+# quantizers
+# ---------------------------------------------------------------------------
+
+def quant_grid_scale(w: np.ndarray, bits: int, group: int | None = None
+                     ) -> np.ndarray:
+    """Per-output-channel (or per-group) symmetric scale for `bits` ints."""
+    maxq = 2.0 ** (bits - 1) - 1.0
+    if group is None:
+        amax = np.abs(w).max(axis=1, keepdims=True)
+        return amax / maxq + 1e-12
+    dout, din = w.shape
+    assert din % group == 0
+    wg = w.reshape(dout, din // group, group)
+    return np.abs(wg).max(axis=2) / maxq + 1e-12  # [dout, ngroups]
+
+
+def rtn_quantize(w: np.ndarray, bits: int = 4, group: int | None = None
+                 ) -> np.ndarray:
+    """Round-to-nearest symmetric quantization; returns dequantized weights."""
+    maxq = 2.0 ** (bits - 1) - 1.0
+    s = quant_grid_scale(w, bits, group)
+    if group is None:
+        q = np.clip(np.round(w / s), -(maxq + 1), maxq)
+        return q * s
+    dout, din = w.shape
+    wg = w.reshape(dout, din // group, group)
+    q = np.clip(np.round(wg / s[:, :, None]), -(maxq + 1), maxq)
+    return (q * s[:, :, None]).reshape(dout, din)
+
+
+def act_quantize(x: np.ndarray, bits: int = 4, clip: float = 1.0,
+                 group: int | None = None) -> np.ndarray:
+    """On-the-fly activation quantizer Q_a (per-token = per-*column* of X).
+
+    X is [din, n] with tokens as columns, so scales are per column (axis 0
+    reduction); mirrors ref.ref_act_quant which works on row-major x.
+    """
+    maxq = 2.0 ** (bits - 1) - 1.0
+    if group is None:
+        amax = np.abs(x).max(axis=0, keepdims=True)
+        s = clip * amax / maxq + 1e-12
+        return np.clip(np.round(x / s), -(maxq + 1), maxq) * s
+    din, n = x.shape
+    assert din % group == 0
+    xg = x.reshape(din // group, group, n)
+    amax = np.abs(xg).max(axis=1, keepdims=True)
+    s = clip * amax / maxq + 1e-12
+    q = np.clip(np.round(xg / s), -(maxq + 1), maxq) * s
+    return q.reshape(din, n)
+
+
+def search_act_clip(x: np.ndarray, bits: int = 4, group: int | None = None,
+                    grid=(1.0, 0.95, 0.9, 0.85, 0.8, 0.75, 0.7)) -> float:
+    """Paper §2: 'simple hyper-parameter search for c' minimizing ||X-Q_a(X)||."""
+    best, best_c = np.inf, 1.0
+    for c in grid:
+        err = np.linalg.norm(x - act_quantize(x, bits, c, group))
+        if err < best:
+            best, best_c = err, float(c)
+    return best_c
+
+
+# ---------------------------------------------------------------------------
+# GPTQ — solver for  min_{Ŵ ∈ C(b)} ||ŴY - W̃Y||²  given H = YYᵀ.
+# ---------------------------------------------------------------------------
+
+def gptq(w: np.ndarray, hess: np.ndarray, bits: int = 4,
+         group: int | None = None, damp: float = 0.01,
+         block: int = 64) -> np.ndarray:
+    """GPTQ with Cholesky-based error feedback (Frantar et al., 2022).
+
+    w    [dout, din] target weights (already the W̃ of Prop. 3.1)
+    hess [din, din]  = YYᵀ (+ regularization added by the caller or damping
+                     added here)
+    Returns the *dequantized* quantized weights.
+
+    Column order is natural (act-order off), matching the paper's QuaRot
+    setup where Hadamard rotation already flattens the Hessian spectrum.
+    """
+    dout, din = w.shape
+    w = w.astype(np.float64).copy()
+    h = hess.astype(np.float64).copy()
+
+    # dampen + guard against dead columns, as in the reference implementation
+    dead = np.diag(h) == 0
+    h[dead, dead] = 1.0
+    w[:, dead] = 0.0
+    mean_diag = float(np.mean(np.diag(h)))
+    h[np.diag_indices(din)] += damp * mean_diag
+
+    # Hinv upper-Cholesky trick: quantization error of column j propagates
+    # to columns > j through row j of the upper factor U with Hinv = UᵀU —
+    # exactly chol(Hinv).T (torch.linalg.cholesky(·, upper=True) in the
+    # GPTQ reference implementation).
+    hinv = np.linalg.inv(h)
+    hinv_u = np.linalg.cholesky(hinv).T
+
+    scale = quant_grid_scale(w, bits, group)
+    maxq = 2.0 ** (bits - 1) - 1.0
+    q_out = np.zeros_like(w)
+
+    for j1 in range(0, din, block):
+        j2 = min(j1 + block, din)
+        werr = np.zeros((dout, j2 - j1))
+        for j in range(j1, j2):
+            wj = w[:, j]
+            if group is None:
+                s = scale[:, 0]
+            else:
+                s = scale[:, j // group]
+            q = np.clip(np.round(wj / s), -(maxq + 1), maxq) * s
+            q_out[:, j] = q
+            err = (wj - q) / hinv_u[j, j]
+            # propagate inside the block
+            w[:, j:j2] -= np.outer(err, hinv_u[j, j:j2])
+            werr[:, j - j1] = err
+        # propagate to the remaining columns in one GEMM
+        if j2 < din:
+            w[:, j2:] -= werr @ hinv_u[j1:j2, j2:]
+    return q_out
+
+
+# ---------------------------------------------------------------------------
+# Σ statistics
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LayerStats:
+    """Online accumulator for Σx = XXᵀ, Σy = YYᵀ, Σxy = XYᵀ (all f64).
+
+    The paper: "we accumulate batches of activations X to avoid running out
+    of memory, and update Σx, Σy, Σxy in an online fashion".
+    """
+    din: int
+    a_bits: int = 4
+    clip: float = 1.0
+    a_group: int | None = None
+    identity_qa: bool = False  # weight-only mode: Q_a = id (Table 3)
+
+    def __post_init__(self):
+        d = self.din
+        self.sx = np.zeros((d, d))
+        self.sy = np.zeros((d, d))
+        self.sxy = np.zeros((d, d))
+        self.n = 0
+
+    def update(self, x: np.ndarray) -> None:
+        """x [din, batch_n] — one calibration batch of activation columns."""
+        x = x.astype(np.float64)
+        if self.identity_qa:
+            y = x
+        else:
+            y = act_quantize(x, self.a_bits, self.clip, self.a_group)
+        self.sx += x @ x.T
+        self.sy += y @ y.T
+        self.sxy += x @ y.T
+        self.n += x.shape[1]
+
+    def regularized(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(Σx + εxI, Σy + εyI, Σxy) with ε = 1e-2·tr(Σ)/d as in the paper."""
+        d = self.din
+        ex = 1e-2 * np.trace(self.sx) / d
+        ey = 1e-2 * np.trace(self.sy) / d
+        return (self.sx + ex * np.eye(d), self.sy + ey * np.eye(d), self.sxy)
+
+
+# ---------------------------------------------------------------------------
+# the paper's closed forms
+# ---------------------------------------------------------------------------
+
+def _top_k_eigvecs(sigma: np.ndarray, k: int) -> np.ndarray:
+    """eig_k(·): unit eigenvectors of a symmetric matrix, top-k eigenvalues."""
+    wvals, wvecs = np.linalg.eigh((sigma + sigma.T) / 2.0)
+    return wvecs[:, ::-1][:, :k]
+
+
+def init_lr(w: np.ndarray, sx: np.ndarray, sy: np.ndarray, sxy: np.ndarray,
+            k: int) -> tuple[np.ndarray, np.ndarray]:
+    """Algorithm 4 (Prop. 3.4):  Σinit = WΣxWᵀ − SᵀS, S = Ly⁻¹ Σxyᵀ Wᵀ;
+    U = eig_k(Σinit), V = Wᵀ U."""
+    sigma1 = w @ sx @ w.T
+    ly = np.linalg.cholesky(sy)
+    s = np.linalg.solve(ly, sxy.T @ w.T)   # Ly⁻¹ Y Xᵀ Wᵀ
+    sigma2 = s.T @ s
+    u = _top_k_eigvecs(sigma1 - sigma2, k)
+    v = w.T @ u
+    return u, v
+
+
+def update_quant(w: np.ndarray, u: np.ndarray, v: np.ndarray,
+                 sy: np.ndarray, sxy: np.ndarray, bits: int,
+                 w_group: int | None = None,
+                 quantizer: str = "gptq") -> np.ndarray:
+    """Algorithm 2 (Prop. 3.1): W̃ = (W − UVᵀ)·Σxy·Σy⁻¹, then quantize W̃
+    against Hessian Σy with GPTQ (or RTN for the Fig.-3 ablation)."""
+    rhs = (w - u @ v.T) @ sxy
+    # solve W̃ Σy = rhs  via Cholesky (Remark B.1)
+    ly = np.linalg.cholesky(sy)
+    z = np.linalg.solve(ly, rhs.T)
+    wt = np.linalg.solve(ly.T, z).T
+    if quantizer == "gptq":
+        return gptq(wt, sy, bits, group=w_group)
+    if quantizer == "rtn":
+        return rtn_quantize(wt, bits, group=w_group)
+    raise ValueError(f"unknown quantizer {quantizer!r}")
+
+
+def update_lr(w: np.ndarray, w_hat: np.ndarray, sx: np.ndarray,
+              sxy: np.ndarray, k: int) -> tuple[np.ndarray, np.ndarray]:
+    """Algorithm 3 (Prop. 3.3):
+    Σ = WΣxWᵀ + SᵀS − (ŴΣxyᵀWᵀ + WΣxyŴᵀ),  S = Lx⁻¹ Σxy Ŵᵀ;
+    U = eig_k(Σ), V = [Wᵀ − Σx⁻¹ Σxy Ŵᵀ] U."""
+    sigma1 = w @ sx @ w.T
+    sigma3 = w_hat @ sxy.T @ w.T + w @ sxy @ w_hat.T
+    lx = np.linalg.cholesky(sx)
+    s = np.linalg.solve(lx, sxy @ w_hat.T)
+    sigma2 = s.T @ s
+    u = _top_k_eigvecs(sigma1 + sigma2 - sigma3, k)
+    # Σx⁻¹ Σxy Ŵᵀ via the same Cholesky
+    tmp = np.linalg.solve(lx.T, s)      # = Σx⁻¹ Σxy Ŵᵀ
+    v = (w.T - tmp) @ u
+    return u, v
+
+
+def oracle_wtilde(w: np.ndarray, u: np.ndarray, v: np.ndarray,
+                  sy: np.ndarray, sxy: np.ndarray) -> np.ndarray:
+    """Prop. 3.4's unconstrained W̃ = (W − UVᵀ)ΣxyΣy⁻¹ — the perfect-
+    quantizer oracle the paper uses to bound the alternating scheme."""
+    rhs = (w - u @ v.T) @ sxy
+    ly = np.linalg.cholesky(sy)
+    z = np.linalg.solve(ly, rhs.T)
+    return np.linalg.solve(ly.T, z).T
+
+
+def qlr_objective(w, w_hat, u, v, stats: LayerStats) -> float:
+    """ℒ_qlr(Ŵ,U,V) = ||WX − ŴY − UVᵀX||² expanded through the Σ matrices
+    (n is too big to keep X around):  with R = W − UVᵀ,
+      ℒ = tr(R Σx Rᵀ) − 2 tr(R Σxy Ŵᵀ) + tr(Ŵ Σy Ŵᵀ).
+    Uses the *raw* (unregularized) Σ so it equals the true residual."""
+    r = w - u @ v.T
+    t1 = float(np.einsum("ij,ij->", r @ stats.sx, r))
+    t2 = float(np.einsum("ij,ij->", r @ stats.sxy, w_hat))
+    t3 = float(np.einsum("ij,ij->", w_hat @ stats.sy, w_hat))
+    return t1 - 2.0 * t2 + t3
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 — LRC driver  (+ baselines on the same statistics)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LRCResult:
+    w_hat: np.ndarray                 # dequantized quantized weights
+    u: np.ndarray | None              # [dout, k] or None (rank 0)
+    v: np.ndarray | None              # [din, k]
+    objective: float                  # final ℒ_qlr value
+    history: list                     # per-half-step objective trace
+
+
+def lrc(w: np.ndarray, stats: LayerStats, k: int, bits: int = 4,
+        iters: int = 1, w_group: int | None = None,
+        quantizer: str = "gptq") -> LRCResult:
+    """Algorithm 1: alternate Update-Quant / Update-LR from the Init-LR
+    closed-form start.  k = 0 degrades exactly to QuaRot-style GPTQ."""
+    w = w.astype(np.float64)
+    sx, sy, sxy = stats.regularized()
+    history = []
+    if k == 0:
+        zu = np.zeros((w.shape[0], 1))
+        zv = np.zeros((w.shape[1], 1))
+        w_hat = update_quant(w, zu, zv, sy, sxy, bits, w_group, quantizer)
+        obj = qlr_objective(w, w_hat, zu, zv, stats)
+        return LRCResult(w_hat, None, None, obj, [obj])
+    u, v = init_lr(w, sx, sy, sxy, k)
+    w_hat = None
+    for _ in range(iters):
+        w_hat = update_quant(w, u, v, sy, sxy, bits, w_group, quantizer)
+        history.append(qlr_objective(w, w_hat, u, v, stats))
+        u, v = update_lr(w, w_hat, sx, sxy, k)
+        history.append(qlr_objective(w, w_hat, u, v, stats))
+    return LRCResult(w_hat, u, v, history[-1], history)
+
+
+def svd_baseline(w: np.ndarray, stats: LayerStats, k: int, bits: int = 4,
+                 w_group: int | None = None) -> LRCResult:
+    """The paper's 'SVD' baseline (Tables 1–3): QuaRot-quantize W with GPTQ,
+    then rank-k SVD of the *weight* residual W − Ŵ — no activation
+    statistics in the low-rank term (that is the point being made)."""
+    w = w.astype(np.float64)
+    _, sy, sxy = stats.regularized()
+    zu = np.zeros((w.shape[0], 1))
+    zv = np.zeros((w.shape[1], 1))
+    w_hat = update_quant(w, zu, zv, sy, sxy, bits, w_group, "gptq")
+    uu, ss, vvt = np.linalg.svd(w - w_hat, full_matrices=False)
+    u = uu[:, :k] * ss[:k]
+    v = vvt[:k, :].T
+    obj = qlr_objective(w, w_hat, u, v, stats)
+    return LRCResult(w_hat, u, v, obj, [obj])
+
+
+def rank_for_pct(dout: int, din: int, pct: float) -> int:
+    """Rank giving ≈`pct` memory overhead: k(dout+din) = pct·dout·din."""
+    if pct <= 0:
+        return 0
+    return max(1, int(round(pct * dout * din / (dout + din))))

@@ -1,0 +1,362 @@
+"""L2 — the JAX model: a tiny pre-LN GPT family (dense + MoE variants).
+
+These stand in for the paper's Llama-2/Llama-3/Phi-3 (dense) and Mixtral
+(MoE): same architecture class — RMSNorm pre-norm, causal MHA, SwiGLU MLP,
+(top-2 MoE), untied byte-level embedding/head — just small enough to train
+and quantize on one CPU core.  LRC operates per linear layer and is
+dimension-agnostic, so the method-ordering results transfer.
+
+Two build-time transforms implement QuaRot stage (1):
+
+  * `fuse_norm_scales`   — fold RMSNorm γ into the adjacent in-projections
+  * `fuse_rotations`     — rotate the residual stream with a random-signed
+    Hadamard Q (exact: outputs unchanged), and pre-rotate `wdown` by H so
+    the *online* FWHT kernel (L1) can run on its input at inference
+
+The forward has an fp path (plain matmuls) and a quantized path where every
+per-block linear goes through the fused Pallas kernel `w4a4_linear`
+(weights already on the int4 grid, activations quantized on the fly,
+optional low-rank correction on the *unquantized* activations — the
+paper's Fig. 1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import quant as kq
+from .kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    n_experts: int = 0          # 0 => dense SwiGLU MLP
+    seq_len: int = 128
+    vocab: int = 256
+    rms_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        return sum(int(np.prod(s)) for _, s in param_spec(self))
+
+
+# The three evaluation models (Llama/Phi-3/Mixtral stand-ins).
+CONFIGS = {
+    "nano": ModelConfig("nano", d_model=64, n_layers=2, n_heads=4, d_ff=128),
+    "small": ModelConfig("small", d_model=128, n_layers=2, n_heads=4, d_ff=256),
+    "moe": ModelConfig("moe", d_model=64, n_layers=2, n_heads=4, d_ff=128,
+                       n_experts=4),
+}
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+def block_linear_names(cfg: ModelConfig, i: int) -> list[str]:
+    """Names of the quantizable linear weights of block i, in forward order."""
+    names = [f"blk{i}.wq", f"blk{i}.wk", f"blk{i}.wv", f"blk{i}.wo"]
+    if cfg.n_experts == 0:
+        names += [f"blk{i}.wgate", f"blk{i}.wup", f"blk{i}.wdown"]
+    else:
+        for e in range(cfg.n_experts):
+            names += [f"blk{i}.e{e}.wgate", f"blk{i}.e{e}.wup",
+                      f"blk{i}.e{e}.wdown"]
+    return names
+
+
+def quantized_layer_names(cfg: ModelConfig) -> list[str]:
+    """All weight matrices the PTQ pipeline quantizes (embeddings, norms,
+    router and head stay fp, as in QuaRot)."""
+    out = []
+    for i in range(cfg.n_layers):
+        out += block_linear_names(cfg, i)
+    return out
+
+
+def activation_source(cfg: ModelConfig, layer_name: str) -> str:
+    """Which collected activation feeds a given quantized layer.
+
+    q/k/v share the post-ln1 stream; gate/up share post-ln2; wo sees the
+    attention mix; every wdown sees its own post-FWHT hidden.
+    """
+    blk, leaf = layer_name.split(".", 1)
+    if leaf in ("wq", "wk", "wv"):
+        return f"{blk}.ln1_out"
+    if leaf == "wo":
+        return f"{blk}.attn_out"
+    if leaf in ("wgate", "wup"):
+        return f"{blk}.ln2_out"
+    if leaf == "wdown":
+        return f"{blk}.ffn_had"
+    # MoE experts: blkI.eJ.{wgate,wup,wdown}
+    exp, leaf2 = leaf.split(".", 1)
+    if leaf2 in ("wgate", "wup"):
+        return f"{blk}.ln2_out"
+    if leaf2 == "wdown":
+        return f"{blk}.{exp}.ffn_had"
+    raise ValueError(layer_name)
+
+
+def activation_names(cfg: ModelConfig) -> list[str]:
+    """Ordered list of distinct calibration activations the `acts` graph
+    returns (order = manifest order = rust order)."""
+    out = []
+    for i in range(cfg.n_layers):
+        out += [f"blk{i}.ln1_out", f"blk{i}.attn_out", f"blk{i}.ln2_out"]
+        if cfg.n_experts == 0:
+            out.append(f"blk{i}.ffn_had")
+        else:
+            out += [f"blk{i}.e{e}.ffn_had" for e in range(cfg.n_experts)]
+    return out
+
+
+def param_spec(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Ordered (name, shape) list — the canonical parameter order used by
+    every export and by the rust manifest."""
+    d, ff, v, t = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq_len
+    spec = [("tok_emb", (v, d)), ("pos_emb", (t, d))]
+    for i in range(cfg.n_layers):
+        spec += [(f"blk{i}.ln1", (d,)),
+                 (f"blk{i}.wq", (d, d)), (f"blk{i}.wk", (d, d)),
+                 (f"blk{i}.wv", (d, d)), (f"blk{i}.wo", (d, d)),
+                 (f"blk{i}.ln2", (d,))]
+        if cfg.n_experts == 0:
+            spec += [(f"blk{i}.wgate", (ff, d)), (f"blk{i}.wup", (ff, d)),
+                     (f"blk{i}.wdown", (d, ff))]
+        else:
+            spec.append((f"blk{i}.router", (cfg.n_experts, d)))
+            for e in range(cfg.n_experts):
+                spec += [(f"blk{i}.e{e}.wgate", (ff, d)),
+                         (f"blk{i}.e{e}.wup", (ff, d)),
+                         (f"blk{i}.e{e}.wdown", (d, ff))]
+    spec += [("ln_f", (d,)), ("head", (v, d))]
+    return spec
+
+
+def init_params(cfg: ModelConfig, key) -> dict[str, jnp.ndarray]:
+    params = {}
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if len(shape) == 1:
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[-1]
+            params[name] = (jax.random.normal(sub, shape, jnp.float32)
+                            * (1.0 / np.sqrt(fan_in)))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) \
+        * scale
+
+
+def _attention(cfg: ModelConfig, q, k, v):
+    b, t, d = q.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = q.reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / np.sqrt(hd)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(mask[None, None], att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    return out.transpose(0, 2, 1, 3).reshape(b, t, d)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSetting:
+    """How the quantized forward runs one layer (shapes are baked into HLO)."""
+    rank_pct: float              # low-rank budget as fraction of matrix size
+    a_group: int | None = None   # activation quant groupsize (None = per-token)
+    identity_qa: bool = False    # weight-only mode (Table 3): skip act quant
+
+
+def _linear(x, w):
+    return x @ w.T
+
+
+def _qlinear(x, qp: dict, setting: QuantSetting):
+    """Quantized linear via the fused Pallas kernel.  `qp` holds
+    wq (dequantized grid weights), optional u/v, and the clip scalar."""
+    b, t, din = x.shape
+    x2 = x.reshape(b * t, din)
+    if setting.identity_qa:
+        y = _linear(x2, qp["wq"])
+        if "u" in qp:
+            y = y + (x2 @ qp["v"]) @ qp["u"].T
+    else:
+        y = kq.w4a4_linear(x2, qp["wq"], qp["clip"],
+                           qp.get("u"), qp.get("v"), group=setting.a_group)
+    return y.reshape(b, t, -1)
+
+
+def forward(params: dict, tokens, cfg: ModelConfig, *, rotated: bool = False,
+            qparams: dict | None = None, setting: QuantSetting | None = None,
+            collect_acts: bool = False):
+    """Run the model.
+
+    rotated      — the params have been through fuse_rotations: apply the
+                   online FWHT before every down-projection.
+    qparams      — {layer_name: {wq, u, v, clip}}: use the quantized path
+                   for those layers (requires `setting`).
+    collect_acts — also return {activation_name: [n_tokens, d]} for the
+                   calibration pass (flattened over batch×time).
+    """
+    b, t = tokens.shape
+    x = params["tok_emb"][tokens] + params["pos_emb"][None, :t]
+    acts = {}
+
+    def q_or_fp(name, inp):
+        if qparams is not None and name in qparams:
+            return _qlinear(inp, qparams[name], setting)
+        return _linear(inp, params[name])
+
+    for i in range(cfg.n_layers):
+        h = rmsnorm(x, params[f"blk{i}.ln1"], cfg.rms_eps)
+        if collect_acts:
+            acts[f"blk{i}.ln1_out"] = h.reshape(b * t, -1)
+        q = q_or_fp(f"blk{i}.wq", h)
+        k = q_or_fp(f"blk{i}.wk", h)
+        v = q_or_fp(f"blk{i}.wv", h)
+        attn = _attention(cfg, q, k, v)
+        if collect_acts:
+            acts[f"blk{i}.attn_out"] = attn.reshape(b * t, -1)
+        x = x + q_or_fp(f"blk{i}.wo", attn)
+
+        h = rmsnorm(x, params[f"blk{i}.ln2"], cfg.rms_eps)
+        if collect_acts:
+            acts[f"blk{i}.ln2_out"] = h.reshape(b * t, -1)
+        if cfg.n_experts == 0:
+            g = q_or_fp(f"blk{i}.wgate", h)
+            up = q_or_fp(f"blk{i}.wup", h)
+            hid = jax.nn.silu(g) * up
+            if rotated:
+                hid = kq.fwht(hid)
+            if collect_acts:
+                acts[f"blk{i}.ffn_had"] = hid.reshape(b * t, -1)
+            x = x + q_or_fp(f"blk{i}.wdown", hid)
+        else:
+            router_logits = _linear(h, params[f"blk{i}.router"])
+            # top-2 via argmax+mask (the `topk` HLO op postdates the
+            # xla_extension 0.5.1 text parser, lax.top_k would not load)
+            oh1 = jax.nn.one_hot(jnp.argmax(router_logits, -1),
+                                 cfg.n_experts)
+            masked = router_logits - oh1 * 1e9
+            oh2 = jax.nn.one_hot(jnp.argmax(masked, -1), cfg.n_experts)
+            v1 = jnp.sum(router_logits * oh1, -1, keepdims=True)
+            v2 = jnp.sum(router_logits * oh2, -1, keepdims=True)
+            gates = jax.nn.softmax(jnp.concatenate([v1, v2], -1), axis=-1)
+            # dense-simulated MoE: per-expert weight from the top-2 mask
+            wts = gates[..., 0:1] * oh1 + gates[..., 1:2] * oh2
+            y = jnp.zeros_like(x)
+            for e in range(cfg.n_experts):
+                g = q_or_fp(f"blk{i}.e{e}.wgate", h)
+                up = q_or_fp(f"blk{i}.e{e}.wup", h)
+                hid = jax.nn.silu(g) * up
+                if rotated:
+                    hid = kq.fwht(hid)
+                if collect_acts:
+                    acts[f"blk{i}.e{e}.ffn_had"] = hid.reshape(b * t, -1)
+                y = y + wts[..., e:e + 1] * q_or_fp(f"blk{i}.e{e}.wdown", hid)
+            x = x + y
+
+    x = rmsnorm(x, params["ln_f"], cfg.rms_eps)
+    logits = _linear(x, params["head"])
+    if collect_acts:
+        return logits, acts
+    return logits
+
+
+def loss_fn(params, tokens, cfg: ModelConfig, rotated: bool = False):
+    """Next-token cross entropy (mean over all positions)."""
+    logits = forward(params, tokens, cfg, rotated=rotated)
+    targets = tokens[:, 1:]
+    lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    nll = -jnp.take_along_axis(lp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# QuaRot stage (1): exact rotation fusion
+# ---------------------------------------------------------------------------
+
+def _hadamard_with_signs(d: int, seed: int) -> np.ndarray:
+    """Random-signed normalized Hadamard: Q = H_d · diag(σ), orthogonal."""
+    h = np.array(kref.hadamard_matrix(d), np.float64)
+    signs = np.where(np.random.RandomState(seed).rand(d) < 0.5, -1.0, 1.0)
+    return h * signs[None, :]
+
+
+def fuse_norm_scales(params: dict, cfg: ModelConfig) -> dict:
+    """Fold RMSNorm γ into the following in-projections (γ → 1)."""
+    p = {k: np.array(v, np.float64) for k, v in params.items()}
+    for i in range(cfg.n_layers):
+        g1 = p[f"blk{i}.ln1"]
+        for nm in ("wq", "wk", "wv"):
+            p[f"blk{i}.{nm}"] = p[f"blk{i}.{nm}"] * g1[None, :]
+        p[f"blk{i}.ln1"] = np.ones_like(g1)
+        g2 = p[f"blk{i}.ln2"]
+        ins = (["wgate", "wup"] if cfg.n_experts == 0 else
+               ["router"] + [f"e{e}.{nm}" for e in range(cfg.n_experts)
+                             for nm in ("wgate", "wup")])
+        for nm in ins:
+            p[f"blk{i}.{nm}"] = p[f"blk{i}.{nm}"] * g2[None, :]
+        p[f"blk{i}.ln2"] = np.ones_like(g2)
+    gf = p["ln_f"]
+    p["head"] = p["head"] * gf[None, :]
+    p["ln_f"] = np.ones_like(gf)
+    return p
+
+
+def fuse_rotations(params: dict, cfg: ModelConfig, seed: int = 7
+                   ) -> dict[str, np.ndarray]:
+    """QuaRot stage (1): fuse a residual-stream rotation Q and the online-
+    Hadamard pre-rotation of wdown.  Output-exact: forward(fused, rotated=True)
+    == forward(original) to float tolerance.  Returns float64 params."""
+    p = fuse_norm_scales(params, cfg)
+    d = cfg.d_model
+    qmat = _hadamard_with_signs(d, seed)          # [d, d] orthogonal
+    hff = np.array(kref.hadamard_matrix(cfg.d_ff), np.float64)
+
+    p["tok_emb"] = p["tok_emb"] @ qmat
+    p["pos_emb"] = p["pos_emb"] @ qmat
+    p["head"] = p["head"] @ qmat
+    for i in range(cfg.n_layers):
+        for nm in ("wq", "wk", "wv"):
+            p[f"blk{i}.{nm}"] = p[f"blk{i}.{nm}"] @ qmat      # input side
+        p[f"blk{i}.wo"] = qmat.T @ p[f"blk{i}.wo"]            # output side
+        if cfg.n_experts == 0:
+            for nm in ("wgate", "wup"):
+                p[f"blk{i}.{nm}"] = p[f"blk{i}.{nm}"] @ qmat
+            p[f"blk{i}.wdown"] = (qmat.T @ p[f"blk{i}.wdown"]) @ hff
+        else:
+            p[f"blk{i}.router"] = p[f"blk{i}.router"] @ qmat
+            for e in range(cfg.n_experts):
+                for nm in ("wgate", "wup"):
+                    p[f"blk{i}.e{e}.{nm}"] = p[f"blk{i}.e{e}.{nm}"] @ qmat
+                p[f"blk{i}.e{e}.wdown"] = \
+                    (qmat.T @ p[f"blk{i}.e{e}.wdown"]) @ hff
+    return p
+
+
+def params_to_f32(p: dict) -> dict[str, jnp.ndarray]:
+    return {k: jnp.asarray(np.asarray(v), jnp.float32) for k, v in p.items()}

@@ -1,0 +1,91 @@
+"""Pre-training loop for the tiny models (build-time only).
+
+Post-training quantization needs a *well-trained* model to compress; the
+paper downloads Llama/Phi/Mixtral checkpoints, we train our own stand-ins
+on the synthetic corpus.  Hand-rolled Adam (no optax in the image), jitted
+step, deterministic batching.  The loss curve is logged and written to
+artifacts/train_log_<model>.json — that log is the "end-to-end validation"
+training record referenced from EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from . import model as M
+
+
+def batches(token_ids: np.ndarray, batch: int, seq: int, steps: int,
+            seed: int = 0):
+    """Deterministic random crops from the token stream."""
+    rng = np.random.RandomState(seed)
+    n = len(token_ids) - seq - 1
+    for _ in range(steps):
+        starts = rng.randint(0, n, size=batch)
+        yield np.stack([token_ids[s:s + seq] for s in starts])
+
+
+def adam_init(params):
+    z = lambda: {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": z(), "v": z(), "t": jnp.zeros((), jnp.int32)}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "lr", "wd"))
+def adam_step(params, opt, tokens, cfg: M.ModelConfig, lr=1e-3, wd=0.0):
+    loss, grads = jax.value_and_grad(M.loss_fn)(params, tokens, cfg)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    t = opt["t"] + 1
+    new_m, new_v, new_p = {}, {}, {}
+    for k, g in grads.items():
+        m = b1 * opt["m"][k] + (1 - b1) * g
+        v = b2 * opt["v"][k] + (1 - b2) * g * g
+        mhat = m / (1 - b1 ** t.astype(jnp.float32))
+        vhat = v / (1 - b2 ** t.astype(jnp.float32))
+        upd = lr * mhat / (jnp.sqrt(vhat) + eps)
+        if wd:
+            upd = upd + lr * wd * params[k]
+        new_p[k] = params[k] - upd
+        new_m[k], new_v[k] = m, v
+    return new_p, {"m": new_m, "v": new_v, "t": t}, loss
+
+
+def train(cfg: M.ModelConfig, corpus_text: str, steps: int = 400,
+          batch: int = 8, lr: float = 1e-3, seed: int = 0,
+          log_every: int = 25, log_path: str | None = None):
+    """Train from scratch; returns (params, loss_log)."""
+    toks = np.array(D.tokenize(corpus_text), np.int32)
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    opt = adam_init(params)
+    log = []
+    t0 = time.time()
+    for step, b in enumerate(batches(toks, batch, cfg.seq_len, steps, seed)):
+        params, opt, loss = adam_step(params, opt, jnp.array(b), cfg, lr)
+        if step % log_every == 0 or step == steps - 1:
+            entry = {"step": step, "loss": float(loss),
+                     "elapsed_s": round(time.time() - t0, 2)}
+            log.append(entry)
+            print(f"[train {cfg.name}] step {step:4d} "
+                  f"loss {float(loss):.4f} ({entry['elapsed_s']}s)")
+    if log_path:
+        os.makedirs(os.path.dirname(log_path), exist_ok=True)
+        with open(log_path, "w") as f:
+            json.dump({"model": cfg.name, "steps": steps, "batch": batch,
+                       "lr": lr, "log": log}, f, indent=1)
+    return params, log
+
+
+def save_params(params: dict, path: str) -> None:
+    np.savez(path, **{k: np.asarray(v) for k, v in params.items()})
+
+
+def load_params(path: str) -> dict:
+    with np.load(path) as z:
+        return {k: jnp.asarray(z[k]) for k in z.files}

@@ -1,0 +1,106 @@
+"""Data-layer tests: corpora, tasks, tokenizer, bundle format."""
+
+import json
+import os
+
+import numpy as np
+
+from compile import aot
+from compile import data as D
+
+
+def test_corpora_deterministic():
+    assert D.gen_wiki_syn(1, 20) == D.gen_wiki_syn(1, 20)
+    assert D.gen_wiki_syn(1, 20) != D.gen_wiki_syn(2, 20)
+    assert D.gen_alpaca_syn(1, 10) == D.gen_alpaca_syn(1, 10)
+
+
+def test_corpora_structure():
+    wiki = D.gen_wiki_syn(3, 50)
+    assert wiki.count("= ") >= 50  # titles
+    alp = D.gen_alpaca_syn(3, 20)
+    assert alp.count("### Instruction:") == 20
+    assert alp.count("### Response:") == 20
+
+
+def test_corpus_token_distribution_heavy_tailed():
+    """Zipf sampling should make some words much more frequent."""
+    wiki = D.gen_wiki_syn(4, 200)
+    words = wiki.split()
+    from collections import Counter
+    counts = Counter(words)
+    freqs = sorted(counts.values(), reverse=True)
+    assert freqs[0] > 10 * freqs[len(freqs) // 2]
+
+
+def test_tasks_valid():
+    for name in D.TASK_SPECS:
+        task = D.gen_task(name, seed=5)
+        assert task["name"] == name
+        assert len(task["items"]) == D.TASK_SPECS[name][1]
+        for item in task["items"]:
+            assert len(item["choices"]) == 4
+            assert 0 <= item["answer"] < 4
+            # correct choice differs from distractors
+            correct = item["choices"][item["answer"]]
+            assert all(c != correct
+                       for i, c in enumerate(item["choices"])
+                       if i != item["answer"])
+
+
+def test_task_corruptions_change_text():
+    import random
+    rng = random.Random(0)
+    for name, (corrupt, _) in D.TASK_SPECS.items():
+        changed = 0
+        for _ in range(20):
+            topic = rng.choice(D.TOPIC_NAMES)
+            s = D._sentence(rng, topic)
+            if corrupt(rng, topic, s) != s:
+                changed += 1
+        assert changed >= 15, f"{name} corruption too weak ({changed}/20)"
+
+
+def test_tokenize_roundtrip():
+    s = "The comet orbits! = Nebula =\n### Instruction:\n"
+    assert D.detokenize(D.tokenize(s)) == s
+    assert max(D.tokenize(s)) < D.VOCAB_SIZE
+
+
+def test_write_all_layout(tmp_path):
+    D.write_all(str(tmp_path), seed=7)
+    assert (tmp_path / "corpus" / "wiki_syn.txt").exists()
+    assert (tmp_path / "corpus" / "alpaca_syn.txt").exists()
+    for name in D.TASK_SPECS:
+        p = tmp_path / "tasks" / f"{name}.json"
+        assert p.exists()
+        task = json.load(open(p))
+        assert task["items"]
+
+
+def test_bundle_roundtrip(tmp_path):
+    tensors = {
+        "a": np.arange(6, dtype=np.float32).reshape(2, 3),
+        "b.c": np.array([-1.5, 2.25], np.float32),
+    }
+    aot.write_bundle(str(tmp_path), tensors, extra={"kind": "test"})
+    man = json.load(open(tmp_path / "manifest.json"))
+    assert man["format"] == "lrc-bundle-v1"
+    assert man["kind"] == "test"
+    raw = np.fromfile(tmp_path / "weights.bin", dtype="<f4")
+    for t in man["tensors"]:
+        numel = int(np.prod(t["shape"]))
+        got = raw[t["offset"]:t["offset"] + numel].reshape(t["shape"])
+        np.testing.assert_array_equal(got, tensors[t["name"]])
+
+
+def test_rank_tables_consistent_with_graphs():
+    """aot's per-layer ranks must follow the shared formula."""
+    from compile import lrc as A
+    from compile import model as M
+    cfg = M.CONFIGS["small"]
+    ranks = aot.quant_layer_ranks(cfg, 10)
+    shapes = dict(M.param_spec(cfg))
+    for ln, k in ranks.items():
+        dout, din = shapes[ln]
+        assert k == A.rank_for_pct(dout, din, 0.10)

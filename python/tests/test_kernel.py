@@ -1,0 +1,137 @@
+"""L1 correctness: the Pallas kernels vs the pure-jnp oracles.
+
+This is the CORE correctness signal for the compute hot-spot: parameter
+sweeps over shapes, ranks, groupsizes and clip factors (hand-rolled
+hypothesis-style sweeps — the image has no hypothesis package).
+"""
+
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import quant as kq
+from compile.kernels import ref as kref
+
+
+def rand(seed, *shape):
+    return np.random.RandomState(seed).randn(*shape).astype(np.float32)
+
+
+SHAPES = [
+    # (m, din, dout)
+    (8, 16, 16),
+    (64, 64, 128),
+    (128, 96, 48),
+    (33, 64, 64),     # m not divisible by the preferred block
+    (256, 128, 256),
+]
+
+
+@pytest.mark.parametrize("m,din,dout", SHAPES)
+def test_w4a4_matches_ref(m, din, dout):
+    x, w = rand(m, m, din), rand(m + 1, dout, din)
+    got = kq.w4a4_linear(jnp.array(x), jnp.array(w), 0.9)
+    want = kref.ref_w4a4_linear(jnp.array(x), jnp.array(w), 0.9)
+    np.testing.assert_allclose(np.array(got), np.array(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,din,dout", SHAPES)
+@pytest.mark.parametrize("k", [1, 4, 16])
+def test_w4a4_lowrank_matches_ref(m, din, dout, k):
+    x, w = rand(m, m, din), rand(m + 1, dout, din)
+    u, v = rand(k, dout, k), rand(k + 7, din, k)
+    got = kq.w4a4_linear(jnp.array(x), jnp.array(w), 0.85,
+                         jnp.array(u), jnp.array(v))
+    want = kref.ref_w4a4_linear(jnp.array(x), jnp.array(w), 0.85,
+                                jnp.array(u), jnp.array(v))
+    np.testing.assert_allclose(np.array(got), np.array(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("group", [8, 16, 32])
+@pytest.mark.parametrize("clip", [1.0, 0.9, 0.7])
+def test_w4a4_grouped_matches_ref(group, clip):
+    x, w = rand(0, 64, 64), rand(1, 32, 64)
+    got = kq.w4a4_linear(jnp.array(x), jnp.array(w), clip, group=group)
+    want = kref.ref_w4a4_linear(jnp.array(x), jnp.array(w), clip, group=group)
+    np.testing.assert_allclose(np.array(got), np.array(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_act_quant_is_int4_grid():
+    x = rand(3, 32, 64)
+    q, s = kref.ref_act_quant(jnp.array(x), 0.9)
+    q = np.array(q)
+    assert np.all(q == np.round(q))
+    assert q.min() >= -8 and q.max() <= 7
+
+
+def test_act_quant_error_bound():
+    # |x - q*s| <= s/2 when clip=1 (no clipping)
+    x = rand(4, 16, 32)
+    q, s = kref.ref_act_quant(jnp.array(x), 1.0)
+    err = np.abs(x - np.array(q * s))
+    assert np.all(err <= np.array(s) * 0.5 + 1e-6)
+
+
+def test_grouped_quant_not_worse_on_outliers():
+    x = rand(5, 16, 64)
+    x[:, 0] *= 30.0  # outlier channel
+    qf, sf = kref.ref_act_quant(jnp.array(x), 1.0)
+    qg, sg = kref.ref_act_quant_grouped(jnp.array(x), 1.0, 16)
+    e_full = np.linalg.norm(x - np.array(qf * sf))
+    e_grp = np.linalg.norm(x - np.array(qg * sg))
+    assert e_grp <= e_full + 1e-6
+
+
+@pytest.mark.parametrize("d", [8, 32, 128, 256])
+def test_fwht_matches_ref_and_involutes(d):
+    x = rand(d, 24, d)
+    got = np.array(kq.fwht(jnp.array(x)))
+    want = np.array(kref.ref_fwht(jnp.array(x)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    twice = np.array(kq.fwht(kq.fwht(jnp.array(x))))
+    np.testing.assert_allclose(twice, x, rtol=1e-3, atol=1e-3)
+
+
+def test_fwht_is_hadamard_matmul():
+    d = 64
+    x = rand(9, 8, d)
+    h = np.array(kref.hadamard_matrix(d))
+    want = x @ h
+    got = np.array(kq.fwht(jnp.array(x)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_hadamard_orthogonal():
+    for d in (16, 128):
+        h = np.array(kref.hadamard_matrix(d))
+        np.testing.assert_allclose(h @ h.T, np.eye(d), atol=1e-5)
+
+
+def test_kernel_lowers_to_hlo_text():
+    """The kernel must survive jit→stablehlo→XlaComputation→HLO text —
+    the exact interchange path aot.py uses."""
+    from compile.aot import to_hlo_text, f32spec
+
+    def fn(x, w, u, v, clip):
+        return (kq.w4a4_linear(x, w, clip[0], u, v),)
+
+    text = to_hlo_text(fn, f32spec(32, 64), f32spec(48, 64),
+                       f32spec(48, 4), f32spec(64, 4), f32spec(1))
+    assert "HloModule" in text
+    assert len(text) > 1000
+
+
+def test_block_shape_invariance():
+    # different tile sizes must not change results
+    x, w = rand(1, 128, 64), rand(2, 64, 64)
+    outs = []
+    for bm, bn in itertools.product([16, 64], [16, 64]):
+        outs.append(np.array(kq.w4a4_linear(
+            jnp.array(x), jnp.array(w), 0.9, bm=bm, bn=bn)))
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=1e-5)

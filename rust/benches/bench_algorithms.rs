@@ -1,0 +1,72 @@
+//! Algorithm microbenchmarks — the §Perf profiling substrate for L3:
+//! blocked GEMM GFLOP/s, Cholesky, Jacobi eigensolver, FWHT, GPTQ
+//! end-to-end per layer, and the full LRC layer pipeline at model dims.
+//!
+//!   cargo bench --bench bench_algorithms [-- --samples 10]
+
+use lrc::bench::{bench_report, section};
+use lrc::linalg::{cholesky, eigh, fwht, hadamard_matrix, Mat};
+use lrc::lrc::{lrc, LayerStats};
+use lrc::quant::{gptq::gptq, QuantConfig};
+use lrc::rng::Rng;
+use lrc::util::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.get_usize("samples", 10);
+    let mut rng = Rng::new(1);
+
+    section("L3 linalg primitives");
+    for d in [128usize, 256, 512] {
+        let a = Mat::random_normal(&mut rng, d, d);
+        let b = Mat::random_normal(&mut rng, d, d);
+        let stats = bench_report(&format!("matmul {d}x{d}"), 2, n,
+                                 || { let _ = a.matmul(&b); });
+        let gflops = 2.0 * (d as f64).powi(3) / (stats.mean() / 1e3) / 1e9;
+        println!("{:>56}", format!("→ {gflops:.2} GFLOP/s"));
+    }
+    for d in [128usize, 256] {
+        let m = Mat::random_normal(&mut rng, d, d + 8);
+        let mut pd = m.gram_n();
+        pd.add_diag(1.0);
+        bench_report(&format!("cholesky {d}"), 2, n,
+                     || { let _ = cholesky(&pd).unwrap(); });
+        let sym = m.gram_n();
+        bench_report(&format!("eigh (QL) {d}"), 1, n.min(5),
+                     || { let _ = eigh(&sym); });
+    }
+    {
+        let mut x = rng.normal_vec(4096);
+        bench_report("fwht 4096", 10, n * 10, || fwht(&mut x));
+        let _ = hadamard_matrix(64);
+    }
+
+    section("quantizers at model dims (dout x din)");
+    for (dout, din) in [(128usize, 128usize), (256, 128), (128, 256)] {
+        let w = Mat::random_normal(&mut rng, dout, din);
+        let x = Mat::random_normal(&mut rng, din, 2048);
+        let h = x.gram_n();
+        bench_report(&format!("gptq {dout}x{din} (n=2048)"), 1, n,
+                     || { let _ = gptq(&w, &h, 4, None, 0.01, 64).unwrap(); });
+    }
+
+    section("full LRC layer (stats prebuilt)");
+    for (dout, din) in [(128usize, 128usize), (128, 256)] {
+        let w = Mat::random_normal(&mut rng, dout, din);
+        let x = Mat::random_normal(&mut rng, din, 2048);
+        let mut st = LayerStats::new(din, Some(4), 0.9, None);
+        st.update(&x);
+        let cfg = QuantConfig::default();
+        let k = lrc::quant::rank_for_pct(dout, din, 0.10);
+        bench_report(&format!("lrc(1) {dout}x{din} k={k}"), 1, n,
+                     || { let _ = lrc(&w, &st, k, &cfg).unwrap(); });
+    }
+
+    section("Σ accumulation (per calibration batch, 1024 tokens)");
+    for d in [128usize, 256] {
+        let x = Mat::random_normal(&mut rng, d, 1024);
+        let mut st = LayerStats::new(d, Some(4), 0.9, None);
+        bench_report(&format!("stats.update d={d}"), 1, n,
+                     || st.update(&x));
+    }
+}

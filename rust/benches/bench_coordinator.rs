@@ -1,0 +1,97 @@
+//! Coordinator benchmarks — §Perf L3: batcher enqueue→dequeue overhead
+//! (no PJRT), and end-to-end serving latency/throughput under load for
+//! the FP16 and W4A4+LRC graphs.
+//!
+//!   cargo bench --bench bench_coordinator [-- --requests 96 --skip-e2e]
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use lrc::bench::section;
+use lrc::coordinator::{BatchPolicy, Batcher, Request, ServerConfig,
+                       ServerHandle};
+use lrc::util::Args;
+
+fn bench_batcher_only() {
+    section("batcher overhead (no PJRT): 50k requests through the queue");
+    let b = Arc::new(Batcher::new(BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_millis(1),
+        max_queue: 100_000,
+    }));
+    let n = 50_000u64;
+    let producer = {
+        let b = b.clone();
+        std::thread::spawn(move || {
+            for i in 0..n {
+                let (tx, _rx) = mpsc::channel();
+                // keep _rx alive? drop is fine; worker send fails silently
+                std::mem::forget(_rx);
+                b.push(Request {
+                    id: i,
+                    tokens: vec![0; 8],
+                    enqueued: Instant::now(),
+                    respond: tx,
+                }).unwrap();
+            }
+        })
+    };
+    let t0 = Instant::now();
+    let mut got = 0u64;
+    while got < n {
+        if let Some(batch) = b.next_batch(8) {
+            got += batch.len() as u64;
+        }
+    }
+    producer.join().unwrap();
+    let dt = t0.elapsed().as_secs_f64();
+    println!("  drained {n} requests in {dt:.3}s → {:.0} req/s, \
+              {:.2} µs/request", n as f64 / dt, dt * 1e6 / n as f64);
+}
+
+fn bench_serving(requests: usize) -> anyhow::Result<()> {
+    let art = lrc::artifacts_dir();
+    let model_dir = art.join("models/small");
+    let quant_dir = model_dir.join("quant/LRC1_fwd_w4a4_r10_b8");
+    let corpus = lrc::data::Corpus::load(&art.join("corpus/wiki_syn.txt"))?;
+
+    let mut variants: Vec<(&str, String, Option<std::path::PathBuf>)> =
+        vec![("FP16", "fwd_fp".into(), None)];
+    if quant_dir.join("manifest.json").exists() {
+        variants.push(("W4A4+LRC10", "fwd_w4a4_r10".into(),
+                       Some(quant_dir)));
+    } else {
+        eprintln!("(quant bundle missing — run example serve_quantized \
+                   or `lrc quantize` first; serving only FP16)");
+    }
+
+    for (label, prefix, quant) in variants {
+        section(&format!("end-to-end serving: {label}, {requests} requests"));
+        let handle = ServerHandle::start(ServerConfig {
+            model_dir: model_dir.clone(),
+            graph_prefix: prefix,
+            quant_dir: quant,
+            policy: BatchPolicy::default(),
+        })?;
+        let seqs = corpus.eval_sequences(handle.seq_len, 32);
+        let mut rxs = Vec::new();
+        for i in 0..requests {
+            rxs.push(handle.submit(seqs[i % seqs.len()].clone())?);
+        }
+        for rx in rxs {
+            let _ = rx.recv()?;
+        }
+        println!("{}", handle.shutdown().render());
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    bench_batcher_only();
+    if !args.has("skip-e2e") {
+        bench_serving(args.get_usize("requests", 96))?;
+    }
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Figure 3 — the quantizer ablation: LRC composes with any layer-wise
+//! solver; the gain from the low-rank term is *larger* under the cruder
+//! RTN than under GPTQ (the paper's claim).
+//!
+//!   cargo bench --bench fig3_quantizer [-- --model small --fast]
+
+use lrc::data::Corpus;
+use lrc::experiments::{self, EvalBudget, TABLE_HEADERS};
+use lrc::pipeline::Method;
+use lrc::quant::{QuantConfig, Quantizer};
+use lrc::runtime::{Engine, ModelArtifacts};
+use lrc::util::{render_table, Args};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let model = args.get_or("model", "small");
+    let budget = EvalBudget::from_args(&args);
+
+    let art = lrc::artifacts_dir();
+    let engine = Engine::cpu()?;
+    let corpus = Corpus::load(&art.join("corpus/wiki_syn.txt"))?;
+    let tasks = experiments::load_tasks(&art, budget)?;
+    let arts = ModelArtifacts::load(&art.join("models").join(&model))?;
+
+    lrc::bench::section(&format!(
+        "Figure 3: quantizer ablation (GPTQ vs RTN, ±LRC) on {model}"));
+
+    let mut rows = Vec::new();
+    rows.push(experiments::evaluate_graph(
+        &engine, &arts, "fwd_fp_b8", None, &corpus, &tasks, budget,
+        "FP16")?.cells());
+
+    let mut avgs = std::collections::BTreeMap::new();
+    for quantizer in [Quantizer::Gptq, Quantizer::Rtn] {
+        let qname = match quantizer { Quantizer::Gptq => "GPTQ",
+                                      Quantizer::Rtn => "RTN" };
+        for (pct, method) in [(0usize, Method::Quarot), (10, Method::Lrc)] {
+            let graph = experiments::quant_graph_name(pct, None, false, 8);
+            let cfg = QuantConfig { quantizer,
+                                    rank_pct: pct as f64 / 100.0,
+                                    ..Default::default() };
+            let label = if pct == 0 { qname.to_string() }
+                        else { format!("{qname}+LRC") };
+            let (mut scores, _) = experiments::quantize_and_evaluate(
+                &engine, &arts, &corpus, &tasks, &graph, method, &cfg, 128,
+                budget)?;
+            scores.label = label.clone();
+            avgs.insert(label, scores.avg);
+            rows.push(scores.cells());
+            eprintln!("  {} done", scores.label);
+        }
+    }
+    println!("\n{}", render_table(&TABLE_HEADERS, &rows));
+    let gain_gptq = avgs["GPTQ+LRC"] - avgs["GPTQ"];
+    let gain_rtn = avgs["RTN+LRC"] - avgs["RTN"];
+    println!("LRC gain under GPTQ: {gain_gptq:+.3}; under RTN: {gain_rtn:+.3} \
+              (paper: gain larger under RTN)");
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Table 1 — W4A4, no group-scaling: PPL + 6 tasks × {FP16, QuaRot, SVD,
+//! LRC(1), LRC(5)} × {nano, small, moe} (Phi-3/Llama/Mixtral stand-ins).
+//!
+//!   cargo bench --bench table1_w4a4 [-- --models small --fast]
+//!
+//! Expected shape vs the paper: FP16 best; LRC closes >50% of the
+//! QuaRot→FP16 average-accuracy gap at rank 10%; SVD ≈ QuaRot.
+
+use lrc::data::Corpus;
+use lrc::experiments::{self, EvalBudget, TABLE_HEADERS};
+use lrc::pipeline::Method;
+use lrc::quant::QuantConfig;
+use lrc::runtime::{Engine, ModelArtifacts};
+use lrc::util::{render_table, Args};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let models = experiments::models_from_args(&args, "nano,small,moe");
+    let budget = EvalBudget::from_args(&args);
+    let pct = args.get_usize("pct", 10);
+
+    let art = lrc::artifacts_dir();
+    let engine = Engine::cpu()?;
+    let corpus = Corpus::load(&art.join("corpus/wiki_syn.txt"))?;
+    let tasks = experiments::load_tasks(&art, budget)?;
+
+    lrc::bench::section(&format!(
+        "Table 1: W4A4 (rank {pct}%, no group-scaling)"));
+    for model in models.split(',') {
+        let arts = ModelArtifacts::load(&art.join("models").join(model))?;
+        let mut rows = Vec::new();
+        rows.push(experiments::evaluate_graph(
+            &engine, &arts, "fwd_fp_b8", None, &corpus, &tasks, budget,
+            "FP16")?.cells());
+        let graph = experiments::quant_graph_name(pct, None, false, 8);
+        let graph0 = experiments::quant_graph_name(0, None, false, 8);
+        for (method, iters) in experiments::standard_method_set() {
+            let cfg = QuantConfig { iters, rank_pct: pct as f64 / 100.0,
+                                    ..Default::default() };
+            let g = if method == Method::Quarot { &graph0 } else { &graph };
+            let (scores, _) = experiments::quantize_and_evaluate(
+                &engine, &arts, &corpus, &tasks, g, method, &cfg, 128,
+                budget)?;
+            rows.push(scores.cells());
+        }
+        println!("\nModel: {model}\n{}",
+                 render_table(&TABLE_HEADERS, &rows));
+        gap_summary(&rows);
+    }
+    Ok(())
+}
+
+fn gap_summary(rows: &[Vec<String>]) {
+    let avg = |r: &Vec<String>| -> f64 { r.last().unwrap().parse().unwrap() };
+    let fp = avg(&rows[0]);
+    let quarot = avg(&rows[1]);
+    let lrc1 = avg(&rows[3]);
+    if fp > quarot {
+        println!("gap recovered by LRC(1): {:.0}%  (paper: >50%)\n",
+                 (lrc1 - quarot) / (fp - quarot) * 100.0);
+    } else {
+        println!("(no FP16→QuaRot accuracy gap on this model/budget)\n");
+    }
+}

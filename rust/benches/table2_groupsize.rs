@@ -1,0 +1,50 @@
+//! Table 2 — W4A4 with activation group-scaling (paper: groupsize 128 on
+//! ~4k dims; here 32 on our scaled-down dims): same method set as Table 1.
+//!
+//!   cargo bench --bench table2_groupsize [-- --models small --fast]
+
+use lrc::data::Corpus;
+use lrc::experiments::{self, EvalBudget, TABLE_HEADERS};
+use lrc::pipeline::Method;
+use lrc::quant::QuantConfig;
+use lrc::runtime::{Engine, ModelArtifacts};
+use lrc::util::{render_table, Args};
+
+const GROUP: usize = 32;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let models = experiments::models_from_args(&args, "nano,small,moe");
+    let budget = EvalBudget::from_args(&args);
+    let pct = args.get_usize("pct", 10);
+
+    let art = lrc::artifacts_dir();
+    let engine = Engine::cpu()?;
+    let corpus = Corpus::load(&art.join("corpus/wiki_syn.txt"))?;
+    let tasks = experiments::load_tasks(&art, budget)?;
+
+    lrc::bench::section(&format!(
+        "Table 2: W4A4 + activation groupsize {GROUP} (rank {pct}%)"));
+    for model in models.split(',') {
+        let arts = ModelArtifacts::load(&art.join("models").join(model))?;
+        let mut rows = Vec::new();
+        rows.push(experiments::evaluate_graph(
+            &engine, &arts, "fwd_fp_b8", None, &corpus, &tasks, budget,
+            "FP16")?.cells());
+        let graph = experiments::quant_graph_name(pct, Some(GROUP), false, 8);
+        let graph0 = experiments::quant_graph_name(0, Some(GROUP), false, 8);
+        for (method, iters) in experiments::standard_method_set() {
+            let cfg = QuantConfig { iters, a_group: Some(GROUP),
+                                    rank_pct: pct as f64 / 100.0,
+                                    ..Default::default() };
+            let g = if method == Method::Quarot { &graph0 } else { &graph };
+            let (scores, _) = experiments::quantize_and_evaluate(
+                &engine, &arts, &corpus, &tasks, g, method, &cfg, 128,
+                budget)?;
+            rows.push(scores.cells());
+        }
+        println!("\nModel: {model}\n{}",
+                 render_table(&TABLE_HEADERS, &rows));
+    }
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Table 3 — weight-only W4 quantization (Qa = identity) with model sizes:
+//! all methods recover FP16 accuracy almost exactly, showing the low-rank
+//! term is unnecessary when activations stay fp — the paper's control
+//! experiment.  Size column reports real int4-packed + fp16 storage.
+//!
+//!   cargo bench --bench table3_weight_only [-- --models small --fast]
+
+use lrc::data::Corpus;
+use lrc::experiments::{self, EvalBudget};
+use lrc::pipeline::Method;
+use lrc::quant::QuantConfig;
+use lrc::runtime::{Engine, ModelArtifacts};
+use lrc::util::{render_table, Args};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let models = experiments::models_from_args(&args, "nano,small,moe");
+    let budget = EvalBudget::from_args(&args);
+
+    let art = lrc::artifacts_dir();
+    let engine = Engine::cpu()?;
+    let corpus = Corpus::load(&art.join("corpus/wiki_syn.txt"))?;
+    let tasks = experiments::load_tasks(&art, budget)?;
+
+    let headers = ["Method", "Size(MB)", "PPL", "PQ", "HS", "A-e", "A-c",
+                   "WG", "LA", "Avg."];
+
+    lrc::bench::section("Table 3: weight-only W4 (+ sizes)");
+    for model in models.split(',') {
+        let arts = ModelArtifacts::load(&art.join("models").join(model))?;
+        let fp_bytes = arts.info.param_count * 2; // fp16 reference size
+        let mut rows = Vec::new();
+        let fp = experiments::evaluate_graph(
+            &engine, &arts, "fwd_fp_b8", None, &corpus, &tasks, budget,
+            "FP16")?;
+        let mut fp_cells = fp.cells();
+        fp_cells.insert(1, format!("{:.2}", fp_bytes as f64 / 1e6));
+        rows.push(fp_cells);
+
+        for (method, pct) in [(Method::Quarot, 0usize), (Method::Svd, 10),
+                              (Method::Lrc, 10)] {
+            let graph = experiments::quant_graph_name(pct, None, true, 8);
+            let cfg = QuantConfig { a_bits: None,
+                                    rank_pct: pct as f64 / 100.0,
+                                    ..Default::default() };
+            let (scores, report) = experiments::quantize_and_evaluate(
+                &engine, &arts, &corpus, &tasks, &graph, method, &cfg, 128,
+                budget)?;
+            let mut cells = scores.cells();
+            cells.insert(1, format!("{:.2}",
+                                    report.size_bytes() as f64 / 1e6));
+            rows.push(cells);
+        }
+        println!("\nModel: {model}\n{}", render_table(&headers, &rows));
+        println!("expected shape: every quantized row ≈ FP16 accuracy; \
+                  low-rank adds size but no accuracy (paper's point)\n");
+    }
+    Ok(())
+}

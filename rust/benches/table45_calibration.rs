@@ -1,0 +1,64 @@
+//! Tables 4/5 — calibration-set ablation: LRC calibrated on wiki_syn vs
+//! alpaca_syn (WikiText-2 / Alpaca substitutes), with and without
+//! activation group-scaling.  The paper: the choice "does not
+//! significantly affect" downstream accuracy.
+//!
+//!   cargo bench --bench table45_calibration [-- --model small --fast]
+
+use lrc::data::Corpus;
+use lrc::experiments::{self, EvalBudget};
+use lrc::pipeline::Method;
+use lrc::quant::QuantConfig;
+use lrc::runtime::{Engine, ModelArtifacts};
+use lrc::util::{render_table, Args};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let model = args.get_or("model", "small");
+    let budget = EvalBudget::from_args(&args);
+
+    let art = lrc::artifacts_dir();
+    let engine = Engine::cpu()?;
+    let tasks = experiments::load_tasks(&art, budget)?;
+    let arts = ModelArtifacts::load(&art.join("models").join(&model))?;
+    let eval_corpus = Corpus::load(&art.join("corpus/wiki_syn.txt"))?;
+
+    let headers = ["Dataset", "Avg.", "A-c", "A-e", "HS", "LA", "PQ", "WG"];
+
+    for group in [Some(32usize), None] {
+        lrc::bench::section(&format!(
+            "Table {}: calibration ablation ({}) on {model}",
+            if group.is_some() { "4" } else { "5" },
+            if group.is_some() { "groupsize 32" } else { "no groupsize" }));
+        let mut rows = Vec::new();
+        for calib_name in ["alpaca_syn", "wiki_syn"] {
+            let calib = Corpus::load(
+                &art.join("corpus").join(format!("{calib_name}.txt")))?;
+            let graph = experiments::quant_graph_name(10, group, false, 8);
+            let cfg = QuantConfig { a_group: group, rank_pct: 0.10,
+                                    ..Default::default() };
+            let (bundle, _) = lrc::pipeline::quantize_and_save(
+                &engine, &arts, &calib, &graph, Method::Lrc, &cfg, 128)?;
+            let scores = experiments::evaluate_graph(
+                &engine, &arts, &graph, Some(&bundle), &eval_corpus, &tasks,
+                budget, calib_name)?;
+            // paper's column order for tables 4/5: Avg A-c A-e HS LA PQ WG
+            let by_name: std::collections::BTreeMap<_, _> =
+                scores.tasks.iter().cloned().collect();
+            rows.push(vec![
+                calib_name.to_string(),
+                format!("{:.4}", scores.avg),
+                format!("{:.4}", by_name["ac_syn"]),
+                format!("{:.4}", by_name["ae_syn"]),
+                format!("{:.4}", by_name["hs_syn"]),
+                format!("{:.4}", by_name["la_syn"]),
+                format!("{:.4}", by_name["pq_syn"]),
+                format!("{:.4}", by_name["wg_syn"]),
+            ]);
+            eprintln!("  calib={calib_name} gs={group:?} done");
+        }
+        println!("\n{}", render_table(&headers, &rows));
+    }
+    println!("expected shape: the two rows within noise of each other");
+    Ok(())
+}

@@ -1,0 +1,99 @@
+//! Tables 6–8 — micro-latency of the fused W4A4(+low-rank) layer vs rank,
+//! at Llama-family matrix shapes (paper dims and ranks scaled by 1/16 for
+//! the CPU testbed: 11008×4096→688×256, 13824×5120→864×320,
+//! 28672×8192→1792×512; ranks {0,128,…,1024}→{0,8,…,64}).
+//!
+//! The paper's absolute speedups come from int4 tensor cores; on CPU the
+//! quantized path is *simulated* (as in the paper's accuracy tables), so
+//! the reproducible shape is the *marginal cost of the low-rank path*:
+//! latency grows mildly with rank, and even rank→0⁺ pays a data-movement
+//! step — the paper's own observation motivating a fused kernel.
+//!
+//!   cargo bench --bench table678_latency [-- --samples 20]
+
+use lrc::bench::{bench, section};
+use lrc::rng::Rng;
+use lrc::runtime::{Engine, Tensor, TensorBundle};
+use lrc::util::{render_table, Args, Json};
+
+fn tensor(rng: &mut Rng, shape: &[usize], scale: f32) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor {
+        shape: shape.to_vec(),
+        data: rng.normal_vec(n).iter().map(|&v| v as f32 * scale).collect(),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let samples = args.get_usize("samples", 20);
+    let warmup = args.get_usize("warmup", 3);
+
+    let art = lrc::artifacts_dir();
+    let mdir = art.join("micro");
+    let graphs = Json::parse(&std::fs::read_to_string(mdir.join("graphs.json"))?)
+        .map_err(anyhow::Error::msg)?;
+    let graphs = graphs.get("graphs").unwrap().as_obj().unwrap().clone();
+
+    let engine = Engine::cpu()?;
+    let mut rng = Rng::new(7);
+    let _ = TensorBundle::default();
+
+    for (dims, table_no) in [("688x256", 6), ("864x320", 7), ("1792x512", 8)] {
+        section(&format!("Table {table_no}: fused layer latency, dims {dims} \
+                          (paper dims ×1/16)"));
+        let (dout, din) = {
+            let mut it = dims.split('x');
+            (it.next().unwrap().parse::<usize>()?,
+             it.next().unwrap().parse::<usize>()?)
+        };
+        let m = 512usize;
+
+        // fp16 (fp32-on-CPU) baseline
+        let fp_name = format!("micro_fp_{dims}");
+        let g = &graphs[&fp_name];
+        let exe = engine.compile_file(
+            &mdir.join(g.get("file").unwrap().as_str().unwrap()))?;
+        let x = tensor(&mut rng, &[m, din], 1.0);
+        let w = tensor(&mut rng, &[dout, din], 0.1);
+        let xb = engine.upload_f32(&x)?;
+        let wb = engine.upload_f32(&w)?;
+        let fp_stats = bench(warmup, samples, || {
+            let out = exe.execute_b(&[&xb, &wb]).unwrap();
+            let _ = out[0][0].to_literal_sync().unwrap();
+        });
+
+        let mut rows = vec![vec!["fp16".into(), dims.to_string(),
+                                 fp_stats.pm(), "1.00".into()]];
+        for rank in [0usize, 8, 16, 32, 64] {
+            let name = format!("micro_w4a4_{dims}_r{rank}");
+            let g = &graphs[&name];
+            let exe = engine.compile_file(
+                &mdir.join(g.get("file").unwrap().as_str().unwrap()))?;
+            let clip = Tensor { shape: vec![1], data: vec![0.9] };
+            let cb = engine.upload_f32(&clip)?;
+            let stats = if rank == 0 {
+                bench(warmup, samples, || {
+                    let out = exe.execute_b(&[&xb, &wb, &cb]).unwrap();
+                    let _ = out[0][0].to_literal_sync().unwrap();
+                })
+            } else {
+                let u = tensor(&mut rng, &[dout, rank], 0.05);
+                let v = tensor(&mut rng, &[din, rank], 0.05);
+                let ub = engine.upload_f32(&u)?;
+                let vb = engine.upload_f32(&v)?;
+                bench(warmup, samples, || {
+                    let out = exe.execute_b(&[&xb, &wb, &ub, &vb, &cb]).unwrap();
+                    let _ = out[0][0].to_literal_sync().unwrap();
+                })
+            };
+            rows.push(vec![format!("{rank}"), dims.to_string(), stats.pm(),
+                           format!("{:.2}", fp_stats.mean() / stats.mean())]);
+        }
+        println!("{}", render_table(
+            &["ranks", "matrix dim", "time (ms)", "speedup over fp"], &rows));
+    }
+    println!("note: simulated int4 on CPU — speedups <1 are expected; the \
+              paper-shape claim is the monotone rank→latency trend");
+    Ok(())
+}

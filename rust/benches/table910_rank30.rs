@@ -1,0 +1,49 @@
+//! Tables 9/10 — closing the gap: LRC at rank 30% vs FP16, with and
+//! without activation group-scaling.  The paper: at 30% the W4A4 accuracy
+//! gap is fully eliminated.
+//!
+//!   cargo bench --bench table910_rank30 [-- --models small,moe --fast]
+
+use lrc::data::Corpus;
+use lrc::experiments::{self, EvalBudget, TABLE_HEADERS};
+use lrc::pipeline::Method;
+use lrc::quant::QuantConfig;
+use lrc::runtime::{Engine, ModelArtifacts};
+use lrc::util::{render_table, Args};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let models = experiments::models_from_args(&args, "nano,small,moe");
+    let budget = EvalBudget::from_args(&args);
+
+    let art = lrc::artifacts_dir();
+    let engine = Engine::cpu()?;
+    let corpus = Corpus::load(&art.join("corpus/wiki_syn.txt"))?;
+    let tasks = experiments::load_tasks(&art, budget)?;
+
+    for (group, table_no) in [(None, 9), (Some(32usize), 10)] {
+        lrc::bench::section(&format!(
+            "Table {table_no}: LRC rank 30% {}",
+            if group.is_some() { "(groupsize 32)" } else { "(no groupsize)" }));
+        for model in models.split(',') {
+            let arts = ModelArtifacts::load(&art.join("models").join(model))?;
+            let mut rows = Vec::new();
+            rows.push(experiments::evaluate_graph(
+                &engine, &arts, "fwd_fp_b8", None, &corpus, &tasks, budget,
+                "FP16")?.cells());
+            let graph = experiments::quant_graph_name(30, group, false, 8);
+            let cfg = QuantConfig { a_group: group, rank_pct: 0.30,
+                                    ..Default::default() };
+            let (mut scores, report) = experiments::quantize_and_evaluate(
+                &engine, &arts, &corpus, &tasks, &graph, Method::Lrc, &cfg,
+                128, budget)?;
+            scores.label = "LRC 30%".into();
+            rows.push(scores.cells());
+            println!("\nModel: {model} (quantized size {:.2} MB)\n{}",
+                     report.size_bytes() as f64 / 1e6,
+                     render_table(&TABLE_HEADERS, &rows));
+        }
+    }
+    println!("expected shape: LRC-30% row ≈ FP16 row (gap closed)");
+    Ok(())
+}

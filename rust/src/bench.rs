@@ -1,0 +1,99 @@
+//! Measurement harness for the `cargo bench` targets (no criterion in the
+//! offline image): warmup + timed samples, mean/std/percentiles, and the
+//! paper-shaped table rendering every bench target prints.
+
+use std::time::Instant;
+
+/// Timing statistics over n samples.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub samples_ms: Vec<f64>,
+}
+
+impl Stats {
+    pub fn mean(&self) -> f64 {
+        self.samples_ms.iter().sum::<f64>() / self.samples_ms.len().max(1) as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        let m = self.mean();
+        let var = self.samples_ms.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / self.samples_ms.len().max(1) as f64;
+        var.sqrt()
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples_ms.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples_ms.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[idx.min(s.len() - 1)]
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples_ms.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    /// "12.34 +- 0.56" — the format of the paper's Tables 6–8.
+    pub fn pm(&self) -> String {
+        format!("{:.2} +- {:.2}", self.mean(), self.std())
+    }
+}
+
+/// Benchmark a closure: `warmup` unmeasured runs, then `samples` timed runs.
+pub fn bench<F: FnMut()>(warmup: usize, samples: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        out.push(t0.elapsed().as_secs_f64() * 1000.0);
+    }
+    Stats { samples_ms: out }
+}
+
+/// Convenience wrapper: named measurement printed criterion-style.
+pub fn bench_report<F: FnMut()>(name: &str, warmup: usize, samples: usize,
+                                f: F) -> Stats {
+    let stats = bench(warmup, samples, f);
+    println!("{name:<40} {:>12}  (min {:.2} ms, p95 {:.2} ms, n={})",
+             stats.pm(), stats.min(), stats.percentile(95.0), samples);
+    stats
+}
+
+/// Standard bench-output header so all table benches look alike.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_math() {
+        let s = Stats { samples_ms: vec![1.0, 2.0, 3.0, 4.0] };
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.std() - (1.25f64).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 4.0);
+    }
+
+    #[test]
+    fn bench_runs_closure_expected_times() {
+        let mut count = 0;
+        let _ = bench(3, 5, || count += 1);
+        assert_eq!(count, 8);
+    }
+
+    #[test]
+    fn pm_format() {
+        let s = Stats { samples_ms: vec![10.0, 10.0] };
+        assert_eq!(s.pm(), "10.00 +- 0.00");
+    }
+}

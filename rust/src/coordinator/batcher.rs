@@ -1,0 +1,232 @@
+//! Dynamic batching queue: requests accumulate until either the largest
+//! bucket fills or the oldest request has waited `max_wait` — the standard
+//! continuous-batching trade-off between throughput (full batches) and
+//! tail latency (deadline flush).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+#[cfg(test)]
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::Request;
+
+#[derive(Clone, Debug)]
+pub struct BatchPolicy {
+    /// flush as soon as this many requests are queued
+    pub max_batch: usize,
+    /// flush when the oldest queued request has waited this long
+    pub max_wait: Duration,
+    /// reject new work beyond this depth (backpressure)
+    pub max_queue: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            max_queue: 1024,
+        }
+    }
+}
+
+struct QueueState {
+    items: VecDeque<Request>,
+    closed: bool,
+}
+
+pub struct Batcher {
+    policy: BatchPolicy,
+    state: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Batcher {
+        Batcher {
+            policy,
+            state: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue a request (fails when closed or over the backpressure limit).
+    pub fn push(&self, req: Request) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(anyhow!("queue closed"));
+        }
+        if st.items.len() >= self.policy.max_queue {
+            return Err(anyhow!("queue full ({} requests) — backpressure",
+                               st.items.len()));
+        }
+        st.items.push_back(req);
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Blocking pop of the next batch (≤ `cap`); `None` once closed+empty.
+    pub fn next_batch(&self, cap: usize) -> Option<Vec<Request>> {
+        let cap = cap.min(self.policy.max_batch).max(1);
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.items.len() >= cap {
+                break;
+            }
+            if !st.items.is_empty() {
+                // deadline check against the oldest entry
+                let oldest = st.items.front().unwrap().enqueued;
+                let waited = oldest.elapsed();
+                if waited >= self.policy.max_wait {
+                    break;
+                }
+                let remaining = self.policy.max_wait - waited;
+                let (guard, _timeout) =
+                    self.cv.wait_timeout(st, remaining).unwrap();
+                st = guard;
+                continue;
+            }
+            if st.closed {
+                return None;
+            }
+            // empty: wait for work (with a poll interval so closing is seen)
+            let (guard, _timeout) = self
+                .cv
+                .wait_timeout(st, Duration::from_millis(50))
+                .unwrap();
+            st = guard;
+        }
+        let n = st.items.len().min(cap);
+        Some(st.items.drain(..n).collect())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.state.lock().unwrap().items.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn req(id: u64) -> Request {
+        let (tx, _rx) = mpsc::channel();
+        Request { id, tokens: vec![0; 4], enqueued: Instant::now(), respond: tx }
+    }
+
+    fn policy(max_batch: usize, wait_ms: u64, max_queue: usize) -> BatchPolicy {
+        BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_millis(wait_ms),
+            max_queue,
+        }
+    }
+
+    #[test]
+    fn full_batch_flushes_immediately() {
+        let b = Batcher::new(policy(4, 10_000, 100));
+        for i in 0..4 {
+            b.push(req(i)).unwrap();
+        }
+        let t0 = Instant::now();
+        let batch = b.next_batch(4).unwrap();
+        assert_eq!(batch.len(), 4);
+        assert!(t0.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let b = Batcher::new(policy(8, 20, 100));
+        b.push(req(1)).unwrap();
+        b.push(req(2)).unwrap();
+        let batch = b.next_batch(8).unwrap();
+        assert_eq!(batch.len(), 2);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let b = Batcher::new(policy(3, 1, 100));
+        for i in 0..7 {
+            b.push(req(i)).unwrap();
+        }
+        let mut seen = Vec::new();
+        while seen.len() < 7 {
+            for r in b.next_batch(3).unwrap() {
+                seen.push(r.id);
+            }
+        }
+        assert_eq!(seen, (0..7).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn backpressure_rejects() {
+        let b = Batcher::new(policy(4, 1, 2));
+        b.push(req(1)).unwrap();
+        b.push(req(2)).unwrap();
+        assert!(b.push(req(3)).is_err());
+    }
+
+    #[test]
+    fn closed_queue_rejects_and_drains() {
+        let b = Batcher::new(policy(4, 1, 10));
+        b.push(req(1)).unwrap();
+        b.close();
+        assert!(b.push(req(2)).is_err());
+        // drains the remaining request, then returns None
+        assert_eq!(b.next_batch(4).unwrap().len(), 1);
+        assert!(b.next_batch(4).is_none());
+    }
+
+    #[test]
+    fn no_request_lost_under_concurrency() {
+        // property: N producers × M requests all come out exactly once
+        let b = std::sync::Arc::new(Batcher::new(policy(8, 2, 10_000)));
+        let n_prod = 4;
+        let per = 50;
+        let mut handles = Vec::new();
+        for p in 0..n_prod {
+            let bb = b.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per {
+                    bb.push(req((p * per + i) as u64)).unwrap();
+                    if i % 7 == 0 {
+                        std::thread::sleep(Duration::from_micros(200));
+                    }
+                }
+            }));
+        }
+        let consumer = {
+            let bb = b.clone();
+            std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while got.len() < n_prod * per {
+                    if let Some(batch) = bb.next_batch(8) {
+                        assert!(batch.len() <= 8);
+                        got.extend(batch.iter().map(|r| r.id));
+                    }
+                }
+                got
+            })
+        };
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut got = consumer.join().unwrap();
+        got.sort();
+        let expect: Vec<u64> = (0..(n_prod * per) as u64).collect();
+        assert_eq!(got, expect);
+    }
+}

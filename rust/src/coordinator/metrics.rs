@@ -1,0 +1,209 @@
+//! Serving metrics: lock-free counters + log-bucketed latency histograms
+//! with percentile estimation (no external metrics crate offline).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Log₂-bucketed histogram of u64 samples (µs, %, ...).  64 buckets cover
+/// [1, 2⁶³]; recording and reading are wait-free.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: (0..64).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, v: u64) {
+        let idx = 64 - (v.max(1)).leading_zeros() as usize - 1;
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum.load(Ordering::Relaxed) as f64 / c as f64
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Percentile estimate: bucket midpoint of the p-quantile bucket.
+    pub fn percentile(&self, p: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((p / 100.0) * total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                let lo = 1u64 << i;
+                let hi = lo << 1;
+                return (lo + hi) / 2;
+            }
+        }
+        self.max()
+    }
+}
+
+/// All server metrics in one shareable struct.
+pub struct ServerMetrics {
+    pub started: Instant,
+    /// µs offset of the first completed request (0 = none yet) so
+    /// throughput excludes session-compilation time
+    pub first_done_us: AtomicU64,
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub errors: AtomicU64,
+    pub queue_lat_us: Histogram,
+    pub exec_lat_us: Histogram,
+    pub total_lat_us: Histogram,
+    /// batch fill ratio in percent
+    pub batch_fill: Histogram,
+}
+
+impl ServerMetrics {
+    pub fn new() -> ServerMetrics {
+        ServerMetrics {
+            started: Instant::now(),
+            first_done_us: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            queue_lat_us: Histogram::new(),
+            exec_lat_us: Histogram::new(),
+            total_lat_us: Histogram::new(),
+            batch_fill: Histogram::new(),
+        }
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        // measure serving time from the first completed request so the
+        // one-off session compilation does not dilute throughput
+        let first = self.first_done_us.load(Ordering::Relaxed) as f64 / 1e6;
+        let elapsed = (self.started.elapsed().as_secs_f64() - first).max(1e-9);
+        let requests = self.requests.load(Ordering::Relaxed);
+        MetricsSnapshot {
+            requests,
+            batches: self.batches.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            throughput_rps: requests as f64 / elapsed.max(1e-9),
+            mean_total_us: self.total_lat_us.mean(),
+            p50_total_us: self.total_lat_us.percentile(50.0),
+            p95_total_us: self.total_lat_us.percentile(95.0),
+            p99_total_us: self.total_lat_us.percentile(99.0),
+            mean_exec_us: self.exec_lat_us.mean(),
+            mean_queue_us: self.queue_lat_us.mean(),
+            mean_batch_fill_pct: self.batch_fill.mean(),
+        }
+    }
+}
+
+impl Default for ServerMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub errors: u64,
+    pub throughput_rps: f64,
+    pub mean_total_us: f64,
+    pub p50_total_us: u64,
+    pub p95_total_us: u64,
+    pub p99_total_us: u64,
+    pub mean_exec_us: f64,
+    pub mean_queue_us: f64,
+    pub mean_batch_fill_pct: f64,
+}
+
+impl MetricsSnapshot {
+    pub fn render(&self) -> String {
+        format!(
+            "requests={} batches={} errors={} throughput={:.1} req/s\n\
+             latency: mean={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms\n\
+             exec mean={:.1}ms queue mean={:.1}ms batch-fill={:.0}%",
+            self.requests, self.batches, self.errors, self.throughput_rps,
+            self.mean_total_us / 1000.0, self.p50_total_us as f64 / 1000.0,
+            self.p95_total_us as f64 / 1000.0,
+            self.p99_total_us as f64 / 1000.0,
+            self.mean_exec_us / 1000.0, self.mean_queue_us / 1000.0,
+            self.mean_batch_fill_pct)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_basic() {
+        let h = Histogram::new();
+        for v in [1u64, 2, 4, 8, 1000, 1000, 1000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 7);
+        assert_eq!(h.max(), 1000);
+        assert!((h.mean() - (1.0 + 2.0 + 4.0 + 8.0 + 3000.0) / 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_monotone() {
+        let h = Histogram::new();
+        for i in 1..=1000u64 {
+            h.record(i);
+        }
+        let p50 = h.percentile(50.0);
+        let p95 = h.percentile(95.0);
+        let p99 = h.percentile(99.0);
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        // p50 of 1..1000 should land near 512-bucket
+        assert!((256..=1024).contains(&p50), "{p50}");
+    }
+
+    #[test]
+    fn empty_histogram_safe() {
+        let h = Histogram::new();
+        assert_eq!(h.percentile(99.0), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn snapshot_renders() {
+        let m = ServerMetrics::new();
+        m.requests.fetch_add(10, Ordering::Relaxed);
+        m.total_lat_us.record(1500);
+        let s = m.snapshot().render();
+        assert!(s.contains("requests=10"));
+    }
+}

@@ -1,0 +1,241 @@
+//! L3 serving coordinator — the quantized model is an inference artifact
+//! and this is the engine that serves it: a dynamic batcher in front of a
+//! worker thread that owns the PJRT sessions (PJRT handles are not Send,
+//! so the engine lives entirely inside its worker).
+//!
+//! Request flow:
+//!   client → [`ServerHandle::submit`] → shared queue → batcher (size or
+//!   deadline trigger, largest-fitting batch bucket, repeat-padding) →
+//!   PJRT execute → per-sequence NLL scoring → response channel.
+//!
+//! The service scores sequences (sum/mean NLL — the serving primitive
+//! behind perplexity and multiple-choice evaluation).  Metrics cover
+//! queue wait, execute latency and end-to-end latency.
+
+pub mod batcher;
+pub mod metrics;
+
+pub use batcher::{Batcher, BatchPolicy};
+pub use metrics::{Histogram, MetricsSnapshot, ServerMetrics};
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{Engine, ModelArtifacts, TensorBundle};
+
+/// One scoring request: a token sequence of exactly `seq_len`.
+pub struct Request {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub enqueued: Instant,
+    pub respond: mpsc::Sender<Response>,
+}
+
+/// The scored result.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    /// mean next-token NLL over the sequence (exp → per-seq perplexity)
+    pub mean_nll: f64,
+    pub queue_us: u64,
+    pub exec_us: u64,
+    pub total_us: u64,
+}
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub model_dir: PathBuf,
+    /// graph prefix, e.g. "fwd_w4a4_r10" or "fwd_fp"; buckets are the
+    /// `_b{n}` variants present in graphs.json
+    pub graph_prefix: String,
+    /// quant bundle dir (None for fp graphs)
+    pub quant_dir: Option<PathBuf>,
+    pub policy: BatchPolicy,
+}
+
+pub struct ServerHandle {
+    queue: Arc<Batcher>,
+    next_id: AtomicU64,
+    worker: Option<std::thread::JoinHandle<()>>,
+    shutdown: Arc<AtomicBool>,
+    pub metrics: Arc<ServerMetrics>,
+    pub seq_len: usize,
+}
+
+impl ServerHandle {
+    /// Start the server; blocks until the worker has compiled its sessions.
+    pub fn start(cfg: ServerConfig) -> Result<ServerHandle> {
+        let queue = Arc::new(Batcher::new(cfg.policy.clone()));
+        let metrics = Arc::new(ServerMetrics::new());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<usize, String>>();
+
+        let q2 = queue.clone();
+        let m2 = metrics.clone();
+        let s2 = shutdown.clone();
+        let worker = std::thread::Builder::new()
+            .name("lrc-worker".into())
+            .spawn(move || worker_loop(cfg, q2, m2, s2, ready_tx))
+            .expect("spawn worker");
+
+        let seq_len = ready_rx
+            .recv()
+            .map_err(|_| anyhow!("worker died during startup"))?
+            .map_err(|e| anyhow!("worker init: {e}"))?;
+        Ok(ServerHandle {
+            queue,
+            next_id: AtomicU64::new(1),
+            worker: Some(worker),
+            shutdown,
+            metrics,
+            seq_len,
+        })
+    }
+
+    /// Submit a sequence; returns the channel the response arrives on.
+    pub fn submit(&self, tokens: Vec<i32>) -> Result<mpsc::Receiver<Response>> {
+        if tokens.len() != self.seq_len {
+            return Err(anyhow!("sequence must be seq_len={} tokens, got {}",
+                               self.seq_len, tokens.len()));
+        }
+        let (tx, rx) = mpsc::channel();
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            tokens,
+            enqueued: Instant::now(),
+            respond: tx,
+        };
+        self.queue.push(req)?;
+        Ok(rx)
+    }
+
+    /// Graceful shutdown: drain the queue, stop the worker.
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.queue.close();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        self.metrics.snapshot()
+    }
+}
+
+fn worker_loop(cfg: ServerConfig, queue: Arc<Batcher>,
+               metrics: Arc<ServerMetrics>, shutdown: Arc<AtomicBool>,
+               ready: mpsc::Sender<Result<usize, String>>) {
+    // All PJRT state is created inside the worker thread (not Send).
+    let init = (|| -> Result<_> {
+        let engine = Engine::cpu()?;
+        let arts = ModelArtifacts::load(&cfg.model_dir)?;
+        let quant = match &cfg.quant_dir {
+            Some(d) => Some(TensorBundle::load(d)?),
+            None => None,
+        };
+        // discover batch buckets for the prefix, ascending
+        let mut buckets: Vec<(usize, crate::runtime::Session)> = Vec::new();
+        for (name, g) in &arts.graphs {
+            if let Some(rest) = name.strip_prefix(&format!("{}_b", cfg.graph_prefix)) {
+                if let Ok(b) = rest.parse::<usize>() {
+                    let s = engine.session(&arts, name, quant.as_ref())?;
+                    buckets.push((b, s));
+                    let _ = g;
+                }
+            }
+        }
+        if buckets.is_empty() {
+            return Err(anyhow!("no graphs match prefix {}_b*", cfg.graph_prefix));
+        }
+        buckets.sort_by_key(|(b, _)| *b);
+        Ok((arts.info.seq_len, arts.info.vocab, buckets))
+    })();
+
+    let (seq_len, vocab, buckets) = match init {
+        Ok(v) => {
+            let _ = ready.send(Ok(v.0));
+            v
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e.to_string()));
+            return;
+        }
+    };
+    let max_bucket = buckets.last().map(|(b, _)| *b).unwrap_or(1);
+
+    loop {
+        let batch = match queue.next_batch(max_bucket) {
+            Some(b) => b,
+            None => {
+                if shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+        };
+        let exec_start = Instant::now();
+        // smallest bucket that fits
+        let (bsize, session) = buckets
+            .iter()
+            .find(|(b, _)| *b >= batch.len())
+            .unwrap_or_else(|| buckets.last().unwrap());
+        // pack + repeat-pad
+        let mut flat = Vec::with_capacity(bsize * seq_len);
+        for r in &batch {
+            flat.extend_from_slice(&r.tokens);
+        }
+        for _ in batch.len()..*bsize {
+            flat.extend_from_slice(&batch.last().unwrap().tokens);
+        }
+        let logits = match session.run(&flat) {
+            Ok(l) => l,
+            Err(e) => {
+                metrics.errors.fetch_add(batch.len() as u64, Ordering::Relaxed);
+                eprintln!("[coordinator] execute failed: {e}");
+                continue;
+            }
+        };
+        let exec_us = exec_start.elapsed().as_micros() as u64;
+        metrics.batches.fetch_add(1, Ordering::Relaxed);
+        metrics.batch_fill.record(
+            (batch.len() as f64 / *bsize as f64 * 100.0) as u64);
+
+        for (row, req) in batch.iter().enumerate() {
+            let mut nll = 0.0_f64;
+            for t in 0..seq_len - 1 {
+                let target = req.tokens[t + 1] as usize;
+                let off = (row * seq_len + t) * vocab;
+                let lrow = &logits[off..off + vocab];
+                let max = lrow.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b)) as f64;
+                let mut sum = 0.0_f64;
+                for &v in lrow {
+                    sum += ((v as f64) - max).exp();
+                }
+                nll -= (lrow[target] as f64) - max - sum.ln();
+            }
+            let total_us = req.enqueued.elapsed().as_micros() as u64;
+            let queue_us = total_us.saturating_sub(exec_us);
+            let _ = metrics.first_done_us.compare_exchange(
+                0, metrics.started.elapsed().as_micros() as u64,
+                Ordering::Relaxed, Ordering::Relaxed);
+            metrics.requests.fetch_add(1, Ordering::Relaxed);
+            metrics.queue_lat_us.record(queue_us);
+            metrics.exec_lat_us.record(exec_us);
+            metrics.total_lat_us.record(total_us);
+            let _ = req.respond.send(Response {
+                id: req.id,
+                mean_nll: nll / (seq_len - 1) as f64,
+                queue_us,
+                exec_us,
+                total_us,
+            });
+        }
+        if shutdown.load(Ordering::SeqCst) && queue.is_empty() {
+            return;
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! Data layer: byte tokenizer, corpus loading/splitting, eval batching and
+//! the lm-eval-substitute task suites (read from artifacts/tasks/*.json).
+
+pub mod tasks;
+
+pub use tasks::{Task, TaskItem};
+
+use std::path::Path;
+
+/// Byte-level tokenizer — the vocabulary is exactly 0..=255.
+pub const VOCAB_SIZE: usize = 256;
+
+pub fn tokenize(text: &str) -> Vec<i32> {
+    text.as_bytes().iter().map(|&b| b as i32).collect()
+}
+
+pub fn detokenize(ids: &[i32]) -> String {
+    let bytes: Vec<u8> = ids.iter().map(|&i| (i & 0xff) as u8).collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+/// A tokenized corpus with a deterministic train/held-out split.
+#[derive(Clone, Debug)]
+pub struct Corpus {
+    pub name: String,
+    pub tokens: Vec<i32>,
+    /// index where the held-out tail begins (last 10%)
+    pub split: usize,
+}
+
+impl Corpus {
+    pub fn load(path: &Path) -> std::io::Result<Corpus> {
+        let text = std::fs::read_to_string(path)?;
+        let tokens = tokenize(&text);
+        let split = tokens.len() * 9 / 10;
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        Ok(Corpus { name, tokens, split })
+    }
+
+    pub fn from_text(name: &str, text: &str) -> Corpus {
+        let tokens = tokenize(text);
+        let split = tokens.len() * 9 / 10;
+        Corpus { name: name.into(), tokens, split }
+    }
+
+    /// Deterministic calibration sequences from the *train* region
+    /// (the paper: 128 random sequences of the calibration set).
+    pub fn calib_sequences(&self, n_seqs: usize, seq_len: usize, seed: u64)
+                           -> Vec<Vec<i32>> {
+        let mut rng = crate::rng::Rng::new(seed);
+        let max_start = self.split.saturating_sub(seq_len + 1).max(1);
+        (0..n_seqs)
+            .map(|_| {
+                let s = rng.below(max_start);
+                self.tokens[s..s + seq_len].to_vec()
+            })
+            .collect()
+    }
+
+    /// Non-overlapping eval windows from the held-out tail.
+    pub fn eval_sequences(&self, seq_len: usize, max_seqs: usize)
+                          -> Vec<Vec<i32>> {
+        let tail = &self.tokens[self.split..];
+        tail.chunks_exact(seq_len)
+            .take(max_seqs)
+            .map(|c| c.to_vec())
+            .collect()
+    }
+}
+
+/// Pack sequences into fixed-size batches, padding the final batch by
+/// repeating its last row (rows beyond `len` are ignored by the caller).
+pub fn batch_sequences(seqs: &[Vec<i32>], batch: usize)
+                       -> Vec<(Vec<i32>, usize)> {
+    let mut out = Vec::new();
+    for chunk in seqs.chunks(batch) {
+        let used = chunk.len();
+        let seq_len = chunk[0].len();
+        let mut flat = Vec::with_capacity(batch * seq_len);
+        for s in chunk {
+            assert_eq!(s.len(), seq_len);
+            flat.extend_from_slice(s);
+        }
+        for _ in used..batch {
+            let last = &chunk[used - 1];
+            flat.extend_from_slice(last);
+        }
+        out.push((flat, used));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokenize_roundtrip() {
+        let s = "The comet orbits. = Nebula =\n";
+        assert_eq!(detokenize(&tokenize(s)), s);
+    }
+
+    #[test]
+    fn corpus_split_and_calib() {
+        let text = "abcdefgh".repeat(200);
+        let c = Corpus::from_text("t", &text);
+        assert_eq!(c.tokens.len(), 1600);
+        assert_eq!(c.split, 1440);
+        let seqs = c.calib_sequences(5, 16, 42);
+        assert_eq!(seqs.len(), 5);
+        for s in &seqs {
+            assert_eq!(s.len(), 16);
+        }
+        // determinism
+        assert_eq!(seqs, c.calib_sequences(5, 16, 42));
+    }
+
+    #[test]
+    fn eval_windows_nonoverlapping() {
+        let text = "x".repeat(1000);
+        let c = Corpus::from_text("t", &text);
+        let seqs = c.eval_sequences(16, 100);
+        assert_eq!(seqs.len(), (1000 - 900) / 16);
+    }
+
+    #[test]
+    fn batching_pads() {
+        let seqs: Vec<Vec<i32>> = (0..5).map(|i| vec![i; 4]).collect();
+        let batches = batch_sequences(&seqs, 2);
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[2].1, 1); // one real row in the last batch
+        assert_eq!(batches[2].0.len(), 8); // padded to full batch
+        assert_eq!(&batches[2].0[4..], &[4, 4, 4, 4]); // repeat-pad
+    }
+}

@@ -1,0 +1,158 @@
+//! lm-eval-substitute task suites: multiple-choice items scored by
+//! length-normalised log-probability of each candidate continuation —
+//! the exact protocol lm-eval uses for PIQA/HellaSwag/ARC/Winogrande.
+//!
+//! Generated at build time by python/compile/data.py into
+//! artifacts/tasks/<name>.json; this module only parses + prepares them.
+
+use crate::util::Json;
+use std::path::Path;
+
+/// One multiple-choice item.
+#[derive(Clone, Debug)]
+pub struct TaskItem {
+    pub prompt: String,
+    pub choices: Vec<String>,
+    pub answer: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub name: String,
+    pub items: Vec<TaskItem>,
+}
+
+/// The six suites mirroring the paper's task spread.
+pub const TASK_NAMES: [&str; 6] =
+    ["pq_syn", "hs_syn", "ae_syn", "ac_syn", "wg_syn", "la_syn"];
+
+impl Task {
+    pub fn load(path: &Path) -> Result<Task, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {path:?}: {e}"))?;
+        let v = Json::parse(&text)?;
+        let name = v
+            .get("name")
+            .and_then(|n| n.as_str())
+            .ok_or("task missing name")?
+            .to_string();
+        let mut items = Vec::new();
+        for it in v.get("items").and_then(|i| i.as_arr()).ok_or("items")? {
+            let prompt = it.get("prompt").and_then(|p| p.as_str())
+                .ok_or("prompt")?.to_string();
+            let choices = it
+                .get("choices")
+                .and_then(|c| c.as_arr())
+                .ok_or("choices")?
+                .iter()
+                .map(|c| c.as_str().unwrap_or_default().to_string())
+                .collect::<Vec<_>>();
+            let answer = it.get("answer").and_then(|a| a.as_usize())
+                .ok_or("answer")?;
+            if answer >= choices.len() {
+                return Err(format!("answer {answer} out of range"));
+            }
+            items.push(TaskItem { prompt, choices, answer });
+        }
+        Ok(Task { name, items })
+    }
+
+    pub fn load_all(task_dir: &Path, limit: Option<usize>)
+                    -> Result<Vec<Task>, String> {
+        TASK_NAMES
+            .iter()
+            .map(|n| {
+                let mut t = Task::load(&task_dir.join(format!("{n}.json")))?;
+                if let Some(l) = limit {
+                    t.items.truncate(l);
+                }
+                Ok(t)
+            })
+            .collect()
+    }
+}
+
+/// A scoring row: tokens of prompt+choice packed to `seq_len`, with the
+/// range of positions whose logprob scores the choice.
+#[derive(Clone, Debug)]
+pub struct ScoringRow {
+    pub tokens: Vec<i32>,
+    /// predictions at positions [start, end) score the choice: the token
+    /// at position p+1 is predicted from position p.
+    pub start: usize,
+    pub end: usize,
+}
+
+/// Build the scoring row for (prompt, choice): left-truncate the prompt so
+/// prompt+choice fits `seq_len`, right-pad with zeros (ignored positions).
+pub fn scoring_row(prompt: &str, choice: &str, seq_len: usize) -> ScoringRow {
+    let p = super::tokenize(prompt);
+    let c = super::tokenize(choice);
+    let c_len = c.len().min(seq_len.saturating_sub(2));
+    let c = &c[..c_len];
+    let budget = seq_len - c_len;
+    let p_keep = p.len().min(budget).max(1);
+    let p = &p[p.len() - p_keep..];
+    let mut tokens = Vec::with_capacity(seq_len);
+    tokens.extend_from_slice(p);
+    tokens.extend_from_slice(c);
+    let start = p.len() - 1; // predict first choice token from last prompt tok
+    let end = start + c_len;
+    tokens.resize(seq_len, 0);
+    ScoringRow { tokens, start, end }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_task_json() {
+        let text = r#"{"name":"pq_syn","items":[
+            {"prompt":"the star ","choices":["a","b","c","d"],"answer":2}
+        ]}"#;
+        let tmp = std::env::temp_dir().join("lrc_task_test.json");
+        std::fs::write(&tmp, text).unwrap();
+        let t = Task::load(&tmp).unwrap();
+        assert_eq!(t.name, "pq_syn");
+        assert_eq!(t.items[0].answer, 2);
+        assert_eq!(t.items[0].choices.len(), 4);
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn scoring_row_fits() {
+        let row = scoring_row("abcdef", "XYZ", 8);
+        assert_eq!(row.tokens.len(), 8);
+        // choice occupies 3 tokens right after the (possibly truncated) prompt
+        assert_eq!(row.end - row.start, 3);
+        let txt = super::super::detokenize(&row.tokens[..row.end + 1]);
+        assert!(txt.ends_with("XYZ"), "{txt}");
+    }
+
+    #[test]
+    fn scoring_row_truncates_long_prompt() {
+        let long = "p".repeat(100);
+        let row = scoring_row(&long, "cc", 16);
+        assert_eq!(row.tokens.len(), 16);
+        assert_eq!(row.end - row.start, 2);
+        assert!(row.end < 16);
+    }
+
+    #[test]
+    fn scoring_row_truncates_long_choice() {
+        let row = scoring_row("p", &"c".repeat(100), 16);
+        assert_eq!(row.tokens.len(), 16);
+        assert!(row.end <= 15);
+    }
+
+    #[test]
+    fn bad_answer_rejected() {
+        let text = r#"{"name":"x","items":[
+            {"prompt":"p","choices":["a"],"answer":3}]}"#;
+        let tmp = std::env::temp_dir().join("lrc_task_bad.json");
+        std::fs::write(&tmp, text).unwrap();
+        assert!(Task::load(&tmp).is_err());
+        std::fs::remove_file(&tmp).ok();
+    }
+}

@@ -1,0 +1,151 @@
+//! Shared experiment harness: everything the CLI, examples and bench
+//! targets need to produce a paper-shaped row — quantize a model variant,
+//! evaluate PPL + the six task suites, format the row.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::data::{tasks::Task, Corpus};
+use crate::eval::{all_task_accuracies, perplexity};
+use crate::pipeline::{quantize_and_save, Method, PipelineReport};
+use crate::quant::QuantConfig;
+use crate::runtime::{Engine, ModelArtifacts, SessionProvider, TensorBundle};
+
+/// One table row: PPL + per-task accuracy + average.
+#[derive(Clone, Debug)]
+pub struct VariantScores {
+    pub label: String,
+    pub ppl: f64,
+    pub tasks: Vec<(String, f64)>,
+    pub avg: f64,
+}
+
+impl VariantScores {
+    /// Cells in the paper's column order: PPL PQ HS A-e A-c WG LA Avg.
+    pub fn cells(&self) -> Vec<String> {
+        let mut out = vec![self.label.clone(), format!("{:.2}", self.ppl)];
+        for (_, acc) in &self.tasks {
+            out.push(format!("{:.3}", acc));
+        }
+        out.push(format!("{:.3}", self.avg));
+        out
+    }
+}
+
+pub const TABLE_HEADERS: [&str; 9] =
+    ["Method", "PPL", "PQ", "HS", "A-e", "A-c", "WG", "LA", "Avg."];
+
+/// Evaluation budget (trade evaluation time for statistical noise).
+#[derive(Clone, Copy, Debug)]
+pub struct EvalBudget {
+    pub ppl_seqs: usize,
+    pub task_items: usize,
+}
+
+impl EvalBudget {
+    pub fn full() -> Self {
+        EvalBudget { ppl_seqs: 48, task_items: 96 }
+    }
+    pub fn fast() -> Self {
+        EvalBudget { ppl_seqs: 8, task_items: 16 }
+    }
+    /// fast when `--fast` was passed OR `LRC_BENCH_FAST=1` is set
+    /// (`make bench` sets it so the full suite fits a CI budget).
+    pub fn from_args(args: &crate::util::Args) -> Self {
+        if args.has("fast") || std::env::var("LRC_BENCH_FAST").ok().as_deref() == Some("1") {
+            Self::fast()
+        } else {
+            Self::full()
+        }
+    }
+}
+
+/// Model list: `--models` flag, else `LRC_BENCH_MODELS`, else the default.
+pub fn models_from_args(args: &crate::util::Args, default: &str) -> String {
+    if let Some(m) = args.get("models") {
+        return m.to_string();
+    }
+    std::env::var("LRC_BENCH_MODELS").unwrap_or_else(|_| default.to_string())
+}
+
+/// Evaluate one graph (+optional quant bundle): PPL + all tasks.
+pub fn evaluate_graph(engine: &Engine, arts: &ModelArtifacts,
+                      graph: &str, quant: Option<&TensorBundle>,
+                      corpus: &Corpus, tasks: &[Task], budget: EvalBudget,
+                      label: &str) -> Result<VariantScores> {
+    let session = engine.session(arts, graph, quant)?;
+    let mut provider = SessionProvider { session };
+    let ppl = perplexity(&mut provider, corpus, budget.ppl_seqs)
+        .map_err(anyhow::Error::msg)?;
+    let (task_scores, avg) = all_task_accuracies(&mut provider, tasks)
+        .map_err(anyhow::Error::msg)?;
+    Ok(VariantScores { label: label.into(), ppl, tasks: task_scores, avg })
+}
+
+/// Load the task suites truncated to the budget.
+pub fn load_tasks(artifacts: &Path, budget: EvalBudget) -> Result<Vec<Task>> {
+    Task::load_all(&artifacts.join("tasks"), Some(budget.task_items))
+        .map_err(anyhow::Error::msg)
+}
+
+/// Quantize with `method` against `graph` and evaluate — one table row.
+#[allow(clippy::too_many_arguments)]
+pub fn quantize_and_evaluate(engine: &Engine, arts: &ModelArtifacts,
+                             corpus: &Corpus, tasks: &[Task], graph: &str,
+                             method: Method, cfg: &QuantConfig,
+                             n_calib: usize, budget: EvalBudget)
+                             -> Result<(VariantScores, PipelineReport)> {
+    let (bundle, report) =
+        quantize_and_save(engine, arts, corpus, graph, method, cfg, n_calib)?;
+    let scores = evaluate_graph(engine, arts, graph, Some(&bundle), corpus,
+                                tasks, budget, &method.label(cfg))?;
+    Ok((scores, report))
+}
+
+/// The standard variant set of Tables 1/2: FP16, QuaRot, SVD, LRC(1), LRC(5).
+pub fn standard_method_set() -> Vec<(Method, usize)> {
+    vec![(Method::Quarot, 1), (Method::Svd, 1), (Method::Lrc, 1),
+         (Method::Lrc, 5)]
+}
+
+/// Graph name helper matching aot.py's naming.
+pub fn quant_graph_name(pct: usize, group: Option<usize>, weight_only: bool,
+                        batch: usize) -> String {
+    if weight_only {
+        format!("fwd_w4_r{pct}_b{batch}")
+    } else {
+        match group {
+            Some(g) => format!("fwd_w4a4_r{pct}_g{g}_b{batch}"),
+            None => format!("fwd_w4a4_r{pct}_b{batch}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn graph_names() {
+        assert_eq!(quant_graph_name(10, None, false, 8), "fwd_w4a4_r10_b8");
+        assert_eq!(quant_graph_name(0, Some(32), false, 8),
+                   "fwd_w4a4_r0_g32_b8");
+        assert_eq!(quant_graph_name(10, None, true, 8), "fwd_w4_r10_b8");
+    }
+
+    #[test]
+    fn cells_shape() {
+        let v = VariantScores {
+            label: "LRC (1)".into(),
+            ppl: 7.26,
+            tasks: vec![("pq".into(), 0.786); 6],
+            avg: 0.697,
+        };
+        let c = v.cells();
+        assert_eq!(c.len(), TABLE_HEADERS.len());
+        assert_eq!(c[0], "LRC (1)");
+        assert_eq!(c[1], "7.26");
+        assert_eq!(c[8], "0.697");
+    }
+}

@@ -1,0 +1,54 @@
+//! # LRC — Low-Rank Correction for Quantized LLMs
+//!
+//! A full-system reproduction of *"Low-Rank Correction for Quantized LLMs"*
+//! (Scetbon & Hensman, 2024) as a three-layer Rust + JAX + Pallas stack.
+//! This crate is layer 3: the self-contained production binary that
+//! quantizes, evaluates and serves W4A4 models whose compute graphs were
+//! AOT-lowered from JAX (layer 2) and whose hot loop is a fused Pallas
+//! kernel (layer 1), executed through the PJRT C API.
+//!
+//! Module map:
+//!
+//! * [`linalg`]      — dense f64 linear algebra built from scratch
+//!                     (blocked GEMM, Cholesky, Jacobi eigensolver, FWHT)
+//! * [`rng`]         — deterministic SplitMix64 RNG
+//! * [`quant`]       — RTN / GPTQ quantizers + int4 bit-packing
+//! * [`lrc`]         — the paper's Algorithms 1–4 + SVD baseline + oracle
+//! * [`data`]        — byte tokenizer, corpora, lm-eval-style task suites
+//! * [`eval`]        — perplexity + multiple-choice accuracy scoring
+//! * [`runtime`]     — PJRT engine: HLO-text artifacts → executables
+//! * [`pipeline`]    — end-to-end PTQ driver (calibrate → quantize → bundle)
+//! * [`coordinator`] — serving engine: dynamic batcher, workers, metrics
+//! * [`bench`]       — measurement harness used by `cargo bench` targets
+//! * [`util`]        — no-deps JSON + CLI parsing
+
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod experiments;
+pub mod linalg;
+pub mod lrc;
+pub mod pipeline;
+pub mod quant;
+pub mod rng;
+pub mod runtime;
+pub mod util;
+
+/// Repo-relative artifacts directory (respects `LRC_ARTIFACTS` env var).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("LRC_ARTIFACTS") {
+        return p.into();
+    }
+    // walk up from cwd until we find artifacts/ (works from target/ too)
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.is_dir() {
+            return cand;
+        }
+        if !dir.pop() {
+            return "artifacts".into();
+        }
+    }
+}

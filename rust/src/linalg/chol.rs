@@ -1,0 +1,158 @@
+//! Cholesky factorization + triangular solves.
+//!
+//! The paper's Remark B.1 computes (W−UVᵀ)XYᵀ(YYᵀ)⁻¹ via the Cholesky
+//! factor of YYᵀ for numerical stability; these are exactly those
+//! primitives.
+
+use super::Mat;
+
+/// Lower-triangular Cholesky factor of a symmetric PD matrix: Σ = L·Lᵀ.
+pub fn cholesky(a: &Mat) -> Result<Mat, String> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[(i, j)];
+            // s -= Σ_k L[i,k]·L[j,k]
+            s -= super::dot(&l.data[i * n..i * n + j], &l.data[j * n..j * n + j]);
+            if i == j {
+                if s <= 0.0 {
+                    return Err(format!(
+                        "cholesky: matrix not PD at pivot {i} (s={s:.3e})"));
+                }
+                l[(i, i)] = s.sqrt();
+            } else {
+                l[(i, j)] = s / l[(j, j)];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve L·Z = B (forward substitution), B is [n, m], L lower-triangular.
+pub fn solve_lower(l: &Mat, b: &Mat) -> Mat {
+    let n = l.rows;
+    assert_eq!(b.rows, n);
+    let m = b.cols;
+    let mut z = b.clone();
+    for i in 0..n {
+        // z[i,:] -= Σ_{k<i} L[i,k] z[k,:]
+        for k in 0..i {
+            let lik = l[(i, k)];
+            if lik != 0.0 {
+                let (head, tail) = z.data.split_at_mut(i * m);
+                super::axpy(-lik, &head[k * m..k * m + m], &mut tail[..m]);
+            }
+        }
+        let d = l[(i, i)];
+        for v in z.row_mut(i) {
+            *v /= d;
+        }
+    }
+    z
+}
+
+/// Solve Lᵀ·Z = B (back substitution) with L lower-triangular.
+pub fn solve_upper(l: &Mat, b: &Mat) -> Mat {
+    let n = l.rows;
+    assert_eq!(b.rows, n);
+    let m = b.cols;
+    let mut z = b.clone();
+    for i in (0..n).rev() {
+        for k in i + 1..n {
+            let lki = l[(k, i)]; // (Lᵀ)[i,k]
+            if lki != 0.0 {
+                let (head, tail) = z.data.split_at_mut(k * m);
+                let row_i = &mut head[i * m..i * m + m];
+                let row_k = &tail[..m];
+                for (a, b) in row_i.iter_mut().zip(row_k) {
+                    *a -= lki * b;
+                }
+            }
+        }
+        let d = l[(i, i)];
+        for v in z.row_mut(i) {
+            *v /= d;
+        }
+    }
+    z
+}
+
+/// Solve Σ·Z = B for symmetric PD Σ via its Cholesky factor L.
+pub fn chol_solve_mat(l: &Mat, b: &Mat) -> Mat {
+    solve_upper(l, &solve_lower(l, b))
+}
+
+/// Σ⁻¹ via Cholesky (used by GPTQ's Hessian inverse).
+pub fn chol_inverse(a: &Mat) -> Result<Mat, String> {
+    let l = cholesky(a)?;
+    Ok(chol_solve_mat(&l, &Mat::eye(a.rows)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_pd(seed: u64, n: usize) -> Mat {
+        let a = Mat::random_normal(&mut Rng::new(seed), n, n + 3);
+        let mut g = a.gram_n();
+        g.add_diag(0.5);
+        g
+    }
+
+    #[test]
+    fn chol_reconstructs() {
+        for seed in 0..5 {
+            let a = random_pd(seed, 8);
+            let l = cholesky(&a).unwrap();
+            let rec = l.matmul(&l.transpose());
+            assert!(a.sub(&rec).max_abs() < 1e-9, "seed {seed}");
+            // lower-triangular check
+            for i in 0..8 {
+                for j in i + 1..8 {
+                    assert_eq!(l[(i, j)], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn not_pd_detected() {
+        let mut a = Mat::eye(4);
+        a[(2, 2)] = -1.0;
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn solves_roundtrip() {
+        for seed in 0..4 {
+            let a = random_pd(seed + 10, 9);
+            let l = cholesky(&a).unwrap();
+            let b = Mat::random_normal(&mut Rng::new(seed + 99), 9, 5);
+            let z = chol_solve_mat(&l, &b);
+            let back = a.matmul(&z);
+            assert!(back.sub(&b).max_abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn triangular_solves() {
+        let a = random_pd(3, 7);
+        let l = cholesky(&a).unwrap();
+        let b = Mat::random_normal(&mut Rng::new(5), 7, 3);
+        let z = solve_lower(&l, &b);
+        assert!(l.matmul(&z).sub(&b).max_abs() < 1e-9);
+        let z2 = solve_upper(&l, &b);
+        assert!(l.transpose().matmul(&z2).sub(&b).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn inverse_property() {
+        let a = random_pd(8, 6);
+        let inv = chol_inverse(&a).unwrap();
+        let prod = a.matmul(&inv);
+        assert!(prod.sub(&Mat::eye(6)).max_abs() < 1e-8);
+    }
+}

@@ -1,0 +1,141 @@
+//! Fast Walsh–Hadamard transform — the rust twin of the L1 Pallas `fwht`
+//! kernel (QuaRot's online rotation).  Used by the native pipeline when it
+//! needs to reproduce the rotated activations without the PJRT engine, and
+//! to build the fusion matrices.
+
+use super::Mat;
+
+/// In-place normalized FWHT along a length-d (power of two) buffer.
+pub fn fwht(x: &mut [f64]) {
+    let d = x.len();
+    assert!(d.is_power_of_two(), "FWHT needs power-of-two length, got {d}");
+    let mut h = 1;
+    while h < d {
+        let step = h * 2;
+        let mut i = 0;
+        while i < d {
+            for j in i..i + h {
+                let a = x[j];
+                let b = x[j + h];
+                x[j] = a + b;
+                x[j + h] = a - b;
+            }
+            i += step;
+        }
+        h = step;
+    }
+    let norm = 1.0 / (d as f64).sqrt();
+    for v in x.iter_mut() {
+        *v *= norm;
+    }
+}
+
+/// f32 variant for runtime activation buffers.
+pub fn fwht_f32(x: &mut [f32]) {
+    let d = x.len();
+    assert!(d.is_power_of_two());
+    let mut h = 1;
+    while h < d {
+        let step = h * 2;
+        let mut i = 0;
+        while i < d {
+            for j in i..i + h {
+                let a = x[j];
+                let b = x[j + h];
+                x[j] = a + b;
+                x[j + h] = a - b;
+            }
+            i += step;
+        }
+        h = step;
+    }
+    let norm = 1.0 / (d as f32).sqrt();
+    for v in x.iter_mut() {
+        *v *= norm;
+    }
+}
+
+/// Explicit normalized Hadamard matrix (Sylvester), H = Hᵀ, H·H = I.
+pub fn hadamard_matrix(d: usize) -> Mat {
+    assert!(d.is_power_of_two());
+    let mut m = Mat::zeros(d, d);
+    m[(0, 0)] = 1.0;
+    let mut h = 1;
+    while h < d {
+        for i in 0..h {
+            for j in 0..h {
+                let v = m[(i, j)];
+                m[(i, j + h)] = v;
+                m[(i + h, j)] = v;
+                m[(i + h, j + h)] = -v;
+            }
+        }
+        h *= 2;
+    }
+    m.scale(1.0 / (d as f64).sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn involution() {
+        // property: normalized FWHT is its own inverse
+        for seed in 0..5 {
+            let mut rng = Rng::new(seed);
+            let mut x = rng.normal_vec(64);
+            let orig = x.clone();
+            fwht(&mut x);
+            fwht(&mut x);
+            for (a, b) in x.iter().zip(&orig) {
+                assert!((a - b).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn preserves_norm() {
+        let mut rng = Rng::new(3);
+        let mut x = rng.normal_vec(128);
+        let n0: f64 = x.iter().map(|v| v * v).sum();
+        fwht(&mut x);
+        let n1: f64 = x.iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() / n0 < 1e-12);
+    }
+
+    #[test]
+    fn matches_matrix() {
+        let d = 16;
+        let h = hadamard_matrix(d);
+        let mut rng = Rng::new(5);
+        let x = rng.normal_vec(d);
+        let via_mat = h.matvec(&x);
+        let mut via_fwht = x.clone();
+        fwht(&mut via_fwht);
+        for (a, b) in via_mat.iter().zip(&via_fwht) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn matrix_orthogonal() {
+        let h = hadamard_matrix(32);
+        let prod = h.matmul(&h.transpose());
+        assert!(prod.sub(&Mat::eye(32)).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn f32_matches_f64() {
+        let mut rng = Rng::new(11);
+        let xs = rng.normal_vec(256);
+        let mut a: Vec<f32> = xs.iter().map(|&v| v as f32).collect();
+        let mut b = xs.clone();
+        fwht_f32(&mut a);
+        fwht(&mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((*x as f64 - y).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,280 @@
+//! The paper's contribution, natively: Algorithms 1–4 + the SVD baseline
+//! and the Prop.-3.4 perfect-quantizer oracle.
+//!
+//! All math in f64 on [`crate::linalg::Mat`]; mirrors
+//! `python/compile/lrc.py` (the two are cross-checked by an objective-value
+//! golden test — exact matrices may differ by fp association, the achieved
+//! ℒ_qlr must not).
+
+pub mod stats;
+pub mod svd;
+
+pub use stats::LayerStats;
+
+use crate::linalg::{cholesky, chol_solve_mat, solve_lower, solve_upper,
+                    top_k_eigvecs, Mat};
+use crate::quant::{gptq::gptq, rtn_quantize, QuantConfig, Quantizer};
+
+/// Result of quantizing one layer.
+#[derive(Clone, Debug)]
+pub struct LayerResult {
+    /// dequantized quantized weights Ŵ (on the int4 grid)
+    pub w_hat: Mat,
+    /// low-rank correction U [dout, k] (empty when rank 0)
+    pub u: Option<Mat>,
+    /// low-rank correction V [din, k]
+    pub v: Option<Mat>,
+    /// final ℒ_qlr value
+    pub objective: f64,
+    /// ℒ_qlr after every half step (UQ, ULR, UQ, ULR, ...)
+    pub history: Vec<f64>,
+}
+
+/// Algorithm 4 / Prop. 3.4 — closed-form init:
+/// Σinit = W·Σx·Wᵀ − SᵀS with S = Ly⁻¹·Σxyᵀ·Wᵀ;  U = eig_k, V = Wᵀ·U.
+pub fn init_lr(w: &Mat, sx: &Mat, sy: &Mat, sxy: &Mat, k: usize)
+               -> Result<(Mat, Mat), String> {
+    let sigma1 = w.matmul(sx).matmul_nt(w);
+    let ly = cholesky(sy)?;
+    let s = solve_lower(&ly, &sxy.transpose().matmul_nt(w));
+    let sigma2 = s.gram_t();
+    let u = top_k_eigvecs(&sigma1.sub(&sigma2), k);
+    let v = w.transpose().matmul(&u);
+    Ok((u, v))
+}
+
+/// Algorithm 2 / Prop. 3.1 — W̃ = (W − U·Vᵀ)·Σxy·Σy⁻¹ (via Cholesky,
+/// Remark B.1), then solve the layer-wise problem against Hessian Σy.
+pub fn update_quant(w: &Mat, u: &Mat, v: &Mat, sy: &Mat, sxy: &Mat,
+                    cfg: &QuantConfig) -> Result<Mat, String> {
+    let r = w.sub(&u.matmul_nt(v));
+    let rhs = r.matmul(sxy);
+    // W̃ᵀ = Σy⁻¹ · rhsᵀ
+    let ly = cholesky(sy)?;
+    let wt = chol_solve_mat(&ly, &rhs.transpose()).transpose();
+    match cfg.quantizer {
+        Quantizer::Gptq => gptq(&wt, sy, cfg.w_bits, None, 0.01, 64),
+        Quantizer::Rtn => Ok(rtn_quantize(&wt, cfg.w_bits, None)),
+    }
+}
+
+/// Algorithm 3 / Prop. 3.3 — closed-form (U, V) update given Ŵ:
+/// Σ = W·Σx·Wᵀ + SᵀS − (Ŵ·Σxyᵀ·Wᵀ + W·Σxy·Ŵᵀ), S = Lx⁻¹·Σxy·Ŵᵀ;
+/// U = eig_k(Σ), V = [Wᵀ − Σx⁻¹·Σxy·Ŵᵀ]·U.
+pub fn update_lr(w: &Mat, w_hat: &Mat, sx: &Mat, sxy: &Mat, k: usize)
+                 -> Result<(Mat, Mat), String> {
+    let sigma1 = w.matmul(sx).matmul_nt(w);
+    let a = w_hat.matmul(&sxy.transpose()).matmul_nt(w); // Ŵ·Σxyᵀ·Wᵀ
+    let sigma3 = a.add(&a.transpose());
+    let lx = cholesky(sx)?;
+    let s = solve_lower(&lx, &sxy.matmul_nt(w_hat)); // Lx⁻¹·Σxy·Ŵᵀ
+    let sigma2 = s.gram_t();
+    let sigma = sigma1.add(&sigma2).sub(&sigma3);
+    let u = top_k_eigvecs(&sigma, k);
+    let tmp = solve_upper(&lx, &s); // Σx⁻¹·Σxy·Ŵᵀ
+    let v = w.transpose().sub(&tmp).matmul(&u);
+    Ok((u, v))
+}
+
+/// Prop. 3.4's unconstrained W̃ — the perfect-quantizer oracle bound.
+pub fn oracle_wtilde(w: &Mat, u: &Mat, v: &Mat, sy: &Mat, sxy: &Mat)
+                     -> Result<Mat, String> {
+    let r = w.sub(&u.matmul_nt(v));
+    let rhs = r.matmul(sxy);
+    let ly = cholesky(sy)?;
+    Ok(chol_solve_mat(&ly, &rhs.transpose()).transpose())
+}
+
+/// ℒ_qlr(Ŵ,U,V) = ‖WX − ŴY − UVᵀX‖² expanded through the *raw*
+/// (unregularized) Σ matrices:
+/// with R = W − UVᵀ:  tr(R·Σx·Rᵀ) − 2·tr(R·Σxy·Ŵᵀ) + tr(Ŵ·Σy·Ŵᵀ).
+pub fn qlr_objective(w: &Mat, w_hat: &Mat, u: &Mat, v: &Mat,
+                     st: &LayerStats) -> f64 {
+    let r = w.sub(&u.matmul_nt(v));
+    let t1 = r.matmul(&st.sx).frob_dot(&r);
+    let t2 = r.matmul(&st.sxy).frob_dot(w_hat);
+    let t3 = w_hat.matmul(&st.sy).frob_dot(w_hat);
+    t1 - 2.0 * t2 + t3
+}
+
+/// Algorithm 1 — the full LRC driver for one layer.
+/// `k = 0` degrades exactly to QuaRot-style quantization (no correction).
+pub fn lrc(w: &Mat, st: &LayerStats, k: usize, cfg: &QuantConfig)
+           -> Result<LayerResult, String> {
+    let (sx, sy, sxy) = st.regularized();
+    let zero_u = Mat::zeros(w.rows, 1);
+    let zero_v = Mat::zeros(w.cols, 1);
+    if k == 0 {
+        let w_hat = update_quant(w, &zero_u, &zero_v, &sy, &sxy, cfg)?;
+        let obj = qlr_objective(w, &w_hat, &zero_u, &zero_v, st);
+        return Ok(LayerResult {
+            w_hat, u: None, v: None, objective: obj, history: vec![obj],
+        });
+    }
+    let (mut u, mut v) = init_lr(w, &sx, &sy, &sxy, k)?;
+    let mut w_hat = Mat::zeros(w.rows, w.cols);
+    let mut history = Vec::new();
+    for _ in 0..cfg.iters.max(1) {
+        w_hat = update_quant(w, &u, &v, &sy, &sxy, cfg)?;
+        history.push(qlr_objective(w, &w_hat, &u, &v, st));
+        let (nu, nv) = update_lr(w, &w_hat, &sx, &sxy, k)?;
+        u = nu;
+        v = nv;
+        history.push(qlr_objective(w, &w_hat, &u, &v, st));
+    }
+    Ok(LayerResult {
+        objective: *history.last().unwrap(),
+        w_hat, u: Some(u), v: Some(v), history,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::act_quantize;
+    use crate::rng::Rng;
+
+    /// A correlated, outlier-bearing layer problem (the LRC regime).
+    pub fn layer_problem(seed: u64, dout: usize, din: usize, n: usize)
+                         -> (Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        let w = Mat::random_normal(&mut rng, dout, din);
+        let base = Mat::random_normal(&mut rng, din / 4, n);
+        let mixer = Mat::random_normal(&mut rng, din, din / 4);
+        let mut x = mixer.matmul(&base)
+            .add(&Mat::random_normal(&mut rng, din, n).scale(0.1));
+        for i in (0..din).step_by(16) {
+            for j in 0..n {
+                x[(i, j)] *= 8.0; // outlier channels
+            }
+        }
+        (w, x)
+    }
+
+    fn stats_for(x: &Mat, clip: f64) -> LayerStats {
+        let mut st = LayerStats::new(x.rows, Some(4), clip, None);
+        let n = x.cols;
+        let half = n / 2;
+        st.update(&x.cols_range(0, half));
+        st.update(&x.cols_range(half, n));
+        st
+    }
+
+    #[test]
+    fn objective_matches_direct_residual() {
+        let (w, x) = layer_problem(0, 12, 16, 512);
+        let st = stats_for(&x, 0.9);
+        let cfg = QuantConfig { iters: 1, ..Default::default() };
+        let res = lrc(&w, &st, 4, &cfg).unwrap();
+        let y = act_quantize(&x, 4, 0.9, None);
+        let direct = w.matmul(&x)
+            .sub(&res.w_hat.matmul(&y))
+            .sub(&res.u.as_ref().unwrap()
+                 .matmul_nt(res.v.as_ref().unwrap()).matmul(&x))
+            .frob_norm()
+            .powi(2);
+        let rel = (direct - res.objective).abs() / direct;
+        assert!(rel < 1e-8, "direct {direct} vs obj {}", res.objective);
+    }
+
+    #[test]
+    fn lrc_beats_quarot_and_svd() {
+        // the paper's headline ordering at the layer level
+        for seed in [1, 2] {
+            let (w, x) = layer_problem(seed, 24, 32, 1024);
+            let st = stats_for(&x, 0.9);
+            let cfg = QuantConfig::default();
+            let k = 6;
+            let quarot = lrc(&w, &st, 0, &cfg).unwrap();
+            let svd = svd::svd_baseline(&w, &st, k, &cfg).unwrap();
+            let ours = lrc(&w, &st, k, &cfg).unwrap();
+            assert!(ours.objective < quarot.objective,
+                    "seed {seed}: lrc {} quarot {}", ours.objective,
+                    quarot.objective);
+            assert!(ours.objective < svd.objective,
+                    "seed {seed}: lrc {} svd {}", ours.objective,
+                    svd.objective);
+        }
+    }
+
+    #[test]
+    fn update_lr_never_increases_objective() {
+        // Update-LR is exact (Prop. 3.3): each ULR half-step must not
+        // increase ℒ_qlr (GPTQ half-steps are approximate and may).
+        let (w, x) = layer_problem(3, 16, 16, 512);
+        let st = stats_for(&x, 0.9);
+        let cfg = QuantConfig { iters: 4, ..Default::default() };
+        let res = lrc(&w, &st, 4, &cfg).unwrap();
+        // Update-LR minimizes the ε-regularized objective (numerical
+        // stability, §3.2), so the *raw* objective may drift by O(ε)=1e-2
+        // relative — allow that slack, reject anything larger.
+        for step in res.history.chunks(2) {
+            if step.len() == 2 {
+                assert!(step[1] <= step[0] * 1.005,
+                        "ULR increased: {} -> {}", step[0], step[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn oracle_bounds_update_quant() {
+        // unconstrained W̃ (perfect quantizer) ≤ any quantized Ŵ, same U,V
+        let (w, x) = layer_problem(4, 12, 16, 512);
+        let st = stats_for(&x, 0.9);
+        let (sx, sy, sxy) = st.regularized();
+        let (u, v) = init_lr(&w, &sx, &sy, &sxy, 4).unwrap();
+        let cfg = QuantConfig::default();
+        let w_hat = update_quant(&w, &u, &v, &sy, &sxy, &cfg).unwrap();
+        let wt = oracle_wtilde(&w, &u, &v, &sy, &sxy).unwrap();
+        let obj_q = qlr_objective(&w, &w_hat, &u, &v, &st);
+        let obj_o = qlr_objective(&w, &wt, &u, &v, &st);
+        assert!(obj_o <= obj_q, "oracle {obj_o} > quantized {obj_q}");
+    }
+
+    #[test]
+    fn update_lr_is_argmin_over_perturbations() {
+        // Prop. 3.3 optimality: the closed-form (U,V) beats perturbed pairs
+        let (w, x) = layer_problem(5, 10, 16, 512);
+        let st = stats_for(&x, 0.9);
+        let (sx, sy, sxy) = st.regularized();
+        let cfg = QuantConfig::default();
+        let (u0, v0) = init_lr(&w, &sx, &sy, &sxy, 3).unwrap();
+        let w_hat = update_quant(&w, &u0, &v0, &sy, &sxy, &cfg).unwrap();
+        let (u, v) = update_lr(&w, &w_hat, &sx, &sxy, 3).unwrap();
+        let best = qlr_objective(&w, &w_hat, &u, &v, &st);
+        let mut rng = Rng::new(77);
+        for _ in 0..8 {
+            let du = Mat::random_normal(&mut rng, u.rows, u.cols).scale(0.05);
+            let dv = Mat::random_normal(&mut rng, v.rows, v.cols).scale(0.05);
+            let obj = qlr_objective(&w, &w_hat, &u.add(&du), &v.add(&dv), &st);
+            assert!(best <= obj + 1e-9, "perturbation beat closed form");
+        }
+    }
+
+    #[test]
+    fn higher_rank_never_worse() {
+        let (w, x) = layer_problem(6, 16, 16, 512);
+        let st = stats_for(&x, 0.9);
+        let cfg = QuantConfig::default();
+        let o2 = lrc(&w, &st, 2, &cfg).unwrap().objective;
+        let o6 = lrc(&w, &st, 6, &cfg).unwrap().objective;
+        // not a theorem under approximate GPTQ, but holds robustly here
+        assert!(o6 <= o2 * 1.05, "rank 6 {o6} vs rank 2 {o2}");
+    }
+
+    #[test]
+    fn weight_only_mode_near_lossless() {
+        // Table 3 regime: Qa = identity → quantization error is tiny and
+        // the low-rank term adds nearly nothing (paper's point)
+        let (w, x) = layer_problem(7, 16, 16, 512);
+        let mut st = LayerStats::new(16, None, 1.0, None);
+        st.update(&x);
+        let cfg = QuantConfig { a_bits: None, ..Default::default() };
+        let r0 = lrc(&w, &st, 0, &cfg).unwrap();
+        let r4 = lrc(&w, &st, 4, &cfg).unwrap();
+        let wx = w.matmul(&x).frob_norm().powi(2);
+        assert!(r0.objective / wx < 0.01, "w4-only err too big");
+        // low-rank improvement exists but is a small fraction of fp norm
+        assert!(r4.objective <= r0.objective);
+    }
+}

@@ -1,0 +1,154 @@
+//! Online Σ accumulation (Algorithm 1, lines 3–5).
+//!
+//! The paper: "we accumulate batches of activations X to avoid running out
+//! of memory, and update Σx, Σy, Σxy in an online fashion" — and "we found
+//! that computation of these matrices required 64-bit precision".  X holds
+//! tokens as *columns* ([din, n]), matching the paper's notation.
+
+use crate::linalg::Mat;
+use crate::quant::act_quantize;
+
+/// Accumulates Σx = XXᵀ, Σy = YYᵀ, Σxy = XYᵀ over calibration batches,
+/// where Y = Q_a(X) (or Y = X in weight-only mode).
+#[derive(Clone, Debug)]
+pub struct LayerStats {
+    pub din: usize,
+    /// activation bits; `None` = weight-only (Q_a = identity, Table 3)
+    pub a_bits: Option<u32>,
+    pub clip: f64,
+    pub a_group: Option<usize>,
+    pub sx: Mat,
+    pub sy: Mat,
+    pub sxy: Mat,
+    pub n: usize,
+}
+
+impl LayerStats {
+    pub fn new(din: usize, a_bits: Option<u32>, clip: f64,
+               a_group: Option<usize>) -> Self {
+        LayerStats {
+            din,
+            a_bits,
+            clip,
+            a_group,
+            sx: Mat::zeros(din, din),
+            sy: Mat::zeros(din, din),
+            sxy: Mat::zeros(din, din),
+            n: 0,
+        }
+    }
+
+    /// Fold in one batch of activation columns X [din, b].
+    pub fn update(&mut self, x: &Mat) {
+        assert_eq!(x.rows, self.din);
+        let y = match self.a_bits {
+            Some(bits) => act_quantize(x, bits, self.clip, self.a_group),
+            None => x.clone(),
+        };
+        self.sx = self.sx.add(&x.gram_n());
+        self.sy = self.sy.add(&y.gram_n());
+        self.sxy = self.sxy.add(&x.matmul_nt(&y));
+        self.n += x.cols;
+    }
+
+    /// Fold in a batch given in *row-major token rows* ([b, din] f32),
+    /// the layout the PJRT acts graph produces.
+    pub fn update_rows_f32(&mut self, rows: &[f32], n_rows: usize) {
+        assert_eq!(rows.len(), n_rows * self.din);
+        // transpose into [din, n_rows]
+        let mut x = Mat::zeros(self.din, n_rows);
+        for r in 0..n_rows {
+            for c in 0..self.din {
+                x[(c, r)] = rows[r * self.din + c] as f64;
+            }
+        }
+        self.update(&x);
+    }
+
+    /// (Σx + εx·I, Σy + εy·I, Σxy) with ε = 1e-2·tr(Σ)/d, as in the paper.
+    pub fn regularized(&self) -> (Mat, Mat, Mat) {
+        let d = self.din as f64;
+        let mut sx = self.sx.clone();
+        sx.add_diag(1e-2 * self.sx.trace() / d);
+        let mut sy = self.sy.clone();
+        sy.add_diag(1e-2 * self.sy.trace() / d);
+        (sx, sy, self.sxy.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn online_equals_batch() {
+        // property: accumulating in chunks == one shot
+        let x = Mat::random_normal(&mut Rng::new(1), 8, 200);
+        let mut st_once = LayerStats::new(8, Some(4), 0.9, None);
+        st_once.update(&x);
+        let mut st_chunks = LayerStats::new(8, Some(4), 0.9, None);
+        for c in (0..200).step_by(37) {
+            st_chunks.update(&x.cols_range(c, (c + 37).min(200)));
+        }
+        assert!(st_once.sx.sub(&st_chunks.sx).max_abs() < 1e-8);
+        assert!(st_once.sy.sub(&st_chunks.sy).max_abs() < 1e-8);
+        assert!(st_once.sxy.sub(&st_chunks.sxy).max_abs() < 1e-8);
+        assert_eq!(st_once.n, st_chunks.n);
+    }
+
+    #[test]
+    fn identity_qa_gives_equal_sigmas() {
+        let x = Mat::random_normal(&mut Rng::new(2), 6, 100);
+        let mut st = LayerStats::new(6, None, 1.0, None);
+        st.update(&x);
+        assert!(st.sx.sub(&st.sy).max_abs() < 1e-10);
+        assert!(st.sx.sub(&st.sxy).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn regularization_strength() {
+        let x = Mat::random_normal(&mut Rng::new(3), 4, 50);
+        let mut st = LayerStats::new(4, Some(4), 1.0, None);
+        st.update(&x);
+        let (sx, _, _) = st.regularized();
+        let eps = 1e-2 * st.sx.trace() / 4.0;
+        for i in 0..4 {
+            assert!((sx[(i, i)] - st.sx[(i, i)] - eps).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn rows_f32_matches_update() {
+        let mut rng = Rng::new(4);
+        let n_rows = 10;
+        let din = 5;
+        let rows: Vec<f32> =
+            rng.normal_vec(n_rows * din).iter().map(|&v| v as f32).collect();
+        let mut st1 = LayerStats::new(din, Some(4), 1.0, None);
+        st1.update_rows_f32(&rows, n_rows);
+        // manual transpose path
+        let mut x = Mat::zeros(din, n_rows);
+        for r in 0..n_rows {
+            for c in 0..din {
+                x[(c, r)] = rows[r * din + c] as f64;
+            }
+        }
+        let mut st2 = LayerStats::new(din, Some(4), 1.0, None);
+        st2.update(&x);
+        assert!(st1.sx.sub(&st2.sx).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn sigmas_are_symmetric_psd() {
+        let x = Mat::random_normal(&mut Rng::new(5), 6, 80);
+        let mut st = LayerStats::new(6, Some(4), 0.9, None);
+        st.update(&x);
+        let (sx, sy, _) = st.regularized();
+        for m in [&sx, &sy] {
+            assert!(m.sub(&m.transpose()).max_abs() < 1e-9);
+            // PD check via cholesky
+            assert!(crate::linalg::cholesky(m).is_ok());
+        }
+    }
+}

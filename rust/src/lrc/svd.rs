@@ -1,0 +1,117 @@
+//! The paper's "SVD" baseline (Tables 1–3): QuaRot-quantize with GPTQ, then
+//! a rank-k SVD of the *weight* residual W − Ŵ — no activation statistics
+//! in the low-rank term.  (LQER-style; the paper shows this is not enough.)
+//!
+//! Also provides the truncated SVD itself, built on the Jacobi eigensolver:
+//! for A [m, n] with m ≤ n we eigendecompose A·Aᵀ and recover V = Aᵀ·U/σ.
+
+use super::{lrc, qlr_objective, LayerResult, LayerStats};
+use crate::linalg::{top_k_eigvecs, Mat};
+use crate::quant::QuantConfig;
+
+/// Truncated SVD: returns (U·diag(σ) [m,k], V [n,k]) with A ≈ (Uσ)·Vᵀ.
+pub fn truncated_svd(a: &Mat, k: usize) -> (Mat, Mat) {
+    let (m, n) = (a.rows, a.cols);
+    if m <= n {
+        let g = a.gram_n();                       // A·Aᵀ [m,m]
+        let u = top_k_eigvecs(&g, k);             // [m,k]
+        // σ_j² = u_jᵀ G u_j ; V = Aᵀ·U·diag(1/σ) ; return (U·σ, V)
+        let atu = a.transpose().matmul(&u);       // [n,k] = Aᵀ U = V·σ
+        let mut us = u.clone();
+        let mut v = atu.clone();
+        for j in 0..k {
+            let sigma = (0..n)
+                .map(|i| atu[(i, j)] * atu[(i, j)])
+                .sum::<f64>()
+                .sqrt()
+                .max(1e-300);
+            for i in 0..m {
+                us[(i, j)] *= sigma;
+            }
+            for i in 0..n {
+                v[(i, j)] /= sigma;
+            }
+        }
+        (us, v)
+    } else {
+        let (v, us) = truncated_svd(&a.transpose(), k);
+        // aᵀ ≈ v·usᵀ → a ≈ us·vᵀ ... careful: recursive call returns
+        // (U'σ, V') for Aᵀ, i.e. Aᵀ ≈ (U'σ)V'ᵀ → A ≈ V'(U'σ)ᵀ.
+        (us, v)
+    }
+}
+
+/// The SVD baseline for one layer.
+pub fn svd_baseline(w: &Mat, st: &LayerStats, k: usize, cfg: &QuantConfig)
+                    -> Result<LayerResult, String> {
+    // quantize with no correction (QuaRot-style)
+    let base = lrc(w, st, 0, cfg)?;
+    let resid = w.sub(&base.w_hat);
+    let (u, v) = truncated_svd(&resid, k);
+    let obj = qlr_objective(w, &base.w_hat, &u, &v, st);
+    Ok(LayerResult {
+        w_hat: base.w_hat,
+        u: Some(u),
+        v: Some(v),
+        objective: obj,
+        history: vec![obj],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn svd_reconstructs_low_rank_exactly() {
+        // A = U₀·V₀ᵀ with rank 3 → rank-3 truncated SVD is exact
+        let mut rng = Rng::new(1);
+        let u0 = Mat::random_normal(&mut rng, 10, 3);
+        let v0 = Mat::random_normal(&mut rng, 14, 3);
+        let a = u0.matmul(&v0.transpose());
+        let (us, v) = truncated_svd(&a, 3);
+        let rec = us.matmul(&v.transpose());
+        assert!(a.sub(&rec).max_abs() < 1e-8);
+    }
+
+    #[test]
+    fn svd_best_rank_k_property() {
+        // Eckart–Young: truncated SVD beats random rank-k approximations
+        let a = Mat::random_normal(&mut Rng::new(2), 12, 12);
+        let (us, v) = truncated_svd(&a, 4);
+        let err_svd = a.sub(&us.matmul(&v.transpose())).frob_norm();
+        let mut rng = Rng::new(3);
+        for _ in 0..10 {
+            let ur = Mat::random_normal(&mut rng, 12, 4);
+            let vr = Mat::random_normal(&mut rng, 12, 4);
+            // best scale for the random pair (least squares on vec space)
+            let approx = ur.matmul(&vr.transpose());
+            let alpha = a.frob_dot(&approx) / approx.frob_dot(&approx);
+            let err_r = a.sub(&approx.scale(alpha)).frob_norm();
+            assert!(err_svd <= err_r + 1e-9);
+        }
+    }
+
+    #[test]
+    fn tall_and_wide_agree() {
+        let a = Mat::random_normal(&mut Rng::new(4), 6, 17);
+        let (us1, v1) = truncated_svd(&a, 2);
+        let (us2, v2) = truncated_svd(&a.transpose(), 2);
+        let r1 = us1.matmul(&v1.transpose());
+        let r2 = us2.matmul(&v2.transpose()).transpose();
+        assert!(r1.sub(&r2).max_abs() < 1e-7);
+    }
+
+    #[test]
+    fn singular_values_descending() {
+        let a = Mat::random_normal(&mut Rng::new(5), 9, 9);
+        let (us, _) = truncated_svd(&a, 5);
+        let norms: Vec<f64> = (0..5)
+            .map(|j| (0..9).map(|i| us[(i, j)] * us[(i, j)]).sum::<f64>().sqrt())
+            .collect();
+        for w in norms.windows(2) {
+            assert!(w[0] >= w[1] - 1e-9, "{norms:?}");
+        }
+    }
+}

@@ -1,0 +1,182 @@
+//! `lrc` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   info                          list models/graphs in artifacts/
+//!   quantize --model M --method Q quantize natively (calibrate → bundle)
+//!   eval --model M --graph G      perplexity + task accuracy of a variant
+//!   serve --model M               serving demo with the dynamic batcher
+//!
+//! Run `lrc <cmd> --help` equivalent: every flag has a default, see below.
+
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use lrc::coordinator::{BatchPolicy, ServerConfig, ServerHandle};
+use lrc::data::Corpus;
+use lrc::experiments::{self, EvalBudget};
+use lrc::pipeline::Method;
+use lrc::quant::{QuantConfig, Quantizer};
+use lrc::runtime::{Engine, ModelArtifacts, TensorBundle};
+use lrc::util::{render_table, Args};
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let res = match cmd {
+        "info" => cmd_info(&args),
+        "quantize" => cmd_quantize(&args),
+        "eval" => cmd_eval(&args),
+        "serve" => cmd_serve(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = res {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "lrc — Low-Rank Correction for Quantized LLMs (rust coordinator)\n\
+         \n\
+         USAGE: lrc <info|quantize|eval|serve> [flags]\n\
+         \n\
+         quantize --model small --method lrc|svd|quarot --pct 10\n\
+         \x20        [--iters 1] [--group 32] [--weight-only] [--rtn]\n\
+         \x20        [--calib 128] [--corpus wiki_syn]\n\
+         eval     --model small --graph fwd_w4a4_r10_b8 [--quant <dir>]\n\
+         \x20        [--fast]\n\
+         serve    --model small [--prefix fwd_w4a4_r10] [--quant <dir>]\n\
+         \x20        [--requests 64] [--max-wait-ms 5]\n"
+    );
+}
+
+fn load_corpus(name: &str) -> Result<Corpus> {
+    let path = lrc::artifacts_dir().join("corpus").join(format!("{name}.txt"));
+    Ok(Corpus::load(&path)?)
+}
+
+fn cmd_info(_args: &Args) -> Result<()> {
+    let art = lrc::artifacts_dir();
+    println!("artifacts: {art:?}");
+    let models = std::fs::read_dir(art.join("models"))?;
+    for m in models.flatten() {
+        let arts = ModelArtifacts::load(&m.path())?;
+        println!("\nmodel {} — d={} L={} heads={} ff={} experts={} params={}",
+                 arts.info.name, arts.info.d_model, arts.info.n_layers,
+                 arts.info.n_heads, arts.info.d_ff, arts.info.n_experts,
+                 arts.info.param_count);
+        for (name, g) in &arts.graphs {
+            println!("  graph {name:<24} batch={} params={}",
+                     g.batch, g.params.len());
+        }
+    }
+    Ok(())
+}
+
+fn quant_config(args: &Args) -> QuantConfig {
+    QuantConfig {
+        w_bits: 4,
+        a_bits: if args.has("weight-only") { None } else { Some(4) },
+        a_group: args.get("group").and_then(|g| g.parse().ok()),
+        quantizer: if args.has("rtn") { Quantizer::Rtn } else { Quantizer::Gptq },
+        rank_pct: args.get_f64("pct", 10.0) / 100.0,
+        iters: args.get_usize("iters", 1),
+    }
+}
+
+fn cmd_quantize(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "small");
+    let method = Method::parse(&args.get_or("method", "lrc"))?;
+    let cfg = quant_config(args);
+    let pct = args.get_usize("pct", 10);
+    let graph = experiments::quant_graph_name(
+        pct, cfg.a_group, args.has("weight-only"), 8);
+    let corpus = load_corpus(&args.get_or("corpus", "wiki_syn"))?;
+    let engine = Engine::cpu()?;
+    let arts = ModelArtifacts::load(&lrc::artifacts_dir().join("models").join(&model))?;
+    let n_calib = args.get_usize("calib", 128);
+    println!("quantizing {model} with {} against {graph} ({n_calib} calib seqs)",
+             method.label(&cfg));
+    let (_bundle, report) = lrc::pipeline::quantize_and_save(
+        &engine, &arts, &corpus, &graph, method, &cfg, n_calib)?;
+    println!("calibration: {:.1}s, quantization: {:.1}s",
+             report.calib_seconds, report.quant_seconds);
+    println!("mean relative layer error: {:.4}", report.mean_rel_error());
+    println!("packed size: {:.2} MB (int4 {:.2} MB + fp16 low-rank {:.2} MB + fp16 rest {:.2} MB)",
+             report.size_bytes() as f64 / 1e6,
+             report.packed_bytes as f64 / 1e6,
+             report.lowrank_params as f64 * 2.0 / 1e6,
+             report.fp_params as f64 * 2.0 / 1e6);
+    for l in report.layers.iter().take(4) {
+        println!("  {:<16} k={:<3} relerr={:.5}", l.layer, l.rank, l.rel_error);
+    }
+    println!("  ... ({} layers total)", report.layers.len());
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "small");
+    let graph = args.get_or("graph", "fwd_fp_b8");
+    let budget = if args.has("fast") { EvalBudget::fast() } else { EvalBudget::full() };
+    let engine = Engine::cpu()?;
+    let art = lrc::artifacts_dir();
+    let arts = ModelArtifacts::load(&art.join("models").join(&model))?;
+    let corpus = load_corpus(&args.get_or("corpus", "wiki_syn"))?;
+    let tasks = experiments::load_tasks(&art, budget)?;
+    let quant = match args.get("quant") {
+        Some(d) => Some(TensorBundle::load(std::path::Path::new(d))?),
+        None => None,
+    };
+    let scores = experiments::evaluate_graph(
+        &engine, &arts, &graph, quant.as_ref(), &corpus, &tasks, budget,
+        &graph)?;
+    println!("{}", render_table(&experiments::TABLE_HEADERS,
+                                &[scores.cells()]));
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "small");
+    let prefix = args.get_or("prefix", "fwd_fp");
+    let art = lrc::artifacts_dir();
+    let model_dir = art.join("models").join(&model);
+    let quant_dir = args.get("quant").map(std::path::PathBuf::from);
+    let n_requests = args.get_usize("requests", 64);
+
+    let handle = ServerHandle::start(ServerConfig {
+        model_dir,
+        graph_prefix: prefix.clone(),
+        quant_dir,
+        policy: BatchPolicy {
+            max_batch: args.get_usize("max-batch", 8),
+            max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 5) as u64),
+            max_queue: 4096,
+        },
+    })?;
+    println!("serving {model}/{prefix} (seq_len={})", handle.seq_len);
+
+    // demo traffic from the held-out corpus
+    let corpus = load_corpus("wiki_syn")?;
+    let seqs = corpus.eval_sequences(handle.seq_len, n_requests);
+    if seqs.is_empty() {
+        return Err(anyhow!("no eval sequences available"));
+    }
+    let mut pending = Vec::new();
+    for s in seqs.iter().cycle().take(n_requests) {
+        pending.push(handle.submit(s.clone())?);
+    }
+    let mut mean_nll = 0.0;
+    for rx in pending {
+        let resp = rx.recv()?;
+        mean_nll += resp.mean_nll / n_requests as f64;
+    }
+    println!("mean per-seq NLL: {mean_nll:.4} (ppl {:.2})", mean_nll.exp());
+    let snap = handle.shutdown();
+    println!("{}", snap.render());
+    Ok(())
+}

@@ -1,0 +1,315 @@
+//! The end-to-end PTQ pipeline, natively in rust (python never runs):
+//!
+//!   1. stream calibration batches through the AOT `acts` graph (PJRT),
+//!      accumulating per-activation Σ statistics in f64,
+//!   2. per quantized layer, run the selected method (QuaRot / SVD / LRC)
+//!      from [`crate::lrc`],
+//!   3. emit a quant [`TensorBundle`] whose (wq, u, v, clip) tensors slot
+//!      into the matching `fwd_w4a4_*` graph parameters,
+//!   4. account real int4 + fp16 storage (Table 3 sizes).
+//!
+//! This mirrors the paper's application procedure: "LRC works sequentially
+//! through the weight matrices of the model, computing activations for
+//! each weight matrix, obtaining the covariance and cross-covariances
+//! matrices needed" — except the activations come from the rotated model's
+//! AOT graph so layers are calibrated against the *original* (fp) forward.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::data::Corpus;
+use crate::linalg::Mat;
+use crate::lrc::{lrc, svd::svd_baseline, LayerStats};
+use crate::quant::pack::{model_size_bytes, PackedInt4};
+use crate::quant::{search_act_clip, weight_scales, QuantConfig};
+use crate::runtime::{Engine, GraphInfo, ModelArtifacts, ModelInfo, TensorBundle};
+use crate::util::Json;
+
+/// Quantization method (the rows of Tables 1–3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// QuaRot baseline: GPTQ only, no correction (rank 0)
+    Quarot,
+    /// QuaRot + SVD of the weight residual (LQER-style)
+    Svd,
+    /// the paper's method
+    Lrc,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method> {
+        match s {
+            "quarot" => Ok(Method::Quarot),
+            "svd" => Ok(Method::Svd),
+            "lrc" => Ok(Method::Lrc),
+            _ => Err(anyhow!("unknown method {s} (quarot|svd|lrc)")),
+        }
+    }
+    pub fn label(&self, cfg: &QuantConfig) -> String {
+        match self {
+            Method::Quarot => "QuaRot".into(),
+            Method::Svd => "SVD".into(),
+            Method::Lrc => format!("LRC ({})", cfg.iters),
+        }
+    }
+}
+
+/// Names of the quantized linear layers, forward order — must mirror
+/// python/compile/model.py::quantized_layer_names.
+pub fn quantized_layer_names(info: &ModelInfo) -> Vec<String> {
+    let mut out = Vec::new();
+    for i in 0..info.n_layers {
+        for nm in ["wq", "wk", "wv", "wo"] {
+            out.push(format!("blk{i}.{nm}"));
+        }
+        if info.n_experts == 0 {
+            for nm in ["wgate", "wup", "wdown"] {
+                out.push(format!("blk{i}.{nm}"));
+            }
+        } else {
+            for e in 0..info.n_experts {
+                for nm in ["wgate", "wup", "wdown"] {
+                    out.push(format!("blk{i}.e{e}.{nm}"));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Which collected activation feeds a layer — mirrors
+/// python/compile/model.py::activation_source.
+pub fn activation_source(layer: &str) -> String {
+    let (blk, leaf) = layer.split_once('.').expect("layer name");
+    match leaf {
+        "wq" | "wk" | "wv" => format!("{blk}.ln1_out"),
+        "wo" => format!("{blk}.attn_out"),
+        "wgate" | "wup" => format!("{blk}.ln2_out"),
+        "wdown" => format!("{blk}.ffn_had"),
+        other => {
+            let (exp, leaf2) = other.split_once('.').expect("expert leaf");
+            match leaf2 {
+                "wgate" | "wup" => format!("{blk}.ln2_out"),
+                "wdown" => format!("{blk}.{exp}.ffn_had"),
+                _ => panic!("unknown layer {layer}"),
+            }
+        }
+    }
+}
+
+/// Per-layer outcome for the report.
+#[derive(Clone, Debug)]
+pub struct LayerReport {
+    pub layer: String,
+    pub rank: usize,
+    pub objective: f64,
+    pub rel_error: f64,
+    pub clip: f64,
+}
+
+/// Result of quantizing a whole model.
+pub struct PipelineReport {
+    pub method: Method,
+    pub layers: Vec<LayerReport>,
+    pub calib_seconds: f64,
+    pub quant_seconds: f64,
+    /// Table-3 storage accounting
+    pub packed_bytes: usize,
+    pub lowrank_params: usize,
+    pub fp_params: usize,
+}
+
+impl PipelineReport {
+    pub fn size_bytes(&self) -> usize {
+        model_size_bytes(self.packed_bytes, self.lowrank_params, self.fp_params)
+    }
+    /// Mean relative layer reconstruction error (diagnostic).
+    pub fn mean_rel_error(&self) -> f64 {
+        let s: f64 = self.layers.iter().map(|l| l.rel_error).sum();
+        s / self.layers.len().max(1) as f64
+    }
+}
+
+/// Collected calibration statistics for every activation of a model.
+pub struct CalibStats {
+    pub stats: BTreeMap<String, LayerStats>,
+    pub seconds: f64,
+}
+
+/// Stream `n_seqs` calibration sequences through the acts graph and
+/// accumulate Σ per activation (paper: 128 sequences).
+pub fn collect_stats(engine: &Engine, arts: &ModelArtifacts, corpus: &Corpus,
+                     n_seqs: usize, seed: u64, a_bits: Option<u32>,
+                     a_group: Option<usize>) -> Result<CalibStats> {
+    let t0 = Instant::now();
+    let gname = format!("acts_b{}", 8);
+    let session = engine.session(arts, &gname, None)?;
+    let seqs = corpus.calib_sequences(n_seqs, arts.info.seq_len, seed);
+    let batches = crate::data::batch_sequences(&seqs, session.batch);
+
+    let mut stats: BTreeMap<String, LayerStats> = BTreeMap::new();
+    let mut first = true;
+    for (flat, used) in &batches {
+        let out = session.run(flat)?;
+        for slice in &session.acts {
+            let rows_per_seq = slice.rows / session.batch;
+            let n_rows = used * rows_per_seq;
+            let seg = &out[slice.offset..slice.offset + slice.rows * slice.dim];
+            if first {
+                // clip search on the first batch (per-activation c)
+                let mut x = Mat::zeros(slice.dim, n_rows);
+                for r in 0..n_rows {
+                    for c in 0..slice.dim {
+                        x[(c, r)] = seg[r * slice.dim + c] as f64;
+                    }
+                }
+                let clip = match a_bits {
+                    Some(bits) => search_act_clip(&x, bits, a_group),
+                    None => 1.0,
+                };
+                stats.insert(slice.name.clone(),
+                             LayerStats::new(slice.dim, a_bits, clip, a_group));
+            }
+            stats.get_mut(&slice.name).unwrap()
+                .update_rows_f32(&seg[..n_rows * slice.dim], n_rows);
+        }
+        first = false;
+    }
+    Ok(CalibStats { stats, seconds: t0.elapsed().as_secs_f64() })
+}
+
+/// Quantize every layer of `arts` with `method`, matching the rank layout
+/// of `graph` (the fwd graph the bundle will be fed into).
+pub fn quantize_model(arts: &ModelArtifacts, calib: &CalibStats,
+                      graph: &GraphInfo, method: Method, cfg: &QuantConfig)
+                      -> Result<(TensorBundle, PipelineReport)> {
+    let t0 = Instant::now();
+    let mut bundle = TensorBundle::default();
+    let mut layers = Vec::new();
+    let mut packed_bytes = 0usize;
+    let mut lowrank_params = 0usize;
+
+    for layer in quantized_layer_names(&arts.info) {
+        let wt = arts.weights.get(&layer)?;
+        let (dout, din) = (wt.shape[0], wt.shape[1]);
+        let w = Mat::from_f32(dout, din, &wt.data);
+        let src = activation_source(&layer);
+        let st = calib.stats.get(&src)
+            .ok_or_else(|| anyhow!("no stats for activation {src}"))?;
+        let k = *graph.ranks.get(&layer).unwrap_or(&0);
+
+        let res = match method {
+            Method::Quarot => lrc(&w, st, 0, cfg).map_err(|e| anyhow!(e))?,
+            Method::Svd => svd_baseline(&w, st, k, cfg).map_err(|e| anyhow!(e))?,
+            Method::Lrc => lrc(&w, st, k, cfg).map_err(|e| anyhow!(e))?,
+        };
+
+        // relative error vs the fp output energy: ℒ/‖WX‖²  (tr(WΣxWᵀ))
+        let wx = w.matmul(&st.sx).frob_dot(&w);
+        let rel = if wx > 0.0 { res.objective / wx } else { 0.0 };
+
+        bundle.insert(&format!("{layer}.wq"), vec![dout, din],
+                      res.w_hat.to_f32());
+        if let (Some(u), Some(v)) = (&res.u, &res.v) {
+            bundle.insert(&format!("{layer}.u"), vec![dout, u.cols], u.to_f32());
+            bundle.insert(&format!("{layer}.v"), vec![din, v.cols], v.to_f32());
+            lowrank_params += u.rows * u.cols + v.rows * v.cols;
+        }
+        bundle.insert(&format!("{layer}.clip"), vec![1], vec![st.clip as f32]);
+
+        // real storage accounting
+        let scales = weight_scales(&res.w_hat, cfg.w_bits, None);
+        let packed = PackedInt4::pack(&res.w_hat, &scales, None);
+        packed_bytes += packed.size_bytes();
+
+        layers.push(LayerReport {
+            layer: layer.clone(),
+            rank: k,
+            objective: res.objective,
+            rel_error: rel,
+            clip: st.clip,
+        });
+    }
+
+    // fp params = everything not quantized (embeddings, norms, head, router)
+    let qset: std::collections::BTreeSet<String> =
+        quantized_layer_names(&arts.info).into_iter().collect();
+    let fp_params: usize = arts.weights.order.iter()
+        .filter(|n| !qset.contains(*n))
+        .map(|n| arts.weights.tensors[n].numel())
+        .sum();
+
+    let report = PipelineReport {
+        method,
+        layers,
+        calib_seconds: calib.seconds,
+        quant_seconds: t0.elapsed().as_secs_f64(),
+        packed_bytes,
+        lowrank_params,
+        fp_params,
+    };
+    Ok((bundle, report))
+}
+
+/// Convenience: quantize and persist under
+/// `<model_dir>/quant/<method>_<graph>/`.
+pub fn quantize_and_save(engine: &Engine, arts: &ModelArtifacts,
+                         corpus: &Corpus, graph_name: &str, method: Method,
+                         cfg: &QuantConfig, n_calib: usize)
+                         -> Result<(TensorBundle, PipelineReport)> {
+    let graph = arts.graph(graph_name)?.clone();
+    let a_bits = if graph.weight_only { None } else { cfg.a_bits };
+    let calib = collect_stats(engine, arts, corpus, n_calib, 1234,
+                              a_bits, graph.a_group)?;
+    let (bundle, report) = quantize_model(arts, &calib, &graph, method, cfg)?;
+    let tag = format!("{}_{}", method.label(cfg).replace([' ', '(', ')'], ""),
+                      graph_name);
+    let out = arts.dir.join("quant").join(tag);
+    bundle.write(&out, &[
+        ("kind", Json::str("quant")),
+        ("graph", Json::str(graph_name)),
+        ("rank_pct", Json::num(graph.rank_pct)),
+    ])?;
+    Ok((bundle, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_names_dense() {
+        let info = ModelInfo {
+            name: "t".into(), d_model: 8, n_layers: 2, n_heads: 2, d_ff: 16,
+            n_experts: 0, seq_len: 4, vocab: 256, param_count: 0,
+        };
+        let names = quantized_layer_names(&info);
+        assert_eq!(names.len(), 14);
+        assert_eq!(names[0], "blk0.wq");
+        assert_eq!(names[6], "blk0.wdown");
+        assert_eq!(names[13], "blk1.wdown");
+    }
+
+    #[test]
+    fn layer_names_moe() {
+        let info = ModelInfo {
+            name: "t".into(), d_model: 8, n_layers: 1, n_heads: 2, d_ff: 16,
+            n_experts: 3, seq_len: 4, vocab: 256, param_count: 0,
+        };
+        let names = quantized_layer_names(&info);
+        assert_eq!(names.len(), 4 + 9);
+        assert!(names.contains(&"blk0.e2.wdown".to_string()));
+    }
+
+    #[test]
+    fn activation_sources() {
+        assert_eq!(activation_source("blk0.wq"), "blk0.ln1_out");
+        assert_eq!(activation_source("blk1.wo"), "blk1.attn_out");
+        assert_eq!(activation_source("blk0.wup"), "blk0.ln2_out");
+        assert_eq!(activation_source("blk1.wdown"), "blk1.ffn_had");
+        assert_eq!(activation_source("blk0.e1.wgate"), "blk0.ln2_out");
+        assert_eq!(activation_source("blk0.e1.wdown"), "blk0.e1.ffn_had");
+    }
+}

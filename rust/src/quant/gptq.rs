@@ -1,0 +1,202 @@
+//! GPTQ (Frantar et al., 2022) — the layer-wise quantization solver used by
+//! Update-Quant (Algorithm 2, line 5).
+//!
+//! Approximates  min_{Ŵ ∈ C(b)} ‖Ŵ·Y − W̃·Y‖²  given only W̃ and the
+//! Hessian H = YYᵀ: quantize columns left→right, propagating each column's
+//! error through the upper-Cholesky factor of H⁻¹ (the OBS update), with
+//! lazy block batching so the trailing update is a GEMM.
+
+use super::{maxq, weight_scales};
+use crate::linalg::{cholesky, chol_solve_mat, Mat};
+
+/// GPTQ with Cholesky error feedback.
+///
+/// * `w`    — [dout, din] target weights (already W̃ from Prop. 3.1)
+/// * `hess` — [din, din] = YYᵀ (caller may pre-regularize; damping is added
+///            here too, as in the reference implementation)
+/// * returns dequantized (on-grid) Ŵ
+pub fn gptq(w: &Mat, hess: &Mat, bits: u32, group: Option<usize>,
+            damp: f64, block: usize) -> Result<Mat, String> {
+    let (dout, din) = (w.rows, w.cols);
+    assert_eq!(hess.rows, din);
+    let mut w = w.clone();
+    let mut h = hess.clone();
+
+    // dead-column guard + damping
+    for j in 0..din {
+        if h[(j, j)] == 0.0 {
+            h[(j, j)] = 1.0;
+            for i in 0..dout {
+                w[(i, j)] = 0.0;
+            }
+        }
+    }
+    let mean_diag = h.trace() / din as f64;
+    h.add_diag(damp * mean_diag);
+
+    // upper-Cholesky factor of H⁻¹ via the reverse-ordering trick:
+    // chol(P·H⁻¹·P)ᵀ reversed again gives U with H⁻¹ = Uᵀ·U, U upper.
+    let hinv = chol_solve_mat(&cholesky(&h)?, &Mat::eye(din));
+    let hinv_u = upper_cholesky(&hinv)?;
+
+    let scale = weight_scales(&w, bits, group);
+    let g = group.unwrap_or(din);
+    let mq = maxq(bits);
+    let mut q_out = Mat::zeros(dout, din);
+
+    let mut j1 = 0;
+    while j1 < din {
+        let j2 = (j1 + block).min(din);
+        let bw = j2 - j1;
+        // per-block error matrix [dout, bw]
+        let mut werr = Mat::zeros(dout, bw);
+        for j in j1..j2 {
+            let d = hinv_u[(j, j)];
+            for i in 0..dout {
+                let wj = w[(i, j)];
+                let s = scale[(i, j / g)];
+                let q = (wj / s).round().clamp(-(mq + 1.0), mq) * s;
+                q_out[(i, j)] = q;
+                let err = (wj - q) / d;
+                werr[(i, j - j1)] = err;
+                // propagate inside the block
+                for jj in j..j2 {
+                    w[(i, jj)] -= err * hinv_u[(j, jj)];
+                }
+            }
+        }
+        // propagate to the remaining columns in one GEMM:
+        // W[:, j2:] -= werr · hinv_u[j1:j2, j2:]
+        if j2 < din {
+            let rest = din - j2;
+            // build the [bw, rest] slice of hinv_u
+            let mut hu = Mat::zeros(bw, rest);
+            for r in 0..bw {
+                for c in 0..rest {
+                    hu[(r, c)] = hinv_u[(j1 + r, j2 + c)];
+                }
+            }
+            let delta = werr.matmul(&hu);
+            for i in 0..dout {
+                let drow = delta.row(i);
+                let wrow = &mut w.row_mut(i)[j2..];
+                for (wv, dv) in wrow.iter_mut().zip(drow) {
+                    *wv -= dv;
+                }
+            }
+        }
+        j1 = j2;
+    }
+    Ok(q_out)
+}
+
+/// Upper-triangular U with A = Uᵀ·U for symmetric PD A: exactly the
+/// transpose of the lower Cholesky factor (A = L·Lᵀ = (Lᵀ)ᵀ·Lᵀ) —
+/// the `torch.linalg.cholesky(·, upper=True)` the GPTQ reference uses.
+fn upper_cholesky(a: &Mat) -> Result<Mat, String> {
+    Ok(cholesky(a)?.transpose())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rtn_quantize;
+    use crate::rng::Rng;
+
+    fn layer_problem(seed: u64, dout: usize, din: usize, n: usize)
+                     -> (Mat, Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        let w = Mat::random_normal(&mut rng, dout, din);
+        // correlated activations
+        let base = Mat::random_normal(&mut rng, din / 2, n);
+        let mixer = Mat::random_normal(&mut rng, din, din / 2);
+        let mut x = mixer.matmul(&base);
+        let noise = Mat::random_normal(&mut rng, din, n).scale(0.1);
+        x = x.add(&noise);
+        let h = x.gram_n(); // XXᵀ
+        (w, x, h)
+    }
+
+    fn recon_err(w: &Mat, q: &Mat, x: &Mat) -> f64 {
+        w.sub(q).matmul(x).frob_norm()
+    }
+
+    #[test]
+    fn upper_cholesky_factorizes() {
+        for seed in 0..4 {
+            let a = {
+                let m = Mat::random_normal(&mut Rng::new(seed), 9, 12);
+                let mut g = m.gram_n();
+                g.add_diag(0.3);
+                g
+            };
+            let u = upper_cholesky(&a).unwrap();
+            // upper triangular
+            for i in 0..9 {
+                for j in 0..i {
+                    assert!(u[(i, j)].abs() < 1e-12);
+                }
+            }
+            let rec = u.transpose().matmul(&u);
+            assert!(rec.sub(&a).max_abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn gptq_beats_rtn_on_correlated_data() {
+        // the whole point of GPTQ: error feedback helps when X correlated
+        for seed in 0..3 {
+            let (w, x, h) = layer_problem(seed, 16, 32, 256);
+            let q_rtn = rtn_quantize(&w, 4, None);
+            let q_gptq = gptq(&w, &h, 4, None, 0.01, 16).unwrap();
+            let e_rtn = recon_err(&w, &q_rtn, &x);
+            let e_gptq = recon_err(&w, &q_gptq, &x);
+            assert!(e_gptq < e_rtn, "seed {seed}: gptq {e_gptq} rtn {e_rtn}");
+        }
+    }
+
+    #[test]
+    fn gptq_output_on_grid() {
+        let (w, _x, h) = layer_problem(7, 8, 16, 128);
+        let q = gptq(&w, &h, 4, None, 0.01, 8).unwrap();
+        let s = weight_scales(&w, 4, None);
+        // note: gptq scales are computed from the *original* w rows
+        for i in 0..8 {
+            for j in 0..16 {
+                let steps = q[(i, j)] / s[(i, 0)];
+                assert!((steps - steps.round()).abs() < 1e-6,
+                        "off grid at ({i},{j})");
+                assert!(steps.round().abs() <= 8.0);
+            }
+        }
+    }
+
+    #[test]
+    fn block_size_invariance() {
+        // property: lazy-batch block size must not change the result
+        let (w, _x, h) = layer_problem(11, 6, 24, 200);
+        let q1 = gptq(&w, &h, 4, None, 0.01, 1).unwrap();
+        let q8 = gptq(&w, &h, 4, None, 0.01, 8).unwrap();
+        let q24 = gptq(&w, &h, 4, None, 0.01, 24).unwrap();
+        assert!(q1.sub(&q8).max_abs() < 1e-8);
+        assert!(q1.sub(&q24).max_abs() < 1e-8);
+    }
+
+    #[test]
+    fn grouped_gptq_runs() {
+        let (w, x, h) = layer_problem(13, 8, 32, 256);
+        let q = gptq(&w, &h, 4, Some(8), 0.01, 16).unwrap();
+        let q_rtn = rtn_quantize(&w, 4, Some(8));
+        assert!(recon_err(&w, &q, &x) <= recon_err(&w, &q_rtn, &x) * 1.01);
+    }
+
+    #[test]
+    fn identity_hessian_equals_rtn() {
+        // with H = I there is no correlation to exploit: GPTQ == RTN
+        let w = Mat::random_normal(&mut Rng::new(5), 8, 16);
+        let h = Mat::eye(16);
+        let q = gptq(&w, &h, 4, None, 0.0, 4).unwrap();
+        let q_rtn = rtn_quantize(&w, 4, None);
+        assert!(q.sub(&q_rtn).max_abs() < 1e-9);
+    }
+}

@@ -1,0 +1,85 @@
+//! Quantizers: the C(b) constraint set machinery.
+//!
+//! * [`rtn`]  — round-to-nearest (weights per-channel / activations
+//!             per-token, optional groupsize) + the paper's clip search
+//! * [`gptq`] — the GPTQ solver used inside Update-Quant (Alg. 2 line 5)
+//! * [`pack`] — real int4 bit-packing (storage sizes for Table 3)
+
+pub mod gptq;
+pub mod pack;
+pub mod rtn;
+
+pub use gptq::gptq;
+pub use rtn::{act_quantize, rtn_quantize, search_act_clip, weight_scales};
+
+/// A quantization configuration for one PTQ run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantConfig {
+    /// weight bits (paper: 4)
+    pub w_bits: u32,
+    /// activation bits (paper: 4); `None` = weight-only (Table 3)
+    pub a_bits: Option<u32>,
+    /// activation groupsize (paper's Table 2 uses 128; scaled here)
+    pub a_group: Option<usize>,
+    /// weight quantizer for Update-Quant ("gptq" | "rtn", Fig. 3 ablation)
+    pub quantizer: Quantizer,
+    /// low-rank budget as a fraction of each matrix's size (0.10 = 10%)
+    pub rank_pct: f64,
+    /// LRC alternating iterations (paper: 1 and 5)
+    pub iters: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Quantizer {
+    Gptq,
+    Rtn,
+}
+
+impl Default for QuantConfig {
+    fn default() -> Self {
+        QuantConfig {
+            w_bits: 4,
+            a_bits: Some(4),
+            a_group: None,
+            quantizer: Quantizer::Gptq,
+            rank_pct: 0.10,
+            iters: 1,
+        }
+    }
+}
+
+/// Rank giving ≈`pct` memory overhead for a [dout, din] matrix:
+/// k·(dout+din) = pct·dout·din.  Must match python `lrc.rank_for_pct`.
+pub fn rank_for_pct(dout: usize, din: usize, pct: f64) -> usize {
+    if pct <= 0.0 {
+        return 0;
+    }
+    let k = (pct * dout as f64 * din as f64 / (dout + din) as f64).round();
+    (k as usize).max(1)
+}
+
+/// Symmetric grid max for b bits: e.g. 7 for int4 ([-8, 7], clip to ±7).
+pub fn maxq(bits: u32) -> f64 {
+    (1u64 << (bits - 1)) as f64 - 1.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_formula_matches_python() {
+        // spot values mirrored in python/tests/test_lrc.py
+        assert_eq!(rank_for_pct(64, 64, 0.10), 3);
+        assert_eq!(rank_for_pct(128, 256, 0.10), 9);
+        assert_eq!(rank_for_pct(256, 128, 0.30), 26);
+        assert_eq!(rank_for_pct(64, 64, 0.0), 0);
+    }
+
+    #[test]
+    fn maxq_values() {
+        assert_eq!(maxq(4), 7.0);
+        assert_eq!(maxq(8), 127.0);
+        assert_eq!(maxq(2), 1.0);
+    }
+}

@@ -1,0 +1,221 @@
+//! Round-to-nearest quantization — weights (per-output-channel or grouped)
+//! and the paper's on-the-fly activation quantizer Q_a with its clip
+//! hyper-parameter search.
+//!
+//! Mirrors python/compile/lrc.py exactly (same grid, same ε guards) so the
+//! two pipelines produce interchangeable bundles.
+
+use super::maxq;
+use crate::linalg::Mat;
+
+/// Per-output-channel (group=None) or per-group symmetric scales.
+/// Returns a [dout, n_groups] matrix (n_groups = 1 when ungrouped).
+pub fn weight_scales(w: &Mat, bits: u32, group: Option<usize>) -> Mat {
+    let mq = maxq(bits);
+    match group {
+        None => {
+            let mut s = Mat::zeros(w.rows, 1);
+            for i in 0..w.rows {
+                let amax = w.row(i).iter().fold(0.0_f64, |a, &x| a.max(x.abs()));
+                s[(i, 0)] = amax / mq + 1e-12;
+            }
+            s
+        }
+        Some(g) => {
+            assert_eq!(w.cols % g, 0, "cols {} % group {g}", w.cols);
+            let ng = w.cols / g;
+            let mut s = Mat::zeros(w.rows, ng);
+            for i in 0..w.rows {
+                let row = w.row(i);
+                for gi in 0..ng {
+                    let amax = row[gi * g..(gi + 1) * g]
+                        .iter()
+                        .fold(0.0_f64, |a, &x| a.max(x.abs()));
+                    s[(i, gi)] = amax / mq + 1e-12;
+                }
+            }
+            s
+        }
+    }
+}
+
+/// RTN weight quantization; returns dequantized (on-grid) weights.
+pub fn rtn_quantize(w: &Mat, bits: u32, group: Option<usize>) -> Mat {
+    let mq = maxq(bits);
+    let s = weight_scales(w, bits, group);
+    let g = group.unwrap_or(w.cols);
+    let mut out = Mat::zeros(w.rows, w.cols);
+    for i in 0..w.rows {
+        for j in 0..w.cols {
+            let sc = s[(i, j / g)];
+            let q = (w[(i, j)] / sc).round().clamp(-(mq + 1.0), mq);
+            out[(i, j)] = q * sc;
+        }
+    }
+    out
+}
+
+/// Activation quantizer Q_a on X [din, n] (tokens are *columns*):
+/// per-token scale = clip · max|x| / maxq (optionally per group of input
+/// channels).  Returns the dequantized Y = Q_a(X).
+pub fn act_quantize(x: &Mat, bits: u32, clip: f64, group: Option<usize>) -> Mat {
+    let mq = maxq(bits);
+    let (din, n) = (x.rows, x.cols);
+    let mut out = Mat::zeros(din, n);
+    match group {
+        None => {
+            // per-column max
+            let mut amax = vec![0.0_f64; n];
+            for i in 0..din {
+                let row = x.row(i);
+                for (j, &v) in row.iter().enumerate() {
+                    let a = v.abs();
+                    if a > amax[j] {
+                        amax[j] = a;
+                    }
+                }
+            }
+            let scales: Vec<f64> =
+                amax.iter().map(|&a| clip * a / mq + 1e-12).collect();
+            for i in 0..din {
+                for j in 0..n {
+                    let q = (x[(i, j)] / scales[j]).round().clamp(-(mq + 1.0), mq);
+                    out[(i, j)] = q * scales[j];
+                }
+            }
+        }
+        Some(g) => {
+            assert_eq!(din % g, 0);
+            let ng = din / g;
+            for gi in 0..ng {
+                let rows = gi * g..(gi + 1) * g;
+                let mut amax = vec![0.0_f64; n];
+                for i in rows.clone() {
+                    for (j, &v) in x.row(i).iter().enumerate() {
+                        let a = v.abs();
+                        if a > amax[j] {
+                            amax[j] = a;
+                        }
+                    }
+                }
+                let scales: Vec<f64> =
+                    amax.iter().map(|&a| clip * a / mq + 1e-12).collect();
+                for i in rows {
+                    for j in 0..n {
+                        let q = (x[(i, j)] / scales[j])
+                            .round()
+                            .clamp(-(mq + 1.0), mq);
+                        out[(i, j)] = q * scales[j];
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Paper §2: grid search for the activation clip factor c, minimizing the
+/// quantization error ‖X − Q_a(X)‖_F.
+pub fn search_act_clip(x: &Mat, bits: u32, group: Option<usize>) -> f64 {
+    let grid = [1.0, 0.95, 0.9, 0.85, 0.8, 0.75, 0.7];
+    let mut best = f64::INFINITY;
+    let mut best_c = 1.0;
+    for &c in &grid {
+        let y = act_quantize(x, bits, c, group);
+        let err = x.sub(&y).frob_norm();
+        if err < best {
+            best = err;
+            best_c = c;
+        }
+    }
+    best_c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn rtn_on_grid_and_bounded_error() {
+        // property: |w - q| <= scale/2 for in-range values; q on the grid
+        for seed in 0..5 {
+            let w = Mat::random_normal(&mut Rng::new(seed), 8, 32);
+            let s = weight_scales(&w, 4, None);
+            let q = rtn_quantize(&w, 4, None);
+            for i in 0..w.rows {
+                for j in 0..w.cols {
+                    let err = (w[(i, j)] - q[(i, j)]).abs();
+                    assert!(err <= s[(i, 0)] * 0.5 + 1e-9,
+                            "err {err} scale {}", s[(i, 0)]);
+                    let steps = q[(i, j)] / s[(i, 0)];
+                    assert!((steps - steps.round()).abs() < 1e-6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_tighter_than_ungrouped() {
+        // property: group scales never increase quantization error
+        let mut rng = Rng::new(42);
+        let mut w = Mat::random_normal(&mut rng, 4, 64);
+        // plant an outlier to make the difference visible
+        w[(0, 0)] = 40.0;
+        let e_full = w.sub(&rtn_quantize(&w, 4, None)).frob_norm();
+        let e_grp = w.sub(&rtn_quantize(&w, 4, Some(16))).frob_norm();
+        assert!(e_grp <= e_full + 1e-12, "{e_grp} > {e_full}");
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let w = Mat::random_normal(&mut Rng::new(3), 6, 48);
+        let e4 = w.sub(&rtn_quantize(&w, 4, None)).frob_norm();
+        let e8 = w.sub(&rtn_quantize(&w, 8, None)).frob_norm();
+        assert!(e8 < e4);
+    }
+
+    #[test]
+    fn act_quant_per_token() {
+        let x = Mat::random_normal(&mut Rng::new(9), 16, 40);
+        let y = act_quantize(&x, 4, 1.0, None);
+        // each column has <= 16 distinct magnitudes implied by the grid
+        assert_eq!(y.rows, 16);
+        // error bounded by scale/2 per token (clip=1 → no clipping)
+        for j in 0..40 {
+            let amax = (0..16).map(|i| x[(i, j)].abs()).fold(0.0_f64, f64::max);
+            let s = amax / 7.0 + 1e-12;
+            for i in 0..16 {
+                assert!((x[(i, j)] - y[(i, j)]).abs() <= s * 0.5 + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn clip_search_prefers_small_on_outliers() {
+        // heavy-tailed (Laplace) activations: clipping the rare extreme
+        // buys resolution for the bulk — the paper's motivation for c
+        let mut rng = Rng::new(11);
+        let mut x = Mat::zeros(256, 64);
+        for i in 0..256 {
+            for j in 0..64 {
+                let u = rng.uniform().max(1e-12);
+                let sign = if rng.uniform() < 0.5 { -1.0 } else { 1.0 };
+                x[(i, j)] = sign * (-u.ln()); // Laplace(0,1)
+            }
+        }
+        let c = search_act_clip(&x, 4, None);
+        assert!(c < 1.0, "clip {c}");
+        // and the returned c is the grid argmin (definition check)
+        let err_c = x.sub(&act_quantize(&x, 4, c, None)).frob_norm();
+        let err_1 = x.sub(&act_quantize(&x, 4, 1.0, None)).frob_norm();
+        assert!(err_c <= err_1);
+    }
+
+    #[test]
+    fn identity_when_high_bits() {
+        let x = Mat::random_normal(&mut Rng::new(2), 8, 8);
+        let y = act_quantize(&x, 16, 1.0, None);
+        assert!(x.sub(&y).max_abs() < 1e-3);
+    }
+}

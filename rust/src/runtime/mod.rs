@@ -1,0 +1,399 @@
+//! PJRT runtime — loads the AOT artifacts (HLO text + tensor bundles) and
+//! executes them on the CPU PJRT client.  Python never runs here: this is
+//! the production path.
+//!
+//! * [`TensorBundle`] — the shared f32 bundle format (manifest.json +
+//!   flat little-endian bin), written by python *and* by the rust
+//!   quantization pipeline.
+//! * [`ModelArtifacts`] — one model directory: weights + graph registry.
+//! * [`Engine`] — compiles HLO text once per graph, caches executables.
+//! * [`Session`] — a compiled graph with its fixed parameters pre-uploaded
+//!   as device buffers; per-call uploads are only the variable inputs
+//!   (tokens).  This is the hot serving path.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::Json;
+
+// ---------------------------------------------------------------------------
+// tensor bundles
+// ---------------------------------------------------------------------------
+
+/// A named f32 tensor.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Manifest + bin pair (format "lrc-bundle-v1").
+#[derive(Clone, Debug, Default)]
+pub struct TensorBundle {
+    pub tensors: BTreeMap<String, Tensor>,
+    /// tensor names in manifest order
+    pub order: Vec<String>,
+    pub meta: Option<Json>,
+}
+
+impl TensorBundle {
+    pub fn load(dir: &Path) -> Result<TensorBundle> {
+        let man_path = dir.join("manifest.json");
+        let man = Json::parse(&std::fs::read_to_string(&man_path)
+            .with_context(|| format!("read {man_path:?}"))?)
+            .map_err(|e| anyhow!("parse {man_path:?}: {e}"))?;
+        let fmt = man.get("format").and_then(|f| f.as_str()).unwrap_or("");
+        if fmt != "lrc-bundle-v1" {
+            bail!("unsupported bundle format {fmt:?} in {man_path:?}");
+        }
+        let bin_name = man.get("bin").and_then(|b| b.as_str()).unwrap_or("weights.bin");
+        let bytes = std::fs::read(dir.join(bin_name))
+            .with_context(|| format!("read {:?}", dir.join(bin_name)))?;
+        let mut tensors = BTreeMap::new();
+        let mut order = Vec::new();
+        for t in man.get("tensors").and_then(|t| t.as_arr()).unwrap_or(&[]) {
+            let name = t.get("name").and_then(|n| n.as_str())
+                .ok_or_else(|| anyhow!("tensor missing name"))?.to_string();
+            let shape: Vec<usize> = t.get("shape").and_then(|s| s.as_arr())
+                .ok_or_else(|| anyhow!("tensor {name} missing shape"))?
+                .iter().filter_map(|v| v.as_usize()).collect();
+            let offset = t.get("offset").and_then(|o| o.as_usize())
+                .ok_or_else(|| anyhow!("tensor {name} missing offset"))?;
+            let numel: usize = shape.iter().product();
+            let start = offset * 4;
+            let end = start + numel * 4;
+            if end > bytes.len() {
+                bail!("tensor {name} out of range in {bin_name}");
+            }
+            let data: Vec<f32> = bytes[start..end]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            order.push(name.clone());
+            tensors.insert(name, Tensor { shape, data });
+        }
+        Ok(TensorBundle { tensors, order, meta: Some(man) })
+    }
+
+    /// Write in the same format python emits (so both sides interchange).
+    pub fn write(&self, dir: &Path, extra: &[(&str, Json)]) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mut bin: Vec<u8> = Vec::new();
+        let mut table = Vec::new();
+        let mut offset = 0usize;
+        for name in &self.order {
+            let t = &self.tensors[name];
+            for v in &t.data {
+                bin.extend_from_slice(&v.to_le_bytes());
+            }
+            table.push(Json::obj(vec![
+                ("name", Json::str(name.clone())),
+                ("shape", Json::Arr(t.shape.iter().map(|&s| Json::num(s as f64)).collect())),
+                ("offset", Json::num(offset as f64)),
+            ]));
+            offset += t.numel();
+        }
+        std::fs::write(dir.join("weights.bin"), &bin)?;
+        let mut pairs = vec![
+            ("format", Json::str("lrc-bundle-v1")),
+            ("bin", Json::str("weights.bin")),
+            ("tensors", Json::Arr(table)),
+        ];
+        pairs.extend(extra.iter().cloned());
+        std::fs::write(dir.join("manifest.json"), Json::obj(pairs).to_string())?;
+        Ok(())
+    }
+
+    pub fn insert(&mut self, name: &str, shape: Vec<usize>, data: Vec<f32>) {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        if !self.tensors.contains_key(name) {
+            self.order.push(name.to_string());
+        }
+        self.tensors.insert(name.to_string(), Tensor { shape, data });
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors.get(name).ok_or_else(|| anyhow!("missing tensor {name}"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// graph registry
+// ---------------------------------------------------------------------------
+
+/// Per-activation slice of the `acts` graph output.
+#[derive(Clone, Debug)]
+pub struct ActSlice {
+    pub name: String,
+    pub rows: usize,
+    pub dim: usize,
+    pub offset: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct GraphInfo {
+    pub name: String,
+    pub file: PathBuf,
+    pub params: Vec<String>,
+    pub batch: usize,
+    /// per-layer low-rank sizes (quant graphs only)
+    pub ranks: BTreeMap<String, usize>,
+    pub rank_pct: f64,
+    pub a_group: Option<usize>,
+    pub weight_only: bool,
+    pub acts: Vec<ActSlice>,
+}
+
+/// Model config parsed from the weights manifest.
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_experts: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub param_count: usize,
+}
+
+/// One model directory under artifacts/models/<name>/.
+pub struct ModelArtifacts {
+    pub dir: PathBuf,
+    pub weights: TensorBundle,
+    pub graphs: BTreeMap<String, GraphInfo>,
+    pub info: ModelInfo,
+}
+
+impl ModelArtifacts {
+    pub fn load(dir: &Path) -> Result<ModelArtifacts> {
+        let weights = TensorBundle::load(dir)?;
+        let meta = weights.meta.clone().unwrap();
+        let m = meta.get("model").ok_or_else(|| anyhow!("manifest missing model"))?;
+        let gu = |k: &str| m.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+        let info = ModelInfo {
+            name: m.get("name").and_then(|v| v.as_str()).unwrap_or("?").into(),
+            d_model: gu("d_model"),
+            n_layers: gu("n_layers"),
+            n_heads: gu("n_heads"),
+            d_ff: gu("d_ff"),
+            n_experts: gu("n_experts"),
+            seq_len: gu("seq_len"),
+            vocab: gu("vocab"),
+            param_count: gu("param_count"),
+        };
+        let gpath = dir.join("graphs.json");
+        let gjson = Json::parse(&std::fs::read_to_string(&gpath)
+            .with_context(|| format!("read {gpath:?}"))?)
+            .map_err(|e| anyhow!("parse graphs.json: {e}"))?;
+        let mut graphs = BTreeMap::new();
+        for (name, g) in gjson.get("graphs").and_then(|g| g.as_obj())
+            .ok_or_else(|| anyhow!("graphs.json missing graphs"))? {
+            let params = g.get("params").and_then(|p| p.as_arr()).unwrap_or(&[])
+                .iter().filter_map(|v| v.as_str().map(String::from)).collect();
+            let mut ranks = BTreeMap::new();
+            let mut rank_pct = 0.0;
+            let mut a_group = None;
+            let mut weight_only = false;
+            if let Some(q) = g.get("quant") {
+                rank_pct = q.get("rank_pct").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                a_group = q.get("a_group").and_then(|v| v.as_usize());
+                weight_only = matches!(q.get("weight_only"),
+                                       Some(Json::Bool(true)));
+                if let Some(r) = q.get("ranks").and_then(|r| r.as_obj()) {
+                    for (k, v) in r {
+                        ranks.insert(k.clone(), v.as_usize().unwrap_or(0));
+                    }
+                }
+            }
+            let mut acts = Vec::new();
+            if let Some(a) = g.get("acts").and_then(|a| a.as_arr()) {
+                for s in a {
+                    acts.push(ActSlice {
+                        name: s.get("name").and_then(|v| v.as_str()).unwrap_or("").into(),
+                        rows: s.get("rows").and_then(|v| v.as_usize()).unwrap_or(0),
+                        dim: s.get("dim").and_then(|v| v.as_usize()).unwrap_or(0),
+                        offset: s.get("offset").and_then(|v| v.as_usize()).unwrap_or(0),
+                    });
+                }
+            }
+            graphs.insert(name.clone(), GraphInfo {
+                name: name.clone(),
+                file: dir.join(g.get("file").and_then(|f| f.as_str()).unwrap_or("")),
+                params,
+                batch: g.get("batch").and_then(|b| b.as_usize()).unwrap_or(1),
+                ranks, rank_pct, a_group, weight_only, acts,
+            });
+        }
+        Ok(ModelArtifacts { dir: dir.to_path_buf(), weights, graphs, info })
+    }
+
+    pub fn graph(&self, name: &str) -> Result<&GraphInfo> {
+        self.graphs.get(name)
+            .ok_or_else(|| anyhow!("graph {name} not in {:?}", self.dir))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// engine + sessions
+// ---------------------------------------------------------------------------
+
+/// The PJRT engine.  NOTE: PJRT handles are not Send — create one Engine
+/// per thread (the coordinator does exactly that in its worker).
+pub struct Engine {
+    pub client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        Ok(Engine { client: xla::PjRtClient::cpu()? })
+    }
+
+    /// Compile an HLO-text file into an executable.
+    pub fn compile_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+
+    /// Build a [`Session`]: resolve every fixed parameter of `graph` from
+    /// the given bundles and pre-upload them as device buffers.
+    ///
+    /// Resolution rules (see python/compile/aot.py):
+    ///   "fp:<t>"          → weights bundle tensor <t>
+    ///   "q:<layer>:<p>"   → quant bundle tensor "<layer>.<p>"
+    ///   "tokens"          → per-call variable (i32)
+    pub fn session(&self, arts: &ModelArtifacts, graph: &str,
+                   quant: Option<&TensorBundle>) -> Result<Session> {
+        let g = arts.graph(graph)?;
+        let exe = self.compile_file(&g.file)?;
+        let mut fixed = Vec::new();
+        let mut token_idx = None;
+        for (i, p) in g.params.iter().enumerate() {
+            if p == "tokens" {
+                token_idx = Some(i);
+                fixed.push(None);
+            } else if let Some(t) = p.strip_prefix("fp:") {
+                let tensor = arts.weights.get(t)?;
+                fixed.push(Some(self.upload_f32(tensor)?));
+            } else if let Some(rest) = p.strip_prefix("q:") {
+                let (layer, part) = rest.rsplit_once(':')
+                    .ok_or_else(|| anyhow!("bad q param {p}"))?;
+                let qb = quant.ok_or_else(|| anyhow!(
+                    "graph {graph} needs a quant bundle (param {p})"))?;
+                let tensor = qb.get(&format!("{layer}.{part}"))?;
+                fixed.push(Some(self.upload_f32(tensor)?));
+            } else {
+                bail!("unknown param kind {p} in graph {graph}");
+            }
+        }
+        let token_idx = token_idx.ok_or_else(|| anyhow!("graph {graph} has no tokens param"))?;
+        Ok(Session {
+            exe,
+            client: self.client.clone(),
+            fixed,
+            token_idx,
+            batch: g.batch,
+            seq_len: arts.info.seq_len,
+            vocab: arts.info.vocab,
+            acts: g.acts.clone(),
+        })
+    }
+
+    pub fn upload_f32(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(&t.data, &t.shape, None)?)
+    }
+}
+
+/// A compiled graph with pre-uploaded fixed parameters.  `run` uploads only
+/// the token block — this is the request hot path.
+pub struct Session {
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+    fixed: Vec<Option<xla::PjRtBuffer>>,
+    token_idx: usize,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub acts: Vec<ActSlice>,
+}
+
+impl Session {
+    /// Execute on a [batch, seq_len] token block; returns the flat f32
+    /// output (logits or the concatenated acts vector).
+    pub fn run(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        if tokens.len() != self.batch * self.seq_len {
+            bail!("token block {} != {}x{}", tokens.len(), self.batch,
+                  self.seq_len);
+        }
+        let tok_buf = self.client.buffer_from_host_buffer(
+            tokens, &[self.batch, self.seq_len], None)?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.fixed.len());
+        for (i, f) in self.fixed.iter().enumerate() {
+            if i == self.token_idx {
+                args.push(&tok_buf);
+            } else {
+                args.push(f.as_ref().expect("fixed param"));
+            }
+        }
+        let out = self.exe.execute_b(&args)?;
+        let lit = out[0][0].to_literal_sync()?.to_tuple1()?;
+        Ok(lit.to_vec::<f32>()?)
+    }
+}
+
+/// LogitsProvider over a Session (forward graphs).
+pub struct SessionProvider {
+    pub session: Session,
+}
+
+impl crate::eval::LogitsProvider for SessionProvider {
+    fn batch(&self) -> usize {
+        self.session.batch
+    }
+    fn seq_len(&self) -> usize {
+        self.session.seq_len
+    }
+    fn vocab(&self) -> usize {
+        self.session.vocab
+    }
+    fn logits(&mut self, tokens: &[i32]) -> Result<Vec<f32>, String> {
+        self.session.run(tokens).map_err(|e| e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bundle_write_load_roundtrip() {
+        let dir = std::env::temp_dir().join("lrc_bundle_test");
+        let mut b = TensorBundle::default();
+        b.insert("a", vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        b.insert("b.c", vec![4], vec![-1.0, 0.5, 0.0, 9.25]);
+        b.write(&dir, &[("kind", Json::str("quant"))]).unwrap();
+        let back = TensorBundle::load(&dir).unwrap();
+        assert_eq!(back.order, vec!["a".to_string(), "b.c".to_string()]);
+        assert_eq!(back.get("a").unwrap().shape, vec![2, 3]);
+        assert_eq!(back.get("b.c").unwrap().data, vec![-1.0, 0.5, 0.0, 9.25]);
+        assert_eq!(back.meta.unwrap().get("kind").unwrap().as_str(), Some("quant"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bundle_missing_tensor_errors() {
+        let b = TensorBundle::default();
+        assert!(b.get("nope").is_err());
+    }
+}

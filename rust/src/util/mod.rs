@@ -1,0 +1,131 @@
+//! Small no-dependency utilities: JSON, CLI args, table printing.
+
+pub mod json;
+
+pub use json::Json;
+
+/// Dead-simple `--key value` / `--flag` argument parser for the CLI and
+/// bench targets (no clap offline).
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: std::collections::BTreeMap<String, String>,
+    pub flags: std::collections::BTreeSet<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.insert(name.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains(key)
+    }
+}
+
+/// Render an aligned text table (paper-style rows for the bench harness).
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let line = |out: &mut String, cells: &[String]| {
+        out.push('|');
+        for (i, c) in cells.iter().enumerate().take(ncol) {
+            out.push(' ');
+            out.push_str(c);
+            out.push_str(&" ".repeat(widths[i] - c.len() + 1));
+            out.push('|');
+        }
+        out.push('\n');
+    };
+    line(&mut out, &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    out.push('|');
+    for w in &widths {
+        out.push_str(&"-".repeat(w + 2));
+        out.push('|');
+    }
+    out.push('\n');
+    for row in rows {
+        line(&mut out, row);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn args_forms() {
+        let a = Args::parse(
+            ["run", "--model", "small", "--fast", "--pct=10"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.get("model"), Some("small"));
+        assert_eq!(a.get("pct"), Some("10"));
+        assert!(a.has("fast"));
+        assert_eq!(a.get_usize("missing", 7), 7);
+    }
+
+    #[test]
+    fn negative_option_value() {
+        let a = Args::parse(["--x", "-3"].iter().map(|s| s.to_string()));
+        assert_eq!(a.get_f64("x", 0.0), -3.0);
+    }
+
+    #[test]
+    fn table_renders() {
+        let t = render_table(&["Method", "PPL"],
+                             &[vec!["FP16".into(), "6.01".into()],
+                               vec!["LRC (1)".into(), "7.26".into()]]);
+        assert!(t.contains("| Method "));
+        assert!(t.contains("| LRC (1) "));
+    }
+}

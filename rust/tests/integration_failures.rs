@@ -1,0 +1,127 @@
+//! Failure injection: corrupted artifacts must fail loudly and precisely,
+//! never silently misalign (the positional param contract makes silent
+//! corruption the worst failure mode of this architecture).
+
+use lrc::runtime::{Engine, ModelArtifacts, TensorBundle};
+use lrc::util::Json;
+use std::path::PathBuf;
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("lrc_fail_{name}"));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn truncated_bin_rejected() {
+    let d = tmpdir("trunc");
+    let mut b = TensorBundle::default();
+    b.insert("w", vec![4, 4], vec![0.5; 16]);
+    b.write(&d, &[]).unwrap();
+    // truncate the bin
+    let bin = d.join("weights.bin");
+    let bytes = std::fs::read(&bin).unwrap();
+    std::fs::write(&bin, &bytes[..bytes.len() - 8]).unwrap();
+    let err = TensorBundle::load(&d).unwrap_err().to_string();
+    assert!(err.contains("out of range"), "{err}");
+}
+
+#[test]
+fn wrong_format_rejected() {
+    let d = tmpdir("fmt");
+    std::fs::write(d.join("manifest.json"),
+                   r#"{"format":"other-v9","tensors":[]}"#).unwrap();
+    std::fs::write(d.join("weights.bin"), b"").unwrap();
+    let err = TensorBundle::load(&d).unwrap_err().to_string();
+    assert!(err.contains("unsupported bundle format"), "{err}");
+}
+
+#[test]
+fn malformed_manifest_rejected() {
+    let d = tmpdir("json");
+    std::fs::write(d.join("manifest.json"), "{not json").unwrap();
+    assert!(TensorBundle::load(&d).is_err());
+}
+
+#[test]
+fn missing_quant_bundle_is_explicit() {
+    // a quant graph session without a quant bundle must explain itself
+    let art = lrc::artifacts_dir();
+    let mdir = art.join("models/nano");
+    if !mdir.is_dir() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let arts = ModelArtifacts::load(&mdir).unwrap();
+    let err = match engine.session(&arts, "fwd_w4a4_r10_b8", None) {
+        Ok(_) => panic!("session should have failed"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("needs a quant bundle"), "{err}");
+}
+
+#[test]
+fn unknown_graph_is_explicit() {
+    let art = lrc::artifacts_dir();
+    let mdir = art.join("models/nano");
+    if !mdir.is_dir() {
+        return;
+    }
+    let arts = ModelArtifacts::load(&mdir).unwrap();
+    let err = arts.graph("fwd_nonexistent").unwrap_err().to_string();
+    assert!(err.contains("fwd_nonexistent"), "{err}");
+}
+
+#[test]
+fn quant_bundle_with_missing_tensor_is_explicit() {
+    let art = lrc::artifacts_dir();
+    let mdir = art.join("models/nano");
+    if !mdir.is_dir() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let arts = ModelArtifacts::load(&mdir).unwrap();
+    // bundle with only one tensor: session must name the missing one
+    let mut b = TensorBundle::default();
+    b.insert("blk0.wq.wq", vec![1], vec![0.0]);
+    let err = match engine.session(&arts, "fwd_w4a4_r10_b8", Some(&b)) {
+        Ok(_) => panic!("session should have failed"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("missing tensor"), "{err}");
+}
+
+#[test]
+fn wrong_token_count_rejected() {
+    let art = lrc::artifacts_dir();
+    let mdir = art.join("models/nano");
+    if !mdir.is_dir() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let arts = ModelArtifacts::load(&mdir).unwrap();
+    let session = engine.session(&arts, "fwd_fp_b1", None).unwrap();
+    let err = session.run(&[1, 2, 3]).unwrap_err().to_string();
+    assert!(err.contains("token block"), "{err}");
+}
+
+#[test]
+fn json_parser_fuzz_does_not_panic() {
+    // byte-mutation fuzz over a valid manifest: parser must return
+    // Ok or Err, never panic
+    let base = r#"{"format":"lrc-bundle-v1","tensors":[{"name":"a","shape":[2,3],"offset":0}],"x":[1,2.5,-3e4,true,null,"s\n"]}"#;
+    let mut rng = lrc::rng::Rng::new(99);
+    for _ in 0..2000 {
+        let mut bytes = base.as_bytes().to_vec();
+        let n_mut = 1 + rng.below(4);
+        for _ in 0..n_mut {
+            let i = rng.below(bytes.len());
+            bytes[i] = (rng.next_u64() & 0x7f) as u8;
+        }
+        if let Ok(s) = String::from_utf8(bytes) {
+            let _ = Json::parse(&s); // must not panic
+        }
+    }
+}

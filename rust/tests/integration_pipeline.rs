@@ -1,0 +1,169 @@
+//! Integration: the full native PTQ pipeline (calibrate → quantize →
+//! bundle → evaluate) and the serving coordinator, against real artifacts.
+//! Skips loudly when `make artifacts` hasn't run.
+
+use std::time::Duration;
+
+use lrc::coordinator::{BatchPolicy, ServerConfig, ServerHandle};
+use lrc::data::Corpus;
+use lrc::experiments::{self, EvalBudget};
+use lrc::pipeline::{collect_stats, quantize_model, Method};
+use lrc::quant::QuantConfig;
+use lrc::runtime::{Engine, ModelArtifacts};
+
+fn setup() -> Option<(Engine, ModelArtifacts, Corpus)> {
+    let art = lrc::artifacts_dir();
+    let mdir = art.join("models/nano");
+    if !mdir.is_dir() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return None;
+    }
+    let engine = Engine::cpu().unwrap();
+    let arts = ModelArtifacts::load(&mdir).unwrap();
+    let corpus = Corpus::load(&art.join("corpus/wiki_syn.txt")).unwrap();
+    Some((engine, arts, corpus))
+}
+
+#[test]
+fn calibration_stats_cover_all_layers() {
+    let Some((engine, arts, corpus)) = setup() else { return };
+    let calib = collect_stats(&engine, &arts, &corpus, 16, 1, Some(4), None)
+        .unwrap();
+    for layer in lrc::pipeline::quantized_layer_names(&arts.info) {
+        let src = lrc::pipeline::activation_source(&layer);
+        let st = calib.stats.get(&src).unwrap_or_else(
+            || panic!("no stats for {src}"));
+        assert!(st.n >= 16 * arts.info.seq_len);
+        // Σx must be PD after regularization
+        let (sx, sy, _) = st.regularized();
+        assert!(lrc::linalg::cholesky(&sx).is_ok(), "{src} Σx not PD");
+        assert!(lrc::linalg::cholesky(&sy).is_ok(), "{src} Σy not PD");
+    }
+}
+
+#[test]
+fn lrc_pipeline_beats_quarot_end_to_end() {
+    // the headline claim, as an automated integration test on nano:
+    // PPL(fp) < PPL(lrc@10%) < PPL(quarot)
+    let Some((engine, arts, corpus)) = setup() else { return };
+    let budget = EvalBudget { ppl_seqs: 16, task_items: 8 };
+    let tasks = experiments::load_tasks(&lrc::artifacts_dir(), budget).unwrap();
+
+    let calib = collect_stats(&engine, &arts, &corpus, 64, 1234, Some(4),
+                              None).unwrap();
+    let cfg = QuantConfig::default();
+
+    let g_lrc = arts.graph("fwd_w4a4_r10_b8").unwrap().clone();
+    let (b_lrc, _) = quantize_model(&arts, &calib, &g_lrc, Method::Lrc, &cfg)
+        .unwrap();
+    let g_q = arts.graph("fwd_w4a4_r0_b8").unwrap().clone();
+    let (b_q, _) = quantize_model(&arts, &calib, &g_q, Method::Quarot, &cfg)
+        .unwrap();
+
+    let fp = experiments::evaluate_graph(&engine, &arts, "fwd_fp_b8", None,
+                                         &corpus, &tasks, budget, "fp")
+        .unwrap();
+    let lrc_s = experiments::evaluate_graph(&engine, &arts, "fwd_w4a4_r10_b8",
+                                            Some(&b_lrc), &corpus, &tasks,
+                                            budget, "lrc").unwrap();
+    let q_s = experiments::evaluate_graph(&engine, &arts, "fwd_w4a4_r0_b8",
+                                          Some(&b_q), &corpus, &tasks,
+                                          budget, "quarot").unwrap();
+    assert!(fp.ppl < lrc_s.ppl, "fp {} !< lrc {}", fp.ppl, lrc_s.ppl);
+    assert!(lrc_s.ppl < q_s.ppl, "lrc {} !< quarot {}", lrc_s.ppl, q_s.ppl);
+}
+
+#[test]
+fn quant_bundle_shapes_match_graph() {
+    let Some((engine, arts, corpus)) = setup() else { return };
+    let calib = collect_stats(&engine, &arts, &corpus, 8, 7, Some(4), None)
+        .unwrap();
+    let g = arts.graph("fwd_w4a4_r10_b8").unwrap().clone();
+    let (bundle, report) =
+        quantize_model(&arts, &calib, &g, Method::Svd, &QuantConfig::default())
+            .unwrap();
+    for layer in lrc::pipeline::quantized_layer_names(&arts.info) {
+        let w = arts.weights.get(&layer).unwrap();
+        let wq = bundle.get(&format!("{layer}.wq")).unwrap();
+        assert_eq!(w.shape, wq.shape);
+        let k = g.ranks[&layer];
+        let u = bundle.get(&format!("{layer}.u")).unwrap();
+        assert_eq!(u.shape, vec![w.shape[0], k]);
+        let v = bundle.get(&format!("{layer}.v")).unwrap();
+        assert_eq!(v.shape, vec![w.shape[1], k]);
+        let clip = bundle.get(&format!("{layer}.clip")).unwrap();
+        assert_eq!(clip.shape, vec![1]);
+        assert!(clip.data[0] > 0.0 && clip.data[0] <= 1.0);
+    }
+    assert!(report.packed_bytes > 0);
+    assert!(report.lowrank_params > 0);
+}
+
+#[test]
+fn weight_only_pipeline_near_lossless() {
+    // Table-3 regime: W4, Qa = id — PPL within a whisker of fp
+    let Some((engine, arts, corpus)) = setup() else { return };
+    let budget = EvalBudget { ppl_seqs: 16, task_items: 8 };
+    let tasks = experiments::load_tasks(&lrc::artifacts_dir(), budget).unwrap();
+    let calib = collect_stats(&engine, &arts, &corpus, 32, 5, None, None)
+        .unwrap();
+    let cfg = QuantConfig { a_bits: None, ..Default::default() };
+    let g = arts.graph("fwd_w4_r0_b8").unwrap().clone();
+    let (bundle, _) = quantize_model(&arts, &calib, &g, Method::Quarot, &cfg)
+        .unwrap();
+    let fp = experiments::evaluate_graph(&engine, &arts, "fwd_fp_b8", None,
+                                         &corpus, &tasks, budget, "fp")
+        .unwrap();
+    let w4 = experiments::evaluate_graph(&engine, &arts, "fwd_w4_r0_b8",
+                                         Some(&bundle), &corpus, &tasks,
+                                         budget, "w4").unwrap();
+    assert!(w4.ppl < fp.ppl * 1.10,
+            "weight-only not near-lossless: {} vs {}", w4.ppl, fp.ppl);
+}
+
+#[test]
+fn coordinator_serves_fp_graph() {
+    let Some((_, _, corpus)) = setup() else { return };
+    let handle = ServerHandle::start(ServerConfig {
+        model_dir: lrc::artifacts_dir().join("models/nano"),
+        graph_prefix: "fwd_fp".into(),
+        quant_dir: None,
+        policy: BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            max_queue: 256,
+        },
+    })
+    .unwrap();
+    let seqs = corpus.eval_sequences(handle.seq_len, 24);
+    let mut rxs = Vec::new();
+    for s in &seqs {
+        rxs.push(handle.submit(s.clone()).unwrap());
+    }
+    let mut ids = Vec::new();
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert!(resp.mean_nll.is_finite() && resp.mean_nll > 0.0);
+        ids.push(resp.id);
+    }
+    assert_eq!(ids.len(), seqs.len());
+    let snap = handle.shutdown();
+    assert_eq!(snap.requests, seqs.len() as u64);
+    assert_eq!(snap.errors, 0);
+    // per-seq NLL from the server should be near corpus-level quality
+    assert!(snap.batches >= (seqs.len() as u64) / 8);
+}
+
+#[test]
+fn coordinator_rejects_bad_seq_len() {
+    let Some(_) = setup() else { return };
+    let handle = ServerHandle::start(ServerConfig {
+        model_dir: lrc::artifacts_dir().join("models/nano"),
+        graph_prefix: "fwd_fp".into(),
+        quant_dir: None,
+        policy: BatchPolicy::default(),
+    })
+    .unwrap();
+    assert!(handle.submit(vec![1, 2, 3]).is_err());
+    handle.shutdown();
+}

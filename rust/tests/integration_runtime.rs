@@ -1,0 +1,118 @@
+//! Integration: the PJRT runtime executes the AOT artifacts and reproduces
+//! the JAX goldens bit-for-bit (within f32 tolerance) — the cross-language
+//! contract of the whole three-layer stack.
+//!
+//! Requires `make artifacts` (skips, loudly, when artifacts are missing).
+
+use lrc::runtime::{Engine, ModelArtifacts, TensorBundle};
+use lrc::util::Json;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = lrc::artifacts_dir();
+    if dir.join("models").is_dir() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {dir:?} (run `make artifacts`)");
+        None
+    }
+}
+
+fn load_golden(path: &std::path::Path) -> (String, Vec<i32>, Vec<f64>, f64, f64) {
+    let g = Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+    let graph = g.get("graph").unwrap().as_str().unwrap().to_string();
+    let tokens: Vec<i32> = g.get("tokens").unwrap().as_arr().unwrap()
+        .iter().map(|v| v.as_f64().unwrap() as i32).collect();
+    let l = g.get("logits").unwrap();
+    let head: Vec<f64> = l.get("head").unwrap().as_arr().unwrap()
+        .iter().map(|v| v.as_f64().unwrap()).collect();
+    let sum = l.get("sum").unwrap().as_f64().unwrap();
+    let abs_sum = l.get("abs_sum").unwrap().as_f64().unwrap();
+    (graph, tokens, head, sum, abs_sum)
+}
+
+fn check_golden(model: &str, golden_file: &str, quant_subdir: Option<&str>) {
+    let Some(art) = artifacts() else { return };
+    let mdir = art.join("models").join(model);
+    if !mdir.is_dir() {
+        eprintln!("SKIP: model {model} not exported");
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let arts = ModelArtifacts::load(&mdir).unwrap();
+    let (graph, tokens, head, sum, abs_sum) =
+        load_golden(&mdir.join(golden_file));
+    let quant = quant_subdir.map(|d| TensorBundle::load(&mdir.join(d)).unwrap());
+    let session = engine.session(&arts, &graph, quant.as_ref()).unwrap();
+    let out = session.run(&tokens).unwrap();
+
+    // head comparison, element-wise
+    let mut max_err = 0.0_f64;
+    for (i, &g) in head.iter().enumerate() {
+        max_err = max_err.max((out[i] as f64 - g).abs());
+    }
+    // global digests
+    let osum: f64 = out.iter().map(|&v| v as f64).sum();
+    let oabs: f64 = out.iter().map(|&v| (v as f64).abs()).sum();
+    let scale = abs_sum / out.len() as f64; // typical magnitude
+    assert!(max_err < 5e-3 * scale.max(1.0),
+            "{model}/{graph}: head max err {max_err}");
+    assert!((osum - sum).abs() / abs_sum.max(1.0) < 1e-4,
+            "{model}/{graph}: sum {osum} vs golden {sum}");
+    assert!((oabs - abs_sum).abs() / abs_sum.max(1.0) < 1e-4,
+            "{model}/{graph}: abs_sum {oabs} vs golden {abs_sum}");
+}
+
+#[test]
+fn fp_golden_nano() {
+    check_golden("nano", "golden_fp.json", None);
+}
+
+#[test]
+fn fp_golden_small() {
+    check_golden("small", "golden_fp.json", None);
+}
+
+#[test]
+fn fp_golden_moe() {
+    check_golden("moe", "golden_fp.json", None);
+}
+
+#[test]
+fn quant_golden_nano() {
+    check_golden("nano", "golden_quant.json", Some("golden_quant"));
+}
+
+#[test]
+fn quant_golden_small() {
+    check_golden("small", "golden_quant.json", Some("golden_quant"));
+}
+
+#[test]
+fn quant_golden_moe() {
+    check_golden("moe", "golden_quant.json", Some("golden_quant"));
+}
+
+#[test]
+fn acts_graph_shapes() {
+    let Some(art) = artifacts() else { return };
+    let mdir = art.join("models").join("nano");
+    if !mdir.is_dir() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let arts = ModelArtifacts::load(&mdir).unwrap();
+    let session = engine.session(&arts, "acts_b8", None).unwrap();
+    let tokens: Vec<i32> = (0..8 * arts.info.seq_len)
+        .map(|i| (i % 251) as i32)
+        .collect();
+    let out = session.run(&tokens).unwrap();
+    let total: usize = session.acts.iter().map(|a| a.rows * a.dim).sum();
+    assert_eq!(out.len(), total + 1); // +1 logits checksum element
+    // every activation slice should be finite and non-degenerate
+    for a in &session.acts {
+        let seg = &out[a.offset..a.offset + a.rows * a.dim];
+        assert!(seg.iter().all(|v| v.is_finite()), "{} not finite", a.name);
+        let energy: f64 = seg.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        assert!(energy > 0.0, "{} all zeros", a.name);
+    }
+}
