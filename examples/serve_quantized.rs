@@ -3,7 +3,7 @@
 //! latency/throughput — the serving-paper e2e driver.
 //!
 //!   cargo run --release --example serve_quantized -- [--requests 128]
-//!       [--concurrency 16] [--max-wait-ms 5] [--fp]
+//!       [--concurrency 16] [--max-wait-ms 5] [--workers 1] [--fp]
 //!
 //! Compares the W4A4+LRC pipeline against the FP16 graph under identical
 //! traffic (open-loop batch of closed-loop clients).
@@ -58,6 +58,7 @@ fn main() -> Result<()> {
     let args = Args::from_env();
     let n_requests = args.get_usize("requests", 128);
     let concurrency = args.get_usize("concurrency", 16);
+    let workers = args.get_usize("workers", 1);
     let art = lrc::artifacts_dir();
     let model_dir = art.join("models/small");
 
@@ -97,6 +98,7 @@ fn main() -> Result<()> {
             graph_prefix: prefix,
             quant_dir: quant,
             policy: policy.clone(),
+            workers,
         })?);
         let seqs = corpus.eval_sequences(handle.seq_len, 64);
         drive(handle.clone(), seqs, n_requests, concurrency)?;

@@ -2,7 +2,8 @@
 //! (no PJRT), and end-to-end serving latency/throughput under load for
 //! the FP16 and W4A4+LRC graphs.
 //!
-//!   cargo bench --bench bench_coordinator [-- --requests 96 --skip-e2e]
+//!   cargo bench --bench bench_coordinator [-- --requests 96 --workers 1
+//!       --skip-e2e]
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -50,7 +51,7 @@ fn bench_batcher_only() {
               {:.2} µs/request", n as f64 / dt, dt * 1e6 / n as f64);
 }
 
-fn bench_serving(requests: usize) -> anyhow::Result<()> {
+fn bench_serving(requests: usize, workers: usize) -> anyhow::Result<()> {
     let art = lrc::artifacts_dir();
     let model_dir = art.join("models/small");
     let quant_dir = model_dir.join("quant/LRC1_fwd_w4a4_r10_b8");
@@ -73,6 +74,7 @@ fn bench_serving(requests: usize) -> anyhow::Result<()> {
             graph_prefix: prefix,
             quant_dir: quant,
             policy: BatchPolicy::default(),
+            workers,
         })?;
         let seqs = corpus.eval_sequences(handle.seq_len, 32);
         let mut rxs = Vec::new();
@@ -91,7 +93,8 @@ fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     bench_batcher_only();
     if !args.has("skip-e2e") {
-        bench_serving(args.get_usize("requests", 96))?;
+        bench_serving(args.get_usize("requests", 96),
+                      args.get_usize("workers", 1))?;
     }
     Ok(())
 }

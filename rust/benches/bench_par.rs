@@ -1,0 +1,121 @@
+//! Thread-pool scaling benchmarks — the §Perf substrate for the `par`
+//! subsystem: par_* linalg kernels and the per-layer quantization
+//! fan-out at 1/2/4/all threads, reporting speedup over serial.
+//!
+//! Acceptance shape: on a 4+ core host the per-layer fan-out should show
+//! ≥ 2× at 4 threads (the layer solves are embarrassingly parallel; the
+//! kernels scale until memory bandwidth bites).
+//!
+//!   cargo bench --bench bench_par [-- --samples 5 --dim 256 --layers 12]
+
+use lrc::bench::{bench, bench_report, section, speedup};
+use lrc::linalg::Mat;
+use lrc::lrc::{lrc, LayerStats};
+use lrc::par::Pool;
+use lrc::quant::QuantConfig;
+use lrc::rng::Rng;
+use lrc::util::Args;
+
+fn thread_counts() -> Vec<usize> {
+    let all = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut out = vec![1, 2, 4];
+    if !out.contains(&all) {
+        out.push(all);
+    }
+    out.retain(|&t| t <= all.max(4));
+    out
+}
+
+fn bench_kernels(samples: usize, d: usize) {
+    let mut rng = Rng::new(1);
+    let a = Mat::random_normal(&mut rng, d, d);
+    let b = Mat::random_normal(&mut rng, d, d);
+
+    section(&format!("par_matmul_nt {d}x{d} (speedup vs 1 thread)"));
+    let base = bench(1, samples, || {
+        let _ = a.par_matmul_nt(&b, &Pool::new(1));
+    });
+    println!("{:<40} {:>12}", "threads=1", base.pm());
+    for t in thread_counts().into_iter().skip(1) {
+        let pool = Pool::new(t);
+        let s = bench(1, samples, || {
+            let _ = a.par_matmul_nt(&b, &pool);
+        });
+        println!("{:<40} {:>12}  → {:.2}x", format!("threads={t}"), s.pm(),
+                 speedup(&base, &s));
+    }
+
+    section(&format!("par_gram_t {d}x{d}"));
+    let base = bench(1, samples, || {
+        let _ = a.par_gram_t(&Pool::new(1));
+    });
+    println!("{:<40} {:>12}", "threads=1", base.pm());
+    for t in thread_counts().into_iter().skip(1) {
+        let pool = Pool::new(t);
+        let s = bench(1, samples, || {
+            let _ = a.par_gram_t(&pool);
+        });
+        println!("{:<40} {:>12}  → {:.2}x", format!("threads={t}"), s.pm(),
+                 speedup(&base, &s));
+    }
+}
+
+/// The acceptance benchmark: N independent layer problems through the
+/// full LRC solve, serial loop vs pool fan-out.
+fn bench_layer_fanout(samples: usize, n_layers: usize, d: usize) {
+    let mut rng = Rng::new(7);
+    let mut problems = Vec::new();
+    for _ in 0..n_layers {
+        let w = Mat::random_normal(&mut rng, d, d);
+        let x = Mat::random_normal(&mut rng, d, 4 * d);
+        let mut st = LayerStats::new(d, Some(4), 0.9, None);
+        st.update(&x);
+        problems.push((w, st));
+    }
+    let cfg = QuantConfig::default();
+    let k = (d / 8).max(1);
+
+    section(&format!(
+        "per-layer quantization fan-out: {n_layers} layers of {d}x{d}, \
+         rank {k}"));
+    let run = |pool: &Pool| {
+        let res = pool.map(problems.len(), |i| {
+            let (w, st) = &problems[i];
+            lrc(w, st, k, &cfg).expect("lrc solve")
+        });
+        assert_eq!(res.len(), n_layers);
+    };
+    let base = bench(1, samples, || run(&Pool::new(1)));
+    println!("{:<40} {:>12}", "threads=1", base.pm());
+    let mut best = 1.0_f64;
+    for t in thread_counts().into_iter().skip(1) {
+        let pool = Pool::new(t);
+        let s = bench(1, samples, || run(&pool));
+        let sp = speedup(&base, &s);
+        best = best.max(sp);
+        println!("{:<40} {:>12}  → {sp:.2}x", format!("threads={t}"), s.pm());
+    }
+    println!("best fan-out speedup: {best:.2}x \
+              (target ≥ 2x on 4+ cores)");
+}
+
+fn main() {
+    let args = Args::from_env();
+    let samples = args.get_usize("samples", 5);
+    let d = args.get_usize("dim", 256);
+    let n_layers = args.get_usize("layers", 12);
+
+    println!("host parallelism: {} cores",
+             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
+
+    bench_kernels(samples, d);
+    bench_layer_fanout(samples, n_layers, d.min(96));
+
+    // pool overhead floor: tiny items, big pool
+    section("pool dispatch overhead (4096 trivial items)");
+    bench_report("map 4096 x (i*i)", 1, samples, || {
+        let pool = Pool::new(4);
+        let v = pool.map(4096, |i| i * i);
+        assert_eq!(v.len(), 4096);
+    });
+}

@@ -70,6 +70,16 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Mean-time speedup of `new` over `base` (>1 = faster) — the scaling
+/// benches report this per thread count.
+pub fn speedup(base: &Stats, new: &Stats) -> f64 {
+    let m = new.mean();
+    if m <= 0.0 {
+        return 0.0;
+    }
+    base.mean() / m
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -95,5 +105,14 @@ mod tests {
     fn pm_format() {
         let s = Stats { samples_ms: vec![10.0, 10.0] };
         assert_eq!(s.pm(), "10.00 +- 0.00");
+    }
+
+    #[test]
+    fn speedup_ratio() {
+        let base = Stats { samples_ms: vec![8.0, 8.0] };
+        let faster = Stats { samples_ms: vec![2.0, 2.0] };
+        assert!((speedup(&base, &faster) - 4.0).abs() < 1e-12);
+        let empty = Stats { samples_ms: vec![] };
+        assert_eq!(speedup(&base, &empty), 0.0);
     }
 }

@@ -2,6 +2,12 @@
 //! bucket fills or the oldest request has waited `max_wait` — the standard
 //! continuous-batching trade-off between throughput (full batches) and
 //! tail latency (deadline flush).
+//!
+//! The queue is multi-consumer: any number of engine workers may block in
+//! [`Batcher::next_batch`] concurrently (the N-worker coordinator does
+//! exactly that).  Batches are handed out atomically under the queue
+//! lock, so every request is delivered exactly once, and `close()` wakes
+//! all parked consumers.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
@@ -188,6 +194,37 @@ mod tests {
         // drains the remaining request, then returns None
         assert_eq!(b.next_batch(4).unwrap().len(), 1);
         assert!(b.next_batch(4).is_none());
+    }
+
+    #[test]
+    fn multi_consumer_delivers_exactly_once() {
+        // N-worker mode: several consumers race on next_batch; every
+        // request must come out exactly once across all of them
+        let b = std::sync::Arc::new(Batcher::new(policy(4, 1, 10_000)));
+        let total = 300u64;
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let bb = b.clone();
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(batch) = bb.next_batch(4) {
+                        got.extend(batch.iter().map(|r| r.id));
+                    }
+                    got // exits when closed + drained
+                })
+            })
+            .collect();
+        for i in 0..total {
+            b.push(req(i)).unwrap();
+            if i % 13 == 0 {
+                std::thread::sleep(Duration::from_micros(100));
+            }
+        }
+        b.close();
+        let mut got: Vec<u64> =
+            consumers.into_iter().flat_map(|c| c.join().unwrap()).collect();
+        got.sort();
+        assert_eq!(got, (0..total).collect::<Vec<_>>());
     }
 
     #[test]

@@ -73,6 +73,31 @@ impl Histogram {
     }
 }
 
+/// Per-worker counters: which of the N engine workers did the work, and
+/// how its execute latency compares to its peers (a skewed worker is the
+/// first symptom of a bad core pin or a slow session compile).
+pub struct WorkerMetrics {
+    pub batches: AtomicU64,
+    pub requests: AtomicU64,
+    pub exec_lat_us: Histogram,
+}
+
+impl WorkerMetrics {
+    pub fn new() -> WorkerMetrics {
+        WorkerMetrics {
+            batches: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+            exec_lat_us: Histogram::new(),
+        }
+    }
+}
+
+impl Default for WorkerMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// All server metrics in one shareable struct.
 pub struct ServerMetrics {
     pub started: Instant,
@@ -87,10 +112,16 @@ pub struct ServerMetrics {
     pub total_lat_us: Histogram,
     /// batch fill ratio in percent
     pub batch_fill: Histogram,
+    /// one entry per engine worker (N-worker coordinator mode)
+    pub per_worker: Vec<WorkerMetrics>,
 }
 
 impl ServerMetrics {
     pub fn new() -> ServerMetrics {
+        Self::with_workers(1)
+    }
+
+    pub fn with_workers(workers: usize) -> ServerMetrics {
         ServerMetrics {
             started: Instant::now(),
             first_done_us: AtomicU64::new(0),
@@ -101,6 +132,8 @@ impl ServerMetrics {
             exec_lat_us: Histogram::new(),
             total_lat_us: Histogram::new(),
             batch_fill: Histogram::new(),
+            per_worker: (0..workers.max(1)).map(|_| WorkerMetrics::new())
+                .collect(),
         }
     }
 
@@ -122,6 +155,11 @@ impl ServerMetrics {
             mean_exec_us: self.exec_lat_us.mean(),
             mean_queue_us: self.queue_lat_us.mean(),
             mean_batch_fill_pct: self.batch_fill.mean(),
+            per_worker: self.per_worker.iter().map(|w| WorkerSnapshot {
+                batches: w.batches.load(Ordering::Relaxed),
+                requests: w.requests.load(Ordering::Relaxed),
+                mean_exec_us: w.exec_lat_us.mean(),
+            }).collect(),
         }
     }
 }
@@ -130,6 +168,14 @@ impl Default for ServerMetrics {
     fn default() -> Self {
         Self::new()
     }
+}
+
+/// Per-worker slice of a [`MetricsSnapshot`].
+#[derive(Clone, Debug)]
+pub struct WorkerSnapshot {
+    pub batches: u64,
+    pub requests: u64,
+    pub mean_exec_us: f64,
 }
 
 #[derive(Clone, Debug)]
@@ -145,11 +191,12 @@ pub struct MetricsSnapshot {
     pub mean_exec_us: f64,
     pub mean_queue_us: f64,
     pub mean_batch_fill_pct: f64,
+    pub per_worker: Vec<WorkerSnapshot>,
 }
 
 impl MetricsSnapshot {
     pub fn render(&self) -> String {
-        format!(
+        let mut out = format!(
             "requests={} batches={} errors={} throughput={:.1} req/s\n\
              latency: mean={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms\n\
              exec mean={:.1}ms queue mean={:.1}ms batch-fill={:.0}%",
@@ -158,7 +205,15 @@ impl MetricsSnapshot {
             self.p95_total_us as f64 / 1000.0,
             self.p99_total_us as f64 / 1000.0,
             self.mean_exec_us / 1000.0, self.mean_queue_us / 1000.0,
-            self.mean_batch_fill_pct)
+            self.mean_batch_fill_pct);
+        if self.per_worker.len() > 1 {
+            for (i, w) in self.per_worker.iter().enumerate() {
+                out.push_str(&format!(
+                    "\n  worker {i}: batches={} requests={} exec mean={:.1}ms",
+                    w.batches, w.requests, w.mean_exec_us / 1000.0));
+            }
+        }
+        out
     }
 }
 
@@ -205,5 +260,22 @@ mod tests {
         m.total_lat_us.record(1500);
         let s = m.snapshot().render();
         assert!(s.contains("requests=10"));
+        // single-worker servers do not render the per-worker breakdown
+        assert!(!s.contains("worker 0"));
+    }
+
+    #[test]
+    fn per_worker_breakdown_renders() {
+        let m = ServerMetrics::with_workers(3);
+        assert_eq!(m.per_worker.len(), 3);
+        m.per_worker[1].batches.fetch_add(4, Ordering::Relaxed);
+        m.per_worker[1].requests.fetch_add(9, Ordering::Relaxed);
+        m.per_worker[1].exec_lat_us.record(2000);
+        let snap = m.snapshot();
+        assert_eq!(snap.per_worker.len(), 3);
+        assert_eq!(snap.per_worker[1].batches, 4);
+        let s = snap.render();
+        assert!(s.contains("worker 1: batches=4 requests=9"));
+        assert!(s.contains("worker 2: batches=0"));
     }
 }

@@ -1,12 +1,21 @@
 //! L3 serving coordinator — the quantized model is an inference artifact
-//! and this is the engine that serves it: a dynamic batcher in front of a
-//! worker thread that owns the PJRT sessions (PJRT handles are not Send,
-//! so the engine lives entirely inside its worker).
+//! and this is the engine that serves it: a dynamic batcher in front of
+//! N worker threads, each owning its own PJRT engine and sessions (PJRT
+//! handles are not Send, so every engine lives entirely inside its
+//! worker).
 //!
 //! Request flow:
 //!   client → [`ServerHandle::submit`] → shared queue → batcher (size or
 //!   deadline trigger, largest-fitting batch bucket, repeat-padding) →
-//!   PJRT execute → per-sequence NLL scoring → response channel.
+//!   any idle worker → PJRT execute → per-sequence NLL scoring →
+//!   response channel.
+//!
+//! `ServerConfig::workers > 1` scales execute throughput on multi-core
+//! hosts: the workers race on the shared [`Batcher`] (work-stealing by
+//! construction) and report per-worker metrics so load skew is visible.
+//! Each worker compiles its own sessions — startup cost is N× the
+//! single-worker compile, which the first-request throughput offset in
+//! [`ServerMetrics`] already excludes.
 //!
 //! The service scores sequences (sum/mean NLL — the serving primitive
 //! behind perplexity and multiple-choice evaluation).  Metrics cover
@@ -16,7 +25,7 @@ pub mod batcher;
 pub mod metrics;
 
 pub use batcher::{Batcher, BatchPolicy};
-pub use metrics::{Histogram, MetricsSnapshot, ServerMetrics};
+pub use metrics::{Histogram, MetricsSnapshot, ServerMetrics, WorkerSnapshot};
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -57,44 +66,85 @@ pub struct ServerConfig {
     /// quant bundle dir (None for fp graphs)
     pub quant_dir: Option<PathBuf>,
     pub policy: BatchPolicy,
+    /// engine workers pulling from the shared batcher; each owns its own
+    /// PJRT engine + sessions (0 is treated as 1)
+    pub workers: usize,
 }
 
 pub struct ServerHandle {
     queue: Arc<Batcher>,
     next_id: AtomicU64,
-    worker: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
     shutdown: Arc<AtomicBool>,
     pub metrics: Arc<ServerMetrics>,
     pub seq_len: usize,
 }
 
 impl ServerHandle {
-    /// Start the server; blocks until the worker has compiled its sessions.
+    /// Start the server; blocks until every worker has compiled its
+    /// sessions (any worker failing to initialize fails the whole start).
     pub fn start(cfg: ServerConfig) -> Result<ServerHandle> {
+        let n_workers = cfg.workers.max(1);
         let queue = Arc::new(Batcher::new(cfg.policy.clone()));
-        let metrics = Arc::new(ServerMetrics::new());
+        let metrics = Arc::new(ServerMetrics::with_workers(n_workers));
         let shutdown = Arc::new(AtomicBool::new(false));
         let (ready_tx, ready_rx) = mpsc::channel::<Result<usize, String>>();
 
-        let q2 = queue.clone();
-        let m2 = metrics.clone();
-        let s2 = shutdown.clone();
-        let worker = std::thread::Builder::new()
-            .name("lrc-worker".into())
-            .spawn(move || worker_loop(cfg, q2, m2, s2, ready_tx))
-            .expect("spawn worker");
+        let mut workers = Vec::with_capacity(n_workers);
+        for wid in 0..n_workers {
+            let cfg = cfg.clone();
+            let q2 = queue.clone();
+            let m2 = metrics.clone();
+            let s2 = shutdown.clone();
+            let tx = ready_tx.clone();
+            let worker = std::thread::Builder::new()
+                .name(format!("lrc-worker-{wid}"))
+                .spawn(move || worker_loop(cfg, wid, q2, m2, s2, tx))
+                .expect("spawn worker");
+            workers.push(worker);
+        }
+        drop(ready_tx);
 
-        let seq_len = ready_rx
-            .recv()
-            .map_err(|_| anyhow!("worker died during startup"))?
-            .map_err(|e| anyhow!("worker init: {e}"))?;
+        let mut seq_len = None;
+        let mut fail: Option<anyhow::Error> = None;
+        for _ in 0..n_workers {
+            match ready_rx.recv() {
+                Err(_) => {
+                    fail = Some(anyhow!("worker died during startup"));
+                    break;
+                }
+                Ok(Err(e)) => {
+                    fail = Some(anyhow!("worker init: {e}"));
+                    break;
+                }
+                Ok(Ok(got)) => {
+                    if let Some(sl) = seq_len {
+                        if sl != got {
+                            fail = Some(anyhow!(
+                                "workers disagree on seq_len: {sl} vs {got}"));
+                            break;
+                        }
+                    }
+                    seq_len = Some(got);
+                }
+            }
+        }
+        if let Some(e) = fail {
+            // tear the healthy workers down before reporting the failure
+            shutdown.store(true, Ordering::SeqCst);
+            queue.close();
+            for w in workers {
+                let _ = w.join();
+            }
+            return Err(e);
+        }
         Ok(ServerHandle {
             queue,
             next_id: AtomicU64::new(1),
-            worker: Some(worker),
+            workers,
             shutdown,
             metrics,
-            seq_len,
+            seq_len: seq_len.expect("n_workers >= 1"),
         })
     }
 
@@ -115,18 +165,18 @@ impl ServerHandle {
         Ok(rx)
     }
 
-    /// Graceful shutdown: drain the queue, stop the worker.
+    /// Graceful shutdown: drain the queue, stop every worker.
     pub fn shutdown(mut self) -> MetricsSnapshot {
         self.shutdown.store(true, Ordering::SeqCst);
         self.queue.close();
-        if let Some(w) = self.worker.take() {
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
         self.metrics.snapshot()
     }
 }
 
-fn worker_loop(cfg: ServerConfig, queue: Arc<Batcher>,
+fn worker_loop(cfg: ServerConfig, wid: usize, queue: Arc<Batcher>,
                metrics: Arc<ServerMetrics>, shutdown: Arc<AtomicBool>,
                ready: mpsc::Sender<Result<usize, String>>) {
     // All PJRT state is created inside the worker thread (not Send).
@@ -137,21 +187,15 @@ fn worker_loop(cfg: ServerConfig, queue: Arc<Batcher>,
             Some(d) => Some(TensorBundle::load(d)?),
             None => None,
         };
-        // discover batch buckets for the prefix, ascending
+        // discover batch buckets for the prefix (already ascending)
         let mut buckets: Vec<(usize, crate::runtime::Session)> = Vec::new();
-        for (name, g) in &arts.graphs {
-            if let Some(rest) = name.strip_prefix(&format!("{}_b", cfg.graph_prefix)) {
-                if let Ok(b) = rest.parse::<usize>() {
-                    let s = engine.session(&arts, name, quant.as_ref())?;
-                    buckets.push((b, s));
-                    let _ = g;
-                }
-            }
+        for (b, g) in arts.bucket_graphs(&cfg.graph_prefix) {
+            let s = engine.session(&arts, &g.name, quant.as_ref())?;
+            buckets.push((b, s));
         }
         if buckets.is_empty() {
             return Err(anyhow!("no graphs match prefix {}_b*", cfg.graph_prefix));
         }
-        buckets.sort_by_key(|(b, _)| *b);
         Ok((arts.info.seq_len, arts.info.vocab, buckets))
     })();
 
@@ -195,7 +239,7 @@ fn worker_loop(cfg: ServerConfig, queue: Arc<Batcher>,
             Ok(l) => l,
             Err(e) => {
                 metrics.errors.fetch_add(batch.len() as u64, Ordering::Relaxed);
-                eprintln!("[coordinator] execute failed: {e}");
+                eprintln!("[coordinator] worker {wid}: execute failed: {e}");
                 continue;
             }
         };
@@ -203,6 +247,10 @@ fn worker_loop(cfg: ServerConfig, queue: Arc<Batcher>,
         metrics.batches.fetch_add(1, Ordering::Relaxed);
         metrics.batch_fill.record(
             (batch.len() as f64 / *bsize as f64 * 100.0) as u64);
+        let wm = &metrics.per_worker[wid];
+        wm.batches.fetch_add(1, Ordering::Relaxed);
+        wm.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        wm.exec_lat_us.record(exec_us);
 
         for (row, req) in batch.iter().enumerate() {
             let mut nll = 0.0_f64;

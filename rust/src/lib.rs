@@ -9,16 +9,23 @@
 //!
 //! Module map:
 //!
+//! * [`par`]         — zero-dependency scoped thread pool (std-only work
+//!                     queue; `LRC_THREADS` / `--threads` sizing) with a
+//!                     fixed-order reduction contract: results are
+//!                     bit-identical at every thread count
 //! * [`linalg`]      — dense f64 linear algebra built from scratch
-//!                     (blocked GEMM, Cholesky, Jacobi eigensolver, FWHT)
+//!                     (blocked GEMM, Cholesky, Jacobi eigensolver, FWHT;
+//!                     `par_*` row-chunked variants of every O(n³) kernel)
 //! * [`rng`]         — deterministic SplitMix64 RNG
 //! * [`quant`]       — RTN / GPTQ quantizers + int4 bit-packing
 //! * [`lrc`]         — the paper's Algorithms 1–4 + SVD baseline + oracle
 //! * [`data`]        — byte tokenizer, corpora, lm-eval-style task suites
 //! * [`eval`]        — perplexity + multiple-choice accuracy scoring
 //! * [`runtime`]     — PJRT engine: HLO-text artifacts → executables
-//! * [`pipeline`]    — end-to-end PTQ driver (calibrate → quantize → bundle)
-//! * [`coordinator`] — serving engine: dynamic batcher, workers, metrics
+//! * [`pipeline`]    — end-to-end PTQ driver (calibrate → quantize →
+//!                     bundle); the per-layer loop fans out on [`par`]
+//! * [`coordinator`] — serving engine: dynamic batcher, N engine
+//!                     workers, per-worker metrics
 //! * [`bench`]       — measurement harness used by `cargo bench` targets
 //! * [`util`]        — no-deps JSON + CLI parsing
 
@@ -29,6 +36,7 @@ pub mod eval;
 pub mod experiments;
 pub mod linalg;
 pub mod lrc;
+pub mod par;
 pub mod pipeline;
 pub mod quant;
 pub mod rng;

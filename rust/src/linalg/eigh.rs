@@ -279,6 +279,153 @@ pub fn eigh_jacobi(a: &Mat) -> (Vec<f64>, Mat) {
     (sorted_vals, sorted_vecs)
 }
 
+/// Parallel Jacobi eigensolver on a [`crate::par::Pool`].
+///
+/// Rotation sweeps are reordered into tournament rounds (the circle
+/// method): each round holds ⌊n/2⌋ pairwise-disjoint (p, q) pivots, so
+/// the rotations of a round commute exactly and can be computed
+/// concurrently.  A round is applied in two globally-ordered phases —
+/// all column updates (M·G), then all row updates (Gᵀ·M) — with the new
+/// columns/rows computed on the pool and written back serially.  Every
+/// matrix element is therefore produced by one fixed floating-point
+/// program per round, making the result **bit-identical for every pool
+/// size** (threads = 1 included); it differs from [`eigh_jacobi`] only
+/// by the pivot ordering, which Jacobi convergence does not depend on.
+///
+/// Intended for large single-matrix workloads; inside the per-layer
+/// quantization fan-out the serial QL path stays the right choice (the
+/// layers themselves already saturate the pool).
+pub fn eigh_jacobi_par(a: &Mat, pool: &crate::par::Pool) -> (Vec<f64>, Mat) {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    if n == 0 {
+        return (Vec::new(), Mat::zeros(0, 0));
+    }
+    let mut m = a.clone();
+    // symmetrize defensively, matching the serial paths
+    for i in 0..n {
+        for j in 0..i {
+            let avg = 0.5 * (m[(i, j)] + m[(j, i)]);
+            m[(i, j)] = avg;
+            m[(j, i)] = avg;
+        }
+    }
+    let mut v = Mat::eye(n);
+    let scale = m.max_abs().max(1e-300);
+    let tol = 1e-14 * scale;
+
+    // tournament schedule over np players (pad with a dummy when n is odd):
+    // player 0 is fixed, the rest rotate one seat per round — every (p, q)
+    // pair occurs exactly once per sweep, each round's pairs are disjoint.
+    let np = if n % 2 == 0 { n } else { n + 1 };
+    let seat = |j: usize, round: usize| -> usize {
+        if j == 0 { 0 } else { (j - 1 + round) % (np - 1) + 1 }
+    };
+
+    for _sweep in 0..60 {
+        let mut off = 0.0_f64;
+        for i in 0..n {
+            for j in i + 1..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() <= tol * (n as f64) {
+            break;
+        }
+        for round in 0..np - 1 {
+            let mut pairs: Vec<(usize, usize)> = Vec::with_capacity(np / 2);
+            for i in 0..np / 2 {
+                let a = seat(i, round);
+                let b = seat(np - 1 - i, round);
+                if a < n && b < n {
+                    pairs.push((a.min(b), a.max(b)));
+                }
+            }
+            // phase 1 — column updates M ← M·G: each pair computes its
+            // rotation angle and its two new columns from the pristine
+            // round matrix (pairs are column-disjoint)
+            let cols = pool.map(pairs.len(), |pi| {
+                let (p, q) = pairs[pi];
+                let apq = m[(p, q)];
+                if apq.abs() <= tol {
+                    return None;
+                }
+                let theta = 0.5 * (m[(q, q)] - m[(p, p)]) / apq;
+                let t = theta.signum()
+                    / (theta.abs() + (1.0 + theta * theta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                let mut colp = Vec::with_capacity(n);
+                let mut colq = Vec::with_capacity(n);
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    colp.push(c * mkp - s * mkq);
+                    colq.push(s * mkp + c * mkq);
+                }
+                Some((c, s, colp, colq))
+            });
+            let mut rots: Vec<Option<(f64, f64)>> = vec![None; pairs.len()];
+            for (pi, upd) in cols.into_iter().enumerate() {
+                if let Some((c, s, colp, colq)) = upd {
+                    let (p, q) = pairs[pi];
+                    for k in 0..n {
+                        m[(k, p)] = colp[k];
+                        m[(k, q)] = colq[k];
+                    }
+                    rots[pi] = Some((c, s));
+                }
+            }
+            // phase 2 — row updates M ← Gᵀ·M and eigenvector columns
+            // V ← V·G, from the column-updated matrix (pairs are
+            // row-disjoint in M and column-disjoint in V)
+            let rows = pool.map(pairs.len(), |pi| {
+                let (c, s) = rots[pi]?;
+                let (p, q) = pairs[pi];
+                let mut rowp = Vec::with_capacity(n);
+                let mut rowq = Vec::with_capacity(n);
+                let mut vcolp = Vec::with_capacity(n);
+                let mut vcolq = Vec::with_capacity(n);
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    rowp.push(c * mpk - s * mqk);
+                    rowq.push(s * mpk + c * mqk);
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    vcolp.push(c * vkp - s * vkq);
+                    vcolq.push(s * vkp + c * vkq);
+                }
+                Some((rowp, rowq, vcolp, vcolq))
+            });
+            for (pi, upd) in rows.into_iter().enumerate() {
+                if let Some((rowp, rowq, vcolp, vcolq)) = upd {
+                    let (p, q) = pairs[pi];
+                    m.row_mut(p).copy_from_slice(&rowp);
+                    m.row_mut(q).copy_from_slice(&rowq);
+                    for k in 0..n {
+                        v[(k, p)] = vcolp[k];
+                        v[(k, q)] = vcolq[k];
+                    }
+                }
+            }
+        }
+    }
+
+    // sort ascending by eigenvalue, as the serial solvers do
+    let mut idx: Vec<usize> = (0..n).collect();
+    let evals: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    idx.sort_by(|&a, &b| evals[a].partial_cmp(&evals[b]).unwrap());
+    let sorted_vals: Vec<f64> = idx.iter().map(|&i| evals[i]).collect();
+    let mut sorted_vecs = Mat::zeros(n, n);
+    for (new_c, &old_c) in idx.iter().enumerate() {
+        for r in 0..n {
+            sorted_vecs[(r, new_c)] = v[(r, old_c)];
+        }
+    }
+    (sorted_vals, sorted_vecs)
+}
+
 /// `eig_k`: the k unit eigenvectors with the largest eigenvalues, as the
 /// *columns* of a [n, k] matrix (paper's U).
 pub fn top_k_eigvecs(a: &Mat, k: usize) -> Mat {
@@ -319,6 +466,54 @@ mod tests {
                         "seed {seed}: {x} vs {y}");
             }
         }
+    }
+
+    #[test]
+    fn parallel_jacobi_matches_ql_eigenvalues() {
+        use crate::par::Pool;
+        for seed in 0..4 {
+            let n = 5 + (seed as usize) * 6; // 5, 11, 17, 23 — odd + even
+            let a = random_sym(seed + 300, n);
+            let (v1, _) = eigh(&a);
+            let (v2, _) = eigh_jacobi_par(&a, &Pool::new(4));
+            for (x, y) in v1.iter().zip(&v2) {
+                assert!((x - y).abs() < 1e-8 * (1.0 + x.abs()),
+                        "seed {seed}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_jacobi_bit_identical_across_pools() {
+        use crate::par::Pool;
+        for n in [3, 8, 13, 24] {
+            let a = random_sym(400 + n as u64, n);
+            let (vals1, vecs1) = eigh_jacobi_par(&a, &Pool::new(1));
+            for t in [2, 8] {
+                let (vals, vecs) = eigh_jacobi_par(&a, &Pool::new(t));
+                assert_eq!(vals1, vals, "n={n} threads={t}");
+                assert_eq!(vecs1, vecs, "n={n} threads={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_jacobi_reconstructs() {
+        use crate::par::Pool;
+        let n = 12;
+        let a = random_sym(55, n);
+        let (vals, v) = eigh_jacobi_par(&a, &Pool::new(3));
+        // A V = V diag(vals) and VᵀV = I
+        let av = a.matmul(&v);
+        let mut vd = v.clone();
+        for i in 0..n {
+            for j in 0..n {
+                vd[(i, j)] *= vals[j];
+            }
+        }
+        assert!(av.sub(&vd).max_abs() < 1e-8);
+        let vtv = v.transpose().matmul(&v);
+        assert!(vtv.sub(&Mat::eye(n)).max_abs() < 1e-9);
     }
 
     #[test]

@@ -5,13 +5,18 @@
 //! (d ≤ 512 in this reproduction) but hot: GEMM is register-blocked with a
 //! transposed-B layout, Cholesky and the Jacobi eigensolver are the exact
 //! primitives Algorithms 2–4 need.
+//!
+//! Every O(n³) kernel also has a `par_*` variant on [`crate::par::Pool`]
+//! (row-chunked with fixed, thread-count-independent chunking), each
+//! **bit-identical** to its serial form at any pool size — the serial
+//! path is simply the `threads = 1` case.
 
 mod chol;
 mod eigh;
 mod hadamard;
 
 pub use chol::{cholesky, solve_lower, solve_upper, chol_solve_mat, chol_inverse};
-pub use eigh::{eigh, eigh_jacobi, top_k_eigvecs};
+pub use eigh::{eigh, eigh_jacobi, eigh_jacobi_par, top_k_eigvecs};
 pub use hadamard::{fwht, fwht_f32, hadamard_matrix};
 
 /// Row-major dense f64 matrix.
@@ -95,6 +100,14 @@ impl Mat {
         self.matmul_nt(&bt)
     }
 
+    /// C = A · B on `pool` (row-chunked; bit-identical to [`Mat::matmul`]).
+    pub fn par_matmul(&self, b: &Mat, pool: &crate::par::Pool) -> Mat {
+        assert_eq!(self.cols, b.rows, "par_matmul dims {}x{} · {}x{}",
+                   self.rows, self.cols, b.rows, b.cols);
+        let bt = b.transpose();
+        self.par_matmul_nt(&bt, pool)
+    }
+
     /// C = A · Bᵀ  (B given as [n, k]: C[i,j] = Σ A[i,:]·B[j,:])
     ///
     /// 2×2 register-blocked: each inner pass streams two A rows against
@@ -103,9 +116,52 @@ impl Mat {
         assert_eq!(self.cols, bt.cols, "matmul_nt inner dims");
         let (m, n) = (self.rows, bt.rows);
         let mut out = Mat::zeros(m, n);
-        let mut i = 0;
-        while i + 1 < m {
+        self.matmul_nt_block(bt, 0, m, &mut out.data);
+        out
+    }
+
+    /// Fixed row-chunk size for parallel kernels.  Even, so the 2×2 row
+    /// pairing inside every chunk coincides with the serial pairing, and
+    /// independent of thread count — both facts together make the par_*
+    /// kernels bit-identical to their serial forms at any pool size.
+    pub const PAR_ROW_CHUNK: usize = 64;
+
+    /// C = A · Bᵀ on `pool`: rows are split into fixed [`Mat::PAR_ROW_CHUNK`]
+    /// chunks, each computed by the serial 2×2 kernel into its disjoint
+    /// slice of C.  Bit-identical to [`Mat::matmul_nt`] for every thread
+    /// count (each output element is produced by exactly the same
+    /// floating-point program).
+    pub fn par_matmul_nt(&self, bt: &Mat, pool: &crate::par::Pool) -> Mat {
+        assert_eq!(self.cols, bt.cols, "par_matmul_nt inner dims");
+        let (m, n) = (self.rows, bt.rows);
+        let mut out = Mat::zeros(m, n);
+        if pool.threads() == 1 || m <= Self::PAR_ROW_CHUNK || n == 0 {
+            self.matmul_nt_block(bt, 0, m, &mut out.data);
+            return out;
+        }
+        let chunk = Self::PAR_ROW_CHUNK;
+        let work: Vec<(usize, &mut [f64])> =
+            out.data.chunks_mut(chunk * n).enumerate().collect();
+        pool.for_each(work, |(ci, slice)| {
+            let r0 = ci * chunk;
+            let r1 = (r0 + chunk).min(m);
+            self.matmul_nt_block(bt, r0, r1, slice);
+        });
+        out
+    }
+
+    /// The 2×2-blocked kernel over rows [r0, r1), writing into `out`
+    /// (row-major, `(r1-r0) × bt.rows`, indexed relative to r0).  Row
+    /// pairing starts at r0, so any even-aligned chunking reproduces the
+    /// full-matrix result exactly.
+    fn matmul_nt_block(&self, bt: &Mat, r0: usize, r1: usize,
+                       out: &mut [f64]) {
+        let n = bt.rows;
+        debug_assert_eq!(out.len(), (r1 - r0) * n);
+        let mut i = r0;
+        while i + 1 < r1 {
             let (a0, a1) = (self.row(i), self.row(i + 1));
+            let (o0, o1) = ((i - r0) * n, (i + 1 - r0) * n);
             let mut j = 0;
             while j + 1 < n {
                 let (b0, b1) = (bt.row(j), bt.row(j + 1));
@@ -119,24 +175,24 @@ impl Mat {
                     s10 += x1 * y0;
                     s11 += x1 * y1;
                 }
-                out.data[i * n + j] = s00;
-                out.data[i * n + j + 1] = s01;
-                out.data[(i + 1) * n + j] = s10;
-                out.data[(i + 1) * n + j + 1] = s11;
+                out[o0 + j] = s00;
+                out[o0 + j + 1] = s01;
+                out[o1 + j] = s10;
+                out[o1 + j + 1] = s11;
                 j += 2;
             }
             if j < n {
-                out.data[i * n + j] = dot(a0, bt.row(j));
-                out.data[(i + 1) * n + j] = dot(a1, bt.row(j));
+                out[o0 + j] = dot(a0, bt.row(j));
+                out[o1 + j] = dot(a1, bt.row(j));
             }
             i += 2;
         }
-        if i < m {
+        if i < r1 {
+            let o = (i - r0) * n;
             for j in 0..n {
-                out.data[i * n + j] = dot(self.row(i), bt.row(j));
+                out[o + j] = dot(self.row(i), bt.row(j));
             }
         }
-        out
     }
 
     /// C = Aᵀ · A (symmetric Gram matrix, only upper computed then mirrored)
@@ -154,6 +210,30 @@ impl Mat {
         out
     }
 
+    /// C = Aᵀ · A on `pool`: upper-triangle rows computed in parallel,
+    /// assembled + mirrored in fixed order.  Bit-identical to
+    /// [`Mat::gram_t`] (every entry is the same single `dot`).
+    pub fn par_gram_t(&self, pool: &crate::par::Pool) -> Mat {
+        let n = self.cols;
+        let at = self.transpose();
+        let rows = pool.map(n, |i| {
+            let mut seg = Vec::with_capacity(n - i);
+            for j in i..n {
+                seg.push(dot(at.row(i), at.row(j)));
+            }
+            seg
+        });
+        let mut out = Mat::zeros(n, n);
+        for (i, seg) in rows.iter().enumerate() {
+            for (off, &v) in seg.iter().enumerate() {
+                let j = i + off;
+                out.data[i * n + j] = v;
+                out.data[j * n + i] = v;
+            }
+        }
+        out
+    }
+
     /// C = A · Aᵀ (symmetric, rows as vectors)
     pub fn gram_n(&self) -> Mat {
         let m = self.rows;
@@ -161,6 +241,28 @@ impl Mat {
         for i in 0..m {
             for j in i..m {
                 let v = dot(self.row(i), self.row(j));
+                out.data[i * m + j] = v;
+                out.data[j * m + i] = v;
+            }
+        }
+        out
+    }
+
+    /// C = A · Aᵀ on `pool` (see [`Mat::par_gram_t`]; bit-identical to
+    /// [`Mat::gram_n`]).
+    pub fn par_gram_n(&self, pool: &crate::par::Pool) -> Mat {
+        let m = self.rows;
+        let rows = pool.map(m, |i| {
+            let mut seg = Vec::with_capacity(m - i);
+            for j in i..m {
+                seg.push(dot(self.row(i), self.row(j)));
+            }
+            seg
+        });
+        let mut out = Mat::zeros(m, m);
+        for (i, seg) in rows.iter().enumerate() {
+            for (off, &v) in seg.iter().enumerate() {
+                let j = i + off;
                 out.data[i * m + j] = v;
                 out.data[j * m + i] = v;
             }
@@ -337,6 +439,50 @@ mod tests {
         let h1 = a.gram_n();                  // AAᵀ
         let h2 = a.matmul(&a.transpose());
         assert!(h1.sub(&h2).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn par_matmul_nt_bit_identical_across_pools() {
+        // property: the parallel kernel equals the serial one EXACTLY
+        // (==, not ≈) for every thread count, including ragged shapes
+        // around the chunk boundary and odd row counts
+        use crate::par::Pool;
+        for (m, k, n) in [(1, 5, 1), (2, 3, 2), (7, 9, 5), (63, 17, 31),
+                          (64, 8, 65), (65, 8, 64), (129, 33, 66)] {
+            let a = rand_mat(m as u64 * 31 + n as u64, m, k);
+            let b = rand_mat(m as u64 * 17 + k as u64, n, k);
+            let serial = a.matmul_nt(&b);
+            for t in [1, 2, 8] {
+                let par = a.par_matmul_nt(&b, &Pool::new(t));
+                assert_eq!(serial, par, "{m}x{k}·{n}ᵀ threads={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn par_matmul_matches_matmul() {
+        use crate::par::Pool;
+        let a = rand_mat(81, 70, 33);
+        let b = rand_mat(82, 33, 41);
+        let serial = a.matmul(&b);
+        for t in [1, 3, 8] {
+            assert_eq!(serial, a.par_matmul(&b, &Pool::new(t)));
+        }
+    }
+
+    #[test]
+    fn par_gram_bit_identical_across_pools() {
+        use crate::par::Pool;
+        for (r, c) in [(1, 1), (6, 4), (40, 70), (70, 40)] {
+            let a = rand_mat(r as u64 * 7 + c as u64, r, c);
+            let gt = a.gram_t();
+            let gn = a.gram_n();
+            for t in [1, 2, 8] {
+                let pool = Pool::new(t);
+                assert_eq!(gt, a.par_gram_t(&pool), "gram_t {r}x{c} t={t}");
+                assert_eq!(gn, a.par_gram_n(&pool), "gram_n {r}x{c} t={t}");
+            }
+        }
     }
 
     #[test]

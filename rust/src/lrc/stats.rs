@@ -6,7 +6,14 @@
 //! tokens as *columns* ([din, n]), matching the paper's notation.
 
 use crate::linalg::Mat;
+use crate::par::Pool;
 use crate::quant::act_quantize;
+
+/// Fixed token-chunk width for parallel Σ accumulation.  Chunk boundaries
+/// are a property of the *math*, not of the pool: partial Grams are
+/// computed per chunk (concurrently) and merged in chunk order, so the
+/// accumulated Σ are bit-identical at every thread count.
+pub const STATS_TOKEN_CHUNK: usize = 256;
 
 /// Accumulates Σx = XXᵀ, Σy = YYᵀ, Σxy = XYᵀ over calibration batches,
 /// where Y = Q_a(X) (or Y = X in weight-only mode).
@@ -51,18 +58,63 @@ impl LayerStats {
         self.n += x.cols;
     }
 
+    /// Fold in one batch of activation columns X [din, b], accumulating
+    /// per-thread partial Σ over fixed [`STATS_TOKEN_CHUNK`] token chunks
+    /// and merging them in chunk order.  Bit-identical at every pool
+    /// size (the serial [`LayerStats::update`] differs only by Gram
+    /// association across chunk boundaries, within fp round-off).
+    pub fn update_par(&mut self, x: &Mat, pool: &Pool) {
+        assert_eq!(x.rows, self.din);
+        let n = x.cols;
+        let n_chunks = n.div_ceil(STATS_TOKEN_CHUNK).max(1);
+        let partials = pool.map(n_chunks, |ci| {
+            let c0 = ci * STATS_TOKEN_CHUNK;
+            let c1 = (c0 + STATS_TOKEN_CHUNK).min(n);
+            let xs = x.cols_range(c0, c1);
+            // Q_a is per-token, so quantizing a chunk equals quantizing
+            // the full batch and slicing
+            let ys = match self.a_bits {
+                Some(bits) => {
+                    act_quantize(&xs, bits, self.clip, self.a_group)
+                }
+                None => xs.clone(),
+            };
+            (xs.gram_n(), ys.gram_n(), xs.matmul_nt(&ys), c1 - c0)
+        });
+        for (sx, sy, sxy, cols) in &partials {
+            self.sx = self.sx.add(sx);
+            self.sy = self.sy.add(sy);
+            self.sxy = self.sxy.add(sxy);
+            self.n += cols;
+        }
+    }
+
     /// Fold in a batch given in *row-major token rows* ([b, din] f32),
     /// the layout the PJRT acts graph produces.
     pub fn update_rows_f32(&mut self, rows: &[f32], n_rows: usize) {
         assert_eq!(rows.len(), n_rows * self.din);
-        // transpose into [din, n_rows]
-        let mut x = Mat::zeros(self.din, n_rows);
+        let x = Self::transpose_rows_f32(rows, n_rows, self.din);
+        self.update(&x);
+    }
+
+    /// [`LayerStats::update_rows_f32`] on a pool: transpose once, then
+    /// accumulate the partial Grams concurrently via [`LayerStats::update_par`].
+    pub fn update_rows_f32_par(&mut self, rows: &[f32], n_rows: usize,
+                               pool: &Pool) {
+        assert_eq!(rows.len(), n_rows * self.din);
+        let x = Self::transpose_rows_f32(rows, n_rows, self.din);
+        self.update_par(&x, pool);
+    }
+
+    /// Transpose row-major f32 token rows into column-token f64 X.
+    fn transpose_rows_f32(rows: &[f32], n_rows: usize, din: usize) -> Mat {
+        let mut x = Mat::zeros(din, n_rows);
         for r in 0..n_rows {
-            for c in 0..self.din {
-                x[(c, r)] = rows[r * self.din + c] as f64;
+            for c in 0..din {
+                x[(c, r)] = rows[r * din + c] as f64;
             }
         }
-        self.update(&x);
+        x
     }
 
     /// (Σx + εx·I, Σy + εy·I, Σxy) with ε = 1e-2·tr(Σ)/d, as in the paper.
@@ -137,6 +189,51 @@ mod tests {
         let mut st2 = LayerStats::new(din, Some(4), 1.0, None);
         st2.update(&x);
         assert!(st1.sx.sub(&st2.sx).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn update_par_bit_identical_across_pools() {
+        // spans several STATS_TOKEN_CHUNK boundaries plus a ragged tail
+        let x = Mat::random_normal(&mut Rng::new(10), 6, 3 * 256 + 97);
+        let mut base = LayerStats::new(6, Some(4), 0.9, None);
+        base.update_par(&x, &Pool::new(1));
+        for t in [2, 8] {
+            let mut st = LayerStats::new(6, Some(4), 0.9, None);
+            st.update_par(&x, &Pool::new(t));
+            assert_eq!(base.sx, st.sx, "threads={t}");
+            assert_eq!(base.sy, st.sy, "threads={t}");
+            assert_eq!(base.sxy, st.sxy, "threads={t}");
+            assert_eq!(base.n, st.n);
+        }
+    }
+
+    #[test]
+    fn update_par_matches_serial_update() {
+        // same Σ up to fp association across chunk boundaries
+        let x = Mat::random_normal(&mut Rng::new(11), 8, 700);
+        let mut serial = LayerStats::new(8, Some(4), 0.9, None);
+        serial.update(&x);
+        let mut par = LayerStats::new(8, Some(4), 0.9, None);
+        par.update_par(&x, &Pool::new(4));
+        assert!(serial.sx.sub(&par.sx).max_abs() < 1e-8);
+        assert!(serial.sy.sub(&par.sy).max_abs() < 1e-8);
+        assert!(serial.sxy.sub(&par.sxy).max_abs() < 1e-8);
+        assert_eq!(serial.n, par.n);
+    }
+
+    #[test]
+    fn rows_f32_par_matches_rows_f32() {
+        let mut rng = Rng::new(12);
+        let (n_rows, din) = (530, 5);
+        let rows: Vec<f32> =
+            rng.normal_vec(n_rows * din).iter().map(|&v| v as f32).collect();
+        let mut serial = LayerStats::new(din, Some(4), 1.0, None);
+        serial.update_rows_f32(&rows, n_rows);
+        let mut par = LayerStats::new(din, Some(4), 1.0, None);
+        par.update_rows_f32_par(&rows, n_rows, &Pool::new(4));
+        assert!(serial.sx.sub(&par.sx).max_abs() < 1e-8);
+        assert!(serial.sxy.sub(&par.sxy).max_abs() < 1e-8);
+        assert_eq!(serial.n, par.n);
     }
 
     #[test]

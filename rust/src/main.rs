@@ -6,6 +6,10 @@
 //!   eval --model M --graph G      perplexity + task accuracy of a variant
 //!   serve --model M               serving demo with the dynamic batcher
 //!
+//! Global flags: `--threads N` sizes the compute pool (else the
+//! `LRC_THREADS` env var, else every core); `serve --workers N` runs N
+//! PJRT engine workers against the shared batch queue.
+//!
 //! Run `lrc <cmd> --help` equivalent: every flag has a default, see below.
 
 use std::time::Duration;
@@ -22,6 +26,17 @@ use lrc::util::{render_table, Args};
 
 fn main() {
     let args = Args::from_env();
+    // global parallelism: --threads N > LRC_THREADS env > all cores
+    if let Some(s) = args.get("threads") {
+        match s.parse::<usize>() {
+            Ok(n) if n > 0 => lrc::par::set_threads(n),
+            _ => {
+                eprintln!("error: --threads expects a positive integer, \
+                           got {s:?}");
+                std::process::exit(2);
+            }
+        }
+    }
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let res = match cmd {
         "info" => cmd_info(&args),
@@ -51,7 +66,15 @@ fn print_help() {
          eval     --model small --graph fwd_w4a4_r10_b8 [--quant <dir>]\n\
          \x20        [--fast]\n\
          serve    --model small [--prefix fwd_w4a4_r10] [--quant <dir>]\n\
-         \x20        [--requests 64] [--max-wait-ms 5]\n"
+         \x20        [--requests 64] [--max-wait-ms 5] [--workers 1]\n\
+         \n\
+         global flags:\n\
+         \x20 --threads N   size of the compute thread pool used by the\n\
+         \x20               calibration + per-layer quantization fan-out\n\
+         \x20               (default: LRC_THREADS env, else all cores;\n\
+         \x20               results are bit-identical at any setting)\n\
+         \x20 --workers N   serve-only: engine workers sharing the batch\n\
+         \x20               queue, one PJRT engine + session set each\n"
     );
 }
 
@@ -157,8 +180,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
             max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 5) as u64),
             max_queue: 4096,
         },
+        workers: args.get_usize("workers", 1),
     })?;
-    println!("serving {model}/{prefix} (seq_len={})", handle.seq_len);
+    println!("serving {model}/{prefix} (seq_len={}, workers={})",
+             handle.seq_len, handle.metrics.per_worker.len());
 
     // demo traffic from the held-out corpus
     let corpus = load_corpus("wiki_syn")?;

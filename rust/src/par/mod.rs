@@ -1,0 +1,220 @@
+//! Zero-dependency scoped thread pool — the parallel compute layer.
+//!
+//! Everything hot in this crate (GEMM, Gram updates, Jacobi sweeps, the
+//! per-layer quantization loop) is embarrassingly parallel, but PJRT
+//! aside, the stack must stay std-only.  This module provides the one
+//! primitive all of them share: run N deterministic work items across a
+//! bounded set of scoped threads (`std::thread::scope`), hand the items
+//! out through an atomics-based work queue, and give the results back in
+//! **fixed index order** so every reduction downstream is bit-identical
+//! regardless of thread count.
+//!
+//! Determinism contract: a [`Pool`] never changes *what* is computed,
+//! only *where*.  Work item `i` always produces the same value, and
+//! callers always fold results in index order — so `threads ∈ {1, 2, 8}`
+//! produce byte-identical outputs (see `tests/par_determinism.rs`).
+//!
+//! Pool sizing, in priority order:
+//!   1. an explicit [`set_threads`] call (the CLI's `--threads` flag),
+//!   2. the `LRC_THREADS` environment variable,
+//!   3. `std::thread::available_parallelism()`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Process-wide override installed by `--threads` (0 = unset).
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Install a process-wide thread-count override (the `--threads` flag).
+/// `0` clears the override.
+pub fn set_threads(n: usize) {
+    THREAD_OVERRIDE.store(n, Ordering::SeqCst);
+}
+
+/// Resolve the effective thread count: override > `LRC_THREADS` env >
+/// `available_parallelism` (≥ 1 always).
+pub fn threads() -> usize {
+    let o = THREAD_OVERRIDE.load(Ordering::SeqCst);
+    if o > 0 {
+        return o;
+    }
+    if let Ok(s) = std::env::var("LRC_THREADS") {
+        if let Ok(n) = s.parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// A sized handle over the scoped pool.  Cheap to copy; owns no threads —
+/// threads live only for the duration of each `map`/`for_each` call, so
+/// there is nothing to shut down and nested use is safe (inner calls just
+/// add their own scoped workers).
+#[derive(Clone, Copy, Debug)]
+pub struct Pool {
+    n: usize,
+}
+
+impl Pool {
+    /// A pool of exactly `n` worker threads (clamped to ≥ 1).
+    pub fn new(n: usize) -> Pool {
+        Pool { n: n.max(1) }
+    }
+
+    /// The process-default pool (see [`threads`]).
+    pub fn current() -> Pool {
+        Pool::new(threads())
+    }
+
+    /// A single-threaded pool: runs everything inline on the caller.
+    pub fn serial() -> Pool {
+        Pool::new(1)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.n
+    }
+
+    /// Apply `f` to every index in `0..n` and return the results in index
+    /// order.  Scheduling is dynamic (atomic cursor) so heterogeneous item
+    /// costs balance, but the output order — and therefore any fold over
+    /// it — is fixed.
+    pub fn map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let workers = self.n.min(n);
+        if workers <= 1 {
+            return (0..n).map(f).collect();
+        }
+        let cursor = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<T>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let out = f(i);
+                    *slots[i].lock().unwrap() = Some(out);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("pool worker filled slot"))
+            .collect()
+    }
+
+    /// Consume owned work items (e.g. disjoint `&mut` output slices) on
+    /// the pool.  Items are handed out dynamically; `f` runs once per
+    /// item.  Item payloads must be independent — the pool gives no
+    /// ordering guarantee *between* items, only that each runs exactly
+    /// once.
+    pub fn for_each<T, F>(&self, work: Vec<T>, f: F)
+    where
+        T: Send,
+        F: Fn(T) + Sync,
+    {
+        let n = work.len();
+        let workers = self.n.min(n);
+        if workers <= 1 {
+            for w in work {
+                f(w);
+            }
+            return;
+        }
+        let cursor = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<T>>> =
+            work.into_iter().map(|w| Mutex::new(Some(w))).collect();
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let item = slots[i].lock().unwrap().take();
+                    if let Some(w) = item {
+                        f(w);
+                    }
+                });
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn map_preserves_index_order() {
+        for t in [1, 2, 3, 8] {
+            let pool = Pool::new(t);
+            let out = pool.map(100, |i| i * i);
+            let expect: Vec<usize> = (0..100).map(|i| i * i).collect();
+            assert_eq!(out, expect, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn map_runs_each_index_exactly_once() {
+        let hits: Vec<AtomicU64> = (0..64).map(|_| AtomicU64::new(0)).collect();
+        let pool = Pool::new(4);
+        let _ = pool.map(64, |i| hits[i].fetch_add(1, Ordering::Relaxed));
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn map_handles_edge_sizes() {
+        let pool = Pool::new(8);
+        assert_eq!(pool.map(0, |i| i), Vec::<usize>::new());
+        assert_eq!(pool.map(1, |i| i + 7), vec![7]);
+        // more threads than items
+        assert_eq!(pool.map(3, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn for_each_consumes_every_item_once() {
+        let done: Vec<AtomicU64> = (0..37).map(|_| AtomicU64::new(0)).collect();
+        let work: Vec<usize> = (0..37).collect();
+        Pool::new(5).for_each(work, |i| {
+            done[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, d) in done.iter().enumerate() {
+            assert_eq!(d.load(Ordering::Relaxed), 1, "item {i}");
+        }
+    }
+
+    #[test]
+    fn for_each_supports_disjoint_mut_slices() {
+        // the exact pattern par_matmul_nt uses: chunked &mut writes
+        let mut data = vec![0.0_f64; 100];
+        let work: Vec<(usize, &mut [f64])> =
+            data.chunks_mut(16).enumerate().collect();
+        Pool::new(4).for_each(work, |(ci, chunk)| {
+            for (k, v) in chunk.iter_mut().enumerate() {
+                *v = (ci * 16 + k) as f64;
+            }
+        });
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i as f64);
+        }
+    }
+
+    #[test]
+    fn pool_sizing_clamps() {
+        assert_eq!(Pool::new(0).threads(), 1);
+        assert_eq!(Pool::serial().threads(), 1);
+        assert!(Pool::current().threads() >= 1);
+    }
+}

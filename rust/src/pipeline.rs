@@ -22,6 +22,7 @@ use anyhow::{anyhow, Result};
 use crate::data::Corpus;
 use crate::linalg::Mat;
 use crate::lrc::{lrc, svd::svd_baseline, LayerStats};
+use crate::par::Pool;
 use crate::quant::pack::{model_size_bytes, PackedInt4};
 use crate::quant::{search_act_clip, weight_scales, QuantConfig};
 use crate::runtime::{Engine, GraphInfo, ModelArtifacts, ModelInfo, TensorBundle};
@@ -138,13 +139,28 @@ pub struct CalibStats {
     pub seconds: f64,
 }
 
+/// Largest `acts_b*` batch bucket exported for this model — the bucket
+/// that amortizes session overhead best during calibration.
+fn largest_acts_graph(arts: &ModelArtifacts) -> Result<String> {
+    arts.bucket_graphs("acts")
+        .last()
+        .map(|(_, g)| g.name.clone())
+        .ok_or_else(|| {
+            anyhow!("model {} exports no acts_b* graph (have: {:?})",
+                    arts.info.name,
+                    arts.graphs.keys().collect::<Vec<_>>())
+        })
+}
+
 /// Stream `n_seqs` calibration sequences through the acts graph and
-/// accumulate Σ per activation (paper: 128 sequences).
+/// accumulate Σ per activation (paper: 128 sequences).  Σ partials are
+/// folded on the process pool (see [`LayerStats::update_rows_f32_par`]).
 pub fn collect_stats(engine: &Engine, arts: &ModelArtifacts, corpus: &Corpus,
                      n_seqs: usize, seed: u64, a_bits: Option<u32>,
                      a_group: Option<usize>) -> Result<CalibStats> {
     let t0 = Instant::now();
-    let gname = format!("acts_b{}", 8);
+    let pool = Pool::current();
+    let gname = largest_acts_graph(arts)?;
     let session = engine.session(arts, &gname, None)?;
     let seqs = corpus.calib_sequences(n_seqs, arts.info.seq_len, seed);
     let batches = crate::data::batch_sequences(&seqs, session.batch);
@@ -172,65 +188,121 @@ pub fn collect_stats(engine: &Engine, arts: &ModelArtifacts, corpus: &Corpus,
                 stats.insert(slice.name.clone(),
                              LayerStats::new(slice.dim, a_bits, clip, a_group));
             }
-            stats.get_mut(&slice.name).unwrap()
-                .update_rows_f32(&seg[..n_rows * slice.dim], n_rows);
+            let st = stats.get_mut(&slice.name).ok_or_else(|| {
+                anyhow!("activation slice {:?} first appeared after the \
+                         first calibration batch — the acts graph output \
+                         set must be stable across batches", slice.name)
+            })?;
+            st.update_rows_f32_par(&seg[..n_rows * slice.dim], n_rows, &pool);
         }
         first = false;
     }
     Ok(CalibStats { stats, seconds: t0.elapsed().as_secs_f64() })
 }
 
-/// Quantize every layer of `arts` with `method`, matching the rank layout
-/// of `graph` (the fwd graph the bundle will be fed into).
-pub fn quantize_model(arts: &ModelArtifacts, calib: &CalibStats,
-                      graph: &GraphInfo, method: Method, cfg: &QuantConfig)
-                      -> Result<(TensorBundle, PipelineReport)> {
-    let t0 = Instant::now();
-    let mut bundle = TensorBundle::default();
-    let mut layers = Vec::new();
-    let mut packed_bytes = 0usize;
-    let mut lowrank_params = 0usize;
+/// Everything one layer's worker produces; folded into the bundle and the
+/// report serially, in `quantized_layer_names` order.
+struct LayerArtifacts {
+    layer: String,
+    dout: usize,
+    din: usize,
+    wq: Vec<f32>,
+    u: Option<(usize, Vec<f32>)>,
+    v: Option<(usize, Vec<f32>)>,
+    clip: f64,
+    packed_bytes: usize,
+    report: LayerReport,
+}
 
-    for layer in quantized_layer_names(&arts.info) {
-        let wt = arts.weights.get(&layer)?;
-        let (dout, din) = (wt.shape[0], wt.shape[1]);
-        let w = Mat::from_f32(dout, din, &wt.data);
-        let src = activation_source(&layer);
-        let st = calib.stats.get(&src)
-            .ok_or_else(|| anyhow!("no stats for activation {src}"))?;
-        let k = *graph.ranks.get(&layer).unwrap_or(&0);
+/// Quantize one layer — the unit of work the pool fans out.  Pure: reads
+/// shared calibration state, touches nothing mutable.
+fn quantize_layer(arts: &ModelArtifacts, calib: &CalibStats,
+                  graph: &GraphInfo, method: Method, cfg: &QuantConfig,
+                  layer: &str) -> Result<LayerArtifacts> {
+    let wt = arts.weights.get(layer)?;
+    let (dout, din) = (wt.shape[0], wt.shape[1]);
+    let w = Mat::from_f32(dout, din, &wt.data);
+    let src = activation_source(layer);
+    let st = calib.stats.get(&src)
+        .ok_or_else(|| anyhow!("no stats for activation {src}"))?;
+    let k = *graph.ranks.get(layer).unwrap_or(&0);
 
-        let res = match method {
-            Method::Quarot => lrc(&w, st, 0, cfg).map_err(|e| anyhow!(e))?,
-            Method::Svd => svd_baseline(&w, st, k, cfg).map_err(|e| anyhow!(e))?,
-            Method::Lrc => lrc(&w, st, k, cfg).map_err(|e| anyhow!(e))?,
-        };
+    let res = match method {
+        Method::Quarot => lrc(&w, st, 0, cfg).map_err(|e| anyhow!(e))?,
+        Method::Svd => svd_baseline(&w, st, k, cfg).map_err(|e| anyhow!(e))?,
+        Method::Lrc => lrc(&w, st, k, cfg).map_err(|e| anyhow!(e))?,
+    };
 
-        // relative error vs the fp output energy: ℒ/‖WX‖²  (tr(WΣxWᵀ))
-        let wx = w.matmul(&st.sx).frob_dot(&w);
-        let rel = if wx > 0.0 { res.objective / wx } else { 0.0 };
+    // relative error vs the fp output energy: ℒ/‖WX‖²  (tr(WΣxWᵀ))
+    let wx = w.matmul(&st.sx).frob_dot(&w);
+    let rel = if wx > 0.0 { res.objective / wx } else { 0.0 };
 
-        bundle.insert(&format!("{layer}.wq"), vec![dout, din],
-                      res.w_hat.to_f32());
-        if let (Some(u), Some(v)) = (&res.u, &res.v) {
-            bundle.insert(&format!("{layer}.u"), vec![dout, u.cols], u.to_f32());
-            bundle.insert(&format!("{layer}.v"), vec![din, v.cols], v.to_f32());
-            lowrank_params += u.rows * u.cols + v.rows * v.cols;
-        }
-        bundle.insert(&format!("{layer}.clip"), vec![1], vec![st.clip as f32]);
+    // real storage accounting
+    let scales = weight_scales(&res.w_hat, cfg.w_bits, None);
+    let packed = PackedInt4::pack(&res.w_hat, &scales, None);
 
-        // real storage accounting
-        let scales = weight_scales(&res.w_hat, cfg.w_bits, None);
-        let packed = PackedInt4::pack(&res.w_hat, &scales, None);
-        packed_bytes += packed.size_bytes();
-
-        layers.push(LayerReport {
-            layer: layer.clone(),
+    Ok(LayerArtifacts {
+        layer: layer.to_string(),
+        dout,
+        din,
+        wq: res.w_hat.to_f32(),
+        u: res.u.as_ref().map(|u| (u.cols, u.to_f32())),
+        v: res.v.as_ref().map(|v| (v.cols, v.to_f32())),
+        clip: st.clip,
+        packed_bytes: packed.size_bytes(),
+        report: LayerReport {
+            layer: layer.to_string(),
             rank: k,
             objective: res.objective,
             rel_error: rel,
             clip: st.clip,
-        });
+        },
+    })
+}
+
+/// Quantize every layer of `arts` with `method`, matching the rank layout
+/// of `graph` (the fwd graph the bundle will be fed into).  Uses the
+/// process-default pool (`--threads` / `LRC_THREADS`).
+pub fn quantize_model(arts: &ModelArtifacts, calib: &CalibStats,
+                      graph: &GraphInfo, method: Method, cfg: &QuantConfig)
+                      -> Result<(TensorBundle, PipelineReport)> {
+    quantize_model_with_pool(arts, calib, graph, method, cfg, &Pool::current())
+}
+
+/// [`quantize_model`] on an explicit pool.
+///
+/// The per-layer solves depend only on the shared calibration statistics,
+/// so the layer loop is embarrassingly parallel; workers pull layers from
+/// the pool's queue and results are folded back in
+/// [`quantized_layer_names`] order — bundles and reports are therefore
+/// byte-identical for every thread count.
+pub fn quantize_model_with_pool(arts: &ModelArtifacts, calib: &CalibStats,
+                                graph: &GraphInfo, method: Method,
+                                cfg: &QuantConfig, pool: &Pool)
+                                -> Result<(TensorBundle, PipelineReport)> {
+    let t0 = Instant::now();
+    let names = quantized_layer_names(&arts.info);
+    let results = pool.map(names.len(), |i| {
+        quantize_layer(arts, calib, graph, method, cfg, &names[i])
+    });
+
+    let mut bundle = TensorBundle::default();
+    let mut layers = Vec::new();
+    let mut packed_bytes = 0usize;
+    let mut lowrank_params = 0usize;
+    for res in results {
+        let la = res?;
+        let layer = &la.layer;
+        bundle.insert(&format!("{layer}.wq"), vec![la.dout, la.din], la.wq);
+        if let (Some((uk, u)), Some((vk, v))) = (la.u, la.v) {
+            lowrank_params += la.dout * uk + la.din * vk;
+            bundle.insert(&format!("{layer}.u"), vec![la.dout, uk], u);
+            bundle.insert(&format!("{layer}.v"), vec![la.din, vk], v);
+        }
+        bundle.insert(&format!("{layer}.clip"), vec![1],
+                      vec![la.clip as f32]);
+        packed_bytes += la.packed_bytes;
+        layers.push(la.report);
     }
 
     // fp params = everything not quantized (embeddings, norms, head, router)

@@ -241,6 +241,24 @@ impl ModelArtifacts {
         self.graphs.get(name)
             .ok_or_else(|| anyhow!("graph {name} not in {:?}", self.dir))
     }
+
+    /// Graphs named `<prefix>_b<N>` as (bucket N, graph), ascending by
+    /// bucket — the single place the batch-bucket naming scheme is
+    /// parsed (calibration picks the largest, the coordinator compiles
+    /// them all).
+    pub fn bucket_graphs(&self, prefix: &str) -> Vec<(usize, &GraphInfo)> {
+        let pat = format!("{prefix}_b");
+        let mut out = Vec::new();
+        for (name, g) in &self.graphs {
+            if let Some(rest) = name.strip_prefix(&pat) {
+                if let Ok(b) = rest.parse::<usize>() {
+                    out.push((b, g));
+                }
+            }
+        }
+        out.sort_by_key(|(b, _)| *b);
+        out
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -395,5 +413,42 @@ mod tests {
     fn bundle_missing_tensor_errors() {
         let b = TensorBundle::default();
         assert!(b.get("nope").is_err());
+    }
+
+    #[test]
+    fn bucket_graphs_filters_and_sorts() {
+        let mk = |name: &str, batch: usize| GraphInfo {
+            name: name.into(),
+            file: PathBuf::new(),
+            params: Vec::new(),
+            batch,
+            ranks: BTreeMap::new(),
+            rank_pct: 0.0,
+            a_group: None,
+            weight_only: false,
+            acts: Vec::new(),
+        };
+        let mut graphs = BTreeMap::new();
+        for (n, b) in [("acts_b8", 8), ("acts_b1", 1), ("acts_b32", 32),
+                       ("fwd_fp_b8", 8), ("acts_bx", 0)] {
+            graphs.insert(n.to_string(), mk(n, b));
+        }
+        let arts = ModelArtifacts {
+            dir: PathBuf::new(),
+            weights: TensorBundle::default(),
+            graphs,
+            info: ModelInfo {
+                name: "t".into(), d_model: 0, n_layers: 0, n_heads: 0,
+                d_ff: 0, n_experts: 0, seq_len: 0, vocab: 0, param_count: 0,
+            },
+        };
+        let acts = arts.bucket_graphs("acts");
+        let got: Vec<(usize, &str)> =
+            acts.iter().map(|(b, g)| (*b, g.name.as_str())).collect();
+        // malformed "acts_bx" and other prefixes excluded; ascending order
+        assert_eq!(got, vec![(1, "acts_b1"), (8, "acts_b8"),
+                             (32, "acts_b32")]);
+        assert_eq!(arts.bucket_graphs("fwd_fp").len(), 1);
+        assert!(arts.bucket_graphs("nope").is_empty());
     }
 }

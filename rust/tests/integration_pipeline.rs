@@ -133,6 +133,7 @@ fn coordinator_serves_fp_graph() {
             max_wait: Duration::from_millis(2),
             max_queue: 256,
         },
+        workers: 2,
     })
     .unwrap();
     let seqs = corpus.eval_sequences(handle.seq_len, 24);
@@ -162,6 +163,7 @@ fn coordinator_rejects_bad_seq_len() {
         graph_prefix: "fwd_fp".into(),
         quant_dir: None,
         policy: BatchPolicy::default(),
+        workers: 1,
     })
     .unwrap();
     assert!(handle.submit(vec![1, 2, 3]).is_err());

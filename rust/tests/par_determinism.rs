@@ -1,0 +1,154 @@
+//! The determinism contract of the parallel compute layer, end to end:
+//! `quantize_model` fans the per-layer solves out across the pool, and the
+//! resulting bundle + report must be **byte-identical** for every thread
+//! count.  Runs on synthetic in-memory artifacts — no PJRT, no `make
+//! artifacts` — so it is always exercised.
+
+use std::collections::BTreeMap;
+
+use lrc::linalg::Mat;
+use lrc::lrc::LayerStats;
+use lrc::par::Pool;
+use lrc::pipeline::{activation_source, quantize_model_with_pool,
+                    quantized_layer_names, Method};
+use lrc::quant::QuantConfig;
+use lrc::rng::Rng;
+use lrc::runtime::{GraphInfo, ModelArtifacts, ModelInfo, TensorBundle};
+
+fn synthetic_model() -> (ModelArtifacts, lrc::pipeline::CalibStats, GraphInfo) {
+    let (d_model, d_ff) = (8usize, 16usize);
+    let info = ModelInfo {
+        name: "synthetic".into(),
+        d_model,
+        n_layers: 1,
+        n_heads: 2,
+        d_ff,
+        n_experts: 0,
+        seq_len: 4,
+        vocab: 32,
+        param_count: 0,
+    };
+
+    let mut rng = Rng::new(2024);
+    let mut weights = TensorBundle::default();
+    let mut ranks = BTreeMap::new();
+    for layer in quantized_layer_names(&info) {
+        let (dout, din) = match layer.rsplit_once('.').unwrap().1 {
+            "wgate" | "wup" => (d_ff, d_model),
+            "wdown" => (d_model, d_ff),
+            _ => (d_model, d_model),
+        };
+        let data: Vec<f32> =
+            rng.normal_vec(dout * din).iter().map(|&v| v as f32).collect();
+        weights.insert(&layer, vec![dout, din], data);
+        ranks.insert(layer, 2usize);
+    }
+    // a non-quantized tensor so fp_params accounting is exercised
+    weights.insert("embed", vec![info.vocab, d_model],
+                   vec![0.01; info.vocab * d_model]);
+
+    let arts = ModelArtifacts {
+        dir: std::env::temp_dir().join("lrc_par_determinism"),
+        weights,
+        graphs: BTreeMap::new(),
+        info,
+    };
+
+    // calibration statistics per activation source, correlated activations
+    let mut stats = BTreeMap::new();
+    for layer in quantized_layer_names(&arts.info) {
+        let src = activation_source(&layer);
+        if stats.contains_key(&src) {
+            continue;
+        }
+        let din = if src.ends_with("ffn_had") { d_ff } else { d_model };
+        let x = Mat::random_normal(&mut rng, din, 64 * din);
+        let mut st = LayerStats::new(din, Some(4), 0.9, None);
+        st.update(&x);
+        stats.insert(src, st);
+    }
+    let calib = lrc::pipeline::CalibStats { stats, seconds: 0.0 };
+
+    let graph = GraphInfo {
+        name: "fwd_w4a4_r10_b8".into(),
+        file: std::path::PathBuf::new(),
+        params: Vec::new(),
+        batch: 8,
+        ranks,
+        rank_pct: 0.10,
+        a_group: None,
+        weight_only: false,
+        acts: Vec::new(),
+    };
+    (arts, calib, graph)
+}
+
+#[test]
+fn quantize_model_bit_identical_across_thread_counts() {
+    let (arts, calib, graph) = synthetic_model();
+    let cfg = QuantConfig::default();
+    for method in [Method::Lrc, Method::Svd, Method::Quarot] {
+        let (b1, r1) = quantize_model_with_pool(
+            &arts, &calib, &graph, method, &cfg, &Pool::new(1)).unwrap();
+        for t in [2usize, 8] {
+            let (bt, rt) = quantize_model_with_pool(
+                &arts, &calib, &graph, method, &cfg, &Pool::new(t)).unwrap();
+            // bundle: same tensors, same order, same bytes
+            assert_eq!(b1.order, bt.order, "{method:?} threads={t}");
+            for name in &b1.order {
+                let x = b1.get(name).unwrap();
+                let y = bt.get(name).unwrap();
+                assert_eq!(x.shape, y.shape, "{method:?} {name} t={t}");
+                assert_eq!(x.data, y.data, "{method:?} {name} t={t}");
+            }
+            // report: objectives (the acceptance criterion) + accounting
+            assert_eq!(r1.layers.len(), rt.layers.len());
+            for (a, b) in r1.layers.iter().zip(&rt.layers) {
+                assert_eq!(a.layer, b.layer, "{method:?} t={t}");
+                assert_eq!(a.rank, b.rank);
+                assert_eq!(a.objective.to_bits(), b.objective.to_bits(),
+                           "{method:?} {}: objective differs at t={t}",
+                           a.layer);
+                assert_eq!(a.rel_error.to_bits(), b.rel_error.to_bits());
+            }
+            assert_eq!(r1.packed_bytes, rt.packed_bytes);
+            assert_eq!(r1.lowrank_params, rt.lowrank_params);
+            assert_eq!(r1.fp_params, rt.fp_params);
+        }
+    }
+}
+
+#[test]
+fn fanout_matches_direct_per_layer_solve() {
+    // the pool must not change the math: a layer solved directly equals
+    // the same layer pulled out of the fan-out, bit for bit
+    let (arts, calib, graph) = synthetic_model();
+    let cfg = QuantConfig::default();
+    let (bundle, report) = quantize_model_with_pool(
+        &arts, &calib, &graph, Method::Lrc, &cfg, &Pool::new(4)).unwrap();
+
+    let layer = "blk0.wq";
+    let wt = arts.weights.get(layer).unwrap();
+    let w = Mat::from_f32(wt.shape[0], wt.shape[1], &wt.data);
+    let st = &calib.stats[&activation_source(layer)];
+    let direct = lrc::lrc::lrc(&w, st, graph.ranks[layer], &cfg).unwrap();
+
+    let rep = report.layers.iter().find(|l| l.layer == layer).unwrap();
+    assert_eq!(rep.objective.to_bits(), direct.objective.to_bits());
+    let wq = bundle.get(&format!("{layer}.wq")).unwrap();
+    assert_eq!(wq.data, direct.w_hat.to_f32());
+}
+
+#[test]
+fn report_layer_order_is_canonical() {
+    // results come back in quantized_layer_names order regardless of
+    // which worker finished first
+    let (arts, calib, graph) = synthetic_model();
+    let (_, report) = quantize_model_with_pool(
+        &arts, &calib, &graph, Method::Quarot, &QuantConfig::default(),
+        &Pool::new(8)).unwrap();
+    let expect = quantized_layer_names(&arts.info);
+    let got: Vec<String> =
+        report.layers.iter().map(|l| l.layer.clone()).collect();
+    assert_eq!(got, expect);
+}

@@ -1,0 +1,246 @@
+//! Offline, dependency-free shim of the `anyhow` error-handling crate.
+//!
+//! The build image ships no crates.io registry, so this path dependency
+//! provides the exact API subset the `lrc` crate uses — drop-in
+//! compatible with the real `anyhow` for:
+//!
+//!   * [`Error`] with [`Error::msg`] and source-chain collection,
+//!   * [`Result<T>`] (defaulted error parameter),
+//!   * the [`anyhow!`], [`bail!`] and [`ensure!`] macros,
+//!   * the [`Context`] extension trait (`context` / `with_context`) on
+//!     `Result` and `Option`,
+//!   * `From<E: std::error::Error>` so `?` converts std errors,
+//!   * `{e}` / `{e:#}` Display (head message / full `a: b: c` chain) and
+//!     an anyhow-style Debug ("Caused by:" list).
+//!
+//! Swapping back to the real crate is a one-line change in
+//! `rust/Cargo.toml`; nothing in the consuming code needs to move.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the same defaulted shape as anyhow.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A string-chained error: `chain[0]` is the outermost message, the rest
+/// are successively deeper causes.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message (anyhow-compatible).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The message chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The outermost message (what `{e}` prints).
+    pub fn root_message(&self) -> &str {
+        &self.chain[0]
+    }
+
+    fn from_std<E: StdError + ?Sized>(e: &E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{e:#}` — the full chain, anyhow-style
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for c in &self.chain[1..] {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `?` on any std error.  Coherent because `Error` itself deliberately
+// does NOT implement `std::error::Error` (same trick as real anyhow).
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::from_std(&e)
+    }
+}
+
+/// `.context(...)` / `.with_context(|| ...)` on fallible values.
+pub trait Context<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for std::result::Result<T, E>
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error::from_std(&e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from_std(&e).context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// `anyhow!("fmt {x}")`, `anyhow!(displayable)`, `anyhow!("{} {}", a, b)`.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// `return Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// `ensure!(cond, ...)` — bail unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn macro_forms() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let name = "x";
+        let e = anyhow!("tensor {name} bad");
+        assert_eq!(e.to_string(), "tensor x bad");
+        let e = anyhow!("{} of {}", 1, 2);
+        assert_eq!(e.to_string(), "1 of 2");
+        let s: String = "owned".into();
+        let e = anyhow!(s);
+        assert_eq!(e.to_string(), "owned");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {flag}");
+            if !flag {
+                bail!("unreachable");
+            }
+            Ok(7)
+        }
+        assert_eq!(f(true).unwrap(), 7);
+        assert_eq!(f(false).unwrap_err().to_string(), "flag was false");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            let _n: usize = "nope".parse()?;
+            Ok(())
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn context_chains_and_alternate_display() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| "reading manifest").unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: missing file");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("empty").unwrap_err();
+        assert_eq!(e.to_string(), "empty");
+        assert_eq!(Some(3u32).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn error_msg_as_fn_pointer() {
+        // the `.map_err(anyhow::Error::msg)` pattern used by the crate
+        let r: std::result::Result<(), String> = Err("boom".into());
+        let e = r.map_err(Error::msg).unwrap_err();
+        assert_eq!(e.to_string(), "boom");
+    }
+}
