@@ -1,35 +1,32 @@
 //! Quickstart: the LRC algorithm on a single layer, pure library — no
 //! artifacts needed.
 //!
-//!   cargo run --release --example quickstart
+//!   cargo run --release --example quickstart [-- --threads N]
 //!
 //! Builds a correlated, outlier-bearing layer problem (the regime W4A4
 //! struggles in), then compares reconstruction error across the paper's
 //! methods: RTN, GPTQ (=QuaRot after rotation), GPTQ+SVD, LRC(1), LRC(5),
-//! and the Prop-3.4 perfect-quantizer oracle.
+//! and the Prop-3.4 perfect-quantizer oracle.  There is no per-layer
+//! fan-out here, so the solves lean on the blocked-k GEMM/Gram kernels'
+//! automatic parallelism on the shared persistent pool.
 
-use lrc::linalg::Mat;
 use lrc::lrc::{init_lr, lrc, oracle_wtilde, qlr_objective, svd::svd_baseline,
-               LayerStats};
+               LayerStats, TestModel};
 use lrc::quant::{rank_for_pct, QuantConfig, Quantizer};
-use lrc::rng::Rng;
+use lrc::util::Args;
 
 fn main() {
+    let args = Args::from_env();
+    if let Some(t) = args.get("threads").and_then(|s| s.parse::<usize>().ok()) {
+        lrc::par::set_threads(t);
+    }
     let (dout, din, n) = (96, 128, 4096);
-    println!("LRC quickstart — one linear layer [{dout}x{din}], {n} calibration tokens\n");
+    println!("LRC quickstart — one linear layer [{dout}x{din}], {n} calibration tokens");
+    println!("({} pool threads; single-layer workload → inner kernel parallelism)\n",
+             lrc::par::threads());
 
     // --- a realistic layer problem -------------------------------------
-    let mut rng = Rng::new(42);
-    let w = Mat::random_normal(&mut rng, dout, din);
-    let base = Mat::random_normal(&mut rng, din / 4, n);
-    let mixer = Mat::random_normal(&mut rng, din, din / 4);
-    let mut x = mixer.matmul(&base)
-        .add(&Mat::random_normal(&mut rng, din, n).scale(0.1));
-    for i in (0..din).step_by(16) {
-        for j in 0..n {
-            x[(i, j)] *= 8.0; // outlier channels — what QuaRot rotates away
-        }
-    }
+    let (w, x) = TestModel::layer_problem(42, dout, din, n);
 
     // --- accumulate Σ statistics (Algorithm 1, lines 3–5) ---------------
     let mut st = LayerStats::new(din, Some(4), 0.9, None);

@@ -3,7 +3,11 @@
 //! PPL against the FP16 and QuaRot baselines.
 //!
 //!   cargo run --release --example rank_ablation -- [--model nano] [--fast]
-//!       [--group 32]
+//!       [--group 32] [--threads N]
+//!
+//! Rank sweeps quantize one model variant at a time, so besides the
+//! per-layer fan-out they ride the blocked-k kernels' automatic
+//! parallelism on the shared persistent pool (`--threads` sizes it).
 
 use anyhow::Result;
 use lrc::data::Corpus;
@@ -15,6 +19,9 @@ use lrc::util::{render_table, Args};
 
 fn main() -> Result<()> {
     let args = Args::from_env();
+    if let Some(t) = args.get("threads").and_then(|s| s.parse::<usize>().ok()) {
+        lrc::par::set_threads(t);
+    }
     let model = args.get_or("model", "nano");
     let group = args.get("group").and_then(|g| g.parse().ok());
     let budget = if args.has("fast") { EvalBudget::fast() } else { EvalBudget::full() };

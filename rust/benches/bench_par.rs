@@ -1,15 +1,26 @@
-//! Thread-pool scaling benchmarks — the §Perf substrate for the `par`
-//! subsystem: par_* linalg kernels and the per-layer quantization
-//! fan-out at 1/2/4/all threads, reporting speedup over serial.
+//! Thread-pool + kernel benchmarks — the §Perf substrate for the `par`
+//! subsystem and the blocked-k GEMM:
 //!
-//! Acceptance shape: on a 4+ core host the per-layer fan-out should show
-//! ≥ 2× at 4 threads (the layer solves are embarrassingly parallel; the
-//! kernels scale until memory bandwidth bites).
+//!   * par_* kernel scaling at 1/2/4/all threads,
+//!   * blocked-k kernel vs the naive triple loop (512×512, serial),
+//!   * persistent pool vs per-call scoped spawning on the
+//!     `eigh_jacobi_par` round workload (the fine-grained dispatch the
+//!     persistent board exists for),
+//!   * the per-layer quantization fan-out,
+//!   * raw dispatch overhead (persistent epoch vs scoped spawn/join).
 //!
-//!   cargo bench --bench bench_par [-- --samples 5 --dim 256 --layers 12]
+//! Acceptance shape: ≥ 2× fan-out speedup at 4 threads on a 4+ core
+//! host; persistent ≥ 2× over scoped on the eigh round workload at 8
+//! threads; blocked-k beats the naive triple loop on 512×512.
+//!
+//!   cargo bench --bench bench_par [-- --quick] [-- --samples 5
+//!       --dim 256 --layers 12]
+//!
+//! `--quick` shrinks sample counts and problem sizes so CI can run the
+//! whole target as a smoke job and log the scaling numbers per commit.
 
 use lrc::bench::{bench, bench_report, section, speedup};
-use lrc::linalg::Mat;
+use lrc::linalg::{eigh_jacobi_par, Mat};
 use lrc::lrc::{lrc, LayerStats};
 use lrc::par::Pool;
 use lrc::quant::QuantConfig;
@@ -32,8 +43,9 @@ fn bench_kernels(samples: usize, d: usize) {
     let b = Mat::random_normal(&mut rng, d, d);
 
     section(&format!("par_matmul_nt {d}x{d} (speedup vs 1 thread)"));
+    let serial = Pool::serial();
     let base = bench(1, samples, || {
-        let _ = a.par_matmul_nt(&b, &Pool::new(1));
+        let _ = a.par_matmul_nt(&b, &serial);
     });
     println!("{:<40} {:>12}", "threads=1", base.pm());
     for t in thread_counts().into_iter().skip(1) {
@@ -47,7 +59,7 @@ fn bench_kernels(samples: usize, d: usize) {
 
     section(&format!("par_gram_t {d}x{d}"));
     let base = bench(1, samples, || {
-        let _ = a.par_gram_t(&Pool::new(1));
+        let _ = a.par_gram_t(&serial);
     });
     println!("{:<40} {:>12}", "threads=1", base.pm());
     for t in thread_counts().into_iter().skip(1) {
@@ -57,6 +69,77 @@ fn bench_kernels(samples: usize, d: usize) {
         });
         println!("{:<40} {:>12}  → {:.2}x", format!("threads={t}"), s.pm(),
                  speedup(&base, &s));
+    }
+}
+
+/// The naive triple loop (single accumulator, ascending k) — the
+/// reference the blocked kernel must beat on wall-clock while matching
+/// bit-for-bit (tests/kernel_oracle.rs asserts the latter).
+fn naive_matmul_nt(a: &Mat, bt: &Mat) -> Mat {
+    let mut out = Mat::zeros(a.rows, bt.rows);
+    for i in 0..a.rows {
+        for j in 0..bt.rows {
+            let (ar, br) = (a.row(i), bt.row(j));
+            let mut s = 0.0_f64;
+            for (x, y) in ar.iter().zip(br) {
+                s += x * y;
+            }
+            out[(i, j)] = s;
+        }
+    }
+    out
+}
+
+fn bench_blocked_vs_naive(samples: usize, d: usize) {
+    let mut rng = Rng::new(3);
+    let a = Mat::random_normal(&mut rng, d, d);
+    let b = Mat::random_normal(&mut rng, d, d);
+
+    section(&format!(
+        "blocked-k GEMM vs naive triple loop ({d}x{d}, serial)"));
+    let naive = bench(0, samples, || {
+        let _ = naive_matmul_nt(&a, &b);
+    });
+    println!("{:<40} {:>12}", "naive triple loop", naive.pm());
+    let serial = Pool::serial();
+    let blocked = bench(0, samples, || {
+        let _ = a.par_matmul_nt(&b, &serial);
+    });
+    println!("{:<40} {:>12}  → {:.2}x  (target > 1x)",
+             "blocked-k register-tiled", blocked.pm(),
+             speedup(&naive, &blocked));
+    let auto = bench(0, samples, || {
+        let _ = a.matmul_nt(&b);
+    });
+    println!("{:<40} {:>12}  → {:.2}x  (auto-par on the global pool)",
+             "matmul_nt (auto)", auto.pm(), speedup(&naive, &auto));
+}
+
+fn bench_eigh_dispatch(samples: usize, n: usize) {
+    let mut rng = Rng::new(5);
+    let g = Mat::random_normal(&mut rng, n, n);
+    let a = g.add(&g.transpose()).scale(0.5);
+
+    section(&format!(
+        "eigh_jacobi_par {n}x{n} rounds — persistent pool vs per-call \
+         scoped spawn"));
+    let serial = bench(0, samples, || {
+        let _ = eigh_jacobi_par(&a, &Pool::serial());
+    });
+    println!("{:<40} {:>12}", "threads=1 (inline)", serial.pm());
+    for t in [2usize, 8] {
+        let pool = Pool::new(t);
+        let persistent = bench(0, samples, || {
+            let _ = eigh_jacobi_par(&a, &pool);
+        });
+        let scoped_pool = pool.scoped();
+        let scoped = bench(0, samples, || {
+            let _ = eigh_jacobi_par(&a, &scoped_pool);
+        });
+        println!("threads={t}: persistent {:>12} | scoped {:>12}  → \
+                  persistent {:.2}x faster{}",
+                 persistent.pm(), scoped.pm(), speedup(&scoped, &persistent),
+                 if t == 8 { "  (target ≥ 2x)" } else { "" });
     }
 }
 
@@ -85,7 +168,8 @@ fn bench_layer_fanout(samples: usize, n_layers: usize, d: usize) {
         });
         assert_eq!(res.len(), n_layers);
     };
-    let base = bench(1, samples, || run(&Pool::new(1)));
+    let serial = Pool::serial();
+    let base = bench(1, samples, || run(&serial));
     println!("{:<40} {:>12}", "threads=1", base.pm());
     let mut best = 1.0_f64;
     for t in thread_counts().into_iter().skip(1) {
@@ -99,23 +183,34 @@ fn bench_layer_fanout(samples: usize, n_layers: usize, d: usize) {
               (target ≥ 2x on 4+ cores)");
 }
 
-fn main() {
-    let args = Args::from_env();
-    let samples = args.get_usize("samples", 5);
-    let d = args.get_usize("dim", 256);
-    let n_layers = args.get_usize("layers", 12);
-
-    println!("host parallelism: {} cores",
-             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
-
-    bench_kernels(samples, d);
-    bench_layer_fanout(samples, n_layers, d.min(96));
-
-    // pool overhead floor: tiny items, big pool
-    section("pool dispatch overhead (4096 trivial items)");
-    bench_report("map 4096 x (i*i)", 1, samples, || {
-        let pool = Pool::new(4);
+fn bench_dispatch_overhead(samples: usize) {
+    section("pool dispatch overhead (map of 4096 trivial items, 4 threads)");
+    let pool = Pool::new(4);
+    bench_report("persistent board (epoch publish)", 1, samples, || {
         let v = pool.map(4096, |i| i * i);
         assert_eq!(v.len(), 4096);
     });
+    let scoped = pool.scoped();
+    bench_report("scoped (spawn/join per call)", 1, samples, || {
+        let v = scoped.map(4096, |i| i * i);
+        assert_eq!(v.len(), 4096);
+    });
+}
+
+fn main() {
+    let args = Args::from_env();
+    let quick = args.has("quick");
+    let samples = args.get_usize("samples", if quick { 2 } else { 5 });
+    let d = args.get_usize("dim", if quick { 128 } else { 256 });
+    let n_layers = args.get_usize("layers", if quick { 6 } else { 12 });
+
+    println!("host parallelism: {} cores{}",
+             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+             if quick { " (quick mode)" } else { "" });
+
+    bench_kernels(samples, d);
+    bench_blocked_vs_naive(samples.min(3), 512);
+    bench_eigh_dispatch(samples.clamp(1, 2), if quick { 48 } else { 64 });
+    bench_layer_fanout(samples, n_layers, d.min(96));
+    bench_dispatch_overhead(samples);
 }

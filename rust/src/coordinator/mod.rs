@@ -18,8 +18,10 @@
 //! [`ServerMetrics`] already excludes.
 //!
 //! The service scores sequences (sum/mean NLL — the serving primitive
-//! behind perplexity and multiple-choice evaluation).  Metrics cover
-//! queue wait, execute latency and end-to-end latency.
+//! behind perplexity and multiple-choice evaluation).  Per-row scoring
+//! fans out on a per-worker persistent [`crate::par::Pool`] sized to an
+//! even split of the process thread budget.  Metrics cover queue wait,
+//! execute latency and end-to-end latency.
 
 pub mod batcher;
 pub mod metrics;
@@ -210,6 +212,14 @@ fn worker_loop(cfg: ServerConfig, wid: usize, queue: Arc<Batcher>,
         }
     };
     let max_bucket = buckets.last().map(|(b, _)| *b).unwrap_or(1);
+    // Per-row NLL scoring (softmax over the vocab per position) is the
+    // CPU-side hot loop of a batch; fan it out on a per-worker persistent
+    // pool.  The process thread budget is split evenly across the engine
+    // workers so N workers never oversubscribe the host, and each row is
+    // scored by the same scalar program — responses are bit-identical to
+    // the serial loop.
+    let score_pool = crate::par::Pool::new(
+        (crate::par::threads() / cfg.workers.max(1)).max(1));
 
     loop {
         let batch = match queue.next_batch(max_bucket) {
@@ -252,10 +262,15 @@ fn worker_loop(cfg: ServerConfig, wid: usize, queue: Arc<Batcher>,
         wm.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
         wm.exec_lat_us.record(exec_us);
 
-        for (row, req) in batch.iter().enumerate() {
+        // score on the token slices only (the closure must be Sync; the
+        // requests' response senders need not be)
+        let token_rows: Vec<&[i32]> =
+            batch.iter().map(|r| r.tokens.as_slice()).collect();
+        let nlls = score_pool.map(token_rows.len(), |row| {
+            let tokens = token_rows[row];
             let mut nll = 0.0_f64;
             for t in 0..seq_len - 1 {
-                let target = req.tokens[t + 1] as usize;
+                let target = tokens[t + 1] as usize;
                 let off = (row * seq_len + t) * vocab;
                 let lrow = &logits[off..off + vocab];
                 let max = lrow.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b)) as f64;
@@ -265,6 +280,9 @@ fn worker_loop(cfg: ServerConfig, wid: usize, queue: Arc<Batcher>,
                 }
                 nll -= (lrow[target] as f64) - max - sum.ln();
             }
+            nll
+        });
+        for (req, &nll) in batch.iter().zip(&nlls) {
             let total_us = req.enqueued.elapsed().as_micros() as u64;
             let queue_us = total_us.saturating_sub(exec_us);
             let _ = metrics.first_done_us.compare_exchange(

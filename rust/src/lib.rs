@@ -9,13 +9,19 @@
 //!
 //! Module map:
 //!
-//! * [`par`]         — zero-dependency scoped thread pool (std-only work
-//!                     queue; `LRC_THREADS` / `--threads` sizing) with a
+//! * [`par`]         — zero-dependency **persistent** worker pool (parked
+//!                     std threads on a Mutex/Condvar job board, epoch
+//!                     generations, `Pool::scoped()` spawn-per-call escape
+//!                     hatch; `LRC_THREADS` / `--threads` sizing) with a
 //!                     fixed-order reduction contract: results are
 //!                     bit-identical at every thread count
 //! * [`linalg`]      — dense f64 linear algebra built from scratch
-//!                     (blocked GEMM, Cholesky, Jacobi eigensolver, FWHT;
-//!                     `par_*` row-chunked variants of every O(n³) kernel)
+//!                     (blocked-k / register-tiled GEMM micro-kernels with
+//!                     a canonical per-element accumulation order — serial,
+//!                     blocked and parallel paths agree bit-for-bit, see
+//!                     `tests/kernel_oracle.rs`; Cholesky, Jacobi
+//!                     eigensolver, FWHT; `par_*` variants plus automatic
+//!                     parallelism past a fixed work threshold)
 //! * [`rng`]         — deterministic SplitMix64 RNG
 //! * [`quant`]       — RTN / GPTQ quantizers + int4 bit-packing
 //! * [`lrc`]         — the paper's Algorithms 1–4 + SVD baseline + oracle

@@ -295,6 +295,12 @@ pub fn eigh_jacobi(a: &Mat) -> (Vec<f64>, Mat) {
 /// Intended for large single-matrix workloads; inside the per-layer
 /// quantization fan-out the serial QL path stays the right choice (the
 /// layers themselves already saturate the pool).
+///
+/// The two `map` calls per round are exactly the fine-grained dispatch
+/// pattern the persistent pool exists for: a parked-worker epoch costs a
+/// couple of mutex hops where a scoped spawn/join cycle costs hundreds of
+/// microseconds (see `bench_par`'s persistent-vs-scoped section).  Pass
+/// `pool.scoped()` to get the old spawn-per-call behavior.
 pub fn eigh_jacobi_par(a: &Mat, pool: &crate::par::Pool) -> (Vec<f64>, Mat) {
     assert_eq!(a.rows, a.cols);
     let n = a.rows;

@@ -1,0 +1,276 @@
+//! Blocked-k / register-tiled GEMM micro-kernels.
+//!
+//! # The canonical-scalar-program contract
+//!
+//! Every output element these kernels produce is computed by **one fixed
+//! floating-point program**: a single accumulator that adds
+//! `a[i,k]·b[j,k]` in strictly ascending `k`.  Blocking and tiling change
+//! only the *order in which different elements advance* (cache locality)
+//! and how many independent accumulator chains are in flight at once
+//! (instruction-level parallelism); they never reassociate the sum inside
+//! one element.  Two consequences, both load-bearing:
+//!
+//!   * the result is **bit-identical to the naive triple loop** — the
+//!     randomized oracle in `tests/kernel_oracle.rs` asserts `==` on f64,
+//!   * any row chunking is bit-identical too, so the serial and parallel
+//!     paths agree at every thread count *by construction* (no careful
+//!     chunk-alignment argument needed, unlike the old 2×2 kernel).
+//!
+//! # Block schedule
+//!
+//! Compile-time fixed — never derived from the thread count or the host:
+//! [`NC`]-row panels of Bᵀ are held hot while [`KC`]-wide k-panels stream
+//! through [`MR`]×[`NR`] register tiles.  The MR×NR tile carries 16
+//! independent accumulator chains, which is what covers the FP-add
+//! latency×throughput product on current cores; KC·(MR+NR) f64 ≈ 16 KB
+//! keeps the active slices in L1, and the NC×KC B-panel (128 KB) in L2.
+
+use super::Mat;
+
+/// Register-tile rows (A rows advanced together).
+pub const MR: usize = 4;
+/// Register-tile columns (Bᵀ rows advanced together).
+pub const NR: usize = 4;
+/// k-panel width: columns of A/Bᵀ processed per pass.
+pub const KC: usize = 256;
+/// Output-column panel: Bᵀ rows kept hot across one row sweep.
+pub const NC: usize = 64;
+
+/// C[r0..r1, :] = A[r0..r1, :]·Bᵀ, written into `out` (row-major,
+/// `(r1-r0) × bt.rows`, rows indexed relative to `r0`).
+///
+/// `out` must be zero-initialized: the kernel accumulates k-panels into
+/// it, which is exactly what keeps every element on the canonical
+/// ascending-k program.
+pub(crate) fn matmul_nt_block(a: &Mat, bt: &Mat, r0: usize, r1: usize,
+                              out: &mut [f64]) {
+    let n = bt.rows;
+    let kd = a.cols;
+    debug_assert_eq!(out.len(), (r1 - r0) * n);
+    let mut jc = 0;
+    while jc < n {
+        let jc_hi = (jc + NC).min(n);
+        let mut kc = 0;
+        while kc < kd {
+            let kc_hi = (kc + KC).min(kd);
+            let mut i = r0;
+            while i < r1 {
+                let i_hi = (i + MR).min(r1);
+                let mut j = jc;
+                while j < jc_hi {
+                    let j_hi = (j + NR).min(jc_hi);
+                    if i_hi - i == MR && j_hi - j == NR {
+                        tile_full(a, bt, i, j, kc, kc_hi, r0, n, out);
+                    } else {
+                        tile_edge(a, bt, i, i_hi, j, j_hi, kc, kc_hi, r0, n,
+                                  out);
+                    }
+                    j = j_hi;
+                }
+                i = i_hi;
+            }
+            kc = kc_hi;
+        }
+        jc = jc_hi;
+    }
+}
+
+/// The MR×NR register tile over one k-panel: 16 accumulator chains, each
+/// strictly ascending in k.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn tile_full(a: &Mat, bt: &Mat, i: usize, j: usize, k0: usize, k1: usize,
+             r0: usize, n: usize, out: &mut [f64]) {
+    let a0 = &a.row(i)[k0..k1];
+    let a1 = &a.row(i + 1)[k0..k1];
+    let a2 = &a.row(i + 2)[k0..k1];
+    let a3 = &a.row(i + 3)[k0..k1];
+    let b0 = &bt.row(j)[k0..k1];
+    let b1 = &bt.row(j + 1)[k0..k1];
+    let b2 = &bt.row(j + 2)[k0..k1];
+    let b3 = &bt.row(j + 3)[k0..k1];
+    let o0 = (i - r0) * n + j;
+    let o1 = o0 + n;
+    let o2 = o1 + n;
+    let o3 = o2 + n;
+    let (mut c00, mut c01, mut c02, mut c03) =
+        (out[o0], out[o0 + 1], out[o0 + 2], out[o0 + 3]);
+    let (mut c10, mut c11, mut c12, mut c13) =
+        (out[o1], out[o1 + 1], out[o1 + 2], out[o1 + 3]);
+    let (mut c20, mut c21, mut c22, mut c23) =
+        (out[o2], out[o2 + 1], out[o2 + 2], out[o2 + 3]);
+    let (mut c30, mut c31, mut c32, mut c33) =
+        (out[o3], out[o3 + 1], out[o3 + 2], out[o3 + 3]);
+    for k in 0..k1 - k0 {
+        let (x0, x1, x2, x3) = (a0[k], a1[k], a2[k], a3[k]);
+        let (y0, y1, y2, y3) = (b0[k], b1[k], b2[k], b3[k]);
+        c00 += x0 * y0;
+        c01 += x0 * y1;
+        c02 += x0 * y2;
+        c03 += x0 * y3;
+        c10 += x1 * y0;
+        c11 += x1 * y1;
+        c12 += x1 * y2;
+        c13 += x1 * y3;
+        c20 += x2 * y0;
+        c21 += x2 * y1;
+        c22 += x2 * y2;
+        c23 += x2 * y3;
+        c30 += x3 * y0;
+        c31 += x3 * y1;
+        c32 += x3 * y2;
+        c33 += x3 * y3;
+    }
+    out[o0] = c00;
+    out[o0 + 1] = c01;
+    out[o0 + 2] = c02;
+    out[o0 + 3] = c03;
+    out[o1] = c10;
+    out[o1 + 1] = c11;
+    out[o1 + 2] = c12;
+    out[o1 + 3] = c13;
+    out[o2] = c20;
+    out[o2 + 1] = c21;
+    out[o2 + 2] = c22;
+    out[o2 + 3] = c23;
+    out[o3] = c30;
+    out[o3 + 1] = c31;
+    out[o3 + 2] = c32;
+    out[o3 + 3] = c33;
+}
+
+/// Ragged tile at the matrix edges — same per-element program, just
+/// without the fixed-size register block.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn tile_edge(a: &Mat, bt: &Mat, i0: usize, i1: usize, j0: usize, j1: usize,
+             k0: usize, k1: usize, r0: usize, n: usize, out: &mut [f64]) {
+    for i in i0..i1 {
+        let ar = &a.row(i)[k0..k1];
+        let orow = (i - r0) * n;
+        for j in j0..j1 {
+            let br = &bt.row(j)[k0..k1];
+            let mut s = out[orow + j];
+            for (x, y) in ar.iter().zip(br) {
+                s += x * y;
+            }
+            out[orow + j] = s;
+        }
+    }
+}
+
+/// Row `i` of the upper triangle of `src·srcᵀ`: the segment
+/// `[Σ_k src[i,k]·src[j,k] for j in i..src.rows]`.
+///
+/// Every element follows the same canonical ascending-k program as the
+/// GEMM kernel, so serial loops, parallel row maps and any chunking all
+/// produce identical bits.  The j-direction is tiled by [`NR`] so the
+/// `src.row(i)` loads are amortized over four accumulator chains.
+pub(crate) fn gram_row_segment(src: &Mat, i: usize) -> Vec<f64> {
+    let m = src.rows;
+    let ri = src.row(i);
+    let mut seg = Vec::with_capacity(m - i);
+    let mut j = i;
+    while j + NR <= m {
+        let b0 = src.row(j);
+        let b1 = src.row(j + 1);
+        let b2 = src.row(j + 2);
+        let b3 = src.row(j + 3);
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0_f64, 0.0, 0.0, 0.0);
+        for (k, &x) in ri.iter().enumerate() {
+            s0 += x * b0[k];
+            s1 += x * b1[k];
+            s2 += x * b2[k];
+            s3 += x * b3[k];
+        }
+        seg.push(s0);
+        seg.push(s1);
+        seg.push(s2);
+        seg.push(s3);
+        j += NR;
+    }
+    while j < m {
+        let bj = src.row(j);
+        let mut s = 0.0_f64;
+        for (x, y) in ri.iter().zip(bj) {
+            s += x * y;
+        }
+        seg.push(s);
+        j += 1;
+    }
+    seg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// The independent naive reference: single accumulator, ascending k.
+    fn naive_nt(a: &Mat, bt: &Mat) -> Mat {
+        let mut out = Mat::zeros(a.rows, bt.rows);
+        for i in 0..a.rows {
+            for j in 0..bt.rows {
+                let mut s = 0.0_f64;
+                for k in 0..a.cols {
+                    s += a[(i, k)] * bt[(j, k)];
+                }
+                out[(i, j)] = s;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn blocked_kernel_bit_identical_to_naive() {
+        // shapes straddling every block boundary: MR/NR (4), NC (64),
+        // KC (256), plus degenerate edges
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (1, 9, 1), (3, 4, 5),
+                            (4, 4, 4), (5, 5, 5), (8, 300, 8), (7, 257, 9),
+                            (12, 64, 65), (4, 256, 4), (13, 255, 66),
+                            (65, 17, 63)] {
+            let a = Mat::random_normal(&mut Rng::new(m as u64 * 101 + k as u64), m, k);
+            let bt = Mat::random_normal(&mut Rng::new(n as u64 * 77 + k as u64), n, k);
+            let mut out = vec![0.0_f64; m * n];
+            matmul_nt_block(&a, &bt, 0, m, &mut out);
+            assert_eq!(out, naive_nt(&a, &bt).data, "{m}x{k}·{n}ᵀ");
+        }
+    }
+
+    #[test]
+    fn row_ranges_compose_exactly() {
+        // any split point reproduces the full result bit for bit
+        let (m, k, n) = (23, 31, 19);
+        let a = Mat::random_normal(&mut Rng::new(1), m, k);
+        let bt = Mat::random_normal(&mut Rng::new(2), n, k);
+        let mut full = vec![0.0_f64; m * n];
+        matmul_nt_block(&a, &bt, 0, m, &mut full);
+        for split in [1usize, 4, 7, 16, 22] {
+            let mut top = vec![0.0_f64; split * n];
+            let mut bot = vec![0.0_f64; (m - split) * n];
+            matmul_nt_block(&a, &bt, 0, split, &mut top);
+            matmul_nt_block(&a, &bt, split, m, &mut bot);
+            top.extend_from_slice(&bot);
+            assert_eq!(top, full, "split {split}");
+        }
+    }
+
+    #[test]
+    fn gram_segments_match_naive() {
+        for &(m, k) in &[(1usize, 1usize), (5, 3), (9, 300), (12, 7)] {
+            let src = Mat::random_normal(&mut Rng::new(m as u64 * 7 + k as u64), m, k);
+            for i in 0..m {
+                let seg = gram_row_segment(&src, i);
+                assert_eq!(seg.len(), m - i);
+                for (off, &v) in seg.iter().enumerate() {
+                    let j = i + off;
+                    let mut s = 0.0_f64;
+                    for kk in 0..k {
+                        s += src[(i, kk)] * src[(j, kk)];
+                    }
+                    assert_eq!(v, s, "({i},{j}) of {m}x{k}");
+                }
+            }
+        }
+    }
+}

@@ -2,18 +2,24 @@
 //!
 //! The paper's covariance computations "required 64-bit precision for
 //! numerical accuracy", so everything here is f64.  Sizes are small
-//! (d ≤ 512 in this reproduction) but hot: GEMM is register-blocked with a
-//! transposed-B layout, Cholesky and the Jacobi eigensolver are the exact
-//! primitives Algorithms 2–4 need.
+//! (d ≤ 512 in this reproduction) but hot: GEMM runs on the blocked-k /
+//! register-tiled micro-kernel in [`kernels`] with a transposed-B layout,
+//! Cholesky and the Jacobi eigensolver are the exact primitives
+//! Algorithms 2–4 need.
 //!
-//! Every O(n³) kernel also has a `par_*` variant on [`crate::par::Pool`]
-//! (row-chunked with fixed, thread-count-independent chunking), each
-//! **bit-identical** to its serial form at any pool size — the serial
-//! path is simply the `threads = 1` case.
+//! Every O(n³) product kernel follows the **canonical scalar program**
+//! contract (see [`kernels`]): each output element is one accumulator
+//! advanced in strictly ascending k.  Serial, blocked, chunked and
+//! parallel paths are therefore bit-identical by construction — and
+//! `matmul`/`gram_*` auto-parallelize on [`crate::par::global`] once the
+//! work crosses [`PAR_MIN_WORK`] (suppressed automatically inside pool
+//! jobs, so the per-layer fan-out never oversubscribes).  The explicit
+//! `par_*` variants take a caller-supplied [`crate::par::Pool`].
 
 mod chol;
 mod eigh;
 mod hadamard;
+pub mod kernels;
 
 pub use chol::{cholesky, solve_lower, solve_upper, chol_solve_mat, chol_inverse};
 pub use eigh::{eigh, eigh_jacobi, eigh_jacobi_par, top_k_eigvecs};
@@ -95,7 +101,7 @@ impl Mat {
     pub fn matmul(&self, b: &Mat) -> Mat {
         assert_eq!(self.cols, b.rows, "matmul dims {}x{} · {}x{}",
                    self.rows, self.cols, b.rows, b.cols);
-        // transpose B once so the inner loop is two contiguous slices
+        // transpose B once so the inner loop is contiguous slices
         let bt = b.transpose();
         self.matmul_nt(&bt)
     }
@@ -110,164 +116,84 @@ impl Mat {
 
     /// C = A · Bᵀ  (B given as [n, k]: C[i,j] = Σ A[i,:]·B[j,:])
     ///
-    /// 2×2 register-blocked: each inner pass streams two A rows against
-    /// two B rows, quartering the loads per MAC (§Perf: 4.4→6.4 GFLOP/s).
+    /// Runs the blocked-k / register-tiled kernel of [`kernels`], and
+    /// auto-parallelizes on [`crate::par::global`] once the work crosses
+    /// [`PAR_MIN_WORK`] — bit-identical either way (canonical scalar
+    /// program), and suppressed automatically inside pool jobs.
     pub fn matmul_nt(&self, bt: &Mat) -> Mat {
         assert_eq!(self.cols, bt.cols, "matmul_nt inner dims");
         let (m, n) = (self.rows, bt.rows);
-        let mut out = Mat::zeros(m, n);
-        self.matmul_nt_block(bt, 0, m, &mut out.data);
-        out
+        // decide serial BEFORE touching the global pool, so small-GEMM
+        // and inside-a-pool-job workloads never spawn its workers at all
+        if n == 0 || m <= Self::PAR_ROW_CHUNK
+            || m * n * self.cols < PAR_MIN_WORK
+            || crate::par::in_pool()
+        {
+            let mut out = Mat::zeros(m, n);
+            kernels::matmul_nt_block(self, bt, 0, m, &mut out.data);
+            return out;
+        }
+        self.par_matmul_nt(bt, crate::par::global())
     }
 
-    /// Fixed row-chunk size for parallel kernels.  Even, so the 2×2 row
-    /// pairing inside every chunk coincides with the serial pairing, and
-    /// independent of thread count — both facts together make the par_*
-    /// kernels bit-identical to their serial forms at any pool size.
-    pub const PAR_ROW_CHUNK: usize = 64;
+    /// Fixed row-chunk size for parallel GEMM.  A scheduling granularity
+    /// only: the canonical per-element program makes *any* chunking
+    /// bit-identical, so the constant just balances dispatch overhead
+    /// against load-balance (it is never derived from the thread count).
+    pub const PAR_ROW_CHUNK: usize = 16;
 
     /// C = A · Bᵀ on `pool`: rows are split into fixed [`Mat::PAR_ROW_CHUNK`]
-    /// chunks, each computed by the serial 2×2 kernel into its disjoint
-    /// slice of C.  Bit-identical to [`Mat::matmul_nt`] for every thread
+    /// chunks, each computed by the blocked kernel into its disjoint
+    /// slice of C.  Bit-identical to the serial kernel for every thread
     /// count (each output element is produced by exactly the same
     /// floating-point program).
     pub fn par_matmul_nt(&self, bt: &Mat, pool: &crate::par::Pool) -> Mat {
         assert_eq!(self.cols, bt.cols, "par_matmul_nt inner dims");
         let (m, n) = (self.rows, bt.rows);
         let mut out = Mat::zeros(m, n);
-        if pool.threads() == 1 || m <= Self::PAR_ROW_CHUNK || n == 0 {
-            self.matmul_nt_block(bt, 0, m, &mut out.data);
+        let work = m * n * self.cols;
+        if pool.threads() == 1 || n == 0 || m <= Self::PAR_ROW_CHUNK
+            || work < PAR_MIN_WORK
+        {
+            kernels::matmul_nt_block(self, bt, 0, m, &mut out.data);
             return out;
         }
         let chunk = Self::PAR_ROW_CHUNK;
-        let work: Vec<(usize, &mut [f64])> =
+        let slices: Vec<(usize, &mut [f64])> =
             out.data.chunks_mut(chunk * n).enumerate().collect();
-        pool.for_each(work, |(ci, slice)| {
+        pool.for_each(slices, |(ci, slice)| {
             let r0 = ci * chunk;
             let r1 = (r0 + chunk).min(m);
-            self.matmul_nt_block(bt, r0, r1, slice);
+            kernels::matmul_nt_block(self, bt, r0, r1, slice);
         });
         out
     }
 
-    /// The 2×2-blocked kernel over rows [r0, r1), writing into `out`
-    /// (row-major, `(r1-r0) × bt.rows`, indexed relative to r0).  Row
-    /// pairing starts at r0, so any even-aligned chunking reproduces the
-    /// full-matrix result exactly.
-    fn matmul_nt_block(&self, bt: &Mat, r0: usize, r1: usize,
-                       out: &mut [f64]) {
-        let n = bt.rows;
-        debug_assert_eq!(out.len(), (r1 - r0) * n);
-        let mut i = r0;
-        while i + 1 < r1 {
-            let (a0, a1) = (self.row(i), self.row(i + 1));
-            let (o0, o1) = ((i - r0) * n, (i + 1 - r0) * n);
-            let mut j = 0;
-            while j + 1 < n {
-                let (b0, b1) = (bt.row(j), bt.row(j + 1));
-                let (mut s00, mut s01) = (0.0_f64, 0.0_f64);
-                let (mut s10, mut s11) = (0.0_f64, 0.0_f64);
-                for k in 0..a0.len() {
-                    let (x0, x1) = (a0[k], a1[k]);
-                    let (y0, y1) = (b0[k], b1[k]);
-                    s00 += x0 * y0;
-                    s01 += x0 * y1;
-                    s10 += x1 * y0;
-                    s11 += x1 * y1;
-                }
-                out[o0 + j] = s00;
-                out[o0 + j + 1] = s01;
-                out[o1 + j] = s10;
-                out[o1 + j + 1] = s11;
-                j += 2;
-            }
-            if j < n {
-                out[o0 + j] = dot(a0, bt.row(j));
-                out[o1 + j] = dot(a1, bt.row(j));
-            }
-            i += 2;
-        }
-        if i < r1 {
-            let o = (i - r0) * n;
-            for j in 0..n {
-                out[o + j] = dot(self.row(i), bt.row(j));
-            }
-        }
-    }
-
-    /// C = Aᵀ · A (symmetric Gram matrix, only upper computed then mirrored)
+    /// C = Aᵀ · A (symmetric Gram matrix, only upper computed then
+    /// mirrored; auto-parallel past [`PAR_MIN_WORK`], bit-identical).
     pub fn gram_t(&self) -> Mat {
-        let n = self.cols;
         let at = self.transpose();
-        let mut out = Mat::zeros(n, n);
-        for i in 0..n {
-            for j in i..n {
-                let v = dot(at.row(i), at.row(j));
-                out.data[i * n + j] = v;
-                out.data[j * n + i] = v;
-            }
-        }
-        out
+        gram_upper_auto(&at)
     }
 
-    /// C = Aᵀ · A on `pool`: upper-triangle rows computed in parallel,
-    /// assembled + mirrored in fixed order.  Bit-identical to
-    /// [`Mat::gram_t`] (every entry is the same single `dot`).
+    /// C = Aᵀ · A on `pool`: upper-triangle row segments computed in
+    /// parallel, assembled + mirrored in fixed order.  Bit-identical to
+    /// [`Mat::gram_t`] (every entry runs the same canonical program).
     pub fn par_gram_t(&self, pool: &crate::par::Pool) -> Mat {
-        let n = self.cols;
         let at = self.transpose();
-        let rows = pool.map(n, |i| {
-            let mut seg = Vec::with_capacity(n - i);
-            for j in i..n {
-                seg.push(dot(at.row(i), at.row(j)));
-            }
-            seg
-        });
-        let mut out = Mat::zeros(n, n);
-        for (i, seg) in rows.iter().enumerate() {
-            for (off, &v) in seg.iter().enumerate() {
-                let j = i + off;
-                out.data[i * n + j] = v;
-                out.data[j * n + i] = v;
-            }
-        }
-        out
+        gram_upper(&at, pool)
     }
 
-    /// C = A · Aᵀ (symmetric, rows as vectors)
+    /// C = A · Aᵀ (symmetric, rows as vectors; auto-parallel past
+    /// [`PAR_MIN_WORK`], bit-identical).
     pub fn gram_n(&self) -> Mat {
-        let m = self.rows;
-        let mut out = Mat::zeros(m, m);
-        for i in 0..m {
-            for j in i..m {
-                let v = dot(self.row(i), self.row(j));
-                out.data[i * m + j] = v;
-                out.data[j * m + i] = v;
-            }
-        }
-        out
+        gram_upper_auto(self)
     }
 
     /// C = A · Aᵀ on `pool` (see [`Mat::par_gram_t`]; bit-identical to
     /// [`Mat::gram_n`]).
     pub fn par_gram_n(&self, pool: &crate::par::Pool) -> Mat {
-        let m = self.rows;
-        let rows = pool.map(m, |i| {
-            let mut seg = Vec::with_capacity(m - i);
-            for j in i..m {
-                seg.push(dot(self.row(i), self.row(j)));
-            }
-            seg
-        });
-        let mut out = Mat::zeros(m, m);
-        for (i, seg) in rows.iter().enumerate() {
-            for (off, &v) in seg.iter().enumerate() {
-                let j = i + off;
-                out.data[i * m + j] = v;
-                out.data[j * m + i] = v;
-            }
-        }
-        out
+        gram_upper(self, pool)
     }
 
     /// y = A · x
@@ -349,6 +275,48 @@ impl std::ops::IndexMut<(usize, usize)> for Mat {
     fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
         &mut self.data[i * self.cols + j]
     }
+}
+
+/// Auto-parallelization threshold in multiply-adds (≈ 0.5 ms of serial
+/// work): below it, epoch dispatch costs more than it buys.  Shape-based
+/// and compile-time fixed, so the serial/parallel decision is itself
+/// deterministic — and harmless either way, since both paths produce
+/// identical bits.
+pub const PAR_MIN_WORK: usize = 1 << 20;
+
+/// Auto-parallel gram: pick serial below [`PAR_MIN_WORK`] without ever
+/// touching (and therefore initializing) the global pool.
+fn gram_upper_auto(src: &Mat) -> Mat {
+    let m = src.rows;
+    if m <= 1 || m * m * src.cols / 2 < PAR_MIN_WORK || crate::par::in_pool() {
+        gram_upper(src, &crate::par::Pool::serial())
+    } else {
+        gram_upper(src, crate::par::global())
+    }
+}
+
+/// Shared body of the four gram entry points: upper-triangle row segments
+/// (each on the canonical scalar program of
+/// [`kernels::gram_row_segment`]), computed serially or on the pool,
+/// then assembled + mirrored in fixed row order.
+fn gram_upper(src: &Mat, pool: &crate::par::Pool) -> Mat {
+    let m = src.rows;
+    let work = m * m * src.cols / 2;
+    let rows: Vec<Vec<f64>> =
+        if pool.threads() == 1 || m <= 1 || work < PAR_MIN_WORK {
+            (0..m).map(|i| kernels::gram_row_segment(src, i)).collect()
+        } else {
+            pool.map(m, |i| kernels::gram_row_segment(src, i))
+        };
+    let mut out = Mat::zeros(m, m);
+    for (i, seg) in rows.iter().enumerate() {
+        for (off, &v) in seg.iter().enumerate() {
+            let j = i + off;
+            out.data[i * m + j] = v;
+            out.data[j * m + i] = v;
+        }
+    }
+    out
 }
 
 /// Unrolled dot product — the single hottest scalar loop in the crate.

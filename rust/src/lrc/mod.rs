@@ -15,6 +15,45 @@ use crate::linalg::{cholesky, chol_solve_mat, solve_lower, solve_upper,
                     top_k_eigvecs, Mat};
 use crate::quant::{gptq::gptq, rtn_quantize, QuantConfig, Quantizer};
 
+/// Deterministic synthetic layer problems — the correlated,
+/// outlier-bearing regime W4A4 struggles in and the paper targets.
+/// Shared by the unit tests, the integration suites
+/// (`tests/quant_roundtrip.rs`), the bench targets and the quickstart
+/// example, so they all exercise the same distribution.
+pub struct TestModel;
+
+impl TestModel {
+    /// (W [dout, din], X [din, n]): W gaussian, X low-rank-correlated
+    /// (rank din/4 mixer) plus small isotropic noise, with every 16th
+    /// input channel scaled 8× (the outliers QuaRot rotates away).
+    pub fn layer_problem(seed: u64, dout: usize, din: usize, n: usize)
+                         -> (Mat, Mat) {
+        let mut rng = crate::rng::Rng::new(seed);
+        let w = Mat::random_normal(&mut rng, dout, din);
+        let base = Mat::random_normal(&mut rng, din / 4, n);
+        let mixer = Mat::random_normal(&mut rng, din, din / 4);
+        let mut x = mixer.matmul(&base)
+            .add(&Mat::random_normal(&mut rng, din, n).scale(0.1));
+        for i in (0..din).step_by(16) {
+            for j in 0..n {
+                x[(i, j)] *= 8.0; // outlier channels
+            }
+        }
+        (w, x)
+    }
+
+    /// [`LayerStats`] accumulated over X in two half-batches (4-bit Q_a,
+    /// the given clip) — the standard Σ setup the tests share.
+    pub fn stats(x: &Mat, clip: f64) -> LayerStats {
+        let mut st = LayerStats::new(x.rows, Some(4), clip, None);
+        let n = x.cols;
+        let half = n / 2;
+        st.update(&x.cols_range(0, half));
+        st.update(&x.cols_range(half, n));
+        st
+    }
+}
+
 /// Result of quantizing one layer.
 #[derive(Clone, Debug)]
 pub struct LayerResult {
@@ -134,30 +173,13 @@ mod tests {
     use crate::quant::act_quantize;
     use crate::rng::Rng;
 
-    /// A correlated, outlier-bearing layer problem (the LRC regime).
-    pub fn layer_problem(seed: u64, dout: usize, din: usize, n: usize)
-                         -> (Mat, Mat) {
-        let mut rng = Rng::new(seed);
-        let w = Mat::random_normal(&mut rng, dout, din);
-        let base = Mat::random_normal(&mut rng, din / 4, n);
-        let mixer = Mat::random_normal(&mut rng, din, din / 4);
-        let mut x = mixer.matmul(&base)
-            .add(&Mat::random_normal(&mut rng, din, n).scale(0.1));
-        for i in (0..din).step_by(16) {
-            for j in 0..n {
-                x[(i, j)] *= 8.0; // outlier channels
-            }
-        }
-        (w, x)
+    fn layer_problem(seed: u64, dout: usize, din: usize, n: usize)
+                     -> (Mat, Mat) {
+        TestModel::layer_problem(seed, dout, din, n)
     }
 
     fn stats_for(x: &Mat, clip: f64) -> LayerStats {
-        let mut st = LayerStats::new(x.rows, Some(4), clip, None);
-        let n = x.cols;
-        let half = n / 2;
-        st.update(&x.cols_range(0, half));
-        st.update(&x.cols_range(half, n));
-        st
+        TestModel::stats(x, clip)
     }
 
     #[test]

@@ -69,12 +69,17 @@ fn print_help() {
          \x20        [--requests 64] [--max-wait-ms 5] [--workers 1]\n\
          \n\
          global flags:\n\
-         \x20 --threads N   size of the compute thread pool used by the\n\
-         \x20               calibration + per-layer quantization fan-out\n\
-         \x20               (default: LRC_THREADS env, else all cores;\n\
-         \x20               results are bit-identical at any setting)\n\
+         \x20 --threads N   size of the persistent compute pool (parked\n\
+         \x20               worker threads) shared by calibration, the\n\
+         \x20               per-layer quantization fan-out and the\n\
+         \x20               blocked-k GEMM/Gram kernels (default:\n\
+         \x20               LRC_THREADS env — read once at startup —\n\
+         \x20               else all cores; results are bit-identical\n\
+         \x20               at any setting)\n\
          \x20 --workers N   serve-only: engine workers sharing the batch\n\
-         \x20               queue, one PJRT engine + session set each\n"
+         \x20               queue, one PJRT engine + session set each;\n\
+         \x20               the thread budget is split across workers\n\
+         \x20               for per-row NLL scoring\n"
     );
 }
 

@@ -1,29 +1,75 @@
-//! Zero-dependency scoped thread pool — the parallel compute layer.
+//! The parallel compute layer: a zero-dependency **persistent worker
+//! pool** with a fixed-index-order reduction contract.
 //!
 //! Everything hot in this crate (GEMM, Gram updates, Jacobi sweeps, the
 //! per-layer quantization loop) is embarrassingly parallel, but PJRT
 //! aside, the stack must stay std-only.  This module provides the one
 //! primitive all of them share: run N deterministic work items across a
-//! bounded set of scoped threads (`std::thread::scope`), hand the items
-//! out through an atomics-based work queue, and give the results back in
-//! **fixed index order** so every reduction downstream is bit-identical
-//! regardless of thread count.
+//! bounded set of threads and give the results back in **fixed index
+//! order** so every reduction downstream is bit-identical regardless of
+//! thread count.
 //!
-//! Determinism contract: a [`Pool`] never changes *what* is computed,
-//! only *where*.  Work item `i` always produces the same value, and
-//! callers always fold results in index order — so `threads ∈ {1, 2, 8}`
-//! produce byte-identical outputs (see `tests/par_determinism.rs`).
+//! # Pool lifecycle
+//!
+//! [`Pool::new`]`(n)` spawns `n - 1` long-lived worker threads that park
+//! on a job board (a `Mutex` + `Condvar` pair) until work arrives.  Each
+//! `map`/`for_each` call publishes one **epoch**: a generation-counted
+//! job every worker runs exactly once, pulling item indices from an
+//! atomic cursor.  The calling thread participates as the n-th worker,
+//! so `Pool::new(1)` holds no threads at all and runs everything inline.
+//! Dropping the last clone of a `Pool` shuts the board down and joins
+//! the workers; the [`global`] pool lives for the whole process.
+//!
+//! Publishing an epoch costs two mutex acquisitions per thread — against
+//! the hundreds of microseconds a scoped spawn/join cycle costs, this is
+//! what makes *fine-grained* call sites (Jacobi rotation rounds,
+//! per-slice Σ updates) worth parallelizing at all.
+//!
+//! # Nesting and `scoped()`
+//!
+//! A `map`/`for_each` issued **from inside a pool job** runs inline on
+//! the issuing worker (a thread-local guard detects re-entry), so nested
+//! library code can never deadlock the board — and the per-layer
+//! quantization fan-out automatically suppresses inner GEMM parallelism
+//! instead of oversubscribing.  When a call site genuinely wants fresh
+//! parallelism in a nested or long-blocking context, [`Pool::scoped`]
+//! returns a handle with the same API that falls back to spawn-per-call
+//! `std::thread::scope` workers (the pre-persistent-pool behavior).
+//! The parallelism of a scoped call comes from those scoped threads
+//! alone: they mark themselves in-pool as well, so work running on them
+//! never dispatches onto the shared persistent board (whose current
+//! epoch may be blocked waiting on this very scope — the guard is what
+//! makes `scoped()` deadlock-free by construction).
+//!
+//! # Determinism contract
+//!
+//! A [`Pool`] never changes *what* is computed, only *where*.  Work item
+//! `i` always produces the same value, and callers always fold results
+//! in index order — so `threads ∈ {1, 2, 8}` produce byte-identical
+//! outputs (see `tests/par_determinism.rs` and `tests/kernel_oracle.rs`).
+//!
+//! # Sizing
 //!
 //! Pool sizing, in priority order:
 //!   1. an explicit [`set_threads`] call (the CLI's `--threads` flag),
-//!   2. the `LRC_THREADS` environment variable,
+//!   2. the `LRC_THREADS` environment variable — resolved **once** into
+//!      a `OnceLock` on first use (re-reading the environment on every
+//!      call showed up in profiles of fine-grained sites),
 //!   3. `std::thread::available_parallelism()`.
+//!
+//! `set_threads` keeps working after the env var has been cached: the
+//! override is consulted first on every [`threads`] call.
 
+use std::cell::Cell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Process-wide override installed by `--threads` (0 = unset).
 static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// `LRC_THREADS`, parsed once (None = unset or unparsable).
+static ENV_THREADS: OnceLock<Option<usize>> = OnceLock::new();
 
 /// Install a process-wide thread-count override (the `--threads` flag).
 /// `0` clears the override.
@@ -32,45 +78,298 @@ pub fn set_threads(n: usize) {
 }
 
 /// Resolve the effective thread count: override > `LRC_THREADS` env >
-/// `available_parallelism` (≥ 1 always).
+/// `available_parallelism` (≥ 1 always).  The env var is read exactly
+/// once per process; the `set_threads` override stays live throughout.
 pub fn threads() -> usize {
     let o = THREAD_OVERRIDE.load(Ordering::SeqCst);
     if o > 0 {
         return o;
     }
-    if let Ok(s) = std::env::var("LRC_THREADS") {
-        if let Ok(n) = s.parse::<usize>() {
-            if n > 0 {
-                return n;
-            }
-        }
+    let env = ENV_THREADS.get_or_init(|| {
+        std::env::var("LRC_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+    });
+    if let Some(n) = *env {
+        return n;
     }
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
-/// A sized handle over the scoped pool.  Cheap to copy; owns no threads —
-/// threads live only for the duration of each `map`/`for_each` call, so
-/// there is nothing to shut down and nested use is safe (inner calls just
-/// add their own scoped workers).
-#[derive(Clone, Copy, Debug)]
+/// The shared process pool, built on first use with [`threads`] workers.
+/// The CLI installs `--threads` before any compute runs, so the global
+/// pool picks the override up; library users who need a different size
+/// construct their own [`Pool`].
+pub fn global() -> &'static Pool {
+    static GLOBAL: OnceLock<Pool> = OnceLock::new();
+    GLOBAL.get_or_init(|| Pool::new(threads()))
+}
+
+thread_local! {
+    /// True while this thread is executing a pool job — nested pool calls
+    /// check it and run inline instead of touching a job board.
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// True when the current thread is already executing a pool job.  Used
+/// by the auto-parallel kernel entry points to decide serial *before*
+/// touching (and lazily spawning) the global pool.
+pub(crate) fn in_pool() -> bool {
+    IN_POOL.with(|f| f.get())
+}
+
+/// RAII re-entrancy marker; restores the previous state even on unwind.
+struct PoolGuard {
+    prev: bool,
+}
+
+impl PoolGuard {
+    fn enter() -> PoolGuard {
+        PoolGuard { prev: IN_POOL.with(|f| f.replace(true)) }
+    }
+}
+
+impl Drop for PoolGuard {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        IN_POOL.with(|f| f.set(prev));
+    }
+}
+
+/// A lifetime-erased job body.  Safe to copy into worker threads because
+/// [`Workers::run`] never returns until every worker is done with it.
+#[derive(Clone, Copy)]
+struct SendJob(&'static (dyn Fn() + Sync));
+
+/// The job board all workers of one pool park on.
+struct JobState {
+    /// generation counter: workers run each epoch exactly once
+    epoch: u64,
+    /// the currently published job (None between epochs)
+    job: Option<SendJob>,
+    /// workers still running the current epoch
+    active: usize,
+    /// a worker panicked while running the current epoch
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Board {
+    state: Mutex<JobState>,
+    /// workers wait here for a new epoch (or shutdown)
+    work: Condvar,
+    /// submitters wait here for epoch completion / board availability
+    done: Condvar,
+}
+
+/// Owns the worker threads; dropping the last `Pool` clone drops this,
+/// which signals shutdown and joins every worker.
+struct Workers {
+    board: Arc<Board>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Workers {
+    /// Publish one epoch and run it to completion on every worker plus
+    /// the calling thread.
+    ///
+    /// SAFETY: `body` is lifetime-erased before being handed to the
+    /// workers; this function does not return (or unwind) until every
+    /// worker has finished running it, so the erased borrow never
+    /// outlives the frame that owns the captured data.
+    fn run(&self, body: &(dyn Fn() + Sync)) {
+        let job = SendJob(unsafe {
+            std::mem::transmute::<&(dyn Fn() + Sync), &'static (dyn Fn() + Sync)>(body)
+        });
+        {
+            let mut st = self.board.state.lock().unwrap();
+            // another thread may be mid-epoch on this shared pool: wait
+            // for the board to free up before publishing
+            while st.job.is_some() {
+                st = self.board.done.wait(st).unwrap();
+            }
+            st.epoch += 1;
+            st.active = self.handles.len();
+            st.job = Some(job);
+            st.panicked = false;
+            self.board.work.notify_all();
+        }
+        // the caller is a worker too (pool of n = n-1 threads + caller)
+        let local = {
+            let _guard = PoolGuard::enter();
+            catch_unwind(AssertUnwindSafe(body))
+        };
+        let worker_panicked = {
+            let mut st = self.board.state.lock().unwrap();
+            while st.active > 0 {
+                st = self.board.done.wait(st).unwrap();
+            }
+            st.job = None;
+            let p = st.panicked;
+            st.panicked = false;
+            // wake any submitter waiting for the board to free up
+            self.board.done.notify_all();
+            p
+        };
+        if let Err(payload) = local {
+            resume_unwind(payload);
+        }
+        if worker_panicked {
+            panic!("pool worker panicked during a parallel job");
+        }
+    }
+}
+
+impl Drop for Workers {
+    fn drop(&mut self) {
+        {
+            let mut st = self.board.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.board.work.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Long-lived worker: park on the board, run each published epoch once.
+fn worker_loop(board: Arc<Board>) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = board.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch > seen {
+                    if let Some(j) = st.job {
+                        seen = st.epoch;
+                        break j;
+                    }
+                }
+                st = board.work.wait(st).unwrap();
+            }
+        };
+        // panics must not kill the worker: catch, record, keep serving
+        let res = {
+            let _guard = PoolGuard::enter();
+            catch_unwind(AssertUnwindSafe(job.0))
+        };
+        let mut st = board.state.lock().unwrap();
+        if res.is_err() {
+            st.panicked = true;
+        }
+        st.active -= 1;
+        if st.active == 0 {
+            board.done.notify_all();
+        }
+    }
+}
+
+/// How a [`Pool`] executes work.
+enum Backend {
+    /// threads = 1: run inline on the caller, suppressing nested
+    /// parallelism (a serial pool means *serial*)
+    Inline,
+    /// spawn-per-call `std::thread::scope` workers (the [`Pool::scoped`]
+    /// escape hatch; allows real parallelism from nested contexts)
+    Scoped,
+    /// parked persistent workers sharing a job board
+    Persistent(Arc<Workers>),
+}
+
+/// A handle over the compute pool.  Cheap to clone (clones share the
+/// same workers); the workers shut down when the last clone drops.
 pub struct Pool {
     n: usize,
+    backend: Backend,
+}
+
+impl Clone for Pool {
+    fn clone(&self) -> Pool {
+        let backend = match &self.backend {
+            Backend::Inline => Backend::Inline,
+            Backend::Scoped => Backend::Scoped,
+            Backend::Persistent(w) => Backend::Persistent(w.clone()),
+        };
+        Pool { n: self.n, backend }
+    }
+}
+
+impl std::fmt::Debug for Pool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let kind = match &self.backend {
+            Backend::Inline => "inline",
+            Backend::Scoped => "scoped",
+            Backend::Persistent(_) => "persistent",
+        };
+        write!(f, "Pool({} threads, {kind})", self.n)
+    }
 }
 
 impl Pool {
-    /// A pool of exactly `n` worker threads (clamped to ≥ 1).
+    /// A pool of exactly `n` compute threads (clamped to ≥ 1): `n - 1`
+    /// parked workers plus the calling thread.  `n = 1` spawns nothing
+    /// and runs everything inline.
     pub fn new(n: usize) -> Pool {
-        Pool { n: n.max(1) }
+        let n = n.max(1);
+        if n == 1 {
+            return Pool { n, backend: Backend::Inline };
+        }
+        let board = Arc::new(Board {
+            state: Mutex::new(JobState {
+                epoch: 0,
+                job: None,
+                active: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let mut handles = Vec::with_capacity(n - 1);
+        for wid in 0..n - 1 {
+            let b = board.clone();
+            let spawned = std::thread::Builder::new()
+                .name(format!("lrc-par-{wid}"))
+                .spawn(move || worker_loop(b));
+            match spawned {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    // shut down + join the workers already spawned before
+                    // propagating, or they would park forever holding
+                    // their board Arcs (Workers::drop does exactly that)
+                    drop(Workers { board, handles });
+                    panic!("spawn pool worker {wid}: {e}");
+                }
+            }
+        }
+        Pool { n, backend: Backend::Persistent(Arc::new(Workers { board, handles })) }
     }
 
-    /// The process-default pool (see [`threads`]).
+    /// A fresh pool sized like the process default (see [`threads`]).
+    /// Most callers want the shared [`global`] pool instead.
     pub fn current() -> Pool {
         Pool::new(threads())
     }
 
-    /// A single-threaded pool: runs everything inline on the caller.
+    /// A single-threaded pool: runs everything inline on the caller and
+    /// suppresses nested parallelism.
     pub fn serial() -> Pool {
-        Pool::new(1)
+        Pool { n: 1, backend: Backend::Inline }
+    }
+
+    /// A same-sized handle that dispatches every call through
+    /// spawn-per-call scoped threads instead of the persistent board.
+    /// Use it for work issued *from inside* a pool job that still wants
+    /// real parallelism, or for long-blocking items that should not
+    /// occupy the shared workers.  (Also the baseline the `bench_par`
+    /// dispatch benchmarks compare the persistent board against.)
+    pub fn scoped(&self) -> Pool {
+        Pool { n: self.n, backend: Backend::Scoped }
     }
 
     pub fn threads(&self) -> usize {
@@ -86,29 +385,24 @@ impl Pool {
         T: Send,
         F: Fn(usize) -> T + Sync,
     {
-        let workers = self.n.min(n);
-        if workers <= 1 {
-            return (0..n).map(f).collect();
-        }
-        let cursor = AtomicUsize::new(0);
-        let slots: Vec<Mutex<Option<T>>> =
-            (0..n).map(|_| Mutex::new(None)).collect();
-        std::thread::scope(|s| {
-            for _ in 0..workers {
-                s.spawn(|| loop {
-                    let i = cursor.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    let out = f(i);
-                    *slots[i].lock().unwrap() = Some(out);
-                });
+        match &self.backend {
+            Backend::Inline => {
+                let _guard = PoolGuard::enter();
+                (0..n).map(f).collect()
             }
-        });
-        slots
-            .into_iter()
-            .map(|m| m.into_inner().unwrap().expect("pool worker filled slot"))
-            .collect()
+            // scoped() deliberately skips the re-entrancy guard: it exists
+            // to provide real parallelism from nested contexts
+            Backend::Scoped => scoped_map(self.n, n, f),
+            _ if n <= 1 || in_pool() => (0..n).map(f).collect(),
+            Backend::Persistent(w) => {
+                let cursor = AtomicUsize::new(0);
+                let slots: Vec<Mutex<Option<T>>> =
+                    (0..n).map(|_| Mutex::new(None)).collect();
+                let body = || drain_map(&cursor, n, &f, &slots);
+                w.run(&body);
+                collect_slots(slots)
+            }
+        }
     }
 
     /// Consume owned work items (e.g. disjoint `&mut` output slices) on
@@ -122,31 +416,127 @@ impl Pool {
         F: Fn(T) + Sync,
     {
         let n = work.len();
-        let workers = self.n.min(n);
-        if workers <= 1 {
-            for w in work {
-                f(w);
+        match &self.backend {
+            Backend::Inline => {
+                let _guard = PoolGuard::enter();
+                for w in work {
+                    f(w);
+                }
             }
-            return;
+            Backend::Scoped => scoped_for_each(self.n, work, f),
+            _ if n <= 1 || in_pool() => {
+                for w in work {
+                    f(w);
+                }
+            }
+            Backend::Persistent(wk) => {
+                let cursor = AtomicUsize::new(0);
+                let slots: Vec<Mutex<Option<T>>> =
+                    work.into_iter().map(|w| Mutex::new(Some(w))).collect();
+                let body = || drain_for_each(&cursor, n, &f, &slots);
+                wk.run(&body);
+            }
         }
-        let cursor = AtomicUsize::new(0);
-        let slots: Vec<Mutex<Option<T>>> =
-            work.into_iter().map(|w| Mutex::new(Some(w))).collect();
-        std::thread::scope(|s| {
-            for _ in 0..workers {
-                s.spawn(|| loop {
-                    let i = cursor.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    let item = slots[i].lock().unwrap().take();
-                    if let Some(w) = item {
-                        f(w);
-                    }
-                });
-            }
-        });
     }
+}
+
+/// Pull map items off the shared cursor until exhausted.
+fn drain_map<T, F>(cursor: &AtomicUsize, n: usize, f: &F,
+                   slots: &[Mutex<Option<T>>])
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    loop {
+        let i = cursor.fetch_add(1, Ordering::Relaxed);
+        if i >= n {
+            break;
+        }
+        let out = f(i);
+        *slots[i].lock().unwrap() = Some(out);
+    }
+}
+
+/// Pull for_each items off the shared cursor until exhausted.
+fn drain_for_each<T, F>(cursor: &AtomicUsize, n: usize, f: &F,
+                        slots: &[Mutex<Option<T>>])
+where
+    T: Send,
+    F: Fn(T) + Sync,
+{
+    loop {
+        let i = cursor.fetch_add(1, Ordering::Relaxed);
+        if i >= n {
+            break;
+        }
+        let item = slots[i].lock().unwrap().take();
+        if let Some(w) = item {
+            f(w);
+        }
+    }
+}
+
+fn collect_slots<T>(slots: Vec<Mutex<Option<T>>>) -> Vec<T> {
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("pool worker filled slot"))
+        .collect()
+}
+
+/// Spawn-per-call map (the `scoped()` backend).
+fn scoped_map<T, F>(threads: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = threads.min(n);
+    if workers <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            // scoped workers mark themselves in-pool too: the parallelism
+            // of a scoped() call comes from these threads, and an item
+            // that reached for the shared persistent board could deadlock
+            // it (the board's current epoch may be the very job that
+            // spawned this scope and is blocked waiting on it)
+            s.spawn(|| {
+                let _guard = PoolGuard::enter();
+                drain_map(&cursor, n, &f, &slots)
+            });
+        }
+    });
+    collect_slots(slots)
+}
+
+/// Spawn-per-call for_each (the `scoped()` backend).
+fn scoped_for_each<T, F>(threads: usize, work: Vec<T>, f: F)
+where
+    T: Send,
+    F: Fn(T) + Sync,
+{
+    let n = work.len();
+    let workers = threads.min(n);
+    if workers <= 1 {
+        for w in work {
+            f(w);
+        }
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> =
+        work.into_iter().map(|w| Mutex::new(Some(w))).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            // see scoped_map: suppress nested board dispatch from items
+            s.spawn(|| {
+                let _guard = PoolGuard::enter();
+                drain_for_each(&cursor, n, &f, &slots)
+            });
+        }
+    });
 }
 
 #[cfg(test)]
@@ -216,5 +606,88 @@ mod tests {
         assert_eq!(Pool::new(0).threads(), 1);
         assert_eq!(Pool::serial().threads(), 1);
         assert!(Pool::current().threads() >= 1);
+    }
+
+    #[test]
+    fn pool_reuse_across_many_epochs() {
+        // the persistent board must serve repeated fine-grained calls
+        // (the eigh_jacobi_par round pattern) without wedging
+        let pool = Pool::new(4);
+        for round in 0..200 {
+            let out = pool.map(9, |i| i + round);
+            let expect: Vec<usize> = (0..9).map(|i| i + round).collect();
+            assert_eq!(out, expect, "round {round}");
+        }
+    }
+
+    #[test]
+    fn scoped_matches_persistent() {
+        let pool = Pool::new(3);
+        let scoped = pool.scoped();
+        assert_eq!(scoped.threads(), 3);
+        assert_eq!(pool.map(50, |i| 3 * i), scoped.map(50, |i| 3 * i));
+    }
+
+    #[test]
+    fn nested_map_runs_inline_without_deadlock() {
+        let pool = Pool::new(4);
+        let out = pool.map(8, |i| {
+            // nested call on the same pool: must run inline, not deadlock
+            pool.map(5, |j| i * 10 + j).iter().sum::<usize>()
+        });
+        let expect: Vec<usize> =
+            (0..8).map(|i| (0..5).map(|j| i * 10 + j).sum()).collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = Pool::new(4);
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            pool.map(16, |i| {
+                assert!(i != 7, "boom");
+                i
+            })
+        }));
+        assert!(res.is_err(), "panic must propagate to the submitter");
+        // the board must be clean and the workers alive afterwards
+        assert_eq!(pool.map(8, |i| i), (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        // repeated build/drop cycles must neither deadlock nor leak;
+        // a wedged join would hang this test
+        for cycle in 0..5 {
+            let pool = Pool::new(4);
+            assert_eq!(pool.map(16, |i| i * 2),
+                       (0..16).map(|i| i * 2).collect::<Vec<_>>(),
+                       "cycle {cycle}");
+            drop(pool);
+        }
+        // out-of-order drops of independent pools
+        let p1 = Pool::new(3);
+        let p2 = Pool::new(2);
+        assert_eq!(p1.map(10, |i| i), (0..10).collect::<Vec<_>>());
+        drop(p1);
+        assert_eq!(p2.map(10, |i| i + 1), (1..11).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn clones_share_workers() {
+        let pool = Pool::new(4);
+        let c = pool.clone();
+        assert_eq!(c.threads(), 4);
+        assert_eq!(c.map(20, |i| i), (0..20).collect::<Vec<_>>());
+        drop(pool);
+        // the clone keeps the workers alive
+        assert_eq!(c.map(20, |i| i + 1), (1..21).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn global_pool_works() {
+        assert!(global().threads() >= 1);
+        assert_eq!(global().map(12, |i| i * 7),
+                   (0..12).map(|i| i * 7).collect::<Vec<_>>());
     }
 }

@@ -23,7 +23,7 @@ use crate::data::Corpus;
 use crate::linalg::Mat;
 use crate::lrc::{lrc, svd::svd_baseline, LayerStats};
 use crate::par::Pool;
-use crate::quant::pack::{model_size_bytes, PackedInt4};
+use crate::quant::pack::{model_size_bytes, PackedInts};
 use crate::quant::{search_act_clip, weight_scales, QuantConfig};
 use crate::runtime::{Engine, GraphInfo, ModelArtifacts, ModelInfo, TensorBundle};
 use crate::util::Json;
@@ -159,7 +159,7 @@ pub fn collect_stats(engine: &Engine, arts: &ModelArtifacts, corpus: &Corpus,
                      n_seqs: usize, seed: u64, a_bits: Option<u32>,
                      a_group: Option<usize>) -> Result<CalibStats> {
     let t0 = Instant::now();
-    let pool = Pool::current();
+    let pool = crate::par::global();
     let gname = largest_acts_graph(arts)?;
     let session = engine.session(arts, &gname, None)?;
     let seqs = corpus.calib_sequences(n_seqs, arts.info.seq_len, seed);
@@ -193,7 +193,7 @@ pub fn collect_stats(engine: &Engine, arts: &ModelArtifacts, corpus: &Corpus,
                          first calibration batch — the acts graph output \
                          set must be stable across batches", slice.name)
             })?;
-            st.update_rows_f32_par(&seg[..n_rows * slice.dim], n_rows, &pool);
+            st.update_rows_f32_par(&seg[..n_rows * slice.dim], n_rows, pool);
         }
         first = false;
     }
@@ -237,9 +237,9 @@ fn quantize_layer(arts: &ModelArtifacts, calib: &CalibStats,
     let wx = w.matmul(&st.sx).frob_dot(&w);
     let rel = if wx > 0.0 { res.objective / wx } else { 0.0 };
 
-    // real storage accounting
+    // real storage accounting (honors the configured weight bit-width)
     let scales = weight_scales(&res.w_hat, cfg.w_bits, None);
-    let packed = PackedInt4::pack(&res.w_hat, &scales, None);
+    let packed = PackedInts::pack(&res.w_hat, &scales, cfg.w_bits, None);
 
     Ok(LayerArtifacts {
         layer: layer.to_string(),
@@ -262,11 +262,13 @@ fn quantize_layer(arts: &ModelArtifacts, calib: &CalibStats,
 
 /// Quantize every layer of `arts` with `method`, matching the rank layout
 /// of `graph` (the fwd graph the bundle will be fed into).  Uses the
-/// process-default pool (`--threads` / `LRC_THREADS`).
+/// shared process pool (`--threads` / `LRC_THREADS`; see
+/// [`crate::par::global`]).
 pub fn quantize_model(arts: &ModelArtifacts, calib: &CalibStats,
                       graph: &GraphInfo, method: Method, cfg: &QuantConfig)
                       -> Result<(TensorBundle, PipelineReport)> {
-    quantize_model_with_pool(arts, calib, graph, method, cfg, &Pool::current())
+    quantize_model_with_pool(arts, calib, graph, method, cfg,
+                             crate::par::global())
 }
 
 /// [`quantize_model`] on an explicit pool.
@@ -275,7 +277,11 @@ pub fn quantize_model(arts: &ModelArtifacts, calib: &CalibStats,
 /// so the layer loop is embarrassingly parallel; workers pull layers from
 /// the pool's queue and results are folded back in
 /// [`quantized_layer_names`] order — bundles and reports are therefore
-/// byte-identical for every thread count.
+/// byte-identical for every thread count.  Inside each worker the GEMM /
+/// Gram auto-parallelism suppresses itself (pool re-entrancy guard), so
+/// the fan-out never oversubscribes.  (Single-layer workloads that call
+/// the solvers directly — quickstart, rank sweeps — get the inner
+/// parallelism instead; the bits are identical either way.)
 pub fn quantize_model_with_pool(arts: &ModelArtifacts, calib: &CalibStats,
                                 graph: &GraphInfo, method: Method,
                                 cfg: &QuantConfig, pool: &Pool)

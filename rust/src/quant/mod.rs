@@ -3,7 +3,8 @@
 //! * [`rtn`]  — round-to-nearest (weights per-channel / activations
 //!             per-token, optional groupsize) + the paper's clip search
 //! * [`gptq`] — the GPTQ solver used inside Update-Quant (Alg. 2 line 5)
-//! * [`pack`] — real int4 bit-packing (storage sizes for Table 3)
+//! * [`pack`] — real 2/3/4…8-bit bit-packing (storage sizes for Table 3;
+//!              roundtrips locked by `tests/quant_roundtrip.rs`)
 
 pub mod gptq;
 pub mod pack;

@@ -1,75 +1,104 @@
-//! Real int4 bit-packing — two signed nibbles per byte.
+//! Real sub-byte bit-packing — b-bit two's-complement codes in a dense
+//! little-endian bit-stream, for b ∈ 2..=8.
 //!
-//! The eval HLO consumes *dequantized* grid weights (simulated quantization,
-//! as in the paper), but Table 3 reports model sizes in GB; this module is
-//! the storage layer those numbers come from, and the round-trip proves the
-//! grid representation really fits in 4 bits.
+//! The eval HLO consumes *dequantized* grid weights (simulated
+//! quantization, as in the paper), but Table 3 reports model sizes in GB;
+//! this module is the storage layer those numbers come from, and the
+//! round-trip proves the grid representation really fits in b bits.  For
+//! b = 4 the layout is byte-for-byte the classic two-nibbles-per-byte
+//! packing (low nibble first); 2- and 3-bit codes tile the same stream
+//! (Fig. 3 / Table 2 bit-width ablations).
 
 use crate::linalg::Mat;
 
-/// A bit-packed int4 tensor with per-row (or per-group) f32 scales.
+/// A bit-packed integer tensor with per-row (or per-group) f32 scales.
 #[derive(Clone, Debug)]
-pub struct PackedInt4 {
+pub struct PackedInts {
     pub rows: usize,
     pub cols: usize,
+    /// code width in bits (2..=8)
+    pub bits: u32,
     pub group: Option<usize>,
-    /// two values per byte, row-major, low nibble first
-    pub nibbles: Vec<u8>,
+    /// rows·cols codes, little-endian within the bit-stream
+    pub bytes: Vec<u8>,
     /// [rows * n_groups] scales
     pub scales: Vec<f32>,
 }
 
-impl PackedInt4 {
-    /// Pack a weight matrix already produced by an int4 quantizer (values
+impl PackedInts {
+    /// Pack a weight matrix already produced by a b-bit quantizer (values
     /// on the grid q·s).  Recovers the integer codes from the scales.
-    pub fn pack(wq: &Mat, scales: &Mat, group: Option<usize>) -> PackedInt4 {
+    pub fn pack(wq: &Mat, scales: &Mat, bits: u32, group: Option<usize>)
+                -> PackedInts {
+        assert!((2..=8).contains(&bits), "bits {bits} out of 2..=8");
         let (rows, cols) = (wq.rows, wq.cols);
-        let g = group.unwrap_or(cols);
-        let mut nibbles = vec![0u8; (rows * cols + 1) / 2];
+        let g = group.unwrap_or(cols.max(1));
+        let b = bits as usize;
+        let half = 1i64 << (bits - 1);
+        let mask = (1u64 << bits) - 1;
+        let mut bytes = vec![0u8; (rows * cols * b).div_ceil(8)];
+        let mut bitpos = 0usize;
         for i in 0..rows {
             for j in 0..cols {
                 let s = scales[(i, j / g)];
                 let q = (wq[(i, j)] / s).round() as i64;
-                debug_assert!((-8..=7).contains(&q), "code {q} out of int4");
-                let code = (q as i8 & 0x0f) as u8;
-                let idx = i * cols + j;
-                if idx % 2 == 0 {
-                    nibbles[idx / 2] |= code;
-                } else {
-                    nibbles[idx / 2] |= code << 4;
+                debug_assert!((-half..half).contains(&q),
+                              "code {q} out of int{bits}");
+                let code = (q as u64) & mask;
+                let byte = bitpos / 8;
+                let off = bitpos % 8;
+                bytes[byte] |= (code << off) as u8;
+                if off + b > 8 {
+                    // a code spans at most one byte boundary (b ≤ 8)
+                    bytes[byte + 1] |= (code >> (8 - off)) as u8;
                 }
+                bitpos += b;
             }
         }
-        PackedInt4 {
+        PackedInts {
             rows,
             cols,
+            bits,
             group,
-            nibbles,
+            bytes,
             scales: scales.data.iter().map(|&x| x as f32).collect(),
         }
     }
 
     /// Dequantize back to grid values.
     pub fn unpack(&self) -> Mat {
-        let g = self.group.unwrap_or(self.cols);
-        let ng = self.cols / g;
+        let g = self.group.unwrap_or(self.cols.max(1));
+        let ng = if self.cols == 0 { 0 } else { self.cols / g };
+        let b = self.bits as usize;
+        let half = 1i64 << (self.bits - 1);
+        let mask = (1u64 << self.bits) - 1;
         let mut out = Mat::zeros(self.rows, self.cols);
+        let mut bitpos = 0usize;
         for i in 0..self.rows {
             for j in 0..self.cols {
-                let idx = i * self.cols + j;
-                let byte = self.nibbles[idx / 2];
-                let raw = if idx % 2 == 0 { byte & 0x0f } else { byte >> 4 };
-                // sign-extend the nibble
-                let q = ((raw << 4) as i8 >> 4) as f64;
-                out[(i, j)] = q * self.scales[i * ng + j / g] as f64;
+                let byte = bitpos / 8;
+                let off = bitpos % 8;
+                let mut raw = (self.bytes[byte] as u64) >> off;
+                if off + b > 8 {
+                    raw |= (self.bytes[byte + 1] as u64) << (8 - off);
+                }
+                raw &= mask;
+                // sign-extend the b-bit code
+                let q = if (raw as i64) >= half {
+                    raw as i64 - (half << 1)
+                } else {
+                    raw as i64
+                };
+                out[(i, j)] = q as f64 * self.scales[i * ng + j / g] as f64;
+                bitpos += b;
             }
         }
         out
     }
 
-    /// Storage bytes: nibbles + f32 scales (Table 3 accounting).
+    /// Storage bytes: packed codes + f32 scales (Table 3 accounting).
     pub fn size_bytes(&self) -> usize {
-        self.nibbles.len() + self.scales.len() * 4
+        self.bytes.len() + self.scales.len() * 4
     }
 }
 
@@ -93,7 +122,7 @@ mod tests {
             let w = Mat::random_normal(&mut Rng::new(seed), 7, 32);
             let s = weight_scales(&w, 4, None);
             let q = rtn_quantize(&w, 4, None);
-            let p = PackedInt4::pack(&q, &s, None);
+            let p = PackedInts::pack(&q, &s, 4, None);
             let back = p.unpack();
             // scales are stored as f32, so the roundtrip is f32-exact
             assert!(q.sub(&back).max_abs() < 1e-5, "seed {seed}");
@@ -105,32 +134,50 @@ mod tests {
         let w = Mat::random_normal(&mut Rng::new(9), 5, 64);
         let s = weight_scales(&w, 4, Some(16));
         let q = rtn_quantize(&w, 4, Some(16));
-        let p = PackedInt4::pack(&q, &s, Some(16));
+        let p = PackedInts::pack(&q, &s, 4, Some(16));
         assert!(q.sub(&p.unpack()).max_abs() < 1e-5);
     }
 
     #[test]
-    fn four_bits_per_weight() {
+    fn low_bit_roundtrip() {
+        // 2- and 3-bit codes span byte boundaries; the stream must still
+        // round-trip against the RTN grid
+        for bits in [2u32, 3] {
+            let w = Mat::random_normal(&mut Rng::new(bits as u64), 6, 40);
+            let s = weight_scales(&w, bits, None);
+            let q = rtn_quantize(&w, bits, None);
+            let p = PackedInts::pack(&q, &s, bits, None);
+            assert!(q.sub(&p.unpack()).max_abs() < 1e-5, "bits {bits}");
+        }
+    }
+
+    #[test]
+    fn bits_per_weight_accounting() {
         let w = Mat::random_normal(&mut Rng::new(1), 64, 64);
-        let s = weight_scales(&w, 4, None);
-        let q = rtn_quantize(&w, 4, None);
-        let p = PackedInt4::pack(&q, &s, None);
-        // 64*64/2 bytes of nibbles + 64 scales * 4B
-        assert_eq!(p.nibbles.len(), 64 * 64 / 2);
-        assert_eq!(p.size_bytes(), 64 * 64 / 2 + 64 * 4);
+        for (bits, code_bytes) in [(4u32, 64 * 64 / 2), (3, 64 * 64 * 3 / 8),
+                                   (2, 64 * 64 / 4)] {
+            let s = weight_scales(&w, bits, None);
+            let q = rtn_quantize(&w, bits, None);
+            let p = PackedInts::pack(&q, &s, bits, None);
+            assert_eq!(p.bytes.len(), code_bytes, "bits {bits}");
+            assert_eq!(p.size_bytes(), code_bytes + 64 * 4, "bits {bits}");
+        }
     }
 
     #[test]
     fn negative_extremes() {
-        // exercise the -8 code (sign extension edge)
-        let mut w = Mat::zeros(1, 2);
-        w[(0, 0)] = -8.0;
-        w[(0, 1)] = 7.0;
-        let mut s = Mat::zeros(1, 1);
-        s[(0, 0)] = 1.0;
-        let p = PackedInt4::pack(&w, &s, None);
-        let back = p.unpack();
-        assert_eq!(back[(0, 0)], -8.0);
-        assert_eq!(back[(0, 1)], 7.0);
+        // exercise the most-negative code (sign extension edge) per width
+        for bits in [2u32, 3, 4] {
+            let half = (1i64 << (bits - 1)) as f64;
+            let mut w = Mat::zeros(1, 2);
+            w[(0, 0)] = -half;
+            w[(0, 1)] = half - 1.0;
+            let mut s = Mat::zeros(1, 1);
+            s[(0, 0)] = 1.0;
+            let p = PackedInts::pack(&w, &s, bits, None);
+            let back = p.unpack();
+            assert_eq!(back[(0, 0)], -half, "bits {bits}");
+            assert_eq!(back[(0, 1)], half - 1.0, "bits {bits}");
+        }
     }
 }

@@ -1,0 +1,213 @@
+//! The kernel oracle: a randomized property harness locking the blocked-k
+//! GEMM / Gram kernels and their parallel dispatch to an independently
+//! written naive reference — **bit-identical** (`==` on f64, never an
+//! epsilon), at every pool size.
+//!
+//! This is the enforcement arm of the canonical-scalar-program contract
+//! (`linalg::kernels`): every output element is a single accumulator
+//! advanced in strictly ascending k, so blocking, register tiling, row
+//! chunking and thread count must all be observationally invisible.  The
+//! sweep covers ~50 shape/seed combos including the degenerate and ragged
+//! cases (1×1, 1×k, odd rows greater than the thread count, rows not a
+//! multiple of the chunk/tile sizes, dims straddling the KC/NC panels).
+
+use lrc::linalg::Mat;
+use lrc::par::Pool;
+use lrc::rng::Rng;
+
+/// Naive C = A·Bᵀ: the textbook triple loop, single accumulator,
+/// ascending k.  Written against `Mat` indexing only — it shares no code
+/// with the production kernel.
+fn naive_matmul_nt(a: &Mat, bt: &Mat) -> Mat {
+    assert_eq!(a.cols, bt.cols);
+    let mut out = Mat::zeros(a.rows, bt.rows);
+    for i in 0..a.rows {
+        for j in 0..bt.rows {
+            let mut s = 0.0_f64;
+            for k in 0..a.cols {
+                s += a[(i, k)] * bt[(j, k)];
+            }
+            out[(i, j)] = s;
+        }
+    }
+    out
+}
+
+/// Naive AᵀA (sum over rows of A, ascending).
+fn naive_gram_t(a: &Mat) -> Mat {
+    let n = a.cols;
+    let mut out = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let mut s = 0.0_f64;
+            for r in 0..a.rows {
+                s += a[(r, i)] * a[(r, j)];
+            }
+            out[(i, j)] = s;
+        }
+    }
+    out
+}
+
+/// Naive AAᵀ (sum over columns of A, ascending).
+fn naive_gram_n(a: &Mat) -> Mat {
+    let m = a.rows;
+    let mut out = Mat::zeros(m, m);
+    for i in 0..m {
+        for j in 0..m {
+            let mut s = 0.0_f64;
+            for k in 0..a.cols {
+                s += a[(i, k)] * a[(j, k)];
+            }
+            out[(i, j)] = s;
+        }
+    }
+    out
+}
+
+/// The thread counts the contract is checked at (1 < chunk, prime,
+/// power-of-two > typical CI core count).
+fn pools() -> Vec<Pool> {
+    [1usize, 2, 3, 8].into_iter().map(Pool::new).collect()
+}
+
+/// Deterministic (m, k, n) sweep: hand-picked boundary shapes + seeded
+/// random fill-in, ≥ 50 combos total.
+fn gemm_shapes() -> Vec<(usize, usize, usize)> {
+    let mut shapes = vec![
+        // degenerate
+        (1, 1, 1),
+        (1, 9, 1),
+        (1, 1, 7),
+        (2, 1, 2),
+        // odd rows > threads, tiny cols
+        (11, 3, 2),
+        (13, 5, 3),
+        // around the MR/NR register tile (4)
+        (3, 6, 5),
+        (4, 4, 4),
+        (5, 5, 5),
+        // around PAR_ROW_CHUNK (16): rows % chunk != 0 on both sides
+        (15, 12, 11),
+        (16, 8, 16),
+        (17, 9, 10),
+        (33, 7, 31),
+        // around the KC k-panel (256)
+        (6, 255, 5),
+        (5, 256, 6),
+        (7, 257, 4),
+        // around the NC column panel (64)
+        (9, 10, 63),
+        (8, 12, 64),
+        (10, 11, 65),
+        // bigger ragged shape crossing several chunks
+        (65, 33, 66),
+        // large enough to cross the PAR_MIN_WORK auto-parallel threshold
+        // (the small shapes above take the serial path by design), with
+        // ragged row counts so the last for_each chunk is partial
+        (128, 128, 128),
+        (65, 256, 65),
+        (33, 300, 129),
+        (17, 1024, 61),
+        (100, 110, 101),
+    ];
+    let mut rng = Rng::new(0xC0FFEE);
+    while shapes.len() < 50 {
+        shapes.push((1 + rng.below(70), 1 + rng.below(70), 1 + rng.below(70)));
+    }
+    shapes
+}
+
+#[test]
+fn matmul_nt_bit_identical_to_naive_at_every_thread_count() {
+    let pools = pools();
+    for (si, &(m, k, n)) in gemm_shapes().iter().enumerate() {
+        let a = Mat::random_normal(&mut Rng::new(1_000 + si as u64), m, k);
+        let bt = Mat::random_normal(&mut Rng::new(2_000 + si as u64), n, k);
+        let reference = naive_matmul_nt(&a, &bt);
+        assert_eq!(reference, a.matmul_nt(&bt), "serial {m}x{k}·{n}ᵀ");
+        for pool in &pools {
+            let t = pool.threads();
+            assert_eq!(reference, a.par_matmul_nt(&bt, pool),
+                       "{m}x{k}·{n}ᵀ threads={t}");
+            assert_eq!(reference, a.par_matmul_nt(&bt, &pool.scoped()),
+                       "{m}x{k}·{n}ᵀ scoped threads={t}");
+        }
+    }
+}
+
+#[test]
+fn matmul_bit_identical_to_naive_at_every_thread_count() {
+    let pools = pools();
+    for (si, &(m, k, n)) in [(1usize, 1usize, 1usize), (1, 8, 3), (7, 5, 9),
+                             (17, 16, 15), (40, 70, 33), (65, 17, 64)]
+        .iter()
+        .enumerate()
+    {
+        let a = Mat::random_normal(&mut Rng::new(3_000 + si as u64), m, k);
+        let b = Mat::random_normal(&mut Rng::new(4_000 + si as u64), k, n);
+        let reference = naive_matmul_nt(&a, &b.transpose());
+        assert_eq!(reference, a.matmul(&b), "serial {m}x{k}·{k}x{n}");
+        for pool in &pools {
+            assert_eq!(reference, a.par_matmul(&b, pool),
+                       "{m}x{k}·{k}x{n} threads={}", pool.threads());
+        }
+    }
+}
+
+#[test]
+fn gram_bit_identical_to_naive_at_every_thread_count() {
+    let pools = pools();
+    let mut shapes = vec![
+        (1usize, 1usize),
+        (1, 6),
+        (6, 1),
+        (3, 4),
+        (4, 4),
+        (5, 3),
+        (15, 7),
+        (16, 9),
+        (17, 11),
+        (63, 5),
+        (64, 6),
+        (65, 7),
+        (40, 70),
+        (70, 40),
+        (9, 257),
+        // past PAR_MIN_WORK so the pooled row-segment path really runs
+        (65, 500),
+        (129, 130),
+    ];
+    let mut rng = Rng::new(0xBEEF);
+    while shapes.len() < 25 {
+        shapes.push((1 + rng.below(60), 1 + rng.below(60)));
+    }
+    for (si, &(r, c)) in shapes.iter().enumerate() {
+        let a = Mat::random_normal(&mut Rng::new(5_000 + si as u64), r, c);
+        let ref_t = naive_gram_t(&a);
+        let ref_n = naive_gram_n(&a);
+        assert_eq!(ref_t, a.gram_t(), "serial gram_t {r}x{c}");
+        assert_eq!(ref_n, a.gram_n(), "serial gram_n {r}x{c}");
+        for pool in &pools {
+            let t = pool.threads();
+            assert_eq!(ref_t, a.par_gram_t(pool), "gram_t {r}x{c} t={t}");
+            assert_eq!(ref_n, a.par_gram_n(pool), "gram_n {r}x{c} t={t}");
+            assert_eq!(ref_t, a.par_gram_t(&pool.scoped()),
+                       "gram_t scoped {r}x{c} t={t}");
+        }
+    }
+}
+
+#[test]
+fn kernels_are_deterministic_across_repeated_dispatch() {
+    // same pool object, repeated calls: dynamic scheduling must never
+    // leak into the results (the slots are keyed by index, not arrival);
+    // shape chosen past PAR_MIN_WORK so the board really dispatches
+    let a = Mat::random_normal(&mut Rng::new(77), 65, 256);
+    let bt = Mat::random_normal(&mut Rng::new(78), 66, 256);
+    let pool = Pool::new(8);
+    let first = a.par_matmul_nt(&bt, &pool);
+    for rep in 0..10 {
+        assert_eq!(first, a.par_matmul_nt(&bt, &pool), "rep {rep}");
+    }
+}

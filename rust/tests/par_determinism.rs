@@ -140,6 +140,71 @@ fn fanout_matches_direct_per_layer_solve() {
 }
 
 #[test]
+fn persistent_pool_reused_across_runs_stays_byte_identical() {
+    // the persistent board carries state (epoch counter, parked workers)
+    // between calls — reusing ONE pool for repeated quantize_model runs
+    // must keep producing byte-identical bundles, and must match a pool
+    // built fresh for each run
+    let (arts, calib, graph) = synthetic_model();
+    let cfg = QuantConfig::default();
+    let pool = Pool::new(4);
+    let (b0, r0) = quantize_model_with_pool(
+        &arts, &calib, &graph, Method::Lrc, &cfg, &pool).unwrap();
+    for run in 0..3 {
+        let (b, r) = quantize_model_with_pool(
+            &arts, &calib, &graph, Method::Lrc, &cfg, &pool).unwrap();
+        assert_eq!(b0.order, b.order, "run {run}");
+        for name in &b0.order {
+            assert_eq!(b0.get(name).unwrap().data, b.get(name).unwrap().data,
+                       "{name} differs on reused pool, run {run}");
+        }
+        for (a, b) in r0.layers.iter().zip(&r.layers) {
+            assert_eq!(a.objective.to_bits(), b.objective.to_bits(),
+                       "{} run {run}", a.layer);
+        }
+    }
+    let fresh = Pool::new(4);
+    let (bf, _) = quantize_model_with_pool(
+        &arts, &calib, &graph, Method::Lrc, &cfg, &fresh).unwrap();
+    for name in &b0.order {
+        assert_eq!(b0.get(name).unwrap().data, bf.get(name).unwrap().data,
+                   "{name}: reused pool differs from fresh pool");
+    }
+}
+
+#[test]
+fn pool_drop_and_rebuild_cycles_do_not_wedge() {
+    // build → use → drop must join the parked workers every cycle; a
+    // leaked worker or wedged join would hang this test (the harness
+    // timeout is the assertion), and each rebuilt pool must still
+    // produce the reference results
+    let (arts, calib, graph) = synthetic_model();
+    let cfg = QuantConfig::default();
+    let (b0, _) = quantize_model_with_pool(
+        &arts, &calib, &graph, Method::Quarot, &cfg, &Pool::new(1)).unwrap();
+    for cycle in 0..4 {
+        let pool = Pool::new(3);
+        let (b, _) = quantize_model_with_pool(
+            &arts, &calib, &graph, Method::Quarot, &cfg, &pool).unwrap();
+        for name in &b0.order {
+            assert_eq!(b0.get(name).unwrap().data, b.get(name).unwrap().data,
+                       "{name} cycle {cycle}");
+        }
+        drop(pool);
+    }
+    // scoped handles share no workers and may outlive their parent
+    let parent = Pool::new(4);
+    let scoped = parent.scoped();
+    drop(parent);
+    let (bs, _) = quantize_model_with_pool(
+        &arts, &calib, &graph, Method::Quarot, &cfg, &scoped).unwrap();
+    for name in &b0.order {
+        assert_eq!(b0.get(name).unwrap().data, bs.get(name).unwrap().data,
+                   "{name} via scoped handle");
+    }
+}
+
+#[test]
 fn report_layer_order_is_canonical() {
     // results come back in quantized_layer_names order regardless of
     // which worker finished first

@@ -1,0 +1,100 @@
+//! Quantizer storage + ordering locks:
+//!
+//!   * `PackedInts` pack/unpack is **bit-exact** (`==` on f64) for
+//!     2/3/4-bit codes at group sizes {None, 64, 128} — the storage layer
+//!     behind Table 3's size accounting really preserves the grid.
+//!   * GPTQ never does worse than RTN on the layer objective over
+//!     `TestModel::layer_problem` seeds — the quantizer ordering of the
+//!     paper's Fig. 3 ablation.
+
+use lrc::linalg::Mat;
+use lrc::lrc::{lrc, TestModel};
+use lrc::quant::pack::PackedInts;
+use lrc::quant::{QuantConfig, Quantizer};
+use lrc::rng::Rng;
+
+#[test]
+fn packed_roundtrip_bit_exact_for_all_bitwidths_and_groups() {
+    let (rows, cols) = (5usize, 256usize); // divisible by both group sizes
+    for &bits in &[2u32, 3, 4] {
+        for &group in &[None, Some(64), Some(128)] {
+            let g = group.unwrap_or(cols);
+            let ng = cols / g;
+            let mut rng = Rng::new(bits as u64 * 1_000 + g as u64);
+            let half = 1i64 << (bits - 1);
+
+            // f32-representable scales (cast through f32 on purpose) and
+            // integer codes spanning the whole two's-complement grid,
+            // with the extremes planted explicitly
+            let mut scales = Mat::zeros(rows, ng);
+            for i in 0..rows {
+                for j in 0..ng {
+                    scales[(i, j)] = (0.25 + rng.uniform()) as f32 as f64;
+                }
+            }
+            let mut wq = Mat::zeros(rows, cols);
+            for i in 0..rows {
+                for j in 0..cols {
+                    let q = rng.below(2 * half as usize) as i64 - half;
+                    wq[(i, j)] = q as f64 * scales[(i, j / g)];
+                }
+            }
+            wq[(0, 0)] = -(half as f64) * scales[(0, 0)];
+            wq[(0, cols - 1)] = (half - 1) as f64 * scales[(0, ng - 1)];
+
+            let p = PackedInts::pack(&wq, &scales, bits, group);
+            let back = p.unpack();
+            // bit-exact: the codes and the f32 scales round-trip with no
+            // error at all
+            assert_eq!(wq, back, "bits={bits} group={group:?}");
+            assert_eq!(p.size_bytes(),
+                       (rows * cols * bits as usize).div_ceil(8)
+                           + rows * ng * 4,
+                       "size accounting bits={bits} group={group:?}");
+        }
+    }
+}
+
+#[test]
+fn packed_codes_survive_byte_boundary_straddles() {
+    // 3-bit codes hit every (bitpos % 8) phase; a prime-ish width makes
+    // sure rows do not re-align the stream
+    let (rows, cols) = (7usize, 13usize);
+    let mut scales = Mat::zeros(rows, 1);
+    for i in 0..rows {
+        scales[(i, 0)] = 1.0;
+    }
+    let mut wq = Mat::zeros(rows, cols);
+    let mut rng = Rng::new(33);
+    for i in 0..rows {
+        for j in 0..cols {
+            wq[(i, j)] = rng.below(8) as f64 - 4.0; // int3 grid [-4, 3]
+        }
+    }
+    let p = PackedInts::pack(&wq, &scales, 3, None);
+    assert_eq!(p.bytes.len(), (rows * cols * 3).div_ceil(8));
+    assert_eq!(wq, p.unpack());
+}
+
+#[test]
+fn gptq_layer_objective_never_worse_than_rtn() {
+    // Fig. 3's quantizer ordering at the layer level: with correlated
+    // activations the error-feedback solver must beat (or tie) RTN on
+    // the ℒ_qlr objective, at rank 0 and at a positive rank.
+    let cfg_gptq = QuantConfig::default();
+    let cfg_rtn = QuantConfig { quantizer: Quantizer::Rtn, ..Default::default() };
+    for seed in [0u64, 1, 2, 3] {
+        let (w, x) = TestModel::layer_problem(seed, 16, 32, 512);
+        let st = TestModel::stats(&x, 0.9);
+        // rank 0: the direct Fig. 3 comparison (pure quantizer swap)
+        let g0 = lrc(&w, &st, 0, &cfg_gptq).unwrap().objective;
+        let r0 = lrc(&w, &st, 0, &cfg_rtn).unwrap().objective;
+        assert!(g0 <= r0 * (1.0 + 1e-9), "seed {seed}: gptq {g0} > rtn {r0}");
+        // positive rank: the ULR half-steps are exact for either
+        // quantizer, so the ordering must survive (small slack for the
+        // alternation's approximate UQ half-steps)
+        let g4 = lrc(&w, &st, 4, &cfg_gptq).unwrap().objective;
+        let r4 = lrc(&w, &st, 4, &cfg_rtn).unwrap().objective;
+        assert!(g4 <= r4 * 1.02, "seed {seed} k=4: gptq {g4} > rtn {r4}");
+    }
+}
