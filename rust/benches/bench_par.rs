@@ -3,6 +3,8 @@
 //!
 //!   * par_* kernel scaling at 1/2/4/all threads,
 //!   * blocked-k kernel vs the naive triple loop (512×512, serial),
+//!   * scalar vs SIMD micro-kernel backends (512×512 GEMM and the
+//!     LRC-shaped Σ workloads at d ≤ 512) — same bits, fewer cycles,
 //!   * persistent pool vs per-call scoped spawning on the
 //!     `eigh_jacobi_par` round workload (the fine-grained dispatch the
 //!     persistent board exists for),
@@ -11,16 +13,20 @@
 //!
 //! Acceptance shape: ≥ 2× fan-out speedup at 4 threads on a 4+ core
 //! host; persistent ≥ 2× over scoped on the eigh round workload at 8
-//! threads; blocked-k beats the naive triple loop on 512×512.
+//! threads; blocked-k beats the naive triple loop on 512×512; the widest
+//! SIMD backend beats scalar on the 512×512 GEMM.
 //!
 //!   cargo bench --bench bench_par [-- --quick] [-- --samples 5
-//!       --dim 256 --layers 12]
+//!       --dim 256 --layers 12] [-- --json PATH]
 //!
 //! `--quick` shrinks sample counts and problem sizes so CI can run the
-//! whole target as a smoke job and log the scaling numbers per commit.
+//! whole target as a smoke job and log the scaling numbers per commit;
+//! `--json PATH` additionally persists every measurement (see
+//! `bench::write_json`) — CI stamps the file with the commit SHA and
+//! uploads it as a workflow artifact so runs diff against each other.
 
-use lrc::bench::{bench, bench_report, section, speedup};
-use lrc::linalg::{eigh_jacobi_par, Mat};
+use lrc::bench::{bench, bench_report, record, section, speedup};
+use lrc::linalg::{eigh_jacobi_par, simd, Mat};
 use lrc::lrc::{lrc, LayerStats};
 use lrc::par::Pool;
 use lrc::quant::QuantConfig;
@@ -48,6 +54,7 @@ fn bench_kernels(samples: usize, d: usize) {
         let _ = a.par_matmul_nt(&b, &serial);
     });
     println!("{:<40} {:>12}", "threads=1", base.pm());
+    record("threads=1", &base);
     for t in thread_counts().into_iter().skip(1) {
         let pool = Pool::new(t);
         let s = bench(1, samples, || {
@@ -55,6 +62,7 @@ fn bench_kernels(samples: usize, d: usize) {
         });
         println!("{:<40} {:>12}  → {:.2}x", format!("threads={t}"), s.pm(),
                  speedup(&base, &s));
+        record(&format!("threads={t}"), &s);
     }
 
     section(&format!("par_gram_t {d}x{d}"));
@@ -62,6 +70,7 @@ fn bench_kernels(samples: usize, d: usize) {
         let _ = a.par_gram_t(&serial);
     });
     println!("{:<40} {:>12}", "threads=1", base.pm());
+    record("threads=1", &base);
     for t in thread_counts().into_iter().skip(1) {
         let pool = Pool::new(t);
         let s = bench(1, samples, || {
@@ -69,6 +78,7 @@ fn bench_kernels(samples: usize, d: usize) {
         });
         println!("{:<40} {:>12}  → {:.2}x", format!("threads={t}"), s.pm(),
                  speedup(&base, &s));
+        record(&format!("threads={t}"), &s);
     }
 }
 
@@ -101,6 +111,7 @@ fn bench_blocked_vs_naive(samples: usize, d: usize) {
         let _ = naive_matmul_nt(&a, &b);
     });
     println!("{:<40} {:>12}", "naive triple loop", naive.pm());
+    record("naive triple loop", &naive);
     let serial = Pool::serial();
     let blocked = bench(0, samples, || {
         let _ = a.par_matmul_nt(&b, &serial);
@@ -108,11 +119,86 @@ fn bench_blocked_vs_naive(samples: usize, d: usize) {
     println!("{:<40} {:>12}  → {:.2}x  (target > 1x)",
              "blocked-k register-tiled", blocked.pm(),
              speedup(&naive, &blocked));
+    record("blocked-k register-tiled", &blocked);
     let auto = bench(0, samples, || {
         let _ = a.matmul_nt(&b);
     });
     println!("{:<40} {:>12}  → {:.2}x  (auto-par on the global pool)",
              "matmul_nt (auto)", auto.pm(), speedup(&naive, &auto));
+    record("matmul_nt (auto)", &auto);
+}
+
+/// Scalar vs every available SIMD backend, serial, on the hot shapes:
+/// the 512×512 GEMM and the LRC-shaped Σ accumulation (d=384 with 4·d
+/// calibration tokens — Algorithm 1's XYᵀ and XXᵀ).  Each backend's
+/// result is asserted bit-equal to the scalar kernel before it is timed:
+/// this is the oracle contract in bench form.
+fn bench_simd_backends(samples: usize) {
+    let serial = Pool::serial();
+    let scalar = simd::Backend::Scalar;
+
+    section("SIMD backends vs scalar tile (serial, bit-identical)");
+    println!("host backends: {:?}, auto picks {}",
+             simd::available_backends().iter().map(|b| b.name())
+                 .collect::<Vec<_>>(),
+             simd::detect().name());
+
+    let mut rng = Rng::new(9);
+    for (label, m, k, n) in [("GEMM 512x512", 512usize, 512usize, 512usize),
+                             ("LRC Σxy 384x1536·384ᵀ", 384, 1536, 384)] {
+        let a = Mat::random_normal(&mut rng, m, k);
+        let bt = Mat::random_normal(&mut rng, n, k);
+        simd::set_backend(Some(scalar)).unwrap();
+        let reference = a.par_matmul_nt(&bt, &serial);
+        let base = bench(1, samples, || {
+            let _ = a.par_matmul_nt(&bt, &serial);
+        });
+        println!("{:<40} {:>12}", format!("{label} scalar"), base.pm());
+        record(&format!("{label} scalar"), &base);
+        for be in simd::available_backends() {
+            if be == scalar {
+                continue;
+            }
+            simd::set_backend(Some(be)).unwrap();
+            assert_eq!(reference, a.par_matmul_nt(&bt, &serial),
+                       "{label}: {} diverged from scalar bits", be.name());
+            let s = bench(1, samples, || {
+                let _ = a.par_matmul_nt(&bt, &serial);
+            });
+            println!("{:<40} {:>12}  → {:.2}x{}",
+                     format!("{label} {}", be.name()), s.pm(),
+                     speedup(&base, &s),
+                     if be == simd::detect() { "  (target > 1x)" } else { "" });
+            record(&format!("{label} {}", be.name()), &s);
+        }
+        simd::set_backend(None).unwrap();
+    }
+
+    // the Σx Gram path (packed-lane gram_row_segment)
+    let x = Mat::random_normal(&mut rng, 384, 1536);
+    simd::set_backend(Some(scalar)).unwrap();
+    let reference = x.par_gram_n(&serial);
+    let base = bench(1, samples, || {
+        let _ = x.par_gram_n(&serial);
+    });
+    println!("{:<40} {:>12}", "LRC Σx gram 384x1536 scalar", base.pm());
+    record("LRC Σx gram 384x1536 scalar", &base);
+    for be in simd::available_backends() {
+        if be == scalar {
+            continue;
+        }
+        simd::set_backend(Some(be)).unwrap();
+        assert_eq!(reference, x.par_gram_n(&serial),
+                   "gram: {} diverged from scalar bits", be.name());
+        let s = bench(1, samples, || {
+            let _ = x.par_gram_n(&serial);
+        });
+        println!("{:<40} {:>12}  → {:.2}x",
+                 format!("LRC Σx gram 384x1536 {}", be.name()), s.pm(),
+                 speedup(&base, &s));
+        record(&format!("LRC Σx gram 384x1536 {}", be.name()), &s);
+    }
+    simd::set_backend(None).unwrap();
 }
 
 fn bench_eigh_dispatch(samples: usize, n: usize) {
@@ -127,6 +213,7 @@ fn bench_eigh_dispatch(samples: usize, n: usize) {
         let _ = eigh_jacobi_par(&a, &Pool::serial());
     });
     println!("{:<40} {:>12}", "threads=1 (inline)", serial.pm());
+    record("threads=1 (inline)", &serial);
     for t in [2usize, 8] {
         let pool = Pool::new(t);
         let persistent = bench(0, samples, || {
@@ -140,6 +227,8 @@ fn bench_eigh_dispatch(samples: usize, n: usize) {
                   persistent {:.2}x faster{}",
                  persistent.pm(), scoped.pm(), speedup(&scoped, &persistent),
                  if t == 8 { "  (target ≥ 2x)" } else { "" });
+        record(&format!("threads={t} persistent"), &persistent);
+        record(&format!("threads={t} scoped"), &scoped);
     }
 }
 
@@ -171,6 +260,7 @@ fn bench_layer_fanout(samples: usize, n_layers: usize, d: usize) {
     let serial = Pool::serial();
     let base = bench(1, samples, || run(&serial));
     println!("{:<40} {:>12}", "threads=1", base.pm());
+    record("threads=1", &base);
     let mut best = 1.0_f64;
     for t in thread_counts().into_iter().skip(1) {
         let pool = Pool::new(t);
@@ -178,6 +268,7 @@ fn bench_layer_fanout(samples: usize, n_layers: usize, d: usize) {
         let sp = speedup(&base, &s);
         best = best.max(sp);
         println!("{:<40} {:>12}  → {sp:.2}x", format!("threads={t}"), s.pm());
+        record(&format!("threads={t}"), &s);
     }
     println!("best fan-out speedup: {best:.2}x \
               (target ≥ 2x on 4+ cores)");
@@ -210,7 +301,27 @@ fn main() {
 
     bench_kernels(samples, d);
     bench_blocked_vs_naive(samples.min(3), 512);
+    bench_simd_backends(samples.min(3));
     bench_eigh_dispatch(samples.clamp(1, 2), if quick { 48 } else { 64 });
     bench_layer_fanout(samples, n_layers, d.min(96));
     bench_dispatch_overhead(samples);
+
+    // persist every recorded measurement for the CI artifact (stamped
+    // with the commit when the workflow exports GITHUB_SHA)
+    if let Some(path) = args.get("json") {
+        let commit = std::env::var("GITHUB_SHA")
+            .unwrap_or_else(|_| "unknown".into());
+        let meta = [("bench", "bench_par".to_string()),
+                    ("commit", commit),
+                    ("simd_env", std::env::var("LRC_SIMD")
+                        .unwrap_or_else(|_| "unset".into())),
+                    ("threads_env", std::env::var("LRC_THREADS")
+                        .unwrap_or_else(|_| "unset".into()))];
+        let path = std::path::Path::new(path);
+        match lrc::bench::write_json(path, &meta) {
+            Ok(()) => println!("\nwrote bench JSON → {}", path.display()),
+            Err(e) => eprintln!("error: could not write {}: {e}",
+                                path.display()),
+        }
+    }
 }

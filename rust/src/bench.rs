@@ -1,8 +1,19 @@
 //! Measurement harness for the `cargo bench` targets (no criterion in the
 //! offline image): warmup + timed samples, mean/std/percentiles, and the
 //! paper-shaped table rendering every bench target prints.
+//!
+//! Measurements can additionally be **persisted**: [`record`] (called
+//! automatically by [`bench_report`], and explicitly by the bench
+//! targets' custom-printed sites) accumulates every named measurement
+//! under the current [`section`], and [`write_json`] dumps them as one
+//! commit-stampable JSON document — the CI bench job uploads it as a
+//! workflow artifact so perf regressions diff across runs instead of
+//! scrolling through job logs.
 
+use std::sync::Mutex;
 use std::time::Instant;
+
+use crate::util::Json;
 
 /// Timing statistics over n samples.
 #[derive(Clone, Debug)]
@@ -62,12 +73,69 @@ pub fn bench_report<F: FnMut()>(name: &str, warmup: usize, samples: usize,
     let stats = bench(warmup, samples, f);
     println!("{name:<40} {:>12}  (min {:.2} ms, p95 {:.2} ms, n={})",
              stats.pm(), stats.min(), stats.percentile(95.0), samples);
+    record(name, &stats);
     stats
 }
 
-/// Standard bench-output header so all table benches look alike.
+/// (section, name, samples_ms) triples accumulated for [`write_json`].
+static RECORDS: Mutex<Vec<(String, String, Vec<f64>)>> =
+    Mutex::new(Vec::new());
+
+/// Section the next [`record`] calls land under (set by [`section`]).
+static CURRENT_SECTION: Mutex<String> = Mutex::new(String::new());
+
+/// Standard bench-output header so all table benches look alike; also
+/// scopes subsequent [`record`]ed measurements for [`write_json`].
 pub fn section(title: &str) {
     println!("\n=== {title} ===");
+    *CURRENT_SECTION.lock().unwrap() = title.to_string();
+}
+
+/// Persist a named measurement under the current section (bench targets
+/// with custom println formatting call this next to their printing;
+/// [`bench_report`] does it automatically).
+pub fn record(name: &str, stats: &Stats) {
+    let sec = CURRENT_SECTION.lock().unwrap().clone();
+    RECORDS.lock().unwrap()
+        .push((sec, name.to_string(), stats.samples_ms.clone()));
+}
+
+/// Dump every recorded measurement as one JSON document:
+/// `{meta..., unix_time, entries: [{section, name, mean_ms, std_ms,
+/// min_ms, p95_ms, samples_ms}]}`.  `meta` carries bench-target name,
+/// commit SHA and anything else the caller wants stamped.
+pub fn write_json(path: &std::path::Path, meta: &[(&str, String)])
+                  -> std::io::Result<()> {
+    let entries: Vec<Json> = RECORDS.lock().unwrap().iter()
+        .map(|(sec, name, samples)| {
+            let s = Stats { samples_ms: samples.clone() };
+            Json::obj(vec![
+                ("section", Json::str(sec.clone())),
+                ("name", Json::str(name.clone())),
+                ("mean_ms", Json::num(s.mean())),
+                ("std_ms", Json::num(s.std())),
+                ("min_ms", Json::num(s.min())),
+                ("p95_ms", Json::num(s.percentile(95.0))),
+                ("samples_ms",
+                 Json::Arr(samples.iter().map(|&v| Json::num(v)).collect())),
+            ])
+        })
+        .collect();
+    let unix_time = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs() as f64)
+        .unwrap_or(0.0);
+    let mut pairs: Vec<(&str, Json)> = meta.iter()
+        .map(|(k, v)| (*k, Json::str(v.clone())))
+        .collect();
+    pairs.push(("unix_time", Json::num(unix_time)));
+    pairs.push(("entries", Json::Arr(entries)));
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, Json::obj(pairs).to_string())
 }
 
 /// Mean-time speedup of `new` over `base` (>1 = faster) — the scaling
@@ -105,6 +173,32 @@ mod tests {
     fn pm_format() {
         let s = Stats { samples_ms: vec![10.0, 10.0] };
         assert_eq!(s.pm(), "10.00 +- 0.00");
+    }
+
+    #[test]
+    fn record_and_write_json_roundtrip() {
+        section("json test section");
+        record("alpha", &Stats { samples_ms: vec![1.0, 3.0] });
+        let path = std::env::temp_dir().join("lrc_bench_json_test.json");
+        write_json(&path, &[("bench", "unit".into()),
+                            ("commit", "deadbeef".into())]).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap())
+            .unwrap();
+        assert_eq!(doc.get("bench").and_then(|j| j.as_str()), Some("unit"));
+        assert_eq!(doc.get("commit").and_then(|j| j.as_str()),
+                   Some("deadbeef"));
+        let entries = doc.get("entries").unwrap().as_arr().unwrap();
+        // the global record log is shared across tests in this binary;
+        // only assert our own entry landed with the right shape
+        let mine = entries.iter().find(|e| {
+            e.get("name").and_then(|j| j.as_str()) == Some("alpha")
+                && e.get("section").and_then(|j| j.as_str())
+                    == Some("json test section")
+        }).expect("recorded entry missing from JSON");
+        assert_eq!(mine.get("mean_ms").and_then(|j| j.as_f64()), Some(2.0));
+        assert_eq!(mine.get("samples_ms").unwrap().as_arr().unwrap().len(),
+                   2);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -83,6 +83,13 @@ impl Batcher {
                 break;
             }
             if !st.items.is_empty() {
+                // a closed queue never receives more work: flush the
+                // partial batch immediately instead of waiting out the
+                // max_wait deadline (close() notifies, so consumers
+                // already parked on the deadline wait land here too)
+                if st.closed {
+                    break;
+                }
                 // deadline check against the oldest entry
                 let oldest = st.items.front().unwrap().enqueued;
                 let waited = oldest.elapsed();
@@ -194,6 +201,45 @@ mod tests {
         // drains the remaining request, then returns None
         assert_eq!(b.next_batch(4).unwrap().len(), 1);
         assert!(b.next_batch(4).is_none());
+    }
+
+    #[test]
+    fn close_flushes_partial_batch_without_waiting_out_deadline() {
+        // regression: a closed queue used to sit out the full max_wait
+        // before handing a partial batch over; with a long deadline the
+        // drain must still be prompt
+        let b = Batcher::new(policy(8, 10_000, 100));
+        b.push(req(1)).unwrap();
+        b.push(req(2)).unwrap();
+        b.close();
+        let t0 = Instant::now();
+        let batch = b.next_batch(8).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert!(t0.elapsed() < Duration::from_millis(500),
+                "partial batch took {:?} after close (max_wait 10s)",
+                t0.elapsed());
+        assert!(b.next_batch(8).is_none());
+    }
+
+    #[test]
+    fn close_wakes_consumer_parked_on_deadline_wait() {
+        // same bug from the other side: the consumer is already blocked
+        // inside next_batch on the 10s deadline when close() lands — the
+        // notify must flush the partial batch, not rearm the wait
+        let b = std::sync::Arc::new(Batcher::new(policy(8, 10_000, 100)));
+        b.push(req(7)).unwrap();
+        let bb = b.clone();
+        let consumer = std::thread::spawn(move || {
+            let t0 = Instant::now();
+            (bb.next_batch(8), t0.elapsed())
+        });
+        // let the consumer reach the deadline wait, then close
+        std::thread::sleep(Duration::from_millis(100));
+        b.close();
+        let (batch, waited) = consumer.join().unwrap();
+        assert_eq!(batch.unwrap().len(), 1);
+        assert!(waited < Duration::from_secs(5),
+                "consumer waited {waited:?} — close() did not flush");
     }
 
     #[test]

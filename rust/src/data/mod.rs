@@ -7,6 +7,8 @@ pub use tasks::{Task, TaskItem};
 
 use std::path::Path;
 
+use anyhow::{anyhow, Result};
+
 /// Byte-level tokenizer — the vocabulary is exactly 0..=255.
 pub const VOCAB_SIZE: usize = 256;
 
@@ -48,16 +50,28 @@ impl Corpus {
 
     /// Deterministic calibration sequences from the *train* region
     /// (the paper: 128 random sequences of the calibration set).
+    ///
+    /// Errors when the train region cannot hold even one `seq_len`
+    /// window (the old clamp sliced past the token buffer and panicked
+    /// on corpora shorter than `seq_len + 1`).
     pub fn calib_sequences(&self, n_seqs: usize, seq_len: usize, seed: u64)
-                           -> Vec<Vec<i32>> {
+                           -> Result<Vec<Vec<i32>>> {
+        if self.split < seq_len + 1 {
+            return Err(anyhow!(
+                "corpus {:?} is too short for calibration: the train \
+                 region holds {} tokens but one sequence needs seq_len + 1 \
+                 = {} (corpus has {} tokens total — supply a longer corpus \
+                 or a smaller seq_len)",
+                self.name, self.split, seq_len + 1, self.tokens.len()));
+        }
         let mut rng = crate::rng::Rng::new(seed);
-        let max_start = self.split.saturating_sub(seq_len + 1).max(1);
-        (0..n_seqs)
+        let max_start = self.split - seq_len; // s + seq_len ≤ split always
+        Ok((0..n_seqs)
             .map(|_| {
                 let s = rng.below(max_start);
                 self.tokens[s..s + seq_len].to_vec()
             })
-            .collect()
+            .collect())
     }
 
     /// Non-overlapping eval windows from the held-out tail.
@@ -109,13 +123,50 @@ mod tests {
         let c = Corpus::from_text("t", &text);
         assert_eq!(c.tokens.len(), 1600);
         assert_eq!(c.split, 1440);
-        let seqs = c.calib_sequences(5, 16, 42);
+        let seqs = c.calib_sequences(5, 16, 42).unwrap();
         assert_eq!(seqs.len(), 5);
         for s in &seqs {
             assert_eq!(s.len(), 16);
         }
         // determinism
-        assert_eq!(seqs, c.calib_sequences(5, 16, 42));
+        assert_eq!(seqs, c.calib_sequences(5, 16, 42).unwrap());
+    }
+
+    #[test]
+    fn calib_windows_stay_inside_the_train_region() {
+        // token value == position (the Corpus is built directly, so
+        // tokens need not be bytes): every window's start offset is
+        // exactly recoverable and the s + seq_len ≤ split bound is
+        // observable, not assumed
+        let c = Corpus { name: "pos".into(), tokens: (0..500).collect(),
+                         split: 450 };
+        let seqs = c.calib_sequences(64, 32, 7).unwrap();
+        for s in &seqs {
+            let start = s[0] as usize;
+            assert_eq!(s, &(start as i32..(start + 32) as i32)
+                           .collect::<Vec<_>>(),
+                       "window is not a contiguous corpus slice");
+            assert!(start + 32 <= c.split,
+                    "window starting at {start} leaks past split {}",
+                    c.split);
+        }
+    }
+
+    #[test]
+    fn short_corpus_errors_instead_of_panicking() {
+        // regression: corpora shorter than seq_len + 1 used to clamp
+        // max_start to 1 and slice past the token buffer
+        for text in ["", "ab", &"x".repeat(16)] {
+            let c = Corpus::from_text("tiny", text);
+            let err = c.calib_sequences(4, 16, 1).unwrap_err().to_string();
+            assert!(err.contains("too short for calibration"),
+                    "unexpected error for {} tokens: {err}", text.len());
+        }
+        // boundary: train region exactly seq_len + 1 tokens must work
+        let c = Corpus::from_text("edge", &"y".repeat(20)); // split = 18
+        let seqs = c.calib_sequences(3, 17, 1).unwrap();
+        assert_eq!(seqs.len(), 3);
+        assert!(c.calib_sequences(3, 18, 1).is_err()); // one past the edge
     }
 
     #[test]

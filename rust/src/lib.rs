@@ -18,10 +18,13 @@
 //! * [`linalg`]      — dense f64 linear algebra built from scratch
 //!                     (blocked-k / register-tiled GEMM micro-kernels with
 //!                     a canonical per-element accumulation order — serial,
-//!                     blocked and parallel paths agree bit-for-bit, see
-//!                     `tests/kernel_oracle.rs`; Cholesky, Jacobi
-//!                     eigensolver, FWHT; `par_*` variants plus automatic
-//!                     parallelism past a fixed work threshold)
+//!                     blocked, parallel AND every SIMD backend agree
+//!                     bit-for-bit, see `tests/kernel_oracle.rs`; the
+//!                     `linalg::simd` layer dispatches SSE2/AVX2/NEON
+//!                     lane kernels at runtime, `LRC_SIMD` / `--simd`
+//!                     pins one; Cholesky, Jacobi eigensolver, FWHT;
+//!                     `par_*` variants plus automatic parallelism past a
+//!                     fixed work threshold)
 //! * [`rng`]         — deterministic SplitMix64 RNG
 //! * [`quant`]       — RTN / GPTQ quantizers + int4 bit-packing
 //! * [`lrc`]         — the paper's Algorithms 1–4 + SVD baseline + oracle

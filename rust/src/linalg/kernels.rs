@@ -1,52 +1,82 @@
-//! Blocked-k / register-tiled GEMM micro-kernels.
+//! Blocked-k / register-tiled GEMM micro-kernels with packed-lane SIMD
+//! dispatch.
 //!
 //! # The canonical-scalar-program contract
 //!
 //! Every output element these kernels produce is computed by **one fixed
 //! floating-point program**: a single accumulator that adds
-//! `a[i,k]·b[j,k]` in strictly ascending `k`.  Blocking and tiling change
-//! only the *order in which different elements advance* (cache locality)
-//! and how many independent accumulator chains are in flight at once
-//! (instruction-level parallelism); they never reassociate the sum inside
-//! one element.  Two consequences, both load-bearing:
+//! `a[i,k]·b[j,k]` in strictly ascending `k`, one IEEE mul followed by
+//! one IEEE add per step.  Blocking, tiling and vectorization change only
+//! the *order in which different elements advance* (cache locality) and
+//! how many independent accumulator chains are in flight at once
+//! (instruction- and data-level parallelism); they never reassociate the
+//! sum inside one element.  Two consequences, both load-bearing:
 //!
 //!   * the result is **bit-identical to the naive triple loop** — the
-//!     randomized oracle in `tests/kernel_oracle.rs` asserts `==` on f64,
+//!     randomized oracle in `tests/kernel_oracle.rs` asserts `==` on f64
+//!     for every available SIMD backend,
 //!   * any row chunking is bit-identical too, so the serial and parallel
-//!     paths agree at every thread count *by construction* (no careful
-//!     chunk-alignment argument needed, unlike the old 2×2 kernel).
+//!     paths agree at every thread count *by construction*.
+//!
+//! # SIMD lane layout
+//!
+//! The [`super::simd`] backends vectorize **across the NR output
+//! columns** of the register tile: each vector lane carries one output
+//! element's accumulator, `a[i,k]` is broadcast, and mul/add stay
+//! separate (no FMA — its single rounding would change the bits; see the
+//! `simd` module docs for why lane-wise mul-then-add cannot).  To make
+//! the per-k B access one contiguous vector load, the rows of Bᵀ are
+//! **packed** once per product into NR-wide strips laid out k-major
+//! ([`PackedRows`]: `strip[kk*nr + l] = B[j0+l, kk]`, zero-padded past
+//! the edge; padded lanes are computed and discarded, never stored).
+//! The one packing pass — O(n·k), the cost of one extra transpose — is
+//! shared by the serial sweep and by every row chunk of the parallel
+//! path (the pool workers all read the same pack), and the Gram entry
+//! points reuse the same structure.  Tile shape is selected by the
+//! backend captured at pack time — 4×8 under AVX2 (two ymm accumulators
+//! per row), 4×4 otherwise — via [`simd::Backend::nr`].
 //!
 //! # Block schedule
 //!
 //! Compile-time fixed — never derived from the thread count or the host:
 //! [`NC`]-row panels of Bᵀ are held hot while [`KC`]-wide k-panels stream
-//! through [`MR`]×[`NR`] register tiles.  The MR×NR tile carries 16
-//! independent accumulator chains, which is what covers the FP-add
-//! latency×throughput product on current cores; KC·(MR+NR) f64 ≈ 16 KB
-//! keeps the active slices in L1, and the NC×KC B-panel (128 KB) in L2.
+//! through [`MR`]×nr register tiles.  KC·(MR+nr) f64 ≤ 24 KB keeps the
+//! active slices in L1, and the packed NC×KC panel (128 KB) in L2.
 
+use super::simd::{self, Backend, MAX_NR};
 use super::Mat;
 
-/// Register-tile rows (A rows advanced together).
+/// Register-tile rows (A rows advanced together).  The tile width (NR
+/// lanes) is backend-selected, see [`simd::Backend::nr`].
 pub const MR: usize = 4;
-/// Register-tile columns (Bᵀ rows advanced together).
-pub const NR: usize = 4;
 /// k-panel width: columns of A/Bᵀ processed per pass.
 pub const KC: usize = 256;
-/// Output-column panel: Bᵀ rows kept hot across one row sweep.
+/// Output-column panel: Bᵀ rows kept hot (packed) across one row sweep.
 pub const NC: usize = 64;
 
 /// C[r0..r1, :] = A[r0..r1, :]·Bᵀ, written into `out` (row-major,
-/// `(r1-r0) × bt.rows`, rows indexed relative to `r0`).
+/// `(r1-r0) × bt.rows`, rows indexed relative to `r0`), with Bᵀ given
+/// pre-packed ([`pack_rows`] — pack once per product and share it across
+/// every row chunk; the pool workers of the parallel path all read the
+/// same pack).
 ///
 /// `out` must be zero-initialized: the kernel accumulates k-panels into
 /// it, which is exactly what keeps every element on the canonical
 /// ascending-k program.
-pub(crate) fn matmul_nt_block(a: &Mat, bt: &Mat, r0: usize, r1: usize,
+pub(crate) fn matmul_nt_block(a: &Mat, bt: &PackedRows, r0: usize, r1: usize,
                               out: &mut [f64]) {
     let n = bt.rows;
     let kd = a.cols;
     debug_assert_eq!(out.len(), (r1 - r0) * n);
+    debug_assert_eq!(bt.cols, kd, "matmul_nt_block packed inner dims");
+    if n == 0 || r1 <= r0 || kd == 0 {
+        return; // empty product: out stays zero, matching the empty sum
+    }
+    let be = bt.be;
+    let nr = be.nr();
+    // NC (64) is a multiple of every backend's nr, so jc panels are
+    // strip-aligned by construction
+    debug_assert_eq!(NC % nr, 0);
     let mut jc = 0;
     while jc < n {
         let jc_hi = (jc + NC).min(n);
@@ -56,16 +86,21 @@ pub(crate) fn matmul_nt_block(a: &Mat, bt: &Mat, r0: usize, r1: usize,
             let mut i = r0;
             while i < r1 {
                 let i_hi = (i + MR).min(r1);
-                let mut j = jc;
-                while j < jc_hi {
-                    let j_hi = (j + NR).min(jc_hi);
-                    if i_hi - i == MR && j_hi - j == NR {
-                        tile_full(a, bt, i, j, kc, kc_hi, r0, n, out);
+                for s in jc / nr..jc_hi.div_ceil(nr) {
+                    let j = s * nr;
+                    let lanes = (jc_hi - j).min(nr);
+                    // this strip's k-slice for the current panel
+                    let strip = &bt.data[(s * kd + kc) * nr..
+                                         (s * kd + kc_hi) * nr];
+                    if i_hi - i == MR {
+                        tile_full(be, a, i, j, kc, kc_hi, lanes, strip, r0,
+                                  n, out);
                     } else {
-                        tile_edge(a, bt, i, i_hi, j, j_hi, kc, kc_hi, r0, n,
-                                  out);
+                        for r in i..i_hi {
+                            tile_row(be, a, r, j, kc, kc_hi, lanes, strip,
+                                     r0, n, out);
+                        }
                     }
-                    j = j_hi;
                 }
                 i = i_hi;
             }
@@ -75,88 +110,83 @@ pub(crate) fn matmul_nt_block(a: &Mat, bt: &Mat, r0: usize, r1: usize,
     }
 }
 
-/// The MR×NR register tile over one k-panel: 16 accumulator chains, each
-/// strictly ascending in k.
+/// The full MR-row tile over one packed strip: load the live accumulators
+/// from C, advance them through the k-panel on the dispatched backend,
+/// store the valid lanes back.  Padded lanes accumulate zeros and are
+/// discarded.
 #[allow(clippy::too_many_arguments)]
 #[inline]
-fn tile_full(a: &Mat, bt: &Mat, i: usize, j: usize, k0: usize, k1: usize,
-             r0: usize, n: usize, out: &mut [f64]) {
-    let a0 = &a.row(i)[k0..k1];
-    let a1 = &a.row(i + 1)[k0..k1];
-    let a2 = &a.row(i + 2)[k0..k1];
-    let a3 = &a.row(i + 3)[k0..k1];
-    let b0 = &bt.row(j)[k0..k1];
-    let b1 = &bt.row(j + 1)[k0..k1];
-    let b2 = &bt.row(j + 2)[k0..k1];
-    let b3 = &bt.row(j + 3)[k0..k1];
-    let o0 = (i - r0) * n + j;
-    let o1 = o0 + n;
-    let o2 = o1 + n;
-    let o3 = o2 + n;
-    let (mut c00, mut c01, mut c02, mut c03) =
-        (out[o0], out[o0 + 1], out[o0 + 2], out[o0 + 3]);
-    let (mut c10, mut c11, mut c12, mut c13) =
-        (out[o1], out[o1 + 1], out[o1 + 2], out[o1 + 3]);
-    let (mut c20, mut c21, mut c22, mut c23) =
-        (out[o2], out[o2 + 1], out[o2 + 2], out[o2 + 3]);
-    let (mut c30, mut c31, mut c32, mut c33) =
-        (out[o3], out[o3 + 1], out[o3 + 2], out[o3 + 3]);
-    for k in 0..k1 - k0 {
-        let (x0, x1, x2, x3) = (a0[k], a1[k], a2[k], a3[k]);
-        let (y0, y1, y2, y3) = (b0[k], b1[k], b2[k], b3[k]);
-        c00 += x0 * y0;
-        c01 += x0 * y1;
-        c02 += x0 * y2;
-        c03 += x0 * y3;
-        c10 += x1 * y0;
-        c11 += x1 * y1;
-        c12 += x1 * y2;
-        c13 += x1 * y3;
-        c20 += x2 * y0;
-        c21 += x2 * y1;
-        c22 += x2 * y2;
-        c23 += x2 * y3;
-        c30 += x3 * y0;
-        c31 += x3 * y1;
-        c32 += x3 * y2;
-        c33 += x3 * y3;
+fn tile_full(be: Backend, a: &Mat, i: usize, j: usize, k0: usize, k1: usize,
+             lanes: usize, strip: &[f64], r0: usize, n: usize,
+             out: &mut [f64]) {
+    let nr = be.nr();
+    let mut acc = [0.0_f64; MR * MAX_NR];
+    let acc = &mut acc[..MR * nr];
+    for r in 0..MR {
+        let orow = (i + r - r0) * n + j;
+        acc[r * nr..r * nr + lanes].copy_from_slice(&out[orow..orow + lanes]);
     }
-    out[o0] = c00;
-    out[o0 + 1] = c01;
-    out[o0 + 2] = c02;
-    out[o0 + 3] = c03;
-    out[o1] = c10;
-    out[o1 + 1] = c11;
-    out[o1 + 2] = c12;
-    out[o1 + 3] = c13;
-    out[o2] = c20;
-    out[o2 + 1] = c21;
-    out[o2 + 2] = c22;
-    out[o2 + 3] = c23;
-    out[o3] = c30;
-    out[o3 + 1] = c31;
-    out[o3 + 2] = c32;
-    out[o3 + 3] = c33;
+    simd::tile4(be,
+                [&a.row(i)[k0..k1], &a.row(i + 1)[k0..k1],
+                 &a.row(i + 2)[k0..k1], &a.row(i + 3)[k0..k1]],
+                strip, acc);
+    for r in 0..MR {
+        let orow = (i + r - r0) * n + j;
+        out[orow..orow + lanes].copy_from_slice(&acc[r * nr..r * nr + lanes]);
+    }
 }
 
-/// Ragged tile at the matrix edges — same per-element program, just
-/// without the fixed-size register block.
+/// Ragged row edge: one output row over one packed strip — same
+/// per-element program, one accumulator vector pair instead of four.
 #[allow(clippy::too_many_arguments)]
 #[inline]
-fn tile_edge(a: &Mat, bt: &Mat, i0: usize, i1: usize, j0: usize, j1: usize,
-             k0: usize, k1: usize, r0: usize, n: usize, out: &mut [f64]) {
-    for i in i0..i1 {
-        let ar = &a.row(i)[k0..k1];
-        let orow = (i - r0) * n;
-        for j in j0..j1 {
-            let br = &bt.row(j)[k0..k1];
-            let mut s = out[orow + j];
-            for (x, y) in ar.iter().zip(br) {
-                s += x * y;
+fn tile_row(be: Backend, a: &Mat, i: usize, j: usize, k0: usize, k1: usize,
+            lanes: usize, strip: &[f64], r0: usize, n: usize,
+            out: &mut [f64]) {
+    let nr = be.nr();
+    let mut acc = [0.0_f64; MAX_NR];
+    let acc = &mut acc[..nr];
+    let orow = (i - r0) * n + j;
+    acc[..lanes].copy_from_slice(&out[orow..orow + lanes]);
+    simd::tile1(be, &a.row(i)[k0..k1], strip, acc);
+    out[orow..orow + lanes].copy_from_slice(&acc[..lanes]);
+}
+
+/// Rows of `src` packed once into NR-wide k-major lane strips
+/// (`data[(s*cols + kk)*nr + l] = src[s*nr + l, kk]`, zero-padded), so
+/// the GEMM tiles and every Gram row segment reuse contiguous vector
+/// loads.  The strip width is fixed by the backend captured at pack time
+/// — the consuming kernels must dispatch on the same backend, so it
+/// rides along (flipping the global backend mid-product therefore cannot
+/// desynchronize layout and dispatch).
+pub(crate) struct PackedRows {
+    be: Backend,
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+/// Pack `src` for [`matmul_nt_block`] / [`gram_row_segment_packed`] on
+/// the active backend.  O(rows·cols) — one extra transpose-sized pass,
+/// amortized over the whole product (every row chunk / row segment).
+pub(crate) fn pack_rows(src: &Mat) -> PackedRows {
+    let be = simd::active();
+    let nr = be.nr();
+    let n_strips = src.rows.div_ceil(nr);
+    let mut data = vec![0.0_f64; n_strips * src.cols * nr];
+    for s in 0..n_strips {
+        let strip = &mut data[s * src.cols * nr..(s + 1) * src.cols * nr];
+        for l in 0..nr {
+            let j = s * nr + l;
+            if j < src.rows {
+                for (kk, &v) in src.row(j).iter().enumerate() {
+                    strip[kk * nr + l] = v;
+                }
             }
-            out[orow + j] = s;
+            // else: buffer is zero-initialized, padded lanes stay 0
         }
     }
+    PackedRows { be, rows: src.rows, cols: src.cols, data }
 }
 
 /// Row `i` of the upper triangle of `src·srcᵀ`: the segment
@@ -164,41 +194,49 @@ fn tile_edge(a: &Mat, bt: &Mat, i0: usize, i1: usize, j0: usize, j1: usize,
 ///
 /// Every element follows the same canonical ascending-k program as the
 /// GEMM kernel, so serial loops, parallel row maps and any chunking all
-/// produce identical bits.  The j-direction is tiled by [`NR`] so the
-/// `src.row(i)` loads are amortized over four accumulator chains.
-pub(crate) fn gram_row_segment(src: &Mat, i: usize) -> Vec<f64> {
+/// produce identical bits.  The j-direction runs on the packed lane
+/// strips of `packed` (the same lane treatment as the GEMM tile): the
+/// leading rows up to the next strip boundary are plain scalar dots,
+/// then whole strips advance nr accumulators at once via
+/// [`simd::tile1`], trailing padded lanes discarded.
+pub(crate) fn gram_row_segment_packed(src: &Mat, packed: &PackedRows,
+                                      i: usize) -> Vec<f64> {
     let m = src.rows;
+    let nr = packed.be.nr();
+    debug_assert_eq!(packed.cols, src.cols);
     let ri = src.row(i);
     let mut seg = Vec::with_capacity(m - i);
-    let mut j = i;
-    while j + NR <= m {
-        let b0 = src.row(j);
-        let b1 = src.row(j + 1);
-        let b2 = src.row(j + 2);
-        let b3 = src.row(j + 3);
-        let (mut s0, mut s1, mut s2, mut s3) = (0.0_f64, 0.0, 0.0, 0.0);
-        for (k, &x) in ri.iter().enumerate() {
-            s0 += x * b0[k];
-            s1 += x * b1[k];
-            s2 += x * b2[k];
-            s3 += x * b3[k];
-        }
-        seg.push(s0);
-        seg.push(s1);
-        seg.push(s2);
-        seg.push(s3);
-        j += NR;
-    }
-    while j < m {
-        let bj = src.row(j);
+    // leading ragged rows up to the strip boundary: canonical scalar dots
+    let head_end = (i.div_ceil(nr) * nr).min(m);
+    for j in i..head_end {
+        let rj = src.row(j);
         let mut s = 0.0_f64;
-        for (x, y) in ri.iter().zip(bj) {
+        for (x, y) in ri.iter().zip(rj) {
             s += x * y;
         }
         seg.push(s);
-        j += 1;
+    }
+    // aligned strips (the last one zero-padded past m)
+    let mut j = head_end;
+    while j < m {
+        let s = j / nr;
+        let lanes = (m - j).min(nr);
+        let strip = &packed.data[s * packed.cols * nr..
+                                 (s + 1) * packed.cols * nr];
+        let mut acc = [0.0_f64; MAX_NR];
+        simd::tile1(packed.be, ri, strip, &mut acc[..nr]);
+        seg.extend_from_slice(&acc[..lanes]);
+        j += lanes;
     }
     seg
+}
+
+/// Single-call convenience for [`gram_row_segment_packed`] (packs the
+/// source itself — fine for one row, quadratic if called for every row;
+/// the Gram entry points in [`super`] pack once instead).
+#[cfg(test)]
+pub(crate) fn gram_row_segment(src: &Mat, i: usize) -> Vec<f64> {
+    gram_row_segment_packed(src, &pack_rows(src), i)
 }
 
 #[cfg(test)]
@@ -221,20 +259,41 @@ mod tests {
         out
     }
 
+    fn shapes() -> Vec<(usize, usize, usize)> {
+        // shapes straddling every block boundary: MR (4), the widest
+        // lane tile (8), NC (64), KC (256), plus degenerate edges
+        vec![(1usize, 1usize, 1usize), (1, 9, 1), (3, 4, 5), (4, 4, 4),
+             (5, 5, 5), (7, 8, 9), (8, 300, 8), (7, 257, 9), (12, 64, 65),
+             (4, 256, 4), (13, 255, 66), (9, 10, 8), (11, 6, 17),
+             (65, 17, 63)]
+    }
+
+    /// Backend-forcing tests serialize on this lock so a concurrent
+    /// sweep can't flip the process-global override mid-shape (results
+    /// would still be bit-identical, but per-backend *coverage* would
+    /// silently degrade).
+    fn sweep_lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     #[test]
-    fn blocked_kernel_bit_identical_to_naive() {
-        // shapes straddling every block boundary: MR/NR (4), NC (64),
-        // KC (256), plus degenerate edges
-        for &(m, k, n) in &[(1usize, 1usize, 1usize), (1, 9, 1), (3, 4, 5),
-                            (4, 4, 4), (5, 5, 5), (8, 300, 8), (7, 257, 9),
-                            (12, 64, 65), (4, 256, 4), (13, 255, 66),
-                            (65, 17, 63)] {
-            let a = Mat::random_normal(&mut Rng::new(m as u64 * 101 + k as u64), m, k);
-            let bt = Mat::random_normal(&mut Rng::new(n as u64 * 77 + k as u64), n, k);
-            let mut out = vec![0.0_f64; m * n];
-            matmul_nt_block(&a, &bt, 0, m, &mut out);
-            assert_eq!(out, naive_nt(&a, &bt).data, "{m}x{k}·{n}ᵀ");
+    fn blocked_kernel_bit_identical_to_naive_for_every_backend() {
+        let _guard = sweep_lock();
+        for be in simd::available_backends() {
+            simd::set_backend(Some(be)).unwrap();
+            for (m, k, n) in shapes() {
+                let a = Mat::random_normal(
+                    &mut Rng::new(m as u64 * 101 + k as u64), m, k);
+                let bt = Mat::random_normal(
+                    &mut Rng::new(n as u64 * 77 + k as u64), n, k);
+                let mut out = vec![0.0_f64; m * n];
+                matmul_nt_block(&a, &pack_rows(&bt), 0, m, &mut out);
+                assert_eq!(out, naive_nt(&a, &bt).data,
+                           "{m}x{k}·{n}ᵀ on {}", be.name());
+            }
         }
+        simd::set_backend(None).unwrap();
     }
 
     #[test]
@@ -243,34 +302,54 @@ mod tests {
         let (m, k, n) = (23, 31, 19);
         let a = Mat::random_normal(&mut Rng::new(1), m, k);
         let bt = Mat::random_normal(&mut Rng::new(2), n, k);
+        let packed = pack_rows(&bt);
         let mut full = vec![0.0_f64; m * n];
-        matmul_nt_block(&a, &bt, 0, m, &mut full);
+        matmul_nt_block(&a, &packed, 0, m, &mut full);
         for split in [1usize, 4, 7, 16, 22] {
             let mut top = vec![0.0_f64; split * n];
             let mut bot = vec![0.0_f64; (m - split) * n];
-            matmul_nt_block(&a, &bt, 0, split, &mut top);
-            matmul_nt_block(&a, &bt, split, m, &mut bot);
+            matmul_nt_block(&a, &packed, 0, split, &mut top);
+            matmul_nt_block(&a, &packed, split, m, &mut bot);
             top.extend_from_slice(&bot);
             assert_eq!(top, full, "split {split}");
         }
     }
 
     #[test]
-    fn gram_segments_match_naive() {
-        for &(m, k) in &[(1usize, 1usize), (5, 3), (9, 300), (12, 7)] {
-            let src = Mat::random_normal(&mut Rng::new(m as u64 * 7 + k as u64), m, k);
-            for i in 0..m {
-                let seg = gram_row_segment(&src, i);
-                assert_eq!(seg.len(), m - i);
-                for (off, &v) in seg.iter().enumerate() {
-                    let j = i + off;
-                    let mut s = 0.0_f64;
-                    for kk in 0..k {
-                        s += src[(i, kk)] * src[(j, kk)];
+    fn gram_segments_match_naive_for_every_backend() {
+        let _guard = sweep_lock();
+        for be in simd::available_backends() {
+            simd::set_backend(Some(be)).unwrap();
+            for &(m, k) in &[(1usize, 1usize), (5, 3), (8, 8), (9, 300),
+                             (12, 7), (17, 33)] {
+                let src = Mat::random_normal(
+                    &mut Rng::new(m as u64 * 7 + k as u64), m, k);
+                let packed = pack_rows(&src);
+                for i in 0..m {
+                    let seg = gram_row_segment_packed(&src, &packed, i);
+                    assert_eq!(seg.len(), m - i);
+                    for (off, &v) in seg.iter().enumerate() {
+                        let j = i + off;
+                        let mut s = 0.0_f64;
+                        for kk in 0..k {
+                            s += src[(i, kk)] * src[(j, kk)];
+                        }
+                        assert_eq!(v, s, "({i},{j}) of {m}x{k} on {}",
+                                   be.name());
                     }
-                    assert_eq!(v, s, "({i},{j}) of {m}x{k}");
                 }
             }
+        }
+        simd::set_backend(None).unwrap();
+    }
+
+    #[test]
+    fn single_call_segment_matches_packed() {
+        let src = Mat::random_normal(&mut Rng::new(42), 11, 9);
+        let packed = pack_rows(&src);
+        for i in 0..src.rows {
+            assert_eq!(gram_row_segment(&src, i),
+                       gram_row_segment_packed(&src, &packed, i));
         }
     }
 }

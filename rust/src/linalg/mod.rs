@@ -15,11 +15,19 @@
 //! work crosses [`PAR_MIN_WORK`] (suppressed automatically inside pool
 //! jobs, so the per-layer fan-out never oversubscribes).  The explicit
 //! `par_*` variants take a caller-supplied [`crate::par::Pool`].
+//!
+//! Inside the register tile the kernels dispatch to the [`simd`]
+//! backends (SSE2/AVX2 on x86_64, NEON on aarch64, scalar fallback):
+//! lanes run *across output elements* with separate mul-then-add, so the
+//! per-element program — and therefore every bit — is unchanged on every
+//! backend (`LRC_SIMD` / `--simd` select one explicitly; see the `simd`
+//! module docs).
 
 mod chol;
 mod eigh;
 mod hadamard;
 pub mod kernels;
+pub mod simd;
 
 pub use chol::{cholesky, solve_lower, solve_upper, chol_solve_mat, chol_inverse};
 pub use eigh::{eigh, eigh_jacobi, eigh_jacobi_par, top_k_eigvecs};
@@ -130,7 +138,8 @@ impl Mat {
             || crate::par::in_pool()
         {
             let mut out = Mat::zeros(m, n);
-            kernels::matmul_nt_block(self, bt, 0, m, &mut out.data);
+            let packed = kernels::pack_rows(bt);
+            kernels::matmul_nt_block(self, &packed, 0, m, &mut out.data);
             return out;
         }
         self.par_matmul_nt(bt, crate::par::global())
@@ -152,10 +161,17 @@ impl Mat {
         let (m, n) = (self.rows, bt.rows);
         let mut out = Mat::zeros(m, n);
         let work = m * n * self.cols;
-        if pool.threads() == 1 || n == 0 || m <= Self::PAR_ROW_CHUNK
+        if n == 0 {
+            return out;
+        }
+        // pack Bᵀ into SIMD lane strips ONCE; every row chunk (and the
+        // serial path) reads the same pack — the packing cost is one
+        // transpose-sized pass per product, not per chunk
+        let packed = kernels::pack_rows(bt);
+        if pool.threads() == 1 || m <= Self::PAR_ROW_CHUNK
             || work < PAR_MIN_WORK
         {
-            kernels::matmul_nt_block(self, bt, 0, m, &mut out.data);
+            kernels::matmul_nt_block(self, &packed, 0, m, &mut out.data);
             return out;
         }
         let chunk = Self::PAR_ROW_CHUNK;
@@ -164,7 +180,7 @@ impl Mat {
         pool.for_each(slices, |(ci, slice)| {
             let r0 = ci * chunk;
             let r1 = (r0 + chunk).min(m);
-            kernels::matmul_nt_block(self, bt, r0, r1, slice);
+            kernels::matmul_nt_block(self, &packed, r0, r1, slice);
         });
         out
     }
@@ -297,16 +313,20 @@ fn gram_upper_auto(src: &Mat) -> Mat {
 
 /// Shared body of the four gram entry points: upper-triangle row segments
 /// (each on the canonical scalar program of
-/// [`kernels::gram_row_segment`]), computed serially or on the pool,
-/// then assembled + mirrored in fixed row order.
+/// [`kernels::gram_row_segment_packed`]), computed serially or on the
+/// pool, then assembled + mirrored in fixed row order.  The source rows
+/// are packed into SIMD lane strips once, amortized over every segment.
 fn gram_upper(src: &Mat, pool: &crate::par::Pool) -> Mat {
     let m = src.rows;
     let work = m * m * src.cols / 2;
+    let packed = kernels::pack_rows(src);
     let rows: Vec<Vec<f64>> =
         if pool.threads() == 1 || m <= 1 || work < PAR_MIN_WORK {
-            (0..m).map(|i| kernels::gram_row_segment(src, i)).collect()
+            (0..m)
+                .map(|i| kernels::gram_row_segment_packed(src, &packed, i))
+                .collect()
         } else {
-            pool.map(m, |i| kernels::gram_row_segment(src, i))
+            pool.map(m, |i| kernels::gram_row_segment_packed(src, &packed, i))
         };
     let mut out = Mat::zeros(m, m);
     for (i, seg) in rows.iter().enumerate() {

@@ -1,0 +1,555 @@
+//! Zero-dependency SIMD backends for the GEMM / Gram micro-kernels,
+//! under the **bit-identity contract** of [`super::kernels`].
+//!
+//! # Why vectorizing here is safe at all
+//!
+//! The canonical-scalar-program contract says every output element is one
+//! accumulator advanced in strictly ascending `k` by `c += a·b` — an IEEE
+//! mul followed by an IEEE add.  Vectorization that reassociates *within*
+//! an element (horizontal sums, k-striped partial accumulators, FMA)
+//! would break it.  Vectorization **across output elements** does not:
+//! each SIMD lane carries exactly one element's accumulator, and packed
+//! `mul` then packed `add` perform the same two correctly-rounded IEEE
+//! operations per lane that the scalar program performs.  So the backends
+//! below vectorize across the NR output columns (the `j` lanes of the
+//! register tile), broadcast `a[i,k]`, and keep mul and add **separate**
+//! — no FMA on any path, because a fused multiply-add rounds once instead
+//! of twice and would change the bits.  Serial, blocked, parallel and
+//! every SIMD backend therefore agree with the naive triple loop `==` on
+//! f64 (`tests/kernel_oracle.rs` enforces this per backend).
+//!
+//! # Backends and dispatch
+//!
+//! * `scalar` — portable fallback, the reference program itself.
+//! * `sse2`   — x86_64 baseline (always present), 2 f64 lanes, 4×4 tile.
+//! * `avx2`   — runtime-detected via `is_x86_feature_detected!`, 4 f64
+//!              lanes, widened 4×8 tile (two ymm vectors per output row).
+//! * `neon`   — aarch64 baseline (always present), 2 f64 lanes, 4×4 tile.
+//!
+//! The active backend resolves once per kernel call, in priority order:
+//!   1. a [`set_backend`] override (the CLI's `--simd` flag; tests and
+//!      benches flip it to sweep backends in-process),
+//!   2. the `LRC_SIMD` environment variable (`auto|scalar|sse2|avx2|neon`,
+//!      parsed once; unavailable/unparsable values warn and fall back to
+//!      auto — the CI matrix runs the tier-1 suite under `scalar` and
+//!      `auto`),
+//!   3. [`detect`]: the widest backend the host supports.
+//!
+//! Because every backend produces identical bits, flipping the backend
+//! between (or even during) operations can never change a result — which
+//! is what makes the process-global override safe for concurrent tests.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Widest register-tile width any backend uses (AVX2's 4×8 tile); sizes
+/// stack accumulator buffers in [`super::kernels`].
+pub const MAX_NR: usize = 8;
+
+/// A vector instruction set the micro-kernels can dispatch to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Portable scalar reference program.
+    Scalar,
+    /// x86_64 baseline: 2×f64 `xmm` lanes.
+    Sse2,
+    /// x86_64 AVX2: 4×f64 `ymm` lanes, widened 4×8 tile.
+    Avx2,
+    /// aarch64 baseline: 2×f64 NEON lanes.
+    Neon,
+}
+
+impl Backend {
+    /// Every backend, widest last (detection order).
+    pub const ALL: [Backend; 4] =
+        [Backend::Scalar, Backend::Sse2, Backend::Avx2, Backend::Neon];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Sse2 => "sse2",
+            Backend::Avx2 => "avx2",
+            Backend::Neon => "neon",
+        }
+    }
+
+    /// Register-tile width NR: output columns advanced per tile.  AVX2
+    /// widens to 8 (two ymm accumulators per row) because the extra four
+    /// lanes are free once the `a[i,k]` broadcast is paid for; everything
+    /// else keeps the scalar tile's 4.
+    pub fn nr(self) -> usize {
+        match self {
+            Backend::Avx2 => 8,
+            _ => 4,
+        }
+    }
+
+    /// Parse a `--simd` / `LRC_SIMD` value.  `Ok(None)` means `auto`.
+    pub fn parse(s: &str) -> Result<Option<Backend>, String> {
+        match s {
+            "auto" => Ok(None),
+            "scalar" => Ok(Some(Backend::Scalar)),
+            "sse2" => Ok(Some(Backend::Sse2)),
+            "avx2" => Ok(Some(Backend::Avx2)),
+            "neon" => Ok(Some(Backend::Neon)),
+            other => Err(format!(
+                "unknown SIMD backend {other:?} (auto|scalar|sse2|avx2|neon)")),
+        }
+    }
+
+    /// Whether this backend can run on the current host.
+    pub fn available(self) -> bool {
+        match self {
+            Backend::Scalar => true,
+            Backend::Sse2 => cfg!(target_arch = "x86_64"),
+            Backend::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    std::arch::is_x86_feature_detected!("avx2")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            Backend::Neon => cfg!(target_arch = "aarch64"),
+        }
+    }
+}
+
+/// Every backend the current host can run (always contains `Scalar`) —
+/// the sweep axis of the kernel oracle and the SIMD benches.
+pub fn available_backends() -> Vec<Backend> {
+    Backend::ALL.iter().copied().filter(|b| b.available()).collect()
+}
+
+/// The widest backend the host supports.
+pub fn detect() -> Backend {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if Backend::Avx2.available() {
+            Backend::Avx2
+        } else {
+            Backend::Sse2
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        Backend::Neon
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        Backend::Scalar
+    }
+}
+
+/// Process-wide override installed by `--simd` (0 = unset, else
+/// `1 + index into Backend::ALL`).
+static BACKEND_OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+/// `LRC_SIMD`, parsed once (`None` = unset, `auto`, or rejected).
+static ENV_BACKEND: OnceLock<Option<Backend>> = OnceLock::new();
+
+fn encode(b: Backend) -> u8 {
+    1 + Backend::ALL.iter().position(|&x| x == b).unwrap() as u8
+}
+
+fn decode(code: u8) -> Option<Backend> {
+    match code {
+        0 => None,
+        n => Some(Backend::ALL[(n - 1) as usize]),
+    }
+}
+
+/// Install a process-wide backend override (the CLI's `--simd` flag, and
+/// the sweep knob of the oracle/bench harnesses).  `None` restores auto
+/// resolution (env, then detection).  Fails when the requested backend
+/// cannot run on this host — the unsafe dispatch below relies on only
+/// available backends ever being selected.
+pub fn set_backend(b: Option<Backend>) -> Result<(), String> {
+    if let Some(b) = b {
+        if !b.available() {
+            return Err(format!(
+                "SIMD backend '{}' is not available on this host \
+                 (available: {})",
+                b.name(),
+                available_backends()
+                    .iter()
+                    .map(|b| b.name())
+                    .collect::<Vec<_>>()
+                    .join(", ")));
+        }
+    }
+    BACKEND_OVERRIDE.store(b.map(encode).unwrap_or(0), Ordering::SeqCst);
+    Ok(())
+}
+
+/// Resolve the active backend: override > `LRC_SIMD` env > [`detect`].
+/// The env var is read exactly once per process; the [`set_backend`]
+/// override stays live throughout (mirrors `par::threads`).
+pub fn active() -> Backend {
+    if let Some(b) = decode(BACKEND_OVERRIDE.load(Ordering::SeqCst)) {
+        return b;
+    }
+    let env = ENV_BACKEND.get_or_init(|| {
+        let raw = std::env::var("LRC_SIMD").ok()?;
+        match Backend::parse(&raw) {
+            Ok(Some(b)) if b.available() => Some(b),
+            Ok(Some(b)) => {
+                eprintln!("warning: LRC_SIMD={} is not available on this \
+                           host — falling back to auto ({})",
+                          b.name(), detect().name());
+                None
+            }
+            Ok(None) => None,
+            Err(e) => {
+                eprintln!("warning: LRC_SIMD: {e} — falling back to auto");
+                None
+            }
+        }
+    });
+    env.unwrap_or_else(detect)
+}
+
+// ---------------------------------------------------------------------------
+// Micro-kernel dispatch.
+//
+// Both entry points operate on one packed B strip: `bp[kk*nr + l]` holds
+// `B[j0+l, k0+kk]` (zero for padded lanes past the matrix edge), so the
+// inner loop's B access is a single contiguous vector load per k step.
+// `acc[r*nr + l]` is the accumulator of output element (row r, lane l);
+// callers preload it from C and store the valid lanes back, which keeps
+// every element on one k-panel-spanning ascending-k chain.
+// ---------------------------------------------------------------------------
+
+/// Four-row register tile: for each row `r` and lane `l`,
+/// `acc[r*nr + l] += a[r][kk] · bp[kk*nr + l]` for `kk` ascending —
+/// separate mul then add per lane, never fused.
+pub(crate) fn tile4(be: Backend, a: [&[f64]; 4], bp: &[f64],
+                    acc: &mut [f64]) {
+    debug_assert_eq!(bp.len(), a[0].len() * be.nr());
+    debug_assert_eq!(acc.len(), 4 * be.nr());
+    match be {
+        Backend::Scalar => tile4_scalar(a, bp, acc, 4),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Sse2/Avx2 are only ever selected when `available()`
+        // held (set_backend validates; detect/env only yield available
+        // backends), so the required target features are present.
+        Backend::Sse2 => unsafe { tile4_sse2(a, bp, acc) },
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { tile4_avx2(a, bp, acc) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        Backend::Neon => unsafe { tile4_neon(a, bp, acc) },
+        // A backend the current arch doesn't implement (defensive; the
+        // selectors never produce one): run the scalar program at the
+        // same nr — identical bits by contract.
+        other => tile4_scalar(a, bp, acc, other.nr()),
+    }
+}
+
+/// Single-row tile (ragged row edges, and the Gram row-segment kernel):
+/// `acc[l] += a[kk] · bp[kk*nr + l]` for `kk` ascending.
+pub(crate) fn tile1(be: Backend, a: &[f64], bp: &[f64], acc: &mut [f64]) {
+    debug_assert_eq!(bp.len(), a.len() * be.nr());
+    debug_assert_eq!(acc.len(), be.nr());
+    match be {
+        Backend::Scalar => tile1_scalar(a, bp, acc, 4),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: see tile4 — only available backends are selectable.
+        Backend::Sse2 => unsafe { tile1_sse2(a, bp, acc) },
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { tile1_avx2(a, bp, acc) },
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => unsafe { tile1_neon(a, bp, acc) },
+        other => tile1_scalar(a, bp, acc, other.nr()),
+    }
+}
+
+// --- scalar reference ------------------------------------------------------
+
+fn tile4_scalar(a: [&[f64]; 4], bp: &[f64], acc: &mut [f64], nr: usize) {
+    let kw = a[0].len();
+    for kk in 0..kw {
+        let y = &bp[kk * nr..(kk + 1) * nr];
+        for r in 0..4 {
+            let x = a[r][kk];
+            let row = &mut acc[r * nr..(r + 1) * nr];
+            for l in 0..nr {
+                row[l] += x * y[l];
+            }
+        }
+    }
+}
+
+fn tile1_scalar(a: &[f64], bp: &[f64], acc: &mut [f64], nr: usize) {
+    for (kk, &x) in a.iter().enumerate() {
+        let y = &bp[kk * nr..(kk + 1) * nr];
+        for l in 0..nr {
+            acc[l] += x * y[l];
+        }
+    }
+}
+
+// --- x86_64: SSE2 (baseline) and AVX2 (runtime-detected) -------------------
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn tile4_sse2(a: [&[f64]; 4], bp: &[f64], acc: &mut [f64]) {
+    use core::arch::x86_64::*;
+    const NR: usize = 4;
+    let kw = a[0].len();
+    let (a0, a1, a2, a3) = (a[0], a[1], a[2], a[3]);
+    let p = acc.as_mut_ptr();
+    let mut c00 = _mm_loadu_pd(p);
+    let mut c01 = _mm_loadu_pd(p.add(2));
+    let mut c10 = _mm_loadu_pd(p.add(4));
+    let mut c11 = _mm_loadu_pd(p.add(6));
+    let mut c20 = _mm_loadu_pd(p.add(8));
+    let mut c21 = _mm_loadu_pd(p.add(10));
+    let mut c30 = _mm_loadu_pd(p.add(12));
+    let mut c31 = _mm_loadu_pd(p.add(14));
+    let bpp = bp.as_ptr();
+    for kk in 0..kw {
+        let y0 = _mm_loadu_pd(bpp.add(kk * NR));
+        let y1 = _mm_loadu_pd(bpp.add(kk * NR + 2));
+        let x0 = _mm_set1_pd(a0[kk]);
+        c00 = _mm_add_pd(c00, _mm_mul_pd(x0, y0));
+        c01 = _mm_add_pd(c01, _mm_mul_pd(x0, y1));
+        let x1 = _mm_set1_pd(a1[kk]);
+        c10 = _mm_add_pd(c10, _mm_mul_pd(x1, y0));
+        c11 = _mm_add_pd(c11, _mm_mul_pd(x1, y1));
+        let x2 = _mm_set1_pd(a2[kk]);
+        c20 = _mm_add_pd(c20, _mm_mul_pd(x2, y0));
+        c21 = _mm_add_pd(c21, _mm_mul_pd(x2, y1));
+        let x3 = _mm_set1_pd(a3[kk]);
+        c30 = _mm_add_pd(c30, _mm_mul_pd(x3, y0));
+        c31 = _mm_add_pd(c31, _mm_mul_pd(x3, y1));
+    }
+    _mm_storeu_pd(p, c00);
+    _mm_storeu_pd(p.add(2), c01);
+    _mm_storeu_pd(p.add(4), c10);
+    _mm_storeu_pd(p.add(6), c11);
+    _mm_storeu_pd(p.add(8), c20);
+    _mm_storeu_pd(p.add(10), c21);
+    _mm_storeu_pd(p.add(12), c30);
+    _mm_storeu_pd(p.add(14), c31);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn tile1_sse2(a: &[f64], bp: &[f64], acc: &mut [f64]) {
+    use core::arch::x86_64::*;
+    const NR: usize = 4;
+    let p = acc.as_mut_ptr();
+    let mut c0 = _mm_loadu_pd(p);
+    let mut c1 = _mm_loadu_pd(p.add(2));
+    let bpp = bp.as_ptr();
+    for (kk, &xv) in a.iter().enumerate() {
+        let x = _mm_set1_pd(xv);
+        let y0 = _mm_loadu_pd(bpp.add(kk * NR));
+        let y1 = _mm_loadu_pd(bpp.add(kk * NR + 2));
+        c0 = _mm_add_pd(c0, _mm_mul_pd(x, y0));
+        c1 = _mm_add_pd(c1, _mm_mul_pd(x, y1));
+    }
+    _mm_storeu_pd(p, c0);
+    _mm_storeu_pd(p.add(2), c1);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn tile4_avx2(a: [&[f64]; 4], bp: &[f64], acc: &mut [f64]) {
+    use core::arch::x86_64::*;
+    const NR: usize = 8;
+    let kw = a[0].len();
+    let (a0, a1, a2, a3) = (a[0], a[1], a[2], a[3]);
+    let p = acc.as_mut_ptr();
+    let mut c00 = _mm256_loadu_pd(p);
+    let mut c01 = _mm256_loadu_pd(p.add(4));
+    let mut c10 = _mm256_loadu_pd(p.add(8));
+    let mut c11 = _mm256_loadu_pd(p.add(12));
+    let mut c20 = _mm256_loadu_pd(p.add(16));
+    let mut c21 = _mm256_loadu_pd(p.add(20));
+    let mut c30 = _mm256_loadu_pd(p.add(24));
+    let mut c31 = _mm256_loadu_pd(p.add(28));
+    let bpp = bp.as_ptr();
+    for kk in 0..kw {
+        let y0 = _mm256_loadu_pd(bpp.add(kk * NR));
+        let y1 = _mm256_loadu_pd(bpp.add(kk * NR + 4));
+        // mul then add, never _mm256_fmadd_pd: FMA's single rounding
+        // would diverge from the canonical scalar program.
+        let x0 = _mm256_set1_pd(a0[kk]);
+        c00 = _mm256_add_pd(c00, _mm256_mul_pd(x0, y0));
+        c01 = _mm256_add_pd(c01, _mm256_mul_pd(x0, y1));
+        let x1 = _mm256_set1_pd(a1[kk]);
+        c10 = _mm256_add_pd(c10, _mm256_mul_pd(x1, y0));
+        c11 = _mm256_add_pd(c11, _mm256_mul_pd(x1, y1));
+        let x2 = _mm256_set1_pd(a2[kk]);
+        c20 = _mm256_add_pd(c20, _mm256_mul_pd(x2, y0));
+        c21 = _mm256_add_pd(c21, _mm256_mul_pd(x2, y1));
+        let x3 = _mm256_set1_pd(a3[kk]);
+        c30 = _mm256_add_pd(c30, _mm256_mul_pd(x3, y0));
+        c31 = _mm256_add_pd(c31, _mm256_mul_pd(x3, y1));
+    }
+    _mm256_storeu_pd(p, c00);
+    _mm256_storeu_pd(p.add(4), c01);
+    _mm256_storeu_pd(p.add(8), c10);
+    _mm256_storeu_pd(p.add(12), c11);
+    _mm256_storeu_pd(p.add(16), c20);
+    _mm256_storeu_pd(p.add(20), c21);
+    _mm256_storeu_pd(p.add(24), c30);
+    _mm256_storeu_pd(p.add(28), c31);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn tile1_avx2(a: &[f64], bp: &[f64], acc: &mut [f64]) {
+    use core::arch::x86_64::*;
+    const NR: usize = 8;
+    let p = acc.as_mut_ptr();
+    let mut c0 = _mm256_loadu_pd(p);
+    let mut c1 = _mm256_loadu_pd(p.add(4));
+    let bpp = bp.as_ptr();
+    for (kk, &xv) in a.iter().enumerate() {
+        let x = _mm256_set1_pd(xv);
+        let y0 = _mm256_loadu_pd(bpp.add(kk * NR));
+        let y1 = _mm256_loadu_pd(bpp.add(kk * NR + 4));
+        c0 = _mm256_add_pd(c0, _mm256_mul_pd(x, y0));
+        c1 = _mm256_add_pd(c1, _mm256_mul_pd(x, y1));
+    }
+    _mm256_storeu_pd(p, c0);
+    _mm256_storeu_pd(p.add(4), c1);
+}
+
+// --- aarch64: NEON (baseline) ----------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn tile4_neon(a: [&[f64]; 4], bp: &[f64], acc: &mut [f64]) {
+    use core::arch::aarch64::*;
+    const NR: usize = 4;
+    let kw = a[0].len();
+    let (a0, a1, a2, a3) = (a[0], a[1], a[2], a[3]);
+    let p = acc.as_mut_ptr();
+    let mut c00 = vld1q_f64(p);
+    let mut c01 = vld1q_f64(p.add(2));
+    let mut c10 = vld1q_f64(p.add(4));
+    let mut c11 = vld1q_f64(p.add(6));
+    let mut c20 = vld1q_f64(p.add(8));
+    let mut c21 = vld1q_f64(p.add(10));
+    let mut c30 = vld1q_f64(p.add(12));
+    let mut c31 = vld1q_f64(p.add(14));
+    let bpp = bp.as_ptr();
+    for kk in 0..kw {
+        let y0 = vld1q_f64(bpp.add(kk * NR));
+        let y1 = vld1q_f64(bpp.add(kk * NR + 2));
+        // vmulq + vaddq, never vfmaq: keep the two-rounding scalar program
+        let x0 = vdupq_n_f64(a0[kk]);
+        c00 = vaddq_f64(c00, vmulq_f64(x0, y0));
+        c01 = vaddq_f64(c01, vmulq_f64(x0, y1));
+        let x1 = vdupq_n_f64(a1[kk]);
+        c10 = vaddq_f64(c10, vmulq_f64(x1, y0));
+        c11 = vaddq_f64(c11, vmulq_f64(x1, y1));
+        let x2 = vdupq_n_f64(a2[kk]);
+        c20 = vaddq_f64(c20, vmulq_f64(x2, y0));
+        c21 = vaddq_f64(c21, vmulq_f64(x2, y1));
+        let x3 = vdupq_n_f64(a3[kk]);
+        c30 = vaddq_f64(c30, vmulq_f64(x3, y0));
+        c31 = vaddq_f64(c31, vmulq_f64(x3, y1));
+    }
+    vst1q_f64(p, c00);
+    vst1q_f64(p.add(2), c01);
+    vst1q_f64(p.add(4), c10);
+    vst1q_f64(p.add(6), c11);
+    vst1q_f64(p.add(8), c20);
+    vst1q_f64(p.add(10), c21);
+    vst1q_f64(p.add(12), c30);
+    vst1q_f64(p.add(14), c31);
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn tile1_neon(a: &[f64], bp: &[f64], acc: &mut [f64]) {
+    use core::arch::aarch64::*;
+    const NR: usize = 4;
+    let p = acc.as_mut_ptr();
+    let mut c0 = vld1q_f64(p);
+    let mut c1 = vld1q_f64(p.add(2));
+    let bpp = bp.as_ptr();
+    for (kk, &xv) in a.iter().enumerate() {
+        let x = vdupq_n_f64(xv);
+        let y0 = vld1q_f64(bpp.add(kk * NR));
+        let y1 = vld1q_f64(bpp.add(kk * NR + 2));
+        c0 = vaddq_f64(c0, vmulq_f64(x, y0));
+        c1 = vaddq_f64(c1, vmulq_f64(x, y1));
+    }
+    vst1q_f64(p, c0);
+    vst1q_f64(p.add(2), c1);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_and_rejects() {
+        assert_eq!(Backend::parse("auto").unwrap(), None);
+        for be in Backend::ALL {
+            assert_eq!(Backend::parse(be.name()).unwrap(), Some(be));
+        }
+        assert!(Backend::parse("avx512").is_err());
+    }
+
+    #[test]
+    fn scalar_always_available_and_detect_is_available() {
+        assert!(Backend::Scalar.available());
+        assert!(detect().available());
+        assert!(available_backends().contains(&Backend::Scalar));
+        assert!(available_backends().contains(&detect()));
+    }
+
+    #[test]
+    fn set_backend_rejects_unavailable() {
+        let unavailable: Vec<Backend> = Backend::ALL
+            .iter()
+            .copied()
+            .filter(|b| !b.available())
+            .collect();
+        for be in unavailable {
+            assert!(set_backend(Some(be)).is_err(), "{}", be.name());
+        }
+        // the active backend is never left in an unavailable state
+        assert!(active().available());
+    }
+
+    #[test]
+    fn every_available_backend_matches_scalar_bits() {
+        // the contract at the microkernel level: same bits as the scalar
+        // program for ragged k widths, at this backend's own nr
+        let mut rng = crate::rng::Rng::new(99);
+        for be in available_backends() {
+            let nr = be.nr();
+            for kw in [0usize, 1, 2, 3, 7, 64, 129] {
+                let rows: Vec<Vec<f64>> =
+                    (0..4).map(|_| rng.normal_vec(kw)).collect();
+                let bp = rng.normal_vec(kw * nr);
+                let init = rng.normal_vec(4 * nr);
+
+                let mut want = init.clone();
+                tile4_scalar(
+                    [&rows[0], &rows[1], &rows[2], &rows[3]], &bp, &mut want,
+                    nr);
+                let mut got = init.clone();
+                tile4(be, [&rows[0], &rows[1], &rows[2], &rows[3]], &bp,
+                      &mut got);
+                assert_eq!(want, got, "tile4 {} kw={kw}", be.name());
+
+                let mut want1 = init[..nr].to_vec();
+                tile1_scalar(&rows[0], &bp, &mut want1, nr);
+                let mut got1 = init[..nr].to_vec();
+                tile1(be, &rows[0], &bp, &mut got1);
+                assert_eq!(want1, got1, "tile1 {} kw={kw}", be.name());
+            }
+        }
+    }
+}

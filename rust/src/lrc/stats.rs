@@ -13,10 +13,12 @@ use crate::quant::act_quantize;
 /// are a property of the *math*, not of the pool: partial Grams are
 /// computed per chunk (concurrently) and merged in chunk order, so the
 /// accumulated Σ are bit-identical at every thread count.  The per-chunk
-/// Grams run on the blocked kernels of [`crate::linalg::kernels`], whose
-/// own nested parallelism suppresses itself inside pool jobs — on a
-/// persistent pool these fine-grained chunk updates are cheap enough to
-/// dispatch even for small batches.
+/// Grams run on the blocked kernels of [`crate::linalg::kernels`] — and
+/// therefore on whatever [`crate::linalg::simd`] backend is active, which
+/// by the lane-wise mul-then-add contract cannot change a single bit of
+/// Σx/Σy/Σxy — whose own nested parallelism suppresses itself inside pool
+/// jobs; on a persistent pool these fine-grained chunk updates are cheap
+/// enough to dispatch even for small batches.
 pub const STATS_TOKEN_CHUNK: usize = 256;
 
 /// Accumulates Σx = XXᵀ, Σy = YYᵀ, Σxy = XYᵀ over calibration batches,

@@ -7,8 +7,10 @@
 //!   serve --model M               serving demo with the dynamic batcher
 //!
 //! Global flags: `--threads N` sizes the compute pool (else the
-//! `LRC_THREADS` env var, else every core); `serve --workers N` runs N
-//! PJRT engine workers against the shared batch queue.
+//! `LRC_THREADS` env var, else every core); `--simd B` pins the GEMM
+//! micro-kernel backend (else `LRC_SIMD`, else auto-detection — results
+//! are bit-identical on every backend); `serve --workers N` runs N PJRT
+//! engine workers against the shared batch queue.
 //!
 //! Run `lrc <cmd> --help` equivalent: every flag has a default, see below.
 
@@ -35,6 +37,20 @@ fn main() {
                            got {s:?}");
                 std::process::exit(2);
             }
+        }
+    }
+    // SIMD backend: --simd B > LRC_SIMD env > runtime detection
+    if let Some(s) = args.get("simd") {
+        let sel = match lrc::linalg::simd::Backend::parse(s) {
+            Ok(sel) => sel,
+            Err(e) => {
+                eprintln!("error: --simd: {e}");
+                std::process::exit(2);
+            }
+        };
+        if let Err(e) = lrc::linalg::simd::set_backend(sel) {
+            eprintln!("error: --simd: {e}");
+            std::process::exit(2);
         }
     }
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
@@ -76,6 +92,11 @@ fn print_help() {
          \x20               LRC_THREADS env — read once at startup —\n\
          \x20               else all cores; results are bit-identical\n\
          \x20               at any setting)\n\
+         \x20 --simd B      GEMM micro-kernel backend: auto|scalar|sse2|\n\
+         \x20               avx2|neon (default: LRC_SIMD env, else the\n\
+         \x20               widest the host supports; every backend is\n\
+         \x20               bit-identical — this knob is for benches and\n\
+         \x20               debugging, errors if B can't run here)\n\
          \x20 --workers N   serve-only: engine workers sharing the batch\n\
          \x20               queue, one PJRT engine + session set each;\n\
          \x20               the thread budget is split across workers\n\

@@ -104,6 +104,8 @@ pub fn activation_source(layer: &str) -> String {
 #[derive(Clone, Debug)]
 pub struct LayerReport {
     pub layer: String,
+    /// Correction rank the solve actually used (0 for QuaRot and any
+    /// other factor-free solve), not the graph's rank layout.
     pub rank: usize,
     pub objective: f64,
     pub rel_error: f64,
@@ -152,6 +154,24 @@ fn largest_acts_graph(arts: &ModelArtifacts) -> Result<String> {
         })
 }
 
+/// Build the calibration batch list for `collect_stats`, validating the
+/// inputs where the problem actually is: zero requested sequences or a
+/// corpus too short to cut even one window both used to slip through as
+/// an empty batch list, silently producing empty stats that only failed
+/// much later as "no stats for activation".  Engine-free, so the edge
+/// cases are unit-testable without PJRT.
+pub fn calib_batches(corpus: &Corpus, n_seqs: usize, seq_len: usize,
+                     seed: u64, batch: usize)
+                     -> Result<Vec<(Vec<i32>, usize)>> {
+    if n_seqs == 0 {
+        return Err(anyhow!(
+            "0 calibration sequences requested — calibration needs at \
+             least one (pass --calib N with N > 0; the paper uses 128)"));
+    }
+    let seqs = corpus.calib_sequences(n_seqs, seq_len, seed)?;
+    Ok(crate::data::batch_sequences(&seqs, batch))
+}
+
 /// Stream `n_seqs` calibration sequences through the acts graph and
 /// accumulate Σ per activation (paper: 128 sequences).  Σ partials are
 /// folded on the process pool (see [`LayerStats::update_rows_f32_par`]).
@@ -162,8 +182,8 @@ pub fn collect_stats(engine: &Engine, arts: &ModelArtifacts, corpus: &Corpus,
     let pool = crate::par::global();
     let gname = largest_acts_graph(arts)?;
     let session = engine.session(arts, &gname, None)?;
-    let seqs = corpus.calib_sequences(n_seqs, arts.info.seq_len, seed);
-    let batches = crate::data::batch_sequences(&seqs, session.batch);
+    let batches = calib_batches(corpus, n_seqs, arts.info.seq_len, seed,
+                                session.batch)?;
 
     let mut stats: BTreeMap<String, LayerStats> = BTreeMap::new();
     let mut first = true;
@@ -241,6 +261,12 @@ fn quantize_layer(arts: &ModelArtifacts, calib: &CalibStats,
     let scales = weight_scales(&res.w_hat, cfg.w_bits, None);
     let packed = PackedInts::pack(&res.w_hat, &scales, cfg.w_bits, None);
 
+    // the rank actually used by the solve, not the graph's rank layout:
+    // QuaRot always solves at rank 0 regardless of k, and a rank-0 solve
+    // carries no factors — reporting k here mislabeled Table-1 baseline
+    // rows
+    let used_rank = res.u.as_ref().map_or(0, |u| u.cols);
+
     Ok(LayerArtifacts {
         layer: layer.to_string(),
         dout,
@@ -252,7 +278,7 @@ fn quantize_layer(arts: &ModelArtifacts, calib: &CalibStats,
         packed_bytes: packed.size_bytes(),
         report: LayerReport {
             layer: layer.to_string(),
-            rank: k,
+            rank: used_rank,
             objective: res.objective,
             rel_error: rel,
             clip: st.clip,
@@ -379,6 +405,36 @@ mod tests {
         let names = quantized_layer_names(&info);
         assert_eq!(names.len(), 4 + 9);
         assert!(names.contains(&"blk0.e2.wdown".to_string()));
+    }
+
+    #[test]
+    fn zero_calib_sequences_error_at_the_source() {
+        // regression: n_seqs = 0 used to produce an empty batch list and
+        // empty stats, failing much later as "no stats for activation"
+        let corpus = crate::data::Corpus::from_text("t", &"ab".repeat(200));
+        let err = calib_batches(&corpus, 0, 16, 1, 8).unwrap_err()
+            .to_string();
+        assert!(err.contains("calibration"), "{err}");
+        assert!(err.contains("--calib"), "not actionable: {err}");
+    }
+
+    #[test]
+    fn empty_corpus_error_at_the_source() {
+        let corpus = crate::data::Corpus::from_text("empty", "");
+        let err = calib_batches(&corpus, 8, 16, 1, 8).unwrap_err()
+            .to_string();
+        assert!(err.contains("too short for calibration"), "{err}");
+    }
+
+    #[test]
+    fn calib_batches_round_up_to_full_batches() {
+        let corpus = crate::data::Corpus::from_text("t", &"ab".repeat(400));
+        let batches = calib_batches(&corpus, 10, 16, 1, 4).unwrap();
+        assert_eq!(batches.len(), 3); // 4 + 4 + 2(padded)
+        assert_eq!(batches[2].1, 2);
+        for (flat, _) in &batches {
+            assert_eq!(flat.len(), 4 * 16);
+        }
     }
 
     #[test]

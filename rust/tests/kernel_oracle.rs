@@ -1,17 +1,26 @@
 //! The kernel oracle: a randomized property harness locking the blocked-k
 //! GEMM / Gram kernels and their parallel dispatch to an independently
 //! written naive reference — **bit-identical** (`==` on f64, never an
-//! epsilon), at every pool size.
+//! epsilon), at every pool size × every SIMD backend the host can run.
 //!
 //! This is the enforcement arm of the canonical-scalar-program contract
 //! (`linalg::kernels`): every output element is a single accumulator
-//! advanced in strictly ascending k, so blocking, register tiling, row
-//! chunking and thread count must all be observationally invisible.  The
-//! sweep covers ~50 shape/seed combos including the degenerate and ragged
-//! cases (1×1, 1×k, odd rows greater than the thread count, rows not a
-//! multiple of the chunk/tile sizes, dims straddling the KC/NC panels).
+//! advanced in strictly ascending k, so blocking, register tiling, SIMD
+//! lanes, row chunking and thread count must all be observationally
+//! invisible.  The sweep covers ~50 shape/seed combos including the
+//! degenerate and ragged cases (1×1, 1×k, odd rows greater than the
+//! thread count, rows not a multiple of the chunk/tile/lane sizes, dims
+//! straddling the KC/NC panels).
+//!
+//! Backends are forced through the same override the CLI's `--simd` flag
+//! installs (the process-wide knob `LRC_SIMD` seeds; the CI matrix also
+//! runs this whole suite under `LRC_SIMD ∈ {scalar, auto}`).  The
+//! override is process-global and tests in this binary run concurrently,
+//! which is *safe by the very contract under test*: every backend
+//! produces identical bits, so a mid-test backend flip can never change
+//! an assertion's outcome.
 
-use lrc::linalg::Mat;
+use lrc::linalg::{simd, Mat};
 use lrc::par::Pool;
 use lrc::rng::Rng;
 
@@ -71,6 +80,22 @@ fn pools() -> Vec<Pool> {
     [1usize, 2, 3, 8].into_iter().map(Pool::new).collect()
 }
 
+/// Run `body` once per SIMD backend this host supports, forcing each via
+/// the process-wide backend override, then restore auto resolution.
+/// Sweeps serialize on a shared lock: a concurrent sweep flipping the
+/// global override could not make a correct backend fail (identical bits
+/// by contract) but WOULD silently degrade per-backend coverage — the
+/// shape asserted "on avx2" might actually have run on scalar.
+fn for_each_backend(body: impl Fn(simd::Backend)) {
+    static SWEEP: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    let _guard = SWEEP.lock().unwrap_or_else(|e| e.into_inner());
+    for be in simd::available_backends() {
+        simd::set_backend(Some(be)).unwrap();
+        body(be);
+    }
+    simd::set_backend(None).unwrap();
+}
+
 /// Deterministic (m, k, n) sweep: hand-picked boundary shapes + seeded
 /// random fill-in, ≥ 50 combos total.
 fn gemm_shapes() -> Vec<(usize, usize, usize)> {
@@ -119,40 +144,48 @@ fn gemm_shapes() -> Vec<(usize, usize, usize)> {
 }
 
 #[test]
-fn matmul_nt_bit_identical_to_naive_at_every_thread_count() {
+fn matmul_nt_bit_identical_to_naive_at_every_thread_count_and_backend() {
     let pools = pools();
-    for (si, &(m, k, n)) in gemm_shapes().iter().enumerate() {
-        let a = Mat::random_normal(&mut Rng::new(1_000 + si as u64), m, k);
-        let bt = Mat::random_normal(&mut Rng::new(2_000 + si as u64), n, k);
-        let reference = naive_matmul_nt(&a, &bt);
-        assert_eq!(reference, a.matmul_nt(&bt), "serial {m}x{k}·{n}ᵀ");
-        for pool in &pools {
-            let t = pool.threads();
-            assert_eq!(reference, a.par_matmul_nt(&bt, pool),
-                       "{m}x{k}·{n}ᵀ threads={t}");
-            assert_eq!(reference, a.par_matmul_nt(&bt, &pool.scoped()),
-                       "{m}x{k}·{n}ᵀ scoped threads={t}");
+    for_each_backend(|be| {
+        for (si, &(m, k, n)) in gemm_shapes().iter().enumerate() {
+            let a = Mat::random_normal(&mut Rng::new(1_000 + si as u64), m, k);
+            let bt = Mat::random_normal(&mut Rng::new(2_000 + si as u64), n, k);
+            let reference = naive_matmul_nt(&a, &bt);
+            assert_eq!(reference, a.matmul_nt(&bt),
+                       "serial {m}x{k}·{n}ᵀ [{}]", be.name());
+            for pool in &pools {
+                let t = pool.threads();
+                assert_eq!(reference, a.par_matmul_nt(&bt, pool),
+                           "{m}x{k}·{n}ᵀ threads={t} [{}]", be.name());
+                assert_eq!(reference, a.par_matmul_nt(&bt, &pool.scoped()),
+                           "{m}x{k}·{n}ᵀ scoped threads={t} [{}]", be.name());
+            }
         }
-    }
+    });
 }
 
 #[test]
-fn matmul_bit_identical_to_naive_at_every_thread_count() {
+fn matmul_bit_identical_to_naive_at_every_thread_count_and_backend() {
     let pools = pools();
-    for (si, &(m, k, n)) in [(1usize, 1usize, 1usize), (1, 8, 3), (7, 5, 9),
-                             (17, 16, 15), (40, 70, 33), (65, 17, 64)]
-        .iter()
-        .enumerate()
-    {
-        let a = Mat::random_normal(&mut Rng::new(3_000 + si as u64), m, k);
-        let b = Mat::random_normal(&mut Rng::new(4_000 + si as u64), k, n);
-        let reference = naive_matmul_nt(&a, &b.transpose());
-        assert_eq!(reference, a.matmul(&b), "serial {m}x{k}·{k}x{n}");
-        for pool in &pools {
-            assert_eq!(reference, a.par_matmul(&b, pool),
-                       "{m}x{k}·{k}x{n} threads={}", pool.threads());
+    for_each_backend(|be| {
+        for (si, &(m, k, n)) in [(1usize, 1usize, 1usize), (1, 8, 3),
+                                 (7, 5, 9), (17, 16, 15), (40, 70, 33),
+                                 (65, 17, 64)]
+            .iter()
+            .enumerate()
+        {
+            let a = Mat::random_normal(&mut Rng::new(3_000 + si as u64), m, k);
+            let b = Mat::random_normal(&mut Rng::new(4_000 + si as u64), k, n);
+            let reference = naive_matmul_nt(&a, &b.transpose());
+            assert_eq!(reference, a.matmul(&b),
+                       "serial {m}x{k}·{k}x{n} [{}]", be.name());
+            for pool in &pools {
+                assert_eq!(reference, a.par_matmul(&b, pool),
+                           "{m}x{k}·{k}x{n} threads={} [{}]",
+                           pool.threads(), be.name());
+            }
         }
-    }
+    });
 }
 
 #[test]
@@ -182,20 +215,26 @@ fn gram_bit_identical_to_naive_at_every_thread_count() {
     while shapes.len() < 25 {
         shapes.push((1 + rng.below(60), 1 + rng.below(60)));
     }
-    for (si, &(r, c)) in shapes.iter().enumerate() {
-        let a = Mat::random_normal(&mut Rng::new(5_000 + si as u64), r, c);
-        let ref_t = naive_gram_t(&a);
-        let ref_n = naive_gram_n(&a);
-        assert_eq!(ref_t, a.gram_t(), "serial gram_t {r}x{c}");
-        assert_eq!(ref_n, a.gram_n(), "serial gram_n {r}x{c}");
-        for pool in &pools {
-            let t = pool.threads();
-            assert_eq!(ref_t, a.par_gram_t(pool), "gram_t {r}x{c} t={t}");
-            assert_eq!(ref_n, a.par_gram_n(pool), "gram_n {r}x{c} t={t}");
-            assert_eq!(ref_t, a.par_gram_t(&pool.scoped()),
-                       "gram_t scoped {r}x{c} t={t}");
+    for_each_backend(|be| {
+        for (si, &(r, c)) in shapes.iter().enumerate() {
+            let a = Mat::random_normal(&mut Rng::new(5_000 + si as u64), r, c);
+            let ref_t = naive_gram_t(&a);
+            let ref_n = naive_gram_n(&a);
+            assert_eq!(ref_t, a.gram_t(),
+                       "serial gram_t {r}x{c} [{}]", be.name());
+            assert_eq!(ref_n, a.gram_n(),
+                       "serial gram_n {r}x{c} [{}]", be.name());
+            for pool in &pools {
+                let t = pool.threads();
+                assert_eq!(ref_t, a.par_gram_t(pool),
+                           "gram_t {r}x{c} t={t} [{}]", be.name());
+                assert_eq!(ref_n, a.par_gram_n(pool),
+                           "gram_n {r}x{c} t={t} [{}]", be.name());
+                assert_eq!(ref_t, a.par_gram_t(&pool.scoped()),
+                           "gram_t scoped {r}x{c} t={t} [{}]", be.name());
+            }
         }
-    }
+    });
 }
 
 #[test]

@@ -205,6 +205,61 @@ fn pool_drop_and_rebuild_cycles_do_not_wedge() {
 }
 
 #[test]
+fn quantize_model_byte_identical_across_simd_backends() {
+    // the SIMD dispatch must be observationally invisible end to end:
+    // the same model quantized under every available backend produces
+    // byte-identical bundles and reports.  (The backend override is
+    // process-global; concurrent tests flipping it are harmless for
+    // exactly the property asserted here.)
+    use lrc::linalg::simd;
+    let (arts, calib, graph) = synthetic_model();
+    let cfg = QuantConfig::default();
+    simd::set_backend(Some(simd::Backend::Scalar)).unwrap();
+    let (b0, r0) = quantize_model_with_pool(
+        &arts, &calib, &graph, Method::Lrc, &cfg, &Pool::new(4)).unwrap();
+    for be in simd::available_backends() {
+        simd::set_backend(Some(be)).unwrap();
+        let (b, r) = quantize_model_with_pool(
+            &arts, &calib, &graph, Method::Lrc, &cfg, &Pool::new(4)).unwrap();
+        assert_eq!(b0.order, b.order, "backend {}", be.name());
+        for name in &b0.order {
+            assert_eq!(b0.get(name).unwrap().data, b.get(name).unwrap().data,
+                       "{name} differs on backend {}", be.name());
+        }
+        for (x, y) in r0.layers.iter().zip(&r.layers) {
+            assert_eq!(x.objective.to_bits(), y.objective.to_bits(),
+                       "{} objective differs on backend {}", x.layer,
+                       be.name());
+        }
+    }
+    simd::set_backend(None).unwrap();
+}
+
+#[test]
+fn quarot_reports_the_rank_actually_used() {
+    // regression: QuaRot solves at rank 0 whatever the graph's rank
+    // layout says, and its Table-1 rows were labeled with the graph rank
+    let (arts, calib, graph) = synthetic_model();
+    let cfg = QuantConfig::default();
+    let (bundle, report) = quantize_model_with_pool(
+        &arts, &calib, &graph, Method::Quarot, &cfg, &Pool::new(2)).unwrap();
+    for l in &report.layers {
+        assert_eq!(l.rank, 0,
+                   "{}: QuaRot row labeled rank {} (graph says {})",
+                   l.layer, l.rank, graph.ranks[&l.layer]);
+        // and indeed no low-rank factors were emitted
+        assert!(bundle.get(&format!("{}.u", l.layer)).is_err());
+    }
+    assert_eq!(report.lowrank_params, 0);
+    // the corrected methods still report the graph rank they solved at
+    let (_, lrc_report) = quantize_model_with_pool(
+        &arts, &calib, &graph, Method::Lrc, &cfg, &Pool::new(2)).unwrap();
+    for l in &lrc_report.layers {
+        assert_eq!(l.rank, graph.ranks[&l.layer], "{}", l.layer);
+    }
+}
+
+#[test]
 fn report_layer_order_is_canonical() {
     // results come back in quantized_layer_names order regardless of
     // which worker finished first
