@@ -12,7 +12,6 @@
 use anyhow::Result;
 use lrc::data::Corpus;
 use lrc::experiments::{self, EvalBudget, TABLE_HEADERS};
-use lrc::pipeline::Method;
 use lrc::quant::QuantConfig;
 use lrc::runtime::{Engine, ModelArtifacts};
 use lrc::util::{render_table, Args};
@@ -43,14 +42,17 @@ fn main() -> Result<()> {
                                          &corpus, &tasks, budget, "FP16")?;
     rows.push(fp.cells());
 
-    // quantized variants against the same graph layout
+    // quantized variants against the same graph layout; the row set
+    // comes from the sweep grid's method axis (QuaRot, SVD, LRC(1),
+    // LRC(5)) — see `lrc sweep` for the full bits × rank surface
     let graph = experiments::quant_graph_name(pct, group, false, 8);
     let graph0 = experiments::quant_graph_name(0, group, false, 8);
-    for (method, iters) in experiments::standard_method_set() {
+    for (row, iters) in lrc::sweep::table_method_rows() {
+        let method = row.pipeline_method();
         let cfg = QuantConfig { iters, a_group: group,
                                 rank_pct: pct as f64 / 100.0,
                                 ..Default::default() };
-        let g = if method == Method::Quarot { &graph0 } else { &graph };
+        let g = if row.uses_rank() { &graph } else { &graph0 };
         let t0 = std::time::Instant::now();
         let (scores, report) = experiments::quantize_and_evaluate(
             &engine, &arts, &corpus, &tasks, g, method, &cfg, n_calib,

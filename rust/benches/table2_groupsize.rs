@@ -5,7 +5,6 @@
 
 use lrc::data::Corpus;
 use lrc::experiments::{self, EvalBudget, TABLE_HEADERS};
-use lrc::pipeline::Method;
 use lrc::quant::QuantConfig;
 use lrc::runtime::{Engine, ModelArtifacts};
 use lrc::util::{render_table, Args};
@@ -33,11 +32,14 @@ fn main() -> anyhow::Result<()> {
             "FP16")?.cells());
         let graph = experiments::quant_graph_name(pct, Some(GROUP), false, 8);
         let graph0 = experiments::quant_graph_name(0, Some(GROUP), false, 8);
-        for (method, iters) in experiments::standard_method_set() {
+        // variant rows come from the sweep grid's method axis (the old
+        // hardcoded standard_method_set is retired)
+        for (row, iters) in lrc::sweep::table_method_rows() {
+            let method = row.pipeline_method();
             let cfg = QuantConfig { iters, a_group: Some(GROUP),
                                     rank_pct: pct as f64 / 100.0,
                                     ..Default::default() };
-            let g = if method == Method::Quarot { &graph0 } else { &graph };
+            let g = if row.uses_rank() { &graph } else { &graph0 };
             let (scores, _) = experiments::quantize_and_evaluate(
                 &engine, &arts, &corpus, &tasks, g, method, &cfg, 128,
                 budget)?;

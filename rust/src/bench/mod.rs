@@ -8,7 +8,11 @@
 //! under the current [`section`], and [`write_json`] dumps them as one
 //! commit-stampable JSON document — the CI bench job uploads it as a
 //! workflow artifact so perf regressions diff across runs instead of
-//! scrolling through job logs.
+//! scrolling through job logs.  The [`trend`] submodule closes the loop:
+//! it compares the current run's medians against the last N persisted
+//! artifacts and gates CI on kernel regressions.
+
+pub mod trend;
 
 use std::sync::Mutex;
 use std::time::Instant;

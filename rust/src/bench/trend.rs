@@ -1,0 +1,282 @@
+//! Bench-trend comparison — the CI regression gate over the bench JSON
+//! artifacts [`super::write_json`] persists.
+//!
+//! The workflow downloads the last N `bench_par` artifacts, and
+//! `lrc bench-trend` compares the current run against them: for every
+//! `(section, name)` measurement present on both sides, the **median of
+//! the baseline runs' medians** (median-of-medians — robust to one noisy
+//! CI run) is compared to the current run's median; any entry slower by
+//! more than the threshold fails the gate.  The whole comparison renders
+//! as a markdown table for `$GITHUB_STEP_SUMMARY`.  With no baseline
+//! artifacts yet (the first run), the gate passes with an explicit
+//! notice instead of failing.
+
+use std::collections::BTreeMap;
+
+use crate::util::Json;
+
+/// Default regression threshold: fail at > +25% on any named section.
+pub const DEFAULT_THRESHOLD_PCT: f64 = 25.0;
+
+/// One compared measurement.
+#[derive(Clone, Debug)]
+pub struct TrendPoint {
+    pub section: String,
+    pub name: String,
+    /// median ms of the current run's samples
+    pub current_ms: f64,
+    /// median across baseline runs of each run's median ms
+    /// (`None` = measurement new in this run, nothing to compare)
+    pub baseline_ms: Option<f64>,
+    /// current / baseline (`None` when there is no baseline)
+    pub ratio: Option<f64>,
+}
+
+/// The full comparison.
+#[derive(Clone, Debug)]
+pub struct TrendReport {
+    pub points: Vec<TrendPoint>,
+    /// "section / name" keys that regressed beyond the threshold
+    pub regressions: Vec<String>,
+    /// measurements present in baselines but missing from this run
+    pub removed: Vec<String>,
+    pub baseline_runs: usize,
+    pub threshold_pct: f64,
+}
+
+fn median(samples: &[f64]) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = s.len();
+    if n % 2 == 1 {
+        s[n / 2]
+    } else {
+        0.5 * (s[n / 2 - 1] + s[n / 2])
+    }
+}
+
+/// Per-run medians keyed by `(section, name)`.  Prefers the raw
+/// `samples_ms` array; falls back to the precomputed `mean_ms` when a
+/// (hand-trimmed) document carries only aggregates.
+fn run_medians(doc: &Json) -> BTreeMap<(String, String), f64> {
+    let mut out = BTreeMap::new();
+    for e in doc.get("entries").and_then(|e| e.as_arr()).unwrap_or(&[]) {
+        let section = e.get("section").and_then(|v| v.as_str())
+            .unwrap_or("").to_string();
+        let name = match e.get("name").and_then(|v| v.as_str()) {
+            Some(n) => n.to_string(),
+            None => continue,
+        };
+        let m = match e.get("samples_ms").and_then(|s| s.as_arr()) {
+            Some(samples) if !samples.is_empty() => {
+                let vals: Vec<f64> =
+                    samples.iter().filter_map(|v| v.as_f64()).collect();
+                median(&vals)
+            }
+            _ => match e.get("mean_ms").and_then(|v| v.as_f64()) {
+                Some(m) => m,
+                None => continue,
+            },
+        };
+        out.insert((section, name), m);
+    }
+    out
+}
+
+/// Compare the current bench document against N baseline documents.
+pub fn compare(current: &Json, baselines: &[Json], threshold_pct: f64)
+               -> TrendReport {
+    let cur = run_medians(current);
+    let mut base: BTreeMap<(String, String), Vec<f64>> = BTreeMap::new();
+    for doc in baselines {
+        for (k, m) in run_medians(doc) {
+            base.entry(k).or_default().push(m);
+        }
+    }
+
+    let mut points = Vec::new();
+    let mut regressions = Vec::new();
+    for ((section, name), &current_ms) in &cur {
+        let baseline_ms = base.get(&(section.clone(), name.clone()))
+            .map(|ms| median(ms));
+        let ratio = baseline_ms
+            .filter(|&b| b > 0.0)
+            .map(|b| current_ms / b);
+        if let Some(r) = ratio {
+            if r > 1.0 + threshold_pct / 100.0 {
+                regressions.push(format!("{section} / {name}"));
+            }
+        }
+        points.push(TrendPoint {
+            section: section.clone(),
+            name: name.clone(),
+            current_ms,
+            baseline_ms,
+            ratio,
+        });
+    }
+    let removed = base.keys()
+        .filter(|k| !cur.contains_key(*k))
+        .map(|(s, n)| format!("{s} / {n}"))
+        .collect();
+    TrendReport {
+        points,
+        regressions,
+        removed,
+        baseline_runs: baselines.len(),
+        threshold_pct,
+    }
+}
+
+impl TrendReport {
+    /// Gate verdict: a first run (no baselines) passes with a notice;
+    /// otherwise any regression fails.
+    pub fn passed(&self) -> bool {
+        self.baseline_runs == 0 || self.regressions.is_empty()
+    }
+
+    /// The `$GITHUB_STEP_SUMMARY` markdown table.
+    pub fn markdown(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(out, "### Bench trend (threshold +{:.0}%)\n",
+                         self.threshold_pct);
+        if self.baseline_runs == 0 {
+            let _ = writeln!(
+                out,
+                "**Notice:** fewer than 2 bench artifacts exist — this is \
+                 the first recorded run, nothing to compare against. \
+                 Passing; the next run will gate against this one.");
+            return out;
+        }
+        let _ = writeln!(out,
+                         "Comparing against the median of the last {} \
+                          run(s).\n",
+                         self.baseline_runs);
+        let _ = writeln!(out,
+                         "| Section | Measurement | Baseline (ms) | \
+                          Current (ms) | Δ | Status |");
+        let _ = writeln!(out, "|---|---|---|---|---|---|");
+        for p in &self.points {
+            let (base, delta, status) = match (p.baseline_ms, p.ratio) {
+                (Some(b), Some(r)) => {
+                    let pct = (r - 1.0) * 100.0;
+                    let ok = r <= 1.0 + self.threshold_pct / 100.0;
+                    (format!("{b:.3}"), format!("{pct:+.1}%"),
+                     if ok { "ok" } else { "**REGRESSION**" })
+                }
+                _ => ("-".to_string(), "-".to_string(), "new"),
+            };
+            let _ = writeln!(out, "| {} | {} | {} | {:.3} | {} | {} |",
+                             p.section, p.name, base, p.current_ms, delta,
+                             status);
+        }
+        if !self.removed.is_empty() {
+            let _ = writeln!(out,
+                             "\nMeasurements in baselines but not in this \
+                              run: {}.",
+                             self.removed.join(", "));
+        }
+        if !self.regressions.is_empty() {
+            let _ = writeln!(out,
+                             "\n**{} regression(s) beyond +{:.0}%:** {}",
+                             self.regressions.len(), self.threshold_pct,
+                             self.regressions.join(", "));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(entries: &[(&str, &str, &[f64])]) -> Json {
+        Json::obj(vec![
+            ("bench", Json::str("bench_par")),
+            ("entries", Json::Arr(entries.iter().map(|(s, n, v)| {
+                Json::obj(vec![
+                    ("section", Json::str(*s)),
+                    ("name", Json::str(*n)),
+                    ("samples_ms",
+                     Json::Arr(v.iter().map(|&x| Json::num(x)).collect())),
+                ])
+            }).collect())),
+        ])
+    }
+
+    #[test]
+    fn median_odd_even_empty() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+        assert_eq!(median(&[]), 0.0);
+    }
+
+    #[test]
+    fn regression_beyond_threshold_fails_the_gate() {
+        let base = doc(&[("gemm", "blocked 512", &[10.0, 10.0, 10.0])]);
+        let cur = doc(&[("gemm", "blocked 512", &[14.0, 14.0, 14.0])]);
+        let rep = compare(&cur, &[base], 25.0);
+        assert_eq!(rep.regressions, vec!["gemm / blocked 512"]);
+        assert!(!rep.passed());
+        assert!(rep.markdown().contains("REGRESSION"));
+    }
+
+    #[test]
+    fn within_threshold_and_improvements_pass() {
+        let b1 = doc(&[("gemm", "blocked 512", &[10.0, 11.0, 12.0])]);
+        let b2 = doc(&[("gemm", "blocked 512", &[9.0, 10.0, 11.0])]);
+        // current median 11.0 vs baseline median-of-medians 10.5: +4.8%
+        let cur = doc(&[("gemm", "blocked 512", &[11.0, 11.0])]);
+        let rep = compare(&cur, &[b1, b2], 25.0);
+        assert!(rep.passed(), "{:?}", rep.regressions);
+        let p = &rep.points[0];
+        assert_eq!(p.baseline_ms, Some(10.5));
+        assert_eq!(p.current_ms, 11.0);
+        // a big improvement is also fine
+        let fast = doc(&[("gemm", "blocked 512", &[1.0])]);
+        let base = doc(&[("gemm", "blocked 512", &[10.0])]);
+        assert!(compare(&fast, &[base], 25.0).passed());
+    }
+
+    #[test]
+    fn first_run_passes_with_notice() {
+        let cur = doc(&[("pool", "epoch dispatch", &[0.5])]);
+        let rep = compare(&cur, &[], 25.0);
+        assert!(rep.passed());
+        assert_eq!(rep.baseline_runs, 0);
+        let md = rep.markdown();
+        assert!(md.contains("fewer than 2 bench artifacts"), "{md}");
+    }
+
+    #[test]
+    fn new_and_removed_measurements_do_not_gate() {
+        let base = doc(&[("gemm", "old kernel", &[5.0])]);
+        let cur = doc(&[("gemm", "new kernel", &[50.0])]);
+        let rep = compare(&cur, &[base], 25.0);
+        assert!(rep.passed(), "new measurements must not gate");
+        assert_eq!(rep.removed, vec!["gemm / old kernel"]);
+        assert_eq!(rep.points[0].baseline_ms, None);
+        let md = rep.markdown();
+        assert!(md.contains("new"), "{md}");
+        assert!(md.contains("old kernel"), "{md}");
+    }
+
+    #[test]
+    fn mean_fallback_when_samples_missing() {
+        let trimmed = Json::obj(vec![
+            ("entries", Json::Arr(vec![Json::obj(vec![
+                ("section", Json::str("gemm")),
+                ("name", Json::str("blocked 512")),
+                ("mean_ms", Json::num(10.0)),
+            ])])),
+        ]);
+        let cur = doc(&[("gemm", "blocked 512", &[10.5])]);
+        let rep = compare(&cur, &[trimmed], 25.0);
+        assert_eq!(rep.points[0].baseline_ms, Some(10.0));
+        assert!(rep.passed());
+    }
+}

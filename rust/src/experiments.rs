@@ -103,12 +103,6 @@ pub fn quantize_and_evaluate(engine: &Engine, arts: &ModelArtifacts,
     Ok((scores, report))
 }
 
-/// The standard variant set of Tables 1/2: FP16, QuaRot, SVD, LRC(1), LRC(5).
-pub fn standard_method_set() -> Vec<(Method, usize)> {
-    vec![(Method::Quarot, 1), (Method::Svd, 1), (Method::Lrc, 1),
-         (Method::Lrc, 5)]
-}
-
 /// Graph name helper matching aot.py's naming.
 pub fn quant_graph_name(pct: usize, group: Option<usize>, weight_only: bool,
                         batch: usize) -> String {

@@ -32,10 +32,20 @@
 //! * [`eval`]        — perplexity + multiple-choice accuracy scoring
 //! * [`runtime`]     — PJRT engine: HLO-text artifacts → executables
 //! * [`pipeline`]    — end-to-end PTQ driver (calibrate → quantize →
-//!                     bundle); the per-layer loop fans out on [`par`]
+//!                     bundle); the per-layer loop fans out on [`par`];
+//!                     split entry points let calibration be collected
+//!                     once and reused across many quantization runs
+//! * [`sweep`]       — declarative method × w_bits × rank_pct × group
+//!                     grid driver: shared calibration across cells,
+//!                     canonical fold order (byte-identical reports at
+//!                     any thread count), keyed JSON fragments for
+//!                     resume, built-in sanity assertions; runs on real
+//!                     artifacts or an engine-free synthetic model
 //! * [`coordinator`] — serving engine: dynamic batcher, N engine
 //!                     workers, per-worker metrics
 //! * [`bench`]       — measurement harness used by `cargo bench` targets
+//!                     + the `bench-trend` regression comparison the CI
+//!                     gate runs over bench JSON artifacts
 //! * [`util`]        — no-deps JSON + CLI parsing
 
 pub mod bench;
@@ -50,6 +60,7 @@ pub mod pipeline;
 pub mod quant;
 pub mod rng;
 pub mod runtime;
+pub mod sweep;
 pub mod util;
 
 /// Repo-relative artifacts directory (respects `LRC_ARTIFACTS` env var).

@@ -4,6 +4,10 @@
 //!   info                          list models/graphs in artifacts/
 //!   quantize --model M --method Q quantize natively (calibrate → bundle)
 //!   eval --model M --graph G      perplexity + task accuracy of a variant
+//!   sweep [--fast] [--model M]    method × bits × rank × group grid
+//!                                 driver with shared calibration + resume
+//!   bench-trend --current J       compare a bench JSON against baseline
+//!                                 artifacts (the CI regression gate)
 //!   serve --model M               serving demo with the dynamic batcher
 //!
 //! Global flags: `--threads N` sizes the compute pool (else the
@@ -58,6 +62,8 @@ fn main() {
         "info" => cmd_info(&args),
         "quantize" => cmd_quantize(&args),
         "eval" => cmd_eval(&args),
+        "sweep" => cmd_sweep(&args),
+        "bench-trend" => cmd_bench_trend(&args),
         "serve" => cmd_serve(&args),
         _ => {
             print_help();
@@ -81,6 +87,34 @@ fn print_help() {
          \x20        [--calib 128] [--corpus wiki_syn]\n\
          eval     --model small --graph fwd_w4a4_r10_b8 [--quant <dir>]\n\
          \x20        [--fast]\n\
+         sweep    [--fast] [--model small] [--methods rtn,quarot,svd,lrc]\n\
+         \x20        [--bits 2,3,4,8] [--pcts 0,5,10,20,30]\n\
+         \x20        [--groups none,32] [--iters 1] [--out <dir>]\n\
+         \x20        [--no-resume] [--seed 2024] [--calib 128]\n\
+         \x20        [--corpus wiki_syn]\n\
+         \x20        Grid driver over method x w_bits x rank_pct x group:\n\
+         \x20        calibration stats are collected once per group value\n\
+         \x20        and shared by every cell; independent cells fan out\n\
+         \x20        on the compute pool in canonical order, so the grid\n\
+         \x20        report (report.json + report.md under --out) is\n\
+         \x20        byte-identical at any --threads.  Finished cells\n\
+         \x20        persist as keyed fragments under <out>/cells/ and\n\
+         \x20        are skipped on re-run (--no-resume recomputes).\n\
+         \x20        Without --model the grid runs on a deterministic\n\
+         \x20        in-memory synthetic model (no PJRT needed — what CI\n\
+         \x20        runs); --fast is the 8-cell CI smoke grid.  Exits\n\
+         \x20        non-zero if a built-in sanity assertion fails\n\
+         \x20        (gptq<=rtn per cell, error non-increasing in rank,\n\
+         \x20        size strictly increasing in bits).\n\
+         bench-trend --current <bench.json> --baselines <dir>\n\
+         \x20        [--threshold 25] [--summary <file>]\n\
+         \x20        Compare the current bench JSON's per-measurement\n\
+         \x20        medians against the median of the baseline runs in\n\
+         \x20        <dir> (searched recursively for bench_par_*.json);\n\
+         \x20        writes a markdown table (appended to --summary for\n\
+         \x20        $GITHUB_STEP_SUMMARY) and exits non-zero on any\n\
+         \x20        regression beyond --threshold percent.  With no\n\
+         \x20        baseline artifacts yet it passes with a notice.\n\
          serve    --model small [--prefix fwd_w4a4_r10] [--quant <dir>]\n\
          \x20        [--requests 64] [--max-wait-ms 5] [--workers 1]\n\
          \n\
@@ -186,6 +220,168 @@ fn cmd_eval(args: &Args) -> Result<()> {
         &graph)?;
     println!("{}", render_table(&experiments::TABLE_HEADERS,
                                 &[scores.cells()]));
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    use lrc::sweep::{self, SweepAxes};
+    let axes = SweepAxes::from_args(args, args.has("fast"))?;
+    let resume = !args.has("no-resume");
+    let pool = lrc::par::global();
+    let seed = args.get_usize("seed", 2024) as u64;
+
+    let outcome;
+    let out_dir;
+    match args.get("model") {
+        None => {
+            // engine-free: deterministic synthetic model + calibration
+            let arts = sweep::synthetic_artifacts(seed);
+            let calib = sweep::synthetic_calib(&arts, seed, &axes.groups);
+            out_dir = args.get("out").map(std::path::PathBuf::from)
+                .unwrap_or_else(|| lrc::artifacts_dir().join("sweep")
+                                .join(&arts.info.name));
+            println!("sweep: {} cells on synthetic model (seed {seed}), \
+                      out {out_dir:?}", axes.cells().len());
+            let run_tag = format!("synthetic-seed{seed}");
+            outcome = sweep::run_grid(&arts, &calib, &axes, &run_tag,
+                                      Some(&out_dir.join("cells")), resume,
+                                      pool, None)?;
+        }
+        Some(model) => {
+            // real artifacts: calibrate once per group value via the
+            // engine, reuse across every cell; NLL per cell where a
+            // matching fwd graph exists (the fwd graphs consume
+            // dequantized grid weights, so one graph serves every
+            // w_bits at its rank/group coordinate)
+            let engine = Engine::cpu()?;
+            let arts = ModelArtifacts::load(
+                &lrc::artifacts_dir().join("models").join(model))?;
+            let corpus_name = args.get_or("corpus", "wiki_syn");
+            let corpus = load_corpus(&corpus_name)?;
+            let n_calib = args.get_usize("calib", 128);
+            let run_tag = format!("{model}-{corpus_name}-calib{n_calib}");
+            let mut calib = std::collections::BTreeMap::new();
+            for &group in &axes.groups {
+                if calib.contains_key(&group) {
+                    continue;
+                }
+                let graph = lrc::pipeline::cell_graph(&arts, 0, group,
+                                                      false, 8)?;
+                let cfg = lrc::quant::QuantConfig {
+                    a_group: group, ..Default::default()
+                };
+                println!("collecting shared stats (group {group:?}, \
+                          {n_calib} seqs)...");
+                let stats = lrc::pipeline::collect_stats_for_graph(
+                    &engine, &arts, &corpus, &graph, &cfg, n_calib)?;
+                calib.insert(group, stats);
+            }
+            out_dir = args.get("out").map(std::path::PathBuf::from)
+                .unwrap_or_else(|| lrc::artifacts_dir().join("sweep")
+                                .join(&arts.info.name));
+            println!("sweep: {} cells on model {model}, out {out_dir:?}",
+                     axes.cells().len());
+            let mut nll_eval = |key: &lrc::sweep::CellKey,
+                                bundle: &TensorBundle|
+                               -> Result<Option<f64>> {
+                let gname = experiments::quant_graph_name(
+                    key.rank_pct, key.a_group, false, 8);
+                if !arts.graphs.contains_key(&gname) {
+                    return Ok(None);
+                }
+                let session = engine.session(&arts, &gname, Some(bundle))?;
+                let mut provider = lrc::runtime::SessionProvider { session };
+                let ppl = lrc::eval::perplexity(&mut provider, &corpus, 8)
+                    .map_err(anyhow::Error::msg)?;
+                Ok(Some(ppl.ln()))
+            };
+            outcome = sweep::run_grid(&arts, &calib, &axes, &run_tag,
+                                      Some(&out_dir.join("cells")), resume,
+                                      pool, Some(&mut nll_eval))?;
+        }
+    }
+
+    // persist the report before gating on sanity, so a violating run
+    // still leaves the full grid behind to debug with
+    std::fs::create_dir_all(&out_dir)?;
+    std::fs::write(out_dir.join("report.json"), &outcome.report_json)?;
+    std::fs::write(out_dir.join("report.md"), &outcome.markdown)?;
+    println!("\n{}", outcome.markdown);
+    println!("cells: {} computed, {} resumed; report under {out_dir:?}",
+             outcome.computed, outcome.resumed);
+    if !outcome.violations.is_empty() {
+        for v in &outcome.violations {
+            eprintln!("sanity violation: {v}");
+        }
+        return Err(anyhow!("{} sweep sanity assertion(s) failed",
+                           outcome.violations.len()));
+    }
+    println!("sanity assertions: all hold (gptq<=rtn, rank monotone, \
+              size strictly increasing in bits)");
+    Ok(())
+}
+
+/// Recursively collect `bench_par_*.json` files under `dir`.
+fn collect_bench_jsons(dir: &std::path::Path,
+                       out: &mut Vec<std::path::PathBuf>) {
+    if let Ok(rd) = std::fs::read_dir(dir) {
+        for e in rd.flatten() {
+            let p = e.path();
+            if p.is_dir() {
+                collect_bench_jsons(&p, out);
+            } else if p.file_name().and_then(|n| n.to_str())
+                .map(|n| n.starts_with("bench_par_") && n.ends_with(".json"))
+                .unwrap_or(false)
+            {
+                out.push(p);
+            }
+        }
+    }
+}
+
+fn cmd_bench_trend(args: &Args) -> Result<()> {
+    use lrc::bench::trend;
+    use lrc::util::Json;
+    let current_path = args.get("current")
+        .ok_or_else(|| anyhow!("--current <bench json> is required"))?;
+    let current = Json::parse(&std::fs::read_to_string(current_path)?)
+        .map_err(|e| anyhow!("parse {current_path}: {e}"))?;
+    let base_dir = args.get("baselines")
+        .ok_or_else(|| anyhow!("--baselines <dir> is required"))?;
+    let threshold = args.get_f64("threshold", trend::DEFAULT_THRESHOLD_PCT);
+
+    let mut paths = Vec::new();
+    collect_bench_jsons(std::path::Path::new(base_dir), &mut paths);
+    paths.sort();
+    let cur_canon = std::fs::canonicalize(current_path).ok();
+    let mut baselines = Vec::new();
+    for p in paths {
+        if std::fs::canonicalize(&p).ok() == cur_canon && cur_canon.is_some() {
+            continue; // don't compare the current run against itself
+        }
+        match std::fs::read_to_string(&p).map_err(|e| e.to_string())
+            .and_then(|t| Json::parse(&t))
+        {
+            Ok(j) => baselines.push(j),
+            Err(e) => eprintln!("warning: skipping baseline {p:?}: {e}"),
+        }
+    }
+
+    let report = trend::compare(&current, &baselines, threshold);
+    let md = report.markdown();
+    if let Some(summary) = args.get("summary") {
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new()
+            .create(true).append(true).open(summary)?;
+        f.write_all(md.as_bytes())?;
+    }
+    println!("{md}");
+    if !report.passed() {
+        return Err(anyhow!("bench trend gate failed: {} regression(s) \
+                            beyond +{threshold}%: {}",
+                           report.regressions.len(),
+                           report.regressions.join(", ")));
+    }
     Ok(())
 }
 

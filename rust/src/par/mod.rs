@@ -14,11 +14,14 @@
 //! [`Pool::new`]`(n)` spawns `n - 1` long-lived worker threads that park
 //! on a job board (a `Mutex` + `Condvar` pair) until work arrives.  Each
 //! `map`/`for_each` call publishes one **epoch**: a generation-counted
-//! job every worker runs exactly once, pulling item indices from an
-//! atomic cursor.  The calling thread participates as the n-th worker,
-//! so `Pool::new(1)` holds no threads at all and runs everything inline.
-//! Dropping the last clone of a `Pool` shuts the board down and joins
-//! the workers; the [`global`] pool lives for the whole process.
+//! job carrying a claim budget of `min(items - 1, workers)` dispatch
+//! slots; each claiming worker runs the job once, pulling item indices
+//! from an atomic cursor.  Epochs smaller than the pool wake (and run on)
+//! only as many workers as there are items — the surplus workers never
+//! leave the condvar.  The calling thread participates as the n-th
+//! worker, so `Pool::new(1)` holds no threads at all and runs everything
+//! inline.  Dropping the last clone of a `Pool` shuts the board down and
+//! joins the workers; the [`global`] pool lives for the whole process.
 //!
 //! Publishing an epoch costs two mutex acquisitions per thread — against
 //! the hundreds of microseconds a scoped spawn/join cycle costs, this is
@@ -144,12 +147,17 @@ struct SendJob(&'static (dyn Fn() + Sync));
 
 /// The job board all workers of one pool park on.
 struct JobState {
-    /// generation counter: workers run each epoch exactly once
+    /// generation counter: workers run each epoch at most once
     epoch: u64,
     /// the currently published job (None between epochs)
     job: Option<SendJob>,
-    /// workers still running the current epoch
+    /// workers the current epoch still expects to finish (preset to the
+    /// claim budget at publish; decremented as claimed work completes)
     active: usize,
+    /// workers that may still join the current epoch — preset to
+    /// `min(items - 1, workers)` so an epoch with fewer items than the
+    /// pool has workers never dispatches (or wakes) the surplus ones
+    claims: usize,
     /// a worker panicked while running the current epoch
     panicked: bool,
     shutdown: bool,
@@ -171,14 +179,29 @@ struct Workers {
 }
 
 impl Workers {
-    /// Publish one epoch and run it to completion on every worker plus
-    /// the calling thread.
+    /// Publish one epoch and run it to completion on the calling thread
+    /// plus at most `items - 1` parked workers.
+    ///
+    /// The claim budget is what keeps small epochs cheap: an epoch with
+    /// `items` work items can use at most `items` threads (the caller is
+    /// one of them), so only `min(items - 1, workers)` parked workers are
+    /// woken and run the job — the rest never leave the condvar.  At
+    /// `items > workers` this degrades to the old wake-everyone behavior.
     ///
     /// SAFETY: `body` is lifetime-erased before being handed to the
     /// workers; this function does not return (or unwind) until every
-    /// worker has finished running it, so the erased borrow never
-    /// outlives the frame that owns the captured data.
-    fn run(&self, body: &(dyn Fn() + Sync)) {
+    /// worker that claimed the epoch has finished running it — and the
+    /// claim budget is always fully consumed before `active` can reach
+    /// zero — so the erased borrow never outlives the frame that owns the
+    /// captured data.
+    fn run(&self, body: &(dyn Fn() + Sync), items: usize) {
+        let extra = self.handles.len().min(items.saturating_sub(1));
+        if extra == 0 {
+            // no workers needed: run inline without occupying the board
+            let _guard = PoolGuard::enter();
+            body();
+            return;
+        }
         let job = SendJob(unsafe {
             std::mem::transmute::<&(dyn Fn() + Sync), &'static (dyn Fn() + Sync)>(body)
         });
@@ -190,10 +213,21 @@ impl Workers {
                 st = self.board.done.wait(st).unwrap();
             }
             st.epoch += 1;
-            st.active = self.handles.len();
+            st.active = extra;
+            st.claims = extra;
             st.job = Some(job);
             st.panicked = false;
-            self.board.work.notify_all();
+            // a notify_one can only be lost when no worker is parked, and
+            // an unparked worker re-checks the board (and claims) before
+            // parking — so `extra` targeted wakeups always end up with
+            // exactly `extra` claimants
+            if extra == self.handles.len() {
+                self.board.work.notify_all();
+            } else {
+                for _ in 0..extra {
+                    self.board.work.notify_one();
+                }
+            }
         }
         // the caller is a worker too (pool of n = n-1 threads + caller)
         let local = {
@@ -206,6 +240,7 @@ impl Workers {
                 st = self.board.done.wait(st).unwrap();
             }
             st.job = None;
+            st.claims = 0;
             let p = st.panicked;
             st.panicked = false;
             // wake any submitter waiting for the board to free up
@@ -234,7 +269,9 @@ impl Drop for Workers {
     }
 }
 
-/// Long-lived worker: park on the board, run each published epoch once.
+/// Long-lived worker: park on the board, run each published epoch at most
+/// once — and only after claiming one of its dispatch slots (small epochs
+/// carry fewer slots than the pool has workers).
 fn worker_loop(board: Arc<Board>) {
     let mut seen = 0u64;
     loop {
@@ -245,9 +282,16 @@ fn worker_loop(board: Arc<Board>) {
                     return;
                 }
                 if st.epoch > seen {
-                    if let Some(j) = st.job {
+                    if st.claims > 0 {
+                        if let Some(j) = st.job {
+                            st.claims -= 1;
+                            seen = st.epoch;
+                            break j;
+                        }
+                    } else {
+                        // epoch fully claimed (or finished) without us —
+                        // mark it seen and park again
                         seen = st.epoch;
-                        break j;
                     }
                 }
                 st = board.work.wait(st).unwrap();
@@ -324,6 +368,7 @@ impl Pool {
                 epoch: 0,
                 job: None,
                 active: 0,
+                claims: 0,
                 panicked: false,
                 shutdown: false,
             }),
@@ -399,7 +444,7 @@ impl Pool {
                 let slots: Vec<Mutex<Option<T>>> =
                     (0..n).map(|_| Mutex::new(None)).collect();
                 let body = || drain_map(&cursor, n, &f, &slots);
-                w.run(&body);
+                w.run(&body, n);
                 collect_slots(slots)
             }
         }
@@ -434,7 +479,7 @@ impl Pool {
                 let slots: Vec<Mutex<Option<T>>> =
                     work.into_iter().map(|w| Mutex::new(Some(w))).collect();
                 let body = || drain_for_each(&cursor, n, &f, &slots);
-                wk.run(&body);
+                wk.run(&body, n);
             }
         }
     }
@@ -606,6 +651,25 @@ mod tests {
         assert_eq!(Pool::new(0).threads(), 1);
         assert_eq!(Pool::serial().threads(), 1);
         assert!(Pool::current().threads() >= 1);
+    }
+
+    #[test]
+    fn small_epochs_use_at_most_items_threads() {
+        // an epoch with fewer items than the pool has workers must
+        // dispatch to (and therefore run on) at most `items` threads —
+        // caller + min(items - 1, workers) claimants
+        let pool = Pool::new(8);
+        for items in [2usize, 3, 5] {
+            let tids = Mutex::new(std::collections::BTreeSet::new());
+            let out = pool.map(items, |i| {
+                tids.lock().unwrap().insert(std::thread::current().id());
+                i * 3
+            });
+            assert_eq!(out, (0..items).map(|i| i * 3).collect::<Vec<_>>());
+            let participants = tids.lock().unwrap().len();
+            assert!(participants <= items,
+                    "items={items}: {participants} threads ran the epoch");
+        }
     }
 
     #[test]

@@ -357,25 +357,81 @@ pub fn quantize_model_with_pool(arts: &ModelArtifacts, calib: &CalibStats,
     Ok((bundle, report))
 }
 
+/// [`collect_stats`] for the activation-quant config `graph` implies:
+/// weight-only graphs calibrate with Q_a = identity, everything else with
+/// the configured activation bits and the graph's group size.  This is
+/// the **stats-reuse entry point**: collect once, then run any number of
+/// grid cells against the same [`CalibStats`] (stats collection dominates
+/// wall-clock, so the sweep driver shares one per activation config).
+pub fn collect_stats_for_graph(engine: &Engine, arts: &ModelArtifacts,
+                               corpus: &Corpus, graph: &GraphInfo,
+                               cfg: &QuantConfig, n_calib: usize)
+                               -> Result<CalibStats> {
+    let a_bits = if graph.weight_only { None } else { cfg.a_bits };
+    collect_stats(engine, arts, corpus, n_calib, 1234, a_bits, graph.a_group)
+}
+
+/// Persist a quant bundle under `<model_dir>/quant/<method>_<graph>/` —
+/// the **cell-execution half** of the old monolithic `quantize_and_save`.
+pub fn save_quant_bundle(arts: &ModelArtifacts, bundle: &TensorBundle,
+                         graph: &GraphInfo, method: Method,
+                         cfg: &QuantConfig) -> Result<std::path::PathBuf> {
+    let tag = format!("{}_{}", method.label(cfg).replace([' ', '(', ')'], ""),
+                      graph.name);
+    let out = arts.dir.join("quant").join(tag);
+    bundle.write(&out, &[
+        ("kind", Json::str("quant")),
+        ("graph", Json::str(graph.name.clone())),
+        ("rank_pct", Json::num(graph.rank_pct)),
+    ])?;
+    Ok(out)
+}
+
+/// Synthesize the [`GraphInfo`] a `fwd_*_r{pct}` AOT graph would carry
+/// for one sweep cell: per-layer low-rank sizes from
+/// [`crate::quant::rank_for_pct`] on the weight shapes (the same formula
+/// python's AOT lowering uses, so a synthesized layout matches the
+/// on-disk graph of the same pct wherever one exists).  Grid cells
+/// quantize against this, so a sweep needs no matching AOT graph on disk
+/// — only NLL evaluation does.
+pub fn cell_graph(arts: &ModelArtifacts, rank_pct: usize,
+                  a_group: Option<usize>, weight_only: bool, batch: usize)
+                  -> Result<GraphInfo> {
+    let pct = rank_pct as f64 / 100.0;
+    let mut ranks = BTreeMap::new();
+    for layer in quantized_layer_names(&arts.info) {
+        let wt = arts.weights.get(&layer)?;
+        ranks.insert(layer,
+                     crate::quant::rank_for_pct(wt.shape[0], wt.shape[1],
+                                                pct));
+    }
+    Ok(GraphInfo {
+        name: crate::experiments::quant_graph_name(rank_pct, a_group,
+                                                   weight_only, batch),
+        file: std::path::PathBuf::new(),
+        params: Vec::new(),
+        batch,
+        ranks,
+        rank_pct: pct,
+        a_group,
+        weight_only,
+        acts: Vec::new(),
+    })
+}
+
 /// Convenience: quantize and persist under
-/// `<model_dir>/quant/<method>_<graph>/`.
+/// `<model_dir>/quant/<method>_<graph>/` — now a thin composition of the
+/// split entry points ([`collect_stats_for_graph`] → [`quantize_model`]
+/// → [`save_quant_bundle`]).
 pub fn quantize_and_save(engine: &Engine, arts: &ModelArtifacts,
                          corpus: &Corpus, graph_name: &str, method: Method,
                          cfg: &QuantConfig, n_calib: usize)
                          -> Result<(TensorBundle, PipelineReport)> {
     let graph = arts.graph(graph_name)?.clone();
-    let a_bits = if graph.weight_only { None } else { cfg.a_bits };
-    let calib = collect_stats(engine, arts, corpus, n_calib, 1234,
-                              a_bits, graph.a_group)?;
+    let calib = collect_stats_for_graph(engine, arts, corpus, &graph, cfg,
+                                        n_calib)?;
     let (bundle, report) = quantize_model(arts, &calib, &graph, method, cfg)?;
-    let tag = format!("{}_{}", method.label(cfg).replace([' ', '(', ')'], ""),
-                      graph_name);
-    let out = arts.dir.join("quant").join(tag);
-    bundle.write(&out, &[
-        ("kind", Json::str("quant")),
-        ("graph", Json::str(graph_name)),
-        ("rank_pct", Json::num(graph.rank_pct)),
-    ])?;
+    save_quant_bundle(arts, &bundle, &graph, method, cfg)?;
     Ok((bundle, report))
 }
 
@@ -435,6 +491,40 @@ mod tests {
         for (flat, _) in &batches {
             assert_eq!(flat.len(), 4 * 16);
         }
+    }
+
+    #[test]
+    fn cell_graph_ranks_follow_the_weight_shapes() {
+        let info = ModelInfo {
+            name: "t".into(), d_model: 16, n_layers: 1, n_heads: 2,
+            d_ff: 32, n_experts: 0, seq_len: 4, vocab: 64, param_count: 0,
+        };
+        let mut weights = TensorBundle::default();
+        for layer in quantized_layer_names(&info) {
+            let (dout, din) = match layer.rsplit_once('.').unwrap().1 {
+                "wgate" | "wup" => (32usize, 16usize),
+                "wdown" => (16, 32),
+                _ => (16, 16),
+            };
+            weights.insert(&layer, vec![dout, din], vec![0.0; dout * din]);
+        }
+        let arts = ModelArtifacts {
+            dir: std::path::PathBuf::new(),
+            weights,
+            graphs: BTreeMap::new(),
+            info,
+        };
+        let g = cell_graph(&arts, 10, Some(32), false, 8).unwrap();
+        assert_eq!(g.name, "fwd_w4a4_r10_g32_b8");
+        assert_eq!(g.rank_pct, 0.10);
+        assert_eq!(g.ranks["blk0.wq"],
+                   crate::quant::rank_for_pct(16, 16, 0.10));
+        assert_eq!(g.ranks["blk0.wup"],
+                   crate::quant::rank_for_pct(32, 16, 0.10));
+        // rank 0 layout for the baseline cells
+        let g0 = cell_graph(&arts, 0, None, false, 8).unwrap();
+        assert!(g0.ranks.values().all(|&k| k == 0));
+        assert_eq!(g0.name, "fwd_w4a4_r0_b8");
     }
 
     #[test]

@@ -49,6 +49,26 @@ impl Default for QuantConfig {
     }
 }
 
+impl QuantConfig {
+    /// Config for one sweep grid cell: the swept axes (`w_bits` ×
+    /// activation `group` × `quantizer` × `rank_pct`) over the paper's
+    /// W4A4 defaults for everything the grid does not sweep.  Activation
+    /// bits stay at 4 — the grid varies *weight* width, so one shared
+    /// calibration pass per group value covers every cell (see
+    /// [`crate::sweep`]).
+    pub fn cell(w_bits: u32, a_group: Option<usize>, quantizer: Quantizer,
+                rank_pct: f64, iters: usize) -> QuantConfig {
+        QuantConfig {
+            w_bits,
+            a_bits: Some(4),
+            a_group,
+            quantizer,
+            rank_pct,
+            iters,
+        }
+    }
+}
+
 /// Rank giving ≈`pct` memory overhead for a [dout, din] matrix:
 /// k·(dout+din) = pct·dout·din.  Must match python `lrc.rank_for_pct`.
 pub fn rank_for_pct(dout: usize, din: usize, pct: f64) -> usize {
@@ -75,6 +95,18 @@ mod tests {
         assert_eq!(rank_for_pct(128, 256, 0.10), 9);
         assert_eq!(rank_for_pct(256, 128, 0.30), 26);
         assert_eq!(rank_for_pct(64, 64, 0.0), 0);
+    }
+
+    #[test]
+    fn cell_config_sweeps_only_the_grid_axes() {
+        let c = QuantConfig::cell(3, Some(32), Quantizer::Rtn, 0.30, 5);
+        assert_eq!(c.w_bits, 3);
+        assert_eq!(c.a_group, Some(32));
+        assert_eq!(c.quantizer, Quantizer::Rtn);
+        assert_eq!(c.rank_pct, 0.30);
+        assert_eq!(c.iters, 5);
+        // the un-swept axes keep the W4A4 defaults
+        assert_eq!(c.a_bits, QuantConfig::default().a_bits);
     }
 
     #[test]

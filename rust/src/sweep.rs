@@ -1,0 +1,926 @@
+//! The sweep subsystem: a declarative **method × w_bits × rank_pct ×
+//! group** grid driver over the PTQ pipeline — the paper's Table-3 /
+//! Fig.-3 tradeoff *surface* instead of one cell at a time.
+//!
+//! Design points (see also `tests/sweep_grid.rs`):
+//!
+//! * **Shared calibration.**  Stats collection dominates wall-clock, and
+//!   only the activation-quant config (the group axis) touches Σ — the
+//!   method / w_bits / rank axes never do.  The driver therefore takes
+//!   one [`CalibStats`] per distinct group value and reuses it across
+//!   every cell; with the default single-group axis that is literally
+//!   once per model.
+//! * **Canonical fold order.**  Cells are materialized in [`CellKey`]
+//!   `Ord` order and fanned out on the pool; results are folded back in
+//!   that same order, and every cell's math is bit-identical at any
+//!   thread count (the [`crate::par`] contract) — so the full grid
+//!   report is **byte-identical** at `LRC_THREADS ∈ {1, 4, …}`.
+//! * **Resume.**  Each finished cell is persisted as a keyed JSON
+//!   fragment under the cells dir and skipped (loaded, not recomputed)
+//!   on re-run; a resumed report is byte-identical to a fresh one.
+//! * **Built-in sanity assertions.**  The Fig.-3 quantizer ordering
+//!   (GPTQ ≤ RTN per cell), error non-increasing in rank_pct at fixed
+//!   bits, `size_bytes` strictly increasing in w_bits at fixed rank, and
+//!   QuaRot ≡ GPTQ-at-rank-0 as a free cross-check.
+//!
+//! The driver is engine-free: cells quantize against a synthesized
+//! rank layout ([`crate::pipeline::cell_graph`]), so the grid runs on
+//! real model artifacts *or* on the in-memory synthetic model
+//! ([`synthetic_artifacts`]) — which is what CI's `lrc sweep --fast`
+//! smoke uses, PJRT stub and all.  NLL is filled in per cell only when
+//! the caller supplies an evaluator (a real engine + a matching AOT
+//! graph); engine-free runs record it as `null`.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::linalg::Mat;
+use crate::lrc::LayerStats;
+use crate::par::Pool;
+use crate::pipeline::{activation_source, cell_graph, quantize_model_with_pool,
+                      quantized_layer_names, CalibStats, Method,
+                      PipelineReport};
+use crate::quant::{search_act_clip, QuantConfig, Quantizer};
+use crate::rng::Rng;
+use crate::runtime::{ModelArtifacts, ModelInfo, TensorBundle};
+use crate::util::{render_table, Json};
+
+/// Slack for the Fig.-3 quantizer ordering (GPTQ ≤ RTN): the alternation's
+/// UQ half-steps are approximate, so a strict `<=` can flicker by a few
+/// percent at positive rank (see `tests/quant_roundtrip.rs`).
+pub const FIG3_SLACK: f64 = 1.02;
+
+/// Slack for rank monotonicity: more correction rank never *materially*
+/// hurts, but GPTQ's approximate half-steps allow small inversions (the
+/// `higher_rank_never_worse` unit test uses the same bound).
+pub const RANK_SLACK: f64 = 1.05;
+
+/// The sweep's method axis.  `Rtn` / `Gptq` are the Fig.-3 quantizer
+/// ablation *inside* the LRC alternation (at rank 0 they degrade to the
+/// plain RTN / GPTQ baselines); `Quarot` is the paper's named rank-0
+/// baseline row (its rank axis collapses to the single rank-0 cell, and
+/// it is GPTQ-at-rank-0 by construction — the sanity pass asserts that
+/// equality as a free cross-check); `Svd` is the LQER-style weight-residual
+/// baseline; `Lrc` is the paper's method (same solver as `Gptq`, kept as
+/// the canonical table row).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SweepMethod {
+    Rtn,
+    Gptq,
+    Quarot,
+    Svd,
+    Lrc,
+}
+
+impl SweepMethod {
+    pub fn parse(s: &str) -> Result<SweepMethod> {
+        match s {
+            "rtn" => Ok(SweepMethod::Rtn),
+            "gptq" => Ok(SweepMethod::Gptq),
+            "quarot" => Ok(SweepMethod::Quarot),
+            "svd" => Ok(SweepMethod::Svd),
+            "lrc" => Ok(SweepMethod::Lrc),
+            _ => Err(anyhow!(
+                "unknown sweep method {s} (rtn|gptq|quarot|svd|lrc)")),
+        }
+    }
+
+    /// Stable lowercase name (cell keys, CLI round-trip).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SweepMethod::Rtn => "rtn",
+            SweepMethod::Gptq => "gptq",
+            SweepMethod::Quarot => "quarot",
+            SweepMethod::Svd => "svd",
+            SweepMethod::Lrc => "lrc",
+        }
+    }
+
+    /// Display label for the report tables.
+    pub fn label(&self) -> &'static str {
+        match self {
+            SweepMethod::Rtn => "RTN",
+            SweepMethod::Gptq => "GPTQ",
+            SweepMethod::Quarot => "QuaRot",
+            SweepMethod::Svd => "SVD",
+            SweepMethod::Lrc => "LRC",
+        }
+    }
+
+    /// The pipeline method a cell of this row runs.
+    pub fn pipeline_method(&self) -> Method {
+        match self {
+            SweepMethod::Quarot => Method::Quarot,
+            SweepMethod::Svd => Method::Svd,
+            _ => Method::Lrc,
+        }
+    }
+
+    /// The weight quantizer inside Update-Quant.
+    pub fn quantizer(&self) -> Quantizer {
+        match self {
+            SweepMethod::Rtn => Quantizer::Rtn,
+            _ => Quantizer::Gptq,
+        }
+    }
+
+    /// Whether the rank_pct axis applies (QuaRot always solves at rank 0,
+    /// so its rank axis collapses to the single rank-0 cell).
+    pub fn uses_rank(&self) -> bool {
+        !matches!(self, SweepMethod::Quarot)
+    }
+}
+
+/// The classic Tables-1/2 variant rows — QuaRot, SVD, LRC(1), LRC(5) —
+/// now derived from the grid's method axis instead of the old hardcoded
+/// 4-bit-only `standard_method_set` (retired in favor of this driver).
+pub fn table_method_rows() -> Vec<(SweepMethod, usize)> {
+    vec![(SweepMethod::Quarot, 1), (SweepMethod::Svd, 1),
+         (SweepMethod::Lrc, 1), (SweepMethod::Lrc, 5)]
+}
+
+/// One grid cell, identified by its swept coordinates.  The derived `Ord`
+/// is the canonical fold order of the whole subsystem: reports, fragment
+/// scans and pool fan-outs all iterate cells in this order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct CellKey {
+    pub method: SweepMethod,
+    pub w_bits: u32,
+    pub rank_pct: usize,
+    pub a_group: Option<usize>,
+}
+
+impl CellKey {
+    /// Stable cell id: fragment filename and report key,
+    /// e.g. `lrc_w4_r10_gnone`.
+    pub fn id(&self) -> String {
+        let g = match self.a_group {
+            None => "none".to_string(),
+            Some(g) => g.to_string(),
+        };
+        format!("{}_w{}_r{}_g{}", self.method.name(), self.w_bits,
+                self.rank_pct, g)
+    }
+
+    /// The per-cell [`QuantConfig`] (bits × group × quantizer × rank).
+    pub fn quant_config(&self, iters: usize) -> QuantConfig {
+        QuantConfig::cell(self.w_bits, self.a_group,
+                          self.method.quantizer(),
+                          self.rank_pct as f64 / 100.0, iters)
+    }
+}
+
+/// The declarative grid: every axis the driver sweeps.
+#[derive(Clone, Debug)]
+pub struct SweepAxes {
+    pub methods: Vec<SweepMethod>,
+    pub w_bits: Vec<u32>,
+    pub rank_pcts: Vec<usize>,
+    pub groups: Vec<Option<usize>>,
+    /// LRC alternating iterations (grid-level: every cell shares it)
+    pub iters: usize,
+}
+
+impl SweepAxes {
+    /// The full paper-shaped grid: RTN/QuaRot/SVD/LRC × {2,3,4,8} bits ×
+    /// {0,5,10,20,30}% rank, ungrouped.  (`gptq` stays available on the
+    /// method axis but duplicates `lrc` cell-for-cell, so the default
+    /// grid carries `rtn` as the Fig.-3 counterpart instead.)
+    pub fn full() -> SweepAxes {
+        SweepAxes {
+            methods: vec![SweepMethod::Rtn, SweepMethod::Quarot,
+                          SweepMethod::Svd, SweepMethod::Lrc],
+            w_bits: vec![2, 3, 4, 8],
+            rank_pcts: vec![0, 5, 10, 20, 30],
+            groups: vec![None],
+            iters: 1,
+        }
+    }
+
+    /// The CI smoke grid: 2 methods × {2,4} bits × {0,10}% — 8 cells,
+    /// small enough for a workflow job yet exercising every built-in
+    /// sanity assertion (quantizer ordering, rank monotonicity, size
+    /// growth).
+    pub fn fast() -> SweepAxes {
+        SweepAxes {
+            methods: vec![SweepMethod::Rtn, SweepMethod::Lrc],
+            w_bits: vec![2, 4],
+            rank_pcts: vec![0, 10],
+            groups: vec![None],
+            iters: 1,
+        }
+    }
+
+    /// Apply `--methods/--bits/--pcts/--groups/--iters` CSV overrides.
+    pub fn from_args(args: &crate::util::Args, fast: bool)
+                     -> Result<SweepAxes> {
+        let mut axes = if fast { SweepAxes::fast() } else { SweepAxes::full() };
+        if let Some(m) = args.get("methods") {
+            axes.methods = m.split(',')
+                .map(|s| SweepMethod::parse(s.trim()))
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(b) = args.get("bits") {
+            axes.w_bits = b.split(',')
+                .map(|s| s.trim().parse::<u32>()
+                     .map_err(|_| anyhow!("bad --bits entry {s:?}")))
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(p) = args.get("pcts") {
+            axes.rank_pcts = p.split(',')
+                .map(|s| s.trim().parse::<usize>()
+                     .map_err(|_| anyhow!("bad --pcts entry {s:?}")))
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(g) = args.get("groups") {
+            axes.groups = g.split(',')
+                .map(|s| match s.trim() {
+                    "none" | "0" => Ok(None),
+                    t => t.parse::<usize>().map(Some)
+                        .map_err(|_| anyhow!("bad --groups entry {t:?}")),
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        axes.iters = args.get_usize("iters", axes.iters);
+        axes.validate()?;
+        Ok(axes)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.methods.is_empty() || self.w_bits.is_empty()
+            || self.rank_pcts.is_empty() || self.groups.is_empty() {
+            bail!("sweep axes must all be non-empty");
+        }
+        for &b in &self.w_bits {
+            if !(2..=8).contains(&b) {
+                bail!("w_bits {b} out of the packable 2..=8 range");
+            }
+        }
+        for &p in &self.rank_pcts {
+            if p > 100 {
+                bail!("rank_pct {p} > 100%");
+            }
+        }
+        if self.iters == 0 {
+            bail!("--iters must be >= 1");
+        }
+        Ok(())
+    }
+
+    /// Materialize the cell list in canonical order.  Rank-free methods
+    /// collapse their rank axis to the single rank-0 cell, and duplicate
+    /// coordinates (from repeated axis values) fold away.
+    pub fn cells(&self) -> Vec<CellKey> {
+        let mut set = BTreeSet::new();
+        for &method in &self.methods {
+            for &w_bits in &self.w_bits {
+                for &pct in &self.rank_pcts {
+                    for &a_group in &self.groups {
+                        let rank_pct = if method.uses_rank() { pct } else { 0 };
+                        set.insert(CellKey { method, w_bits, rank_pct,
+                                             a_group });
+                    }
+                }
+            }
+        }
+        set.into_iter().collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// synthetic model + calibration (engine-free grid source)
+// ---------------------------------------------------------------------------
+
+/// Deterministic in-memory model artifacts shaped like a small dense
+/// transformer — the engine-free grid source CI's sweep smoke runs on.
+/// Weights are gaussian; see [`synthetic_calib`] for the activations.
+pub fn synthetic_artifacts(seed: u64) -> ModelArtifacts {
+    let (d_model, d_ff, n_layers) = (16usize, 32usize, 2usize);
+    let info = ModelInfo {
+        name: "synthetic".into(),
+        d_model,
+        n_layers,
+        n_heads: 2,
+        d_ff,
+        n_experts: 0,
+        seq_len: 8,
+        vocab: 64,
+        param_count: 0,
+    };
+    let mut rng = Rng::new(seed);
+    let mut weights = TensorBundle::default();
+    for layer in quantized_layer_names(&info) {
+        let (dout, din) = match layer.rsplit_once('.').unwrap().1 {
+            "wgate" | "wup" => (d_ff, d_model),
+            "wdown" => (d_model, d_ff),
+            _ => (d_model, d_model),
+        };
+        let data: Vec<f32> =
+            rng.normal_vec(dout * din).iter().map(|&v| v as f32).collect();
+        weights.insert(&layer, vec![dout, din], data);
+    }
+    // a non-quantized tensor so the fp16 size accounting is exercised
+    weights.insert("embed", vec![info.vocab, d_model],
+                   vec![0.01; info.vocab * d_model]);
+    ModelArtifacts {
+        dir: std::path::PathBuf::new(),
+        weights,
+        graphs: BTreeMap::new(),
+        info,
+    }
+}
+
+/// Correlated, outlier-bearing activations — the same regime as
+/// `TestModel::layer_problem` (rank-din/4 mixer + isotropic noise, every
+/// 16th channel scaled 8×), which is what makes the GPTQ-vs-RTN and
+/// rank-monotonicity sanity orderings hold the way the paper's do.
+fn synthetic_activations(seed: u64, din: usize, n: usize) -> Mat {
+    let mut rng = Rng::new(seed);
+    let base = Mat::random_normal(&mut rng, din / 4, n);
+    let mixer = Mat::random_normal(&mut rng, din, din / 4);
+    let mut x = mixer.matmul(&base)
+        .add(&Mat::random_normal(&mut rng, din, n).scale(0.1));
+    for i in (0..din).step_by(16) {
+        for j in 0..n {
+            x[(i, j)] *= 8.0;
+        }
+    }
+    x
+}
+
+/// Shared calibration for a synthetic grid run: one activation batch per
+/// activation source (generated once), folded into one [`CalibStats`] per
+/// distinct group value — mirroring how a real run shares engine-collected
+/// stats across cells.  Clips are searched per (source, group) exactly as
+/// `collect_stats` does on its first batch.
+pub fn synthetic_calib(arts: &ModelArtifacts, seed: u64,
+                       groups: &[Option<usize>])
+                       -> BTreeMap<Option<usize>, CalibStats> {
+    let sources: BTreeSet<String> = quantized_layer_names(&arts.info)
+        .iter().map(|l| activation_source(l)).collect();
+    let mut xs: BTreeMap<String, Mat> = BTreeMap::new();
+    for (i, src) in sources.iter().enumerate() {
+        let din = if src.ends_with("ffn_had") { arts.info.d_ff }
+                  else { arts.info.d_model };
+        xs.insert(src.clone(),
+                  synthetic_activations(seed.wrapping_add(i as u64 + 1),
+                                        din, 24 * din));
+    }
+    let gset: BTreeSet<Option<usize>> = groups.iter().copied().collect();
+    let mut out = BTreeMap::new();
+    for g in gset {
+        let mut stats = BTreeMap::new();
+        for (src, x) in &xs {
+            let clip = search_act_clip(x, 4, g);
+            let mut st = LayerStats::new(x.rows, Some(4), clip, g);
+            st.update(x);
+            stats.insert(src.clone(), st);
+        }
+        out.insert(g, CalibStats { stats, seconds: 0.0 });
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// cell records
+// ---------------------------------------------------------------------------
+
+/// Non-finite values would break both JSON and the sanity ordering —
+/// record them as null and let the sanity pass flag the cell.
+fn finite_num(v: f64) -> Json {
+    if v.is_finite() { Json::num(v) } else { Json::Null }
+}
+
+/// The machine record for one finished cell — the unit of the report's
+/// `cells` array, of the resume fragments and of the CI artifact schema
+/// (`lrc-sweep-v1`).  Everything in it is deterministic; timings stay out
+/// (they would break the byte-identity contract).
+pub fn cell_record(key: &CellKey, run_tag: &str, iters: usize,
+                   report: &PipelineReport, nll: Option<f64>) -> Json {
+    let rank_used = report.layers.iter().map(|l| l.rank).max().unwrap_or(0);
+    let objective: f64 = report.layers.iter().map(|l| l.objective).sum();
+    Json::obj(vec![
+        ("key", Json::str(key.id())),
+        ("run", Json::str(run_tag)),
+        ("method", Json::str(key.method.name())),
+        ("w_bits", Json::num(key.w_bits as f64)),
+        ("rank_pct", Json::num(key.rank_pct as f64)),
+        ("a_group", match key.a_group {
+            None => Json::Null,
+            Some(g) => Json::num(g as f64),
+        }),
+        ("iters", Json::num(iters as f64)),
+        ("rank_used", Json::num(rank_used as f64)),
+        ("mean_rel_error", finite_num(report.mean_rel_error())),
+        ("objective", finite_num(objective)),
+        ("nll", match nll {
+            None => Json::Null,
+            Some(v) => finite_num(v),
+        }),
+        ("size_bytes", Json::num(report.size_bytes() as f64)),
+        ("packed_bytes", Json::num(report.packed_bytes as f64)),
+        ("lowrank_params", Json::num(report.lowrank_params as f64)),
+        ("fp_params", Json::num(report.fp_params as f64)),
+    ])
+}
+
+/// A parsed view of a cell record (fragment or fresh — same shape).
+struct Rec {
+    key: String,
+    method: SweepMethod,
+    w_bits: u32,
+    rank_pct: usize,
+    a_group: Option<usize>,
+    rel: Option<f64>,
+    nll: Option<f64>,
+    rank_used: usize,
+    size_bytes: usize,
+}
+
+fn parse_rec(j: &Json) -> Result<Rec> {
+    let key = j.get("key").and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("cell record missing key"))?.to_string();
+    let method = SweepMethod::parse(
+        j.get("method").and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("cell {key} missing method"))?)?;
+    let num = |f: &str| -> Result<f64> {
+        j.get(f).and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow!("cell {key} missing {f}"))
+    };
+    let w_bits = num("w_bits")? as u32;
+    let rank_pct = num("rank_pct")? as usize;
+    let rank_used = num("rank_used")? as usize;
+    let size_bytes = num("size_bytes")? as usize;
+    Ok(Rec {
+        method,
+        w_bits,
+        rank_pct,
+        a_group: j.get("a_group").and_then(|v| v.as_usize()),
+        rel: j.get("mean_rel_error").and_then(|v| v.as_f64()),
+        nll: j.get("nll").and_then(|v| v.as_f64()),
+        rank_used,
+        size_bytes,
+        key,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// the grid driver
+// ---------------------------------------------------------------------------
+
+/// Everything one grid run produces.
+pub struct SweepOutcome {
+    /// per-cell records in canonical order (the report's `cells` array)
+    pub records: Vec<Json>,
+    /// the machine report (`lrc-sweep-v1`), byte-identical across thread
+    /// counts and across fresh-vs-resumed runs
+    pub report_json: String,
+    /// the aligned Table-3-style text table
+    pub markdown: String,
+    pub computed: usize,
+    pub resumed: usize,
+    /// built-in sanity assertion failures (empty = all hold)
+    pub violations: Vec<String>,
+}
+
+/// Load a resume fragment if it exists, matches the cell id, was produced
+/// at the same iteration count (a changed `--iters` invalidates the whole
+/// fragment set — those cells really are different work) and carries the
+/// same run identity (a different model / synthetic seed / calibration
+/// setup writes a different `run` tag, so its fragments are never
+/// silently reused).
+fn load_fragment(dir: &Path, key: &CellKey, iters: usize, run_tag: &str)
+                 -> Option<Json> {
+    let text = std::fs::read_to_string(dir.join(format!("{}.json", key.id())))
+        .ok()?;
+    let j = Json::parse(&text).ok()?;
+    // a fragment that fails full record validation (half-written file,
+    // older schema) is recomputed, never trusted
+    parse_rec(&j).ok()?;
+    let id_ok = j.get("key").and_then(|v| v.as_str())
+        == Some(key.id().as_str());
+    let iters_ok = j.get("iters").and_then(|v| v.as_usize()) == Some(iters);
+    let run_ok = j.get("run").and_then(|v| v.as_str()) == Some(run_tag);
+    (id_ok && iters_ok && run_ok).then_some(j)
+}
+
+/// Quantize one cell against the shared stats — pure except for reading
+/// the shared calibration, so the pool can fan cells out freely.  When
+/// the record is already final (no NLL evaluator pending), the fragment
+/// is persisted here, from the worker — a killed grid run resumes from
+/// every cell that finished, not from nothing.
+fn run_cell(arts: &ModelArtifacts, calib: &CalibStats, key: &CellKey,
+            run_tag: &str, iters: usize, pool: &Pool, keep_bundle: bool,
+            frag_dir: Option<&Path>)
+            -> Result<(Json, Option<TensorBundle>)> {
+    let graph = cell_graph(arts, key.rank_pct, key.a_group, false, 8)?;
+    let cfg = key.quant_config(iters);
+    let (bundle, report) = quantize_model_with_pool(
+        arts, calib, &graph, key.method.pipeline_method(), &cfg, pool)?;
+    let record = cell_record(key, run_tag, iters, &report, None);
+    if !keep_bundle {
+        if let Some(dir) = frag_dir {
+            std::fs::write(dir.join(format!("{}.json", key.id())),
+                           record.to_string())?;
+        }
+    }
+    Ok((record, keep_bundle.then_some(bundle)))
+}
+
+/// Run the grid: fan missing cells out on `pool` (finished cells are
+/// loaded from their fragments when `resume`), fold in canonical order,
+/// assemble report + markdown, and evaluate the built-in sanity
+/// assertions.
+///
+/// `run_tag` is the run's identity (model + seed / calibration setup) —
+/// it is stamped into every fragment and only fragments carrying the same
+/// tag are resumed, so pointing two different runs at one cells dir can
+/// never silently mix their numbers.  `calib` maps each group-axis value
+/// to the [`CalibStats`] shared by every cell of that group.  `nll_eval`
+/// (optional, serial — PJRT sessions are not Sync) fills the per-cell NLL
+/// from a real engine; engine-free runs pass `None` and record `null`.
+///
+/// Fragment persistence is incremental in the engine-free case (each
+/// worker writes its cell as it finishes — a killed run resumes from
+/// every finished cell).  With an evaluator, fragments are written at the
+/// serial fold instead (after NLL lands), and every computed cell's
+/// bundle is held until its fold slot — prefer grid subsets over one
+/// giant grid when memory matters there.
+#[allow(clippy::too_many_arguments)]
+pub fn run_grid(arts: &ModelArtifacts,
+                calib: &BTreeMap<Option<usize>, CalibStats>,
+                axes: &SweepAxes, run_tag: &str, cells_dir: Option<&Path>,
+                resume: bool, pool: &Pool,
+                mut nll_eval: Option<&mut dyn FnMut(&CellKey, &TensorBundle)
+                                       -> Result<Option<f64>>>)
+                -> Result<SweepOutcome> {
+    axes.validate()?;
+    let cells = axes.cells();
+    for c in &cells {
+        if !calib.contains_key(&c.a_group) {
+            bail!("no shared CalibStats for group {:?} (cell {})",
+                  c.a_group, c.id());
+        }
+    }
+    if let Some(dir) = cells_dir {
+        std::fs::create_dir_all(dir)?;
+    }
+
+    // resume: adopt valid fragments, in canonical order
+    let existing: Vec<Option<Json>> = cells.iter()
+        .map(|c| match (resume, cells_dir) {
+            (true, Some(dir)) => load_fragment(dir, c, axes.iters, run_tag),
+            _ => None,
+        })
+        .collect();
+
+    // fan the missing cells out; canonical index order in, index order out
+    let keep_bundle = nll_eval.is_some();
+    let fresh: Vec<Option<Result<(Json, Option<TensorBundle>)>>> =
+        pool.map(cells.len(), |i| {
+            if existing[i].is_some() {
+                return None;
+            }
+            Some(run_cell(arts, &calib[&cells[i].a_group], &cells[i],
+                          run_tag, axes.iters, pool, keep_bundle, cells_dir))
+        });
+
+    // serial fold: NLL evaluation, evaluator-path fragment persistence,
+    // record assembly
+    let mut records = Vec::with_capacity(cells.len());
+    let (mut computed, mut resumed) = (0usize, 0usize);
+    for ((cell, prior), fresh) in cells.iter().zip(existing).zip(fresh) {
+        let record = match (prior, fresh) {
+            (Some(j), _) => {
+                resumed += 1;
+                j
+            }
+            (None, Some(res)) => {
+                let (mut record, bundle) = res?;
+                if let (Some(eval), Some(b)) = (nll_eval.as_mut(), &bundle) {
+                    if let Some(nll) = eval(cell, b)? {
+                        if let Json::Obj(m) = &mut record {
+                            m.insert("nll".into(), finite_num(nll));
+                        }
+                    }
+                    if let Some(dir) = cells_dir {
+                        std::fs::write(dir.join(format!("{}.json",
+                                                        cell.id())),
+                                       record.to_string())?;
+                    }
+                }
+                computed += 1;
+                record
+            }
+            (None, None) => unreachable!("cell neither resumed nor computed"),
+        };
+        records.push(record);
+    }
+
+    let report_json = Json::obj(vec![
+        ("schema", Json::str("lrc-sweep-v1")),
+        ("model", Json::str(arts.info.name.clone())),
+        ("run", Json::str(run_tag)),
+        ("iters", Json::num(axes.iters as f64)),
+        ("cells", Json::Arr(records.clone())),
+    ]).to_string();
+    let markdown = markdown_table(&records)?;
+    let violations = sanity_violations(&records)?;
+    Ok(SweepOutcome { records, report_json, markdown, computed, resumed,
+                      violations })
+}
+
+/// The aligned Table-3-style view of the grid.
+fn markdown_table(records: &[Json]) -> Result<String> {
+    let headers = ["Cell", "Method", "Bits", "Rank%", "Group", "k",
+                   "RelErr", "NLL", "Size (B)"];
+    let mut rows = Vec::with_capacity(records.len());
+    for j in records {
+        let r = parse_rec(j)?;
+        rows.push(vec![
+            r.key.clone(),
+            r.method.label().to_string(),
+            r.w_bits.to_string(),
+            r.rank_pct.to_string(),
+            r.a_group.map_or("-".into(), |g| g.to_string()),
+            r.rank_used.to_string(),
+            r.rel.map_or("-".into(), |v| format!("{v:.6}")),
+            r.nll.map_or("-".into(), |v| format!("{v:.4}")),
+            r.size_bytes.to_string(),
+        ]);
+    }
+    Ok(render_table(&headers, &rows))
+}
+
+/// Evaluate the built-in sanity assertions over a full record set; every
+/// returned string is one violated ordering.  Kept separate from
+/// [`run_grid`] so the CLI can persist the report *before* failing on a
+/// violation (CI still gets the artifact to debug with).
+pub fn sanity_violations(records: &[Json]) -> Result<Vec<String>> {
+    let recs: Vec<Rec> = records.iter().map(parse_rec)
+        .collect::<Result<Vec<_>>>()?;
+    let mut out = Vec::new();
+
+    for r in &recs {
+        if r.rel.is_none() {
+            out.push(format!("{}: non-finite mean_rel_error", r.key));
+        }
+    }
+
+    // Fig. 3 quantizer ordering: GPTQ-quantizer cells (gptq / lrc /
+    // quarot rows) never do materially worse than the RTN row at the
+    // same (bits, rank, group) coordinate.
+    for rtn in recs.iter().filter(|r| r.method == SweepMethod::Rtn) {
+        for g in recs.iter().filter(|g| {
+            g.method.quantizer() == Quantizer::Gptq
+                && g.w_bits == rtn.w_bits && g.rank_pct == rtn.rank_pct
+                && g.a_group == rtn.a_group
+        }) {
+            if let (Some(gr), Some(rr)) = (g.rel, rtn.rel) {
+                if gr > rr * FIG3_SLACK {
+                    out.push(format!(
+                        "{}: gptq rel_error {gr:.6} > rtn {rr:.6} × {FIG3_SLACK}",
+                        g.key));
+                }
+            }
+        }
+    }
+
+    // error non-increasing in rank_pct at fixed (method, bits, group)
+    let mut by_rank: BTreeMap<(SweepMethod, u32, Option<usize>),
+                              Vec<(usize, String, Option<f64>)>> =
+        BTreeMap::new();
+    for r in recs.iter().filter(|r| r.method.uses_rank()) {
+        by_rank.entry((r.method, r.w_bits, r.a_group)).or_default()
+            .push((r.rank_pct, r.key.clone(), r.rel));
+    }
+    for series in by_rank.values_mut() {
+        series.sort_by_key(|(p, _, _)| *p);
+        for w in series.windows(2) {
+            if let (Some(lo), Some(hi)) = (w[1].2, w[0].2) {
+                if lo > hi * RANK_SLACK {
+                    out.push(format!(
+                        "{}: rel_error {lo:.6} at rank {}% > {hi:.6} at \
+                         rank {}% × {RANK_SLACK}",
+                        w[1].1, w[1].0, w[0].0));
+                }
+            }
+        }
+    }
+
+    // size_bytes strictly increasing in w_bits at fixed (method, rank,
+    // group)
+    let mut by_bits: BTreeMap<(SweepMethod, usize, Option<usize>),
+                              Vec<(u32, String, usize)>> = BTreeMap::new();
+    for r in &recs {
+        by_bits.entry((r.method, r.rank_pct, r.a_group)).or_default()
+            .push((r.w_bits, r.key.clone(), r.size_bytes));
+    }
+    for series in by_bits.values_mut() {
+        series.sort_by_key(|(b, _, _)| *b);
+        for w in series.windows(2) {
+            if w[1].2 <= w[0].2 {
+                out.push(format!(
+                    "{}: size {} B at {} bits not > {} B at {} bits",
+                    w[1].1, w[1].2, w[1].0, w[0].2, w[0].0));
+            }
+        }
+    }
+
+    // free cross-check: QuaRot ≡ GPTQ-quantizer at rank 0, bit for bit
+    for q in recs.iter().filter(|r| r.method == SweepMethod::Quarot) {
+        for g in recs.iter().filter(|g| {
+            matches!(g.method, SweepMethod::Gptq | SweepMethod::Lrc)
+                && g.rank_pct == 0 && g.w_bits == q.w_bits
+                && g.a_group == q.a_group
+        }) {
+            if g.rel != q.rel || g.size_bytes != q.size_bytes {
+                out.push(format!(
+                    "{} and {} must be identical (QuaRot is GPTQ at rank 0)",
+                    q.key, g.key));
+            }
+        }
+    }
+
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_axis_roundtrip_and_mapping() {
+        for m in [SweepMethod::Rtn, SweepMethod::Gptq, SweepMethod::Quarot,
+                  SweepMethod::Svd, SweepMethod::Lrc] {
+            assert_eq!(SweepMethod::parse(m.name()).unwrap(), m);
+        }
+        assert!(SweepMethod::parse("fp16").is_err());
+        assert_eq!(SweepMethod::Rtn.quantizer(), Quantizer::Rtn);
+        assert_eq!(SweepMethod::Lrc.quantizer(), Quantizer::Gptq);
+        assert_eq!(SweepMethod::Quarot.pipeline_method(), Method::Quarot);
+        assert!(!SweepMethod::Quarot.uses_rank());
+        assert!(SweepMethod::Svd.uses_rank());
+    }
+
+    #[test]
+    fn cells_are_canonical_deduped_and_rank_collapsed() {
+        let axes = SweepAxes {
+            methods: vec![SweepMethod::Lrc, SweepMethod::Quarot,
+                          SweepMethod::Lrc],
+            w_bits: vec![4, 2],
+            rank_pcts: vec![10, 0],
+            groups: vec![None],
+            iters: 1,
+        };
+        let cells = axes.cells();
+        // quarot collapses its rank axis: 2 bits × 1 cell; lrc: 2 × 2
+        assert_eq!(cells.len(), 2 + 4);
+        // canonical order: method, then bits, then pct
+        let ids: Vec<String> = cells.iter().map(|c| c.id()).collect();
+        assert_eq!(ids, vec![
+            "quarot_w2_r0_gnone", "quarot_w4_r0_gnone",
+            "lrc_w2_r0_gnone", "lrc_w2_r10_gnone",
+            "lrc_w4_r0_gnone", "lrc_w4_r10_gnone",
+        ]);
+        let mut sorted = cells.clone();
+        sorted.sort();
+        assert_eq!(sorted, cells);
+    }
+
+    #[test]
+    fn fast_axes_are_the_ci_smoke_grid() {
+        let axes = SweepAxes::fast();
+        assert_eq!(axes.methods.len(), 2);
+        assert_eq!(axes.w_bits, vec![2, 4]);
+        assert_eq!(axes.rank_pcts, vec![0, 10]);
+        assert_eq!(axes.cells().len(), 8);
+        axes.validate().unwrap();
+    }
+
+    #[test]
+    fn axes_validation_rejects_bad_grids() {
+        let mut axes = SweepAxes::full();
+        axes.w_bits = vec![9];
+        assert!(axes.validate().is_err());
+        let mut axes = SweepAxes::full();
+        axes.methods.clear();
+        assert!(axes.validate().is_err());
+        let mut axes = SweepAxes::full();
+        axes.iters = 0;
+        assert!(axes.validate().is_err());
+    }
+
+    #[test]
+    fn from_args_parses_csv_axes() {
+        let args = crate::util::Args::parse(
+            ["--methods", "rtn,lrc", "--bits", "3,8", "--pcts", "0,30",
+             "--groups", "none,32", "--iters", "2"]
+                .iter().map(|s| s.to_string()));
+        let axes = SweepAxes::from_args(&args, false).unwrap();
+        assert_eq!(axes.methods, vec![SweepMethod::Rtn, SweepMethod::Lrc]);
+        assert_eq!(axes.w_bits, vec![3, 8]);
+        assert_eq!(axes.rank_pcts, vec![0, 30]);
+        assert_eq!(axes.groups, vec![None, Some(32)]);
+        assert_eq!(axes.iters, 2);
+        let bad = crate::util::Args::parse(
+            ["--methods", "fp16"].iter().map(|s| s.to_string()));
+        assert!(SweepAxes::from_args(&bad, false).is_err());
+    }
+
+    #[test]
+    fn cell_key_id_and_config() {
+        let key = CellKey { method: SweepMethod::Svd, w_bits: 3,
+                            rank_pct: 20, a_group: Some(32) };
+        assert_eq!(key.id(), "svd_w3_r20_g32");
+        let cfg = key.quant_config(2);
+        assert_eq!(cfg.w_bits, 3);
+        assert_eq!(cfg.a_group, Some(32));
+        assert_eq!(cfg.rank_pct, 0.20);
+        assert_eq!(cfg.iters, 2);
+        assert_eq!(cfg.quantizer, Quantizer::Gptq);
+    }
+
+    #[test]
+    fn sanity_pass_flags_each_ordering() {
+        let mk = |key: &str, method: &str, bits: f64, pct: f64, rel: f64,
+                  size: f64| {
+            Json::obj(vec![
+                ("key", Json::str(key)),
+                ("method", Json::str(method)),
+                ("w_bits", Json::num(bits)),
+                ("rank_pct", Json::num(pct)),
+                ("a_group", Json::Null),
+                ("iters", Json::num(1.0)),
+                ("rank_used", Json::num(1.0)),
+                ("mean_rel_error", Json::num(rel)),
+                ("objective", Json::num(rel)),
+                ("nll", Json::Null),
+                ("size_bytes", Json::num(size)),
+                ("packed_bytes", Json::num(size)),
+                ("lowrank_params", Json::num(0.0)),
+                ("fp_params", Json::num(0.0)),
+            ])
+        };
+        // a healthy pair of series: no violations
+        let good = vec![
+            mk("rtn_w2_r0_gnone", "rtn", 2.0, 0.0, 0.30, 100.0),
+            mk("rtn_w2_r10_gnone", "rtn", 2.0, 10.0, 0.20, 120.0),
+            mk("lrc_w2_r0_gnone", "lrc", 2.0, 0.0, 0.25, 100.0),
+            mk("lrc_w2_r10_gnone", "lrc", 2.0, 10.0, 0.10, 120.0),
+            mk("lrc_w4_r0_gnone", "lrc", 4.0, 0.0, 0.05, 150.0),
+            mk("lrc_w4_r10_gnone", "lrc", 4.0, 10.0, 0.02, 170.0),
+        ];
+        assert!(sanity_violations(&good).unwrap().is_empty());
+
+        // gptq (here: lrc row) worse than rtn at the same coordinate
+        let fig3 = vec![
+            mk("rtn_w4_r0_gnone", "rtn", 4.0, 0.0, 0.10, 100.0),
+            mk("lrc_w4_r0_gnone", "lrc", 4.0, 0.0, 0.20, 100.0),
+        ];
+        let v = sanity_violations(&fig3).unwrap();
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("gptq"), "{v:?}");
+
+        // error increasing in rank
+        let rank = vec![
+            mk("lrc_w4_r0_gnone", "lrc", 4.0, 0.0, 0.10, 100.0),
+            mk("lrc_w4_r10_gnone", "lrc", 4.0, 10.0, 0.50, 120.0),
+        ];
+        let v = sanity_violations(&rank).unwrap();
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("rank"), "{v:?}");
+
+        // size not increasing in bits
+        let size = vec![
+            mk("lrc_w2_r0_gnone", "lrc", 2.0, 0.0, 0.30, 100.0),
+            mk("lrc_w4_r0_gnone", "lrc", 4.0, 0.0, 0.10, 100.0),
+        ];
+        let v = sanity_violations(&size).unwrap();
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("size"), "{v:?}");
+
+        // quarot must equal the gptq-quantizer rank-0 row exactly
+        let cross = vec![
+            mk("quarot_w4_r0_gnone", "quarot", 4.0, 0.0, 0.10, 100.0),
+            mk("lrc_w4_r0_gnone", "lrc", 4.0, 0.0, 0.11, 100.0),
+        ];
+        let v = sanity_violations(&cross).unwrap();
+        assert!(v.iter().any(|s| s.contains("identical")), "{v:?}");
+    }
+
+    #[test]
+    fn table_rows_match_the_papers_variant_set() {
+        let rows = table_method_rows();
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[0], (SweepMethod::Quarot, 1));
+        assert_eq!(rows[3], (SweepMethod::Lrc, 5));
+        // every row maps onto a runnable pipeline method
+        for (m, iters) in rows {
+            assert!(iters >= 1);
+            let _ = m.pipeline_method();
+        }
+    }
+}

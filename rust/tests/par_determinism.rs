@@ -84,6 +84,38 @@ fn synthetic_model() -> (ModelArtifacts, lrc::pipeline::CalibStats, GraphInfo) {
 }
 
 #[test]
+fn small_epochs_dispatch_to_a_worker_subset_and_stay_correct() {
+    // regression (ROADMAP open item): epochs used to wake every parked
+    // worker even when the item count was smaller than the pool — the
+    // board now hands out min(items - 1, workers) claims per epoch.  The
+    // contract under test: (1) a small epoch runs on at most `items`
+    // threads, (2) interleaving small and full-width epochs on one board
+    // never leaks stale claims (every epoch still computes exactly its
+    // own items, in order).
+    use std::collections::BTreeSet;
+    use std::sync::Mutex;
+    let pool = Pool::new(8);
+    for items in [2usize, 3, 6] {
+        let tids = Mutex::new(BTreeSet::new());
+        let out = pool.map(items, |i| {
+            tids.lock().unwrap().insert(std::thread::current().id());
+            i + 100
+        });
+        assert_eq!(out, (100..100 + items).collect::<Vec<_>>());
+        let participants = tids.lock().unwrap().len();
+        assert!(participants <= items,
+                "items={items}: {participants} threads participated");
+    }
+    for round in 0..100 {
+        assert_eq!(pool.map(2, |i| i + round), vec![round, round + 1],
+                   "small epoch, round {round}");
+        assert_eq!(pool.map(32, |i| i * i),
+                   (0..32).map(|i| i * i).collect::<Vec<_>>(),
+                   "full-width epoch, round {round}");
+    }
+}
+
+#[test]
 fn quantize_model_bit_identical_across_thread_counts() {
     let (arts, calib, graph) = synthetic_model();
     let cfg = QuantConfig::default();
