@@ -54,9 +54,11 @@ fn main() {
     report("LRC (5 iters, 10%)", lrc(&w, &st, k, &cfg5).unwrap().objective);
 
     // --- the oracle: perfect weight quantizer + closed-form U,V ----------
+    // (regularized() hands Σxy out as a borrow; Σx/Σy are
+    // workspace-recycled copies)
     let (sx, sy, sxy) = st.regularized();
-    let (u, v) = init_lr(&w, &sx, &sy, &sxy, k).unwrap();
-    let wt = oracle_wtilde(&w, &u, &v, &sy, &sxy).unwrap();
+    let (u, v) = init_lr(&w, &sx, &sy, sxy, k).unwrap();
+    let wt = oracle_wtilde(&w, &u, &v, &sy, sxy).unwrap();
     report("oracle (Prop. 3.4)", qlr_objective(&w, &wt, &u, &v, &st));
 
     // --- and the 30% budget closes the gap (paper §4.2) ------------------

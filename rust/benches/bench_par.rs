@@ -5,6 +5,10 @@
 //!   * blocked-k kernel vs the naive triple loop (512×512, serial),
 //!   * scalar vs SIMD micro-kernel backends (512×512 GEMM and the
 //!     LRC-shaped Σ workloads at d ≤ 512) — same bits, fewer cycles,
+//!   * the opt-in FMA fast path vs the default mul-then-add program
+//!     (asserted `==` against the fused lockstep reference first), and
+//!     A-panel packing on a large-k GEMM (bit-identical, locality only)
+//!     — every kernel row also reports achieved GFLOP/s,
 //!   * persistent pool vs per-call scoped spawning on the
 //!     `eigh_jacobi_par` round workload (the fine-grained dispatch the
 //!     persistent board exists for),
@@ -25,7 +29,7 @@
 //! `bench::write_json`) — CI stamps the file with the commit SHA and
 //! uploads it as a workflow artifact so runs diff against each other.
 
-use lrc::bench::{bench, bench_report, record, section, speedup};
+use lrc::bench::{bench, bench_report, gflops, record, section, speedup};
 use lrc::linalg::{eigh_jacobi_par, simd, Mat};
 use lrc::lrc::{lrc, LayerStats};
 use lrc::par::Pool;
@@ -48,19 +52,25 @@ fn bench_kernels(samples: usize, d: usize) {
     let a = Mat::random_normal(&mut rng, d, d);
     let b = Mat::random_normal(&mut rng, d, d);
 
+    let gemm_flops = 2.0 * (d * d * d) as f64;
+    // gram: d(d+1)/2 upper entries × 2d flops (mirror is copies)
+    let gram_flops = (d * (d + 1) * d) as f64;
+
     section(&format!("par_matmul_nt {d}x{d} (speedup vs 1 thread)"));
     let serial = Pool::serial();
     let base = bench(1, samples, || {
         let _ = a.par_matmul_nt(&b, &serial);
     });
-    println!("{:<40} {:>12}", "threads=1", base.pm());
+    println!("{:<40} {:>12} {:>8.2} GF/s", "threads=1", base.pm(),
+             gflops(gemm_flops, &base));
     record("threads=1", &base);
     for t in thread_counts().into_iter().skip(1) {
         let pool = Pool::new(t);
         let s = bench(1, samples, || {
             let _ = a.par_matmul_nt(&b, &pool);
         });
-        println!("{:<40} {:>12}  → {:.2}x", format!("threads={t}"), s.pm(),
+        println!("{:<40} {:>12} {:>8.2} GF/s  → {:.2}x",
+                 format!("threads={t}"), s.pm(), gflops(gemm_flops, &s),
                  speedup(&base, &s));
         record(&format!("threads={t}"), &s);
     }
@@ -69,14 +79,16 @@ fn bench_kernels(samples: usize, d: usize) {
     let base = bench(1, samples, || {
         let _ = a.par_gram_t(&serial);
     });
-    println!("{:<40} {:>12}", "threads=1", base.pm());
+    println!("{:<40} {:>12} {:>8.2} GF/s", "threads=1", base.pm(),
+             gflops(gram_flops, &base));
     record("threads=1", &base);
     for t in thread_counts().into_iter().skip(1) {
         let pool = Pool::new(t);
         let s = bench(1, samples, || {
             let _ = a.par_gram_t(&pool);
         });
-        println!("{:<40} {:>12}  → {:.2}x", format!("threads={t}"), s.pm(),
+        println!("{:<40} {:>12} {:>8.2} GF/s  → {:.2}x",
+                 format!("threads={t}"), s.pm(), gflops(gram_flops, &s),
                  speedup(&base, &s));
         record(&format!("threads={t}"), &s);
     }
@@ -105,26 +117,30 @@ fn bench_blocked_vs_naive(samples: usize, d: usize) {
     let a = Mat::random_normal(&mut rng, d, d);
     let b = Mat::random_normal(&mut rng, d, d);
 
+    let flops = 2.0 * (d * d * d) as f64;
     section(&format!(
         "blocked-k GEMM vs naive triple loop ({d}x{d}, serial)"));
     let naive = bench(0, samples, || {
         let _ = naive_matmul_nt(&a, &b);
     });
-    println!("{:<40} {:>12}", "naive triple loop", naive.pm());
+    println!("{:<40} {:>12} {:>8.2} GF/s", "naive triple loop", naive.pm(),
+             gflops(flops, &naive));
     record("naive triple loop", &naive);
     let serial = Pool::serial();
     let blocked = bench(0, samples, || {
         let _ = a.par_matmul_nt(&b, &serial);
     });
-    println!("{:<40} {:>12}  → {:.2}x  (target > 1x)",
+    println!("{:<40} {:>12} {:>8.2} GF/s  → {:.2}x  (target > 1x)",
              "blocked-k register-tiled", blocked.pm(),
-             speedup(&naive, &blocked));
+             gflops(flops, &blocked), speedup(&naive, &blocked));
     record("blocked-k register-tiled", &blocked);
     let auto = bench(0, samples, || {
         let _ = a.matmul_nt(&b);
     });
-    println!("{:<40} {:>12}  → {:.2}x  (auto-par on the global pool)",
-             "matmul_nt (auto)", auto.pm(), speedup(&naive, &auto));
+    println!("{:<40} {:>12} {:>8.2} GF/s  → {:.2}x  (auto-par on the \
+              global pool)",
+             "matmul_nt (auto)", auto.pm(), gflops(flops, &auto),
+             speedup(&naive, &auto));
     record("matmul_nt (auto)", &auto);
 }
 
@@ -146,6 +162,7 @@ fn bench_simd_backends(samples: usize) {
     let mut rng = Rng::new(9);
     for (label, m, k, n) in [("GEMM 512x512", 512usize, 512usize, 512usize),
                              ("LRC Σxy 384x1536·384ᵀ", 384, 1536, 384)] {
+        let flops = 2.0 * (m * k * n) as f64;
         let a = Mat::random_normal(&mut rng, m, k);
         let bt = Mat::random_normal(&mut rng, n, k);
         simd::set_backend(Some(scalar)).unwrap();
@@ -153,7 +170,8 @@ fn bench_simd_backends(samples: usize) {
         let base = bench(1, samples, || {
             let _ = a.par_matmul_nt(&bt, &serial);
         });
-        println!("{:<40} {:>12}", format!("{label} scalar"), base.pm());
+        println!("{:<40} {:>12} {:>8.2} GF/s", format!("{label} scalar"),
+                 base.pm(), gflops(flops, &base));
         record(&format!("{label} scalar"), &base);
         for be in simd::available_backends() {
             if be == scalar {
@@ -165,9 +183,9 @@ fn bench_simd_backends(samples: usize) {
             let s = bench(1, samples, || {
                 let _ = a.par_matmul_nt(&bt, &serial);
             });
-            println!("{:<40} {:>12}  → {:.2}x{}",
+            println!("{:<40} {:>12} {:>8.2} GF/s  → {:.2}x{}",
                      format!("{label} {}", be.name()), s.pm(),
-                     speedup(&base, &s),
+                     gflops(flops, &s), speedup(&base, &s),
                      if be == simd::detect() { "  (target > 1x)" } else { "" });
             record(&format!("{label} {}", be.name()), &s);
         }
@@ -199,6 +217,88 @@ fn bench_simd_backends(samples: usize) {
         record(&format!("LRC Σx gram 384x1536 {}", be.name()), &s);
     }
     simd::set_backend(None).unwrap();
+}
+
+/// The opt-in FMA fast path vs the default mul-then-add program on the
+/// 512×512 GEMM.  The FMA result is first asserted `==` against its own
+/// lockstep fused naive reference (the FMA-mode oracle contract in bench
+/// form), then timed; both legs are recorded for the bench-trend gate.
+fn bench_fma_gemm(samples: usize) {
+    let d = 512usize;
+    let flops = 2.0 * (d * d * d) as f64;
+    let mut rng = Rng::new(13);
+    let a = Mat::random_normal(&mut rng, d, d);
+    let bt = Mat::random_normal(&mut rng, d, d);
+    let serial = Pool::serial();
+
+    section(&format!(
+        "FMA opt-in (--fma / LRC_FMA) vs default mul-then-add GEMM \
+         {d}x{d} (serial)"));
+    simd::set_fma(Some(false));
+    let base = bench(1, samples, || {
+        let _ = a.par_matmul_nt(&bt, &serial);
+    });
+    println!("{:<40} {:>12} {:>8.2} GF/s",
+             "fma off (canonical mul+add)", base.pm(),
+             gflops(flops, &base));
+    record("fma off (canonical mul+add)", &base);
+
+    simd::set_fma(Some(true));
+    // lockstep-reference check before timing: fused naive triple loop
+    let mut reference = Mat::zeros(d, d);
+    for i in 0..d {
+        for j in 0..d {
+            let mut s = 0.0_f64;
+            for k in 0..d {
+                s = a[(i, k)].mul_add(bt[(j, k)], s);
+            }
+            reference[(i, j)] = s;
+        }
+    }
+    assert_eq!(reference, a.par_matmul_nt(&bt, &serial),
+               "FMA kernel diverged from its fused lockstep reference");
+    let fused = bench(1, samples, || {
+        let _ = a.par_matmul_nt(&bt, &serial);
+    });
+    println!("{:<40} {:>12} {:>8.2} GF/s  → {:.2}x",
+             "fma on (fused)", fused.pm(), gflops(flops, &fused),
+             speedup(&base, &fused));
+    record("fma on (fused)", &fused);
+    simd::set_fma(None);
+}
+
+/// A-panel packing on a large-k GEMM (the shape it exists for: long
+/// accumulation chains where the four A-row streams span many pages).
+/// Both sides are bit-identical by construction — asserted before
+/// timing — so this is purely a locality measurement.
+fn bench_packed_a(samples: usize) {
+    use lrc::linalg::kernels;
+    let (m, k, n) = (256usize, 2048usize, 256usize);
+    let flops = 2.0 * (m * k * n) as f64;
+    let mut rng = Rng::new(17);
+    let a = Mat::random_normal(&mut rng, m, k);
+    let bt = Mat::random_normal(&mut rng, n, k);
+    let serial = Pool::serial();
+
+    section(&format!("A-panel packing, {m}x{k}·{n}ᵀ GEMM (serial)"));
+    kernels::set_pack_a(false);
+    let reference = a.par_matmul_nt(&bt, &serial);
+    let plain = bench(1, samples, || {
+        let _ = a.par_matmul_nt(&bt, &serial);
+    });
+    println!("{:<40} {:>12} {:>8.2} GF/s", "packed-A off", plain.pm(),
+             gflops(flops, &plain));
+    record("packed-A off", &plain);
+    kernels::set_pack_a(true);
+    assert_eq!(reference, a.par_matmul_nt(&bt, &serial),
+               "A-panel packing changed bits");
+    let packed = bench(1, samples, || {
+        let _ = a.par_matmul_nt(&bt, &serial);
+    });
+    println!("{:<40} {:>12} {:>8.2} GF/s  → {:.2}x",
+             "packed-A on", packed.pm(), gflops(flops, &packed),
+             speedup(&plain, &packed));
+    record("packed-A on", &packed);
 }
 
 fn bench_eigh_dispatch(samples: usize, n: usize) {
@@ -302,6 +402,8 @@ fn main() {
     bench_kernels(samples, d);
     bench_blocked_vs_naive(samples.min(3), 512);
     bench_simd_backends(samples.min(3));
+    bench_fma_gemm(samples.min(3));
+    bench_packed_a(samples.min(3));
     bench_eigh_dispatch(samples.clamp(1, 2), if quick { 48 } else { 64 });
     bench_layer_fanout(samples, n_layers, d.min(96));
     bench_dispatch_overhead(samples);

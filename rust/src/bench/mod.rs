@@ -152,6 +152,18 @@ pub fn speedup(base: &Stats, new: &Stats) -> f64 {
     base.mean() / m
 }
 
+/// Achieved GFLOP/s for a measurement of an operation costing `flops`
+/// floating-point operations per run (mean-time based) — the kernel
+/// benches print this next to the wall-clock columns so perf reads in
+/// hardware units, not just ratios.
+pub fn gflops(flops: f64, s: &Stats) -> f64 {
+    let ms = s.mean();
+    if ms <= 0.0 {
+        return 0.0;
+    }
+    flops / (ms / 1e3) / 1e9
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -203,6 +215,14 @@ mod tests {
         assert_eq!(mine.get("samples_ms").unwrap().as_arr().unwrap().len(),
                    2);
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn gflops_units() {
+        // 2e9 flops in 1000 ms = 2 GFLOP/s
+        let s = Stats { samples_ms: vec![1000.0] };
+        assert!((gflops(2e9, &s) - 2.0).abs() < 1e-12);
+        assert_eq!(gflops(1e9, &Stats { samples_ms: vec![] }), 0.0);
     }
 
     #[test]

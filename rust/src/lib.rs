@@ -22,9 +22,16 @@
 //!                     bit-for-bit, see `tests/kernel_oracle.rs`; the
 //!                     `linalg::simd` layer dispatches SSE2/AVX2/NEON
 //!                     lane kernels at runtime, `LRC_SIMD` / `--simd`
-//!                     pins one; Cholesky, Jacobi eigensolver, FWHT;
-//!                     `par_*` variants plus automatic parallelism past a
-//!                     fixed work threshold)
+//!                     pins one, and the opt-in `--fma` / `LRC_FMA` mode
+//!                     swaps in fused multiply-add kernels with their own
+//!                     lockstep oracle reference; `linalg::workspace`
+//!                     provides the per-thread grow-only scratch arenas —
+//!                     packed A/B panels, solver temporaries and Σ
+//!                     scratch are recycled so steady-state hot loops are
+//!                     allocation-free (`tests/alloc_steady_state.rs`);
+//!                     Cholesky, Jacobi eigensolver, FWHT; `par_*` and
+//!                     `*_into` variants plus automatic parallelism past
+//!                     a fixed work threshold)
 //! * [`rng`]         — deterministic SplitMix64 RNG
 //! * [`quant`]       — RTN / GPTQ quantizers + int4 bit-packing
 //! * [`lrc`]         — the paper's Algorithms 1–4 + SVD baseline + oracle

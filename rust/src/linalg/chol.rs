@@ -32,10 +32,17 @@ pub fn cholesky(a: &Mat) -> Result<Mat, String> {
 
 /// Solve L·Z = B (forward substitution), B is [n, m], L lower-triangular.
 pub fn solve_lower(l: &Mat, b: &Mat) -> Mat {
-    let n = l.rows;
-    assert_eq!(b.rows, n);
-    let m = b.cols;
     let mut z = b.clone();
+    solve_lower_in_place(l, &mut z);
+    z
+}
+
+/// [`solve_lower`] overwriting `z` (the right-hand side) in place — the
+/// composed solves reuse one buffer instead of cloning per stage.
+pub fn solve_lower_in_place(l: &Mat, z: &mut Mat) {
+    let n = l.rows;
+    assert_eq!(z.rows, n);
+    let m = z.cols;
     for i in 0..n {
         // z[i,:] -= Σ_{k<i} L[i,k] z[k,:]
         for k in 0..i {
@@ -50,15 +57,20 @@ pub fn solve_lower(l: &Mat, b: &Mat) -> Mat {
             *v /= d;
         }
     }
-    z
 }
 
 /// Solve Lᵀ·Z = B (back substitution) with L lower-triangular.
 pub fn solve_upper(l: &Mat, b: &Mat) -> Mat {
-    let n = l.rows;
-    assert_eq!(b.rows, n);
-    let m = b.cols;
     let mut z = b.clone();
+    solve_upper_in_place(l, &mut z);
+    z
+}
+
+/// [`solve_upper`] overwriting `z` in place.
+pub fn solve_upper_in_place(l: &Mat, z: &mut Mat) {
+    let n = l.rows;
+    assert_eq!(z.rows, n);
+    let m = z.cols;
     for i in (0..n).rev() {
         for k in i + 1..n {
             let lki = l[(k, i)]; // (Lᵀ)[i,k]
@@ -76,12 +88,16 @@ pub fn solve_upper(l: &Mat, b: &Mat) -> Mat {
             *v /= d;
         }
     }
-    z
 }
 
-/// Solve Σ·Z = B for symmetric PD Σ via its Cholesky factor L.
+/// Solve Σ·Z = B for symmetric PD Σ via its Cholesky factor L.  One
+/// working copy of B, both substitutions in place (the old composition
+/// cloned per stage).
 pub fn chol_solve_mat(l: &Mat, b: &Mat) -> Mat {
-    solve_upper(l, &solve_lower(l, b))
+    let mut z = b.clone();
+    solve_lower_in_place(l, &mut z);
+    solve_upper_in_place(l, &mut z);
+    z
 }
 
 /// Σ⁻¹ via Cholesky (used by GPTQ's Hessian inverse).

@@ -296,12 +296,22 @@ pub fn eigh_jacobi(a: &Mat) -> (Vec<f64>, Mat) {
 /// quantization fan-out the serial QL path stays the right choice (the
 /// layers themselves already saturate the pool).
 ///
-/// The two `map` calls per round are exactly the fine-grained dispatch
-/// pattern the persistent pool exists for: a parked-worker epoch costs a
-/// couple of mutex hops where a scoped spawn/join cycle costs hundreds of
+/// The two dispatches per round are exactly the fine-grained pattern the
+/// persistent pool exists for: a parked-worker epoch costs a couple of
+/// mutex hops where a scoped spawn/join cycle costs hundreds of
 /// microseconds (see `bench_par`'s persistent-vs-scoped section).  Pass
 /// `pool.scoped()` to get the old spawn-per-call behavior.
+///
+/// Rounds are **allocation-free in steady state**: the per-pair column /
+/// row / eigenvector scratch lives in two
+/// [`crate::linalg::workspace`]-recycled buffers
+/// sized once per call (pairs write disjoint chunks through a
+/// `SharedSlice`, applied serially in pair order), and the pair / rotation
+/// lists are reused across every round — where each pair used to allocate
+/// four fresh `Vec`s per round, a whole call now makes O(1) allocations
+/// (`tests/alloc_steady_state.rs` bounds it).
 pub fn eigh_jacobi_par(a: &Mat, pool: &crate::par::Pool) -> (Vec<f64>, Mat) {
+    use crate::linalg::workspace::{self, SharedSlice};
     assert_eq!(a.rows, a.cols);
     let n = a.rows;
     if n == 0 {
@@ -328,6 +338,16 @@ pub fn eigh_jacobi_par(a: &Mat, pool: &crate::par::Pool) -> (Vec<f64>, Mat) {
         if j == 0 { 0 } else { (j - 1 + round) % (np - 1) + 1 }
     };
 
+    // round scratch, arena-backed and reused across every round of every
+    // sweep: pair pi's phase-1 chunk is colbuf[pi·2n ..] (colp | colq),
+    // its phase-2 chunk rowbuf[pi·4n ..] (rowp | rowq | vcolp | vcolq)
+    let max_pairs = np / 2;
+    let mut colbuf = workspace::take_zeroed(max_pairs * 2 * n);
+    let mut rowbuf = workspace::take_zeroed(max_pairs * 4 * n);
+    let mut pairs: Vec<(usize, usize)> = Vec::with_capacity(max_pairs);
+    // (c, s, live) per pair; live = false for converged pivots
+    let mut rots: Vec<(f64, f64, bool)> = Vec::with_capacity(max_pairs);
+
     for _sweep in 0..60 {
         let mut off = 0.0_f64;
         for i in 0..n {
@@ -339,7 +359,7 @@ pub fn eigh_jacobi_par(a: &Mat, pool: &crate::par::Pool) -> (Vec<f64>, Mat) {
             break;
         }
         for round in 0..np - 1 {
-            let mut pairs: Vec<(usize, usize)> = Vec::with_capacity(np / 2);
+            pairs.clear();
             for i in 0..np / 2 {
                 let a = seat(i, round);
                 let b = seat(np - 1 - i, round);
@@ -347,76 +367,101 @@ pub fn eigh_jacobi_par(a: &Mat, pool: &crate::par::Pool) -> (Vec<f64>, Mat) {
                     pairs.push((a.min(b), a.max(b)));
                 }
             }
+            rots.clear();
+            rots.resize(pairs.len(), (0.0, 0.0, false));
             // phase 1 — column updates M ← M·G: each pair computes its
             // rotation angle and its two new columns from the pristine
-            // round matrix (pairs are column-disjoint)
-            let cols = pool.map(pairs.len(), |pi| {
-                let (p, q) = pairs[pi];
-                let apq = m[(p, q)];
-                if apq.abs() <= tol {
-                    return None;
-                }
-                let theta = 0.5 * (m[(q, q)] - m[(p, p)]) / apq;
-                let t = theta.signum()
-                    / (theta.abs() + (1.0 + theta * theta).sqrt());
-                let c = 1.0 / (1.0 + t * t).sqrt();
-                let s = t * c;
-                let mut colp = Vec::with_capacity(n);
-                let mut colq = Vec::with_capacity(n);
-                for k in 0..n {
-                    let mkp = m[(k, p)];
-                    let mkq = m[(k, q)];
-                    colp.push(c * mkp - s * mkq);
-                    colq.push(s * mkp + c * mkq);
-                }
-                Some((c, s, colp, colq))
-            });
-            let mut rots: Vec<Option<(f64, f64)>> = vec![None; pairs.len()];
-            for (pi, upd) in cols.into_iter().enumerate() {
-                if let Some((c, s, colp, colq)) = upd {
+            // round matrix (pairs are column-disjoint) into its own
+            // scratch chunk; applied serially below in fixed pair order
+            {
+                let col_out = SharedSlice::new(&mut colbuf);
+                let rot_out = SharedSlice::new(&mut rots);
+                let mm = &m;
+                pool.for_indices(pairs.len(), |pi| {
                     let (p, q) = pairs[pi];
-                    for k in 0..n {
-                        m[(k, p)] = colp[k];
-                        m[(k, q)] = colq[k];
+                    let apq = mm[(p, q)];
+                    if apq.abs() <= tol {
+                        return; // rots[pi] stays (_, _, false)
                     }
-                    rots[pi] = Some((c, s));
+                    let theta = 0.5 * (mm[(q, q)] - mm[(p, p)]) / apq;
+                    let t = theta.signum()
+                        / (theta.abs() + (1.0 + theta * theta).sqrt());
+                    let c = 1.0 / (1.0 + t * t).sqrt();
+                    let s = t * c;
+                    // SAFETY: chunk pi is this pair's private span
+                    let chunk =
+                        unsafe { col_out.range(pi * 2 * n, (pi + 1) * 2 * n) };
+                    let (colp, colq) = chunk.split_at_mut(n);
+                    for k in 0..n {
+                        let mkp = mm[(k, p)];
+                        let mkq = mm[(k, q)];
+                        colp[k] = c * mkp - s * mkq;
+                        colq[k] = s * mkp + c * mkq;
+                    }
+                    // SAFETY: slot pi is written by this pair alone
+                    unsafe { rot_out.range(pi, pi + 1) }[0] = (c, s, true);
+                });
+            }
+            for (pi, &(_, _, live)) in rots.iter().enumerate() {
+                if !live {
+                    continue;
+                }
+                let (p, q) = pairs[pi];
+                let base = pi * 2 * n;
+                for k in 0..n {
+                    m[(k, p)] = colbuf[base + k];
+                    m[(k, q)] = colbuf[base + n + k];
                 }
             }
             // phase 2 — row updates M ← Gᵀ·M and eigenvector columns
             // V ← V·G, from the column-updated matrix (pairs are
             // row-disjoint in M and column-disjoint in V)
-            let rows = pool.map(pairs.len(), |pi| {
-                let (c, s) = rots[pi]?;
-                let (p, q) = pairs[pi];
-                let mut rowp = Vec::with_capacity(n);
-                let mut rowq = Vec::with_capacity(n);
-                let mut vcolp = Vec::with_capacity(n);
-                let mut vcolq = Vec::with_capacity(n);
-                for k in 0..n {
-                    let mpk = m[(p, k)];
-                    let mqk = m[(q, k)];
-                    rowp.push(c * mpk - s * mqk);
-                    rowq.push(s * mpk + c * mqk);
-                    let vkp = v[(k, p)];
-                    let vkq = v[(k, q)];
-                    vcolp.push(c * vkp - s * vkq);
-                    vcolq.push(s * vkp + c * vkq);
-                }
-                Some((rowp, rowq, vcolp, vcolq))
-            });
-            for (pi, upd) in rows.into_iter().enumerate() {
-                if let Some((rowp, rowq, vcolp, vcolq)) = upd {
-                    let (p, q) = pairs[pi];
-                    m.row_mut(p).copy_from_slice(&rowp);
-                    m.row_mut(q).copy_from_slice(&rowq);
-                    for k in 0..n {
-                        v[(k, p)] = vcolp[k];
-                        v[(k, q)] = vcolq[k];
+            {
+                let row_out = SharedSlice::new(&mut rowbuf);
+                let mm = &m;
+                let vv = &v;
+                let rr = &rots;
+                pool.for_indices(pairs.len(), |pi| {
+                    let (c, s, live) = rr[pi];
+                    if !live {
+                        return;
                     }
+                    let (p, q) = pairs[pi];
+                    // SAFETY: chunk pi is this pair's private span
+                    let chunk =
+                        unsafe { row_out.range(pi * 4 * n, (pi + 1) * 4 * n) };
+                    let (rowp, rest) = chunk.split_at_mut(n);
+                    let (rowq, rest) = rest.split_at_mut(n);
+                    let (vcolp, vcolq) = rest.split_at_mut(n);
+                    for k in 0..n {
+                        let mpk = mm[(p, k)];
+                        let mqk = mm[(q, k)];
+                        rowp[k] = c * mpk - s * mqk;
+                        rowq[k] = s * mpk + c * mqk;
+                        let vkp = vv[(k, p)];
+                        let vkq = vv[(k, q)];
+                        vcolp[k] = c * vkp - s * vkq;
+                        vcolq[k] = s * vkp + c * vkq;
+                    }
+                });
+            }
+            for (pi, &(_, _, live)) in rots.iter().enumerate() {
+                if !live {
+                    continue;
+                }
+                let (p, q) = pairs[pi];
+                let base = pi * 4 * n;
+                m.row_mut(p).copy_from_slice(&rowbuf[base..base + n]);
+                m.row_mut(q).copy_from_slice(&rowbuf[base + n..base + 2 * n]);
+                for k in 0..n {
+                    v[(k, p)] = rowbuf[base + 2 * n + k];
+                    v[(k, q)] = rowbuf[base + 3 * n + k];
                 }
             }
         }
     }
+    workspace::put(colbuf);
+    workspace::put(rowbuf);
 
     // sort ascending by eigenvalue, as the serial solvers do
     let mut idx: Vec<usize> = (0..n).collect();

@@ -18,23 +18,50 @@
 //!   * any row chunking is bit-identical too, so the serial and parallel
 //!     paths agree at every thread count *by construction*.
 //!
-//! # SIMD lane layout
+//! Under the **opt-in FMA mode** (`--fma` / `LRC_FMA=1`, default off) the
+//! per-element step becomes one fused multiply-add instead; the contract
+//! keeps its shape but the reference changes with it — see the
+//! [`super::simd`] module docs.  The mode is captured at pack time
+//! ([`PackedRows`]), so one product can never mix the two programs.
+//!
+//! # SIMD lane layout and panel packing
 //!
 //! The [`super::simd`] backends vectorize **across the NR output
 //! columns** of the register tile: each vector lane carries one output
 //! element's accumulator, `a[i,k]` is broadcast, and mul/add stay
-//! separate (no FMA — its single rounding would change the bits; see the
-//! `simd` module docs for why lane-wise mul-then-add cannot).  To make
-//! the per-k B access one contiguous vector load, the rows of Bᵀ are
-//! **packed** once per product into NR-wide strips laid out k-major
-//! ([`PackedRows`]: `strip[kk*nr + l] = B[j0+l, kk]`, zero-padded past
-//! the edge; padded lanes are computed and discarded, never stored).
-//! The one packing pass — O(n·k), the cost of one extra transpose — is
-//! shared by the serial sweep and by every row chunk of the parallel
-//! path (the pool workers all read the same pack), and the Gram entry
-//! points reuse the same structure.  Tile shape is selected by the
-//! backend captured at pack time — 4×8 under AVX2 (two ymm accumulators
-//! per row), 4×4 otherwise — via [`simd::Backend::nr`].
+//! separate in the default mode (no FMA — its single rounding would
+//! change the bits; see the `simd` module docs for why lane-wise
+//! mul-then-add cannot).  To make the per-k B access one contiguous
+//! vector load, the rows of Bᵀ are **packed** once per product into
+//! NR-wide strips laid out k-major ([`PackedRows`]:
+//! `strip[kk*nr + l] = B[j0+l, kk]`, zero-padded past the edge; padded
+//! lanes are computed and discarded, never stored).  The one packing
+//! pass — O(n·k), the cost of one extra transpose — is shared by the
+//! serial sweep and by every row chunk of the parallel path (the pool
+//! workers all read the same pack), and the Gram entry points reuse the
+//! same structure.  Tile shape is selected by the backend captured at
+//! pack time — 4×8 under AVX2 (two ymm accumulators per row), 4×4
+//! otherwise — via [`simd::Backend::nr`].
+//!
+//! The **A panel** is packed too: each MR×kw register-tile slice of A is
+//! copied once per (jc, kc, i) block into a small contiguous scratch
+//! panel (≤ MR·KC f64 = 8 KB, L1-resident) and reused across every lane
+//! strip of the jc panel, so the microkernel's four `a` streams come
+//! from one hot buffer instead of four matrix rows `a.cols` apart
+//! (tightens L1/TLB behavior for large `k`; the copy amortizes over NC
+//! columns of compute).  Packing copies values verbatim, so it is
+//! invisible to the bit contract; [`set_pack_a`] can disable it for
+//! benches/debugging (`bench_par`'s packed-A section times both sides
+//! and asserts equality first).
+//!
+//! # Workspace reuse
+//!
+//! All kernel scratch — the packed B strips, the packed A panel — comes
+//! from the per-thread [`super::workspace`] arena and is returned on
+//! drop, so in steady state (repeated products of the same shapes, i.e.
+//! the calibration/quantization inner loops) these kernels perform
+//! **zero allocations** (`tests/alloc_steady_state.rs`).  Gram row
+//! segments write into caller-provided slices for the same reason.
 //!
 //! # Block schedule
 //!
@@ -43,8 +70,10 @@
 //! through [`MR`]×nr register tiles.  KC·(MR+nr) f64 ≤ 24 KB keeps the
 //! active slices in L1, and the packed NC×KC panel (128 KB) in L2.
 
+use std::sync::atomic::{AtomicBool, Ordering};
+
 use super::simd::{self, Backend, MAX_NR};
-use super::Mat;
+use super::{workspace, Mat};
 
 /// Register-tile rows (A rows advanced together).  The tile width (NR
 /// lanes) is backend-selected, see [`simd::Backend::nr`].
@@ -53,6 +82,22 @@ pub const MR: usize = 4;
 pub const KC: usize = 256;
 /// Output-column panel: Bᵀ rows kept hot (packed) across one row sweep.
 pub const NC: usize = 64;
+
+/// A-panel packing switch (default on).  A bench/debug knob only: both
+/// settings produce identical bits (packing copies values verbatim), so
+/// flipping it mid-run is harmless — `bench_par` uses it to time the
+/// packed vs unpacked A streams.
+static PACK_A: AtomicBool = AtomicBool::new(true);
+
+/// Enable/disable A-panel packing (see [`PACK_A`]).
+pub fn set_pack_a(on: bool) {
+    PACK_A.store(on, Ordering::SeqCst);
+}
+
+/// Whether A panels are currently packed.
+pub fn pack_a_enabled() -> bool {
+    PACK_A.load(Ordering::SeqCst)
+}
 
 /// C[r0..r1, :] = A[r0..r1, :]·Bᵀ, written into `out` (row-major,
 /// `(r1-r0) × bt.rows`, rows indexed relative to `r0`), with Bᵀ given
@@ -73,32 +118,64 @@ pub(crate) fn matmul_nt_block(a: &Mat, bt: &PackedRows, r0: usize, r1: usize,
         return; // empty product: out stays zero, matching the empty sum
     }
     let be = bt.be;
+    let fma = bt.fma;
     let nr = be.nr();
     // NC (64) is a multiple of every backend's nr, so jc panels are
     // strip-aligned by construction
     debug_assert_eq!(NC % nr, 0);
+    // the A panel: MR rows × one k-panel, packed contiguous and reused
+    // across every strip of the current jc panel.  Taken lazily on first
+    // use (workspace-recycled): products that never pack — packing off,
+    // narrow jc panels, ragged-only row ranges — pay nothing, and the
+    // panel is never pre-zeroed (every slot is overwritten by
+    // copy_from_slice before the tiles read it).
+    let mut apanel: Option<Vec<f64>> = None;
+    let pack_a = pack_a_enabled();
     let mut jc = 0;
     while jc < n {
         let jc_hi = (jc + NC).min(n);
+        // packing pays off once the panel has ≥ 2 lane strips to reuse
+        // the packed rows across; a single-strip panel reads A directly
+        let use_pack = pack_a && jc_hi - jc > nr;
         let mut kc = 0;
         while kc < kd {
             let kc_hi = (kc + KC).min(kd);
+            let kw = kc_hi - kc;
             let mut i = r0;
             while i < r1 {
                 let i_hi = (i + MR).min(r1);
+                let full = i_hi - i == MR;
+                if full && use_pack {
+                    let ap = apanel
+                        .get_or_insert_with(|| workspace::take_zeroed(MR * KC));
+                    for r in 0..MR {
+                        ap[r * kw..(r + 1) * kw]
+                            .copy_from_slice(&a.row(i + r)[kc..kc_hi]);
+                    }
+                }
                 for s in jc / nr..jc_hi.div_ceil(nr) {
                     let j = s * nr;
                     let lanes = (jc_hi - j).min(nr);
                     // this strip's k-slice for the current panel
                     let strip = &bt.data[(s * kd + kc) * nr..
                                          (s * kd + kc_hi) * nr];
-                    if i_hi - i == MR {
-                        tile_full(be, a, i, j, kc, kc_hi, lanes, strip, r0,
-                                  n, out);
+                    if full {
+                        let rows: [&[f64]; MR] = if use_pack {
+                            let ap = apanel.as_deref()
+                                .expect("A panel packed above");
+                            [&ap[..kw], &ap[kw..2 * kw],
+                             &ap[2 * kw..3 * kw], &ap[3 * kw..4 * kw]]
+                        } else {
+                            [&a.row(i)[kc..kc_hi], &a.row(i + 1)[kc..kc_hi],
+                             &a.row(i + 2)[kc..kc_hi],
+                             &a.row(i + 3)[kc..kc_hi]]
+                        };
+                        tile_full(be, fma, rows, lanes, strip,
+                                  (i - r0) * n + j, n, out);
                     } else {
                         for r in i..i_hi {
-                            tile_row(be, a, r, j, kc, kc_hi, lanes, strip,
-                                     r0, n, out);
+                            tile_row(be, fma, &a.row(r)[kc..kc_hi], lanes,
+                                     strip, (r - r0) * n + j, out);
                         }
                     }
                 }
@@ -108,47 +185,44 @@ pub(crate) fn matmul_nt_block(a: &Mat, bt: &PackedRows, r0: usize, r1: usize,
         }
         jc = jc_hi;
     }
+    if let Some(ap) = apanel {
+        workspace::put(ap);
+    }
 }
 
 /// The full MR-row tile over one packed strip: load the live accumulators
 /// from C, advance them through the k-panel on the dispatched backend,
 /// store the valid lanes back.  Padded lanes accumulate zeros and are
-/// discarded.
+/// discarded.  `o0` is the flat index of element (row `i`, column `j`)
+/// in `out`; the MR rows sit `n` apart.
 #[allow(clippy::too_many_arguments)]
 #[inline]
-fn tile_full(be: Backend, a: &Mat, i: usize, j: usize, k0: usize, k1: usize,
-             lanes: usize, strip: &[f64], r0: usize, n: usize,
-             out: &mut [f64]) {
+fn tile_full(be: Backend, fma: bool, rows: [&[f64]; MR], lanes: usize,
+             strip: &[f64], o0: usize, n: usize, out: &mut [f64]) {
     let nr = be.nr();
     let mut acc = [0.0_f64; MR * MAX_NR];
     let acc = &mut acc[..MR * nr];
     for r in 0..MR {
-        let orow = (i + r - r0) * n + j;
+        let orow = o0 + r * n;
         acc[r * nr..r * nr + lanes].copy_from_slice(&out[orow..orow + lanes]);
     }
-    simd::tile4(be,
-                [&a.row(i)[k0..k1], &a.row(i + 1)[k0..k1],
-                 &a.row(i + 2)[k0..k1], &a.row(i + 3)[k0..k1]],
-                strip, acc);
+    simd::tile4(be, fma, rows, strip, acc);
     for r in 0..MR {
-        let orow = (i + r - r0) * n + j;
+        let orow = o0 + r * n;
         out[orow..orow + lanes].copy_from_slice(&acc[r * nr..r * nr + lanes]);
     }
 }
 
 /// Ragged row edge: one output row over one packed strip — same
 /// per-element program, one accumulator vector pair instead of four.
-#[allow(clippy::too_many_arguments)]
 #[inline]
-fn tile_row(be: Backend, a: &Mat, i: usize, j: usize, k0: usize, k1: usize,
-            lanes: usize, strip: &[f64], r0: usize, n: usize,
-            out: &mut [f64]) {
+fn tile_row(be: Backend, fma: bool, arow: &[f64], lanes: usize,
+            strip: &[f64], orow: usize, out: &mut [f64]) {
     let nr = be.nr();
     let mut acc = [0.0_f64; MAX_NR];
     let acc = &mut acc[..nr];
-    let orow = (i - r0) * n + j;
     acc[..lanes].copy_from_slice(&out[orow..orow + lanes]);
-    simd::tile1(be, &a.row(i)[k0..k1], strip, acc);
+    simd::tile1(be, fma, arow, strip, acc);
     out[orow..orow + lanes].copy_from_slice(&acc[..lanes]);
 }
 
@@ -157,23 +231,35 @@ fn tile_row(be: Backend, a: &Mat, i: usize, j: usize, k0: usize, k1: usize,
 /// the GEMM tiles and every Gram row segment reuse contiguous vector
 /// loads.  The strip width is fixed by the backend captured at pack time
 /// — the consuming kernels must dispatch on the same backend, so it
-/// rides along (flipping the global backend mid-product therefore cannot
-/// desynchronize layout and dispatch).
+/// rides along, and the FMA mode is captured with it (flipping either
+/// global mid-product therefore cannot desynchronize layout, dispatch or
+/// the per-element program).  The strip storage comes from the
+/// per-thread [`workspace`] arena and returns to it on drop.
 pub(crate) struct PackedRows {
     be: Backend,
+    pub(crate) fma: bool,
     rows: usize,
     cols: usize,
     data: Vec<f64>,
 }
 
-/// Pack `src` for [`matmul_nt_block`] / [`gram_row_segment_packed`] on
-/// the active backend.  O(rows·cols) — one extra transpose-sized pass,
-/// amortized over the whole product (every row chunk / row segment).
+impl Drop for PackedRows {
+    fn drop(&mut self) {
+        workspace::put(std::mem::take(&mut self.data));
+    }
+}
+
+/// Pack `src` for [`matmul_nt_block`] / [`gram_row_segment_into`] on
+/// the active backend + accumulation mode.  O(rows·cols) — one extra
+/// transpose-sized pass, amortized over the whole product (every row
+/// chunk / row segment); allocation-free in steady state (the strip
+/// buffer is workspace-recycled).
 pub(crate) fn pack_rows(src: &Mat) -> PackedRows {
     let be = simd::active();
+    let fma = simd::fma_active();
     let nr = be.nr();
     let n_strips = src.rows.div_ceil(nr);
-    let mut data = vec![0.0_f64; n_strips * src.cols * nr];
+    let mut data = workspace::take_zeroed(n_strips * src.cols * nr);
     for s in 0..n_strips {
         let strip = &mut data[s * src.cols * nr..(s + 1) * src.cols * nr];
         for l in 0..nr {
@@ -183,38 +269,49 @@ pub(crate) fn pack_rows(src: &Mat) -> PackedRows {
                     strip[kk * nr + l] = v;
                 }
             }
-            // else: buffer is zero-initialized, padded lanes stay 0
+            // else: buffer is zeroed by take_zeroed, padded lanes stay 0
         }
     }
-    PackedRows { be, rows: src.rows, cols: src.cols, data }
+    PackedRows { be, fma, rows: src.rows, cols: src.cols, data }
 }
 
-/// Row `i` of the upper triangle of `src·srcᵀ`: the segment
-/// `[Σ_k src[i,k]·src[j,k] for j in i..src.rows]`.
+/// Row `i` of the upper triangle of `src·srcᵀ`, written into `out`
+/// (length `src.rows - i`): `out[j-i] = Σ_k src[i,k]·src[j,k]` for
+/// `j in i..src.rows`.
 ///
 /// Every element follows the same canonical ascending-k program as the
-/// GEMM kernel, so serial loops, parallel row maps and any chunking all
-/// produce identical bits.  The j-direction runs on the packed lane
-/// strips of `packed` (the same lane treatment as the GEMM tile): the
-/// leading rows up to the next strip boundary are plain scalar dots,
-/// then whole strips advance nr accumulators at once via
-/// [`simd::tile1`], trailing padded lanes discarded.
-pub(crate) fn gram_row_segment_packed(src: &Mat, packed: &PackedRows,
-                                      i: usize) -> Vec<f64> {
+/// GEMM kernel (fused in FMA mode, per the pack), so serial loops,
+/// parallel row maps and any chunking all produce identical bits.  The
+/// j-direction runs on the packed lane strips of `packed` (the same lane
+/// treatment as the GEMM tile): the leading rows up to the next strip
+/// boundary are plain scalar dots, then whole strips advance nr
+/// accumulators at once via [`simd::tile1`], trailing padded lanes
+/// discarded.  Writing into the caller's slice (the Gram entry points
+/// hand out disjoint rows of the output matrix) keeps the per-row path
+/// allocation-free — there is no per-segment `Vec` on any path.
+pub(crate) fn gram_row_segment_into(src: &Mat, packed: &PackedRows,
+                                    i: usize, out: &mut [f64]) {
     let m = src.rows;
-    let nr = packed.be.nr();
+    debug_assert_eq!(out.len(), m - i);
     debug_assert_eq!(packed.cols, src.cols);
+    let nr = packed.be.nr();
+    let fma = packed.fma;
     let ri = src.row(i);
-    let mut seg = Vec::with_capacity(m - i);
     // leading ragged rows up to the strip boundary: canonical scalar dots
     let head_end = (i.div_ceil(nr) * nr).min(m);
     for j in i..head_end {
         let rj = src.row(j);
         let mut s = 0.0_f64;
-        for (x, y) in ri.iter().zip(rj) {
-            s += x * y;
+        if fma {
+            for (x, y) in ri.iter().zip(rj) {
+                s = x.mul_add(*y, s);
+            }
+        } else {
+            for (x, y) in ri.iter().zip(rj) {
+                s += x * y;
+            }
         }
-        seg.push(s);
+        out[j - i] = s;
     }
     // aligned strips (the last one zero-padded past m)
     let mut j = head_end;
@@ -224,19 +321,21 @@ pub(crate) fn gram_row_segment_packed(src: &Mat, packed: &PackedRows,
         let strip = &packed.data[s * packed.cols * nr..
                                  (s + 1) * packed.cols * nr];
         let mut acc = [0.0_f64; MAX_NR];
-        simd::tile1(packed.be, ri, strip, &mut acc[..nr]);
-        seg.extend_from_slice(&acc[..lanes]);
+        simd::tile1(packed.be, fma, ri, strip, &mut acc[..nr]);
+        out[j - i..j - i + lanes].copy_from_slice(&acc[..lanes]);
         j += lanes;
     }
-    seg
 }
 
-/// Single-call convenience for [`gram_row_segment_packed`] (packs the
+/// Single-call convenience for [`gram_row_segment_into`] (packs the
 /// source itself — fine for one row, quadratic if called for every row;
-/// the Gram entry points in [`super`] pack once instead).
+/// the Gram entry points in [`super`] pack once instead).  Routed through
+/// the same write-into-slice kernel as every other path.
 #[cfg(test)]
 pub(crate) fn gram_row_segment(src: &Mat, i: usize) -> Vec<f64> {
-    gram_row_segment_packed(src, &pack_rows(src), i)
+    let mut out = vec![0.0_f64; src.rows - i];
+    gram_row_segment_into(src, &pack_rows(src), i, &mut out);
+    out
 }
 
 #[cfg(test)]
@@ -244,14 +343,21 @@ mod tests {
     use super::*;
     use crate::rng::Rng;
 
-    /// The independent naive reference: single accumulator, ascending k.
+    /// The independent naive reference: single accumulator, ascending k —
+    /// fused when the process-wide FMA mode is on (lockstep with the
+    /// kernels; the CI matrix runs this suite under `LRC_FMA=1`).
     fn naive_nt(a: &Mat, bt: &Mat) -> Mat {
+        let fma = simd::fma_active();
         let mut out = Mat::zeros(a.rows, bt.rows);
         for i in 0..a.rows {
             for j in 0..bt.rows {
                 let mut s = 0.0_f64;
                 for k in 0..a.cols {
-                    s += a[(i, k)] * bt[(j, k)];
+                    if fma {
+                        s = a[(i, k)].mul_add(bt[(j, k)], s);
+                    } else {
+                        s += a[(i, k)] * bt[(j, k)];
+                    }
                 }
                 out[(i, j)] = s;
             }
@@ -297,6 +403,26 @@ mod tests {
     }
 
     #[test]
+    fn a_panel_packing_is_bit_invisible() {
+        // the A panel copies values verbatim: packed and unpacked runs
+        // must agree == on every shape (incl. ones wide enough to
+        // actually trigger packing: jc panels with > 1 strip)
+        let _guard = sweep_lock();
+        for (m, k, n) in [(5usize, 7usize, 40usize), (16, 300, 64),
+                          (13, 31, 65), (8, 256, 128)] {
+            let a = Mat::random_normal(&mut Rng::new(900 + m as u64), m, k);
+            let bt = Mat::random_normal(&mut Rng::new(901 + n as u64), n, k);
+            set_pack_a(false);
+            let mut plain = vec![0.0_f64; m * n];
+            matmul_nt_block(&a, &pack_rows(&bt), 0, m, &mut plain);
+            set_pack_a(true);
+            let mut packed = vec![0.0_f64; m * n];
+            matmul_nt_block(&a, &pack_rows(&bt), 0, m, &mut packed);
+            assert_eq!(plain, packed, "{m}x{k}·{n}ᵀ");
+        }
+    }
+
+    #[test]
     fn row_ranges_compose_exactly() {
         // any split point reproduces the full result bit for bit
         let (m, k, n) = (23, 31, 19);
@@ -320,19 +446,25 @@ mod tests {
         let _guard = sweep_lock();
         for be in simd::available_backends() {
             simd::set_backend(Some(be)).unwrap();
+            let fma = simd::fma_active();
             for &(m, k) in &[(1usize, 1usize), (5, 3), (8, 8), (9, 300),
                              (12, 7), (17, 33)] {
                 let src = Mat::random_normal(
                     &mut Rng::new(m as u64 * 7 + k as u64), m, k);
                 let packed = pack_rows(&src);
+                let mut seg = vec![0.0_f64; m];
                 for i in 0..m {
-                    let seg = gram_row_segment_packed(&src, &packed, i);
-                    assert_eq!(seg.len(), m - i);
+                    let seg = &mut seg[..m - i];
+                    gram_row_segment_into(&src, &packed, i, seg);
                     for (off, &v) in seg.iter().enumerate() {
                         let j = i + off;
                         let mut s = 0.0_f64;
                         for kk in 0..k {
-                            s += src[(i, kk)] * src[(j, kk)];
+                            if fma {
+                                s = src[(i, kk)].mul_add(src[(j, kk)], s);
+                            } else {
+                                s += src[(i, kk)] * src[(j, kk)];
+                            }
                         }
                         assert_eq!(v, s, "({i},{j}) of {m}x{k} on {}",
                                    be.name());
@@ -344,12 +476,13 @@ mod tests {
     }
 
     #[test]
-    fn single_call_segment_matches_packed() {
+    fn single_call_segment_matches_into() {
         let src = Mat::random_normal(&mut Rng::new(42), 11, 9);
         let packed = pack_rows(&src);
         for i in 0..src.rows {
-            assert_eq!(gram_row_segment(&src, i),
-                       gram_row_segment_packed(&src, &packed, i));
+            let mut seg = vec![0.0_f64; src.rows - i];
+            gram_row_segment_into(&src, &packed, i, &mut seg);
+            assert_eq!(gram_row_segment(&src, i), seg);
         }
     }
 }

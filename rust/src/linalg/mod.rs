@@ -21,13 +21,22 @@
 //! lanes run *across output elements* with separate mul-then-add, so the
 //! per-element program — and therefore every bit — is unchanged on every
 //! backend (`LRC_SIMD` / `--simd` select one explicitly; see the `simd`
-//! module docs).
+//! module docs).  The opt-in `--fma` / `LRC_FMA` mode swaps the
+//! per-element step for one fused multiply-add — a *different* canonical
+//! program with its own lockstep oracle reference (see `simd`).
+//!
+//! Kernel scratch (packed panels, solver temporaries) comes from the
+//! per-thread [`workspace`] arenas, so steady-state hot loops allocate
+//! nothing; the `*_into` entry points ([`Mat::matmul_nt_into`],
+//! [`Mat::gram_n_into`], …) extend that to the outputs by reusing a
+//! caller-held matrix across calls (`tests/alloc_steady_state.rs`).
 
 mod chol;
 mod eigh;
 mod hadamard;
 pub mod kernels;
 pub mod simd;
+pub mod workspace;
 
 pub use chol::{cholesky, solve_lower, solve_upper, chol_solve_mat, chol_inverse};
 pub use eigh::{eigh, eigh_jacobi, eigh_jacobi_par, top_k_eigvecs};
@@ -77,6 +86,26 @@ impl Mat {
 
     pub fn to_f32(&self) -> Vec<f32> {
         self.data.iter().map(|&x| x as f32).collect()
+    }
+
+    /// Grow-only reshape to `rows × cols`, contents zeroed.  The backing
+    /// `Vec` keeps its capacity, so reusing one `Mat` across same-shaped
+    /// calls (the `*_into` kernel entry points, solver scratch) is
+    /// allocation-free in steady state.
+    pub fn resize_zeroed(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// In-place A += B (the accumulation the Σ statistics fold with —
+    /// same `a + b` per element as [`Mat::add`], no temporary).
+    pub fn add_assign(&mut self, b: &Mat) {
+        assert_eq!((self.rows, self.cols), (b.rows, b.cols));
+        for (a, x) in self.data.iter_mut().zip(&b.data) {
+            *a += x;
+        }
     }
 
     #[inline]
@@ -129,6 +158,17 @@ impl Mat {
     /// [`PAR_MIN_WORK`] — bit-identical either way (canonical scalar
     /// program), and suppressed automatically inside pool jobs.
     pub fn matmul_nt(&self, bt: &Mat) -> Mat {
+        let mut out = Mat::zeros(0, 0);
+        self.matmul_nt_into(bt, &mut out);
+        out
+    }
+
+    /// [`Mat::matmul_nt`] writing into a caller-held output (grow-only
+    /// reshaped to m×n).  Reusing one `out` across same-shaped products
+    /// makes the steady-state GEMM loop **allocation-free**: the packed
+    /// panels come from the per-thread [`workspace`] arena and `out`
+    /// keeps its capacity (`tests/alloc_steady_state.rs`).
+    pub fn matmul_nt_into(&self, bt: &Mat, out: &mut Mat) {
         assert_eq!(self.cols, bt.cols, "matmul_nt inner dims");
         let (m, n) = (self.rows, bt.rows);
         // decide serial BEFORE touching the global pool, so small-GEMM
@@ -137,12 +177,12 @@ impl Mat {
             || m * n * self.cols < PAR_MIN_WORK
             || crate::par::in_pool()
         {
-            let mut out = Mat::zeros(m, n);
+            out.resize_zeroed(m, n);
             let packed = kernels::pack_rows(bt);
             kernels::matmul_nt_block(self, &packed, 0, m, &mut out.data);
-            return out;
+            return;
         }
-        self.par_matmul_nt(bt, crate::par::global())
+        self.par_matmul_nt_into(bt, crate::par::global(), out)
     }
 
     /// Fixed row-chunk size for parallel GEMM.  A scheduling granularity
@@ -157,12 +197,23 @@ impl Mat {
     /// count (each output element is produced by exactly the same
     /// floating-point program).
     pub fn par_matmul_nt(&self, bt: &Mat, pool: &crate::par::Pool) -> Mat {
+        let mut out = Mat::zeros(0, 0);
+        self.par_matmul_nt_into(bt, pool, &mut out);
+        out
+    }
+
+    /// [`Mat::par_matmul_nt`] writing into a caller-held output.  Row
+    /// chunks go out through the slot-free [`crate::par::Pool::for_indices`]
+    /// dispatch with disjoint [`workspace::SharedSlice`] writes, so the
+    /// pooled path allocates nothing beyond the (workspace-recycled) pack.
+    pub fn par_matmul_nt_into(&self, bt: &Mat, pool: &crate::par::Pool,
+                              out: &mut Mat) {
         assert_eq!(self.cols, bt.cols, "par_matmul_nt inner dims");
         let (m, n) = (self.rows, bt.rows);
-        let mut out = Mat::zeros(m, n);
+        out.resize_zeroed(m, n);
         let work = m * n * self.cols;
         if n == 0 {
-            return out;
+            return;
         }
         // pack Bᵀ into SIMD lane strips ONCE; every row chunk (and the
         // serial path) reads the same pack — the packing cost is one
@@ -172,24 +223,27 @@ impl Mat {
             || work < PAR_MIN_WORK
         {
             kernels::matmul_nt_block(self, &packed, 0, m, &mut out.data);
-            return out;
+            return;
         }
         let chunk = Self::PAR_ROW_CHUNK;
-        let slices: Vec<(usize, &mut [f64])> =
-            out.data.chunks_mut(chunk * n).enumerate().collect();
-        pool.for_each(slices, |(ci, slice)| {
+        let n_chunks = m.div_ceil(chunk);
+        let shared = workspace::SharedSlice::new(&mut out.data);
+        pool.for_indices(n_chunks, |ci| {
             let r0 = ci * chunk;
             let r1 = (r0 + chunk).min(m);
+            // SAFETY: row chunks [r0, r1) partition out — disjoint spans
+            let slice = unsafe { shared.range(r0 * n, r1 * n) };
             kernels::matmul_nt_block(self, &packed, r0, r1, slice);
         });
-        out
     }
 
     /// C = Aᵀ · A (symmetric Gram matrix, only upper computed then
     /// mirrored; auto-parallel past [`PAR_MIN_WORK`], bit-identical).
     pub fn gram_t(&self) -> Mat {
         let at = self.transpose();
-        gram_upper_auto(&at)
+        let mut out = Mat::zeros(0, 0);
+        gram_upper_auto_into(&at, &mut out);
+        out
     }
 
     /// C = Aᵀ · A on `pool`: upper-triangle row segments computed in
@@ -197,19 +251,33 @@ impl Mat {
     /// [`Mat::gram_t`] (every entry runs the same canonical program).
     pub fn par_gram_t(&self, pool: &crate::par::Pool) -> Mat {
         let at = self.transpose();
-        gram_upper(&at, pool)
+        let mut out = Mat::zeros(0, 0);
+        gram_upper_into(&at, pool, &mut out);
+        out
     }
 
     /// C = A · Aᵀ (symmetric, rows as vectors; auto-parallel past
     /// [`PAR_MIN_WORK`], bit-identical).
     pub fn gram_n(&self) -> Mat {
-        gram_upper_auto(self)
+        let mut out = Mat::zeros(0, 0);
+        gram_upper_auto_into(self, &mut out);
+        out
+    }
+
+    /// [`Mat::gram_n`] writing into a caller-held output — with the pack
+    /// workspace-recycled and the row segments written straight into the
+    /// output's rows, a reused `out` makes the steady-state Gram loop
+    /// allocation-free (`tests/alloc_steady_state.rs`).
+    pub fn gram_n_into(&self, out: &mut Mat) {
+        gram_upper_auto_into(self, out);
     }
 
     /// C = A · Aᵀ on `pool` (see [`Mat::par_gram_t`]; bit-identical to
     /// [`Mat::gram_n`]).
     pub fn par_gram_n(&self, pool: &crate::par::Pool) -> Mat {
-        gram_upper(self, pool)
+        let mut out = Mat::zeros(0, 0);
+        gram_upper_into(self, pool, &mut out);
+        out
     }
 
     /// y = A · x
@@ -264,12 +332,20 @@ impl Mat {
 
     /// Extract columns [c0, c1) as a new matrix.
     pub fn cols_range(&self, c0: usize, c1: usize) -> Mat {
+        let mut out = Mat::zeros(0, 0);
+        self.cols_range_into(c0, c1, &mut out);
+        out
+    }
+
+    /// [`Mat::cols_range`] into a caller-held (e.g. workspace-recycled)
+    /// matrix — the Σ-accumulation chunk loop reuses one slice buffer
+    /// this way instead of allocating per chunk.
+    pub fn cols_range_into(&self, c0: usize, c1: usize, out: &mut Mat) {
         assert!(c0 <= c1 && c1 <= self.cols);
-        let mut out = Mat::zeros(self.rows, c1 - c0);
+        out.resize_zeroed(self.rows, c1 - c0);
         for i in 0..self.rows {
             out.row_mut(i).copy_from_slice(&self.row(i)[c0..c1]);
         }
-        out
     }
 
     pub fn random_normal(rng: &mut crate::rng::Rng, rows: usize, cols: usize)
@@ -302,41 +378,50 @@ pub const PAR_MIN_WORK: usize = 1 << 20;
 
 /// Auto-parallel gram: pick serial below [`PAR_MIN_WORK`] without ever
 /// touching (and therefore initializing) the global pool.
-fn gram_upper_auto(src: &Mat) -> Mat {
+fn gram_upper_auto_into(src: &Mat, out: &mut Mat) {
     let m = src.rows;
     if m <= 1 || m * m * src.cols / 2 < PAR_MIN_WORK || crate::par::in_pool() {
-        gram_upper(src, &crate::par::Pool::serial())
+        gram_upper_into(src, &crate::par::Pool::serial(), out)
     } else {
-        gram_upper(src, crate::par::global())
+        gram_upper_into(src, crate::par::global(), out)
     }
 }
 
-/// Shared body of the four gram entry points: upper-triangle row segments
+/// Shared body of the gram entry points: upper-triangle row segments
 /// (each on the canonical scalar program of
-/// [`kernels::gram_row_segment_packed`]), computed serially or on the
-/// pool, then assembled + mirrored in fixed row order.  The source rows
-/// are packed into SIMD lane strips once, amortized over every segment.
-fn gram_upper(src: &Mat, pool: &crate::par::Pool) -> Mat {
+/// [`kernels::gram_row_segment_into`]), written **directly into the
+/// output matrix's rows** — row `i`'s segment is the disjoint span
+/// `out[i, i..]`, handed to the pool through a
+/// [`workspace::SharedSlice`] — then mirrored in fixed order.  The
+/// source rows are packed into SIMD lane strips once (workspace-
+/// recycled), amortized over every segment; no path allocates a
+/// per-row vector.
+fn gram_upper_into(src: &Mat, pool: &crate::par::Pool, out: &mut Mat) {
     let m = src.rows;
     let work = m * m * src.cols / 2;
+    out.resize_zeroed(m, m);
     let packed = kernels::pack_rows(src);
-    let rows: Vec<Vec<f64>> =
-        if pool.threads() == 1 || m <= 1 || work < PAR_MIN_WORK {
-            (0..m)
-                .map(|i| kernels::gram_row_segment_packed(src, &packed, i))
-                .collect()
-        } else {
-            pool.map(m, |i| kernels::gram_row_segment_packed(src, &packed, i))
+    {
+        let shared = workspace::SharedSlice::new(&mut out.data);
+        let seg = |i: usize| {
+            // SAFETY: segment i lives in out row i — rows are disjoint
+            let row = unsafe { shared.range(i * m + i, (i + 1) * m) };
+            kernels::gram_row_segment_into(src, &packed, i, row);
         };
-    let mut out = Mat::zeros(m, m);
-    for (i, seg) in rows.iter().enumerate() {
-        for (off, &v) in seg.iter().enumerate() {
-            let j = i + off;
-            out.data[i * m + j] = v;
-            out.data[j * m + i] = v;
+        if pool.threads() == 1 || m <= 1 || work < PAR_MIN_WORK {
+            for i in 0..m {
+                seg(i);
+            }
+        } else {
+            pool.for_indices(m, seg);
         }
     }
-    out
+    // mirror the strict upper triangle (fixed order, plain copies)
+    for i in 0..m {
+        for j in i + 1..m {
+            out.data[j * m + i] = out.data[i * m + j];
+        }
+    }
 }
 
 /// Unrolled dot product — the single hottest scalar loop in the crate.
@@ -471,6 +556,60 @@ mod tests {
                 assert_eq!(gn, a.par_gram_n(&pool), "gram_n {r}x{c} t={t}");
             }
         }
+    }
+
+    #[test]
+    fn into_variants_match_and_reshape_across_calls() {
+        // one reused output must track shape changes and stay bit-equal
+        // to the allocating entry points
+        let mut out = Mat::zeros(0, 0);
+        for (m, k, n) in [(7usize, 5usize, 9usize), (17, 16, 15), (3, 8, 2),
+                          (17, 16, 15)] {
+            let a = rand_mat(m as u64 * 13 + k as u64, m, k);
+            let bt = rand_mat(n as u64 * 11 + k as u64, n, k);
+            a.matmul_nt_into(&bt, &mut out);
+            assert_eq!(out, a.matmul_nt(&bt), "{m}x{k}·{n}ᵀ");
+        }
+        for (r, c) in [(6usize, 4usize), (12, 9), (6, 4)] {
+            let a = rand_mat(r as u64 * 5 + c as u64, r, c);
+            a.gram_n_into(&mut out);
+            assert_eq!(out, a.gram_n(), "gram {r}x{c}");
+        }
+        use crate::par::Pool;
+        let a = rand_mat(91, 40, 12);
+        let bt = rand_mat(92, 33, 12);
+        a.par_matmul_nt_into(&bt, &Pool::new(3), &mut out);
+        assert_eq!(out, a.matmul_nt(&bt));
+    }
+
+    #[test]
+    fn add_assign_matches_add_bitwise() {
+        let a = rand_mat(61, 9, 7);
+        let b = rand_mat(62, 9, 7);
+        let sum = a.add(&b);
+        let mut acc = a.clone();
+        acc.add_assign(&b);
+        assert_eq!(acc, sum);
+    }
+
+    #[test]
+    fn cols_range_into_matches_cols_range() {
+        let a = rand_mat(63, 6, 10);
+        let mut out = Mat::zeros(0, 0);
+        for (c0, c1) in [(0usize, 10usize), (3, 7), (9, 10), (4, 4)] {
+            a.cols_range_into(c0, c1, &mut out);
+            assert_eq!(out, a.cols_range(c0, c1), "[{c0}, {c1})");
+        }
+    }
+
+    #[test]
+    fn resize_zeroed_clears_and_reshapes() {
+        let mut m = rand_mat(64, 4, 5);
+        let cap = m.data.capacity();
+        m.resize_zeroed(2, 3);
+        assert_eq!((m.rows, m.cols), (2, 3));
+        assert!(m.data.iter().all(|&x| x == 0.0));
+        assert!(m.data.capacity() >= cap.min(6));
     }
 
     #[test]

@@ -38,6 +38,32 @@
 //! Because every backend produces identical bits, flipping the backend
 //! between (or even during) operations can never change a result — which
 //! is what makes the process-global override safe for concurrent tests.
+//!
+//! # The opt-in FMA mode (`--fma` / `LRC_FMA=1`, default **off**)
+//!
+//! A fused multiply-add rounds once where mul-then-add rounds twice, so
+//! turning it on **changes the canonical per-element program** — the one
+//! thing the default contract promises never changes.  FMA mode is
+//! therefore a *different contract with the same shape*: every output
+//! element becomes one accumulator advanced in strictly ascending `k` by
+//! `acc = fma(a, b, acc)`, and all paths — serial, blocked, chunked,
+//! parallel, every backend — are bit-identical to a **lockstep FMA
+//! reference** (the naive triple loop with `f64::mul_add`;
+//! `tests/kernel_oracle.rs` carries both references and selects by mode).
+//! That works because IEEE-754 `fusedMultiplyAdd` is a single
+//! correctly-rounded operation: `f64::mul_add`, `_mm256_fmadd_pd` and
+//! `vfmaq_f64` all produce the same bits for the same operands.  Backends
+//! without a packed FMA instruction (scalar, SSE2, AVX2 on pre-FMA hosts)
+//! run the scalar `mul_add` program at their tile width — same bits by
+//! the same argument that makes lane-splitting safe in the default mode.
+//!
+//! The mode is resolved like the backend — [`set_fma`] override (the
+//! CLI's `--fma`) > `LRC_FMA` env (read once) > off — and is **captured
+//! at pack time** alongside the backend (see `kernels::PackedRows`), so a
+//! mid-product flip can never mix the two programs inside one result.
+//! Determinism across thread counts holds in both modes for the same
+//! reason it holds at all: chunking never touches the per-element
+//! program.
 
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
@@ -184,6 +210,59 @@ pub fn set_backend(b: Option<Backend>) -> Result<(), String> {
     Ok(())
 }
 
+/// Process-wide FMA-mode override installed by `--fma` (0 = unset,
+/// 1 = forced on, 2 = forced off).
+static FMA_OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+/// `LRC_FMA`, parsed once (`true` only for an explicit enable).
+static ENV_FMA: OnceLock<bool> = OnceLock::new();
+
+/// Install a process-wide FMA-mode override (the CLI's `--fma` flag, and
+/// the sweep knob of the FMA oracle legs / benches).  `None` restores
+/// env-then-default resolution.  Unlike backends there is no availability
+/// question: every host runs the fused program (via `f64::mul_add` when
+/// no packed FMA instruction exists) with identical bits.
+pub fn set_fma(mode: Option<bool>) {
+    FMA_OVERRIDE.store(match mode {
+        None => 0,
+        Some(true) => 1,
+        Some(false) => 2,
+    }, Ordering::SeqCst);
+}
+
+/// Resolve the active accumulation program: [`set_fma`] override >
+/// `LRC_FMA` env (`1|true|on|yes` enable; anything else — including
+/// unset — keeps the default) > **off**.  Consumers capture this once
+/// per packed product (`kernels::pack_rows`), never per tile.
+pub fn fma_active() -> bool {
+    match FMA_OVERRIDE.load(Ordering::SeqCst) {
+        1 => return true,
+        2 => return false,
+        _ => {}
+    }
+    *ENV_FMA.get_or_init(|| {
+        match std::env::var("LRC_FMA").ok().as_deref() {
+            Some("1") | Some("true") | Some("on") | Some("yes") => true,
+            Some("0") | Some("false") | Some("off") | Some("no") | None => {
+                false
+            }
+            Some(other) => {
+                eprintln!("warning: LRC_FMA={other:?} not understood \
+                           (1|0|true|false|on|off|yes|no) — FMA stays off");
+                false
+            }
+        }
+    })
+}
+
+/// Whether the host has a packed FMA instruction for the AVX2 tile
+/// (checked once by the std detection cache; pre-FMA AVX2 hosts fall
+/// back to the bit-identical scalar `mul_add` program).
+#[cfg(target_arch = "x86_64")]
+fn fma_hw() -> bool {
+    std::arch::is_x86_feature_detected!("fma")
+}
+
 /// Resolve the active backend: override > `LRC_SIMD` env > [`detect`].
 /// The env var is read exactly once per process; the [`set_backend`]
 /// override stays live throughout (mirrors `par::threads`).
@@ -222,13 +301,19 @@ pub fn active() -> Backend {
 // every element on one k-panel-spanning ascending-k chain.
 // ---------------------------------------------------------------------------
 
-/// Four-row register tile: for each row `r` and lane `l`,
+/// Four-row register tile.  With `fma` false (the default contract):
 /// `acc[r*nr + l] += a[r][kk] · bp[kk*nr + l]` for `kk` ascending —
-/// separate mul then add per lane, never fused.
-pub(crate) fn tile4(be: Backend, a: [&[f64]; 4], bp: &[f64],
+/// separate mul then add per lane, never fused.  With `fma` true (the
+/// opt-in mode, captured at pack time): the same chain advanced by one
+/// fused `mul_add` per step — bit-identical to the lockstep FMA
+/// reference on every backend.
+pub(crate) fn tile4(be: Backend, fma: bool, a: [&[f64]; 4], bp: &[f64],
                     acc: &mut [f64]) {
     debug_assert_eq!(bp.len(), a[0].len() * be.nr());
     debug_assert_eq!(acc.len(), 4 * be.nr());
+    if fma {
+        return tile4_fma(be, a, bp, acc);
+    }
     match be {
         Backend::Scalar => tile4_scalar(a, bp, acc, 4),
         #[cfg(target_arch = "x86_64")]
@@ -249,10 +334,15 @@ pub(crate) fn tile4(be: Backend, a: [&[f64]; 4], bp: &[f64],
 }
 
 /// Single-row tile (ragged row edges, and the Gram row-segment kernel):
-/// `acc[l] += a[kk] · bp[kk*nr + l]` for `kk` ascending.
-pub(crate) fn tile1(be: Backend, a: &[f64], bp: &[f64], acc: &mut [f64]) {
+/// `acc[l] += a[kk] · bp[kk*nr + l]` for `kk` ascending (one fused
+/// `mul_add` per step in FMA mode).
+pub(crate) fn tile1(be: Backend, fma: bool, a: &[f64], bp: &[f64],
+                    acc: &mut [f64]) {
     debug_assert_eq!(bp.len(), a.len() * be.nr());
     debug_assert_eq!(acc.len(), be.nr());
+    if fma {
+        return tile1_fma(be, a, bp, acc);
+    }
     match be {
         Backend::Scalar => tile1_scalar(a, bp, acc, 4),
         #[cfg(target_arch = "x86_64")]
@@ -263,6 +353,33 @@ pub(crate) fn tile1(be: Backend, a: &[f64], bp: &[f64], acc: &mut [f64]) {
         #[cfg(target_arch = "aarch64")]
         Backend::Neon => unsafe { tile1_neon(a, bp, acc) },
         other => tile1_scalar(a, bp, acc, other.nr()),
+    }
+}
+
+/// FMA-mode tile4 dispatch.  Backends without a packed FMA run the
+/// scalar `f64::mul_add` program at their own tile width — the same
+/// correctly-rounded operation, therefore the same bits.
+fn tile4_fma(be: Backend, a: [&[f64]; 4], bp: &[f64], acc: &mut [f64]) {
+    match be {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 if fma_hw() =>
+            // SAFETY: avx2 selectable ⇒ available; fma_hw() just checked.
+            unsafe { tile4_avx2_fma(a, bp, acc) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON (incl. fused vfmaq) is baseline on aarch64.
+        Backend::Neon => unsafe { tile4_neon_fma(a, bp, acc) },
+        other => tile4_scalar_fma(a, bp, acc, other.nr()),
+    }
+}
+
+/// FMA-mode tile1 dispatch (see [`tile4_fma`]).
+fn tile1_fma(be: Backend, a: &[f64], bp: &[f64], acc: &mut [f64]) {
+    match be {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 if fma_hw() => unsafe { tile1_avx2_fma(a, bp, acc) },
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => unsafe { tile1_neon_fma(a, bp, acc) },
+        other => tile1_scalar_fma(a, bp, acc, other.nr()),
     }
 }
 
@@ -287,6 +404,32 @@ fn tile1_scalar(a: &[f64], bp: &[f64], acc: &mut [f64], nr: usize) {
         let y = &bp[kk * nr..(kk + 1) * nr];
         for l in 0..nr {
             acc[l] += x * y[l];
+        }
+    }
+}
+
+// --- FMA-mode scalar reference (f64::mul_add = IEEE fusedMultiplyAdd,
+//     bit-identical to every hardware FMA below) ------------------------------
+
+fn tile4_scalar_fma(a: [&[f64]; 4], bp: &[f64], acc: &mut [f64], nr: usize) {
+    let kw = a[0].len();
+    for kk in 0..kw {
+        let y = &bp[kk * nr..(kk + 1) * nr];
+        for r in 0..4 {
+            let x = a[r][kk];
+            let row = &mut acc[r * nr..(r + 1) * nr];
+            for l in 0..nr {
+                row[l] = x.mul_add(y[l], row[l]);
+            }
+        }
+    }
+}
+
+fn tile1_scalar_fma(a: &[f64], bp: &[f64], acc: &mut [f64], nr: usize) {
+    for (kk, &x) in a.iter().enumerate() {
+        let y = &bp[kk * nr..(kk + 1) * nr];
+        for l in 0..nr {
+            acc[l] = x.mul_add(y[l], acc[l]);
         }
     }
 }
@@ -421,6 +564,70 @@ unsafe fn tile1_avx2(a: &[f64], bp: &[f64], acc: &mut [f64]) {
     _mm256_storeu_pd(p.add(4), c1);
 }
 
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn tile4_avx2_fma(a: [&[f64]; 4], bp: &[f64], acc: &mut [f64]) {
+    use core::arch::x86_64::*;
+    const NR: usize = 8;
+    let kw = a[0].len();
+    let (a0, a1, a2, a3) = (a[0], a[1], a[2], a[3]);
+    let p = acc.as_mut_ptr();
+    let mut c00 = _mm256_loadu_pd(p);
+    let mut c01 = _mm256_loadu_pd(p.add(4));
+    let mut c10 = _mm256_loadu_pd(p.add(8));
+    let mut c11 = _mm256_loadu_pd(p.add(12));
+    let mut c20 = _mm256_loadu_pd(p.add(16));
+    let mut c21 = _mm256_loadu_pd(p.add(20));
+    let mut c30 = _mm256_loadu_pd(p.add(24));
+    let mut c31 = _mm256_loadu_pd(p.add(28));
+    let bpp = bp.as_ptr();
+    for kk in 0..kw {
+        let y0 = _mm256_loadu_pd(bpp.add(kk * NR));
+        let y1 = _mm256_loadu_pd(bpp.add(kk * NR + 4));
+        // the FMA-mode program: one correctly-rounded fused op per step
+        let x0 = _mm256_set1_pd(a0[kk]);
+        c00 = _mm256_fmadd_pd(x0, y0, c00);
+        c01 = _mm256_fmadd_pd(x0, y1, c01);
+        let x1 = _mm256_set1_pd(a1[kk]);
+        c10 = _mm256_fmadd_pd(x1, y0, c10);
+        c11 = _mm256_fmadd_pd(x1, y1, c11);
+        let x2 = _mm256_set1_pd(a2[kk]);
+        c20 = _mm256_fmadd_pd(x2, y0, c20);
+        c21 = _mm256_fmadd_pd(x2, y1, c21);
+        let x3 = _mm256_set1_pd(a3[kk]);
+        c30 = _mm256_fmadd_pd(x3, y0, c30);
+        c31 = _mm256_fmadd_pd(x3, y1, c31);
+    }
+    _mm256_storeu_pd(p, c00);
+    _mm256_storeu_pd(p.add(4), c01);
+    _mm256_storeu_pd(p.add(8), c10);
+    _mm256_storeu_pd(p.add(12), c11);
+    _mm256_storeu_pd(p.add(16), c20);
+    _mm256_storeu_pd(p.add(20), c21);
+    _mm256_storeu_pd(p.add(24), c30);
+    _mm256_storeu_pd(p.add(28), c31);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn tile1_avx2_fma(a: &[f64], bp: &[f64], acc: &mut [f64]) {
+    use core::arch::x86_64::*;
+    const NR: usize = 8;
+    let p = acc.as_mut_ptr();
+    let mut c0 = _mm256_loadu_pd(p);
+    let mut c1 = _mm256_loadu_pd(p.add(4));
+    let bpp = bp.as_ptr();
+    for (kk, &xv) in a.iter().enumerate() {
+        let x = _mm256_set1_pd(xv);
+        let y0 = _mm256_loadu_pd(bpp.add(kk * NR));
+        let y1 = _mm256_loadu_pd(bpp.add(kk * NR + 4));
+        c0 = _mm256_fmadd_pd(x, y0, c0);
+        c1 = _mm256_fmadd_pd(x, y1, c1);
+    }
+    _mm256_storeu_pd(p, c0);
+    _mm256_storeu_pd(p.add(4), c1);
+}
+
 // --- aarch64: NEON (baseline) ----------------------------------------------
 
 #[cfg(target_arch = "aarch64")]
@@ -487,6 +694,70 @@ unsafe fn tile1_neon(a: &[f64], bp: &[f64], acc: &mut [f64]) {
     vst1q_f64(p.add(2), c1);
 }
 
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn tile4_neon_fma(a: [&[f64]; 4], bp: &[f64], acc: &mut [f64]) {
+    use core::arch::aarch64::*;
+    const NR: usize = 4;
+    let kw = a[0].len();
+    let (a0, a1, a2, a3) = (a[0], a[1], a[2], a[3]);
+    let p = acc.as_mut_ptr();
+    let mut c00 = vld1q_f64(p);
+    let mut c01 = vld1q_f64(p.add(2));
+    let mut c10 = vld1q_f64(p.add(4));
+    let mut c11 = vld1q_f64(p.add(6));
+    let mut c20 = vld1q_f64(p.add(8));
+    let mut c21 = vld1q_f64(p.add(10));
+    let mut c30 = vld1q_f64(p.add(12));
+    let mut c31 = vld1q_f64(p.add(14));
+    let bpp = bp.as_ptr();
+    for kk in 0..kw {
+        let y0 = vld1q_f64(bpp.add(kk * NR));
+        let y1 = vld1q_f64(bpp.add(kk * NR + 2));
+        // vfmaq_f64(acc, x, y) = acc + x·y, fused — the FMA-mode program
+        let x0 = vdupq_n_f64(a0[kk]);
+        c00 = vfmaq_f64(c00, x0, y0);
+        c01 = vfmaq_f64(c01, x0, y1);
+        let x1 = vdupq_n_f64(a1[kk]);
+        c10 = vfmaq_f64(c10, x1, y0);
+        c11 = vfmaq_f64(c11, x1, y1);
+        let x2 = vdupq_n_f64(a2[kk]);
+        c20 = vfmaq_f64(c20, x2, y0);
+        c21 = vfmaq_f64(c21, x2, y1);
+        let x3 = vdupq_n_f64(a3[kk]);
+        c30 = vfmaq_f64(c30, x3, y0);
+        c31 = vfmaq_f64(c31, x3, y1);
+    }
+    vst1q_f64(p, c00);
+    vst1q_f64(p.add(2), c01);
+    vst1q_f64(p.add(4), c10);
+    vst1q_f64(p.add(6), c11);
+    vst1q_f64(p.add(8), c20);
+    vst1q_f64(p.add(10), c21);
+    vst1q_f64(p.add(12), c30);
+    vst1q_f64(p.add(14), c31);
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn tile1_neon_fma(a: &[f64], bp: &[f64], acc: &mut [f64]) {
+    use core::arch::aarch64::*;
+    const NR: usize = 4;
+    let p = acc.as_mut_ptr();
+    let mut c0 = vld1q_f64(p);
+    let mut c1 = vld1q_f64(p.add(2));
+    let bpp = bp.as_ptr();
+    for (kk, &xv) in a.iter().enumerate() {
+        let x = vdupq_n_f64(xv);
+        let y0 = vld1q_f64(bpp.add(kk * NR));
+        let y1 = vld1q_f64(bpp.add(kk * NR + 2));
+        c0 = vfmaq_f64(c0, x, y0);
+        c1 = vfmaq_f64(c1, x, y1);
+    }
+    vst1q_f64(p, c0);
+    vst1q_f64(p.add(2), c1);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -540,16 +811,80 @@ mod tests {
                     [&rows[0], &rows[1], &rows[2], &rows[3]], &bp, &mut want,
                     nr);
                 let mut got = init.clone();
-                tile4(be, [&rows[0], &rows[1], &rows[2], &rows[3]], &bp,
-                      &mut got);
+                tile4(be, false, [&rows[0], &rows[1], &rows[2], &rows[3]],
+                      &bp, &mut got);
                 assert_eq!(want, got, "tile4 {} kw={kw}", be.name());
 
                 let mut want1 = init[..nr].to_vec();
                 tile1_scalar(&rows[0], &bp, &mut want1, nr);
                 let mut got1 = init[..nr].to_vec();
-                tile1(be, &rows[0], &bp, &mut got1);
+                tile1(be, false, &rows[0], &bp, &mut got1);
                 assert_eq!(want1, got1, "tile1 {} kw={kw}", be.name());
             }
         }
     }
+
+    #[test]
+    fn fma_tiles_match_the_scalar_mul_add_program_bitwise() {
+        // FMA mode's contract at the microkernel level: every backend's
+        // fused tile == the scalar f64::mul_add program (both are one
+        // correctly-rounded fusedMultiplyAdd per step).  The flag is a
+        // per-call parameter here, so this never flips the process-wide
+        // mode under concurrently running tests.
+        let mut rng = crate::rng::Rng::new(123);
+        for be in available_backends() {
+            let nr = be.nr();
+            for kw in [0usize, 1, 3, 7, 65, 130] {
+                let rows: Vec<Vec<f64>> =
+                    (0..4).map(|_| rng.normal_vec(kw)).collect();
+                let bp = rng.normal_vec(kw * nr);
+                let init = rng.normal_vec(4 * nr);
+
+                let mut want = init.clone();
+                tile4_scalar_fma(
+                    [&rows[0], &rows[1], &rows[2], &rows[3]], &bp, &mut want,
+                    nr);
+                let mut got = init.clone();
+                tile4(be, true, [&rows[0], &rows[1], &rows[2], &rows[3]],
+                      &bp, &mut got);
+                assert_eq!(want, got, "tile4 fma {} kw={kw}", be.name());
+
+                let mut want1 = init[..nr].to_vec();
+                tile1_scalar_fma(&rows[0], &bp, &mut want1, nr);
+                let mut got1 = init[..nr].to_vec();
+                tile1(be, true, &rows[0], &bp, &mut got1);
+                assert_eq!(want1, got1, "tile1 fma {} kw={kw}", be.name());
+            }
+        }
+    }
+
+    #[test]
+    fn fma_mode_differs_from_mul_add_somewhere() {
+        // sanity that the fused program is genuinely a different
+        // canonical program (not a no-op flag): over many random chains
+        // at least one accumulator bit must differ
+        let mut rng = crate::rng::Rng::new(7);
+        let mut differed = false;
+        for _ in 0..64 {
+            let a = rng.normal_vec(33);
+            let bp = rng.normal_vec(33 * 4);
+            let mut plain = vec![0.0_f64; 4];
+            tile1_scalar(&a, &bp, &mut plain, 4);
+            let mut fused = vec![0.0_f64; 4];
+            tile1_scalar_fma(&a, &bp, &mut fused, 4);
+            if plain != fused {
+                differed = true;
+                break;
+            }
+        }
+        assert!(differed, "fused and mul-then-add never diverged");
+    }
+
+    // NOTE: no unit test here flips the process-global FMA override —
+    // unlike the backend override, the FMA mode *changes bits*, so a
+    // mid-test flip could fail concurrently running reference
+    // comparisons.  The override/env resolution is exercised by the
+    // serialized FMA legs in `tests/kernel_oracle.rs` and by the CI
+    // matrix's LRC_FMA=1 job (which runs this whole suite with
+    // `fma_active()` = true end to end).
 }

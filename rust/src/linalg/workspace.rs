@@ -1,0 +1,281 @@
+//! Per-thread scratch arenas: grow-only buffer reuse for the compute hot
+//! paths, so steady-state GEMM / Gram / Jacobi loops are **allocation-free**.
+//!
+//! # Why thread-local is per-worker
+//!
+//! Every arena lives in a thread-local.  The [`crate::par`] pool's workers
+//! are *persistent* threads (parked on the job board between epochs), so a
+//! worker's arena survives across epochs and across the whole per-layer
+//! quantization fan-out: the packed B/A panels, Σ temporaries and solver
+//! scratch a worker touches while quantizing layer 7 are the very buffers
+//! it reuses for layer 19.  Serial callers get the same treatment through
+//! the calling thread's own arena.  (This is one more reason the
+//! persistent pool beats spawn-per-call scoped threads: a fresh thread
+//! starts with a cold, empty arena every time.)
+//!
+//! # Shape of the arena
+//!
+//! A small free list of `Vec<f64>` buffers, keyed by capacity.
+//! [`take_zeroed`] / [`take_copy`] hand out the best-fitting cached
+//! buffer (smallest capacity that holds the request); in steady state — same
+//! kernel shapes call after call, exactly the per-layer fan-out pattern —
+//! every take is a cache hit and performs **zero allocations**
+//! (`tests/alloc_steady_state.rs` locks this with a counting global
+//! allocator).  [`put`] returns a buffer; the list is capacity-capped
+//! ([`MAX_CACHED`]) with a keep-the-biggest eviction policy so the arena
+//! stays bounded while the most reusable panels survive.
+//!
+//! Buffers are plain `Vec<f64>`s: forgetting to [`put`] one back is not a
+//! leak (it just drops), and a buffer `put` on a different thread than it
+//! was taken from simply migrates arenas.  The [`Mat`]-shaped helpers
+//! ([`take_mat`], [`take_mat_copy`], [`recycle_mat`]) wrap the same pool
+//! for callers that want matrix scratch.
+//!
+//! The module is `pub` so the integration tests and bench targets can
+//! exercise the arena directly; library code outside `linalg`/`quant`
+//! should not need it.
+
+use std::cell::RefCell;
+
+use super::Mat;
+
+/// Max buffers one thread's arena caches; overflow evicts the smallest.
+pub const MAX_CACHED: usize = 24;
+
+/// Max bytes one thread's arena retains (and max size of any single
+/// cached buffer).  Keep-the-biggest eviction would otherwise pin the
+/// largest panels a long-lived process ever touched — e.g. one huge
+/// model quantized once — in every worker's thread-local forever; the
+/// byte cap bounds that retention while still covering this repro's
+/// d ≤ 512 working set (a packed 512×512 B panel is ~2 MB) many times
+/// over.
+pub const MAX_CACHED_BYTES: usize = 64 << 20;
+
+thread_local! {
+    /// This thread's free list (capacity-keyed, grow-only).
+    static ARENA: RefCell<Vec<Vec<f64>>> = const { RefCell::new(Vec::new()) };
+}
+
+/// A scratch buffer of exactly `len` zeros, reusing this thread's arena
+/// when a cached buffer is large enough (no allocation), growing one
+/// otherwise.  Return it with [`put`] when done.
+pub fn take_zeroed(len: usize) -> Vec<f64> {
+    let mut v = take_raw(len);
+    v.clear();
+    v.resize(len, 0.0);
+    v
+}
+
+/// A scratch buffer holding a copy of `src` (length `src.len()`); the
+/// copy is into recycled storage, so in steady state this allocates
+/// nothing.  Return it with [`put`].
+pub fn take_copy(src: &[f64]) -> Vec<f64> {
+    let mut v = take_raw(src.len());
+    v.clear();
+    v.extend_from_slice(src);
+    v
+}
+
+/// Pull the best-fitting cached buffer (length unspecified — callers
+/// clear/resize), or a fresh one with `len` capacity on a cache miss.
+/// Zero-length requests never consume a cached buffer (a degenerate
+/// request would otherwise best-fit — and pin — the smallest one).
+fn take_raw(len: usize) -> Vec<f64> {
+    if len == 0 {
+        return Vec::new();
+    }
+    ARENA.with(|a| {
+        let mut free = a.borrow_mut();
+        // best fit: smallest capacity that already holds the request;
+        // else the largest cached buffer (one realloc, then it serves
+        // this shape forever); else a fresh allocation
+        let mut best: Option<usize> = None;
+        let mut largest: Option<usize> = None;
+        for (i, b) in free.iter().enumerate() {
+            if b.capacity() >= len {
+                if best.map_or(true, |j| b.capacity() < free[j].capacity()) {
+                    best = Some(i);
+                }
+            }
+            if largest.map_or(true, |j: usize| b.capacity() > free[j].capacity()) {
+                largest = Some(i);
+            }
+        }
+        match best.or(largest) {
+            Some(i) => free.swap_remove(i),
+            None => Vec::with_capacity(len),
+        }
+    })
+}
+
+/// Return a buffer to this thread's arena.  Bounded two ways: past
+/// [`MAX_CACHED`] buffers or [`MAX_CACHED_BYTES`] total, the smallest
+/// buffers (incoming included) are dropped — and a single buffer larger
+/// than the byte cap is never cached at all — so neither varied-shape
+/// workloads nor one giant model can grow a worker's arena without
+/// bound.
+pub fn put(v: Vec<f64>) {
+    let bytes = v.capacity() * std::mem::size_of::<f64>();
+    if v.capacity() == 0 || bytes > MAX_CACHED_BYTES {
+        return;
+    }
+    ARENA.with(|a| {
+        let mut free = a.borrow_mut();
+        free.push(v);
+        let total = |free: &Vec<Vec<f64>>| -> usize {
+            free.iter().map(|b| b.capacity()).sum::<usize>()
+                * std::mem::size_of::<f64>()
+        };
+        while free.len() > MAX_CACHED
+            || (free.len() > 1 && total(&free) > MAX_CACHED_BYTES)
+        {
+            let smallest = (0..free.len())
+                .min_by_key(|&i| free[i].capacity())
+                .unwrap();
+            free.swap_remove(smallest);
+        }
+    });
+}
+
+/// A `rows × cols` zeroed [`Mat`] backed by arena storage.  Pass it to
+/// [`recycle_mat`] when done (dropping it instead is safe, just a future
+/// cache miss).
+pub fn take_mat(rows: usize, cols: usize) -> Mat {
+    Mat { rows, cols, data: take_zeroed(rows * cols) }
+}
+
+/// An arena-backed copy of `src` (same shape, same bits, recycled
+/// storage).
+pub fn take_mat_copy(src: &Mat) -> Mat {
+    Mat { rows: src.rows, cols: src.cols, data: take_copy(&src.data) }
+}
+
+/// An empty 0×0 [`Mat`] whose storage already holds capacity for
+/// `rows × cols` — for handing to the `*_into` entry points
+/// ([`Mat::matmul_nt_into`], [`Mat::gram_n_into`],
+/// [`Mat::cols_range_into`], [`Mat::resize_zeroed`]), which reshape and
+/// fill the target themselves.  Skips the zero-fill [`take_mat`] would
+/// do (the `*_into` call zeroes or overwrites every element anyway), so
+/// the scratch is written once, not twice.
+pub fn take_mat_for(rows: usize, cols: usize) -> Mat {
+    let len = rows * cols;
+    let mut data = take_raw(len);
+    data.clear();
+    data.reserve(len);
+    Mat { rows: 0, cols: 0, data }
+}
+
+/// Return a [`take_mat`]/[`take_mat_copy`] matrix's storage to the arena.
+pub fn recycle_mat(m: Mat) {
+    put(m.data);
+}
+
+/// Shared mutable slice for **disjoint** parallel writes: the pool's
+/// workers write non-overlapping ranges of one output buffer (GEMM row
+/// chunks, Gram row segments, Jacobi pair scratch) without per-item
+/// allocation or locking.
+///
+/// SAFETY contract: callers must hand out non-overlapping ranges only —
+/// each `range` call conjures `&mut` access to its span, so two live
+/// overlapping ranges would be UB.  Every use in this crate derives the
+/// ranges from a partition (row chunks, per-pair chunks), which is
+/// disjoint by construction.
+pub(crate) struct SharedSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: std::marker::PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: access is only through `range`, whose disjointness contract
+// makes cross-thread use sound; T: Send because the &mut spans move to
+// worker threads.
+unsafe impl<T: Send> Sync for SharedSlice<'_, T> {}
+
+impl<'a, T> SharedSlice<'a, T> {
+    pub fn new(s: &'a mut [T]) -> Self {
+        SharedSlice { ptr: s.as_mut_ptr(), len: s.len(),
+                      _marker: std::marker::PhantomData }
+    }
+
+    /// The sub-slice `[start, end)`.
+    ///
+    /// SAFETY: the caller guarantees no other live range overlaps
+    /// `[start, end)` for the duration of the returned borrow.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn range(&self, start: usize, end: usize) -> &mut [T] {
+        debug_assert!(start <= end && end <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(start), end - start)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_put_roundtrip_reuses_capacity() {
+        let v = take_zeroed(513);
+        assert_eq!(v.len(), 513);
+        assert!(v.iter().all(|&x| x == 0.0));
+        let cap = v.capacity();
+        let p = v.as_ptr();
+        put(v);
+        // same-shape take must come back from the cache (same storage)
+        let v2 = take_zeroed(513);
+        assert!(v2.capacity() >= 513);
+        assert_eq!((v2.as_ptr(), v2.capacity()), (p, cap));
+        put(v2);
+    }
+
+    #[test]
+    fn take_zeroed_clears_previous_contents() {
+        let mut v = take_zeroed(8);
+        v.iter_mut().for_each(|x| *x = 7.0);
+        put(v);
+        let v = take_zeroed(8);
+        assert!(v.iter().all(|&x| x == 0.0));
+        put(v);
+    }
+
+    #[test]
+    fn take_copy_copies_bits() {
+        let src = [1.5, -2.25, 0.0, 1e-300];
+        let v = take_copy(&src);
+        assert_eq!(&v[..], &src[..]);
+        put(v);
+    }
+
+    #[test]
+    fn arena_stays_bounded() {
+        for i in 0..3 * MAX_CACHED {
+            put(Vec::with_capacity(16 + i));
+        }
+        ARENA.with(|a| assert!(a.borrow().len() <= MAX_CACHED));
+    }
+
+    #[test]
+    fn mat_helpers_roundtrip() {
+        let m = take_mat(3, 4);
+        assert_eq!((m.rows, m.cols), (3, 4));
+        assert!(m.data.iter().all(|&x| x == 0.0));
+        recycle_mat(m);
+        let src = Mat::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let c = take_mat_copy(&src);
+        assert_eq!(c, src);
+        recycle_mat(c);
+    }
+
+    #[test]
+    fn shared_slice_disjoint_ranges() {
+        let mut data = vec![0.0_f64; 10];
+        let s = SharedSlice::new(&mut data);
+        // disjoint halves written "concurrently" (serial here; the pool
+        // tests cover the threaded case)
+        unsafe {
+            s.range(0, 5).iter_mut().for_each(|x| *x = 1.0);
+            s.range(5, 10).iter_mut().for_each(|x| *x = 2.0);
+        }
+        assert_eq!(&data[..5], &[1.0; 5]);
+        assert_eq!(&data[5..], &[2.0; 5]);
+    }
+}

@@ -140,27 +140,36 @@ pub fn qlr_objective(w: &Mat, w_hat: &Mat, u: &Mat, v: &Mat,
 /// `k = 0` degrades exactly to QuaRot-style quantization (no correction).
 pub fn lrc(w: &Mat, st: &LayerStats, k: usize, cfg: &QuantConfig)
            -> Result<LayerResult, String> {
+    // Σxy is borrowed from the accumulator; the regularized Σx/Σy copies
+    // live in workspace-recycled storage returned below, so repeated
+    // per-layer solves reuse the same scratch
     let (sx, sy, sxy) = st.regularized();
+    let recycle = |sx: Mat, sy: Mat| {
+        crate::linalg::workspace::recycle_mat(sx);
+        crate::linalg::workspace::recycle_mat(sy);
+    };
     let zero_u = Mat::zeros(w.rows, 1);
     let zero_v = Mat::zeros(w.cols, 1);
     if k == 0 {
-        let w_hat = update_quant(w, &zero_u, &zero_v, &sy, &sxy, cfg)?;
+        let w_hat = update_quant(w, &zero_u, &zero_v, &sy, sxy, cfg)?;
+        recycle(sx, sy);
         let obj = qlr_objective(w, &w_hat, &zero_u, &zero_v, st);
         return Ok(LayerResult {
             w_hat, u: None, v: None, objective: obj, history: vec![obj],
         });
     }
-    let (mut u, mut v) = init_lr(w, &sx, &sy, &sxy, k)?;
+    let (mut u, mut v) = init_lr(w, &sx, &sy, sxy, k)?;
     let mut w_hat = Mat::zeros(w.rows, w.cols);
     let mut history = Vec::new();
     for _ in 0..cfg.iters.max(1) {
-        w_hat = update_quant(w, &u, &v, &sy, &sxy, cfg)?;
+        w_hat = update_quant(w, &u, &v, &sy, sxy, cfg)?;
         history.push(qlr_objective(w, &w_hat, &u, &v, st));
-        let (nu, nv) = update_lr(w, &w_hat, &sx, &sxy, k)?;
+        let (nu, nv) = update_lr(w, &w_hat, &sx, sxy, k)?;
         u = nu;
         v = nv;
         history.push(qlr_objective(w, &w_hat, &u, &v, st));
     }
+    recycle(sx, sy);
     Ok(LayerResult {
         objective: *history.last().unwrap(),
         w_hat, u: Some(u), v: Some(v), history,
@@ -244,10 +253,10 @@ mod tests {
         let (w, x) = layer_problem(4, 12, 16, 512);
         let st = stats_for(&x, 0.9);
         let (sx, sy, sxy) = st.regularized();
-        let (u, v) = init_lr(&w, &sx, &sy, &sxy, 4).unwrap();
+        let (u, v) = init_lr(&w, &sx, &sy, sxy, 4).unwrap();
         let cfg = QuantConfig::default();
-        let w_hat = update_quant(&w, &u, &v, &sy, &sxy, &cfg).unwrap();
-        let wt = oracle_wtilde(&w, &u, &v, &sy, &sxy).unwrap();
+        let w_hat = update_quant(&w, &u, &v, &sy, sxy, &cfg).unwrap();
+        let wt = oracle_wtilde(&w, &u, &v, &sy, sxy).unwrap();
         let obj_q = qlr_objective(&w, &w_hat, &u, &v, &st);
         let obj_o = qlr_objective(&w, &wt, &u, &v, &st);
         assert!(obj_o <= obj_q, "oracle {obj_o} > quantized {obj_q}");
@@ -260,9 +269,9 @@ mod tests {
         let st = stats_for(&x, 0.9);
         let (sx, sy, sxy) = st.regularized();
         let cfg = QuantConfig::default();
-        let (u0, v0) = init_lr(&w, &sx, &sy, &sxy, 3).unwrap();
-        let w_hat = update_quant(&w, &u0, &v0, &sy, &sxy, &cfg).unwrap();
-        let (u, v) = update_lr(&w, &w_hat, &sx, &sxy, 3).unwrap();
+        let (u0, v0) = init_lr(&w, &sx, &sy, sxy, 3).unwrap();
+        let w_hat = update_quant(&w, &u0, &v0, &sy, sxy, &cfg).unwrap();
+        let (u, v) = update_lr(&w, &w_hat, &sx, sxy, 3).unwrap();
         let best = qlr_objective(&w, &w_hat, &u, &v, &st);
         let mut rng = Rng::new(77);
         for _ in 0..8 {

@@ -5,7 +5,7 @@
 //! that computation of these matrices required 64-bit precision".  X holds
 //! tokens as *columns* ([din, n]), matching the paper's notation.
 
-use crate::linalg::Mat;
+use crate::linalg::{workspace, Mat};
 use crate::par::Pool;
 use crate::quant::act_quantize;
 
@@ -51,16 +51,34 @@ impl LayerStats {
         }
     }
 
-    /// Fold in one batch of activation columns X [din, b].
+    /// Fold in one batch of activation columns X [din, b].  The partial
+    /// Grams land in one workspace-recycled temporary and accumulate
+    /// into Σ in place — no per-batch Σ-sized allocations.  In
+    /// weight-only mode (Q_a = identity) Σx = Σy = Σxy element for
+    /// element — `gram_n` and `matmul_nt(x, x)` run the same canonical
+    /// ascending-k program — so the Gram is computed **once** and folded
+    /// three ways (the old path cloned X and computed it three times).
     pub fn update(&mut self, x: &Mat) {
         assert_eq!(x.rows, self.din);
-        let y = match self.a_bits {
-            Some(bits) => act_quantize(x, bits, self.clip, self.a_group),
-            None => x.clone(),
-        };
-        self.sx = self.sx.add(&x.gram_n());
-        self.sy = self.sy.add(&y.gram_n());
-        self.sxy = self.sxy.add(&x.matmul_nt(&y));
+        let mut tmp = workspace::take_mat_for(self.din, self.din);
+        match self.a_bits {
+            Some(bits) => {
+                let y = act_quantize(x, bits, self.clip, self.a_group);
+                x.gram_n_into(&mut tmp);
+                self.sx.add_assign(&tmp);
+                y.gram_n_into(&mut tmp);
+                self.sy.add_assign(&tmp);
+                x.matmul_nt_into(&y, &mut tmp);
+                self.sxy.add_assign(&tmp);
+            }
+            None => {
+                x.gram_n_into(&mut tmp);
+                self.sx.add_assign(&tmp);
+                self.sy.add_assign(&tmp);
+                self.sxy.add_assign(&tmp);
+            }
+        }
+        workspace::recycle_mat(tmp);
         self.n += x.cols;
     }
 
@@ -73,34 +91,56 @@ impl LayerStats {
         assert_eq!(x.rows, self.din);
         let n = x.cols;
         let n_chunks = n.div_ceil(STATS_TOKEN_CHUNK).max(1);
+        // partial per chunk: (Σx gram, Some((Σy, Σxy)) — or None in
+        // weight-only mode, where all three are the same bits and the
+        // Gram is computed once instead of three times
         let partials = pool.map(n_chunks, |ci| {
             let c0 = ci * STATS_TOKEN_CHUNK;
             let c1 = (c0 + STATS_TOKEN_CHUNK).min(n);
-            let xs = x.cols_range(c0, c1);
+            // the chunk slice comes from (and returns to) the executing
+            // worker's own arena — persistent workers reuse it across
+            // chunks, epochs and the whole per-layer fan-out
+            let mut xs = workspace::take_mat_for(x.rows, c1 - c0);
+            x.cols_range_into(c0, c1, &mut xs);
             // Q_a is per-token, so quantizing a chunk equals quantizing
             // the full batch and slicing
-            let ys = match self.a_bits {
+            let out = match self.a_bits {
                 Some(bits) => {
-                    act_quantize(&xs, bits, self.clip, self.a_group)
+                    let ys = act_quantize(&xs, bits, self.clip,
+                                          self.a_group);
+                    (xs.gram_n(), Some((ys.gram_n(), xs.matmul_nt(&ys))),
+                     c1 - c0)
                 }
-                None => xs.clone(),
+                None => (xs.gram_n(), None, c1 - c0),
             };
-            (xs.gram_n(), ys.gram_n(), xs.matmul_nt(&ys), c1 - c0)
+            workspace::recycle_mat(xs);
+            out
         });
-        for (sx, sy, sxy, cols) in &partials {
-            self.sx = self.sx.add(sx);
-            self.sy = self.sy.add(sy);
-            self.sxy = self.sxy.add(sxy);
+        for (gx, quant, cols) in &partials {
+            self.sx.add_assign(gx);
+            match quant {
+                Some((gy, gxy)) => {
+                    self.sy.add_assign(gy);
+                    self.sxy.add_assign(gxy);
+                }
+                None => {
+                    self.sy.add_assign(gx);
+                    self.sxy.add_assign(gx);
+                }
+            }
             self.n += cols;
         }
     }
 
     /// Fold in a batch given in *row-major token rows* ([b, din] f32),
-    /// the layout the PJRT acts graph produces.
+    /// the layout the PJRT acts graph produces.  The transposed f64
+    /// batch lives in a workspace-recycled matrix, so the per-batch
+    /// calibration loop reuses one transpose buffer.
     pub fn update_rows_f32(&mut self, rows: &[f32], n_rows: usize) {
         assert_eq!(rows.len(), n_rows * self.din);
         let x = Self::transpose_rows_f32(rows, n_rows, self.din);
         self.update(&x);
+        workspace::recycle_mat(x);
     }
 
     /// [`LayerStats::update_rows_f32`] on a pool: transpose once, then
@@ -110,11 +150,13 @@ impl LayerStats {
         assert_eq!(rows.len(), n_rows * self.din);
         let x = Self::transpose_rows_f32(rows, n_rows, self.din);
         self.update_par(&x, pool);
+        workspace::recycle_mat(x);
     }
 
-    /// Transpose row-major f32 token rows into column-token f64 X.
+    /// Transpose row-major f32 token rows into column-token f64 X
+    /// (workspace-backed; callers recycle).
     fn transpose_rows_f32(rows: &[f32], n_rows: usize, din: usize) -> Mat {
-        let mut x = Mat::zeros(din, n_rows);
+        let mut x = workspace::take_mat(din, n_rows);
         for r in 0..n_rows {
             for c in 0..din {
                 x[(c, r)] = rows[r * din + c] as f64;
@@ -123,14 +165,34 @@ impl LayerStats {
         x
     }
 
-    /// (Σx + εx·I, Σy + εy·I, Σxy) with ε = 1e-2·tr(Σ)/d, as in the paper.
-    pub fn regularized(&self) -> (Mat, Mat, Mat) {
+    /// (Σx + εx·I, Σy + εy·I, Σxy) with ε = 1e-2·tr(Σ)/d, as in the
+    /// paper.  Finalization is copy-minimal: Σxy — which the ε shift
+    /// never touches — is **borrowed** straight from the accumulator
+    /// (it used to be cloned per solve), and the two shifted copies land
+    /// in workspace-recycled storage (pass them back via
+    /// [`crate::linalg::workspace::recycle_mat`] when done, as
+    /// [`crate::lrc::lrc`] does).  To finalize with no copies at all,
+    /// use [`LayerStats::into_regularized`].
+    pub fn regularized(&self) -> (Mat, Mat, &Mat) {
         let d = self.din as f64;
-        let mut sx = self.sx.clone();
+        let mut sx = workspace::take_mat_copy(&self.sx);
         sx.add_diag(1e-2 * self.sx.trace() / d);
-        let mut sy = self.sy.clone();
+        let mut sy = workspace::take_mat_copy(&self.sy);
         sy.add_diag(1e-2 * self.sy.trace() / d);
-        (sx, sy, self.sxy.clone())
+        (sx, sy, &self.sxy)
+    }
+
+    /// [`LayerStats::regularized`] consuming the accumulator: the ε
+    /// shift is applied to Σx/Σy **in place** and all three matrices
+    /// move out — zero copies, for callers done accumulating.
+    pub fn into_regularized(self) -> (Mat, Mat, Mat) {
+        let d = self.din as f64;
+        let LayerStats { mut sx, mut sy, sxy, .. } = self;
+        let tx = sx.trace();
+        sx.add_diag(1e-2 * tx / d);
+        let ty = sy.trace();
+        sy.add_diag(1e-2 * ty / d);
+        (sx, sy, sxy)
     }
 }
 
@@ -240,6 +302,23 @@ mod tests {
         assert!(serial.sx.sub(&par.sx).max_abs() < 1e-8);
         assert!(serial.sxy.sub(&par.sxy).max_abs() < 1e-8);
         assert_eq!(serial.n, par.n);
+    }
+
+    #[test]
+    fn regularized_borrows_sxy_and_into_matches() {
+        // finalize must hand Σxy out without copying (same allocation)
+        // and the consuming path must produce identical bits
+        let x = Mat::random_normal(&mut Rng::new(9), 5, 60);
+        let mut st = LayerStats::new(5, Some(4), 0.9, None);
+        st.update(&x);
+        let (sx, sy, sxy) = st.regularized();
+        assert!(std::ptr::eq(sxy, &st.sxy), "sxy must be a borrow");
+        let (ix, iy, ixy) = st.clone().into_regularized();
+        assert_eq!(sx, ix);
+        assert_eq!(sy, iy);
+        assert_eq!(*sxy, ixy);
+        crate::linalg::workspace::recycle_mat(sx);
+        crate::linalg::workspace::recycle_mat(sy);
     }
 
     #[test]

@@ -13,7 +13,10 @@
 //! Global flags: `--threads N` sizes the compute pool (else the
 //! `LRC_THREADS` env var, else every core); `--simd B` pins the GEMM
 //! micro-kernel backend (else `LRC_SIMD`, else auto-detection — results
-//! are bit-identical on every backend); `serve --workers N` runs N PJRT
+//! are bit-identical on every backend); `--fma` opts into the fused
+//! multiply-add kernel program (else `LRC_FMA=1`; off by default because
+//! it changes the canonical accumulation — still deterministic, with its
+//! own lockstep oracle reference); `serve --workers N` runs N PJRT
 //! engine workers against the shared batch queue.
 //!
 //! Run `lrc <cmd> --help` equivalent: every flag has a default, see below.
@@ -56,6 +59,13 @@ fn main() {
             eprintln!("error: --simd: {e}");
             std::process::exit(2);
         }
+    }
+    // FMA mode: --fma > LRC_FMA env > off.  Opt-in because it changes
+    // the canonical accumulation program (fused rounding) — results stay
+    // deterministic at every thread count / backend, but differ in the
+    // last bits from the default mul-then-add program.
+    if args.has("fma") {
+        lrc::linalg::simd::set_fma(Some(true));
     }
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let res = match cmd {
@@ -131,6 +141,13 @@ fn print_help() {
          \x20               widest the host supports; every backend is\n\
          \x20               bit-identical — this knob is for benches and\n\
          \x20               debugging, errors if B can't run here)\n\
+         \x20 --fma         opt-in fused multiply-add GEMM fast path\n\
+         \x20               (default off; LRC_FMA=1 enables via env).\n\
+         \x20               Changes the canonical accumulation program\n\
+         \x20               to one fused op per step: still deterministic\n\
+         \x20               and bit-identical at every --threads/--simd\n\
+         \x20               setting, but the last bits differ from the\n\
+         \x20               default mul-then-add results\n\
          \x20 --workers N   serve-only: engine workers sharing the batch\n\
          \x20               queue, one PJRT engine + session set each;\n\
          \x20               the thread budget is split across workers\n\

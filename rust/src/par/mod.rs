@@ -51,6 +51,18 @@
 //! in index order — so `threads ∈ {1, 2, 8}` produce byte-identical
 //! outputs (see `tests/par_determinism.rs` and `tests/kernel_oracle.rs`).
 //!
+//! # Worker-owned scratch arenas
+//!
+//! Because the workers are persistent threads, each one owns a
+//! [`crate::linalg::workspace`] arena (a thread-local free list of
+//! scratch buffers) that survives across epochs: the packed GEMM panels
+//! and solver temporaries a worker warms up on one layer of the per-layer
+//! fan-out are reused verbatim on the next, so steady-state pool work is
+//! allocation-free inside the kernels.  [`Pool::for_indices`] completes
+//! the picture on the dispatch side — it is the one entry point that
+//! publishes an epoch without allocating result slots, which is what the
+//! kernel layer uses for disjoint in-place writes.
+//!
 //! # Sizing
 //!
 //! Pool sizing, in priority order:
@@ -450,6 +462,40 @@ impl Pool {
         }
     }
 
+    /// Run `f(i)` for every index in `0..n` with **no result collection
+    /// and no per-item allocation**: the serial path is a plain loop, the
+    /// pooled path publishes one epoch whose claimants drain the shared
+    /// cursor calling `f` directly.  This is the dispatch primitive the
+    /// allocation-free kernels use — output goes through caller-managed
+    /// disjoint writes (e.g. `linalg::workspace::SharedSlice`), not
+    /// through slots.  Same scheduling (dynamic cursor) and same
+    /// determinism obligations as [`Pool::map`]: `f` must make item `i`'s
+    /// effect independent of which thread runs it.
+    pub fn for_indices<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        match &self.backend {
+            Backend::Inline => {
+                let _guard = PoolGuard::enter();
+                for i in 0..n {
+                    f(i);
+                }
+            }
+            Backend::Scoped => scoped_for_indices(self.n, n, &f),
+            _ if n <= 1 || in_pool() => {
+                for i in 0..n {
+                    f(i);
+                }
+            }
+            Backend::Persistent(w) => {
+                let cursor = AtomicUsize::new(0);
+                let body = || drain_indices(&cursor, n, &f);
+                w.run(&body, n);
+            }
+        }
+    }
+
     /// Consume owned work items (e.g. disjoint `&mut` output slices) on
     /// the pool.  Items are handed out dynamically; `f` runs once per
     /// item.  Item payloads must be independent — the pool gives no
@@ -500,6 +546,45 @@ where
         let out = f(i);
         *slots[i].lock().unwrap() = Some(out);
     }
+}
+
+/// Pull bare indices off the shared cursor until exhausted (the
+/// slot-free [`Pool::for_indices`] path).
+fn drain_indices<F>(cursor: &AtomicUsize, n: usize, f: &F)
+where
+    F: Fn(usize) + Sync,
+{
+    loop {
+        let i = cursor.fetch_add(1, Ordering::Relaxed);
+        if i >= n {
+            break;
+        }
+        f(i);
+    }
+}
+
+/// Spawn-per-call for_indices (the `scoped()` backend).
+fn scoped_for_indices<F>(threads: usize, n: usize, f: &F)
+where
+    F: Fn(usize) + Sync,
+{
+    let workers = threads.min(n);
+    if workers <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            // see scoped_map: scoped workers self-mark in-pool
+            s.spawn(|| {
+                let _guard = PoolGuard::enter();
+                drain_indices(&cursor, n, f)
+            });
+        }
+    });
 }
 
 /// Pull for_each items off the shared cursor until exhausted.
@@ -616,6 +701,32 @@ mod tests {
         assert_eq!(pool.map(1, |i| i + 7), vec![7]);
         // more threads than items
         assert_eq!(pool.map(3, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn for_indices_runs_each_index_exactly_once_on_every_backend() {
+        for t in [1usize, 2, 5] {
+            let pool = Pool::new(t);
+            for handle in [pool.clone(), pool.scoped()] {
+                let hits: Vec<AtomicU64> =
+                    (0..41).map(|_| AtomicU64::new(0)).collect();
+                handle.for_indices(41, |i| {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                });
+                for (i, h) in hits.iter().enumerate() {
+                    assert_eq!(h.load(Ordering::Relaxed), 1,
+                               "index {i} threads={t}");
+                }
+                // degenerate sizes
+                handle.for_indices(0, |_| panic!("no items"));
+                let one = AtomicU64::new(0);
+                handle.for_indices(1, |i| {
+                    assert_eq!(i, 0);
+                    one.fetch_add(1, Ordering::Relaxed);
+                });
+                assert_eq!(one.load(Ordering::Relaxed), 1);
+            }
+        }
     }
 
     #[test]

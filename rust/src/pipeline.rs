@@ -194,8 +194,11 @@ pub fn collect_stats(engine: &Engine, arts: &ModelArtifacts, corpus: &Corpus,
             let n_rows = used * rows_per_seq;
             let seg = &out[slice.offset..slice.offset + slice.rows * slice.dim];
             if first {
-                // clip search on the first batch (per-activation c)
-                let mut x = Mat::zeros(slice.dim, n_rows);
+                // clip search on the first batch (per-activation c);
+                // the transposed batch is workspace scratch shared with
+                // the Σ-update transposes that follow
+                let mut x = crate::linalg::workspace::take_mat(
+                    slice.dim, n_rows);
                 for r in 0..n_rows {
                     for c in 0..slice.dim {
                         x[(c, r)] = seg[r * slice.dim + c] as f64;
@@ -205,6 +208,7 @@ pub fn collect_stats(engine: &Engine, arts: &ModelArtifacts, corpus: &Corpus,
                     Some(bits) => search_act_clip(&x, bits, a_group),
                     None => 1.0,
                 };
+                crate::linalg::workspace::recycle_mat(x);
                 stats.insert(slice.name.clone(),
                              LayerStats::new(slice.dim, a_bits, clip, a_group));
             }

@@ -7,20 +7,26 @@
 //! lazy block batching so the trailing update is a GEMM.
 
 use super::{maxq, weight_scales};
-use crate::linalg::{cholesky, chol_solve_mat, Mat};
+use crate::linalg::{cholesky, chol_solve_mat, workspace, Mat};
 
 /// GPTQ with Cholesky error feedback.
 ///
-/// * `w`    — [dout, din] target weights (already W̃ from Prop. 3.1)
+/// * `w0`   — [dout, din] target weights (already W̃ from Prop. 3.1)
 /// * `hess` — [din, din] = YYᵀ (caller may pre-regularize; damping is added
 ///            here too, as in the reference implementation)
 /// * returns dequantized (on-grid) Ŵ
-pub fn gptq(w: &Mat, hess: &Mat, bits: u32, group: Option<usize>,
+///
+/// The working copies of W and H, the per-block error matrix and the
+/// trailing-update GEMM operands all live in workspace-recycled storage,
+/// so the per-layer fan-out's repeated GPTQ solves stop hammering the
+/// allocator (each solve used to clone both inputs and allocate three
+/// fresh matrices per block).
+pub fn gptq(w0: &Mat, hess: &Mat, bits: u32, group: Option<usize>,
             damp: f64, block: usize) -> Result<Mat, String> {
-    let (dout, din) = (w.rows, w.cols);
+    let (dout, din) = (w0.rows, w0.cols);
     assert_eq!(hess.rows, din);
-    let mut w = w.clone();
-    let mut h = hess.clone();
+    let mut w = workspace::take_mat_copy(w0);
+    let mut h = workspace::take_mat_copy(hess);
 
     // dead-column guard + damping
     for j in 0..din {
@@ -36,6 +42,8 @@ pub fn gptq(w: &Mat, hess: &Mat, bits: u32, group: Option<usize>,
 
     // upper-Cholesky factor of H⁻¹ via the reverse-ordering trick:
     // chol(P·H⁻¹·P)ᵀ reversed again gives U with H⁻¹ = Uᵀ·U, U upper.
+    // (error paths below drop the workspace mats instead of recycling —
+    // harmless, just a future cache miss on a cold path)
     let hinv = chol_solve_mat(&cholesky(&h)?, &Mat::eye(din));
     let hinv_u = upper_cholesky(&hinv)?;
 
@@ -44,12 +52,22 @@ pub fn gptq(w: &Mat, hess: &Mat, bits: u32, group: Option<usize>,
     let mq = maxq(bits);
     let mut q_out = Mat::zeros(dout, din);
 
+    // block scratch, taken at the first block's sizes — the largest any
+    // block needs, so best-fit lands on the right cached buffer
+    // immediately and later blocks only shrink within capacity — and
+    // recycled at the end: the error matrix, the transposed trailing
+    // slice of U, and the trailing-update product
+    let bw0 = block.min(din);
+    let mut werr = workspace::take_mat_for(dout, bw0);
+    let mut hu_t = workspace::take_mat_for(din - bw0, bw0);
+    let mut delta = workspace::take_mat_for(dout, din - bw0);
+
     let mut j1 = 0;
     while j1 < din {
         let j2 = (j1 + block).min(din);
         let bw = j2 - j1;
         // per-block error matrix [dout, bw]
-        let mut werr = Mat::zeros(dout, bw);
+        werr.resize_zeroed(dout, bw);
         for j in j1..j2 {
             let d = hinv_u[(j, j)];
             for i in 0..dout {
@@ -69,14 +87,17 @@ pub fn gptq(w: &Mat, hess: &Mat, bits: u32, group: Option<usize>,
         // W[:, j2:] -= werr · hinv_u[j1:j2, j2:]
         if j2 < din {
             let rest = din - j2;
-            // build the [bw, rest] slice of hinv_u
-            let mut hu = Mat::zeros(bw, rest);
-            for r in 0..bw {
-                for c in 0..rest {
-                    hu[(r, c)] = hinv_u[(j1 + r, j2 + c)];
+            // the [rest, bw] transposed slice of hinv_u, built directly
+            // in the layout matmul_nt consumes (what `matmul` would have
+            // produced by transposing a [bw, rest] copy — same bits,
+            // one fewer matrix)
+            hu_t.resize_zeroed(rest, bw);
+            for c in 0..rest {
+                for r in 0..bw {
+                    hu_t[(c, r)] = hinv_u[(j1 + r, j2 + c)];
                 }
             }
-            let delta = werr.matmul(&hu);
+            werr.matmul_nt_into(&hu_t, &mut delta);
             for i in 0..dout {
                 let drow = delta.row(i);
                 let wrow = &mut w.row_mut(i)[j2..];
@@ -87,6 +108,11 @@ pub fn gptq(w: &Mat, hess: &Mat, bits: u32, group: Option<usize>,
         }
         j1 = j2;
     }
+    workspace::recycle_mat(werr);
+    workspace::recycle_mat(hu_t);
+    workspace::recycle_mat(delta);
+    workspace::recycle_mat(w);
+    workspace::recycle_mat(h);
     Ok(q_out)
 }
 

@@ -22,6 +22,12 @@
 //!   (GPTQ ≤ RTN per cell), error non-increasing in rank_pct at fixed
 //!   bits, `size_bytes` strictly increasing in w_bits at fixed rank, and
 //!   QuaRot ≡ GPTQ-at-rank-0 as a free cross-check.
+//! * **Warm worker arenas.**  Grid cells run on the persistent pool, so
+//!   each worker's [`crate::linalg::workspace`] arena — the packed GEMM
+//!   panels, GPTQ block scratch and regularized-Σ copies — is warmed by
+//!   its first cell and reused verbatim by every subsequent cell of the
+//!   same model shape: the steady-state grid does no kernel-scratch
+//!   allocation at all.
 //!
 //! The driver is engine-free: cells quantize against a synthesized
 //! rank layout ([`crate::pipeline::cell_graph`]), so the grid runs on

@@ -1,0 +1,197 @@
+//! Steady-state allocation audit: after one warm-up call fills the
+//! per-thread `linalg::workspace` arena (and the caller-held outputs
+//! reach capacity), the GEMM and Gram hot loops must perform **zero**
+//! allocations per call, and a whole parallel-Jacobi solve must make
+//! only O(1) allocations — independent of size and round count (it used
+//! to allocate four vectors per rotation pair per round).
+//!
+//! Counting happens in a wrapping global allocator that tallies
+//! **per-thread** (a const-initialized `thread_local` counter, so the
+//! counter itself never allocates): the libtest harness runs other tests
+//! concurrently on their own threads, and their allocations must not
+//! bleed into our assertions.  Every measured operation below runs its
+//! serial path on the measuring thread — shapes sit under the
+//! auto-parallel work threshold, and the Jacobi call gets an explicit
+//! serial pool — so everything the operation allocates lands on this
+//! thread's counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use lrc::linalg::{eigh_jacobi_par, workspace, Mat};
+use lrc::par::Pool;
+use lrc::rng::Rng;
+
+struct CountingAlloc;
+
+thread_local! {
+    /// Allocations performed by the current thread (const-init: the
+    /// counter itself allocates nothing, which keeps the allocator
+    /// re-entrancy-free).
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+#[inline]
+fn bump() {
+    ALLOCS.with(|c| c.set(c.get() + 1));
+}
+
+/// Allocations this thread has performed so far.
+fn allocs_now() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        bump();
+        System.alloc(l)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize)
+                      -> *mut u8 {
+        bump(); // a grow is an allocator round-trip too
+        System.realloc(p, l, new_size)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+/// Naive mode-matched GEMM reference (computed before measurement).
+fn naive_nt(a: &Mat, bt: &Mat) -> Mat {
+    let fma = lrc::linalg::simd::fma_active();
+    let mut out = Mat::zeros(a.rows, bt.rows);
+    for i in 0..a.rows {
+        for j in 0..bt.rows {
+            let mut s = 0.0_f64;
+            for k in 0..a.cols {
+                if fma {
+                    s = a[(i, k)].mul_add(bt[(j, k)], s);
+                } else {
+                    s += a[(i, k)] * bt[(j, k)];
+                }
+            }
+            out[(i, j)] = s;
+        }
+    }
+    out
+}
+
+#[test]
+fn gemm_into_steady_state_is_allocation_free() {
+    // 64·48·40 multiply-adds sit far under PAR_MIN_WORK → serial path on
+    // this thread; the packed B strips + A panel come from the arena and
+    // `out` keeps its capacity
+    let a = Mat::random_normal(&mut Rng::new(1), 64, 48);
+    let bt = Mat::random_normal(&mut Rng::new(2), 40, 48);
+    let reference = naive_nt(&a, &bt);
+    let mut out = Mat::zeros(0, 0);
+    for _ in 0..3 {
+        a.matmul_nt_into(&bt, &mut out); // warm arena + output capacity
+    }
+    let before = allocs_now();
+    for _ in 0..10 {
+        a.matmul_nt_into(&bt, &mut out);
+    }
+    let used = allocs_now() - before;
+    assert_eq!(used, 0,
+               "steady-state GEMM performed {used} allocations over 10 \
+                calls");
+    assert_eq!(out, reference, "alloc-free GEMM changed the bits");
+}
+
+#[test]
+fn gram_into_steady_state_is_allocation_free() {
+    // 48²·40/2 under the threshold → serial row segments written
+    // straight into the reused output's rows
+    let x = Mat::random_normal(&mut Rng::new(3), 48, 40);
+    let reference = naive_nt(&x, &x); // X·Xᵀ == gram_n(X)
+    let mut out = Mat::zeros(0, 0);
+    for _ in 0..3 {
+        x.gram_n_into(&mut out);
+    }
+    let before = allocs_now();
+    for _ in 0..10 {
+        x.gram_n_into(&mut out);
+    }
+    let used = allocs_now() - before;
+    assert_eq!(used, 0,
+               "steady-state Gram performed {used} allocations over 10 \
+                calls");
+    assert_eq!(out, reference, "alloc-free Gram changed the bits");
+}
+
+#[test]
+fn jacobi_sweep_allocations_are_constant_not_per_round() {
+    // a full eigh_jacobi_par call makes a handful of setup allocations
+    // (input clone, eigenvector identity, pair/rotation lists, the
+    // sorted outputs) and NOTHING per round: the per-pair column/row
+    // scratch lives in two arena buffers.  The old implementation
+    // allocated 4 vectors per pair per round — thousands of allocations
+    // for these sizes — so a flat ≤ 24 bound at both n=16 and n=32 also
+    // proves the count no longer scales with n or the round count.
+    let pool = Pool::serial();
+    for n in [16usize, 32] {
+        let g = Mat::random_normal(&mut Rng::new(40 + n as u64), n, n);
+        let a = g.add(&g.transpose()).scale(0.5);
+        let (warm_vals, _) = eigh_jacobi_par(&a, &pool); // warm the arena
+        let before = allocs_now();
+        let (vals, vecs) = eigh_jacobi_par(&a, &pool);
+        let used = allocs_now() - before;
+        assert!(used <= 24,
+                "n={n}: Jacobi solve performed {used} allocations \
+                 (budget 24 — is per-round scratch allocating again?)");
+        assert_eq!(vals, warm_vals, "n={n}: repeated solve changed bits");
+        assert_eq!(vecs.rows, n);
+    }
+}
+
+#[test]
+fn workspace_take_put_steady_state_is_allocation_free() {
+    for len in [64usize, 1024] {
+        let v = workspace::take_zeroed(len);
+        workspace::put(v); // warm
+        let before = allocs_now();
+        for _ in 0..100 {
+            let v = workspace::take_zeroed(len);
+            workspace::put(v);
+        }
+        let used = allocs_now() - before;
+        assert_eq!(used, 0, "len={len}: arena roundtrip allocated {used}×");
+    }
+    // mat helpers ride the same pool
+    let src = Mat::random_normal(&mut Rng::new(7), 9, 9);
+    let m = workspace::take_mat_copy(&src);
+    workspace::recycle_mat(m);
+    let before = allocs_now();
+    for _ in 0..50 {
+        let m = workspace::take_mat_copy(&src);
+        workspace::recycle_mat(m);
+    }
+    assert_eq!(allocs_now() - before, 0);
+}
+
+#[test]
+fn stats_update_steady_state_reuses_sigma_scratch() {
+    // LayerStats::update folds three d×d partials through ONE recycled
+    // temporary; after warmup the only per-call allocation left is the
+    // activation quantizer's output (asserted with a generous bound far
+    // below the old six-matrix-per-call behavior: 3 gram/product temps
+    // + 3 Σ-sized `add` results for d=32 would already be 6).
+    use lrc::lrc::LayerStats;
+    let x = Mat::random_normal(&mut Rng::new(11), 32, 128);
+    let mut st = LayerStats::new(32, Some(4), 0.9, None);
+    st.update(&x); // warm
+    let before = allocs_now();
+    st.update(&x);
+    let used = allocs_now() - before;
+    assert!(used <= 4,
+            "LayerStats::update made {used} allocations per call \
+             (Σ scratch no longer recycled?)");
+}

@@ -19,22 +19,37 @@
 //! which is *safe by the very contract under test*: every backend
 //! produces identical bits, so a mid-test backend flip can never change
 //! an assertion's outcome.
+//!
+//! The **FMA mode** (`--fma` / `LRC_FMA=1`) is different: it changes the
+//! canonical program, so its oracle is a **lockstep FMA reference** (the
+//! same naive loops with `f64::mul_add`).  The naive references below
+//! select fused vs mul-then-add by the *live* mode, which keeps every
+//! test here valid under the CI matrix's `LRC_FMA=1` leg; tests that
+//! *force* the mode serialize on [`sweep_lock`] with every other test
+//! in this binary that computes a reference and a kernel result in two
+//! steps (unlike backend flips, a mid-test FMA flip WOULD change bits).
 
 use lrc::linalg::{simd, Mat};
 use lrc::par::Pool;
 use lrc::rng::Rng;
 
 /// Naive C = A·Bᵀ: the textbook triple loop, single accumulator,
-/// ascending k.  Written against `Mat` indexing only — it shares no code
-/// with the production kernel.
+/// ascending k — fused when the FMA mode is live (the lockstep
+/// reference), mul-then-add otherwise.  Written against `Mat` indexing
+/// only — it shares no code with the production kernel.
 fn naive_matmul_nt(a: &Mat, bt: &Mat) -> Mat {
+    let fma = simd::fma_active();
     assert_eq!(a.cols, bt.cols);
     let mut out = Mat::zeros(a.rows, bt.rows);
     for i in 0..a.rows {
         for j in 0..bt.rows {
             let mut s = 0.0_f64;
             for k in 0..a.cols {
-                s += a[(i, k)] * bt[(j, k)];
+                if fma {
+                    s = a[(i, k)].mul_add(bt[(j, k)], s);
+                } else {
+                    s += a[(i, k)] * bt[(j, k)];
+                }
             }
             out[(i, j)] = s;
         }
@@ -42,15 +57,21 @@ fn naive_matmul_nt(a: &Mat, bt: &Mat) -> Mat {
     out
 }
 
-/// Naive AᵀA (sum over rows of A, ascending).
+/// Naive AᵀA (sum over rows of A, ascending; mode-matched like
+/// [`naive_matmul_nt`]).
 fn naive_gram_t(a: &Mat) -> Mat {
+    let fma = simd::fma_active();
     let n = a.cols;
     let mut out = Mat::zeros(n, n);
     for i in 0..n {
         for j in 0..n {
             let mut s = 0.0_f64;
             for r in 0..a.rows {
-                s += a[(r, i)] * a[(r, j)];
+                if fma {
+                    s = a[(r, i)].mul_add(a[(r, j)], s);
+                } else {
+                    s += a[(r, i)] * a[(r, j)];
+                }
             }
             out[(i, j)] = s;
         }
@@ -58,15 +79,20 @@ fn naive_gram_t(a: &Mat) -> Mat {
     out
 }
 
-/// Naive AAᵀ (sum over columns of A, ascending).
+/// Naive AAᵀ (sum over columns of A, ascending; mode-matched).
 fn naive_gram_n(a: &Mat) -> Mat {
+    let fma = simd::fma_active();
     let m = a.rows;
     let mut out = Mat::zeros(m, m);
     for i in 0..m {
         for j in 0..m {
             let mut s = 0.0_f64;
             for k in 0..a.cols {
-                s += a[(i, k)] * a[(j, k)];
+                if fma {
+                    s = a[(i, k)].mul_add(a[(j, k)], s);
+                } else {
+                    s += a[(i, k)] * a[(j, k)];
+                }
             }
             out[(i, j)] = s;
         }
@@ -80,15 +106,19 @@ fn pools() -> Vec<Pool> {
     [1usize, 2, 3, 8].into_iter().map(Pool::new).collect()
 }
 
+/// The binary-wide serialization lock.  Backend sweeps hold it so a
+/// concurrent sweep can't silently degrade per-backend *coverage*; the
+/// FMA-forcing test and every reference-then-kernel two-step test hold
+/// it because a mid-test FMA flip would change bits, not just coverage.
+fn sweep_lock() -> std::sync::MutexGuard<'static, ()> {
+    static SWEEP: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    SWEEP.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 /// Run `body` once per SIMD backend this host supports, forcing each via
 /// the process-wide backend override, then restore auto resolution.
-/// Sweeps serialize on a shared lock: a concurrent sweep flipping the
-/// global override could not make a correct backend fail (identical bits
-/// by contract) but WOULD silently degrade per-backend coverage — the
-/// shape asserted "on avx2" might actually have run on scalar.
 fn for_each_backend(body: impl Fn(simd::Backend)) {
-    static SWEEP: std::sync::Mutex<()> = std::sync::Mutex::new(());
-    let _guard = SWEEP.lock().unwrap_or_else(|e| e.into_inner());
+    let _guard = sweep_lock();
     for be in simd::available_backends() {
         simd::set_backend(Some(be)).unwrap();
         body(be);
@@ -241,7 +271,10 @@ fn gram_bit_identical_to_naive_at_every_thread_count() {
 fn kernels_are_deterministic_across_repeated_dispatch() {
     // same pool object, repeated calls: dynamic scheduling must never
     // leak into the results (the slots are keyed by index, not arrival);
-    // shape chosen past PAR_MIN_WORK so the board really dispatches
+    // shape chosen past PAR_MIN_WORK so the board really dispatches.
+    // Holds the sweep lock: the first result is the reference for the
+    // repeats, so an FMA flip in between would falsely fail it.
+    let _guard = sweep_lock();
     let a = Mat::random_normal(&mut Rng::new(77), 65, 256);
     let bt = Mat::random_normal(&mut Rng::new(78), 66, 256);
     let pool = Pool::new(8);
@@ -249,4 +282,61 @@ fn kernels_are_deterministic_across_repeated_dispatch() {
     for rep in 0..10 {
         assert_eq!(first, a.par_matmul_nt(&bt, &pool), "rep {rep}");
     }
+}
+
+/// The FMA legs: force each mode and hold the kernels to the matching
+/// lockstep reference — fused naive loop under FMA, mul-then-add naive
+/// loop otherwise — across every backend, the serial path, pooled row
+/// chunks at several thread counts, and the Gram segments.  Also pins
+/// the programs apart: on at least one shape the two modes must differ
+/// (otherwise the "mode" would be a no-op and the oracle vacuous).
+#[test]
+fn fma_mode_bit_identical_to_its_lockstep_reference() {
+    let _guard = sweep_lock();
+    let shapes =
+        [(1usize, 1usize, 1usize), (7, 9, 5), (17, 16, 15), (12, 257, 9),
+         (33, 65, 31), (65, 256, 65)];
+    let mut modes_differed = false;
+    for fma in [false, true] {
+        simd::set_fma(Some(fma));
+        for be in simd::available_backends() {
+            simd::set_backend(Some(be)).unwrap();
+            for (si, &(m, k, n)) in shapes.iter().enumerate() {
+                let a = Mat::random_normal(
+                    &mut Rng::new(9_000 + si as u64), m, k);
+                let bt = Mat::random_normal(
+                    &mut Rng::new(9_500 + si as u64), n, k);
+                let reference = naive_matmul_nt(&a, &bt);
+                assert_eq!(reference, a.matmul_nt(&bt),
+                           "serial {m}x{k}·{n}ᵀ fma={fma} [{}]", be.name());
+                for t in [1usize, 4] {
+                    let pool = Pool::new(t);
+                    assert_eq!(reference, a.par_matmul_nt(&bt, &pool),
+                               "{m}x{k}·{n}ᵀ fma={fma} t={t} [{}]",
+                               be.name());
+                }
+                let g = Mat::random_normal(
+                    &mut Rng::new(9_900 + si as u64), m, k);
+                assert_eq!(naive_gram_n(&g), g.gram_n(),
+                           "gram_n {m}x{k} fma={fma} [{}]", be.name());
+                assert_eq!(naive_gram_t(&g), g.gram_t(),
+                           "gram_t {m}x{k} fma={fma} [{}]", be.name());
+            }
+        }
+        simd::set_backend(None).unwrap();
+    }
+    // the two canonical programs are genuinely different
+    simd::set_fma(Some(false));
+    let a = Mat::random_normal(&mut Rng::new(31_337), 23, 129);
+    let bt = Mat::random_normal(&mut Rng::new(31_338), 19, 129);
+    let plain = a.matmul_nt(&bt);
+    simd::set_fma(Some(true));
+    let fused = a.matmul_nt(&bt);
+    if plain != fused {
+        modes_differed = true;
+    }
+    simd::set_fma(None);
+    assert!(modes_differed,
+            "FMA mode produced identical bits to mul-then-add — the \
+             fused program is not being dispatched");
 }

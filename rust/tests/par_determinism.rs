@@ -15,6 +15,16 @@ use lrc::quant::QuantConfig;
 use lrc::rng::Rng;
 use lrc::runtime::{GraphInfo, ModelArtifacts, ModelInfo, TensorBundle};
 
+/// Serializes the FMA-forcing test against every test in this binary
+/// that quantizes more than once and compares the results: the FMA mode
+/// changes bits (by design, with its own determinism contract), so a
+/// mid-test flip would turn a cross-run comparison into a false failure.
+/// Backend flips never need this — they are bit-invisible.
+fn mode_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 fn synthetic_model() -> (ModelArtifacts, lrc::pipeline::CalibStats, GraphInfo) {
     let (d_model, d_ff) = (8usize, 16usize);
     let info = ModelInfo {
@@ -117,6 +127,7 @@ fn small_epochs_dispatch_to_a_worker_subset_and_stay_correct() {
 
 #[test]
 fn quantize_model_bit_identical_across_thread_counts() {
+    let _guard = mode_lock();
     let (arts, calib, graph) = synthetic_model();
     let cfg = QuantConfig::default();
     for method in [Method::Lrc, Method::Svd, Method::Quarot] {
@@ -152,6 +163,7 @@ fn quantize_model_bit_identical_across_thread_counts() {
 
 #[test]
 fn fanout_matches_direct_per_layer_solve() {
+    let _guard = mode_lock();
     // the pool must not change the math: a layer solved directly equals
     // the same layer pulled out of the fan-out, bit for bit
     let (arts, calib, graph) = synthetic_model();
@@ -173,6 +185,7 @@ fn fanout_matches_direct_per_layer_solve() {
 
 #[test]
 fn persistent_pool_reused_across_runs_stays_byte_identical() {
+    let _guard = mode_lock();
     // the persistent board carries state (epoch counter, parked workers)
     // between calls — reusing ONE pool for repeated quantize_model runs
     // must keep producing byte-identical bundles, and must match a pool
@@ -206,6 +219,7 @@ fn persistent_pool_reused_across_runs_stays_byte_identical() {
 
 #[test]
 fn pool_drop_and_rebuild_cycles_do_not_wedge() {
+    let _guard = mode_lock();
     // build → use → drop must join the parked workers every cycle; a
     // leaked worker or wedged join would hang this test (the harness
     // timeout is the assertion), and each rebuilt pool must still
@@ -238,6 +252,7 @@ fn pool_drop_and_rebuild_cycles_do_not_wedge() {
 
 #[test]
 fn quantize_model_byte_identical_across_simd_backends() {
+    let _guard = mode_lock();
     // the SIMD dispatch must be observationally invisible end to end:
     // the same model quantized under every available backend produces
     // byte-identical bundles and reports.  (The backend override is
@@ -303,4 +318,50 @@ fn report_layer_order_is_canonical() {
     let got: Vec<String> =
         report.layers.iter().map(|l| l.layer.clone()).collect();
     assert_eq!(got, expect);
+}
+
+#[test]
+fn fma_mode_bundles_byte_identical_across_thread_counts() {
+    // the FMA fast path keeps the end-to-end determinism contract: with
+    // LRC_FMA forced on, quantize_model produces byte-identical bundles
+    // at threads {1, 4} — and those bundles genuinely differ from the
+    // default mul-then-add mode's (the fused program is really running).
+    use lrc::linalg::simd;
+    let _guard = mode_lock();
+    let (arts, calib, graph) = synthetic_model();
+    let cfg = QuantConfig::default();
+
+    simd::set_fma(Some(false));
+    let (_, r_plain) = quantize_model_with_pool(
+        &arts, &calib, &graph, Method::Lrc, &cfg, &Pool::new(4)).unwrap();
+
+    simd::set_fma(Some(true));
+    let (b1, r1) = quantize_model_with_pool(
+        &arts, &calib, &graph, Method::Lrc, &cfg, &Pool::new(1)).unwrap();
+    let (b4, r4) = quantize_model_with_pool(
+        &arts, &calib, &graph, Method::Lrc, &cfg, &Pool::new(4)).unwrap();
+    simd::set_fma(None);
+
+    assert_eq!(b1.order, b4.order);
+    for name in &b1.order {
+        let x = b1.get(name).unwrap();
+        let y = b4.get(name).unwrap();
+        assert_eq!(x.shape, y.shape, "{name}");
+        assert_eq!(x.data, y.data, "{name}: FMA bundle differs at t=4");
+    }
+    for (a, b) in r1.layers.iter().zip(&r4.layers) {
+        assert_eq!(a.objective.to_bits(), b.objective.to_bits(),
+                   "{}: FMA objective differs across pools", a.layer);
+    }
+    // the fused program must actually be reaching the solvers: observe
+    // the mode difference on the f64 objectives (bundle tensors are f32,
+    // whose ~6e-8 relative resolution would absorb the ulp-level f64
+    // divergence on this tiny model and make a bundle-bytes comparison
+    // vacuous)
+    let any_diff = r_plain.layers.iter().zip(&r1.layers)
+        .any(|(a, b)| a.objective.to_bits() != b.objective.to_bits());
+    assert!(any_diff,
+            "FMA-mode objectives are bit-identical to the default mode's \
+             on every layer — the fused program is not reaching the \
+             solvers");
 }
