@@ -75,6 +75,7 @@ fn bench_serving(requests: usize, workers: usize) -> anyhow::Result<()> {
             quant_dir: quant,
             policy: BatchPolicy::default(),
             workers,
+            native: false,
         })?;
         let seqs = corpus.eval_sequences(handle.seq_len, 32);
         let mut rxs = Vec::new();

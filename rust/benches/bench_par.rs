@@ -9,6 +9,10 @@
 //!     (asserted `==` against the fused lockstep reference first), and
 //!     A-panel packing on a large-k GEMM (bit-identical, locality only)
 //!     — every kernel row also reports achieved GFLOP/s,
+//!   * the fused dequant-GEMM serving path vs the dense f32 GEMM per
+//!     bits × rank (each fused leg `==`-asserted against the naive
+//!     unpack reference before timing; tokens/s + GFLOP/s recorded for
+//!     the bench-trend gate),
 //!   * persistent pool vs per-call scoped spawning on the
 //!     `eigh_jacobi_par` round workload (the fine-grained dispatch the
 //!     persistent board exists for),
@@ -29,7 +33,8 @@
 //! `bench::write_json`) — CI stamps the file with the commit SHA and
 //! uploads it as a workflow artifact so runs diff against each other.
 
-use lrc::bench::{bench, bench_report, gflops, record, section, speedup};
+use lrc::bench::{bench, bench_report, gflops, record, section, speedup,
+                 tokens_per_s};
 use lrc::linalg::{eigh_jacobi_par, simd, Mat};
 use lrc::lrc::{lrc, LayerStats};
 use lrc::par::Pool;
@@ -301,6 +306,70 @@ fn bench_packed_a(samples: usize) {
     record("packed-A on", &packed);
 }
 
+/// The fused dequant-GEMM serving path (PackedInts decoded tile-by-tile
+/// into the blocked-k microkernel, low-rank correction fused as extra
+/// k-panels) vs the dense f32 GEMM over the full-precision weights —
+/// the quantized-vs-dense tokens/s story per bits × rank.  Every fused
+/// leg is asserted `==` against the naive
+/// unpack-then-matmul-then-correction reference before it is timed (the
+/// dense weight matrix is materialized only by the baseline and the
+/// reference — the fused path never builds it), and every leg lands in
+/// the bench JSON for the bench-trend gate.
+fn bench_dequant_gemm(samples: usize, quick: bool) {
+    use lrc::linalg::matmul_nt_f32_into;
+    use lrc::quant::{rtn_quantize, QuantizedLinear};
+    let d = if quick { 256usize } else { 512 };
+    let m = if quick { 32usize } else { 64 };
+    let mut rng = Rng::new(19);
+    let w = Mat::random_normal(&mut rng, d, d);
+    let x: Vec<f32> =
+        rng.normal_vec(m * d).iter().map(|&v| v as f32).collect();
+
+    section(&format!(
+        "fused dequant-GEMM vs dense f32 GEMM ({m} tokens × {d}x{d}, \
+         auto-par, equality-asserted)"));
+
+    // dense baseline: the same tokens through the f32 blocked kernel
+    // over the fp weights
+    let wf: Vec<f32> = w.data.iter().map(|&v| v as f32).collect();
+    let flops = 2.0 * (m * d * d) as f64;
+    let mut out = Vec::new();
+    let dense = bench(1, samples, || {
+        matmul_nt_f32_into(&x, m, d, &wf, d, &mut out);
+    });
+    println!("{:<40} {:>12} {:>8.2} GF/s {:>10.0} tok/s",
+             "dense f32 GEMM (fp weights)", dense.pm(),
+             gflops(flops, &dense), tokens_per_s(m, &dense));
+    record("dense f32 GEMM (fp weights)", &dense);
+
+    for &bits in &[2u32, 4, 8] {
+        for &rank in &[0usize, d / 16] {
+            let wq = rtn_quantize(&w, bits, Some(64));
+            let (u, v) = if rank > 0 {
+                (Some(Mat::random_normal(&mut rng, d, rank).scale(0.05)),
+                 Some(Mat::random_normal(&mut rng, d, rank).scale(0.05)))
+            } else {
+                (None, None)
+            };
+            let q = QuantizedLinear::from_dense(&wq, bits, Some(64),
+                                                u.as_ref(), v.as_ref());
+            // oracle contract in bench form: fused == naive unpack ref
+            assert_eq!(q.forward(&x, m), q.reference_forward(&x, m),
+                       "int{bits} rank {rank}: fused dequant path \
+                        diverged from the unpack reference");
+            let s = bench(1, samples, || {
+                q.forward_into(&x, m, &mut out);
+            });
+            let label = format!("fused dequant int{bits} rank {rank}");
+            println!("{:<40} {:>12} {:>8.2} GF/s {:>10.0} tok/s  → \
+                      {:.2}x dense",
+                     label, s.pm(), gflops(q.flops(m), &s),
+                     tokens_per_s(m, &s), speedup(&dense, &s));
+            record(&label, &s);
+        }
+    }
+}
+
 fn bench_eigh_dispatch(samples: usize, n: usize) {
     let mut rng = Rng::new(5);
     let g = Mat::random_normal(&mut rng, n, n);
@@ -404,6 +473,7 @@ fn main() {
     bench_simd_backends(samples.min(3));
     bench_fma_gemm(samples.min(3));
     bench_packed_a(samples.min(3));
+    bench_dequant_gemm(samples.min(3), quick);
     bench_eigh_dispatch(samples.clamp(1, 2), if quick { 48 } else { 64 });
     bench_layer_fanout(samples, n_layers, d.min(96));
     bench_dispatch_overhead(samples);

@@ -9,12 +9,40 @@
 //! latency grows mildly with rank, and even rank→0⁺ pays a data-movement
 //! step — the paper's own observation motivating a fused kernel.
 //!
+//! Two sections:
+//!   * the XLA micro-graph tables (need compiled artifacts + a PJRT
+//!     plugin; skipped with a note when either is missing), and
+//!   * the engine-free **native fused dequant-GEMM** tables: the crate's
+//!     own `QuantizedLinear` forward (PackedInts decoded tile-by-tile,
+//!     low-rank correction fused) vs the dense f32 GEMM, per bits × rank
+//!     — each fused leg asserted `==` against the naive unpack reference
+//!     before timing, with a tokens/s column so quantized-vs-dense reads
+//!     in serving units.
+//!
 //!   cargo bench --bench table678_latency [-- --samples 20]
+//!       [-- --json PATH]
+//!
+//! `--json PATH` persists every measurement (see `bench::write_json`) so
+//! the bench-trend gate can diff the native-path numbers across commits.
 
-use lrc::bench::{bench, section};
+use lrc::bench::{bench, record, section, tokens_per_s, write_json};
+use lrc::linalg::{matmul_nt_f32_into, Mat};
+use lrc::quant::{rtn_quantize, QuantizedLinear};
 use lrc::rng::Rng;
 use lrc::runtime::{Engine, Tensor, TensorBundle};
 use lrc::util::{render_table, Args, Json};
+
+/// (dims label, table number) for the three paper shapes.
+const SHAPES: [(&str, u32); 3] =
+    [("688x256", 6), ("864x320", 7), ("1792x512", 8)];
+
+/// Tokens per forward in every section — one "token" is one row of X.
+const M_TOKENS: usize = 512;
+
+fn parse_dims(dims: &str) -> (usize, usize) {
+    let mut it = dims.split('x');
+    (it.next().unwrap().parse().unwrap(), it.next().unwrap().parse().unwrap())
+}
 
 fn tensor(rng: &mut Rng, shape: &[usize], scale: f32) -> Tensor {
     let n: usize = shape.iter().product();
@@ -24,11 +52,9 @@ fn tensor(rng: &mut Rng, shape: &[usize], scale: f32) -> Tensor {
     }
 }
 
-fn main() -> anyhow::Result<()> {
-    let args = Args::from_env();
-    let samples = args.get_usize("samples", 20);
-    let warmup = args.get_usize("warmup", 3);
-
+/// The original XLA micro-graph tables — requires `prep micro` artifacts
+/// and a loadable PJRT plugin, so the caller treats failure as a skip.
+fn engine_tables(samples: usize, warmup: usize) -> anyhow::Result<()> {
     let art = lrc::artifacts_dir();
     let mdir = art.join("micro");
     let graphs = Json::parse(&std::fs::read_to_string(mdir.join("graphs.json"))?)
@@ -39,15 +65,11 @@ fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(7);
     let _ = TensorBundle::default();
 
-    for (dims, table_no) in [("688x256", 6), ("864x320", 7), ("1792x512", 8)] {
+    for (dims, table_no) in SHAPES {
         section(&format!("Table {table_no}: fused layer latency, dims {dims} \
                           (paper dims ×1/16)"));
-        let (dout, din) = {
-            let mut it = dims.split('x');
-            (it.next().unwrap().parse::<usize>()?,
-             it.next().unwrap().parse::<usize>()?)
-        };
-        let m = 512usize;
+        let (dout, din) = parse_dims(dims);
+        let m = M_TOKENS;
 
         // fp16 (fp32-on-CPU) baseline
         let fp_name = format!("micro_fp_{dims}");
@@ -62,9 +84,12 @@ fn main() -> anyhow::Result<()> {
             let out = exe.execute_b(&[&xb, &wb]).unwrap();
             let _ = out[0][0].to_literal_sync().unwrap();
         });
+        record(&format!("engine fp {dims}"), &fp_stats);
 
         let mut rows = vec![vec!["fp16".into(), dims.to_string(),
-                                 fp_stats.pm(), "1.00".into()]];
+                                 fp_stats.pm(),
+                                 format!("{:.0}", tokens_per_s(m, &fp_stats)),
+                                 "1.00".into()]];
         for rank in [0usize, 8, 16, 32, 64] {
             let name = format!("micro_w4a4_{dims}_r{rank}");
             let g = &graphs[&name];
@@ -87,13 +112,100 @@ fn main() -> anyhow::Result<()> {
                     let _ = out[0][0].to_literal_sync().unwrap();
                 })
             };
+            record(&format!("engine w4a4 {dims} r{rank}"), &stats);
             rows.push(vec![format!("{rank}"), dims.to_string(), stats.pm(),
+                           format!("{:.0}", tokens_per_s(m, &stats)),
                            format!("{:.2}", fp_stats.mean() / stats.mean())]);
         }
         println!("{}", render_table(
-            &["ranks", "matrix dim", "time (ms)", "speedup over fp"], &rows));
+            &["ranks", "matrix dim", "time (ms)", "tok/s",
+              "speedup over fp"], &rows));
     }
     println!("note: simulated int4 on CPU — speedups <1 are expected; the \
               paper-shape claim is the monotone rank→latency trend");
+    Ok(())
+}
+
+/// Engine-free counterpart: the crate's own fused dequant-GEMM forward
+/// (`QuantizedLinear`) vs the dense f32 GEMM over the fp weights, per
+/// bits × rank — no artifacts, no PJRT, the dense weight matrix is never
+/// materialized on the fused path.  Every fused leg is `==`-asserted
+/// against the naive unpack-then-matmul-then-correction reference before
+/// it is timed.
+fn native_tables(samples: usize, warmup: usize) {
+    let mut rng = Rng::new(7);
+    for (dims, table_no) in SHAPES {
+        section(&format!("Table {table_no} (native): fused dequant-GEMM \
+                          latency, dims {dims}"));
+        let (dout, din) = parse_dims(dims);
+        let m = M_TOKENS;
+        let w = Mat::random_normal(&mut rng, dout, din).scale(0.1);
+        let x: Vec<f32> =
+            rng.normal_vec(m * din).iter().map(|&v| v as f32).collect();
+
+        // dense f32 baseline over the fp weights
+        let wf: Vec<f32> = w.data.iter().map(|&v| v as f32).collect();
+        let mut out = Vec::new();
+        let dense = bench(warmup, samples, || {
+            matmul_nt_f32_into(&x, m, din, &wf, dout, &mut out);
+        });
+        record(&format!("native dense {dims}"), &dense);
+        let mut rows = vec![vec!["dense f32".into(), dims.to_string(),
+                                 dense.pm(),
+                                 format!("{:.0}", tokens_per_s(m, &dense)),
+                                 "1.00".into()]];
+
+        for bits in [2u32, 4, 8] {
+            let wq = rtn_quantize(&w, bits, Some(64));
+            for rank in [0usize, 8, 64] {
+                let (u, v) = if rank > 0 {
+                    (Some(Mat::random_normal(&mut rng, dout, rank)
+                              .scale(0.05)),
+                     Some(Mat::random_normal(&mut rng, din, rank)
+                              .scale(0.05)))
+                } else {
+                    (None, None)
+                };
+                let q = QuantizedLinear::from_dense(&wq, bits, Some(64),
+                                                    u.as_ref(), v.as_ref());
+                assert_eq!(q.forward(&x, m), q.reference_forward(&x, m),
+                           "{dims} int{bits} r{rank}: fused dequant path \
+                            diverged from the unpack reference");
+                let s = bench(warmup, samples, || {
+                    q.forward_into(&x, m, &mut out);
+                });
+                record(&format!("native int{bits} {dims} r{rank}"), &s);
+                rows.push(vec![
+                    format!("int{bits} r{rank}"), dims.to_string(), s.pm(),
+                    format!("{:.0}", tokens_per_s(m, &s)),
+                    format!("{:.2}", dense.mean() / s.mean()),
+                ]);
+            }
+        }
+        println!("{}", render_table(
+            &["kernel", "matrix dim", "time (ms)", "tok/s",
+              "speedup over dense"], &rows));
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let samples = args.get_usize("samples", 20);
+    let warmup = args.get_usize("warmup", 3);
+
+    if let Err(e) = engine_tables(samples, warmup) {
+        println!("skipping XLA micro-graph tables ({e:#}) — run `prep micro` \
+                  with a PJRT plugin available to enable them; the native \
+                  fused-path tables below need neither");
+    }
+    native_tables(samples.min(10), warmup.min(1));
+
+    if let Some(path) = args.get("json") {
+        let sha = std::env::var("GITHUB_SHA").unwrap_or_default();
+        write_json(std::path::Path::new(&path),
+                   &[("bench", "table678_latency".into()),
+                     ("commit", sha)])?;
+        println!("\nwrote bench JSON → {path}");
+    }
     Ok(())
 }

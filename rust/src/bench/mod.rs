@@ -164,6 +164,17 @@ pub fn gflops(flops: f64, s: &Stats) -> f64 {
     flops / (ms / 1e3) / 1e9
 }
 
+/// Achieved tokens/s for a measurement whose run processes `tokens`
+/// tokens (mean-time based) — the serving-path benches print this next
+/// to GFLOP/s so quantized-vs-dense reads in serving units.
+pub fn tokens_per_s(tokens: usize, s: &Stats) -> f64 {
+    let ms = s.mean();
+    if ms <= 0.0 {
+        return 0.0;
+    }
+    tokens as f64 / (ms / 1e3)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -223,6 +234,14 @@ mod tests {
         let s = Stats { samples_ms: vec![1000.0] };
         assert!((gflops(2e9, &s) - 2.0).abs() < 1e-12);
         assert_eq!(gflops(1e9, &Stats { samples_ms: vec![] }), 0.0);
+    }
+
+    #[test]
+    fn tokens_per_s_units() {
+        // 64 tokens in 500 ms = 128 tok/s
+        let s = Stats { samples_ms: vec![500.0] };
+        assert!((tokens_per_s(64, &s) - 128.0).abs() < 1e-9);
+        assert_eq!(tokens_per_s(64, &Stats { samples_ms: vec![] }), 0.0);
     }
 
     #[test]

@@ -37,7 +37,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::runtime::{Engine, ModelArtifacts, TensorBundle};
+use crate::runtime::{Engine, ModelArtifacts, NativeModel, TensorBundle};
 
 /// One scoring request: a token sequence of exactly `seq_len`.
 pub struct Request {
@@ -71,6 +71,13 @@ pub struct ServerConfig {
     /// engine workers pulling from the shared batcher; each owns its own
     /// PJRT engine + sessions (0 is treated as 1)
     pub workers: usize,
+    /// force the native (engine-free) execute path: the rotated forward
+    /// on the crate's own kernels with quantized layers running the
+    /// fused dequant-GEMM ([`crate::runtime::NativeModel`]).  When
+    /// false, workers still **fall back** to native if the PJRT engine
+    /// fails to initialize (e.g. the vendored stub), so serving works on
+    /// engine-less hosts.
+    pub native: bool,
 }
 
 pub struct ServerHandle {
@@ -178,30 +185,98 @@ impl ServerHandle {
     }
 }
 
+/// How a worker executes a token block: a per-worker PJRT engine with
+/// per-bucket compiled sessions, or the engine-free native forward
+/// (fused dequant-GEMM for the quantized layers).  Both expose the same
+/// (bucket sizes, run) surface to the batch loop.
+enum ExecBackend {
+    Engine { buckets: Vec<(usize, crate::runtime::Session)> },
+    Native { model: NativeModel, buckets: Vec<usize> },
+}
+
+impl ExecBackend {
+    fn bucket_sizes(&self) -> Vec<usize> {
+        match self {
+            ExecBackend::Engine { buckets } =>
+                buckets.iter().map(|(b, _)| *b).collect(),
+            ExecBackend::Native { buckets, .. } => buckets.clone(),
+        }
+    }
+
+    /// Execute a `[bsize, seq_len]` token block; flat logits out.
+    fn run(&self, flat: &[i32], bsize: usize) -> Result<Vec<f32>> {
+        match self {
+            ExecBackend::Engine { buckets } => {
+                let (_, session) = buckets.iter().find(|(b, _)| *b == bsize)
+                    .ok_or_else(|| anyhow!("no session for bucket {bsize}"))?;
+                session.run(flat)
+            }
+            ExecBackend::Native { model, .. } => model.logits(flat, bsize),
+        }
+    }
+}
+
+/// Build the native backend: model + quant bundle on the crate's own
+/// kernels.  Bucket sizes come from the graph registry when the prefix
+/// matches (so batching behaves exactly like the engine path), else a
+/// single max-batch bucket from the policy.
+fn native_backend(cfg: &ServerConfig, arts: &ModelArtifacts,
+                  quant: Option<&TensorBundle>) -> Result<ExecBackend> {
+    let graphs = arts.bucket_graphs(&cfg.graph_prefix);
+    let graph = graphs.first().map(|&(_, g)| g);
+    let model = NativeModel::new(arts, quant, graph, 4)?;
+    let mut buckets: Vec<usize> = graphs.iter().map(|&(b, _)| b).collect();
+    if buckets.is_empty() {
+        buckets.push(cfg.policy.max_batch.max(1));
+    }
+    Ok(ExecBackend::Native { model, buckets })
+}
+
 fn worker_loop(cfg: ServerConfig, wid: usize, queue: Arc<Batcher>,
                metrics: Arc<ServerMetrics>, shutdown: Arc<AtomicBool>,
                ready: mpsc::Sender<Result<usize, String>>) {
     // All PJRT state is created inside the worker thread (not Send).
     let init = (|| -> Result<_> {
-        let engine = Engine::cpu()?;
         let arts = ModelArtifacts::load(&cfg.model_dir)?;
         let quant = match &cfg.quant_dir {
             Some(d) => Some(TensorBundle::load(d)?),
             None => None,
         };
-        // discover batch buckets for the prefix (already ascending)
-        let mut buckets: Vec<(usize, crate::runtime::Session)> = Vec::new();
-        for (b, g) in arts.bucket_graphs(&cfg.graph_prefix) {
-            let s = engine.session(&arts, &g.name, quant.as_ref())?;
-            buckets.push((b, s));
-        }
-        if buckets.is_empty() {
-            return Err(anyhow!("no graphs match prefix {}_b*", cfg.graph_prefix));
-        }
-        Ok((arts.info.seq_len, arts.info.vocab, buckets))
+        let backend = if cfg.native {
+            native_backend(&cfg, &arts, quant.as_ref())?
+        } else {
+            match Engine::cpu() {
+                Ok(engine) => {
+                    // discover batch buckets for the prefix (ascending)
+                    let mut buckets: Vec<(usize, crate::runtime::Session)> =
+                        Vec::new();
+                    for (b, g) in arts.bucket_graphs(&cfg.graph_prefix) {
+                        let s = engine.session(&arts, &g.name,
+                                               quant.as_ref())?;
+                        buckets.push((b, s));
+                    }
+                    if buckets.is_empty() {
+                        return Err(anyhow!("no graphs match prefix {}_b*",
+                                           cfg.graph_prefix));
+                    }
+                    ExecBackend::Engine { buckets }
+                }
+                Err(e) => {
+                    // engine-less host (e.g. the vendored PJRT stub):
+                    // serve on the native fused path instead of dying
+                    if wid == 0 {
+                        eprintln!("[coordinator] PJRT engine unavailable \
+                                   ({e}); serving on the native fused \
+                                   dequant-GEMM path");
+                    }
+                    native_backend(&cfg, &arts, quant.as_ref())?
+                }
+            }
+        };
+        Ok((arts.info.seq_len, arts.info.vocab, backend))
     })();
 
-    let (seq_len, vocab, buckets) = match init {
+    let (seq_len, vocab, backend) = match init {
         Ok(v) => {
             let _ = ready.send(Ok(v.0));
             v
@@ -211,7 +286,8 @@ fn worker_loop(cfg: ServerConfig, wid: usize, queue: Arc<Batcher>,
             return;
         }
     };
-    let max_bucket = buckets.last().map(|(b, _)| *b).unwrap_or(1);
+    let bucket_sizes = backend.bucket_sizes();
+    let max_bucket = bucket_sizes.last().copied().unwrap_or(1);
     // Per-row NLL scoring (softmax over the vocab per position) is the
     // CPU-side hot loop of a batch; fan it out on a per-worker persistent
     // pool.  The process thread budget is split evenly across the engine
@@ -233,19 +309,19 @@ fn worker_loop(cfg: ServerConfig, wid: usize, queue: Arc<Batcher>,
         };
         let exec_start = Instant::now();
         // smallest bucket that fits
-        let (bsize, session) = buckets
+        let bsize = *bucket_sizes
             .iter()
-            .find(|(b, _)| *b >= batch.len())
-            .unwrap_or_else(|| buckets.last().unwrap());
+            .find(|&&b| b >= batch.len())
+            .unwrap_or_else(|| bucket_sizes.last().unwrap());
         // pack + repeat-pad
         let mut flat = Vec::with_capacity(bsize * seq_len);
         for r in &batch {
             flat.extend_from_slice(&r.tokens);
         }
-        for _ in batch.len()..*bsize {
+        for _ in batch.len()..bsize {
             flat.extend_from_slice(&batch.last().unwrap().tokens);
         }
-        let logits = match session.run(&flat) {
+        let logits = match backend.run(&flat, bsize) {
             Ok(l) => l,
             Err(e) => {
                 metrics.errors.fetch_add(batch.len() as u64, Ordering::Relaxed);
@@ -256,7 +332,7 @@ fn worker_loop(cfg: ServerConfig, wid: usize, queue: Arc<Batcher>,
         let exec_us = exec_start.elapsed().as_micros() as u64;
         metrics.batches.fetch_add(1, Ordering::Relaxed);
         metrics.batch_fill.record(
-            (batch.len() as f64 / *bsize as f64 * 100.0) as u64);
+            (batch.len() as f64 / bsize as f64 * 100.0) as u64);
         let wm = &metrics.per_worker[wid];
         wm.batches.fetch_add(1, Ordering::Relaxed);
         wm.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);

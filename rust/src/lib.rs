@@ -21,23 +21,38 @@
 //!                     blocked, parallel AND every SIMD backend agree
 //!                     bit-for-bit, see `tests/kernel_oracle.rs`; the
 //!                     `linalg::simd` layer dispatches SSE2/AVX2/NEON
-//!                     lane kernels at runtime, `LRC_SIMD` / `--simd`
-//!                     pins one, and the opt-in `--fma` / `LRC_FMA` mode
-//!                     swaps in fused multiply-add kernels with their own
-//!                     lockstep oracle reference; `linalg::workspace`
-//!                     provides the per-thread grow-only scratch arenas —
-//!                     packed A/B panels, solver temporaries and Σ
-//!                     scratch are recycled so steady-state hot loops are
-//!                     allocation-free (`tests/alloc_steady_state.rs`);
-//!                     Cholesky, Jacobi eigensolver, FWHT; `par_*` and
-//!                     `*_into` variants plus automatic parallelism past
-//!                     a fixed work threshold)
+//!                     lane kernels at runtime — f64 AND double-width
+//!                     **f32 lanes** under the same contract —
+//!                     `LRC_SIMD` / `--simd` pins one, and the opt-in
+//!                     `--fma` / `LRC_FMA` mode swaps in fused
+//!                     multiply-add kernels with their own lockstep
+//!                     oracle reference; `linalg::workspace` provides
+//!                     the per-thread grow-only scratch arenas (f64 and
+//!                     f32) — packed A/B panels, solver temporaries and
+//!                     Σ scratch are recycled so steady-state hot loops
+//!                     are allocation-free
+//!                     (`tests/alloc_steady_state.rs`); Cholesky, Jacobi
+//!                     eigensolver, FWHT; `par_*` and `*_into` variants
+//!                     plus automatic parallelism past a fixed work
+//!                     threshold)
 //! * [`rng`]         — deterministic SplitMix64 RNG
-//! * [`quant`]       — RTN / GPTQ quantizers + int4 bit-packing
+//! * [`quant`]       — RTN / GPTQ quantizers + 2..=8-bit packing; the
+//!                     `quant::dequant` **fused dequant-GEMM** serving
+//!                     kernel: `QuantizedLinear` consumes `PackedInts`
+//!                     directly (codes × scales decoded tile-by-tile
+//!                     into the blocked-k microkernel, never
+//!                     materializing the f32 weight matrix) with the
+//!                     low-rank correction `U·(Vᵀx)` fused into the same
+//!                     pass, bit-identical to the naive unpack reference
+//!                     on every backend × thread count
 //! * [`lrc`]         — the paper's Algorithms 1–4 + SVD baseline + oracle
 //! * [`data`]        — byte tokenizer, corpora, lm-eval-style task suites
 //! * [`eval`]        — perplexity + multiple-choice accuracy scoring
-//! * [`runtime`]     — PJRT engine: HLO-text artifacts → executables
+//! * [`runtime`]     — PJRT engine: HLO-text artifacts → executables;
+//!                     plus the engine-free `NativeModel` /
+//!                     `NativeProvider` serving path (`--native`): the
+//!                     rotated forward on the crate's own kernels with
+//!                     quantized layers on the fused dequant-GEMM
 //! * [`pipeline`]    — end-to-end PTQ driver (calibrate → quantize →
 //!                     bundle); the per-layer loop fans out on [`par`];
 //!                     split entry points let calibration be collected
@@ -49,7 +64,8 @@
 //!                     resume, built-in sanity assertions; runs on real
 //!                     artifacts or an engine-free synthetic model
 //! * [`coordinator`] — serving engine: dynamic batcher, N engine
-//!                     workers, per-worker metrics
+//!                     workers, per-worker metrics; falls back to the
+//!                     native fused path when no PJRT plugin loads
 //! * [`bench`]       — measurement harness used by `cargo bench` targets
 //!                     + the `bench-trend` regression comparison the CI
 //!                     gate runs over bench JSON artifacts

@@ -69,10 +69,24 @@
 //! [`NC`]-row panels of Bᵀ are held hot while [`KC`]-wide k-panels stream
 //! through [`MR`]×nr register tiles.  KC·(MR+nr) f64 ≤ 24 KB keeps the
 //! active slices in L1, and the packed NC×KC panel (128 KB) in L2.
+//!
+//! # The f32 lane family
+//!
+//! Every piece above exists a second time at f32 ([`pack_rows_f32`],
+//! [`matmul_nt_f32`], the `tile_*_f32` kernels): the same block schedule
+//! and the same canonical program, at **twice the lane width**
+//! ([`simd::Backend::nr32`] = 2·nr on every backend).  The f32 contract
+//! mirrors the f64 one — every backend/thread-count/chunking is
+//! bit-identical to the naive ascending-k f32 triple loop (fused
+//! `mul_add` steps in FMA mode) — and is what the fused dequant-GEMM
+//! path ([`crate::quant::dequant`]) drives its decoded `PackedInts`
+//! strips through: there, the lane strips are *decoded* from packed
+//! codes × scales tile by tile instead of copied from a dense matrix,
+//! so the full f32 weight matrix never exists in memory.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 
-use super::simd::{self, Backend, MAX_NR};
+use super::simd::{self, Backend, MAX_NR, MAX_NR32};
 use super::{workspace, Mat};
 
 /// Register-tile rows (A rows advanced together).  The tile width (NR
@@ -338,6 +352,216 @@ pub(crate) fn gram_row_segment(src: &Mat, i: usize) -> Vec<f64> {
     out
 }
 
+// ---------------------------------------------------------------------------
+// f32 blocked GEMM — the same schedule and canonical program at twice
+// the lane width ([`simd::Backend::nr32`]).  This is the compute layer
+// of the fused dequant-GEMM data path (`quant::dequant`): the fused
+// kernel builds its lane strips by *decoding* `PackedInts` tiles instead
+// of copying a dense matrix, then drives the very same f32 tiles below.
+// The f32 reference program is the naive f32 triple loop (ascending k,
+// mul-then-add, or one fused `mul_add` per step in FMA mode) —
+// `tests/kernel_oracle.rs` locks every backend against it with `==`.
+// ---------------------------------------------------------------------------
+
+/// The full MR-row f32 tile over one packed strip (see [`tile_full`] —
+/// identical choreography at nr32 lanes).  `pub(crate)` so the fused
+/// dequant driver can run the same tile over *decoded* strips.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub(crate) fn tile_full_f32(be: Backend, fma: bool, rows: [&[f32]; MR],
+                            lanes: usize, strip: &[f32], o0: usize, n: usize,
+                            out: &mut [f32]) {
+    let nr = be.nr32();
+    let mut acc = [0.0_f32; MR * MAX_NR32];
+    let acc = &mut acc[..MR * nr];
+    for r in 0..MR {
+        let orow = o0 + r * n;
+        acc[r * nr..r * nr + lanes].copy_from_slice(&out[orow..orow + lanes]);
+    }
+    simd::tile4_f32(be, fma, rows, strip, acc);
+    for r in 0..MR {
+        let orow = o0 + r * n;
+        out[orow..orow + lanes].copy_from_slice(&acc[r * nr..r * nr + lanes]);
+    }
+}
+
+/// Ragged-row f32 edge tile (see [`tile_row`]).
+#[inline]
+pub(crate) fn tile_row_f32(be: Backend, fma: bool, arow: &[f32], lanes: usize,
+                           strip: &[f32], orow: usize, out: &mut [f32]) {
+    let nr = be.nr32();
+    let mut acc = [0.0_f32; MAX_NR32];
+    let acc = &mut acc[..nr];
+    acc[..lanes].copy_from_slice(&out[orow..orow + lanes]);
+    simd::tile1_f32(be, fma, arow, strip, acc);
+    out[orow..orow + lanes].copy_from_slice(&acc[..lanes]);
+}
+
+/// f32 sibling of [`PackedRows`]: rows of a flat row-major [n, k] matrix
+/// packed into nr32-wide k-major lane strips
+/// (`data[(s*cols + kk)*nr32 + l] = src[(s*nr32 + l)*cols + kk]`,
+/// zero-padded).  Backend + FMA mode captured at pack time; storage from
+/// the f32 workspace arena, returned on drop.
+pub struct PackedRowsF32 {
+    pub(crate) be: Backend,
+    pub(crate) fma: bool,
+    pub(crate) rows: usize,
+    pub(crate) cols: usize,
+    pub(crate) data: Vec<f32>,
+}
+
+impl Drop for PackedRowsF32 {
+    fn drop(&mut self) {
+        workspace::put_f32(std::mem::take(&mut self.data));
+    }
+}
+
+/// Pack a flat row-major `[rows, cols]` f32 matrix for
+/// [`matmul_nt_f32_block`] on the active backend + accumulation mode.
+pub fn pack_rows_f32(src: &[f32], rows: usize, cols: usize) -> PackedRowsF32 {
+    assert_eq!(src.len(), rows * cols, "pack_rows_f32 shape");
+    let be = simd::active();
+    let fma = simd::fma_active();
+    let nr = be.nr32();
+    let n_strips = rows.div_ceil(nr);
+    let mut data = workspace::take_zeroed_f32(n_strips * cols * nr);
+    for s in 0..n_strips {
+        let strip = &mut data[s * cols * nr..(s + 1) * cols * nr];
+        for l in 0..nr {
+            let j = s * nr + l;
+            if j < rows {
+                for (kk, &v) in src[j * cols..(j + 1) * cols].iter()
+                    .enumerate()
+                {
+                    strip[kk * nr + l] = v;
+                }
+            }
+            // else: buffer is zeroed by take_zeroed_f32, pads stay 0
+        }
+    }
+    PackedRowsF32 { be, fma, rows, cols, data }
+}
+
+/// C[r0..r1, :] = A[r0..r1, :]·Bᵀ on the f32 tiles, A given flat
+/// row-major `[m, k]` and Bᵀ pre-packed.  Same contract as
+/// [`matmul_nt_block`]: `out` (rows relative to `r0`) must be
+/// zero-initialized, k-panels accumulate into it, every element runs the
+/// canonical ascending-k f32 program.
+pub(crate) fn matmul_nt_f32_block(a: &[f32], kd: usize, bt: &PackedRowsF32,
+                                  r0: usize, r1: usize, out: &mut [f32]) {
+    let n = bt.rows;
+    debug_assert_eq!(out.len(), (r1 - r0) * n);
+    debug_assert_eq!(bt.cols, kd, "matmul_nt_f32_block packed inner dims");
+    if n == 0 || r1 <= r0 || kd == 0 {
+        return; // empty product: out stays zero, matching the empty sum
+    }
+    let be = bt.be;
+    let fma = bt.fma;
+    let nr = be.nr32();
+    // NC (64) is a multiple of every backend's nr32 (8 or 16)
+    debug_assert_eq!(NC % nr, 0);
+    let arow = |i: usize| -> &[f32] { &a[i * kd..(i + 1) * kd] };
+    let mut apanel: Option<Vec<f32>> = None;
+    let pack_a = pack_a_enabled();
+    let mut jc = 0;
+    while jc < n {
+        let jc_hi = (jc + NC).min(n);
+        let use_pack = pack_a && jc_hi - jc > nr;
+        let mut kc = 0;
+        while kc < kd {
+            let kc_hi = (kc + KC).min(kd);
+            let kw = kc_hi - kc;
+            let mut i = r0;
+            while i < r1 {
+                let i_hi = (i + MR).min(r1);
+                let full = i_hi - i == MR;
+                if full && use_pack {
+                    let ap = apanel.get_or_insert_with(
+                        || workspace::take_zeroed_f32(MR * KC));
+                    for r in 0..MR {
+                        ap[r * kw..(r + 1) * kw]
+                            .copy_from_slice(&arow(i + r)[kc..kc_hi]);
+                    }
+                }
+                for s in jc / nr..jc_hi.div_ceil(nr) {
+                    let j = s * nr;
+                    let lanes = (jc_hi - j).min(nr);
+                    let strip = &bt.data[(s * kd + kc) * nr..
+                                         (s * kd + kc_hi) * nr];
+                    if full {
+                        let rows: [&[f32]; MR] = if use_pack {
+                            let ap = apanel.as_deref()
+                                .expect("A panel packed above");
+                            [&ap[..kw], &ap[kw..2 * kw],
+                             &ap[2 * kw..3 * kw], &ap[3 * kw..4 * kw]]
+                        } else {
+                            [&arow(i)[kc..kc_hi], &arow(i + 1)[kc..kc_hi],
+                             &arow(i + 2)[kc..kc_hi],
+                             &arow(i + 3)[kc..kc_hi]]
+                        };
+                        tile_full_f32(be, fma, rows, lanes, strip,
+                                      (i - r0) * n + j, n, out);
+                    } else {
+                        for r in i..i_hi {
+                            tile_row_f32(be, fma, &arow(r)[kc..kc_hi], lanes,
+                                         strip, (r - r0) * n + j, out);
+                        }
+                    }
+                }
+                i = i_hi;
+            }
+            kc = kc_hi;
+        }
+        jc = jc_hi;
+    }
+    if let Some(ap) = apanel {
+        workspace::put_f32(ap);
+    }
+}
+
+/// C = A·Bᵀ in f32 (flat row-major slices: A `[m, k]`, B `[n, k]`,
+/// C `[m, n]`), written into `out` (cleared + resized).  Packs B once,
+/// then auto-parallelizes on [`crate::par::global`] past
+/// [`super::PAR_MIN_WORK`] with disjoint row-chunk writes — bit-identical
+/// at every thread count and on every backend, same argument as the f64
+/// path.
+pub fn matmul_nt_f32_into(a: &[f32], m: usize, k: usize, b: &[f32], n: usize,
+                          out: &mut Vec<f32>) {
+    assert_eq!(a.len(), m * k, "matmul_nt_f32 A shape");
+    assert_eq!(b.len(), n * k, "matmul_nt_f32 B shape");
+    out.clear();
+    out.resize(m * n, 0.0);
+    if n == 0 || m == 0 {
+        return;
+    }
+    let packed = pack_rows_f32(b, n, k);
+    if m <= Mat::PAR_ROW_CHUNK || m * n * k < super::PAR_MIN_WORK
+        || crate::par::in_pool()
+    {
+        matmul_nt_f32_block(a, k, &packed, 0, m, out);
+        return;
+    }
+    let pool = crate::par::global();
+    let chunk = Mat::PAR_ROW_CHUNK;
+    let n_chunks = m.div_ceil(chunk);
+    let shared = workspace::SharedSlice::new(&mut out[..]);
+    pool.for_indices(n_chunks, |ci| {
+        let r0 = ci * chunk;
+        let r1 = (r0 + chunk).min(m);
+        // SAFETY: row chunks [r0, r1) partition out — disjoint spans
+        let slice = unsafe { shared.range(r0 * n, r1 * n) };
+        matmul_nt_f32_block(a, k, &packed, r0, r1, slice);
+    });
+}
+
+/// Allocating convenience for [`matmul_nt_f32_into`].
+pub fn matmul_nt_f32(a: &[f32], m: usize, k: usize, b: &[f32], n: usize)
+                     -> Vec<f32> {
+    let mut out = Vec::new();
+    matmul_nt_f32_into(a, m, k, b, n, &mut out);
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -473,6 +697,68 @@ mod tests {
             }
         }
         simd::set_backend(None).unwrap();
+    }
+
+    /// Naive mode-matched f32 reference: one accumulator, ascending k.
+    fn naive_nt_f32(a: &[f32], m: usize, k: usize, b: &[f32], n: usize)
+                    -> Vec<f32> {
+        let fma = simd::fma_active();
+        let mut out = vec![0.0_f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0_f32;
+                for kk in 0..k {
+                    if fma {
+                        s = a[i * k + kk].mul_add(b[j * k + kk], s);
+                    } else {
+                        s += a[i * k + kk] * b[j * k + kk];
+                    }
+                }
+                out[i * n + j] = s;
+            }
+        }
+        out
+    }
+
+    fn f32s(rng: &mut Rng, n: usize) -> Vec<f32> {
+        rng.normal_vec(n).iter().map(|&v| v as f32).collect()
+    }
+
+    #[test]
+    fn f32_blocked_kernel_bit_identical_to_naive_for_every_backend() {
+        let _guard = sweep_lock();
+        for be in simd::available_backends() {
+            simd::set_backend(Some(be)).unwrap();
+            for (m, k, n) in shapes() {
+                let mut rng = Rng::new(m as u64 * 131 + k as u64 * 3
+                                       + n as u64);
+                let a = f32s(&mut rng, m * k);
+                let b = f32s(&mut rng, n * k);
+                let got = matmul_nt_f32(&a, m, k, &b, n);
+                assert_eq!(got, naive_nt_f32(&a, m, k, &b, n),
+                           "f32 {m}x{k}·{n}ᵀ on {}", be.name());
+            }
+        }
+        simd::set_backend(None).unwrap();
+    }
+
+    #[test]
+    fn f32_row_ranges_compose_exactly() {
+        let (m, k, n) = (23usize, 31usize, 19usize);
+        let mut rng = Rng::new(5);
+        let a = f32s(&mut rng, m * k);
+        let b = f32s(&mut rng, n * k);
+        let packed = pack_rows_f32(&b, n, k);
+        let mut full = vec![0.0_f32; m * n];
+        matmul_nt_f32_block(&a, k, &packed, 0, m, &mut full);
+        for split in [1usize, 4, 7, 16, 22] {
+            let mut top = vec![0.0_f32; split * n];
+            let mut bot = vec![0.0_f32; (m - split) * n];
+            matmul_nt_f32_block(&a, k, &packed, 0, split, &mut top);
+            matmul_nt_f32_block(&a, k, &packed, split, m, &mut bot);
+            top.extend_from_slice(&bot);
+            assert_eq!(top, full, "split {split}");
+        }
     }
 
     #[test]

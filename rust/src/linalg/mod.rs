@@ -41,6 +41,8 @@ pub mod workspace;
 pub use chol::{cholesky, solve_lower, solve_upper, chol_solve_mat, chol_inverse};
 pub use eigh::{eigh, eigh_jacobi, eigh_jacobi_par, top_k_eigvecs};
 pub use hadamard::{fwht, fwht_f32, hadamard_matrix};
+pub use kernels::{matmul_nt_f32, matmul_nt_f32_into, pack_rows_f32,
+                  PackedRowsF32};
 
 /// Row-major dense f64 matrix.
 #[derive(Clone, Debug, PartialEq)]

@@ -72,6 +72,12 @@ use std::sync::OnceLock;
 /// stack accumulator buffers in [`super::kernels`].
 pub const MAX_NR: usize = 8;
 
+/// Widest **f32** register-tile width (AVX2's 4×16 tile — f32 lanes are
+/// twice as wide as f64 at every vector length); sizes the stack
+/// accumulators of the f32 tiles in [`super::kernels`] and
+/// [`crate::quant::dequant`].
+pub const MAX_NR32: usize = 16;
+
 /// A vector instruction set the micro-kernels can dispatch to.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Backend {
@@ -107,6 +113,17 @@ impl Backend {
         match self {
             Backend::Avx2 => 8,
             _ => 4,
+        }
+    }
+
+    /// f32 register-tile width NR: twice [`Backend::nr`] on every backend,
+    /// because each vector register holds twice as many f32 lanes — the
+    /// same two-registers-per-output-row shape as the f64 tiles, at
+    /// double the element count.
+    pub fn nr32(self) -> usize {
+        match self {
+            Backend::Avx2 => 16,
+            _ => 8,
         }
     }
 
@@ -758,6 +775,467 @@ unsafe fn tile1_neon_fma(a: &[f64], bp: &[f64], acc: &mut [f64]) {
     vst1q_f64(p.add(2), c1);
 }
 
+// ---------------------------------------------------------------------------
+// f32 micro-kernels — the same canonical program, twice the lane width.
+//
+// The bit-identity argument is precision-agnostic: one accumulator per
+// output element, strictly ascending k, separate IEEE mul then add per
+// step (or one fused `mul_add` per step in FMA mode).  f32 lanes simply
+// pack twice as many elements per vector register, so `nr32 = 2·nr` and
+// the tile shape (two registers per output row) carries over unchanged.
+// These feed the fused dequant-GEMM data path (`quant::dequant`), whose
+// reference is the naive unpack-then-matmul f32 triple loop.
+// ---------------------------------------------------------------------------
+
+/// Four-row f32 register tile: `acc[r*nr32 + l] += a[r][kk] · bp[kk*nr32
+/// + l]` for `kk` ascending (one fused `mul_add` per step in FMA mode).
+pub(crate) fn tile4_f32(be: Backend, fma: bool, a: [&[f32]; 4], bp: &[f32],
+                        acc: &mut [f32]) {
+    debug_assert_eq!(bp.len(), a[0].len() * be.nr32());
+    debug_assert_eq!(acc.len(), 4 * be.nr32());
+    if fma {
+        return tile4_f32_fma(be, a, bp, acc);
+    }
+    match be {
+        Backend::Scalar => tile4_f32_scalar(a, bp, acc, 8),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Sse2/Avx2 are only ever selected when `available()`
+        // held (set_backend validates; detect/env only yield available
+        // backends), so the required target features are present.
+        Backend::Sse2 => unsafe { tile4_f32_sse2(a, bp, acc) },
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { tile4_f32_avx2(a, bp, acc) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        Backend::Neon => unsafe { tile4_f32_neon(a, bp, acc) },
+        other => tile4_f32_scalar(a, bp, acc, other.nr32()),
+    }
+}
+
+/// Single-row f32 tile (ragged row edges): `acc[l] += a[kk] · bp[kk*nr32
+/// + l]` for `kk` ascending.
+pub(crate) fn tile1_f32(be: Backend, fma: bool, a: &[f32], bp: &[f32],
+                        acc: &mut [f32]) {
+    debug_assert_eq!(bp.len(), a.len() * be.nr32());
+    debug_assert_eq!(acc.len(), be.nr32());
+    if fma {
+        return tile1_f32_fma(be, a, bp, acc);
+    }
+    match be {
+        Backend::Scalar => tile1_f32_scalar(a, bp, acc, 8),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: see tile4_f32 — only available backends are selectable.
+        Backend::Sse2 => unsafe { tile1_f32_sse2(a, bp, acc) },
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { tile1_f32_avx2(a, bp, acc) },
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => unsafe { tile1_f32_neon(a, bp, acc) },
+        other => tile1_f32_scalar(a, bp, acc, other.nr32()),
+    }
+}
+
+/// FMA-mode f32 tile4 dispatch: backends without a packed f32 FMA run
+/// the scalar `f32::mul_add` program at their own tile width (same
+/// correctly-rounded operation, same bits).
+fn tile4_f32_fma(be: Backend, a: [&[f32]; 4], bp: &[f32], acc: &mut [f32]) {
+    match be {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 if fma_hw() =>
+            // SAFETY: avx2 selectable ⇒ available; fma_hw() just checked.
+            unsafe { tile4_f32_avx2_fma(a, bp, acc) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON (incl. fused vfmaq) is baseline on aarch64.
+        Backend::Neon => unsafe { tile4_f32_neon_fma(a, bp, acc) },
+        other => tile4_f32_scalar_fma(a, bp, acc, other.nr32()),
+    }
+}
+
+/// FMA-mode f32 tile1 dispatch (see [`tile4_f32_fma`]).
+fn tile1_f32_fma(be: Backend, a: &[f32], bp: &[f32], acc: &mut [f32]) {
+    match be {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 if fma_hw() => unsafe {
+            tile1_f32_avx2_fma(a, bp, acc)
+        },
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => unsafe { tile1_f32_neon_fma(a, bp, acc) },
+        other => tile1_f32_scalar_fma(a, bp, acc, other.nr32()),
+    }
+}
+
+// --- f32 scalar reference ----------------------------------------------------
+
+fn tile4_f32_scalar(a: [&[f32]; 4], bp: &[f32], acc: &mut [f32], nr: usize) {
+    let kw = a[0].len();
+    for kk in 0..kw {
+        let y = &bp[kk * nr..(kk + 1) * nr];
+        for r in 0..4 {
+            let x = a[r][kk];
+            let row = &mut acc[r * nr..(r + 1) * nr];
+            for l in 0..nr {
+                row[l] += x * y[l];
+            }
+        }
+    }
+}
+
+fn tile1_f32_scalar(a: &[f32], bp: &[f32], acc: &mut [f32], nr: usize) {
+    for (kk, &x) in a.iter().enumerate() {
+        let y = &bp[kk * nr..(kk + 1) * nr];
+        for l in 0..nr {
+            acc[l] += x * y[l];
+        }
+    }
+}
+
+fn tile4_f32_scalar_fma(a: [&[f32]; 4], bp: &[f32], acc: &mut [f32],
+                        nr: usize) {
+    let kw = a[0].len();
+    for kk in 0..kw {
+        let y = &bp[kk * nr..(kk + 1) * nr];
+        for r in 0..4 {
+            let x = a[r][kk];
+            let row = &mut acc[r * nr..(r + 1) * nr];
+            for l in 0..nr {
+                row[l] = x.mul_add(y[l], row[l]);
+            }
+        }
+    }
+}
+
+fn tile1_f32_scalar_fma(a: &[f32], bp: &[f32], acc: &mut [f32], nr: usize) {
+    for (kk, &x) in a.iter().enumerate() {
+        let y = &bp[kk * nr..(kk + 1) * nr];
+        for l in 0..nr {
+            acc[l] = x.mul_add(y[l], acc[l]);
+        }
+    }
+}
+
+// --- f32 x86_64: SSE2 (baseline) and AVX2 (runtime-detected) ---------------
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn tile4_f32_sse2(a: [&[f32]; 4], bp: &[f32], acc: &mut [f32]) {
+    use core::arch::x86_64::*;
+    const NR: usize = 8;
+    let kw = a[0].len();
+    let (a0, a1, a2, a3) = (a[0], a[1], a[2], a[3]);
+    let p = acc.as_mut_ptr();
+    let mut c00 = _mm_loadu_ps(p);
+    let mut c01 = _mm_loadu_ps(p.add(4));
+    let mut c10 = _mm_loadu_ps(p.add(8));
+    let mut c11 = _mm_loadu_ps(p.add(12));
+    let mut c20 = _mm_loadu_ps(p.add(16));
+    let mut c21 = _mm_loadu_ps(p.add(20));
+    let mut c30 = _mm_loadu_ps(p.add(24));
+    let mut c31 = _mm_loadu_ps(p.add(28));
+    let bpp = bp.as_ptr();
+    for kk in 0..kw {
+        let y0 = _mm_loadu_ps(bpp.add(kk * NR));
+        let y1 = _mm_loadu_ps(bpp.add(kk * NR + 4));
+        let x0 = _mm_set1_ps(a0[kk]);
+        c00 = _mm_add_ps(c00, _mm_mul_ps(x0, y0));
+        c01 = _mm_add_ps(c01, _mm_mul_ps(x0, y1));
+        let x1 = _mm_set1_ps(a1[kk]);
+        c10 = _mm_add_ps(c10, _mm_mul_ps(x1, y0));
+        c11 = _mm_add_ps(c11, _mm_mul_ps(x1, y1));
+        let x2 = _mm_set1_ps(a2[kk]);
+        c20 = _mm_add_ps(c20, _mm_mul_ps(x2, y0));
+        c21 = _mm_add_ps(c21, _mm_mul_ps(x2, y1));
+        let x3 = _mm_set1_ps(a3[kk]);
+        c30 = _mm_add_ps(c30, _mm_mul_ps(x3, y0));
+        c31 = _mm_add_ps(c31, _mm_mul_ps(x3, y1));
+    }
+    _mm_storeu_ps(p, c00);
+    _mm_storeu_ps(p.add(4), c01);
+    _mm_storeu_ps(p.add(8), c10);
+    _mm_storeu_ps(p.add(12), c11);
+    _mm_storeu_ps(p.add(16), c20);
+    _mm_storeu_ps(p.add(20), c21);
+    _mm_storeu_ps(p.add(24), c30);
+    _mm_storeu_ps(p.add(28), c31);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn tile1_f32_sse2(a: &[f32], bp: &[f32], acc: &mut [f32]) {
+    use core::arch::x86_64::*;
+    const NR: usize = 8;
+    let p = acc.as_mut_ptr();
+    let mut c0 = _mm_loadu_ps(p);
+    let mut c1 = _mm_loadu_ps(p.add(4));
+    let bpp = bp.as_ptr();
+    for (kk, &xv) in a.iter().enumerate() {
+        let x = _mm_set1_ps(xv);
+        let y0 = _mm_loadu_ps(bpp.add(kk * NR));
+        let y1 = _mm_loadu_ps(bpp.add(kk * NR + 4));
+        c0 = _mm_add_ps(c0, _mm_mul_ps(x, y0));
+        c1 = _mm_add_ps(c1, _mm_mul_ps(x, y1));
+    }
+    _mm_storeu_ps(p, c0);
+    _mm_storeu_ps(p.add(4), c1);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn tile4_f32_avx2(a: [&[f32]; 4], bp: &[f32], acc: &mut [f32]) {
+    use core::arch::x86_64::*;
+    const NR: usize = 16;
+    let kw = a[0].len();
+    let (a0, a1, a2, a3) = (a[0], a[1], a[2], a[3]);
+    let p = acc.as_mut_ptr();
+    let mut c00 = _mm256_loadu_ps(p);
+    let mut c01 = _mm256_loadu_ps(p.add(8));
+    let mut c10 = _mm256_loadu_ps(p.add(16));
+    let mut c11 = _mm256_loadu_ps(p.add(24));
+    let mut c20 = _mm256_loadu_ps(p.add(32));
+    let mut c21 = _mm256_loadu_ps(p.add(40));
+    let mut c30 = _mm256_loadu_ps(p.add(48));
+    let mut c31 = _mm256_loadu_ps(p.add(56));
+    let bpp = bp.as_ptr();
+    for kk in 0..kw {
+        let y0 = _mm256_loadu_ps(bpp.add(kk * NR));
+        let y1 = _mm256_loadu_ps(bpp.add(kk * NR + 8));
+        // mul then add, never _mm256_fmadd_ps: FMA's single rounding
+        // would diverge from the canonical scalar program.
+        let x0 = _mm256_set1_ps(a0[kk]);
+        c00 = _mm256_add_ps(c00, _mm256_mul_ps(x0, y0));
+        c01 = _mm256_add_ps(c01, _mm256_mul_ps(x0, y1));
+        let x1 = _mm256_set1_ps(a1[kk]);
+        c10 = _mm256_add_ps(c10, _mm256_mul_ps(x1, y0));
+        c11 = _mm256_add_ps(c11, _mm256_mul_ps(x1, y1));
+        let x2 = _mm256_set1_ps(a2[kk]);
+        c20 = _mm256_add_ps(c20, _mm256_mul_ps(x2, y0));
+        c21 = _mm256_add_ps(c21, _mm256_mul_ps(x2, y1));
+        let x3 = _mm256_set1_ps(a3[kk]);
+        c30 = _mm256_add_ps(c30, _mm256_mul_ps(x3, y0));
+        c31 = _mm256_add_ps(c31, _mm256_mul_ps(x3, y1));
+    }
+    _mm256_storeu_ps(p, c00);
+    _mm256_storeu_ps(p.add(8), c01);
+    _mm256_storeu_ps(p.add(16), c10);
+    _mm256_storeu_ps(p.add(24), c11);
+    _mm256_storeu_ps(p.add(32), c20);
+    _mm256_storeu_ps(p.add(40), c21);
+    _mm256_storeu_ps(p.add(48), c30);
+    _mm256_storeu_ps(p.add(56), c31);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn tile1_f32_avx2(a: &[f32], bp: &[f32], acc: &mut [f32]) {
+    use core::arch::x86_64::*;
+    const NR: usize = 16;
+    let p = acc.as_mut_ptr();
+    let mut c0 = _mm256_loadu_ps(p);
+    let mut c1 = _mm256_loadu_ps(p.add(8));
+    let bpp = bp.as_ptr();
+    for (kk, &xv) in a.iter().enumerate() {
+        let x = _mm256_set1_ps(xv);
+        let y0 = _mm256_loadu_ps(bpp.add(kk * NR));
+        let y1 = _mm256_loadu_ps(bpp.add(kk * NR + 8));
+        c0 = _mm256_add_ps(c0, _mm256_mul_ps(x, y0));
+        c1 = _mm256_add_ps(c1, _mm256_mul_ps(x, y1));
+    }
+    _mm256_storeu_ps(p, c0);
+    _mm256_storeu_ps(p.add(8), c1);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn tile4_f32_avx2_fma(a: [&[f32]; 4], bp: &[f32], acc: &mut [f32]) {
+    use core::arch::x86_64::*;
+    const NR: usize = 16;
+    let kw = a[0].len();
+    let (a0, a1, a2, a3) = (a[0], a[1], a[2], a[3]);
+    let p = acc.as_mut_ptr();
+    let mut c00 = _mm256_loadu_ps(p);
+    let mut c01 = _mm256_loadu_ps(p.add(8));
+    let mut c10 = _mm256_loadu_ps(p.add(16));
+    let mut c11 = _mm256_loadu_ps(p.add(24));
+    let mut c20 = _mm256_loadu_ps(p.add(32));
+    let mut c21 = _mm256_loadu_ps(p.add(40));
+    let mut c30 = _mm256_loadu_ps(p.add(48));
+    let mut c31 = _mm256_loadu_ps(p.add(56));
+    let bpp = bp.as_ptr();
+    for kk in 0..kw {
+        let y0 = _mm256_loadu_ps(bpp.add(kk * NR));
+        let y1 = _mm256_loadu_ps(bpp.add(kk * NR + 8));
+        // the FMA-mode program: one correctly-rounded fused op per step
+        let x0 = _mm256_set1_ps(a0[kk]);
+        c00 = _mm256_fmadd_ps(x0, y0, c00);
+        c01 = _mm256_fmadd_ps(x0, y1, c01);
+        let x1 = _mm256_set1_ps(a1[kk]);
+        c10 = _mm256_fmadd_ps(x1, y0, c10);
+        c11 = _mm256_fmadd_ps(x1, y1, c11);
+        let x2 = _mm256_set1_ps(a2[kk]);
+        c20 = _mm256_fmadd_ps(x2, y0, c20);
+        c21 = _mm256_fmadd_ps(x2, y1, c21);
+        let x3 = _mm256_set1_ps(a3[kk]);
+        c30 = _mm256_fmadd_ps(x3, y0, c30);
+        c31 = _mm256_fmadd_ps(x3, y1, c31);
+    }
+    _mm256_storeu_ps(p, c00);
+    _mm256_storeu_ps(p.add(8), c01);
+    _mm256_storeu_ps(p.add(16), c10);
+    _mm256_storeu_ps(p.add(24), c11);
+    _mm256_storeu_ps(p.add(32), c20);
+    _mm256_storeu_ps(p.add(40), c21);
+    _mm256_storeu_ps(p.add(48), c30);
+    _mm256_storeu_ps(p.add(56), c31);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn tile1_f32_avx2_fma(a: &[f32], bp: &[f32], acc: &mut [f32]) {
+    use core::arch::x86_64::*;
+    const NR: usize = 16;
+    let p = acc.as_mut_ptr();
+    let mut c0 = _mm256_loadu_ps(p);
+    let mut c1 = _mm256_loadu_ps(p.add(8));
+    let bpp = bp.as_ptr();
+    for (kk, &xv) in a.iter().enumerate() {
+        let x = _mm256_set1_ps(xv);
+        let y0 = _mm256_loadu_ps(bpp.add(kk * NR));
+        let y1 = _mm256_loadu_ps(bpp.add(kk * NR + 8));
+        c0 = _mm256_fmadd_ps(x, y0, c0);
+        c1 = _mm256_fmadd_ps(x, y1, c1);
+    }
+    _mm256_storeu_ps(p, c0);
+    _mm256_storeu_ps(p.add(8), c1);
+}
+
+// --- f32 aarch64: NEON (baseline) ------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn tile4_f32_neon(a: [&[f32]; 4], bp: &[f32], acc: &mut [f32]) {
+    use core::arch::aarch64::*;
+    const NR: usize = 8;
+    let kw = a[0].len();
+    let (a0, a1, a2, a3) = (a[0], a[1], a[2], a[3]);
+    let p = acc.as_mut_ptr();
+    let mut c00 = vld1q_f32(p);
+    let mut c01 = vld1q_f32(p.add(4));
+    let mut c10 = vld1q_f32(p.add(8));
+    let mut c11 = vld1q_f32(p.add(12));
+    let mut c20 = vld1q_f32(p.add(16));
+    let mut c21 = vld1q_f32(p.add(20));
+    let mut c30 = vld1q_f32(p.add(24));
+    let mut c31 = vld1q_f32(p.add(28));
+    let bpp = bp.as_ptr();
+    for kk in 0..kw {
+        let y0 = vld1q_f32(bpp.add(kk * NR));
+        let y1 = vld1q_f32(bpp.add(kk * NR + 4));
+        // vmulq + vaddq, never vfmaq: keep the two-rounding scalar program
+        let x0 = vdupq_n_f32(a0[kk]);
+        c00 = vaddq_f32(c00, vmulq_f32(x0, y0));
+        c01 = vaddq_f32(c01, vmulq_f32(x0, y1));
+        let x1 = vdupq_n_f32(a1[kk]);
+        c10 = vaddq_f32(c10, vmulq_f32(x1, y0));
+        c11 = vaddq_f32(c11, vmulq_f32(x1, y1));
+        let x2 = vdupq_n_f32(a2[kk]);
+        c20 = vaddq_f32(c20, vmulq_f32(x2, y0));
+        c21 = vaddq_f32(c21, vmulq_f32(x2, y1));
+        let x3 = vdupq_n_f32(a3[kk]);
+        c30 = vaddq_f32(c30, vmulq_f32(x3, y0));
+        c31 = vaddq_f32(c31, vmulq_f32(x3, y1));
+    }
+    vst1q_f32(p, c00);
+    vst1q_f32(p.add(4), c01);
+    vst1q_f32(p.add(8), c10);
+    vst1q_f32(p.add(12), c11);
+    vst1q_f32(p.add(16), c20);
+    vst1q_f32(p.add(20), c21);
+    vst1q_f32(p.add(24), c30);
+    vst1q_f32(p.add(28), c31);
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn tile1_f32_neon(a: &[f32], bp: &[f32], acc: &mut [f32]) {
+    use core::arch::aarch64::*;
+    const NR: usize = 8;
+    let p = acc.as_mut_ptr();
+    let mut c0 = vld1q_f32(p);
+    let mut c1 = vld1q_f32(p.add(4));
+    let bpp = bp.as_ptr();
+    for (kk, &xv) in a.iter().enumerate() {
+        let x = vdupq_n_f32(xv);
+        let y0 = vld1q_f32(bpp.add(kk * NR));
+        let y1 = vld1q_f32(bpp.add(kk * NR + 4));
+        c0 = vaddq_f32(c0, vmulq_f32(x, y0));
+        c1 = vaddq_f32(c1, vmulq_f32(x, y1));
+    }
+    vst1q_f32(p, c0);
+    vst1q_f32(p.add(4), c1);
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn tile4_f32_neon_fma(a: [&[f32]; 4], bp: &[f32], acc: &mut [f32]) {
+    use core::arch::aarch64::*;
+    const NR: usize = 8;
+    let kw = a[0].len();
+    let (a0, a1, a2, a3) = (a[0], a[1], a[2], a[3]);
+    let p = acc.as_mut_ptr();
+    let mut c00 = vld1q_f32(p);
+    let mut c01 = vld1q_f32(p.add(4));
+    let mut c10 = vld1q_f32(p.add(8));
+    let mut c11 = vld1q_f32(p.add(12));
+    let mut c20 = vld1q_f32(p.add(16));
+    let mut c21 = vld1q_f32(p.add(20));
+    let mut c30 = vld1q_f32(p.add(24));
+    let mut c31 = vld1q_f32(p.add(28));
+    let bpp = bp.as_ptr();
+    for kk in 0..kw {
+        let y0 = vld1q_f32(bpp.add(kk * NR));
+        let y1 = vld1q_f32(bpp.add(kk * NR + 4));
+        // vfmaq_f32(acc, x, y) = acc + x·y, fused — the FMA-mode program
+        let x0 = vdupq_n_f32(a0[kk]);
+        c00 = vfmaq_f32(c00, x0, y0);
+        c01 = vfmaq_f32(c01, x0, y1);
+        let x1 = vdupq_n_f32(a1[kk]);
+        c10 = vfmaq_f32(c10, x1, y0);
+        c11 = vfmaq_f32(c11, x1, y1);
+        let x2 = vdupq_n_f32(a2[kk]);
+        c20 = vfmaq_f32(c20, x2, y0);
+        c21 = vfmaq_f32(c21, x2, y1);
+        let x3 = vdupq_n_f32(a3[kk]);
+        c30 = vfmaq_f32(c30, x3, y0);
+        c31 = vfmaq_f32(c31, x3, y1);
+    }
+    vst1q_f32(p, c00);
+    vst1q_f32(p.add(4), c01);
+    vst1q_f32(p.add(8), c10);
+    vst1q_f32(p.add(12), c11);
+    vst1q_f32(p.add(16), c20);
+    vst1q_f32(p.add(20), c21);
+    vst1q_f32(p.add(24), c30);
+    vst1q_f32(p.add(28), c31);
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn tile1_f32_neon_fma(a: &[f32], bp: &[f32], acc: &mut [f32]) {
+    use core::arch::aarch64::*;
+    const NR: usize = 8;
+    let p = acc.as_mut_ptr();
+    let mut c0 = vld1q_f32(p);
+    let mut c1 = vld1q_f32(p.add(4));
+    let bpp = bp.as_ptr();
+    for (kk, &xv) in a.iter().enumerate() {
+        let x = vdupq_n_f32(xv);
+        let y0 = vld1q_f32(bpp.add(kk * NR));
+        let y1 = vld1q_f32(bpp.add(kk * NR + 4));
+        c0 = vfmaq_f32(c0, x, y0);
+        c1 = vfmaq_f32(c1, x, y1);
+    }
+    vst1q_f32(p, c0);
+    vst1q_f32(p.add(4), c1);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -855,6 +1333,64 @@ mod tests {
                 tile1(be, true, &rows[0], &bp, &mut got1);
                 assert_eq!(want1, got1, "tile1 fma {} kw={kw}", be.name());
             }
+        }
+    }
+
+    #[test]
+    fn every_available_backend_matches_scalar_bits_f32() {
+        // the f32 contract at the microkernel level: same bits as the
+        // scalar f32 program for ragged k widths, at this backend's nr32,
+        // in both accumulation modes (the mode is a per-call parameter
+        // here — no process-global flips under concurrent tests)
+        let mut rng = crate::rng::Rng::new(271);
+        let f32s = |rng: &mut crate::rng::Rng, n: usize| -> Vec<f32> {
+            rng.normal_vec(n).iter().map(|&v| v as f32).collect()
+        };
+        for be in available_backends() {
+            let nr = be.nr32();
+            for kw in [0usize, 1, 2, 3, 7, 64, 129] {
+                let rows: Vec<Vec<f32>> =
+                    (0..4).map(|_| f32s(&mut rng, kw)).collect();
+                let bp = f32s(&mut rng, kw * nr);
+                let init = f32s(&mut rng, 4 * nr);
+                for fma in [false, true] {
+                    let mut want = init.clone();
+                    if fma {
+                        tile4_f32_scalar_fma(
+                            [&rows[0], &rows[1], &rows[2], &rows[3]], &bp,
+                            &mut want, nr);
+                    } else {
+                        tile4_f32_scalar(
+                            [&rows[0], &rows[1], &rows[2], &rows[3]], &bp,
+                            &mut want, nr);
+                    }
+                    let mut got = init.clone();
+                    tile4_f32(be, fma,
+                              [&rows[0], &rows[1], &rows[2], &rows[3]],
+                              &bp, &mut got);
+                    assert_eq!(want, got, "tile4_f32 {} kw={kw} fma={fma}",
+                               be.name());
+
+                    let mut want1 = init[..nr].to_vec();
+                    if fma {
+                        tile1_f32_scalar_fma(&rows[0], &bp, &mut want1, nr);
+                    } else {
+                        tile1_f32_scalar(&rows[0], &bp, &mut want1, nr);
+                    }
+                    let mut got1 = init[..nr].to_vec();
+                    tile1_f32(be, fma, &rows[0], &bp, &mut got1);
+                    assert_eq!(want1, got1,
+                               "tile1_f32 {} kw={kw} fma={fma}", be.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nr32_doubles_nr_everywhere() {
+        for be in Backend::ALL {
+            assert_eq!(be.nr32(), 2 * be.nr(), "{}", be.name());
+            assert!(be.nr32() <= MAX_NR32);
         }
     }
 

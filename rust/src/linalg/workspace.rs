@@ -25,6 +25,10 @@
 //! ([`MAX_CACHED`]) with a keep-the-biggest eviction policy so the arena
 //! stays bounded while the most reusable panels survive.
 //!
+//! A parallel `Vec<f32>` free list ([`take_zeroed_f32`] / [`put_f32`])
+//! serves the f32 data path — the fused dequant-GEMM panel strips and
+//! f32 activation scratch — under the same best-fit/eviction policy.
+//!
 //! Buffers are plain `Vec<f64>`s: forgetting to [`put`] one back is not a
 //! leak (it just drops), and a buffer `put` on a different thread than it
 //! was taken from simply migrates arenas.  The [`Mat`]-shaped helpers
@@ -54,6 +58,12 @@ pub const MAX_CACHED_BYTES: usize = 64 << 20;
 thread_local! {
     /// This thread's free list (capacity-keyed, grow-only).
     static ARENA: RefCell<Vec<Vec<f64>>> = const { RefCell::new(Vec::new()) };
+
+    /// This thread's **f32** free list — a parallel arena for the f32
+    /// data path (fused dequant-GEMM strips, decoded weight panels,
+    /// activation scratch).  Kept separate from the f64 list so a take
+    /// can never reinterpret a buffer of the other width.
+    static ARENA32: RefCell<Vec<Vec<f32>>> = const { RefCell::new(Vec::new()) };
 }
 
 /// A scratch buffer of exactly `len` zeros, reusing this thread's arena
@@ -76,6 +86,46 @@ pub fn take_copy(src: &[f64]) -> Vec<f64> {
     v
 }
 
+/// Best-fit take over one free list: smallest capacity that already
+/// holds the request; else the largest cached buffer (one realloc, then
+/// it serves this shape forever); else a fresh allocation.  Shared by
+/// the f64 and f32 arenas — the policy is element-width-agnostic.
+fn take_from<T>(free: &mut Vec<Vec<T>>, len: usize) -> Vec<T> {
+    let mut best: Option<usize> = None;
+    let mut largest: Option<usize> = None;
+    for (i, b) in free.iter().enumerate() {
+        if b.capacity() >= len {
+            if best.map_or(true, |j| b.capacity() < free[j].capacity()) {
+                best = Some(i);
+            }
+        }
+        if largest.map_or(true, |j: usize| b.capacity() > free[j].capacity()) {
+            largest = Some(i);
+        }
+    }
+    match best.or(largest) {
+        Some(i) => free.swap_remove(i),
+        None => Vec::with_capacity(len),
+    }
+}
+
+/// Bounded insert into one free list (see [`put`] for the policy).
+fn put_into<T>(free: &mut Vec<Vec<T>>, v: Vec<T>) {
+    free.push(v);
+    let total = |free: &Vec<Vec<T>>| -> usize {
+        free.iter().map(|b| b.capacity()).sum::<usize>()
+            * std::mem::size_of::<T>()
+    };
+    while free.len() > MAX_CACHED
+        || (free.len() > 1 && total(free) > MAX_CACHED_BYTES)
+    {
+        let smallest = (0..free.len())
+            .min_by_key(|&i| free[i].capacity())
+            .unwrap();
+        free.swap_remove(smallest);
+    }
+}
+
 /// Pull the best-fitting cached buffer (length unspecified — callers
 /// clear/resize), or a fresh one with `len` capacity on a cache miss.
 /// Zero-length requests never consume a cached buffer (a degenerate
@@ -84,28 +134,7 @@ fn take_raw(len: usize) -> Vec<f64> {
     if len == 0 {
         return Vec::new();
     }
-    ARENA.with(|a| {
-        let mut free = a.borrow_mut();
-        // best fit: smallest capacity that already holds the request;
-        // else the largest cached buffer (one realloc, then it serves
-        // this shape forever); else a fresh allocation
-        let mut best: Option<usize> = None;
-        let mut largest: Option<usize> = None;
-        for (i, b) in free.iter().enumerate() {
-            if b.capacity() >= len {
-                if best.map_or(true, |j| b.capacity() < free[j].capacity()) {
-                    best = Some(i);
-                }
-            }
-            if largest.map_or(true, |j: usize| b.capacity() > free[j].capacity()) {
-                largest = Some(i);
-            }
-        }
-        match best.or(largest) {
-            Some(i) => free.swap_remove(i),
-            None => Vec::with_capacity(len),
-        }
-    })
+    ARENA.with(|a| take_from(&mut a.borrow_mut(), len))
 }
 
 /// Return a buffer to this thread's arena.  Bounded two ways: past
@@ -119,22 +148,45 @@ pub fn put(v: Vec<f64>) {
     if v.capacity() == 0 || bytes > MAX_CACHED_BYTES {
         return;
     }
-    ARENA.with(|a| {
-        let mut free = a.borrow_mut();
-        free.push(v);
-        let total = |free: &Vec<Vec<f64>>| -> usize {
-            free.iter().map(|b| b.capacity()).sum::<usize>()
-                * std::mem::size_of::<f64>()
-        };
-        while free.len() > MAX_CACHED
-            || (free.len() > 1 && total(&free) > MAX_CACHED_BYTES)
-        {
-            let smallest = (0..free.len())
-                .min_by_key(|&i| free[i].capacity())
-                .unwrap();
-            free.swap_remove(smallest);
-        }
-    });
+    ARENA.with(|a| put_into(&mut a.borrow_mut(), v));
+}
+
+/// f32 sibling of [`take_zeroed`]: exactly `len` zeros from this
+/// thread's f32 arena.  Return it with [`put_f32`].
+pub fn take_zeroed_f32(len: usize) -> Vec<f32> {
+    let mut v = take_raw_f32(len);
+    v.clear();
+    v.resize(len, 0.0);
+    v
+}
+
+/// f32 sibling of [`take_copy`]: an arena-backed copy of `src`.
+pub fn take_copy_f32(src: &[f32]) -> Vec<f32> {
+    let mut v = take_raw_f32(src.len());
+    v.clear();
+    v.extend_from_slice(src);
+    v
+}
+
+/// f32 sibling of `take_raw`: best-fitting cached f32 buffer with
+/// unspecified length/contents — callers clear/resize.  `pub(crate)` so
+/// the fused dequant-GEMM path can fill decoded panels without a
+/// zeroing pass it would immediately overwrite.
+pub(crate) fn take_raw_f32(len: usize) -> Vec<f32> {
+    if len == 0 {
+        return Vec::new();
+    }
+    ARENA32.with(|a| take_from(&mut a.borrow_mut(), len))
+}
+
+/// f32 sibling of [`put`] (same caps — the byte bound is shared policy,
+/// applied per arena).
+pub fn put_f32(v: Vec<f32>) {
+    let bytes = v.capacity() * std::mem::size_of::<f32>();
+    if v.capacity() == 0 || bytes > MAX_CACHED_BYTES {
+        return;
+    }
+    ARENA32.with(|a| put_into(&mut a.borrow_mut(), v));
 }
 
 /// A `rows × cols` zeroed [`Mat`] backed by arena storage.  Pass it to
@@ -243,6 +295,23 @@ mod tests {
         let v = take_copy(&src);
         assert_eq!(&v[..], &src[..]);
         put(v);
+    }
+
+    #[test]
+    fn f32_arena_roundtrip_and_isolation() {
+        // the f32 arena reuses capacity like the f64 one…
+        let v = take_zeroed_f32(257);
+        assert!(v.iter().all(|&x| x == 0.0));
+        let p = v.as_ptr();
+        put_f32(v);
+        let v2 = take_zeroed_f32(257);
+        assert_eq!(v2.as_ptr(), p);
+        put_f32(v2);
+        // …and take_copy_f32 copies bits
+        let src = [1.5f32, -2.25, 0.0, 1e-30];
+        let c = take_copy_f32(&src);
+        assert_eq!(&c[..], &src[..]);
+        put_f32(c);
     }
 
     #[test]

@@ -7,7 +7,7 @@
 
 use crate::linalg::{workspace, Mat};
 use crate::par::Pool;
-use crate::quant::act_quantize;
+use crate::quant::act_quantize_into;
 
 /// Fixed token-chunk width for parallel Σ accumulation.  Chunk boundaries
 /// are a property of the *math*, not of the pool: partial Grams are
@@ -20,6 +20,21 @@ use crate::quant::act_quantize;
 /// jobs; on a persistent pool these fine-grained chunk updates are cheap
 /// enough to dispatch even for small batches.
 pub const STATS_TOKEN_CHUNK: usize = 256;
+
+/// Square tile edge for the blocked f32→f64 activation transpose: 64
+/// output rows × 64 input columns is ≤ 32 KB of f64 destination + 16 KB
+/// of f32 source — both sides of a tile stay L1-resident.
+const TRANSPOSE_TILE: usize = 64;
+
+/// acc += p elementwise in ascending index order — the merge step of
+/// [`LayerStats::update_par`], same program as [`Mat::add_assign`] ran
+/// on the old per-chunk partial matrices (bit for bit).
+fn add_slice(acc: &mut [f64], p: &[f64]) {
+    debug_assert_eq!(acc.len(), p.len());
+    for (a, &v) in acc.iter_mut().zip(p) {
+        *a += v;
+    }
+}
 
 /// Accumulates Σx = XXᵀ, Σy = YYᵀ, Σxy = XYᵀ over calibration batches,
 /// where Y = Q_a(X) (or Y = X in weight-only mode).
@@ -52,9 +67,11 @@ impl LayerStats {
     }
 
     /// Fold in one batch of activation columns X [din, b].  The partial
-    /// Grams land in one workspace-recycled temporary and accumulate
-    /// into Σ in place — no per-batch Σ-sized allocations.  In
-    /// weight-only mode (Q_a = identity) Σx = Σy = Σxy element for
+    /// Grams land in one workspace-recycled temporary, the Q_a output
+    /// lands in another ([`act_quantize_into`]), and both accumulate
+    /// into Σ in place — the steady-state calibration loop is fully
+    /// **allocation-free** (`tests/alloc_steady_state.rs` asserts 0).
+    /// In weight-only mode (Q_a = identity) Σx = Σy = Σxy element for
     /// element — `gram_n` and `matmul_nt(x, x)` run the same canonical
     /// ascending-k program — so the Gram is computed **once** and folded
     /// three ways (the old path cloned X and computed it three times).
@@ -63,13 +80,15 @@ impl LayerStats {
         let mut tmp = workspace::take_mat_for(self.din, self.din);
         match self.a_bits {
             Some(bits) => {
-                let y = act_quantize(x, bits, self.clip, self.a_group);
+                let mut y = workspace::take_mat_for(x.rows, x.cols);
+                act_quantize_into(x, bits, self.clip, self.a_group, &mut y);
                 x.gram_n_into(&mut tmp);
                 self.sx.add_assign(&tmp);
                 y.gram_n_into(&mut tmp);
                 self.sy.add_assign(&tmp);
                 x.matmul_nt_into(&y, &mut tmp);
                 self.sxy.add_assign(&tmp);
+                workspace::recycle_mat(y);
             }
             None => {
                 x.gram_n_into(&mut tmp);
@@ -87,49 +106,68 @@ impl LayerStats {
     /// and merging them in chunk order.  Bit-identical at every pool
     /// size (the serial [`LayerStats::update`] differs only by Gram
     /// association across chunk boundaries, within fp round-off).
+    ///
+    /// Dispatch is **slot-free**: chunks go through
+    /// [`Pool::for_indices`] and each writes its partial block
+    /// `[Σx | Σy | Σxy]` (just `[Σx]` in weight-only mode, where all
+    /// three Σ share the same bits) into a disjoint range of one
+    /// arena-recycled buffer, so the fan-out performs no per-chunk
+    /// slot/result allocation — the old [`Pool::map`] path boxed three
+    /// fresh Grams per chunk.  Chunk-local scratch (the column slice,
+    /// the Q_a output and the Gram temporary) comes from (and returns
+    /// to) the executing worker's own arena — persistent workers reuse
+    /// it across chunks, epochs and the whole per-layer fan-out.
     pub fn update_par(&mut self, x: &Mat, pool: &Pool) {
         assert_eq!(x.rows, self.din);
         let n = x.cols;
+        let d2 = self.din * self.din;
         let n_chunks = n.div_ceil(STATS_TOKEN_CHUNK).max(1);
-        // partial per chunk: (Σx gram, Some((Σy, Σxy)) — or None in
-        // weight-only mode, where all three are the same bits and the
-        // Gram is computed once instead of three times
-        let partials = pool.map(n_chunks, |ci| {
-            let c0 = ci * STATS_TOKEN_CHUNK;
-            let c1 = (c0 + STATS_TOKEN_CHUNK).min(n);
-            // the chunk slice comes from (and returns to) the executing
-            // worker's own arena — persistent workers reuse it across
-            // chunks, epochs and the whole per-layer fan-out
-            let mut xs = workspace::take_mat_for(x.rows, c1 - c0);
-            x.cols_range_into(c0, c1, &mut xs);
-            // Q_a is per-token, so quantizing a chunk equals quantizing
-            // the full batch and slicing
-            let out = match self.a_bits {
-                Some(bits) => {
-                    let ys = act_quantize(&xs, bits, self.clip,
-                                          self.a_group);
-                    (xs.gram_n(), Some((ys.gram_n(), xs.matmul_nt(&ys))),
-                     c1 - c0)
+        let (a_bits, clip, a_group) = (self.a_bits, self.clip, self.a_group);
+        let per = if a_bits.is_some() { 3 * d2 } else { d2 };
+        let mut buf = workspace::take_zeroed(n_chunks * per);
+        {
+            let shared = workspace::SharedSlice::new(&mut buf[..]);
+            pool.for_indices(n_chunks, |ci| {
+                let c0 = ci * STATS_TOKEN_CHUNK;
+                let c1 = (c0 + STATS_TOKEN_CHUNK).min(n);
+                // SAFETY: per-chunk blocks partition the buffer
+                let out = unsafe { shared.range(ci * per, (ci + 1) * per) };
+                let mut xs = workspace::take_mat_for(x.rows, c1 - c0);
+                x.cols_range_into(c0, c1, &mut xs);
+                let mut g = workspace::take_mat_for(x.rows, x.rows);
+                xs.gram_n_into(&mut g);
+                out[..d2].copy_from_slice(&g.data);
+                if let Some(bits) = a_bits {
+                    // Q_a is per-token, so quantizing a chunk equals
+                    // quantizing the full batch and slicing
+                    let mut ys = workspace::take_mat_for(xs.rows, xs.cols);
+                    act_quantize_into(&xs, bits, clip, a_group, &mut ys);
+                    ys.gram_n_into(&mut g);
+                    out[d2..2 * d2].copy_from_slice(&g.data);
+                    xs.matmul_nt_into(&ys, &mut g);
+                    out[2 * d2..].copy_from_slice(&g.data);
+                    workspace::recycle_mat(ys);
                 }
-                None => (xs.gram_n(), None, c1 - c0),
-            };
-            workspace::recycle_mat(xs);
-            out
-        });
-        for (gx, quant, cols) in &partials {
-            self.sx.add_assign(gx);
-            match quant {
-                Some((gy, gxy)) => {
-                    self.sy.add_assign(gy);
-                    self.sxy.add_assign(gxy);
-                }
-                None => {
-                    self.sy.add_assign(gx);
-                    self.sxy.add_assign(gx);
-                }
-            }
-            self.n += cols;
+                workspace::recycle_mat(g);
+                workspace::recycle_mat(xs);
+            });
         }
+        // merge in ascending chunk order: chunk boundaries are a
+        // property of the math, so Σ is invariant to which worker ran
+        // which chunk
+        for ci in 0..n_chunks {
+            let p = &buf[ci * per..(ci + 1) * per];
+            add_slice(&mut self.sx.data, &p[..d2]);
+            if a_bits.is_some() {
+                add_slice(&mut self.sy.data, &p[d2..2 * d2]);
+                add_slice(&mut self.sxy.data, &p[2 * d2..]);
+            } else {
+                add_slice(&mut self.sy.data, &p[..d2]);
+                add_slice(&mut self.sxy.data, &p[..d2]);
+            }
+        }
+        workspace::put(buf);
+        self.n += n;
     }
 
     /// Fold in a batch given in *row-major token rows* ([b, din] f32),
@@ -154,12 +192,25 @@ impl LayerStats {
     }
 
     /// Transpose row-major f32 token rows into column-token f64 X
-    /// (workspace-backed; callers recycle).
+    /// (workspace-backed; callers recycle).  The walk is cache-blocked:
+    /// [`TRANSPOSE_TILE`]² tiles keep both streams resident in L1, the
+    /// inner copy reads the f32 source contiguously — a straight widen
+    /// the compiler keeps in vector lanes, loading at the f32 data
+    /// path's 2× lane width — and the strided f64 writes stay inside
+    /// the tile's working set.  The naive column-major walk this
+    /// replaces touched `n_rows` distinct cache lines per output row.
     fn transpose_rows_f32(rows: &[f32], n_rows: usize, din: usize) -> Mat {
         let mut x = workspace::take_mat(din, n_rows);
-        for r in 0..n_rows {
-            for c in 0..din {
-                x[(c, r)] = rows[r * din + c] as f64;
+        for r0 in (0..n_rows).step_by(TRANSPOSE_TILE) {
+            let r1 = (r0 + TRANSPOSE_TILE).min(n_rows);
+            for c0 in (0..din).step_by(TRANSPOSE_TILE) {
+                let c1 = (c0 + TRANSPOSE_TILE).min(din);
+                for r in r0..r1 {
+                    let src = &rows[r * din + c0..r * din + c1];
+                    for (dc, &v) in src.iter().enumerate() {
+                        x[(c0 + dc, r)] = v as f64;
+                    }
+                }
             }
         }
         x

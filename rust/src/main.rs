@@ -96,7 +96,7 @@ fn print_help() {
          \x20        [--iters 1] [--group 32] [--weight-only] [--rtn]\n\
          \x20        [--calib 128] [--corpus wiki_syn]\n\
          eval     --model small --graph fwd_w4a4_r10_b8 [--quant <dir>]\n\
-         \x20        [--fast]\n\
+         \x20        [--fast] [--native]\n\
          sweep    [--fast] [--model small] [--methods rtn,quarot,svd,lrc]\n\
          \x20        [--bits 2,3,4,8] [--pcts 0,5,10,20,30]\n\
          \x20        [--groups none,32] [--iters 1] [--out <dir>]\n\
@@ -127,6 +127,7 @@ fn print_help() {
          \x20        baseline artifacts yet it passes with a notice.\n\
          serve    --model small [--prefix fwd_w4a4_r10] [--quant <dir>]\n\
          \x20        [--requests 64] [--max-wait-ms 5] [--workers 1]\n\
+         \x20        [--native]\n\
          \n\
          global flags:\n\
          \x20 --threads N   size of the persistent compute pool (parked\n\
@@ -151,7 +152,16 @@ fn print_help() {
          \x20 --workers N   serve-only: engine workers sharing the batch\n\
          \x20               queue, one PJRT engine + session set each;\n\
          \x20               the thread budget is split across workers\n\
-         \x20               for per-row NLL scoring\n"
+         \x20               for per-row NLL scoring\n\
+         \x20 --native      eval/serve: skip the PJRT engine and run the\n\
+         \x20               rotated forward on the crate's own kernels;\n\
+         \x20               quantized layers execute the fused\n\
+         \x20               dequant-GEMM (PackedInts decoded tile-by-tile\n\
+         \x20               into the blocked-k micro-kernel, low-rank\n\
+         \x20               correction folded into the same pass — the\n\
+         \x20               dense f32 weight matrix is never built).\n\
+         \x20               serve also falls back to this path\n\
+         \x20               automatically when no PJRT plugin loads\n"
     );
 }
 
@@ -223,7 +233,6 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let model = args.get_or("model", "small");
     let graph = args.get_or("graph", "fwd_fp_b8");
     let budget = if args.has("fast") { EvalBudget::fast() } else { EvalBudget::full() };
-    let engine = Engine::cpu()?;
     let art = lrc::artifacts_dir();
     let arts = ModelArtifacts::load(&art.join("models").join(&model))?;
     let corpus = load_corpus(&args.get_or("corpus", "wiki_syn"))?;
@@ -232,6 +241,29 @@ fn cmd_eval(args: &Args) -> Result<()> {
         Some(d) => Some(TensorBundle::load(std::path::Path::new(d))?),
         None => None,
     };
+    if args.has("native") {
+        // engine-free scoring: the rotated forward on the crate's own
+        // kernels; quantized layers run the fused dequant-GEMM
+        let ginfo = arts.graphs.get(&graph);
+        let m = lrc::runtime::NativeModel::new(&arts, quant.as_ref(),
+                                               ginfo, 4)?;
+        let batch = ginfo.map(|g| g.batch).unwrap_or(8);
+        let mut provider = lrc::runtime::NativeProvider {
+            model: std::sync::Arc::new(m),
+            batch,
+        };
+        let ppl = lrc::eval::perplexity(&mut provider, &corpus,
+                                        budget.ppl_seqs)
+            .map_err(anyhow::Error::msg)?;
+        println!("{model}/{graph} (native fused path): perplexity {ppl:.3}");
+        for task in &tasks {
+            let acc = lrc::eval::task_accuracy(&mut provider, task)
+                .map_err(anyhow::Error::msg)?;
+            println!("  task {:<16} acc_norm {acc:.3}", task.name);
+        }
+        return Ok(());
+    }
+    let engine = Engine::cpu()?;
     let scores = experiments::evaluate_graph(
         &engine, &arts, &graph, quant.as_ref(), &corpus, &tasks, budget,
         &graph)?;
@@ -420,6 +452,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             max_queue: 4096,
         },
         workers: args.get_usize("workers", 1),
+        native: args.has("native"),
     })?;
     println!("serving {model}/{prefix} (seq_len={}, workers={})",
              handle.seq_len, handle.metrics.per_worker.len());

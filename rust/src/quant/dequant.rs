@@ -1,0 +1,535 @@
+//! Fused dequant-GEMM: the paper's inference data path, executed
+//! natively — `y = Ŵ·x + U·(Vᵀx)` straight from the bit-packed
+//! representation.
+//!
+//! # What "fused" means here
+//!
+//! [`QuantizedLinear::forward`] consumes a [`PackedInts`] weight matrix
+//! (2..=8-bit two's-complement codes × per-row/per-group f32 scales)
+//! **without ever materializing the dense f32 weight matrix**: inside
+//! the blocked-k sweep of [`crate::linalg::kernels`], each NC×KC panel
+//! of codes is decoded straight into the SIMD lane-strip layout
+//! (≤ 64 KB of scratch, L2-resident, recycled via the f32 workspace
+//! arena) and immediately consumed by the f32 register tiles.  The
+//! decode cost is paid once per panel and amortized over every
+//! activation row.
+//!
+//! The low-rank correction is fused into the same sweep as **extra
+//! k-panels**: with `T = X·V` precomputed by the canonical f32 GEMM,
+//! the product `[X | T] · [Ŵ | U]ᵀ` runs every output element's
+//! accumulator first through the quantized columns (ascending k) and
+//! then through the rank columns (ascending l) — one pass over the
+//! output, one accumulator chain per element.
+//!
+//! # The extended canonical-program contract
+//!
+//! Every output element is produced by exactly the floating-point
+//! program of the naive reference ([`QuantizedLinear::reference_forward`]):
+//! `unpack()` to f32, matmul with a single ascending-k f32 accumulator,
+//! then add the correction term with the same accumulator continuing in
+//! ascending l (one IEEE f32 mul + add per step; one fused `mul_add`
+//! per step in FMA mode).  Decoding tile-by-tile is bit-invisible
+//! because `q·s` computed in f32 *is* the correctly-rounded product
+//! (|q| < 2⁸ and an f32 scale fill well under f64's 53-bit mantissa, so
+//! `unpack()`'s f64 product is exact and rounds to the identical f32).
+//! `tests/kernel_oracle.rs` locks fused == reference with `==` across
+//! bits × group × backend × thread-count sweeps.
+
+use crate::linalg::kernels::{self, matmul_nt_f32_into, KC, MR, NC};
+use crate::linalg::{simd, workspace, Mat, PAR_MIN_WORK};
+use crate::par::Pool;
+use crate::quant::pack::PackedInts;
+use crate::quant::weight_scales;
+
+/// A quantized linear layer in serving form: bit-packed weights plus the
+/// optional low-rank correction factors, with
+/// [`forward`](QuantizedLinear::forward) running the fused
+/// dequant-GEMM data path.
+///
+/// Shapes: `packed` is `[dout, din]`, `u` is `[dout, rank]` row-major,
+/// and V is held transposed (`vt`, `[rank, din]` row-major) so both the
+/// `Vᵀx` pre-pass and the fused sweep stream contiguous rows.
+pub struct QuantizedLinear {
+    pub packed: PackedInts,
+    u: Option<Vec<f32>>,
+    vt: Option<Vec<f32>>,
+    rank: usize,
+}
+
+impl QuantizedLinear {
+    /// Assemble from pipeline artifacts: `u`/`v` as `(rank, data)` with
+    /// `u` `[dout, rank]` and `v` `[din, rank]` row-major (the
+    /// `LayerArtifacts` / bundle-tensor layout).  V is transposed once
+    /// here.  Rank 0 (or `None`) yields the pure quantized path.
+    pub fn new(packed: PackedInts, u: Option<(usize, Vec<f32>)>,
+               v: Option<(usize, Vec<f32>)>) -> QuantizedLinear {
+        let (dout, din) = (packed.rows, packed.cols);
+        let rank = u.as_ref().map_or(0, |(k, _)| *k);
+        assert_eq!(rank, v.as_ref().map_or(0, |(k, _)| *k),
+                   "u/v rank mismatch");
+        if rank == 0 {
+            return QuantizedLinear { packed, u: None, vt: None, rank: 0 };
+        }
+        let (_, u) = u.unwrap();
+        let (_, v) = v.unwrap();
+        assert_eq!(u.len(), dout * rank, "u shape");
+        assert_eq!(v.len(), din * rank, "v shape");
+        let mut vt = vec![0.0_f32; rank * din];
+        for kk in 0..din {
+            for l in 0..rank {
+                vt[l * din + kk] = v[kk * rank + l];
+            }
+        }
+        QuantizedLinear { packed, u: Some(u), vt: Some(vt), rank }
+    }
+
+    /// Pack a dense grid-valued weight matrix (output of a b-bit
+    /// quantizer) plus optional f64 correction factors `u` `[dout, k]`,
+    /// `v` `[din, k]` — the [`crate::lrc::LayerResult`] shapes.
+    pub fn from_dense(wq: &Mat, bits: u32, group: Option<usize>,
+                      u: Option<&Mat>, v: Option<&Mat>) -> QuantizedLinear {
+        let scales = weight_scales(wq, bits, group);
+        let packed = PackedInts::pack(wq, &scales, bits, group);
+        let to32 = |m: &Mat| -> (usize, Vec<f32>) {
+            (m.cols, m.data.iter().map(|&x| x as f32).collect())
+        };
+        QuantizedLinear::new(packed, u.map(to32), v.map(to32))
+    }
+
+    pub fn dout(&self) -> usize {
+        self.packed.rows
+    }
+
+    pub fn din(&self) -> usize {
+        self.packed.cols
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Serving-form storage bytes: packed codes + scales + f32 factors.
+    pub fn size_bytes(&self) -> usize {
+        self.packed.size_bytes()
+            + 4 * (self.u.as_ref().map_or(0, |u| u.len())
+                   + self.vt.as_ref().map_or(0, |v| v.len()))
+    }
+
+    /// Floating-point ops of one `[m, din]` forward (the tokens/s and
+    /// GFLOP/s denominator in the benches): the quantized product plus,
+    /// when rank > 0, the `Vᵀx` pre-pass and the fused correction
+    /// columns.
+    pub fn flops(&self, m: usize) -> f64 {
+        let (dout, din, k) = (self.dout(), self.din(), self.rank);
+        2.0 * m as f64 * (dout as f64 * din as f64
+                          + k as f64 * (din + dout) as f64)
+    }
+
+    /// `Y = X·Ŵᵀ + (X·V)·Uᵀ` for row-major `X` `[m, din]`, returning
+    /// `[m, dout]`.  Auto-parallel past [`PAR_MIN_WORK`] on
+    /// [`crate::par::global`]; bit-identical at every thread count and
+    /// on every SIMD backend to [`Self::reference_forward`].
+    pub fn forward(&self, x: &[f32], m: usize) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.forward_into(x, m, &mut out);
+        out
+    }
+
+    /// [`Self::forward`] into a caller-held buffer (steady-state
+    /// allocation-free: decode scratch and the `T = X·V` temporary come
+    /// from the f32 workspace arena).
+    pub fn forward_into(&self, x: &[f32], m: usize, out: &mut Vec<f32>) {
+        self.forward_split_into(x, x, m, out);
+    }
+
+    /// The serving-kernel form `Y = Xq·Ŵᵀ + (Xc·V)·Uᵀ` with *different*
+    /// A-sides: the packed product consumes the activation-quantized
+    /// `xq` while the correction runs on the unquantized `xc` — the
+    /// paper's Fig. 1 data flow ([`Self::forward`] is the `xq == xc`
+    /// special case).  Both inputs are `[m, din]` row-major.
+    pub fn forward_split_into(&self, xq: &[f32], xc: &[f32], m: usize,
+                              out: &mut Vec<f32>) {
+        let work = m * self.dout() * (self.din() + self.rank);
+        if m <= Mat::PAR_ROW_CHUNK || work < PAR_MIN_WORK
+            || crate::par::in_pool()
+        {
+            self.split_serial(xq, xc, m, out);
+        } else {
+            self.split_pool(xq, xc, m, crate::par::global(), out);
+        }
+    }
+
+    /// Serial fused forward (no pool touched at all).
+    pub fn forward_serial(&self, x: &[f32], m: usize, out: &mut Vec<f32>) {
+        self.split_serial(x, x, m, out);
+    }
+
+    /// Fused forward on an explicit pool (the kernel-oracle thread-sweep
+    /// entry): rows split into [`Mat::PAR_ROW_CHUNK`] chunks with
+    /// disjoint output writes — bit-identical at every thread count
+    /// because chunking never touches the per-element program.
+    pub fn forward_pool(&self, x: &[f32], m: usize, pool: &Pool,
+                        out: &mut Vec<f32>) {
+        self.split_pool(x, x, m, pool, out);
+    }
+
+    fn split_serial(&self, xq: &[f32], xc: &[f32], m: usize,
+                    out: &mut Vec<f32>) {
+        assert_eq!(xq.len(), m * self.din(), "forward Xq shape");
+        let t = self.correction_pre_pass(xc, m);
+        self.prep_out(m, out);
+        self.fused_rows(xq, t.as_deref(), 0, m, out);
+        if let Some(t) = t {
+            workspace::put_f32(t);
+        }
+    }
+
+    fn split_pool(&self, xq: &[f32], xc: &[f32], m: usize, pool: &Pool,
+                  out: &mut Vec<f32>) {
+        assert_eq!(xq.len(), m * self.din(), "forward Xq shape");
+        let t = self.correction_pre_pass(xc, m);
+        self.prep_out(m, out);
+        let chunk = Mat::PAR_ROW_CHUNK;
+        if pool.threads() == 1 || m <= chunk {
+            self.fused_rows(xq, t.as_deref(), 0, m, out);
+        } else {
+            let n = self.dout();
+            let shared = workspace::SharedSlice::new(&mut out[..]);
+            pool.for_indices(m.div_ceil(chunk), |ci| {
+                let r0 = ci * chunk;
+                let r1 = (r0 + chunk).min(m);
+                // SAFETY: row chunks [r0, r1) partition out — disjoint
+                let slice = unsafe { shared.range(r0 * n, r1 * n) };
+                self.fused_rows(xq, t.as_deref(), r0, r1, slice);
+            });
+        }
+        if let Some(t) = t {
+            workspace::put_f32(t);
+        }
+    }
+
+    /// `T = X·V` (equivalently `X·vtᵀ`) on the canonical f32 GEMM, into
+    /// arena scratch.  `None` when rank = 0.
+    fn correction_pre_pass(&self, x: &[f32], m: usize) -> Option<Vec<f32>> {
+        assert_eq!(x.len(), m * self.din(), "forward X shape");
+        let vt = self.vt.as_ref()?;
+        let mut t = workspace::take_raw_f32(m * self.rank);
+        matmul_nt_f32_into(x, m, self.din(), vt, self.rank, &mut t);
+        Some(t)
+    }
+
+    fn prep_out(&self, m: usize, out: &mut Vec<f32>) {
+        out.clear();
+        out.resize(m * self.dout(), 0.0);
+    }
+
+    /// The fused sweep over rows `[r0, r1)` of X, writing `out` (rows
+    /// relative to `r0`, zero-initialized by the caller).  Mirrors the
+    /// jc → kc → i nest of `kernels::matmul_nt_block`, except each
+    /// (jc, kc) panel's lane strips are **decoded** from the packed
+    /// codes (or copied from U for the correction panels) instead of
+    /// read from a pre-packed dense matrix.
+    fn fused_rows(&self, x: &[f32], t: Option<&[f32]>, r0: usize, r1: usize,
+                  out: &mut [f32]) {
+        let (n, din, rank) = (self.dout(), self.din(), self.rank);
+        debug_assert_eq!(out.len(), (r1 - r0) * n);
+        if n == 0 || r1 <= r0 {
+            return;
+        }
+        // capture once per sweep: a mid-call flip of the process-global
+        // backend/FMA knobs can never mix programs inside one forward
+        let be = simd::active();
+        let fma = simd::fma_active();
+        let nr = be.nr32();
+        debug_assert_eq!(NC % nr, 0);
+        let mut scratch = workspace::take_zeroed_f32(NC * KC);
+        let mut jc = 0;
+        while jc < n {
+            let jc_hi = (jc + NC).min(n);
+            // quantized k-panels: decode codes × scales into lane strips
+            let mut kc = 0;
+            while kc < din {
+                let kc_hi = (kc + KC).min(din);
+                decode_strips(&self.packed, jc, jc_hi, kc, kc_hi, nr,
+                              &mut scratch);
+                sweep_rows(be, fma, x, din, kc, kc_hi, jc, jc_hi, nr,
+                           &scratch, r0, r1, n, out);
+                kc = kc_hi;
+            }
+            // correction k-panels: each accumulator continues through
+            // the rank columns — T rows × U strips, ascending l
+            if rank > 0 {
+                let (t, u) = (t.expect("rank > 0 has T"),
+                              self.u.as_deref().expect("rank > 0 has U"));
+                let mut kc = 0;
+                while kc < rank {
+                    let kc_hi = (kc + KC).min(rank);
+                    pack_u_strips(u, rank, n, jc, jc_hi, kc, kc_hi, nr,
+                                  &mut scratch);
+                    sweep_rows(be, fma, t, rank, kc, kc_hi, jc, jc_hi, nr,
+                               &scratch, r0, r1, n, out);
+                    kc = kc_hi;
+                }
+            }
+            jc = jc_hi;
+        }
+        workspace::put_f32(scratch);
+    }
+
+    /// The naive unpack-then-matmul-then-correction f32 reference — the
+    /// bit-exact specification of [`Self::forward`] (and the only path
+    /// that materializes the dense weight matrix; tests and the
+    /// equality-asserting bench sections call it, serving never does).
+    /// Mode-matched: fused `mul_add` steps when the FMA mode is active.
+    pub fn reference_forward(&self, x: &[f32], m: usize) -> Vec<f32> {
+        self.reference_split(x, x, m)
+    }
+
+    /// [`Self::reference_forward`] for the split form: the naive
+    /// specification of [`Self::forward_split_into`].
+    pub fn reference_split(&self, xq: &[f32], xc: &[f32], m: usize)
+                           -> Vec<f32> {
+        assert_eq!(xq.len(), m * self.din(), "forward Xq shape");
+        assert_eq!(xc.len(), m * self.din(), "forward X shape");
+        let fma = simd::fma_active();
+        let (dout, din, rank) = (self.dout(), self.din(), self.rank);
+        let w: Vec<f32> =
+            self.packed.unpack().data.iter().map(|&v| v as f32).collect();
+        // naive T = Xc·V, one ascending-k chain per element
+        let t: Option<Vec<f32>> = self.vt.as_ref().map(|vt| {
+            let mut t = vec![0.0_f32; m * rank];
+            for i in 0..m {
+                for l in 0..rank {
+                    let mut s = 0.0_f32;
+                    for kk in 0..din {
+                        let (a, b) = (xc[i * din + kk], vt[l * din + kk]);
+                        s = if fma { a.mul_add(b, s) } else { s + a * b };
+                    }
+                    t[i * rank + l] = s;
+                }
+            }
+            t
+        });
+        let mut out = vec![0.0_f32; m * dout];
+        for i in 0..m {
+            for j in 0..dout {
+                let mut s = 0.0_f32;
+                for kk in 0..din {
+                    let (a, b) = (xq[i * din + kk], w[j * din + kk]);
+                    s = if fma { a.mul_add(b, s) } else { s + a * b };
+                }
+                if let (Some(t), Some(u)) = (&t, &self.u) {
+                    // the same accumulator continues in ascending l
+                    for l in 0..rank {
+                        let (a, b) = (t[i * rank + l], u[j * rank + l]);
+                        s = if fma { a.mul_add(b, s) } else { s + a * b };
+                    }
+                }
+                out[i * dout + j] = s;
+            }
+        }
+        out
+    }
+}
+
+/// Decode the `[j0, j1) × [kc, kc_hi)` block of packed codes into
+/// nr-wide k-major lane strips: `strips[s_rel·kw·nr + kk·nr + l] =
+/// q[j0 + s_rel·nr + l, kc + kk] · scale` (zero for padded lanes).  The
+/// bit extraction is exactly [`PackedInts::unpack`]'s, walked
+/// sequentially along each row's bit-stream; `q·s` in f32 is the
+/// correctly-rounded product, so the decoded strip is bit-equal to
+/// unpacking to f64 and narrowing.
+fn decode_strips(p: &PackedInts, j0: usize, j1: usize, kc: usize,
+                 kc_hi: usize, nr: usize, strips: &mut [f32]) {
+    let kw = kc_hi - kc;
+    let b = p.bits as usize;
+    let half = 1i64 << (p.bits - 1);
+    let mask = (1u64 << p.bits) - 1;
+    let g = p.group.unwrap_or(p.cols.max(1));
+    let ng = if p.cols == 0 { 0 } else { p.cols / g };
+    for s_rel in 0..(j1 - j0).div_ceil(nr) {
+        let strip = &mut strips[s_rel * kw * nr..(s_rel + 1) * kw * nr];
+        for l in 0..nr {
+            let j = j0 + s_rel * nr + l;
+            if j >= p.rows {
+                for kk in 0..kw {
+                    strip[kk * nr + l] = 0.0;
+                }
+                continue;
+            }
+            let srow = &p.scales[j * ng..(j + 1) * ng];
+            let mut bitpos = (j * p.cols + kc) * b;
+            for kk in 0..kw {
+                let byte = bitpos / 8;
+                let off = bitpos % 8;
+                let mut raw = (p.bytes[byte] as u64) >> off;
+                if off + b > 8 {
+                    // a code spans at most one byte boundary (b ≤ 8)
+                    raw |= (p.bytes[byte + 1] as u64) << (8 - off);
+                }
+                raw &= mask;
+                let q = if (raw as i64) >= half {
+                    raw as i64 - (half << 1)
+                } else {
+                    raw as i64
+                };
+                strip[kk * nr + l] = q as f32 * srow[(kc + kk) / g];
+                bitpos += b;
+            }
+        }
+    }
+}
+
+/// Copy the `[j0, j1) × [kc, kc_hi)` block of U (`[n_rows, rank]`
+/// row-major) into the same lane-strip layout as [`decode_strips`].
+#[allow(clippy::too_many_arguments)]
+fn pack_u_strips(u: &[f32], rank: usize, n_rows: usize, j0: usize, j1: usize,
+                 kc: usize, kc_hi: usize, nr: usize, strips: &mut [f32]) {
+    let kw = kc_hi - kc;
+    for s_rel in 0..(j1 - j0).div_ceil(nr) {
+        let strip = &mut strips[s_rel * kw * nr..(s_rel + 1) * kw * nr];
+        for l in 0..nr {
+            let j = j0 + s_rel * nr + l;
+            if j >= n_rows {
+                for kk in 0..kw {
+                    strip[kk * nr + l] = 0.0;
+                }
+                continue;
+            }
+            let urow = &u[j * rank + kc..j * rank + kc_hi];
+            for kk in 0..kw {
+                strip[kk * nr + l] = urow[kk];
+            }
+        }
+    }
+}
+
+/// One (kc, jc) panel sweep over rows `[r0, r1)`: the MR-row register
+/// tiles of `kernels` driven over block-local strips.  `a` is the flat
+/// `[*, kd]` row-major A-side (X for the quantized panels, T for the
+/// correction panels); `out` rows are relative to `r0` and `n` wide.
+#[allow(clippy::too_many_arguments)]
+fn sweep_rows(be: simd::Backend, fma: bool, a: &[f32], kd: usize, kc: usize,
+              kc_hi: usize, jc: usize, jc_hi: usize, nr: usize,
+              strips: &[f32], r0: usize, r1: usize, n: usize,
+              out: &mut [f32]) {
+    let kw = kc_hi - kc;
+    let arow = |i: usize| -> &[f32] { &a[i * kd..(i + 1) * kd] };
+    let mut i = r0;
+    while i < r1 {
+        let i_hi = (i + MR).min(r1);
+        let full = i_hi - i == MR;
+        for s_rel in 0..(jc_hi - jc).div_ceil(nr) {
+            let j = jc + s_rel * nr;
+            let lanes = (jc_hi - j).min(nr);
+            let strip = &strips[s_rel * kw * nr..(s_rel + 1) * kw * nr];
+            if full {
+                let rows: [&[f32]; MR] =
+                    [&arow(i)[kc..kc_hi], &arow(i + 1)[kc..kc_hi],
+                     &arow(i + 2)[kc..kc_hi], &arow(i + 3)[kc..kc_hi]];
+                kernels::tile_full_f32(be, fma, rows, lanes, strip,
+                                       (i - r0) * n + j, n, out);
+            } else {
+                for r in i..i_hi {
+                    kernels::tile_row_f32(be, fma, &arow(r)[kc..kc_hi],
+                                          lanes, strip, (r - r0) * n + j,
+                                          out);
+                }
+            }
+        }
+        i = i_hi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rtn_quantize;
+    use crate::rng::Rng;
+
+    fn f32s(rng: &mut Rng, n: usize) -> Vec<f32> {
+        rng.normal_vec(n).iter().map(|&v| v as f32).collect()
+    }
+
+    /// A random grid-valued layer at the given shape/bits/group/rank.
+    fn layer(seed: u64, dout: usize, din: usize, bits: u32,
+             group: Option<usize>, rank: usize) -> QuantizedLinear {
+        let mut rng = Rng::new(seed);
+        let w = Mat::random_normal(&mut rng, dout, din);
+        let wq = rtn_quantize(&w, bits, group);
+        let (u, v) = if rank > 0 {
+            (Some(Mat::random_normal(&mut rng, dout, rank).scale(0.05)),
+             Some(Mat::random_normal(&mut rng, din, rank).scale(0.05)))
+        } else {
+            (None, None)
+        };
+        QuantizedLinear::from_dense(&wq, bits, group, u.as_ref(), v.as_ref())
+    }
+
+    #[test]
+    fn fused_matches_reference_bitwise() {
+        // shapes straddling MR, nr32 (8/16), NC and KC boundaries; the
+        // full bits × group × backend × threads sweep lives in
+        // tests/kernel_oracle.rs
+        for &(dout, din, m, rank) in &[(1usize, 1usize, 1usize, 0usize),
+                                       (7, 9, 3, 2), (17, 33, 5, 4),
+                                       (65, 70, 9, 3), (64, 256, 8, 0),
+                                       (96, 300, 13, 8)] {
+            let q = layer(dout as u64 * 7 + din as u64, dout, din, 4, None,
+                          rank);
+            let x = f32s(&mut Rng::new(99), m * din);
+            let got = q.forward(&x, m);
+            let want = q.reference_forward(&x, m);
+            assert_eq!(got, want, "{dout}x{din} m={m} rank={rank}");
+        }
+    }
+
+    #[test]
+    fn split_inputs_match_reference_bitwise() {
+        // distinct quantized / correction A-sides (the W4A4 data flow)
+        let q = layer(5, 33, 40, 4, Some(8), 6);
+        let xq = f32s(&mut Rng::new(7), 9 * 40);
+        let xc = f32s(&mut Rng::new(8), 9 * 40);
+        let mut got = Vec::new();
+        q.forward_split_into(&xq, &xc, 9, &mut got);
+        assert_eq!(got, q.reference_split(&xq, &xc, 9));
+    }
+
+    #[test]
+    fn forward_into_is_steady_state_reusable() {
+        let q = layer(3, 40, 48, 4, Some(16), 5);
+        let x = f32s(&mut Rng::new(4), 6 * 48);
+        let want = q.forward(&x, 6);
+        let mut out = Vec::new();
+        for _ in 0..3 {
+            q.forward_into(&x, 6, &mut out);
+            assert_eq!(out, want);
+        }
+    }
+
+    #[test]
+    fn pool_chunking_is_bit_identical() {
+        let q = layer(11, 48, 64, 3, None, 4);
+        let x = f32s(&mut Rng::new(12), 37 * 64);
+        let mut serial = Vec::new();
+        q.forward_serial(&x, 37, &mut serial);
+        for threads in [1usize, 2, 4] {
+            let pool = Pool::new(threads);
+            let mut out = Vec::new();
+            q.forward_pool(&x, 37, &pool, &mut out);
+            assert_eq!(out, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn size_and_flops_accounting() {
+        let q = layer(21, 64, 64, 4, None, 3);
+        // codes (64·64/2) + scales (64·4) + u/v (2·64·3·4)
+        assert_eq!(q.size_bytes(), 64 * 64 / 2 + 64 * 4 + 2 * 64 * 3 * 4);
+        assert_eq!(q.flops(2) as usize,
+                   2 * 2 * (64 * 64 + 3 * (64 + 64)));
+        let q0 = layer(22, 16, 16, 2, None, 0);
+        assert_eq!(q0.rank(), 0);
+        assert_eq!(q0.size_bytes(), 16 * 16 / 4 + 16 * 4);
+    }
+}

@@ -5,13 +5,21 @@
 //! * [`gptq`] — the GPTQ solver used inside Update-Quant (Alg. 2 line 5)
 //! * [`pack`] — real 2/3/4…8-bit bit-packing (storage sizes for Table 3;
 //!              roundtrips locked by `tests/quant_roundtrip.rs`)
+//! * [`dequant`] — the fused dequant-GEMM serving path:
+//!              [`QuantizedLinear`] runs `Ŵ·x + U·(Vᵀx)` straight from
+//!              the packed codes, tile-by-tile, never materializing the
+//!              dense weight matrix (oracle-locked bit-identical to the
+//!              naive unpack-then-matmul reference)
 
+pub mod dequant;
 pub mod gptq;
 pub mod pack;
 pub mod rtn;
 
+pub use dequant::QuantizedLinear;
 pub use gptq::gptq;
-pub use rtn::{act_quantize, rtn_quantize, search_act_clip, weight_scales};
+pub use rtn::{act_quantize, act_quantize_into, rtn_quantize, search_act_clip,
+              weight_scales};
 
 /// A quantization configuration for one PTQ run.
 #[derive(Clone, Debug, PartialEq)]

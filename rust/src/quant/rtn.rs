@@ -6,7 +6,7 @@
 //! two pipelines produce interchangeable bundles.
 
 use super::maxq;
-use crate::linalg::Mat;
+use crate::linalg::{workspace, Mat};
 
 /// Per-output-channel (group=None) or per-group symmetric scales.
 /// Returns a [dout, n_groups] matrix (n_groups = 1 when ungrouped).
@@ -59,59 +59,50 @@ pub fn rtn_quantize(w: &Mat, bits: u32, group: Option<usize>) -> Mat {
 /// per-token scale = clip · max|x| / maxq (optionally per group of input
 /// channels).  Returns the dequantized Y = Q_a(X).
 pub fn act_quantize(x: &Mat, bits: u32, clip: f64, group: Option<usize>) -> Mat {
+    let mut out = Mat::zeros(0, 0);
+    act_quantize_into(x, bits, clip, group, &mut out);
+    out
+}
+
+/// [`act_quantize`] writing into a caller-held matrix (reshaped to
+/// [din, n]).  The per-token amax/scale scratch comes from the
+/// [`workspace`] arena and `out` is typically arena-recycled storage
+/// (e.g. [`workspace::take_mat_for`]), so a steady-state calibration
+/// loop quantizes with **zero** allocations
+/// (`tests/alloc_steady_state.rs` locks this through
+/// `LayerStats::update`).  Same grid, same clamp, same ε as the
+/// allocating entry point — the ungrouped case is the `g = din` special
+/// case of the grouped walk, element for element.
+pub fn act_quantize_into(x: &Mat, bits: u32, clip: f64,
+                         group: Option<usize>, out: &mut Mat) {
     let mq = maxq(bits);
     let (din, n) = (x.rows, x.cols);
-    let mut out = Mat::zeros(din, n);
-    match group {
-        None => {
-            // per-column max
-            let mut amax = vec![0.0_f64; n];
-            for i in 0..din {
-                let row = x.row(i);
-                for (j, &v) in row.iter().enumerate() {
-                    let a = v.abs();
-                    if a > amax[j] {
-                        amax[j] = a;
-                    }
-                }
-            }
-            let scales: Vec<f64> =
-                amax.iter().map(|&a| clip * a / mq + 1e-12).collect();
-            for i in 0..din {
-                for j in 0..n {
-                    let q = (x[(i, j)] / scales[j]).round().clamp(-(mq + 1.0), mq);
-                    out[(i, j)] = q * scales[j];
+    out.resize_zeroed(din, n);
+    let g = group.unwrap_or(din.max(1));
+    assert_eq!(din % g, 0);
+    // one arena buffer serves as the per-token amax and then — rewritten
+    // in place — as the per-token scale
+    let mut s = workspace::take_zeroed(n);
+    for gi in 0..din / g {
+        let rows = gi * g..(gi + 1) * g;
+        s.iter_mut().for_each(|v| *v = 0.0);
+        for i in rows.clone() {
+            for (j, &v) in x.row(i).iter().enumerate() {
+                let a = v.abs();
+                if a > s[j] {
+                    s[j] = a;
                 }
             }
         }
-        Some(g) => {
-            assert_eq!(din % g, 0);
-            let ng = din / g;
-            for gi in 0..ng {
-                let rows = gi * g..(gi + 1) * g;
-                let mut amax = vec![0.0_f64; n];
-                for i in rows.clone() {
-                    for (j, &v) in x.row(i).iter().enumerate() {
-                        let a = v.abs();
-                        if a > amax[j] {
-                            amax[j] = a;
-                        }
-                    }
-                }
-                let scales: Vec<f64> =
-                    amax.iter().map(|&a| clip * a / mq + 1e-12).collect();
-                for i in rows {
-                    for j in 0..n {
-                        let q = (x[(i, j)] / scales[j])
-                            .round()
-                            .clamp(-(mq + 1.0), mq);
-                        out[(i, j)] = q * scales[j];
-                    }
-                }
+        s.iter_mut().for_each(|a| *a = clip * *a / mq + 1e-12);
+        for i in rows {
+            for j in 0..n {
+                let q = (x[(i, j)] / s[j]).round().clamp(-(mq + 1.0), mq);
+                out[(i, j)] = q * s[j];
             }
         }
     }
-    out
+    workspace::put(s);
 }
 
 /// Paper §2: grid search for the activation clip factor c, minimizing the
@@ -120,14 +111,16 @@ pub fn search_act_clip(x: &Mat, bits: u32, group: Option<usize>) -> f64 {
     let grid = [1.0, 0.95, 0.9, 0.85, 0.8, 0.75, 0.7];
     let mut best = f64::INFINITY;
     let mut best_c = 1.0;
+    let mut y = workspace::take_mat_for(x.rows, x.cols);
     for &c in &grid {
-        let y = act_quantize(x, bits, c, group);
+        act_quantize_into(x, bits, c, group, &mut y);
         let err = x.sub(&y).frob_norm();
         if err < best {
             best = err;
             best_c = c;
         }
     }
+    workspace::recycle_mat(y);
     best_c
 }
 
@@ -135,6 +128,22 @@ pub fn search_act_clip(x: &Mat, bits: u32, group: Option<usize>) -> f64 {
 mod tests {
     use super::*;
     use crate::rng::Rng;
+
+    #[test]
+    fn act_quantize_into_overwrites_dirty_scratch_bitwise() {
+        // the into-variant must fully overwrite whatever a recycled
+        // buffer held, matching the allocating entry point bit for bit
+        let x = Mat::random_normal(&mut Rng::new(77), 8, 30);
+        let dirty = Mat::random_normal(&mut Rng::new(78), 8, 30);
+        for group in [None, Some(4)] {
+            let fresh = act_quantize(&x, 4, 0.9, group);
+            let mut out = workspace::take_mat_for(8, 30);
+            act_quantize_into(&dirty, 4, 1.0, None, &mut out);
+            act_quantize_into(&x, 4, 0.9, group, &mut out);
+            assert_eq!(fresh, out, "group {group:?}");
+            workspace::recycle_mat(out);
+        }
+    }
 
     #[test]
     fn rtn_on_grid_and_bounded_error() {

@@ -10,6 +10,14 @@
 //! * [`Session`] — a compiled graph with its fixed parameters pre-uploaded
 //!   as device buffers; per-call uploads are only the variable inputs
 //!   (tokens).  This is the hot serving path.
+//! * [`native`] — the engine-free serving path: [`NativeModel`] runs the
+//!   same rotated forward on the crate's own kernels, with quantized
+//!   layers on the fused dequant-GEMM ([`crate::quant::QuantizedLinear`]).
+//!   The coordinator falls back to it when no PJRT engine is available.
+
+pub mod native;
+
+pub use native::{NativeModel, NativeProvider};
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};

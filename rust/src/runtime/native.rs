@@ -1,0 +1,694 @@
+//! Native serving path — the PJRT-free twin of the AOT `fwd_*` graphs.
+//!
+//! [`NativeModel`] re-implements the rotated model forward
+//! (python/compile/model.py, `rotated=True`: RMSNorm pre-LN, causal MHA,
+//! SwiGLU — dense or top-2 MoE — with the online FWHT before every
+//! down-projection) directly on the crate's own kernels, so scoring
+//! works on hosts where the PJRT engine is unavailable and, more
+//! importantly, so the quantized layers run the **fused dequant-GEMM**
+//! data path: every quantized linear is a
+//! [`QuantizedLinear`] executing `Ŵ·Q_a(x) + U·(Vᵀx)` straight from the
+//! bit-packed codes — the dense weight matrix is never materialized at
+//! serving time.
+//!
+//! Numerics: fp linears run the canonical f32 GEMM, quantized linears
+//! the oracle-locked fused kernel; norms/softmax/SiLU are plain f32 like
+//! the HLO.  The native forward is architecture-equivalent to the AOT
+//! graphs, not bit-identical to them (XLA fuses and reorders); the
+//! bit-level contract lives one layer down, between
+//! [`QuantizedLinear::forward`] and its naive reference.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::linalg::{fwht_f32, matmul_nt_f32_into, workspace, Mat};
+use crate::quant::dequant::QuantizedLinear;
+use crate::quant::pack::PackedInts;
+use crate::quant::weight_scales;
+
+use super::{GraphInfo, ModelArtifacts, ModelInfo, TensorBundle};
+
+/// Matches python `ModelConfig.rms_eps` (not exported in the manifest).
+const RMS_EPS: f32 = 1e-5;
+/// int4 activation grid max (python kernels/ref.py INT4_MAXQ).
+const INT4_MAXQ: f32 = 7.0;
+
+/// One linear layer of the native forward: fp weights on the canonical
+/// f32 GEMM, or the fused dequant-GEMM over packed codes.
+enum Linear {
+    Dense { w: Vec<f32>, dout: usize, din: usize },
+    Quant { q: QuantizedLinear, clip: f32 },
+}
+
+impl Linear {
+    fn dout(&self) -> usize {
+        match self {
+            Linear::Dense { dout, .. } => *dout,
+            Linear::Quant { q, .. } => q.dout(),
+        }
+    }
+
+    fn din(&self) -> usize {
+        match self {
+            Linear::Dense { din, .. } => *din,
+            Linear::Quant { q, .. } => q.din(),
+        }
+    }
+
+    /// `y = x·Wᵀ` (`[m, din] → [m, dout]`).  On the quantized path the
+    /// activations are int4-quantized on the fly (per-token or grouped,
+    /// python `_w4a4_kernel` math) while the low-rank correction reads
+    /// the unquantized rows — unless `weight_only` (Table 3 mode).
+    fn apply(&self, x: &[f32], m: usize, a_group: Option<usize>,
+             weight_only: bool, out: &mut Vec<f32>) {
+        match self {
+            Linear::Dense { w, dout, din } => {
+                matmul_nt_f32_into(x, m, *din, w, *dout, out);
+            }
+            Linear::Quant { q, clip } => {
+                if weight_only {
+                    q.forward_into(x, m, out);
+                } else {
+                    let mut xq = workspace::take_zeroed_f32(x.len());
+                    act_quantize_rows(x, m, q.din(), *clip, a_group,
+                                      &mut xq);
+                    q.forward_split_into(&xq, x, m, out);
+                    workspace::put_f32(xq);
+                }
+            }
+        }
+    }
+}
+
+/// On-the-fly int4 activation quantization over row-major `[m, d]`:
+/// per-token (or per-group) scale `clip·max|x|/7 + 1e-12`, round, clamp
+/// to `[-8, 7]`, back to the grid — f32 like the Pallas kernel.
+fn act_quantize_rows(x: &[f32], m: usize, d: usize, clip: f32,
+                     group: Option<usize>, out: &mut [f32]) {
+    let g = group.unwrap_or(d.max(1));
+    for i in 0..m {
+        let row = &x[i * d..(i + 1) * d];
+        let orow = &mut out[i * d..(i + 1) * d];
+        let mut j = 0;
+        while j < d {
+            let hi = (j + g).min(d);
+            let amax = row[j..hi].iter().fold(0.0_f32, |a, &v| a.max(v.abs()));
+            let s = clip * amax / INT4_MAXQ + 1e-12;
+            for k in j..hi {
+                let q = (row[k] / s).round().clamp(-(INT4_MAXQ + 1.0),
+                                                  INT4_MAXQ);
+                orow[k] = q * s;
+            }
+            j = hi;
+        }
+    }
+}
+
+struct Expert {
+    gate: Linear,
+    up: Linear,
+    down: Linear,
+}
+
+enum Mlp {
+    Dense(Expert),
+    /// router `[n_experts, d]` + dense-simulated top-2 experts
+    Moe { router: Vec<f32>, experts: Vec<Expert> },
+}
+
+struct Block {
+    ln1: Vec<f32>,
+    ln2: Vec<f32>,
+    wq: Linear,
+    wk: Linear,
+    wv: Linear,
+    wo: Linear,
+    mlp: Mlp,
+}
+
+/// The assembled native model: fp tensors from the weights bundle,
+/// quantized layers from an optional quant bundle (any layer present as
+/// `<name>.wq` there serves fused; the rest stay fp — same override rule
+/// as the AOT quantized graphs).
+pub struct NativeModel {
+    pub info: ModelInfo,
+    tok_emb: Vec<f32>,
+    pos_emb: Vec<f32>,
+    blocks: Vec<Block>,
+    ln_f: Vec<f32>,
+    head: Linear,
+    a_group: Option<usize>,
+    weight_only: bool,
+}
+
+impl NativeModel {
+    /// Build from a model directory's artifacts.  `quant` supplies the
+    /// (wq, u, v, clip) tensors per layer; `graph` (when given) carries
+    /// the activation-quant setting of the matching AOT graph — its HLO
+    /// file is **not** read.  `w_bits` is the packing width for the grid
+    /// weights (4 for the paper's W4A4 bundles; any width whose grid
+    /// contains the values works — the codes are recovered from the
+    /// scales).
+    pub fn new(arts: &ModelArtifacts, quant: Option<&TensorBundle>,
+               graph: Option<&GraphInfo>, w_bits: u32)
+               -> Result<NativeModel> {
+        let info = arts.info.clone();
+        if info.d_model == 0 || info.n_layers == 0 || info.n_heads == 0 {
+            bail!("model {} has no architecture config in its manifest",
+                  info.name);
+        }
+        if !info.d_ff.is_power_of_two() {
+            bail!("native forward needs power-of-two d_ff for the online \
+                   FWHT, got {}", info.d_ff);
+        }
+        let dense = |name: &str| -> Result<Linear> {
+            let t = arts.weights.get(name)?;
+            if t.shape.len() != 2 {
+                bail!("tensor {name} is not a matrix: {:?}", t.shape);
+            }
+            Ok(Linear::Dense {
+                w: t.data.clone(),
+                dout: t.shape[0],
+                din: t.shape[1],
+            })
+        };
+        let linear = |name: &str| -> Result<Linear> {
+            if let Some(qb) = quant {
+                if let Ok(wq) = qb.get(&format!("{name}.wq")) {
+                    let (dout, din) = (wq.shape[0], wq.shape[1]);
+                    let wq = Mat::from_f32(dout, din, &wq.data);
+                    let scales = weight_scales(&wq, w_bits, None);
+                    let packed = PackedInts::pack(&wq, &scales, w_bits, None);
+                    let fac = |part: &str| {
+                        qb.get(&format!("{name}.{part}")).ok()
+                          .map(|t| (t.shape[1], t.data.clone()))
+                    };
+                    let clip = qb.get(&format!("{name}.clip"))
+                                 .map(|t| t.data[0]).unwrap_or(1.0);
+                    let q = QuantizedLinear::new(packed, fac("u"), fac("v"));
+                    return Ok(Linear::Quant { q, clip });
+                }
+            }
+            dense(name)
+        };
+        let vecp = |name: &str| -> Result<Vec<f32>> {
+            Ok(arts.weights.get(name)?.data.clone())
+        };
+
+        let mut blocks = Vec::with_capacity(info.n_layers);
+        for i in 0..info.n_layers {
+            let mlp = if info.n_experts == 0 {
+                Mlp::Dense(Expert {
+                    gate: linear(&format!("blk{i}.wgate"))?,
+                    up: linear(&format!("blk{i}.wup"))?,
+                    down: linear(&format!("blk{i}.wdown"))?,
+                })
+            } else {
+                let mut experts = Vec::with_capacity(info.n_experts);
+                for e in 0..info.n_experts {
+                    experts.push(Expert {
+                        gate: linear(&format!("blk{i}.e{e}.wgate"))?,
+                        up: linear(&format!("blk{i}.e{e}.wup"))?,
+                        down: linear(&format!("blk{i}.e{e}.wdown"))?,
+                    });
+                }
+                Mlp::Moe { router: vecp(&format!("blk{i}.router"))?, experts }
+            };
+            blocks.push(Block {
+                ln1: vecp(&format!("blk{i}.ln1"))?,
+                ln2: vecp(&format!("blk{i}.ln2"))?,
+                wq: linear(&format!("blk{i}.wq"))?,
+                wk: linear(&format!("blk{i}.wk"))?,
+                wv: linear(&format!("blk{i}.wv"))?,
+                wo: linear(&format!("blk{i}.wo"))?,
+                mlp,
+            });
+        }
+        Ok(NativeModel {
+            tok_emb: vecp("tok_emb")?,
+            pos_emb: vecp("pos_emb")?,
+            blocks,
+            ln_f: vecp("ln_f")?,
+            head: dense("head")?,
+            a_group: graph.and_then(|g| g.a_group),
+            weight_only: graph.map(|g| g.weight_only).unwrap_or(false),
+            info,
+        })
+    }
+
+    /// Serving-form bytes of the quantized layers (packed codes + scales
+    /// + factors) — what the fused path actually streams.
+    pub fn quant_bytes(&self) -> usize {
+        let lin = |l: &Linear| match l {
+            Linear::Quant { q, .. } => q.size_bytes(),
+            Linear::Dense { .. } => 0,
+        };
+        let exp = |e: &Expert| lin(&e.gate) + lin(&e.up) + lin(&e.down);
+        self.blocks.iter().map(|b| {
+            lin(&b.wq) + lin(&b.wk) + lin(&b.wv) + lin(&b.wo)
+                + match &b.mlp {
+                    Mlp::Dense(e) => exp(e),
+                    Mlp::Moe { experts, .. } =>
+                        experts.iter().map(exp).sum(),
+                }
+        }).sum()
+    }
+
+    /// Full forward on a `[batch, seq_len]` token block; returns flat
+    /// `[batch·seq_len, vocab]` logits.
+    pub fn logits(&self, tokens: &[i32], batch: usize) -> Result<Vec<f32>> {
+        let (t, d) = (self.info.seq_len, self.info.d_model);
+        if tokens.len() != batch * t {
+            bail!("token block {} != {batch}x{t}", tokens.len());
+        }
+        let n = batch * t;
+        // x = tok_emb[tokens] + pos_emb
+        let mut x = vec![0.0_f32; n * d];
+        for (i, &tok) in tokens.iter().enumerate() {
+            let tok = usize::try_from(tok)
+                .ok().filter(|&v| v < self.info.vocab)
+                .ok_or_else(|| anyhow!("token {tok} outside vocab {}",
+                                       self.info.vocab))?;
+            let (e, p) = (&self.tok_emb[tok * d..(tok + 1) * d],
+                          &self.pos_emb[(i % t) * d..(i % t + 1) * d]);
+            for c in 0..d {
+                x[i * d + c] = e[c] + p[c];
+            }
+        }
+
+        let mut h = vec![0.0_f32; n * d];
+        let mut y = Vec::new();
+        for blk in &self.blocks {
+            // h = rmsnorm(x, ln1);  attn = MHA(q, k, v);  x += wo(attn)
+            rmsnorm_rows(&x, d, &blk.ln1, &mut h);
+            let (mut q, mut k, mut v) = (Vec::new(), Vec::new(), Vec::new());
+            self.lin(&blk.wq, &h, n, &mut q);
+            self.lin(&blk.wk, &h, n, &mut k);
+            self.lin(&blk.wv, &h, n, &mut v);
+            let attn = attention(&q, &k, &v, batch, t, self.info.n_heads, d);
+            self.lin(&blk.wo, &attn, n, &mut y);
+            add_into(&mut x, &y);
+
+            // h = rmsnorm(x, ln2);  x += mlp(h)
+            rmsnorm_rows(&x, d, &blk.ln2, &mut h);
+            match &blk.mlp {
+                Mlp::Dense(e) => {
+                    self.expert_forward(e, &h, n, &mut y);
+                    add_into(&mut x, &y);
+                }
+                Mlp::Moe { router, experts } => {
+                    let ne = experts.len();
+                    let mut rl = Vec::new();
+                    matmul_nt_f32_into(&h, n, d, router, ne, &mut rl);
+                    let wts = top2_gates(&rl, n, ne);
+                    for (e, exp) in experts.iter().enumerate() {
+                        self.expert_forward(exp, &h, n, &mut y);
+                        for i in 0..n {
+                            let w = wts[i * ne + e];
+                            if w != 0.0 {
+                                for c in 0..d {
+                                    x[i * d + c] += w * y[i * d + c];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        rmsnorm_rows(&x, d, &self.ln_f, &mut h);
+        let mut logits = Vec::new();
+        self.lin(&self.head, &h, n, &mut logits);
+        Ok(logits)
+    }
+
+    fn lin(&self, l: &Linear, x: &[f32], m: usize, out: &mut Vec<f32>) {
+        l.apply(x, m, self.a_group, self.weight_only, out);
+    }
+
+    /// `down(fwht(silu(gate(h)) · up(h)))` — one SwiGLU branch with the
+    /// online Hadamard of the rotated model before the down-projection.
+    fn expert_forward(&self, e: &Expert, h: &[f32], n: usize,
+                      out: &mut Vec<f32>) {
+        let ff = e.gate.dout();
+        debug_assert_eq!(e.down.din(), ff);
+        let mut gate = Vec::new();
+        let mut up = Vec::new();
+        self.lin(&e.gate, h, n, &mut gate);
+        self.lin(&e.up, h, n, &mut up);
+        for (g, u) in gate.iter_mut().zip(&up) {
+            let s = *g / (1.0 + (-*g).exp()); // silu
+            *g = s * u;
+        }
+        for row in gate.chunks_exact_mut(ff) {
+            fwht_f32(row);
+        }
+        self.lin(&e.down, &gate, n, out);
+    }
+}
+
+/// `y[i] = x[i] · rsqrt(mean(x[i]²) + eps) · scale` per length-d row.
+fn rmsnorm_rows(x: &[f32], d: usize, scale: &[f32], out: &mut [f32]) {
+    for (row, orow) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+        let ss: f32 = row.iter().map(|&v| v * v).sum::<f32>() / d as f32;
+        let r = 1.0 / (ss + RMS_EPS).sqrt();
+        for c in 0..d {
+            orow[c] = row[c] * r * scale[c];
+        }
+    }
+}
+
+fn add_into(x: &mut [f32], y: &[f32]) {
+    for (a, b) in x.iter_mut().zip(y) {
+        *a += b;
+    }
+}
+
+/// Causal multi-head attention over flat `[batch·t, d]` q/k/v.
+fn attention(q: &[f32], k: &[f32], v: &[f32], batch: usize, t: usize,
+             heads: usize, d: usize) -> Vec<f32> {
+    let hd = d / heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut out = vec![0.0_f32; batch * t * d];
+    let mut p = vec![0.0_f32; t];
+    for b in 0..batch {
+        for hh in 0..heads {
+            let off = |tt: usize| (b * t + tt) * d + hh * hd;
+            for tq in 0..t {
+                // causal scores, softmax over tk ≤ tq
+                let mut mx = f32::NEG_INFINITY;
+                for (tk, pk) in p.iter_mut().enumerate().take(tq + 1) {
+                    let (qo, ko) = (off(tq), off(tk));
+                    let mut s = 0.0_f32;
+                    for i in 0..hd {
+                        s += q[qo + i] * k[ko + i];
+                    }
+                    let s = s * scale;
+                    *pk = s;
+                    mx = mx.max(s);
+                }
+                let mut sum = 0.0_f32;
+                for pk in p.iter_mut().take(tq + 1) {
+                    *pk = (*pk - mx).exp();
+                    sum += *pk;
+                }
+                let oo = off(tq);
+                for tk in 0..=tq {
+                    let w = p[tk] / sum;
+                    let vo = off(tk);
+                    for i in 0..hd {
+                        out[oo + i] += w * v[vo + i];
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Top-2 router gates per token (python's argmax+mask formulation):
+/// softmax over the two best logits, zero elsewhere.  Returns flat
+/// `[n, n_experts]` weights.
+fn top2_gates(rl: &[f32], n: usize, ne: usize) -> Vec<f32> {
+    let mut wts = vec![0.0_f32; n * ne];
+    for i in 0..n {
+        let row = &rl[i * ne..(i + 1) * ne];
+        let argmax = |skip: Option<usize>| {
+            let mut best = usize::MAX;
+            let mut bv = f32::NEG_INFINITY;
+            for (e, &val) in row.iter().enumerate() {
+                if Some(e) != skip && val > bv {
+                    best = e;
+                    bv = val;
+                }
+            }
+            (best, bv)
+        };
+        let (e1, v1) = argmax(None);
+        let (e2, v2) = argmax(Some(e1));
+        let m = v1.max(v2);
+        let (a, b) = ((v1 - m).exp(), (v2 - m).exp());
+        wts[i * ne + e1] = a / (a + b);
+        wts[i * ne + e2] = b / (a + b);
+    }
+    wts
+}
+
+/// [`crate::eval::LogitsProvider`] over a shared [`NativeModel`] — the
+/// engine-free counterpart of [`super::SessionProvider`].
+pub struct NativeProvider {
+    pub model: Arc<NativeModel>,
+    pub batch: usize,
+}
+
+impl crate::eval::LogitsProvider for NativeProvider {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn seq_len(&self) -> usize {
+        self.model.info.seq_len
+    }
+    fn vocab(&self) -> usize {
+        self.model.info.vocab
+    }
+    fn logits(&mut self, tokens: &[i32]) -> Result<Vec<f32>, String> {
+        self.model.logits(tokens, self.batch).map_err(|e| e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rtn_quantize;
+    use crate::rng::Rng;
+    use std::collections::BTreeMap;
+    use std::path::PathBuf;
+
+    fn tiny_info(n_experts: usize) -> ModelInfo {
+        ModelInfo {
+            name: "tiny".into(),
+            d_model: 8,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 16,
+            n_experts,
+            seq_len: 4,
+            vocab: 16,
+            param_count: 0,
+        }
+    }
+
+    fn mat(rng: &mut Rng, w: &mut TensorBundle, name: &str, r: usize,
+           c: usize, s: f64) {
+        let data: Vec<f32> = rng.normal_vec(r * c).iter()
+            .map(|&v| (v * s) as f32).collect();
+        w.insert(name, vec![r, c], data);
+    }
+
+    fn tiny_arts(n_experts: usize, seed: u64) -> ModelArtifacts {
+        let info = tiny_info(n_experts);
+        let mut rng = Rng::new(seed);
+        let mut weights = TensorBundle::default();
+        let (d, ff, v, t) = (info.d_model, info.d_ff, info.vocab,
+                             info.seq_len);
+        mat(&mut rng, &mut weights, "tok_emb", v, d, 0.5);
+        mat(&mut rng, &mut weights, "pos_emb", t, d, 0.5);
+        for i in 0..info.n_layers {
+            weights.insert(&format!("blk{i}.ln1"), vec![d], vec![1.0; d]);
+            weights.insert(&format!("blk{i}.ln2"), vec![d], vec![1.0; d]);
+            for nm in ["wq", "wk", "wv", "wo"] {
+                mat(&mut rng, &mut weights, &format!("blk{i}.{nm}"), d, d,
+                    0.35);
+            }
+            if n_experts == 0 {
+                for (nm, r, c) in [("wgate", ff, d), ("wup", ff, d),
+                                   ("wdown", d, ff)] {
+                    mat(&mut rng, &mut weights, &format!("blk{i}.{nm}"),
+                        r, c, 0.35);
+                }
+            } else {
+                mat(&mut rng, &mut weights, &format!("blk{i}.router"),
+                    n_experts, d, 0.35);
+                for e in 0..n_experts {
+                    for (nm, r, c) in [("wgate", ff, d), ("wup", ff, d),
+                                       ("wdown", d, ff)] {
+                        mat(&mut rng, &mut weights,
+                            &format!("blk{i}.e{e}.{nm}"), r, c, 0.35);
+                    }
+                }
+            }
+        }
+        weights.insert("ln_f", vec![d], vec![1.0; d]);
+        mat(&mut rng, &mut weights, "head", v, d, 0.5);
+        ModelArtifacts {
+            dir: PathBuf::new(),
+            weights,
+            graphs: BTreeMap::new(),
+            info,
+        }
+    }
+
+    /// Weight-only 8-bit quant bundle: every quantized layer's wq is the
+    /// int8 RTN grid of the fp weight, rank 0.
+    fn quant_bundle_int8(arts: &ModelArtifacts) -> TensorBundle {
+        let mut qb = TensorBundle::default();
+        for name in crate::pipeline::quantized_layer_names(&arts.info) {
+            let t = arts.weights.get(&name).unwrap();
+            let w = Mat::from_f32(t.shape[0], t.shape[1], &t.data);
+            let wq = rtn_quantize(&w, 8, None);
+            qb.insert(&format!("{name}.wq"), t.shape.clone(), wq.to_f32());
+            qb.insert(&format!("{name}.clip"), vec![1], vec![1.0]);
+        }
+        qb
+    }
+
+    fn toks(arts: &ModelArtifacts, batch: usize, seed: u64) -> Vec<i32> {
+        let mut rng = Rng::new(seed);
+        (0..batch * arts.info.seq_len)
+            .map(|_| (rng.normal_vec(1)[0].abs() * 7.0) as i32 % 16)
+            .collect()
+    }
+
+    #[test]
+    fn fp_forward_shapes_and_determinism() {
+        for ne in [0usize, 3] {
+            let arts = tiny_arts(ne, 5);
+            let m = NativeModel::new(&arts, None, None, 4).unwrap();
+            let tokens = toks(&arts, 2, 9);
+            let l1 = m.logits(&tokens, 2).unwrap();
+            assert_eq!(l1.len(), 2 * 4 * 16);
+            assert!(l1.iter().all(|v| v.is_finite()));
+            assert_eq!(l1, m.logits(&tokens, 2).unwrap(), "experts={ne}");
+            assert_eq!(m.quant_bytes(), 0);
+        }
+    }
+
+    #[test]
+    fn int8_weight_only_tracks_fp() {
+        let arts = tiny_arts(0, 6);
+        let fp = NativeModel::new(&arts, None, None, 4).unwrap();
+        let qb = quant_bundle_int8(&arts);
+        let g = GraphInfo {
+            name: "fwd".into(),
+            file: PathBuf::new(),
+            params: Vec::new(),
+            batch: 2,
+            ranks: BTreeMap::new(),
+            rank_pct: 0.0,
+            a_group: None,
+            weight_only: true,
+            acts: Vec::new(),
+        };
+        let qm = NativeModel::new(&arts, Some(&qb), Some(&g), 8).unwrap();
+        assert!(qm.quant_bytes() > 0);
+        let tokens = toks(&arts, 2, 3);
+        let lf = fp.logits(&tokens, 2).unwrap();
+        let lq = qm.logits(&tokens, 2).unwrap();
+        let scale = lf.iter().fold(0.0_f32, |a, &v| a.max(v.abs()));
+        let diff = lf.iter().zip(&lq)
+            .fold(0.0_f32, |a, (&x, &y)| a.max((x - y).abs()));
+        // int8 weight-only is a fine grid — logits track fp closely
+        assert!(diff < 0.05 * (scale + 1.0), "diff {diff} scale {scale}");
+    }
+
+    #[test]
+    fn w4a4_path_runs_and_is_finite() {
+        let arts = tiny_arts(2, 7);
+        let qb = quant_bundle_int8(&arts);
+        // act-quantized (non weight-only), grouped
+        let g = GraphInfo {
+            name: "fwd".into(),
+            file: PathBuf::new(),
+            params: Vec::new(),
+            batch: 1,
+            ranks: BTreeMap::new(),
+            rank_pct: 0.0,
+            a_group: Some(4),
+            weight_only: false,
+            acts: Vec::new(),
+        };
+        let qm = NativeModel::new(&arts, Some(&qb), Some(&g), 8).unwrap();
+        let tokens = toks(&arts, 1, 1);
+        let l = qm.logits(&tokens, 1).unwrap();
+        assert_eq!(l.len(), 4 * 16);
+        assert!(l.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn act_quant_lands_on_the_grid() {
+        let mut rng = Rng::new(31);
+        let x: Vec<f32> = rng.normal_vec(3 * 20).iter()
+            .map(|&v| v as f32).collect();
+        for group in [None, Some(5)] {
+            let mut out = vec![0.0_f32; x.len()];
+            act_quantize_rows(&x, 3, 20, 0.9, group, &mut out);
+            let g = group.unwrap_or(20);
+            for i in 0..3 {
+                let mut j = 0;
+                while j < 20 {
+                    let hi = (j + g).min(20);
+                    let amax = x[i * 20 + j..i * 20 + hi].iter()
+                        .fold(0.0_f32, |a, &v| a.max(v.abs()));
+                    let s = 0.9 * amax / INT4_MAXQ + 1e-12;
+                    for k in j..hi {
+                        let q = out[i * 20 + k] / s;
+                        assert!((q - q.round()).abs() < 1e-4);
+                        assert!((-8.0..=7.0).contains(&q.round()));
+                    }
+                    j = hi;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn top2_gates_sum_to_one_on_the_two_best() {
+        let rl = vec![0.1_f32, 2.0, -1.0, 1.5, 9.0, 9.0, 9.0, 9.0];
+        let w = top2_gates(&rl, 2, 4);
+        for i in 0..2 {
+            let row = &w[i * 4..(i + 1) * 4];
+            let nz: Vec<_> = row.iter().filter(|&&v| v > 0.0).collect();
+            assert_eq!(nz.len(), 2);
+            assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        }
+        // token 0: experts 1 (2.0) and 3 (1.5) win
+        assert!(w[1] > w[3] && w[3] > 0.0);
+        assert_eq!(w[0], 0.0);
+        assert_eq!(w[2], 0.0);
+    }
+
+    #[test]
+    fn token_out_of_vocab_errors() {
+        let arts = tiny_arts(0, 8);
+        let m = NativeModel::new(&arts, None, None, 4).unwrap();
+        let mut tokens = toks(&arts, 1, 2);
+        tokens[1] = 99;
+        assert!(m.logits(&tokens, 1).is_err());
+        tokens[1] = -1;
+        assert!(m.logits(&tokens, 1).is_err());
+    }
+
+    #[test]
+    fn provider_wraps_the_model() {
+        use crate::eval::LogitsProvider;
+        let arts = tiny_arts(0, 9);
+        let m = Arc::new(NativeModel::new(&arts, None, None, 4).unwrap());
+        let mut p = NativeProvider { model: m.clone(), batch: 2 };
+        assert_eq!(p.batch(), 2);
+        assert_eq!(p.seq_len(), 4);
+        assert_eq!(p.vocab(), 16);
+        let tokens = toks(&arts, 2, 4);
+        assert_eq!(p.logits(&tokens).unwrap(),
+                   m.logits(&tokens, 2).unwrap());
+    }
+
+    #[test]
+    fn dff_not_power_of_two_is_rejected() {
+        let mut arts = tiny_arts(0, 10);
+        arts.info.d_ff = 12;
+        let err = NativeModel::new(&arts, None, None, 4)
+            .err().unwrap().to_string();
+        assert!(err.contains("power-of-two"), "{err}");
+    }
+}

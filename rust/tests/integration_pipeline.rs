@@ -134,6 +134,7 @@ fn coordinator_serves_fp_graph() {
             max_queue: 256,
         },
         workers: 2,
+        native: false,
     })
     .unwrap();
     let seqs = corpus.eval_sequences(handle.seq_len, 24);
@@ -164,6 +165,7 @@ fn coordinator_rejects_bad_seq_len() {
         quant_dir: None,
         policy: BatchPolicy::default(),
         workers: 1,
+        native: false,
     })
     .unwrap();
     assert!(handle.submit(vec![1, 2, 3]).is_err());

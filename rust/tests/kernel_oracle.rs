@@ -10,7 +10,11 @@
 //! invisible.  The sweep covers ~50 shape/seed combos including the
 //! degenerate and ragged cases (1×1, 1×k, odd rows greater than the
 //! thread count, rows not a multiple of the chunk/tile/lane sizes, dims
-//! straddling the KC/NC panels).
+//! straddling the KC/NC panels).  The **widened** legs extend the same
+//! contract to the f32 data path: the f32 GEMM against its naive f32
+//! reference, and the fused dequant-GEMM ([`lrc::quant::QuantizedLinear`])
+//! against the unpack-then-matmul-then-correction reference across
+//! bits × scale-group × backend × thread-count.
 //!
 //! Backends are forced through the same override the CLI's `--simd` flag
 //! installs (the process-wide knob `LRC_SIMD` seeds; the CI matrix also
@@ -282,6 +286,106 @@ fn kernels_are_deterministic_across_repeated_dispatch() {
     for rep in 0..10 {
         assert_eq!(first, a.par_matmul_nt(&bt, &pool), "rep {rep}");
     }
+}
+
+/// Naive C = A·Bᵀ in **f32** (flat row-major slices): the independent
+/// reference for the widened canonical program — single f32
+/// accumulator, ascending k, mode-matched like [`naive_matmul_nt`].
+fn naive_matmul_nt_f32(a: &[f32], m: usize, k: usize, bt: &[f32], n: usize)
+                       -> Vec<f32> {
+    let fma = simd::fma_active();
+    let mut out = vec![0.0_f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut s = 0.0_f32;
+            for kk in 0..k {
+                let (x, y) = (a[i * k + kk], bt[j * k + kk]);
+                s = if fma { x.mul_add(y, s) } else { s + x * y };
+            }
+            out[i * n + j] = s;
+        }
+    }
+    out
+}
+
+#[test]
+fn matmul_nt_f32_bit_identical_to_naive_on_every_backend() {
+    // the widened (f32) canonical program: 2× lane width makes this a
+    // distinct dispatch path (nr32 = 16 on AVX2) from the f64 legs
+    use lrc::linalg::matmul_nt_f32;
+    for_each_backend(|be| {
+        for (si, &(m, k, n)) in [(1usize, 1usize, 1usize), (3, 9, 5),
+                                 (4, 16, 8), (17, 33, 18), (5, 256, 65),
+                                 (19, 257, 15), (40, 300, 97),
+                                 // past PAR_MIN_WORK → pooled row chunks
+                                 (128, 128, 128)]
+            .iter()
+            .enumerate()
+        {
+            let mut rng = Rng::new(40_000 + si as u64);
+            let a: Vec<f32> =
+                rng.normal_vec(m * k).iter().map(|&v| v as f32).collect();
+            let bt: Vec<f32> =
+                rng.normal_vec(n * k).iter().map(|&v| v as f32).collect();
+            let reference = naive_matmul_nt_f32(&a, m, k, &bt, n);
+            assert_eq!(reference, matmul_nt_f32(&a, m, k, &bt, n),
+                       "{m}x{k}·{n}ᵀ f32 [{}]", be.name());
+        }
+    });
+}
+
+/// The fused dequant-GEMM oracle (the tentpole's enforcement arm):
+/// executing `X·Ŵᵀ + (X·V)·Uᵀ` straight from the bit-packed codes with
+/// tile-by-tile decoding must equal the naive
+/// unpack-then-matmul-then-add-correction f32 reference **bit for
+/// bit**, across bits × scale-group × backend × thread count, plus the
+/// rank-0 edge (pure quantized path — no correction panels at all).
+#[test]
+fn fused_dequant_gemm_bit_identical_to_unpack_reference() {
+    use lrc::quant::{rtn_quantize, QuantizedLinear};
+    // m = 19 crosses a PAR_ROW_CHUNK boundary; dout = 33 straddles the
+    // 8- and 16-lane strip widths; din = 64 divides both group sizes
+    let (dout, m) = (33usize, 19usize);
+    for_each_backend(|be| {
+        for &bits in &[2u32, 3, 4, 8] {
+            for &group in &[None, Some(16), Some(64)] {
+                for &(din, rank) in &[(64usize, 5usize), (128, 0)] {
+                    let seed = 60_000
+                        + bits as u64 * 100
+                        + group.unwrap_or(0) as u64 * 7
+                        + din as u64;
+                    let mut rng = Rng::new(seed);
+                    let w = Mat::random_normal(&mut rng, dout, din);
+                    let wq = rtn_quantize(&w, bits, group);
+                    let (u, v) = if rank > 0 {
+                        (Some(Mat::random_normal(&mut rng, dout, rank)
+                                  .scale(0.05)),
+                         Some(Mat::random_normal(&mut rng, din, rank)
+                                  .scale(0.05)))
+                    } else {
+                        (None, None)
+                    };
+                    let q = QuantizedLinear::from_dense(
+                        &wq, bits, group, u.as_ref(), v.as_ref());
+                    let x: Vec<f32> = rng.normal_vec(m * din)
+                        .iter().map(|&v| v as f32).collect();
+                    let reference = q.reference_forward(&x, m);
+                    let mut out = Vec::new();
+                    q.forward_serial(&x, m, &mut out);
+                    assert_eq!(out, reference,
+                               "serial bits={bits} group={group:?} \
+                                rank={rank} [{}]", be.name());
+                    for t in [1usize, 4] {
+                        let pool = Pool::new(t);
+                        q.forward_pool(&x, m, &pool, &mut out);
+                        assert_eq!(out, reference,
+                                   "bits={bits} group={group:?} \
+                                    rank={rank} t={t} [{}]", be.name());
+                    }
+                }
+            }
+        }
+    });
 }
 
 /// The FMA legs: force each mode and hold the kernels to the matching
