@@ -4,6 +4,7 @@
 //!
 //!   cargo run --release --example serve_quantized -- [--requests 128]
 //!       [--concurrency 16] [--max-wait-ms 5] [--workers 1] [--fp]
+//!       [--native]
 //!
 //! Compares the W4A4+LRC pipeline against the FP16 graph under identical
 //! traffic (open-loop batch of closed-loop clients).
@@ -36,7 +37,8 @@ fn drive(handle: Arc<ServerHandle>, seqs: Vec<Vec<i32>>, n_requests: usize,
                 < n_requests
             {
                 let rx = h.submit(seqs[i % seqs.len()].clone())?;
-                let resp = rx.recv()?;
+                // no deadline in this demo's policy → always Scored
+                let resp = rx.recv()?.scored()?;
                 nll += resp.mean_nll;
                 i += concurrency;
                 sent += 1;
@@ -79,6 +81,7 @@ fn main() -> Result<()> {
         max_batch: 8,
         max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 5) as u64),
         max_queue: 4096,
+        deadline: None,
     };
 
     let variants: Vec<(&str, String, Option<std::path::PathBuf>)> = if args.has("fp") {
@@ -99,6 +102,7 @@ fn main() -> Result<()> {
             quant_dir: quant,
             policy: policy.clone(),
             workers,
+            native: args.has("native"),
         })?);
         let seqs = corpus.eval_sequences(handle.seq_len, 64);
         drive(handle.clone(), seqs, n_requests, concurrency)?;

@@ -20,6 +20,7 @@ fn bench_batcher_only() {
         max_batch: 8,
         max_wait: Duration::from_millis(1),
         max_queue: 100_000,
+        deadline: None,
     }));
     let n = 50_000u64;
     let producer = {
@@ -33,6 +34,7 @@ fn bench_batcher_only() {
                     id: i,
                     tokens: vec![0; 8],
                     enqueued: Instant::now(),
+                    deadline: None,
                     respond: tx,
                 }).unwrap();
             }
@@ -41,8 +43,8 @@ fn bench_batcher_only() {
     let t0 = Instant::now();
     let mut got = 0u64;
     while got < n {
-        if let Some(batch) = b.next_batch(8) {
-            got += batch.len() as u64;
+        if let Some(d) = b.next_batch(8) {
+            got += (d.batch.len() + d.expired.len()) as u64;
         }
     }
     producer.join().unwrap();

@@ -1,0 +1,88 @@
+//! Serving-layer soak benchmark — synthetic traffic against the
+//! admission-controlled continuous batcher, in both harness modes:
+//!
+//! * **sim** — the deterministic virtual-time simulation.  Its numbers
+//!   are byte-stable for a (seed, config), so the recorded p50/p95/p99,
+//!   makespan and shed count only move when serving *behavior* changes —
+//!   exactly what the `bench-trend` gate should trip on, with zero
+//!   host noise.
+//! * **live** — the same trace replayed in real time against the real
+//!   [`Batcher`] with real worker threads and a synthetic sleep-based
+//!   service, for wall-clock latency and throughput.
+//!
+//!   cargo bench --bench bench_soak [-- --quick] [-- --seed 42]
+//!       [-- --skip-live] [-- --json PATH]
+//!
+//! All recorded entries are lower-is-better (latency/makespan/shed
+//! count) so the trend gate's "bigger = regression" direction holds;
+//! throughput (higher-better) is stamped into the JSON `meta` instead.
+
+use lrc::bench::{record, section, Stats};
+use lrc::coordinator::soak::{gen_trace, run_live, simulate, SoakConfig};
+use lrc::util::Args;
+
+fn one(v: f64) -> Stats {
+    Stats { samples_ms: vec![v] }
+}
+
+fn main() {
+    let args = Args::from_env();
+    let mut cfg = if args.has("quick") {
+        SoakConfig::fast()
+    } else {
+        SoakConfig::default()
+    };
+    cfg.seed = args.get_usize("seed", cfg.seed as usize) as u64;
+    cfg.workers = args.get_usize("workers", cfg.workers);
+
+    section(&format!(
+        "soak sim (virtual time, deterministic): n={} rate={:.0}rps \
+         burst=x{:.0} workers={}",
+        cfg.n_requests, cfg.rate_rps, cfg.burst_mult, cfg.workers));
+    let trace = gen_trace(&cfg);
+    let report = simulate(&cfg, &trace);
+    print!("{}", report.render(&cfg));
+    record("sim_p50_ms", &one(report.p50_us as f64 / 1e3));
+    record("sim_p95_ms", &one(report.p95_us as f64 / 1e3));
+    record("sim_p99_ms", &one(report.p99_us as f64 / 1e3));
+    record("sim_makespan_ms", &one(report.makespan_us as f64 / 1e3));
+    record("sim_shed_count", &one(report.shed as f64));
+    record("sim_rejected_count", &one(report.rejected as f64));
+
+    let mut throughput = String::from("skipped");
+    if !args.has("skip-live") {
+        section(&format!(
+            "soak live (real Batcher, wall clock): n={} workers={}",
+            cfg.n_requests, cfg.workers));
+        let live = run_live(&cfg);
+        println!(
+            "served={} shed={} rejected={} failed={} wall={:.1}ms \
+             throughput={:.0} req/s\n\
+             latency: p50={:.2}ms p95={:.2}ms p99={:.2}ms",
+            live.served, live.shed, live.rejected, live.failed,
+            live.wall_ms, live.throughput_rps,
+            live.p50_us as f64 / 1e3, live.p95_us as f64 / 1e3,
+            live.p99_us as f64 / 1e3);
+        record("live_p50_ms", &one(live.p50_us as f64 / 1e3));
+        record("live_p95_ms", &one(live.p95_us as f64 / 1e3));
+        record("live_p99_ms", &one(live.p99_us as f64 / 1e3));
+        throughput = format!("{:.1}", live.throughput_rps);
+    }
+
+    if let Some(path) = args.get("json") {
+        let commit = std::env::var("GITHUB_SHA")
+            .unwrap_or_else(|_| "unknown".into());
+        let meta = [("bench", "bench_soak".to_string()),
+                    ("commit", commit),
+                    ("seed", cfg.seed.to_string()),
+                    // higher-is-better, so meta-stamped rather than a
+                    // gated entry (the gate fails on increases)
+                    ("live_throughput_rps", throughput)];
+        let path = std::path::Path::new(path);
+        match lrc::bench::write_json(path, &meta) {
+            Ok(()) => println!("\nwrote bench JSON → {}", path.display()),
+            Err(e) => eprintln!("error: could not write {}: {e}",
+                                path.display()),
+        }
+    }
+}

@@ -1,21 +1,42 @@
-//! Dynamic batching queue: requests accumulate until either the largest
-//! bucket fills or the oldest request has waited `max_wait` — the standard
-//! continuous-batching trade-off between throughput (full batches) and
-//! tail latency (deadline flush).
+//! Admission-controlled dynamic batching queue: requests accumulate
+//! until either the largest bucket fills or the oldest request has
+//! waited `max_wait` — the standard trade-off between throughput (full
+//! batches) and tail latency (deadline flush).
 //!
-//! The queue is multi-consumer: any number of engine workers may block in
-//! [`Batcher::next_batch`] concurrently (the N-worker coordinator does
-//! exactly that).  Batches are handed out atomically under the queue
-//! lock, so every request is delivered exactly once, and `close()` wakes
-//! all parked consumers.
+//! Admission control and load shedding:
+//!
+//!   * [`Batcher::push`] is the bounded admission point — beyond
+//!     `max_queue` it rejects with a **typed** backpressure error
+//!     ([`PushError::Full`]) instead of a stringly one, so callers can
+//!     tell "back off" from "gone".
+//!   * every [`super::Request`] may carry a deadline; requests whose
+//!     deadline expires while queued are **shed at dequeue time**:
+//!     they come back in [`Drained::expired`] so the worker can deliver
+//!     an explicit [`super::Outcome::Shed`] — a client never just loses
+//!     its response channel.
+//!
+//! Consumers run a continuous-batching loop: [`Batcher::next_batch`]
+//! blocks (size / max-wait / close triggered) when a worker is idle,
+//! and [`Batcher::poll_batch`] refills without blocking while a worker
+//! is hot — arrivals during an execute are picked up the moment rows
+//! finish instead of waiting out another accumulation barrier.
+//!
+//! The queue is multi-consumer: any number of engine workers may block
+//! in `next_batch` concurrently (the N-worker coordinator does exactly
+//! that).  Batches are handed out atomically under the queue lock, so
+//! every request is delivered exactly once.  Idle consumers park on the
+//! condvar with **no timeout** — `push` and `close` notify — and `push`
+//! wakes at most one consumer (the first item of an accumulating batch,
+//! or the item completing a full one), never the whole herd;
+//! [`Batcher::idle_wakeups`] counts idle-park returns so tests can
+//! assert a quiet server stays asleep.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
-use std::time::Duration;
-#[cfg(test)]
 use std::time::Instant;
-
-use anyhow::{anyhow, Result};
+#[cfg(test)]
+use std::time::Duration;
 
 use super::Request;
 
@@ -24,19 +45,55 @@ pub struct BatchPolicy {
     /// flush as soon as this many requests are queued
     pub max_batch: usize,
     /// flush when the oldest queued request has waited this long
-    pub max_wait: Duration,
+    pub max_wait: std::time::Duration,
     /// reject new work beyond this depth (backpressure)
     pub max_queue: usize,
+    /// default per-request latency budget applied at submit time
+    /// (`None` = no deadline: requests are never shed)
+    pub deadline: Option<std::time::Duration>,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
         BatchPolicy {
             max_batch: 8,
-            max_wait: Duration::from_millis(5),
+            max_wait: std::time::Duration::from_millis(5),
             max_queue: 1024,
+            deadline: None,
         }
     }
+}
+
+/// Typed admission failure from [`Batcher::push`] — the backpressure
+/// signal clients act on (retry with backoff vs give up).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PushError {
+    /// the queue was closed (server shutting down)
+    Closed,
+    /// the bounded queue is at capacity — shed load upstream
+    Full { depth: usize, limit: usize },
+}
+
+impl std::fmt::Display for PushError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PushError::Closed => write!(f, "queue closed"),
+            PushError::Full { depth, limit } => {
+                write!(f, "queue full ({depth}/{limit} requests) — \
+                           backpressure")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PushError {}
+
+/// What a dequeue hands back: the batch to execute, plus any requests
+/// whose deadline expired while they queued.  The caller owes every
+/// expired request an explicit shed outcome.
+pub struct Drained {
+    pub batch: Vec<Request>,
+    pub expired: Vec<Request>,
 }
 
 struct QueueState {
@@ -48,37 +105,97 @@ pub struct Batcher {
     policy: BatchPolicy,
     state: Mutex<QueueState>,
     cv: Condvar,
+    /// times a consumer returned from the idle (empty-queue) park; an
+    /// idle server with no traffic must not move this
+    idle_wakeups: AtomicU64,
+}
+
+/// Move every expired request (deadline at or before `now`) out of
+/// `items` into `out`, preserving FIFO order of the survivors.
+fn prune_expired(items: &mut VecDeque<Request>, now: Instant,
+                 out: &mut Vec<Request>) {
+    let mut i = 0;
+    while i < items.len() {
+        let expired =
+            items[i].deadline.map(|d| d <= now).unwrap_or(false);
+        if expired {
+            out.push(items.remove(i).expect("index in bounds"));
+        } else {
+            i += 1;
+        }
+    }
 }
 
 impl Batcher {
     pub fn new(policy: BatchPolicy) -> Batcher {
         Batcher {
             policy,
-            state: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
+            state: Mutex::new(QueueState {
+                items: VecDeque::new(),
+                closed: false,
+            }),
             cv: Condvar::new(),
+            idle_wakeups: AtomicU64::new(0),
         }
     }
 
-    /// Enqueue a request (fails when closed or over the backpressure limit).
-    pub fn push(&self, req: Request) -> Result<()> {
+    pub fn policy(&self) -> &BatchPolicy {
+        &self.policy
+    }
+
+    /// Enqueue a request; typed rejection when closed or over the
+    /// backpressure limit.
+    pub fn push(&self, req: Request) -> Result<(), PushError> {
         let mut st = self.state.lock().unwrap();
         if st.closed {
-            return Err(anyhow!("queue closed"));
+            return Err(PushError::Closed);
         }
         if st.items.len() >= self.policy.max_queue {
-            return Err(anyhow!("queue full ({} requests) — backpressure",
-                               st.items.len()));
+            return Err(PushError::Full {
+                depth: st.items.len(),
+                limit: self.policy.max_queue,
+            });
         }
         st.items.push_back(req);
-        self.cv.notify_all();
+        // Wake at most one consumer, and only when this push can
+        // unblock one: the first item of an accumulating batch (a
+        // consumer must arm the max_wait timer) or the item completing
+        // a full batch (flush now).  The old notify_all woke every
+        // parked worker for a single request; consumers re-check state
+        // under the lock, so a notify that races a faster consumer is a
+        // harmless no-op wake.  Consumers holding a partial batch are
+        // in a *timed* wait and flush on their own at max_wait.
+        let len = st.items.len();
+        if len == 1 || len % self.policy.max_batch.max(1) == 0 {
+            self.cv.notify_one();
+        }
         Ok(())
     }
 
-    /// Blocking pop of the next batch (≤ `cap`); `None` once closed+empty.
-    pub fn next_batch(&self, cap: usize) -> Option<Vec<Request>> {
+    /// Blocking dequeue (batch ≤ `cap`): returns once a full batch is
+    /// ready, the oldest request has waited `max_wait`, a queued
+    /// deadline expired (so sheds reach their clients promptly), or the
+    /// queue closed with work remaining.  `None` once closed+empty.
+    pub fn next_batch(&self, cap: usize) -> Option<Drained> {
         let cap = cap.min(self.policy.max_batch).max(1);
         let mut st = self.state.lock().unwrap();
         loop {
+            let mut expired = Vec::new();
+            prune_expired(&mut st.items, Instant::now(), &mut expired);
+            if !expired.is_empty() {
+                // shed requests must reach their clients now, not after
+                // the accumulation wait; take a batch too if one is due
+                let due = st.items.len() >= cap
+                    || (st.closed && !st.items.is_empty())
+                    || st.items.front().map(|r| {
+                        r.enqueued.elapsed() >= self.policy.max_wait
+                    }).unwrap_or(false);
+                let n = if due { st.items.len().min(cap) } else { 0 };
+                return Some(Drained {
+                    batch: st.items.drain(..n).collect(),
+                    expired,
+                });
+            }
             if st.items.len() >= cap {
                 break;
             }
@@ -105,15 +222,33 @@ impl Batcher {
             if st.closed {
                 return None;
             }
-            // empty: wait for work (with a poll interval so closing is seen)
-            let (guard, _timeout) = self
-                .cv
-                .wait_timeout(st, Duration::from_millis(50))
-                .unwrap();
-            st = guard;
+            // empty: park until push/close notifies.  No poll interval —
+            // an idle server makes zero wakeups (counted, tested).
+            st = self.cv.wait(st).unwrap();
+            self.idle_wakeups.fetch_add(1, Ordering::Relaxed);
         }
         let n = st.items.len().min(cap);
-        Some(st.items.drain(..n).collect())
+        Some(Drained {
+            batch: st.items.drain(..n).collect(),
+            expired: Vec::new(),
+        })
+    }
+
+    /// Non-blocking dequeue for hot workers (continuous batching): take
+    /// whatever is queued right now, up to `cap`, with no accumulation
+    /// barrier — a worker that just finished a batch refills from the
+    /// arrivals that landed while it executed.  Both fields may be
+    /// empty.
+    pub fn poll_batch(&self, cap: usize) -> Drained {
+        let cap = cap.min(self.policy.max_batch).max(1);
+        let mut st = self.state.lock().unwrap();
+        let mut expired = Vec::new();
+        prune_expired(&mut st.items, Instant::now(), &mut expired);
+        let n = st.items.len().min(cap);
+        Drained {
+            batch: st.items.drain(..n).collect(),
+            expired,
+        }
     }
 
     pub fn is_empty(&self) -> bool {
@@ -122,6 +257,12 @@ impl Batcher {
 
     pub fn len(&self) -> usize {
         self.state.lock().unwrap().items.len()
+    }
+
+    /// Times a consumer woke from the idle (empty-queue) park.  Zero on
+    /// a quiet server; one per push-driven hand-off.
+    pub fn idle_wakeups(&self) -> u64 {
+        self.idle_wakeups.load(Ordering::Relaxed)
     }
 
     pub fn close(&self) {
@@ -137,7 +278,26 @@ mod tests {
 
     fn req(id: u64) -> Request {
         let (tx, _rx) = mpsc::channel();
-        Request { id, tokens: vec![0; 4], enqueued: Instant::now(), respond: tx }
+        Request {
+            id,
+            tokens: vec![0; 4],
+            enqueued: Instant::now(),
+            deadline: None,
+            respond: tx,
+        }
+    }
+
+    /// A request whose deadline has already passed when it enqueues.
+    fn expired_req(id: u64) -> Request {
+        let mut r = req(id);
+        r.deadline = Some(Instant::now());
+        r
+    }
+
+    fn live_req(id: u64) -> Request {
+        let mut r = req(id);
+        r.deadline = Some(Instant::now() + Duration::from_secs(3600));
+        r
     }
 
     fn policy(max_batch: usize, wait_ms: u64, max_queue: usize) -> BatchPolicy {
@@ -145,6 +305,7 @@ mod tests {
             max_batch,
             max_wait: Duration::from_millis(wait_ms),
             max_queue,
+            deadline: None,
         }
     }
 
@@ -155,7 +316,7 @@ mod tests {
             b.push(req(i)).unwrap();
         }
         let t0 = Instant::now();
-        let batch = b.next_batch(4).unwrap();
+        let batch = b.next_batch(4).unwrap().batch;
         assert_eq!(batch.len(), 4);
         assert!(t0.elapsed() < Duration::from_millis(500));
     }
@@ -165,7 +326,7 @@ mod tests {
         let b = Batcher::new(policy(8, 20, 100));
         b.push(req(1)).unwrap();
         b.push(req(2)).unwrap();
-        let batch = b.next_batch(8).unwrap();
+        let batch = b.next_batch(8).unwrap().batch;
         assert_eq!(batch.len(), 2);
     }
 
@@ -177,7 +338,7 @@ mod tests {
         }
         let mut seen = Vec::new();
         while seen.len() < 7 {
-            for r in b.next_batch(3).unwrap() {
+            for r in b.next_batch(3).unwrap().batch {
                 seen.push(r.id);
             }
         }
@@ -185,11 +346,14 @@ mod tests {
     }
 
     #[test]
-    fn backpressure_rejects() {
+    fn backpressure_rejects_with_typed_error() {
         let b = Batcher::new(policy(4, 1, 2));
         b.push(req(1)).unwrap();
         b.push(req(2)).unwrap();
-        assert!(b.push(req(3)).is_err());
+        match b.push(req(3)) {
+            Err(PushError::Full { depth: 2, limit: 2 }) => {}
+            other => panic!("expected Full{{2,2}}, got {other:?}"),
+        }
     }
 
     #[test]
@@ -197,9 +361,9 @@ mod tests {
         let b = Batcher::new(policy(4, 1, 10));
         b.push(req(1)).unwrap();
         b.close();
-        assert!(b.push(req(2)).is_err());
+        assert_eq!(b.push(req(2)), Err(PushError::Closed));
         // drains the remaining request, then returns None
-        assert_eq!(b.next_batch(4).unwrap().len(), 1);
+        assert_eq!(b.next_batch(4).unwrap().batch.len(), 1);
         assert!(b.next_batch(4).is_none());
     }
 
@@ -213,7 +377,7 @@ mod tests {
         b.push(req(2)).unwrap();
         b.close();
         let t0 = Instant::now();
-        let batch = b.next_batch(8).unwrap();
+        let batch = b.next_batch(8).unwrap().batch;
         assert_eq!(batch.len(), 2);
         assert!(t0.elapsed() < Duration::from_millis(500),
                 "partial batch took {:?} after close (max_wait 10s)",
@@ -237,9 +401,104 @@ mod tests {
         std::thread::sleep(Duration::from_millis(100));
         b.close();
         let (batch, waited) = consumer.join().unwrap();
-        assert_eq!(batch.unwrap().len(), 1);
+        assert_eq!(batch.unwrap().batch.len(), 1);
         assert!(waited < Duration::from_secs(5),
                 "consumer waited {waited:?} — close() did not flush");
+    }
+
+    #[test]
+    fn expired_requests_are_shed_at_dequeue() {
+        // two expired + one live: the expired pair comes back in
+        // `expired` (owed an explicit shed outcome), the live one forms
+        // the batch — and the shed return is prompt even though neither
+        // the batch-full nor the max_wait trigger fired
+        let b = Batcher::new(policy(4, 10_000, 100));
+        b.push(expired_req(1)).unwrap();
+        b.push(expired_req(2)).unwrap();
+        b.push(live_req(3)).unwrap();
+        let t0 = Instant::now();
+        let d = b.next_batch(4).unwrap();
+        assert!(t0.elapsed() < Duration::from_millis(500),
+                "sheds waited {:?} for the accumulation barrier",
+                t0.elapsed());
+        let shed_ids: Vec<u64> = d.expired.iter().map(|r| r.id).collect();
+        assert_eq!(shed_ids, vec![1, 2]);
+        // no trigger fired, so the live request stays queued...
+        assert!(d.batch.is_empty());
+        // ...and a hot-path poll picks it up immediately
+        let d2 = b.poll_batch(4);
+        assert!(d2.expired.is_empty());
+        assert_eq!(d2.batch.len(), 1);
+        assert_eq!(d2.batch[0].id, 3);
+    }
+
+    #[test]
+    fn expired_only_queue_sheds_immediately() {
+        let b = Batcher::new(policy(8, 10_000, 100));
+        b.push(expired_req(1)).unwrap();
+        let t0 = Instant::now();
+        let d = b.next_batch(8).unwrap();
+        assert!(t0.elapsed() < Duration::from_millis(500));
+        assert!(d.batch.is_empty());
+        assert_eq!(d.expired.len(), 1);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn poll_batch_is_nonblocking_and_bounded() {
+        let b = Batcher::new(policy(4, 10_000, 100));
+        // empty queue: immediate empty drain, no parking
+        let t0 = Instant::now();
+        let d = b.poll_batch(4);
+        assert!(d.batch.is_empty() && d.expired.is_empty());
+        assert!(t0.elapsed() < Duration::from_millis(100));
+        // six queued: poll takes cap=4, leaves 2 — no max_wait barrier
+        for i in 0..6 {
+            b.push(req(i)).unwrap();
+        }
+        let d = b.poll_batch(4);
+        assert_eq!(d.batch.iter().map(|r| r.id).collect::<Vec<_>>(),
+                   vec![0, 1, 2, 3]);
+        assert_eq!(b.len(), 2);
+    }
+
+    #[test]
+    fn idle_consumer_makes_no_spurious_wakeups() {
+        // regression: idle consumers used to poll every 50 ms even with
+        // no traffic; now they park untimed until push/close notifies
+        let b = std::sync::Arc::new(Batcher::new(policy(8, 5, 100)));
+        let bb = b.clone();
+        let consumer = std::thread::spawn(move || bb.next_batch(8));
+        std::thread::sleep(Duration::from_millis(300));
+        assert_eq!(b.idle_wakeups(), 0,
+                   "idle server woke {} times in 300ms of silence",
+                   b.idle_wakeups());
+        b.close();
+        assert!(consumer.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn push_wakes_one_consumer_not_the_herd() {
+        // three consumers parked on an empty queue; one push must not
+        // wake all of them (cap 1 ⇒ the woken consumer takes the item
+        // and returns immediately)
+        let b = std::sync::Arc::new(Batcher::new(policy(1, 5, 100)));
+        let consumers: Vec<_> = (0..3).map(|_| {
+            let bb = b.clone();
+            std::thread::spawn(move || bb.next_batch(1))
+        }).collect();
+        std::thread::sleep(Duration::from_millis(100));
+        assert_eq!(b.idle_wakeups(), 0);
+        b.push(req(1)).unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+        assert!(b.idle_wakeups() < 3,
+                "one push woke all {} parked consumers",
+                b.idle_wakeups());
+        b.close();
+        let served: usize = consumers.into_iter()
+            .map(|c| c.join().unwrap().map(|d| d.batch.len()).unwrap_or(0))
+            .sum();
+        assert_eq!(served, 1);
     }
 
     #[test]
@@ -253,8 +512,8 @@ mod tests {
                 let bb = b.clone();
                 std::thread::spawn(move || {
                     let mut got = Vec::new();
-                    while let Some(batch) = bb.next_batch(4) {
-                        got.extend(batch.iter().map(|r| r.id));
+                    while let Some(d) = bb.next_batch(4) {
+                        got.extend(d.batch.iter().map(|r| r.id));
                     }
                     got // exits when closed + drained
                 })
@@ -275,7 +534,9 @@ mod tests {
 
     #[test]
     fn no_request_lost_under_concurrency() {
-        // property: N producers × M requests all come out exactly once
+        // property: N producers × M requests all come out exactly once,
+        // through a consumer mixing blocking next_batch with hot-path
+        // poll_batch refills (the real worker loop's shape)
         let b = std::sync::Arc::new(Batcher::new(policy(8, 2, 10_000)));
         let n_prod = 4;
         let per = 50;
@@ -296,9 +557,17 @@ mod tests {
             std::thread::spawn(move || {
                 let mut got = Vec::new();
                 while got.len() < n_prod * per {
-                    if let Some(batch) = bb.next_batch(8) {
-                        assert!(batch.len() <= 8);
-                        got.extend(batch.iter().map(|r| r.id));
+                    if let Some(d) = bb.next_batch(8) {
+                        assert!(d.batch.len() <= 8);
+                        got.extend(d.batch.iter().map(|r| r.id));
+                        // continuous refill while hot
+                        loop {
+                            let d = bb.poll_batch(8);
+                            if d.batch.is_empty() {
+                                break;
+                            }
+                            got.extend(d.batch.iter().map(|r| r.id));
+                        }
                     }
                 }
                 got

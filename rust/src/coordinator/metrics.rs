@@ -53,7 +53,9 @@ impl Histogram {
         self.max.load(Ordering::Relaxed)
     }
 
-    /// Percentile estimate: bucket midpoint of the p-quantile bucket.
+    /// Percentile estimate: midpoint of the p-quantile bucket, clamped
+    /// to the observed maximum so the estimate can never exceed the
+    /// largest recorded sample.
     pub fn percentile(&self, p: f64) -> u64 {
         let total = self.count();
         if total == 0 {
@@ -64,9 +66,13 @@ impl Histogram {
         for (i, b) in self.buckets.iter().enumerate() {
             acc += b.load(Ordering::Relaxed);
             if acc >= target {
+                // bucket i covers [2^i, 2^(i+1)); midpoint = lo + lo/2.
+                // Written without `hi = lo << 1`, which wraps to 0 for
+                // bucket 63 and returned an estimate *below* the
+                // bucket's lower bound.
                 let lo = 1u64 << i;
-                let hi = lo << 1;
-                return (lo + hi) / 2;
+                let mid = lo + lo / 2;
+                return mid.min(self.max());
             }
         }
         self.max()
@@ -107,8 +113,17 @@ pub struct ServerMetrics {
     pub requests: AtomicU64,
     pub batches: AtomicU64,
     pub errors: AtomicU64,
+    /// requests shed because their deadline expired while queued (each
+    /// received an explicit [`super::Outcome::Shed`])
+    pub shed: AtomicU64,
+    /// submissions rejected at admission (queue full / closed — typed
+    /// backpressure, the request never entered the queue)
+    pub rejected: AtomicU64,
     pub queue_lat_us: Histogram,
     pub exec_lat_us: Histogram,
+    /// per-batch NLL scoring time — kept out of both queue wait and
+    /// execute latency so the three phases are reported honestly
+    pub score_lat_us: Histogram,
     pub total_lat_us: Histogram,
     /// batch fill ratio in percent
     pub batch_fill: Histogram,
@@ -128,8 +143,11 @@ impl ServerMetrics {
             requests: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             errors: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
             queue_lat_us: Histogram::new(),
             exec_lat_us: Histogram::new(),
+            score_lat_us: Histogram::new(),
             total_lat_us: Histogram::new(),
             batch_fill: Histogram::new(),
             per_worker: (0..workers.max(1)).map(|_| WorkerMetrics::new())
@@ -147,6 +165,8 @@ impl ServerMetrics {
             requests,
             batches: self.batches.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
             throughput_rps: requests as f64 / elapsed.max(1e-9),
             mean_total_us: self.total_lat_us.mean(),
             p50_total_us: self.total_lat_us.percentile(50.0),
@@ -154,6 +174,7 @@ impl ServerMetrics {
             p99_total_us: self.total_lat_us.percentile(99.0),
             mean_exec_us: self.exec_lat_us.mean(),
             mean_queue_us: self.queue_lat_us.mean(),
+            mean_score_us: self.score_lat_us.mean(),
             mean_batch_fill_pct: self.batch_fill.mean(),
             per_worker: self.per_worker.iter().map(|w| WorkerSnapshot {
                 batches: w.batches.load(Ordering::Relaxed),
@@ -183,6 +204,8 @@ pub struct MetricsSnapshot {
     pub requests: u64,
     pub batches: u64,
     pub errors: u64,
+    pub shed: u64,
+    pub rejected: u64,
     pub throughput_rps: f64,
     pub mean_total_us: f64,
     pub p50_total_us: u64,
@@ -190,6 +213,7 @@ pub struct MetricsSnapshot {
     pub p99_total_us: u64,
     pub mean_exec_us: f64,
     pub mean_queue_us: f64,
+    pub mean_score_us: f64,
     pub mean_batch_fill_pct: f64,
     pub per_worker: Vec<WorkerSnapshot>,
 }
@@ -197,15 +221,18 @@ pub struct MetricsSnapshot {
 impl MetricsSnapshot {
     pub fn render(&self) -> String {
         let mut out = format!(
-            "requests={} batches={} errors={} throughput={:.1} req/s\n\
+            "requests={} batches={} errors={} shed={} rejected={} \
+             throughput={:.1} req/s\n\
              latency: mean={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms\n\
-             exec mean={:.1}ms queue mean={:.1}ms batch-fill={:.0}%",
-            self.requests, self.batches, self.errors, self.throughput_rps,
+             queue mean={:.1}ms exec mean={:.1}ms score mean={:.1}ms \
+             batch-fill={:.0}%",
+            self.requests, self.batches, self.errors, self.shed,
+            self.rejected, self.throughput_rps,
             self.mean_total_us / 1000.0, self.p50_total_us as f64 / 1000.0,
             self.p95_total_us as f64 / 1000.0,
             self.p99_total_us as f64 / 1000.0,
-            self.mean_exec_us / 1000.0, self.mean_queue_us / 1000.0,
-            self.mean_batch_fill_pct);
+            self.mean_queue_us / 1000.0, self.mean_exec_us / 1000.0,
+            self.mean_score_us / 1000.0, self.mean_batch_fill_pct);
         if self.per_worker.len() > 1 {
             for (i, w) in self.per_worker.iter().enumerate() {
                 out.push_str(&format!(
@@ -244,6 +271,36 @@ mod tests {
         assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
         // p50 of 1..1000 should land near 512-bucket
         assert!((256..=1024).contains(&p50), "{p50}");
+    }
+
+    #[test]
+    fn percentile_top_bucket_does_not_wrap() {
+        // regression: bucket 63's `hi = lo << 1` wrapped to 0, returning
+        // a midpoint *below* the bucket's lower bound
+        let h = Histogram::new();
+        h.record(u64::MAX);
+        h.record(1u64 << 63);
+        let p = h.percentile(99.0);
+        assert!(p >= 1u64 << 63, "estimate {p} below bucket floor 2^63");
+        assert!(p <= h.max(), "estimate {p} above observed max {}",
+                h.max());
+    }
+
+    #[test]
+    fn percentile_clamped_to_observed_max() {
+        // bucket [512, 1024) has midpoint 768, but the largest recorded
+        // sample is 600 — the estimate must not exceed it
+        let h = Histogram::new();
+        for _ in 0..8 {
+            h.record(600);
+        }
+        assert_eq!(h.percentile(99.0), 600);
+        // and a sample above the midpoint leaves the midpoint in place
+        let g = Histogram::new();
+        for _ in 0..8 {
+            g.record(900);
+        }
+        assert_eq!(g.percentile(50.0), 768);
     }
 
     #[test]

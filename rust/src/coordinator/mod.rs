@@ -25,26 +25,31 @@
 
 pub mod batcher;
 pub mod metrics;
+pub mod soak;
 
-pub use batcher::{Batcher, BatchPolicy};
+pub use batcher::{Batcher, BatchPolicy, Drained, PushError};
 pub use metrics::{Histogram, MetricsSnapshot, ServerMetrics, WorkerSnapshot};
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use crate::runtime::{Engine, ModelArtifacts, NativeModel, TensorBundle};
 
-/// One scoring request: a token sequence of exactly `seq_len`.
+/// One scoring request: a token sequence of exactly `seq_len`, plus an
+/// optional absolute deadline — a request still queued past its
+/// deadline is shed with an explicit [`Outcome::Shed`] instead of being
+/// executed late.
 pub struct Request {
     pub id: u64,
     pub tokens: Vec<i32>,
     pub enqueued: Instant,
-    pub respond: mpsc::Sender<Response>,
+    pub deadline: Option<Instant>,
+    pub respond: mpsc::Sender<Outcome>,
 }
 
 /// The scored result.
@@ -53,9 +58,51 @@ pub struct Response {
     pub id: u64,
     /// mean next-token NLL over the sequence (exp → per-seq perplexity)
     pub mean_nll: f64,
+    /// time spent queued, up to the instant a worker dequeued the batch
     pub queue_us: u64,
+    /// backend execute (forward pass) time for the batch
     pub exec_us: u64,
+    /// per-batch NLL scoring time (kept out of queue_us and exec_us so
+    /// the three phases are attributed honestly)
+    pub score_us: u64,
     pub total_us: u64,
+}
+
+/// What a client receives on its response channel — exactly one
+/// `Outcome` per admitted request, always: scored, shed, or failed.  A
+/// client never just loses its channel.
+#[derive(Clone, Debug)]
+pub enum Outcome {
+    /// executed and scored
+    Scored(Response),
+    /// deadline expired while queued; never executed
+    Shed { id: u64, waited_us: u64 },
+    /// the execute backend failed; `error` carries the cause (the old
+    /// behavior dropped the senders, leaving clients a bare channel
+    /// error with no explanation)
+    Failed { id: u64, error: String },
+}
+
+impl Outcome {
+    pub fn id(&self) -> u64 {
+        match self {
+            Outcome::Scored(r) => r.id,
+            Outcome::Shed { id, .. } | Outcome::Failed { id, .. } => *id,
+        }
+    }
+
+    /// The scored response, or a descriptive error — for clients that
+    /// treat anything but success as fatal (`rx.recv()?.scored()?`).
+    pub fn scored(self) -> Result<Response> {
+        match self {
+            Outcome::Scored(r) => Ok(r),
+            Outcome::Shed { id, waited_us } => Err(anyhow!(
+                "request {id} shed: deadline expired after {waited_us}us \
+                 in queue")),
+            Outcome::Failed { id, error } => Err(anyhow!(
+                "request {id} failed: {error}")),
+        }
+    }
 }
 
 /// Server configuration.
@@ -157,20 +204,37 @@ impl ServerHandle {
         })
     }
 
-    /// Submit a sequence; returns the channel the response arrives on.
-    pub fn submit(&self, tokens: Vec<i32>) -> Result<mpsc::Receiver<Response>> {
+    /// Submit a sequence with the policy's default deadline; returns
+    /// the channel the [`Outcome`] arrives on.
+    pub fn submit(&self, tokens: Vec<i32>) -> Result<mpsc::Receiver<Outcome>> {
+        let deadline = self.queue.policy().deadline;
+        self.submit_with_deadline(tokens, deadline)
+    }
+
+    /// Submit with an explicit latency budget (`None` = never shed).
+    /// Admission is bounded: a full queue rejects with the typed
+    /// [`PushError::Full`] backpressure error (counted in
+    /// `metrics.rejected`) instead of queueing unboundedly.
+    pub fn submit_with_deadline(&self, tokens: Vec<i32>,
+                                deadline: Option<Duration>)
+                                -> Result<mpsc::Receiver<Outcome>> {
         if tokens.len() != self.seq_len {
             return Err(anyhow!("sequence must be seq_len={} tokens, got {}",
                                self.seq_len, tokens.len()));
         }
         let (tx, rx) = mpsc::channel();
+        let now = Instant::now();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             tokens,
-            enqueued: Instant::now(),
+            enqueued: now,
+            deadline: deadline.map(|d| now + d),
             respond: tx,
         };
-        self.queue.push(req)?;
+        if let Err(e) = self.queue.push(req) {
+            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(e.into());
+        }
         Ok(rx)
     }
 
@@ -298,8 +362,9 @@ fn worker_loop(cfg: ServerConfig, wid: usize, queue: Arc<Batcher>,
         (crate::par::threads() / cfg.workers.max(1)).max(1));
 
     loop {
-        let batch = match queue.next_batch(max_bucket) {
-            Some(b) => b,
+        // idle: block until work, a queued deadline, or close
+        let drained = match queue.next_batch(max_bucket) {
+            Some(d) => d,
             None => {
                 if shutdown.load(Ordering::SeqCst) {
                     return;
@@ -307,77 +372,201 @@ fn worker_loop(cfg: ServerConfig, wid: usize, queue: Arc<Batcher>,
                 continue;
             }
         };
-        let exec_start = Instant::now();
-        // smallest bucket that fits
-        let bsize = *bucket_sizes
-            .iter()
-            .find(|&&b| b >= batch.len())
-            .unwrap_or_else(|| bucket_sizes.last().unwrap());
-        // pack + repeat-pad
-        let mut flat = Vec::with_capacity(bsize * seq_len);
-        for r in &batch {
-            flat.extend_from_slice(&r.tokens);
-        }
-        for _ in batch.len()..bsize {
-            flat.extend_from_slice(&batch.last().unwrap().tokens);
-        }
-        let logits = match backend.run(&flat, bsize) {
-            Ok(l) => l,
-            Err(e) => {
-                metrics.errors.fetch_add(batch.len() as u64, Ordering::Relaxed);
-                eprintln!("[coordinator] worker {wid}: execute failed: {e}");
-                continue;
-            }
-        };
-        let exec_us = exec_start.elapsed().as_micros() as u64;
-        metrics.batches.fetch_add(1, Ordering::Relaxed);
-        metrics.batch_fill.record(
-            (batch.len() as f64 / bsize as f64 * 100.0) as u64);
-        let wm = &metrics.per_worker[wid];
-        wm.batches.fetch_add(1, Ordering::Relaxed);
-        wm.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
-        wm.exec_lat_us.record(exec_us);
-
-        // score on the token slices only (the closure must be Sync; the
-        // requests' response senders need not be)
-        let token_rows: Vec<&[i32]> =
-            batch.iter().map(|r| r.tokens.as_slice()).collect();
-        let nlls = score_pool.map(token_rows.len(), |row| {
-            let tokens = token_rows[row];
-            let mut nll = 0.0_f64;
-            for t in 0..seq_len - 1 {
-                let target = tokens[t + 1] as usize;
-                let off = (row * seq_len + t) * vocab;
-                let lrow = &logits[off..off + vocab];
-                let max = lrow.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b)) as f64;
-                let mut sum = 0.0_f64;
-                for &v in lrow {
-                    sum += ((v as f64) - max).exp();
-                }
-                nll -= (lrow[target] as f64) - max - sum.ln();
-            }
-            nll
-        });
-        for (req, &nll) in batch.iter().zip(&nlls) {
-            let total_us = req.enqueued.elapsed().as_micros() as u64;
-            let queue_us = total_us.saturating_sub(exec_us);
-            let _ = metrics.first_done_us.compare_exchange(
-                0, metrics.started.elapsed().as_micros() as u64,
-                Ordering::Relaxed, Ordering::Relaxed);
-            metrics.requests.fetch_add(1, Ordering::Relaxed);
-            metrics.queue_lat_us.record(queue_us);
-            metrics.exec_lat_us.record(exec_us);
-            metrics.total_lat_us.record(total_us);
-            let _ = req.respond.send(Response {
-                id: req.id,
-                mean_nll: nll / (seq_len - 1) as f64,
-                queue_us,
-                exec_us,
-                total_us,
-            });
+        deliver_shed(drained.expired, &metrics);
+        let mut batch = drained.batch;
+        // continuous batching: while this worker is hot, execute and
+        // then refill from whatever arrived during the execute —
+        // poll_batch has no accumulation barrier, so bursty arrivals
+        // raise batch fill instead of waiting out another max_wait
+        while !batch.is_empty() {
+            run_batch(&batch, wid, &backend, &bucket_sizes, seq_len,
+                      vocab, &score_pool, &metrics);
+            let d = queue.poll_batch(max_bucket);
+            deliver_shed(d.expired, &metrics);
+            batch = d.batch;
         }
         if shutdown.load(Ordering::SeqCst) && queue.is_empty() {
             return;
         }
+    }
+}
+
+/// Execute + score + respond for one dequeued batch.  Every request in
+/// `batch` receives exactly one [`Outcome`] before this returns.
+#[allow(clippy::too_many_arguments)]
+fn run_batch(batch: &[Request], wid: usize, backend: &ExecBackend,
+             bucket_sizes: &[usize], seq_len: usize, vocab: usize,
+             score_pool: &crate::par::Pool, metrics: &ServerMetrics) {
+    // the honest phase split (bugfix): queue wait ends at the dequeue
+    // instant; execute covers pack + backend.run; scoring is its own
+    // phase.  queue_us used to be computed as total − exec, silently
+    // folding the scoring time into "queue wait".
+    let dequeued = Instant::now();
+    // smallest bucket that fits
+    let bsize = *bucket_sizes
+        .iter()
+        .find(|&&b| b >= batch.len())
+        .unwrap_or_else(|| bucket_sizes.last().unwrap());
+    // pack + repeat-pad
+    let mut flat = Vec::with_capacity(bsize * seq_len);
+    for r in batch {
+        flat.extend_from_slice(&r.tokens);
+    }
+    for _ in batch.len()..bsize {
+        flat.extend_from_slice(&batch.last().unwrap().tokens);
+    }
+    let logits = match backend.run(&flat, bsize) {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("[coordinator] worker {wid}: execute failed: {e}");
+            deliver_failure(batch, &format!("execute failed: {e}"), metrics);
+            return;
+        }
+    };
+    let exec_us = dequeued.elapsed().as_micros() as u64;
+    metrics.batches.fetch_add(1, Ordering::Relaxed);
+    metrics.batch_fill.record(
+        (batch.len() as f64 / bsize as f64 * 100.0) as u64);
+    let wm = &metrics.per_worker[wid];
+    wm.batches.fetch_add(1, Ordering::Relaxed);
+    wm.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
+    wm.exec_lat_us.record(exec_us);
+
+    // score on the token slices only (the closure must be Sync; the
+    // requests' response senders need not be)
+    let score_start = Instant::now();
+    let token_rows: Vec<&[i32]> =
+        batch.iter().map(|r| r.tokens.as_slice()).collect();
+    let nlls = score_pool.map(token_rows.len(), |row| {
+        let tokens = token_rows[row];
+        let mut nll = 0.0_f64;
+        for t in 0..seq_len - 1 {
+            let target = tokens[t + 1] as usize;
+            let off = (row * seq_len + t) * vocab;
+            let lrow = &logits[off..off + vocab];
+            let max = lrow.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b)) as f64;
+            let mut sum = 0.0_f64;
+            for &v in lrow {
+                sum += ((v as f64) - max).exp();
+            }
+            nll -= (lrow[target] as f64) - max - sum.ln();
+        }
+        nll
+    });
+    let score_us = score_start.elapsed().as_micros() as u64;
+    metrics.score_lat_us.record(score_us);
+    for (req, &nll) in batch.iter().zip(&nlls) {
+        let queue_us = dequeued.saturating_duration_since(req.enqueued)
+            .as_micros() as u64;
+        let total_us = req.enqueued.elapsed().as_micros() as u64;
+        let _ = metrics.first_done_us.compare_exchange(
+            0, metrics.started.elapsed().as_micros() as u64,
+            Ordering::Relaxed, Ordering::Relaxed);
+        metrics.requests.fetch_add(1, Ordering::Relaxed);
+        metrics.queue_lat_us.record(queue_us);
+        metrics.exec_lat_us.record(exec_us);
+        metrics.total_lat_us.record(total_us);
+        let _ = req.respond.send(Outcome::Scored(Response {
+            id: req.id,
+            mean_nll: nll / (seq_len - 1) as f64,
+            queue_us,
+            exec_us,
+            score_us,
+            total_us,
+        }));
+    }
+}
+
+/// Deliver an explicit [`Outcome::Shed`] to every deadline-expired
+/// request the batcher pruned.
+fn deliver_shed(expired: Vec<Request>, metrics: &ServerMetrics) {
+    for req in expired {
+        metrics.shed.fetch_add(1, Ordering::Relaxed);
+        let waited_us = req.enqueued.elapsed().as_micros() as u64;
+        let _ = req.respond.send(Outcome::Shed { id: req.id, waited_us });
+    }
+}
+
+/// Bugfix (lost responses on execute failure): every request in a
+/// failed batch gets an explicit [`Outcome::Failed`] carrying the
+/// cause.  The old path dropped the senders, so clients saw a bare
+/// `RecvError` with no explanation.
+fn deliver_failure(batch: &[Request], error: &str, metrics: &ServerMetrics) {
+    metrics.errors.fetch_add(batch.len() as u64, Ordering::Relaxed);
+    for req in batch {
+        let _ = req.respond.send(Outcome::Failed {
+            id: req.id,
+            error: error.to_string(),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req_with_rx(id: u64) -> (Request, mpsc::Receiver<Outcome>) {
+        let (tx, rx) = mpsc::channel();
+        let req = Request {
+            id,
+            tokens: vec![0; 4],
+            enqueued: Instant::now(),
+            deadline: None,
+            respond: tx,
+        };
+        (req, rx)
+    }
+
+    #[test]
+    fn execute_failure_delivers_explicit_outcome_per_request() {
+        // regression: a failed backend.run used to drop the batch's
+        // senders silently — clients saw RecvError with no cause
+        let metrics = ServerMetrics::new();
+        let (reqs, rxs): (Vec<_>, Vec<_>) =
+            (0..3).map(req_with_rx).unzip();
+        deliver_failure(&reqs, "execute failed: PJRT plugin exploded",
+                        &metrics);
+        for (i, rx) in rxs.iter().enumerate() {
+            match rx.try_recv().expect("no outcome delivered") {
+                Outcome::Failed { id, error } => {
+                    assert_eq!(id, i as u64);
+                    assert!(error.contains("PJRT plugin exploded"),
+                            "cause missing from {error:?}");
+                }
+                other => panic!("expected Failed, got {other:?}"),
+            }
+        }
+        assert_eq!(metrics.errors.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn shed_delivers_explicit_outcome_per_request() {
+        let metrics = ServerMetrics::new();
+        let (reqs, rxs): (Vec<_>, Vec<_>) =
+            (0..2).map(req_with_rx).unzip();
+        deliver_shed(reqs, &metrics);
+        for (i, rx) in rxs.iter().enumerate() {
+            match rx.try_recv().expect("no outcome delivered") {
+                Outcome::Shed { id, .. } => assert_eq!(id, i as u64),
+                other => panic!("expected Shed, got {other:?}"),
+            }
+        }
+        assert_eq!(metrics.shed.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn outcome_scored_accessor() {
+        let ok = Outcome::Scored(Response {
+            id: 1, mean_nll: 2.0, queue_us: 1, exec_us: 2, score_us: 3,
+            total_us: 6,
+        });
+        assert_eq!(ok.scored().unwrap().id, 1);
+        let shed = Outcome::Shed { id: 2, waited_us: 10 };
+        assert_eq!(shed.id(), 2);
+        let e = shed.scored().unwrap_err().to_string();
+        assert!(e.contains("shed"), "{e}");
+        let failed = Outcome::Failed { id: 3, error: "boom".into() };
+        let e = failed.scored().unwrap_err().to_string();
+        assert!(e.contains("boom"), "{e}");
     }
 }

@@ -1,0 +1,562 @@
+//! Synthetic-traffic soak harness for the serving layer.
+//!
+//! Two modes share one workload model:
+//!
+//! * **Trace generation** — open-loop Poisson arrivals with alternating
+//!   steady/burst phases and an adversarial tight-deadline request
+//!   class, all drawn from the crate's seeded [`Rng`].  The trace is a
+//!   pure function of the config (worker count does not influence it),
+//!   so a seed reproduces the exact same offered load anywhere.
+//!
+//! * **Virtual-time simulation** ([`simulate`]) — a single-threaded
+//!   discrete-event model of the admission queue, deadline shedding and
+//!   continuous batching, advancing a µs clock instead of waiting on
+//!   real time.  This is the determinism contract: the report —
+//!   per-request served/shed/rejected decisions included — is
+//!   **byte-identical** for a given (seed, config) on any host, at any
+//!   host thread count.  Regressions caught by the trend gate therefore
+//!   reproduce exactly.
+//!
+//! * **Live mode** ([`run_live`]) — the same trace replayed in real
+//!   time against the *real* [`Batcher`] with real worker threads and a
+//!   synthetic service function, for wall-clock throughput/tail-latency
+//!   numbers.  Wall-clock runs are not byte-deterministic (the OS
+//!   scheduler is not); the simulation is the reproducibility anchor,
+//!   live mode is the measurement.
+//!
+//! `lrc soak` drives both; `bench_soak` records the results into the
+//! commit-stamped bench JSON the `bench-trend` CI gate consumes.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::rng::Rng;
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::{Outcome, Request, Response};
+
+/// Workload + service-model parameters for one soak run.
+#[derive(Clone, Debug)]
+pub struct SoakConfig {
+    pub seed: u64,
+    /// total requests in the trace
+    pub n_requests: usize,
+    /// steady-state offered load (requests/s)
+    pub rate_rps: f64,
+    /// arrival-rate multiplier inside burst windows (1.0 = no bursts)
+    pub burst_mult: f64,
+    /// burst phase period: each period opens with `burst_len_us` of
+    /// burst-rate arrivals, then steady-rate for the remainder
+    pub burst_every_us: u64,
+    pub burst_len_us: u64,
+    /// fraction of requests in the adversarial class: deadlines so
+    /// tight they are expected to shed under any queueing
+    pub adversarial_frac: f64,
+    /// latency budget for normal requests (None = never shed)
+    pub deadline_us: Option<u64>,
+    /// latency budget for adversarial requests
+    pub tight_deadline_us: u64,
+    /// workers: virtual servers in the simulation, real threads live
+    pub workers: usize,
+    pub max_batch: usize,
+    /// admission-queue bound; arrivals beyond it are rejected
+    pub max_queue: usize,
+    /// synthetic service time for a batch of n rows:
+    /// `service_base_us + n * service_per_row_us`
+    pub service_base_us: u64,
+    pub service_per_row_us: u64,
+}
+
+impl Default for SoakConfig {
+    fn default() -> Self {
+        SoakConfig {
+            seed: 42,
+            n_requests: 4000,
+            rate_rps: 2000.0,
+            burst_mult: 6.0,
+            burst_every_us: 250_000,
+            burst_len_us: 50_000,
+            adversarial_frac: 0.05,
+            deadline_us: Some(50_000),
+            tight_deadline_us: 300,
+            workers: 4,
+            max_batch: 8,
+            max_queue: 64,
+            service_base_us: 400,
+            service_per_row_us: 150,
+        }
+    }
+}
+
+impl SoakConfig {
+    /// Small preset for CI smoke runs and tests (~0.1 s of virtual
+    /// time; live replay finishes well under a second).
+    pub fn fast() -> Self {
+        SoakConfig {
+            n_requests: 400,
+            burst_every_us: 50_000,
+            burst_len_us: 10_000,
+            ..Self::default()
+        }
+    }
+}
+
+/// One generated request: arrival instant and latency budget, both in
+/// virtual µs from trace start.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Arrival {
+    pub id: u64,
+    pub at_us: u64,
+    /// relative deadline (budget); absolute expiry is `at_us + d`
+    pub deadline_us: Option<u64>,
+    pub adversarial: bool,
+}
+
+/// Generate the arrival trace.  Pure function of (seed, workload
+/// fields); notably independent of `workers`, `max_batch`, `max_queue`
+/// and the service model, so capacity experiments replay the identical
+/// offered load.
+pub fn gen_trace(cfg: &SoakConfig) -> Vec<Arrival> {
+    let mut rng = Rng::new(cfg.seed);
+    let mut t_us = 0.0_f64;
+    let mut out = Vec::with_capacity(cfg.n_requests);
+    for id in 0..cfg.n_requests as u64 {
+        let in_burst = cfg.burst_every_us > 0
+            && (t_us as u64) % cfg.burst_every_us < cfg.burst_len_us;
+        let rate = if in_burst {
+            cfg.rate_rps * cfg.burst_mult
+        } else {
+            cfg.rate_rps
+        };
+        // exponential inter-arrival: -ln(1-U)/λ, in µs
+        let u = rng.uniform();
+        t_us += -(1.0 - u).ln() / rate * 1e6;
+        let adversarial = rng.uniform() < cfg.adversarial_frac;
+        let deadline_us = if adversarial {
+            Some(cfg.tight_deadline_us)
+        } else {
+            cfg.deadline_us
+        };
+        out.push(Arrival { id, at_us: t_us as u64, deadline_us, adversarial });
+    }
+    out
+}
+
+/// Per-request decision in canonical id order: `S` served, `X` shed
+/// (deadline expired in queue), `R` rejected at admission.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Decision {
+    Served,
+    Shed,
+    Rejected,
+}
+
+impl Decision {
+    fn ch(self) -> char {
+        match self {
+            Decision::Served => 'S',
+            Decision::Shed => 'X',
+            Decision::Rejected => 'R',
+        }
+    }
+}
+
+/// Simulation output.  `render()` is the byte-identity contract.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SoakReport {
+    pub served: u64,
+    pub shed: u64,
+    pub rejected: u64,
+    /// virtual time the last batch completed
+    pub makespan_us: u64,
+    /// total (queue + service) latency percentiles over served requests
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    /// integer mean queue wait of served requests (µs)
+    pub mean_queue_us: u64,
+    /// decision per request, indexed by id ("SXR..." string)
+    pub decisions: String,
+}
+
+impl SoakReport {
+    /// Canonical report text — the determinism test compares this
+    /// byte-for-byte across runs.
+    pub fn render(&self, cfg: &SoakConfig) -> String {
+        format!(
+            "soak seed={} n={} workers={} rate={:.0}rps burst=x{:.0} \
+             queue={} batch={}\n\
+             served={} shed={} rejected={}\n\
+             latency_us: p50={} p95={} p99={} mean_queue={}\n\
+             makespan_us={}\n\
+             decisions={:016x}\n",
+            cfg.seed, cfg.n_requests, cfg.workers, cfg.rate_rps,
+            cfg.burst_mult, cfg.max_queue, cfg.max_batch,
+            self.served, self.shed, self.rejected,
+            self.p50_us, self.p95_us, self.p99_us, self.mean_queue_us,
+            self.makespan_us, fnv1a(self.decisions.as_bytes()))
+    }
+}
+
+/// FNV-1a 64-bit — stable digest for trace/decision byte strings.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Exact percentile of a sorted sample (nearest-rank).
+pub fn percentile_us(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Virtual-time discrete-event simulation of the serving layer:
+/// bounded admission, dequeue-time deadline shedding, greedy
+/// continuous batching (a freed worker immediately takes whatever is
+/// queued, up to `max_batch` — the no-barrier refill the real
+/// `poll_batch` path implements), service time linear in batch rows.
+///
+/// Single-threaded and integer-clocked, so the result is reproducible
+/// byte-for-byte from (seed, config).  Deterministic tie rules:
+/// arrivals at or before a batch's start instant are admitted before
+/// the batch forms; the free worker with the lowest (free_at, index)
+/// takes the batch.
+pub fn simulate(cfg: &SoakConfig, trace: &[Arrival]) -> SoakReport {
+    let n = trace.len();
+    let workers = cfg.workers.max(1);
+    let max_batch = cfg.max_batch.max(1);
+    let mut decisions = vec![Decision::Rejected; n];
+    let mut queue: VecDeque<usize> = VecDeque::new();
+    let mut free_at = vec![0u64; workers];
+    let mut next_arrival = 0usize; // trace cursor
+    let mut clock = 0u64;
+    let mut makespan = 0u64;
+    let mut total_lat: Vec<u64> = Vec::new();
+    let mut queue_wait_sum = 0u64;
+    let mut shed = 0u64;
+    let mut rejected = 0u64;
+
+    let expiry = |a: &Arrival| a.deadline_us.map(|d| a.at_us + d);
+    let admit = |i: usize, queue: &mut VecDeque<usize>,
+                     decisions: &mut [Decision], rejected: &mut u64| {
+        if queue.len() >= cfg.max_queue {
+            decisions[i] = Decision::Rejected;
+            *rejected += 1;
+        } else {
+            queue.push_back(i);
+        }
+    };
+
+    loop {
+        if queue.is_empty() {
+            if next_arrival >= n {
+                break;
+            }
+            // idle: jump the clock to the next arrival
+            clock = clock.max(trace[next_arrival].at_us);
+            admit(next_arrival, &mut queue, &mut decisions, &mut rejected);
+            next_arrival += 1;
+            continue;
+        }
+        // earliest-free worker takes the next batch
+        let (wid, &w_free) = free_at
+            .iter()
+            .enumerate()
+            .min_by_key(|&(w, &t)| (t, w))
+            .expect("workers >= 1");
+        let start = w_free.max(clock);
+        // tie rule: admit everything that arrived by the start instant
+        while next_arrival < n && trace[next_arrival].at_us <= start {
+            admit(next_arrival, &mut queue, &mut decisions, &mut rejected);
+            next_arrival += 1;
+        }
+        // form the batch, shedding requests already past their deadline
+        let mut batch: Vec<usize> = Vec::with_capacity(max_batch);
+        while batch.len() < max_batch {
+            let i = match queue.pop_front() {
+                Some(i) => i,
+                None => break,
+            };
+            match expiry(&trace[i]) {
+                Some(e) if e <= start => {
+                    decisions[i] = Decision::Shed;
+                    shed += 1;
+                }
+                _ => batch.push(i),
+            }
+        }
+        clock = start;
+        if batch.is_empty() {
+            continue; // everything dequeued this round expired
+        }
+        let service =
+            cfg.service_base_us + batch.len() as u64 * cfg.service_per_row_us;
+        let done = start + service;
+        free_at[wid] = done;
+        makespan = makespan.max(done);
+        for i in batch {
+            decisions[i] = Decision::Served;
+            queue_wait_sum += start - trace[i].at_us;
+            total_lat.push(done - trace[i].at_us);
+        }
+    }
+
+    total_lat.sort_unstable();
+    let served = total_lat.len() as u64;
+    SoakReport {
+        served,
+        shed,
+        rejected,
+        makespan_us: makespan,
+        p50_us: percentile_us(&total_lat, 50.0),
+        p95_us: percentile_us(&total_lat, 95.0),
+        p99_us: percentile_us(&total_lat, 99.0),
+        mean_queue_us: if served == 0 { 0 } else { queue_wait_sum / served },
+        decisions: decisions.iter().map(|d| d.ch()).collect(),
+    }
+}
+
+/// Wall-clock results from a live replay against the real [`Batcher`].
+#[derive(Clone, Debug)]
+pub struct LiveStats {
+    pub served: u64,
+    pub shed: u64,
+    pub rejected: u64,
+    pub failed: u64,
+    pub wall_ms: f64,
+    pub throughput_rps: f64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+}
+
+/// Replay the trace in real time against a real [`Batcher`] with
+/// `cfg.workers` OS threads and a synthetic (sleep-based) service
+/// function — the admission, shedding and continuous-refill code under
+/// test is the production code, only the model execute is synthetic.
+///
+/// Every admitted request receives exactly one [`Outcome`]; the
+/// function panics if any response channel is dropped without one
+/// (that is precisely the lost-response bug class this PR fixes).
+pub fn run_live(cfg: &SoakConfig) -> LiveStats {
+    let trace = gen_trace(cfg);
+    let policy = BatchPolicy {
+        max_batch: cfg.max_batch.max(1),
+        max_wait: Duration::from_millis(2),
+        max_queue: cfg.max_queue,
+        deadline: None, // deadlines are stamped per-request from the trace
+    };
+    let queue = Arc::new(Batcher::new(policy));
+    let max_batch = cfg.max_batch.max(1);
+    let base = cfg.service_base_us;
+    let per_row = cfg.service_per_row_us;
+
+    let mut workers = Vec::new();
+    for _ in 0..cfg.workers.max(1) {
+        let q = queue.clone();
+        workers.push(std::thread::spawn(move || {
+            let deliver = |req: Request, served: bool| {
+                let waited_us = req.enqueued.elapsed().as_micros() as u64;
+                let out = if served {
+                    Outcome::Scored(Response {
+                        id: req.id,
+                        mean_nll: 0.0,
+                        queue_us: waited_us,
+                        exec_us: 0,
+                        score_us: 0,
+                        total_us: req.enqueued.elapsed().as_micros() as u64,
+                    })
+                } else {
+                    Outcome::Shed { id: req.id, waited_us }
+                };
+                let _ = req.respond.send(out);
+            };
+            // same shape as the coordinator worker loop: block when
+            // idle, then continuous non-blocking refills while hot
+            while let Some(drained) = q.next_batch(max_batch) {
+                drained.expired.into_iter().for_each(|r| deliver(r, false));
+                let mut batch = drained.batch;
+                while !batch.is_empty() {
+                    std::thread::sleep(Duration::from_micros(
+                        base + batch.len() as u64 * per_row));
+                    batch.into_iter().for_each(|r| deliver(r, true));
+                    let d = q.poll_batch(max_batch);
+                    d.expired.into_iter().for_each(|r| deliver(r, false));
+                    batch = d.batch;
+                }
+            }
+        }));
+    }
+
+    // open-loop producer: arrivals fire at their trace instants whether
+    // or not the server keeps up (that is what makes overload real)
+    let t0 = Instant::now();
+    let mut rxs: Vec<mpsc::Receiver<Outcome>> = Vec::new();
+    let mut rejected = 0u64;
+    for a in &trace {
+        let due = t0 + Duration::from_micros(a.at_us);
+        let now = Instant::now();
+        if due > now {
+            std::thread::sleep(due - now);
+        }
+        let (tx, rx) = mpsc::channel();
+        let enqueued = Instant::now();
+        let req = Request {
+            id: a.id,
+            tokens: Vec::new(),
+            enqueued,
+            deadline: a.deadline_us
+                .map(|d| enqueued + Duration::from_micros(d)),
+            respond: tx,
+        };
+        match queue.push(req) {
+            Ok(()) => rxs.push(rx),
+            Err(_) => rejected += 1,
+        }
+    }
+    queue.close();
+
+    let (mut served, mut shed, mut failed) = (0u64, 0u64, 0u64);
+    let mut lats: Vec<u64> = Vec::new();
+    for rx in rxs {
+        match rx.recv_timeout(Duration::from_secs(30))
+            .expect("admitted request lost its outcome")
+        {
+            Outcome::Scored(r) => {
+                served += 1;
+                lats.push(r.total_us);
+            }
+            Outcome::Shed { .. } => shed += 1,
+            Outcome::Failed { .. } => failed += 1,
+        }
+    }
+    for w in workers {
+        let _ = w.join();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    lats.sort_unstable();
+    LiveStats {
+        served,
+        shed,
+        rejected,
+        failed,
+        wall_ms: wall * 1e3,
+        throughput_rps: served as f64 / wall.max(1e-9),
+        p50_us: percentile_us(&lats, 50.0),
+        p95_us: percentile_us(&lats, 95.0),
+        p99_us: percentile_us(&lats, 99.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_deterministic_and_worker_independent() {
+        let cfg = SoakConfig::fast();
+        let a = gen_trace(&cfg);
+        let b = gen_trace(&cfg);
+        assert_eq!(a, b);
+        // the trace is offered load — capacity knobs must not move it
+        let more_capacity = SoakConfig {
+            workers: 16,
+            max_batch: 32,
+            max_queue: 9999,
+            ..cfg
+        };
+        assert_eq!(a, gen_trace(&more_capacity));
+        // arrivals are time-ordered with unique sequential ids
+        for (i, arr) in a.iter().enumerate() {
+            assert_eq!(arr.id, i as u64);
+            if i > 0 {
+                assert!(arr.at_us >= a[i - 1].at_us);
+            }
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let cfg = SoakConfig::fast();
+        let other = SoakConfig { seed: 43, ..cfg.clone() };
+        assert_ne!(gen_trace(&cfg), gen_trace(&other));
+    }
+
+    #[test]
+    fn sim_is_byte_identical_and_conserves_requests() {
+        let cfg = SoakConfig::fast();
+        let trace = gen_trace(&cfg);
+        let r1 = simulate(&cfg, &trace);
+        let r2 = simulate(&cfg, &trace);
+        assert_eq!(r1, r2);
+        assert_eq!(r1.render(&cfg), r2.render(&cfg));
+        assert_eq!(r1.served + r1.shed + r1.rejected,
+                   cfg.n_requests as u64);
+        assert_eq!(r1.decisions.len(), cfg.n_requests);
+        assert!(r1.p50_us <= r1.p95_us && r1.p95_us <= r1.p99_us);
+    }
+
+    #[test]
+    fn adversarial_class_sheds() {
+        // tight deadlines under bursty load must produce explicit sheds
+        let cfg = SoakConfig {
+            adversarial_frac: 0.3,
+            tight_deadline_us: 1,
+            ..SoakConfig::fast()
+        };
+        let trace = gen_trace(&cfg);
+        let report = simulate(&cfg, &trace);
+        assert!(report.shed > 0, "expected sheds, got {report:?}");
+        // every shed decision is visible, none silently dropped
+        let shed_marks =
+            report.decisions.chars().filter(|&c| c == 'X').count() as u64;
+        assert_eq!(shed_marks, report.shed);
+    }
+
+    #[test]
+    fn bounded_queue_rejects_under_overload() {
+        let cfg = SoakConfig {
+            max_queue: 2,
+            workers: 1,
+            service_base_us: 10_000,
+            deadline_us: None,
+            adversarial_frac: 0.0,
+            ..SoakConfig::fast()
+        };
+        let trace = gen_trace(&cfg);
+        let report = simulate(&cfg, &trace);
+        assert!(report.rejected > 0, "expected rejections, got {report:?}");
+        assert_eq!(report.served + report.shed + report.rejected,
+                   cfg.n_requests as u64);
+    }
+
+    #[test]
+    fn more_workers_serve_no_fewer() {
+        let cfg1 = SoakConfig { workers: 1, ..SoakConfig::fast() };
+        let cfg4 = SoakConfig { workers: 4, ..SoakConfig::fast() };
+        let trace = gen_trace(&cfg1);
+        let r1 = simulate(&cfg1, &trace);
+        let r4 = simulate(&cfg4, &trace);
+        assert!(r4.served >= r1.served,
+                "4 workers served {} < 1 worker's {}", r4.served, r1.served);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile_us(&xs, 50.0), 50);
+        assert_eq!(percentile_us(&xs, 99.0), 99);
+        assert_eq!(percentile_us(&xs, 100.0), 100);
+        assert_eq!(percentile_us(&[], 50.0), 0);
+        assert_eq!(percentile_us(&[7], 99.0), 7);
+    }
+}

@@ -63,9 +63,22 @@
 //!                     any thread count), keyed JSON fragments for
 //!                     resume, built-in sanity assertions; runs on real
 //!                     artifacts or an engine-free synthetic model
-//! * [`coordinator`] — serving engine: dynamic batcher, N engine
-//!                     workers, per-worker metrics; falls back to the
-//!                     native fused path when no PJRT plugin loads
+//! * [`coordinator`] — serving engine: bounded admission queue with
+//!                     typed backpressure (`PushError::Full`),
+//!                     deadline-aware load shedding (every request gets
+//!                     exactly one `Outcome` — scored, shed or failed;
+//!                     response channels are never silently dropped),
+//!                     **continuous batching** (hot workers refill the
+//!                     in-flight batch via `poll_batch` instead of
+//!                     re-arming the max-wait barrier), N engine
+//!                     workers, per-worker metrics with honest
+//!                     queue/exec/score phase attribution; falls back
+//!                     to the native fused path when no PJRT plugin
+//!                     loads.  `coordinator::soak` is the synthetic
+//!                     traffic harness (`lrc soak`): seeded Poisson /
+//!                     burst / adversarial-deadline trace, a
+//!                     byte-deterministic virtual-time simulation, and
+//!                     a wall-clock replay against the real batcher
 //! * [`bench`]       — measurement harness used by `cargo bench` targets
 //!                     + the `bench-trend` regression comparison the CI
 //!                     gate runs over bench JSON artifacts

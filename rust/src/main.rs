@@ -9,6 +9,9 @@
 //!   bench-trend --current J       compare a bench JSON against baseline
 //!                                 artifacts (the CI regression gate)
 //!   serve --model M               serving demo with the dynamic batcher
+//!   soak [--fast] [--live]        deterministic synthetic-traffic soak:
+//!                                 Poisson arrivals, bursts, adversarial
+//!                                 deadlines, admission + shedding
 //!
 //! Global flags: `--threads N` sizes the compute pool (else the
 //! `LRC_THREADS` env var, else every core); `--simd B` pins the GEMM
@@ -25,7 +28,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
-use lrc::coordinator::{BatchPolicy, ServerConfig, ServerHandle};
+use lrc::coordinator::{BatchPolicy, Outcome, ServerConfig, ServerHandle};
 use lrc::data::Corpus;
 use lrc::experiments::{self, EvalBudget};
 use lrc::pipeline::Method;
@@ -75,6 +78,7 @@ fn main() {
         "sweep" => cmd_sweep(&args),
         "bench-trend" => cmd_bench_trend(&args),
         "serve" => cmd_serve(&args),
+        "soak" => cmd_soak(&args),
         _ => {
             print_help();
             Ok(())
@@ -127,7 +131,30 @@ fn print_help() {
          \x20        baseline artifacts yet it passes with a notice.\n\
          serve    --model small [--prefix fwd_w4a4_r10] [--quant <dir>]\n\
          \x20        [--requests 64] [--max-wait-ms 5] [--workers 1]\n\
-         \x20        [--native]\n\
+         \x20        [--native] [--deadline-ms D] [--max-queue 4096]\n\
+         \x20        Admission is bounded: submissions beyond --max-queue\n\
+         \x20        are rejected with a typed backpressure error, and a\n\
+         \x20        request still queued past its --deadline-ms budget is\n\
+         \x20        shed with an explicit Shed outcome (0 = no deadline).\n\
+         \x20        Workers batch continuously — the in-flight batch\n\
+         \x20        refills as rows finish instead of re-arming the\n\
+         \x20        max-wait barrier between batches.\n\
+         soak     [--fast] [--seed 42] [--requests 4000] [--rate 2000]\n\
+         \x20        [--burst-mult 6] [--adversarial-pct 5]\n\
+         \x20        [--deadline-ms 50] [--workers 4] [--max-batch 8]\n\
+         \x20        [--max-queue 64] [--live] [--out <report.txt>]\n\
+         \x20        Deterministic synthetic-traffic soak of the serving\n\
+         \x20        layer: open-loop Poisson arrivals with burst phases\n\
+         \x20        and an adversarial tight-deadline class, all drawn\n\
+         \x20        from the seeded RNG.  The canonical report comes\n\
+         \x20        from a single-threaded virtual-time simulation of\n\
+         \x20        admission/shedding/continuous batching and is\n\
+         \x20        byte-identical for a (seed, config) on any host —\n\
+         \x20        --out writes it for byte-comparison in CI.  --live\n\
+         \x20        additionally replays the same trace in real time\n\
+         \x20        against the real Batcher with real worker threads\n\
+         \x20        (wall-clock throughput + p50/p95/p99; every admitted\n\
+         \x20        request must receive exactly one outcome).\n\
          \n\
          global flags:\n\
          \x20 --threads N   size of the persistent compute pool (parked\n\
@@ -370,7 +397,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Recursively collect `bench_par_*.json` files under `dir`.
+/// Recursively collect `bench_*.json` files under `dir` (covers
+/// `bench_par_*` and `bench_soak_*` baselines alike — the trend gate
+/// matches entries by (section, name), so mixed files compose).
 fn collect_bench_jsons(dir: &std::path::Path,
                        out: &mut Vec<std::path::PathBuf>) {
     if let Ok(rd) = std::fs::read_dir(dir) {
@@ -379,7 +408,7 @@ fn collect_bench_jsons(dir: &std::path::Path,
             if p.is_dir() {
                 collect_bench_jsons(&p, out);
             } else if p.file_name().and_then(|n| n.to_str())
-                .map(|n| n.starts_with("bench_par_") && n.ends_with(".json"))
+                .map(|n| n.starts_with("bench_") && n.ends_with(".json"))
                 .unwrap_or(false)
             {
                 out.push(p);
@@ -449,7 +478,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         policy: BatchPolicy {
             max_batch: args.get_usize("max-batch", 8),
             max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 5) as u64),
-            max_queue: 4096,
+            max_queue: args.get_usize("max-queue", 4096),
+            // 0 (the default) = no deadline: demo requests never shed
+            deadline: match args.get_usize("deadline-ms", 0) {
+                0 => None,
+                ms => Some(Duration::from_millis(ms as u64)),
+            },
         },
         workers: args.get_usize("workers", 1),
         native: args.has("native"),
@@ -467,13 +501,89 @@ fn cmd_serve(args: &Args) -> Result<()> {
     for s in seqs.iter().cycle().take(n_requests) {
         pending.push(handle.submit(s.clone())?);
     }
-    let mut mean_nll = 0.0;
+    let (mut mean_nll, mut scored, mut shed, mut failed) = (0.0, 0u64, 0u64, 0u64);
     for rx in pending {
-        let resp = rx.recv()?;
-        mean_nll += resp.mean_nll / n_requests as f64;
+        match rx.recv()? {
+            Outcome::Scored(r) => {
+                scored += 1;
+                mean_nll += r.mean_nll;
+            }
+            Outcome::Shed { .. } => shed += 1,
+            Outcome::Failed { id, error } => {
+                failed += 1;
+                eprintln!("request {id} failed: {error}");
+            }
+        }
     }
-    println!("mean per-seq NLL: {mean_nll:.4} (ppl {:.2})", mean_nll.exp());
+    if scored > 0 {
+        mean_nll /= scored as f64;
+        println!("mean per-seq NLL: {mean_nll:.4} (ppl {:.2})", mean_nll.exp());
+    }
+    if shed + failed > 0 {
+        println!("outcomes: scored={scored} shed={shed} failed={failed}");
+    }
     let snap = handle.shutdown();
     println!("{}", snap.render());
+    Ok(())
+}
+
+fn cmd_soak(args: &Args) -> Result<()> {
+    use lrc::coordinator::soak::{self, SoakConfig};
+    let mut cfg = if args.has("fast") {
+        SoakConfig::fast()
+    } else {
+        SoakConfig::default()
+    };
+    cfg.seed = args.get_usize("seed", cfg.seed as usize) as u64;
+    cfg.n_requests = args.get_usize("requests", cfg.n_requests);
+    cfg.rate_rps = args.get_f64("rate", cfg.rate_rps);
+    cfg.burst_mult = args.get_f64("burst-mult", cfg.burst_mult);
+    cfg.adversarial_frac =
+        args.get_f64("adversarial-pct", cfg.adversarial_frac * 100.0) / 100.0;
+    if let Some(ms) = args.get("deadline-ms") {
+        let ms: f64 = ms.parse()
+            .map_err(|_| anyhow!("--deadline-ms expects a number, got {ms:?}"))?;
+        cfg.deadline_us = if ms <= 0.0 {
+            None
+        } else {
+            Some((ms * 1000.0) as u64)
+        };
+    }
+    cfg.workers = args.get_usize("workers", cfg.workers);
+    cfg.max_batch = args.get_usize("max-batch", cfg.max_batch);
+    cfg.max_queue = args.get_usize("max-queue", cfg.max_queue);
+
+    // the canonical, byte-reproducible part: trace + virtual-time sim
+    let trace = soak::gen_trace(&cfg);
+    let report = soak::simulate(&cfg, &trace);
+    let text = report.render(&cfg);
+    print!("{text}");
+    if report.served + report.shed + report.rejected != cfg.n_requests as u64 {
+        return Err(anyhow!(
+            "soak conservation violated: served {} + shed {} + rejected {} \
+             != {} requests",
+            report.served, report.shed, report.rejected, cfg.n_requests));
+    }
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, &text)?;
+        println!("report written to {path}");
+    }
+
+    // optional wall-clock replay against the real Batcher
+    if args.has("live") {
+        let live = soak::run_live(&cfg);
+        println!(
+            "live: served={} shed={} rejected={} failed={} wall={:.1}ms \
+             throughput={:.0}rps p50={}us p95={}us p99={}us",
+            live.served, live.shed, live.rejected, live.failed, live.wall_ms,
+            live.throughput_rps, live.p50_us, live.p95_us, live.p99_us);
+        if live.served + live.shed + live.rejected + live.failed
+            != cfg.n_requests as u64
+        {
+            return Err(anyhow!("live soak lost outcomes: {} + {} + {} + {} \
+                                != {}", live.served, live.shed, live.rejected,
+                               live.failed, cfg.n_requests));
+        }
+    }
     Ok(())
 }

@@ -132,6 +132,7 @@ fn coordinator_serves_fp_graph() {
             max_batch: 8,
             max_wait: Duration::from_millis(2),
             max_queue: 256,
+            deadline: None,
         },
         workers: 2,
         native: false,
@@ -144,7 +145,8 @@ fn coordinator_serves_fp_graph() {
     }
     let mut ids = Vec::new();
     for rx in rxs {
-        let resp = rx.recv().unwrap();
+        // no deadline configured, so every outcome must be Scored
+        let resp = rx.recv().unwrap().scored().unwrap();
         assert!(resp.mean_nll.is_finite() && resp.mean_nll > 0.0);
         ids.push(resp.id);
     }
