@@ -1,0 +1,306 @@
+//! Minimal Rust source scanner for the `analyze` lints.
+//!
+//! This is not a parser: the lints only need (a) the identifier/punct
+//! token stream with comments and string literals stripped, and (b) the
+//! comment text attached to each source line (for `// SAFETY:` and
+//! `// analyze: allow(...)` lookups).  The scanner therefore handles
+//! exactly the lexical features that can hide a false match: line and
+//! (nested) block comments, string / raw-string / byte-string / char
+//! literals, and lifetimes vs. char literals.
+
+use std::collections::BTreeMap;
+
+/// One token: an identifier, a number, `::`, or a single punct char.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Tok {
+    pub text: String,
+    pub line: usize,
+}
+
+/// Scan result: tokens plus per-line comment text (all comments that
+/// start on or span a line, concatenated).
+#[derive(Debug, Default)]
+pub struct Scan {
+    pub toks: Vec<Tok>,
+    pub comments: BTreeMap<usize, String>,
+}
+
+impl Scan {
+    pub fn comment_on(&self, line: usize) -> Option<&str> {
+        self.comments.get(&line).map(|s| s.as_str())
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+fn is_ident_cont(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+pub fn scan(src: &str) -> Scan {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut out = Scan::default();
+    let mut i = 0usize;
+    let mut line = 1usize;
+
+    fn note(out: &mut Scan, line: usize, text: &str) {
+        let e = out.comments.entry(line).or_default();
+        e.push_str(text);
+        e.push(' ');
+    }
+
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // line comment (also covers /// and //! doc comments)
+        if c == '/' && i + 1 < n && cs[i + 1] == '/' {
+            let start = i;
+            while i < n && cs[i] != '\n' {
+                i += 1;
+            }
+            let text: String = cs[start..i].iter().collect();
+            note(&mut out, line, &text);
+            continue;
+        }
+        // block comment — Rust block comments nest
+        if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+            let mut depth = 1usize;
+            i += 2;
+            let mut cur = String::from("/*");
+            while i < n && depth > 0 {
+                if cs[i] == '/' && i + 1 < n && cs[i + 1] == '*' {
+                    depth += 1;
+                    cur.push_str("/*");
+                    i += 2;
+                } else if cs[i] == '*' && i + 1 < n && cs[i + 1] == '/' {
+                    depth -= 1;
+                    cur.push_str("*/");
+                    i += 2;
+                } else {
+                    if cs[i] == '\n' {
+                        note(&mut out, line, &cur);
+                        cur.clear();
+                        line += 1;
+                    } else {
+                        cur.push(cs[i]);
+                    }
+                    i += 1;
+                }
+            }
+            if !cur.is_empty() {
+                note(&mut out, line, &cur);
+            }
+            continue;
+        }
+        // raw strings r"..." / r#"..."# (and br variants); must be
+        // checked before the identifier branch eats the leading r/b
+        if (c == 'r' || c == 'b') && raw_string_lookahead(&cs, i).is_some() {
+            let (hashes, body_start) = raw_string_lookahead(&cs, i).unwrap();
+            i = body_start;
+            'raw: while i < n {
+                if cs[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                    continue;
+                }
+                if cs[i] == '"' {
+                    let mut k = 0usize;
+                    while k < hashes && i + 1 + k < n && cs[i + 1 + k] == '#' {
+                        k += 1;
+                    }
+                    if k == hashes {
+                        i += 1 + hashes;
+                        break 'raw;
+                    }
+                }
+                i += 1;
+            }
+            continue;
+        }
+        // byte string b"..." / byte char b'.'
+        if c == 'b' && i + 1 < n && (cs[i + 1] == '"' || cs[i + 1] == '\'') {
+            i += 1; // fall through to the "/' branches below via cs[i]
+            if cs[i] == '"' {
+                i = consume_string(&cs, i, &mut line);
+            } else {
+                i = consume_char_or_lifetime(&cs, i);
+            }
+            continue;
+        }
+        if c == '"' {
+            i = consume_string(&cs, i, &mut line);
+            continue;
+        }
+        if c == '\'' {
+            i = consume_char_or_lifetime(&cs, i);
+            continue;
+        }
+        if is_ident_start(c) {
+            let start = i;
+            while i < n && is_ident_cont(cs[i]) {
+                i += 1;
+            }
+            out.toks.push(Tok { text: cs[start..i].iter().collect(), line });
+            continue;
+        }
+        if c.is_ascii_digit() {
+            // numbers (incl. float suffixes); stop before `..` ranges
+            let start = i;
+            while i < n && (is_ident_cont(cs[i]) || cs[i] == '.') {
+                if cs[i] == '.' && i + 1 < n && cs[i + 1] == '.' {
+                    break;
+                }
+                i += 1;
+            }
+            out.toks.push(Tok { text: cs[start..i].iter().collect(), line });
+            continue;
+        }
+        if c == ':' && i + 1 < n && cs[i + 1] == ':' {
+            out.toks.push(Tok { text: "::".into(), line });
+            i += 2;
+            continue;
+        }
+        out.toks.push(Tok { text: c.to_string(), line });
+        i += 1;
+    }
+    out
+}
+
+/// If `cs[i]` starts a raw (byte) string, return (hash count, index of
+/// the first body char).
+fn raw_string_lookahead(cs: &[char], i: usize) -> Option<(usize, usize)> {
+    let n = cs.len();
+    let mut j = i;
+    if cs[j] == 'b' {
+        j += 1;
+    }
+    if j >= n || cs[j] != 'r' {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while j < n && cs[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < n && cs[j] == '"' {
+        Some((hashes, j + 1))
+    } else {
+        None
+    }
+}
+
+/// Consume a normal string literal starting at `cs[i] == '"'`; returns
+/// the index just past the closing quote.
+fn consume_string(cs: &[char], mut i: usize, line: &mut usize) -> usize {
+    let n = cs.len();
+    i += 1;
+    while i < n {
+        match cs[i] {
+            // an escape may be a `\<newline>` line continuation — the
+            // newline it hides must still advance the line counter or
+            // every token after the string is attributed a short line
+            '\\' => {
+                if i + 1 < n && cs[i + 1] == '\n' {
+                    *line += 1;
+                }
+                i += 2;
+            }
+            '"' => return i + 1,
+            '\n' => {
+                *line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// Consume a char literal (`'x'`, `'\n'`, `'\u{1F600}'`) or step past a
+/// lifetime tick (`'a` — the following ident is lexed normally, which
+/// is harmless for the lint patterns).
+fn consume_char_or_lifetime(cs: &[char], i: usize) -> usize {
+    let n = cs.len();
+    if i + 1 < n && cs[i + 1] == '\\' {
+        // escaped char literal: scan to the closing quote
+        let mut j = i + 2;
+        while j < n && cs[j] != '\'' {
+            j += 1;
+        }
+        return (j + 1).min(n);
+    }
+    if i + 2 < n && cs[i + 2] == '\'' {
+        return i + 3; // plain 'x'
+    }
+    i + 1 // lifetime tick
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        scan(src).toks.into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn strips_line_and_block_comments() {
+        let src = "let x = 1; // unsafe Mutex in a comment\n/* Instant::now\n   spans lines */ let y;\n";
+        let t = texts(src);
+        assert!(!t.iter().any(|s| s == "unsafe" || s == "Mutex" || s == "Instant"));
+        assert!(t.iter().any(|s| s == "y"));
+        let s = scan(src);
+        assert!(s.comment_on(1).unwrap().contains("Mutex"));
+        assert!(s.comment_on(2).unwrap().contains("Instant"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let t = texts("/* outer /* inner unsafe */ still comment */ fn f() {}");
+        assert_eq!(t[0], "fn");
+    }
+
+    #[test]
+    fn strips_strings_and_raw_strings() {
+        let t = texts(r##"let s = "unsafe \" Mutex"; let r = r#"Instant::now "quoted""#; done"##);
+        assert!(!t.iter().any(|s| s == "unsafe" || s == "Mutex" || s == "Instant"));
+        assert!(t.iter().any(|s| s == "done"));
+    }
+
+    #[test]
+    fn lifetimes_and_char_literals() {
+        let t = texts("fn f<'a>(x: &'a str) { let c = '\\n'; let q = '\"'; let z = 'Z'; }");
+        // the '"' char literal must not open a string that swallows the rest
+        assert!(t.iter().any(|s| s == "z"));
+        assert!(!t.iter().any(|s| s == "Z"));
+    }
+
+    #[test]
+    fn line_continuation_in_string_still_counts_the_line() {
+        let src = "let s = \"a \\\n         b\";\nInstant::now()\n";
+        let s = scan(src);
+        assert!(s.toks.iter().any(|t| t.text == "Instant" && t.line == 3));
+    }
+
+    #[test]
+    fn tracks_lines_and_double_colon() {
+        let s = scan("a\nInstant::now()\n");
+        let pos: Vec<(String, usize)> =
+            s.toks.iter().map(|t| (t.text.clone(), t.line)).collect();
+        assert!(pos.contains(&("Instant".into(), 2)));
+        assert!(pos.contains(&("::".into(), 2)));
+        assert!(pos.contains(&("now".into(), 2)));
+    }
+}

@@ -1,0 +1,515 @@
+//! The three lint families behind `lrc analyze`.
+//!
+//! Everything here is deny-by-default: the allowlists below encode the
+//! repo's standing contracts (concurrency primitives live in the pool
+//! and the serving engine, wall-clock time never enters deterministic
+//! paths, `mul_add` only in the gated FMA kernels, compute layers never
+//! depend on serving layers).  A site that must break a rule carries an
+//! inline justification marker:
+//!
+//! ```text
+//! // analyze: allow(forbidden-api): checked-mode instrumentation lock,
+//! // never taken on the default (unchecked) build.
+//! ```
+//!
+//! The marker must name the rule it silences and carry a non-trivial
+//! justification — a bare marker is itself a finding.
+
+use super::lex::{scan, Scan};
+use super::Finding;
+
+pub const RULE_SAFETY: &str = "safety-comment";
+pub const RULE_API: &str = "forbidden-api";
+pub const RULE_LAYERING: &str = "layering";
+pub const RULE_MARKER: &str = "allow-marker";
+
+/// Crate modules the layering lint knows about (top-level only).
+const KNOWN_MODULES: &[&str] = &[
+    "analyze", "bench", "coordinator", "data", "eval", "experiments",
+    "linalg", "lrc", "par", "pipeline", "quant", "rng", "runtime",
+    "sweep", "util",
+];
+
+/// Module-layering contract: which sibling modules each top-level
+/// module may reference (`crate::<mod>` in code, comments excluded).
+/// The load-bearing edges are the *absent* ones: the compute stack
+/// (`linalg`, `quant`, `lrc`, `par`, ...) must never reach into the
+/// serving stack (`coordinator`, `runtime`), so quantization math can
+/// be desk-verified without dragging the engine in.
+fn allowed_deps(module: &str) -> Option<&'static [&'static str]> {
+    Some(match module {
+        "util" | "rng" | "par" => &[],
+        "analyze" | "bench" => &["util"],
+        "linalg" => &["par", "rng", "util"],
+        "quant" => &["linalg", "lrc", "par", "rng", "util"],
+        "lrc" => &["linalg", "par", "quant", "rng", "util"],
+        "data" => &["rng", "util"],
+        "eval" => &["data", "rng", "util"],
+        "pipeline" => &[
+            "data", "eval", "experiments", "linalg", "lrc", "par", "quant",
+            "rng", "runtime", "util",
+        ],
+        "runtime" => &[
+            "data", "eval", "linalg", "lrc", "par", "pipeline", "quant",
+            "rng", "util",
+        ],
+        "experiments" => &[
+            "data", "eval", "linalg", "lrc", "par", "pipeline", "quant",
+            "rng", "runtime", "util",
+        ],
+        "sweep" => &[
+            "data", "eval", "experiments", "linalg", "lrc", "par",
+            "pipeline", "quant", "rng", "runtime", "util",
+        ],
+        "coordinator" => &[
+            "data", "eval", "linalg", "lrc", "par", "pipeline", "quant",
+            "rng", "runtime", "util",
+        ],
+        _ => return None,
+    })
+}
+
+struct ApiRule {
+    /// token pattern, with `::` as a single token
+    pattern: &'static [&'static str],
+    /// path prefixes (relative to `src/`) where the API is legitimate
+    allowed: &'static [&'static str],
+    why: &'static str,
+}
+
+const API_RULES: &[ApiRule] = &[
+    ApiRule {
+        pattern: &["thread", "::", "spawn"],
+        allowed: &["par/", "coordinator/"],
+        why: "thread management belongs to the pool and the serving engine",
+    },
+    ApiRule {
+        pattern: &["thread", "::", "Builder"],
+        allowed: &["par/", "coordinator/"],
+        why: "thread management belongs to the pool and the serving engine",
+    },
+    ApiRule {
+        pattern: &["Mutex"],
+        allowed: &["par/", "coordinator/"],
+        why: "locks outside the pool/engine undermine the allocation-free, \
+              deterministic hot paths",
+    },
+    ApiRule {
+        pattern: &["Condvar"],
+        allowed: &["par/", "coordinator/"],
+        why: "blocking coordination belongs to the pool and the serving engine",
+    },
+    ApiRule {
+        pattern: &["Instant", "::", "now"],
+        allowed: &["bench/", "coordinator/", "main.rs"],
+        why: "wall-clock reads threaten the byte-identical report contract",
+    },
+    ApiRule {
+        pattern: &["SystemTime"],
+        allowed: &["bench/", "coordinator/", "main.rs"],
+        why: "wall-clock reads threaten the byte-identical report contract",
+    },
+    ApiRule {
+        pattern: &["mul_add"],
+        allowed: &["linalg/simd.rs", "linalg/kernels.rs", "quant/dequant.rs"],
+        why: "fused multiply-add outside the gated FMA kernels breaks the \
+              canonical-scalar-program contract",
+    },
+];
+
+/// Lint one file.  `rel` is the path relative to the source root
+/// (e.g. `par/mod.rs`), used for allowlist matching; fixture files from
+/// outside the tree get no allowlist credit, which is exactly what the
+/// CI self-test wants.
+pub fn lint_file(rel: &str, src: &str) -> Vec<Finding> {
+    let sc = scan(src);
+    let lines: Vec<&str> = src.lines().collect();
+    let mut out = Vec::new();
+    lint_safety(rel, &sc, &lines, &mut out);
+    lint_apis(rel, &sc, &lines, &mut out);
+    lint_layering(rel, &sc, &lines, &mut out);
+    lint_markers(rel, &sc, &mut out);
+    out.sort_by_key(|f| f.line);
+    out
+}
+
+/// Every `unsafe` token must be covered by a `// SAFETY:` comment on the
+/// same line or in the contiguous comment block above the statement.
+fn lint_safety(rel: &str, sc: &Scan, lines: &[&str], out: &mut Vec<Finding>) {
+    let mut done_lines = std::collections::BTreeSet::new();
+    for t in &sc.toks {
+        if t.text != "unsafe" || !done_lines.insert(t.line) {
+            continue;
+        }
+        if covered(sc, lines, t.line, "SAFETY")
+            || marker_at(sc, lines, t.line, RULE_SAFETY)
+        {
+            continue;
+        }
+        out.push(Finding {
+            file: rel.to_string(),
+            line: t.line,
+            rule: RULE_SAFETY,
+            message: "`unsafe` without a `// SAFETY:` comment on the same \
+                      line or immediately above"
+                .to_string(),
+        });
+    }
+}
+
+fn lint_apis(rel: &str, sc: &Scan, lines: &[&str], out: &mut Vec<Finding>) {
+    for rule in API_RULES {
+        if rule.allowed.iter().any(|p| rel.starts_with(p)) {
+            continue;
+        }
+        let mut done_lines = std::collections::BTreeSet::new();
+        for i in 0..sc.toks.len() {
+            if !match_pattern(sc, i, rule.pattern) {
+                continue;
+            }
+            let line = sc.toks[i].line;
+            if !done_lines.insert(line) {
+                continue;
+            }
+            if marker_at(sc, lines, line, RULE_API) {
+                continue;
+            }
+            out.push(Finding {
+                file: rel.to_string(),
+                line,
+                rule: RULE_API,
+                message: format!(
+                    "`{}` is forbidden here ({}); allowed under: {}",
+                    rule.pattern.join(""),
+                    rule.why,
+                    rule.allowed.join(", ")
+                ),
+            });
+        }
+    }
+}
+
+fn lint_layering(rel: &str, sc: &Scan, lines: &[&str], out: &mut Vec<Finding>) {
+    // lib.rs / main.rs / top-level tests sit above the layering map
+    let module = match rel.split('/').next() {
+        Some(first) if first.ends_with(".rs") => {
+            first.trim_end_matches(".rs").to_string()
+        }
+        Some(first) => first.to_string(),
+        None => return,
+    };
+    let allowed = match allowed_deps(&module) {
+        Some(a) => a,
+        None => return,
+    };
+    let mut done: std::collections::BTreeSet<(usize, String)> =
+        std::collections::BTreeSet::new();
+    let mut flag = |sc: &Scan, lines: &[&str], line: usize, dep: &str,
+                    out: &mut Vec<Finding>,
+                    done: &mut std::collections::BTreeSet<(usize, String)>| {
+        if dep == module
+            || !KNOWN_MODULES.contains(&dep)
+            || allowed.contains(&dep)
+            || !done.insert((line, dep.to_string()))
+        {
+            return;
+        }
+        if marker_at(sc, lines, line, RULE_LAYERING) {
+            return;
+        }
+        out.push(Finding {
+            file: rel.to_string(),
+            line,
+            rule: RULE_LAYERING,
+            message: format!(
+                "module `{}` must not depend on `crate::{}` (allowed deps: {})",
+                module,
+                dep,
+                if allowed.is_empty() { "none".to_string() } else { allowed.join(", ") }
+            ),
+        });
+    };
+    let toks = &sc.toks;
+    let mut i = 0;
+    while i < toks.len() {
+        if toks[i].text == "crate" && i + 1 < toks.len() && toks[i + 1].text == "::" {
+            if i + 2 < toks.len() && toks[i + 2].text == "{" {
+                // use crate::{a, b::c, ...}; — idents at path-start depth 1
+                let mut j = i + 3;
+                let mut depth = 1usize;
+                let mut at_start = true;
+                while j < toks.len() && depth > 0 {
+                    match toks[j].text.as_str() {
+                        "{" => { depth += 1; at_start = true; }
+                        "}" => depth -= 1,
+                        "," => at_start = true,
+                        "::" => at_start = false,
+                        t => {
+                            if at_start && depth == 1 {
+                                flag(sc, lines, toks[j].line, t, out, &mut done);
+                            }
+                            at_start = false;
+                        }
+                    }
+                    j += 1;
+                }
+                i = j;
+                continue;
+            }
+            if i + 2 < toks.len() {
+                let dep = toks[i + 2].text.clone();
+                flag(sc, lines, toks[i + 2].line, &dep, out, &mut done);
+            }
+        }
+        i += 1;
+    }
+}
+
+/// A marker that names a rule but carries no real justification is
+/// itself a finding — otherwise the allow marker becomes a free mute
+/// button.
+fn lint_markers(rel: &str, sc: &Scan, out: &mut Vec<Finding>) {
+    for (&line, text) in &sc.comments {
+        // doc comments are rendered documentation: text *describing*
+        // the marker syntax there is not a lint directive
+        let t = text.trim_start();
+        if t.starts_with("///") || t.starts_with("//!") {
+            continue;
+        }
+        let mut rest = text.as_str();
+        while let Some(pos) = rest.find("analyze: allow(") {
+            rest = &rest[pos + "analyze: allow(".len()..];
+            let close = match rest.find(')') {
+                Some(c) => c,
+                None => break,
+            };
+            let rule = &rest[..close];
+            rest = &rest[close + 1..];
+            let known = [RULE_SAFETY, RULE_API, RULE_LAYERING].contains(&rule);
+            // the justification is whatever follows the marker up to the
+            // next marker (or end of the comment block on this line)
+            let just_end = rest.find("analyze: allow(").unwrap_or(rest.len());
+            let just = rest[..just_end]
+                .trim_start_matches([':', ' ', '-', '—'])
+                .trim();
+            if !known {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line,
+                    rule: RULE_MARKER,
+                    message: format!("allow marker names unknown rule `{rule}`"),
+                });
+            } else if just.chars().filter(|c| c.is_alphanumeric()).count() < 8 {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line,
+                    rule: RULE_MARKER,
+                    message: format!(
+                        "allow({rule}) marker is missing a justification"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+fn match_pattern(sc: &Scan, i: usize, pattern: &[&str]) -> bool {
+    if i + pattern.len() > sc.toks.len() {
+        return false;
+    }
+    pattern
+        .iter()
+        .enumerate()
+        .all(|(k, p)| sc.toks[i + k].text == *p)
+}
+
+/// Is `needle` present in a comment on `line` or in the contiguous
+/// comment/attribute block above the statement containing `line`?
+fn covered(sc: &Scan, lines: &[&str], line: usize, needle: &str) -> bool {
+    walk_comments(sc, lines, line).any(|c| c.contains(needle))
+}
+
+/// Does an `analyze: allow(<rule>)` marker cover `line`?
+fn marker_at(sc: &Scan, lines: &[&str], line: usize, rule: &str) -> bool {
+    let want = format!("analyze: allow({rule})");
+    walk_comments(sc, lines, line).any(|c| c.contains(&want))
+}
+
+/// Yield the comment text on `line`, then the comments of the contiguous
+/// block above it: the walk skips attribute lines, blank lines, and
+/// statement-continuation heads (code lines ending in `=`, `(` or `,` —
+/// e.g. `let dst: &mut [f64] =` above an `unsafe { ... }` line), and
+/// stops at the first other code line.
+fn walk_comments<'a>(
+    sc: &'a Scan,
+    lines: &'a [&'a str],
+    line: usize,
+) -> impl Iterator<Item = &'a str> + 'a {
+    let mut cur = line;
+    let mut same_line_done = false;
+    std::iter::from_fn(move || {
+        if !same_line_done {
+            same_line_done = true;
+            if let Some(c) = sc.comment_on(line) {
+                return Some(c);
+            }
+        }
+        loop {
+            if cur <= 1 {
+                return None;
+            }
+            cur -= 1;
+            let raw = lines.get(cur - 1).copied().unwrap_or("").trim();
+            if raw.is_empty() || raw.starts_with("#[") || raw.starts_with("#!") {
+                continue;
+            }
+            if raw.starts_with("//") || raw.starts_with("/*") || raw.starts_with('*') {
+                // a pure comment line: yield its text
+                if let Some(c) = sc.comment_on(cur) {
+                    return Some(c);
+                }
+                continue;
+            }
+            if raw.ends_with('=') || raw.ends_with('(') || raw.ends_with(',') {
+                // continuation head of the same statement: if it carries a
+                // trailing comment, yield that too, then keep walking
+                if let Some(c) = sc.comment_on(cur) {
+                    return Some(c);
+                }
+                continue;
+            }
+            // real code above: if it ends with a trailing comment the
+            // comment belongs to *that* statement, so stop here
+            return None;
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint(rel: &str, src: &str) -> Vec<Finding> {
+        lint_file(rel, src)
+    }
+
+    fn rules(fs: &[Finding]) -> Vec<&'static str> {
+        fs.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn unsafe_without_safety_comment_is_flagged() {
+        let fs = lint("quant/mod.rs", "fn f() { unsafe { g() } }\n");
+        assert_eq!(rules(&fs), vec![RULE_SAFETY]);
+        assert_eq!(fs[0].line, 1);
+    }
+
+    #[test]
+    fn safety_comment_above_or_trailing_passes() {
+        let ok = "// SAFETY: g is fine here.\nfn f() { unsafe { g() } }\n";
+        assert!(lint("quant/mod.rs", ok).is_empty());
+        let trailing = "fn f() { unsafe { g() } } // SAFETY: g is fine here.\n";
+        assert!(lint("quant/mod.rs", trailing).is_empty());
+    }
+
+    #[test]
+    fn safety_walk_skips_attrs_blanks_and_continuation_heads() {
+        let src = "// SAFETY: covered by the partition argument.\n\
+                   #[allow(dead_code)]\n\
+                   let dst: &mut [f64] =\n\
+                   unsafe { shared.range(0, 1) };\n";
+        assert!(lint("linalg/x.rs", src).is_empty());
+        let blocked = "fn other() {}\n// not a safety note\nlet x = 1;\nunsafe { g() }\n";
+        assert_eq!(rules(&lint("linalg/x.rs", blocked)), vec![RULE_SAFETY]);
+    }
+
+    #[test]
+    fn unsafe_in_comment_or_string_is_ignored() {
+        let src = "// unsafe is discussed here\nlet s = \"unsafe\";\n";
+        assert!(lint("quant/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn forbidden_api_outside_allowlist() {
+        let fs = lint("quant/mod.rs", "let t0 = Instant::now();\n");
+        assert_eq!(rules(&fs), vec![RULE_API]);
+        assert!(fs[0].message.contains("Instant::now"));
+        // same code under an allowlisted module passes
+        assert!(lint("coordinator/soak.rs", "let t0 = Instant::now();\n").is_empty());
+        assert!(lint("main.rs", "let t0 = Instant::now();\n").is_empty());
+    }
+
+    #[test]
+    fn mutex_and_spawn_restricted_to_pool_and_engine() {
+        assert_eq!(
+            rules(&lint("sweep.rs", "static L: Mutex<()> = Mutex::new(());\n")),
+            vec![RULE_API]
+        );
+        assert!(lint("par/mod.rs", "static L: Mutex<()> = Mutex::new(());\n").is_empty());
+        assert_eq!(
+            rules(&lint("data/mod.rs", "std::thread::spawn(|| {});\n")),
+            vec![RULE_API]
+        );
+    }
+
+    #[test]
+    fn mul_add_only_in_gated_kernels() {
+        assert_eq!(rules(&lint("lrc/mod.rs", "let y = a.mul_add(b, c);\n")), vec![RULE_API]);
+        assert!(lint("linalg/simd.rs", "let y = a.mul_add(b, c);\n").is_empty());
+        assert!(lint("quant/dequant.rs", "let y = a.mul_add(b, c);\n").is_empty());
+    }
+
+    #[test]
+    fn allow_marker_with_justification_suppresses() {
+        let src = "// analyze: allow(forbidden-api): wall-clock reporting only, \
+                   never folded into deterministic reports.\n\
+                   let t0 = Instant::now();\n";
+        assert!(lint("pipeline.rs", src).is_empty());
+    }
+
+    #[test]
+    fn bare_allow_marker_is_a_finding() {
+        let src = "// analyze: allow(forbidden-api)\nlet t0 = Instant::now();\n";
+        let fs = lint("pipeline.rs", src);
+        assert_eq!(rules(&fs), vec![RULE_MARKER]);
+        let unknown = "// analyze: allow(nonsense): because I said so, truly.\nlet x = 1;\n";
+        assert_eq!(rules(&lint("pipeline.rs", unknown)), vec![RULE_MARKER]);
+    }
+
+    #[test]
+    fn doc_comments_describing_markers_are_not_markers() {
+        let src = "//! marker syntax: `// analyze: allow(<rule>): <why>`\n\
+                   /// e.g. `// analyze: allow(nonsense)` would be flagged\n\
+                   fn f() {}\n";
+        assert!(lint("quant/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn layering_violation_and_allowed_edge() {
+        let fs = lint("quant/mod.rs", "use crate::coordinator::Batcher;\n");
+        assert_eq!(rules(&fs), vec![RULE_LAYERING]);
+        assert!(fs[0].message.contains("coordinator"));
+        assert!(lint("quant/mod.rs", "use crate::linalg::Mat;\n").is_empty());
+        // doc comments never create edges
+        assert!(lint("quant/mod.rs", "/// see [crate::sweep] for the grid\n").is_empty());
+        // grouped imports are expanded
+        let fs = lint("linalg/mod.rs", "use crate::{par::Pool, runtime::Engine};\n");
+        assert_eq!(rules(&fs), vec![RULE_LAYERING]);
+        assert!(fs[0].message.contains("runtime"));
+    }
+
+    #[test]
+    fn layering_ignores_unknown_names_and_self() {
+        let src = "use crate::artifacts_dir;\nuse crate::quant::pack;\n";
+        assert!(lint("quant/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn fixture_paths_get_no_allowlist_credit() {
+        // a fixture outside src/ hits every rule — the CI self-test
+        // depends on this
+        let fs = lint("fixture.rs", "fn f() { unsafe { g() } }\nlet l = Mutex::new(());\n");
+        assert!(rules(&fs).contains(&RULE_SAFETY));
+        assert!(rules(&fs).contains(&RULE_API));
+    }
+}

@@ -1,0 +1,181 @@
+//! `lrc analyze` — in-repo correctness tooling: a zero-dependency
+//! source lint that mechanically enforces the crate's standing
+//! contracts on every CI run instead of trusting desk checks.
+//!
+//! Three lint families (see [`lints`]):
+//!
+//! * **safety-comment** — every `unsafe` token must carry a
+//!   `// SAFETY:` argument on the same line or immediately above.
+//! * **forbidden-api** — concurrency primitives (`thread::spawn`,
+//!   `Mutex`, `Condvar`) outside `par/`/`coordinator/`, wall-clock
+//!   reads (`Instant::now`, `SystemTime`) outside
+//!   `bench`/`coordinator`/`main`, and `mul_add` outside the gated FMA
+//!   kernels are findings; justified exceptions carry an inline
+//!   `// analyze: allow(<rule>): <why>` marker.
+//! * **layering** — `crate::<mod>` references must respect the module
+//!   layering map (compute layers never depend on `coordinator` /
+//!   `runtime`).
+//!
+//! Deny-by-default: `lrc analyze --deny-all <paths>` exits non-zero on
+//! any finding, which is how CI consumes it.  Findings render as
+//! `file:line: [rule] message` lines or as a JSON array (`--json`).
+
+pub mod lex;
+pub mod lints;
+
+use std::io::Read;
+use std::path::{Path, PathBuf};
+
+use crate::util::Json;
+
+/// One lint finding, machine-readable.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// path as given on the command line (display) — allowlist matching
+    /// uses the `src/`-relative form computed internally
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+/// Recursively collect `.rs` files under `path` (or `path` itself if it
+/// is a file), sorted for deterministic output.
+pub fn collect_rs_files(path: &Path) -> std::io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    if path.is_file() {
+        out.push(path.to_path_buf());
+        return Ok(out);
+    }
+    let mut stack = vec![path.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        for entry in std::fs::read_dir(&dir)? {
+            let p = entry?.path();
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+                out.push(p);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// The `src/`-relative module path used for allowlist matching: the
+/// components after the *last* `src` component, joined with `/`.
+/// Paths with no `src` component (CI fixture files) keep their file
+/// name only, so they get no allowlist credit.
+pub fn module_rel(path: &Path) -> String {
+    let comps: Vec<String> = path
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect();
+    match comps.iter().rposition(|c| c == "src") {
+        Some(i) if i + 1 < comps.len() => comps[i + 1..].join("/"),
+        _ => comps.last().cloned().unwrap_or_default(),
+    }
+}
+
+/// Analyze every `.rs` file under the given paths.  Returns the
+/// findings plus the number of files scanned.
+pub fn analyze_paths(paths: &[PathBuf]) -> std::io::Result<(Vec<Finding>, usize)> {
+    let mut findings = Vec::new();
+    let mut nfiles = 0usize;
+    for root in paths {
+        for file in collect_rs_files(root)? {
+            let mut src = String::new();
+            std::fs::File::open(&file)?.read_to_string(&mut src)?;
+            nfiles += 1;
+            let rel = module_rel(&file);
+            for mut f in lints::lint_file(&rel, &src) {
+                f.file = file.display().to_string();
+                findings.push(f);
+            }
+        }
+    }
+    findings.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok((findings, nfiles))
+}
+
+/// `file:line: [rule] message` lines plus a summary — grep-friendly.
+pub fn render_text(findings: &[Finding], nfiles: usize) -> String {
+    let mut out = String::new();
+    for f in findings {
+        out.push_str(&format!(
+            "{}:{}: [{}] {}\n",
+            f.file, f.line, f.rule, f.message
+        ));
+    }
+    out.push_str(&format!(
+        "analyze: {} finding(s) in {} file(s)\n",
+        findings.len(),
+        nfiles
+    ));
+    out
+}
+
+/// JSON array of findings (machine-readable CI artifact).
+pub fn render_json(findings: &[Finding]) -> String {
+    Json::Arr(
+        findings
+            .iter()
+            .map(|f| {
+                Json::obj(vec![
+                    ("file", Json::str(f.file.clone())),
+                    ("line", Json::num(f.line as f64)),
+                    ("rule", Json::str(f.rule)),
+                    ("message", Json::str(f.message.clone())),
+                ])
+            })
+            .collect(),
+    )
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn module_rel_strips_to_last_src() {
+        assert_eq!(module_rel(Path::new("rust/src/par/mod.rs")), "par/mod.rs");
+        assert_eq!(module_rel(Path::new("/a/b/src/linalg/simd.rs")), "linalg/simd.rs");
+        assert_eq!(module_rel(Path::new("src/main.rs")), "main.rs");
+        // fixtures keep only the file name → no allowlist credit
+        assert_eq!(module_rel(Path::new("/tmp/fixture/bad.rs")), "bad.rs");
+    }
+
+    #[test]
+    fn render_json_shape() {
+        let f = Finding {
+            file: "x.rs".into(),
+            line: 3,
+            rule: lints::RULE_API,
+            message: "nope".into(),
+        };
+        let j = Json::parse(&render_json(&[f])).unwrap();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("line").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(arr[0].get("rule").unwrap().as_str().unwrap(), "forbidden-api");
+    }
+
+    #[test]
+    fn analyze_paths_scans_a_tree() {
+        let dir = std::env::temp_dir().join(format!(
+            "lrc_analyze_test_{}",
+            std::process::id()
+        ));
+        let sub = dir.join("src").join("quant");
+        std::fs::create_dir_all(&sub).unwrap();
+        std::fs::write(sub.join("bad.rs"), "fn f() { unsafe { g() } }\n").unwrap();
+        std::fs::write(sub.join("ok.rs"), "fn g() {}\n").unwrap();
+        let (findings, nfiles) = analyze_paths(&[dir.clone()]).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        assert_eq!(nfiles, 2);
+        assert_eq!(findings.len(), 1);
+        assert_eq!(findings[0].rule, lints::RULE_SAFETY);
+        assert!(findings[0].file.ends_with("bad.rs"));
+    }
+}

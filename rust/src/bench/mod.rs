@@ -14,6 +14,9 @@
 
 pub mod trend;
 
+// analyze: allow(forbidden-api): the bench harness accumulates records
+// behind a lock between timed regions only — never inside a measured
+// kernel and never on a deterministic compute path.
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -82,10 +85,14 @@ pub fn bench_report<F: FnMut()>(name: &str, warmup: usize, samples: usize,
 }
 
 /// (section, name, samples_ms) triples accumulated for [`write_json`].
+// analyze: allow(forbidden-api): bench-artifact accumulator, locked
+// only between timed regions of the single-process bench binary.
 static RECORDS: Mutex<Vec<(String, String, Vec<f64>)>> =
     Mutex::new(Vec::new());
 
 /// Section the next [`record`] calls land under (set by [`section`]).
+// analyze: allow(forbidden-api): bench-artifact section label, locked
+// only between timed regions of the single-process bench binary.
 static CURRENT_SECTION: Mutex<String> = Mutex::new(String::new());
 
 /// Standard bench-output header so all table benches look alike; also

@@ -124,6 +124,13 @@ fn prune_expired(items: &mut VecDeque<Request>, now: Instant,
             i += 1;
         }
     }
+    // checked mode: pruning must be complete — an expired request left
+    // queued would be re-scored later as if it had met its deadline
+    #[cfg(feature = "checked")]
+    assert!(
+        items.iter().all(|r| r.deadline.map(|d| d > now).unwrap_or(true)),
+        "checked: prune_expired left an expired request queued"
+    );
 }
 
 impl Batcher {
@@ -157,6 +164,15 @@ impl Batcher {
             });
         }
         st.items.push_back(req);
+        // checked mode: the admission bound must hold after every push
+        // — this is the invariant the typed Full rejection exists for
+        #[cfg(feature = "checked")]
+        assert!(
+            st.items.len() <= self.policy.max_queue,
+            "checked: bounded admission breached — {} queued > max_queue {}",
+            st.items.len(),
+            self.policy.max_queue
+        );
         // Wake at most one consumer, and only when this push can
         // unblock one: the first item of an accumulating batch (a
         // consumer must arm the max_wait timer) or the item completing
@@ -228,6 +244,13 @@ impl Batcher {
             self.idle_wakeups.fetch_add(1, Ordering::Relaxed);
         }
         let n = st.items.len().min(cap);
+        // checked mode: a handed-out batch never exceeds the policy cap
+        #[cfg(feature = "checked")]
+        assert!(
+            n <= self.policy.max_batch,
+            "checked: batch of {n} exceeds max_batch {}",
+            self.policy.max_batch
+        );
         Some(Drained {
             batch: st.items.drain(..n).collect(),
             expired: Vec::new(),

@@ -82,8 +82,25 @@
 //! * [`bench`]       — measurement harness used by `cargo bench` targets
 //!                     + the `bench-trend` regression comparison the CI
 //!                     gate runs over bench JSON artifacts
+//! * [`analyze`]     — in-repo correctness tooling (`lrc analyze`): a
+//!                     zero-dependency source lint that mechanically
+//!                     enforces the crate's standing contracts —
+//!                     `// SAFETY:` comments on every `unsafe`,
+//!                     concurrency/wall-clock/`mul_add` API fences, and
+//!                     the module-layering map; deny-by-default in CI.
+//!                     Its runtime siblings: the `checked` cargo feature
+//!                     arms `SharedSlice` with an overlap/bounds race
+//!                     detector and the pool with protocol assertions,
+//!                     and `par::model` + `tests/pool_model.rs`
+//!                     exhaustively model-check the job-board protocol
 //! * [`util`]        — no-deps JSON + CLI parsing
 
+// Every `unsafe` operation must sit in an explicit `unsafe {}` block with
+// its own justification, even inside `unsafe fn` — `lrc analyze` then
+// checks every such block carries a `// SAFETY:` argument.
+#![deny(unsafe_op_in_unsafe_fn)]
+
+pub mod analyze;
 pub mod bench;
 pub mod coordinator;
 pub mod data;

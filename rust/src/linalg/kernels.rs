@@ -603,6 +603,8 @@ mod tests {
     /// would still be bit-identical, but per-backend *coverage* would
     /// silently degrade).
     fn sweep_lock() -> std::sync::MutexGuard<'static, ()> {
+        // analyze: allow(forbidden-api): test-only serialization of the
+        // process-global backend override; never compiled into the lib.
         static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
         LOCK.lock().unwrap_or_else(|e| e.into_inner())
     }

@@ -393,8 +393,10 @@ fn tile4_fma(be: Backend, a: [&[f64]; 4], bp: &[f64], acc: &mut [f64]) {
 fn tile1_fma(be: Backend, a: &[f64], bp: &[f64], acc: &mut [f64]) {
     match be {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: avx2 selectable ⇒ available; fma_hw() just checked.
         Backend::Avx2 if fma_hw() => unsafe { tile1_avx2_fma(a, bp, acc) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON (incl. fused vfmaq) is baseline on aarch64.
         Backend::Neon => unsafe { tile1_neon_fma(a, bp, acc) },
         other => tile1_scalar_fma(a, bp, acc, other.nr()),
     }
@@ -453,326 +455,416 @@ fn tile1_scalar_fma(a: &[f64], bp: &[f64], acc: &mut [f64], nr: usize) {
 
 // --- x86_64: SSE2 (baseline) and AVX2 (runtime-detected) -------------------
 
+// SAFETY (callers): the `sse2` target feature(s) must be enabled, and
+// the slice-length contract of the safe dispatch wrapper must hold
+// (it debug_asserts `bp`/`acc` against the tile geometry).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "sse2")]
 unsafe fn tile4_sse2(a: [&[f64]; 4], bp: &[f64], acc: &mut [f64]) {
-    use core::arch::x86_64::*;
-    const NR: usize = 4;
-    let kw = a[0].len();
-    let (a0, a1, a2, a3) = (a[0], a[1], a[2], a[3]);
-    let p = acc.as_mut_ptr();
-    let mut c00 = _mm_loadu_pd(p);
-    let mut c01 = _mm_loadu_pd(p.add(2));
-    let mut c10 = _mm_loadu_pd(p.add(4));
-    let mut c11 = _mm_loadu_pd(p.add(6));
-    let mut c20 = _mm_loadu_pd(p.add(8));
-    let mut c21 = _mm_loadu_pd(p.add(10));
-    let mut c30 = _mm_loadu_pd(p.add(12));
-    let mut c31 = _mm_loadu_pd(p.add(14));
-    let bpp = bp.as_ptr();
-    for kk in 0..kw {
-        let y0 = _mm_loadu_pd(bpp.add(kk * NR));
-        let y1 = _mm_loadu_pd(bpp.add(kk * NR + 2));
-        let x0 = _mm_set1_pd(a0[kk]);
-        c00 = _mm_add_pd(c00, _mm_mul_pd(x0, y0));
-        c01 = _mm_add_pd(c01, _mm_mul_pd(x0, y1));
-        let x1 = _mm_set1_pd(a1[kk]);
-        c10 = _mm_add_pd(c10, _mm_mul_pd(x1, y0));
-        c11 = _mm_add_pd(c11, _mm_mul_pd(x1, y1));
-        let x2 = _mm_set1_pd(a2[kk]);
-        c20 = _mm_add_pd(c20, _mm_mul_pd(x2, y0));
-        c21 = _mm_add_pd(c21, _mm_mul_pd(x2, y1));
-        let x3 = _mm_set1_pd(a3[kk]);
-        c30 = _mm_add_pd(c30, _mm_mul_pd(x3, y0));
-        c31 = _mm_add_pd(c31, _mm_mul_pd(x3, y1));
+    // SAFETY: the dispatcher established the target feature, and all
+    // raw loads/stores below stay inside `bp`/`acc` per the length
+    // contract debug_asserted by the safe wrapper; the unaligned
+    // intrinsics carry no alignment requirement.
+    unsafe {
+        use core::arch::x86_64::*;
+        const NR: usize = 4;
+        let kw = a[0].len();
+        let (a0, a1, a2, a3) = (a[0], a[1], a[2], a[3]);
+        let p = acc.as_mut_ptr();
+        let mut c00 = _mm_loadu_pd(p);
+        let mut c01 = _mm_loadu_pd(p.add(2));
+        let mut c10 = _mm_loadu_pd(p.add(4));
+        let mut c11 = _mm_loadu_pd(p.add(6));
+        let mut c20 = _mm_loadu_pd(p.add(8));
+        let mut c21 = _mm_loadu_pd(p.add(10));
+        let mut c30 = _mm_loadu_pd(p.add(12));
+        let mut c31 = _mm_loadu_pd(p.add(14));
+        let bpp = bp.as_ptr();
+        for kk in 0..kw {
+            let y0 = _mm_loadu_pd(bpp.add(kk * NR));
+            let y1 = _mm_loadu_pd(bpp.add(kk * NR + 2));
+            let x0 = _mm_set1_pd(a0[kk]);
+            c00 = _mm_add_pd(c00, _mm_mul_pd(x0, y0));
+            c01 = _mm_add_pd(c01, _mm_mul_pd(x0, y1));
+            let x1 = _mm_set1_pd(a1[kk]);
+            c10 = _mm_add_pd(c10, _mm_mul_pd(x1, y0));
+            c11 = _mm_add_pd(c11, _mm_mul_pd(x1, y1));
+            let x2 = _mm_set1_pd(a2[kk]);
+            c20 = _mm_add_pd(c20, _mm_mul_pd(x2, y0));
+            c21 = _mm_add_pd(c21, _mm_mul_pd(x2, y1));
+            let x3 = _mm_set1_pd(a3[kk]);
+            c30 = _mm_add_pd(c30, _mm_mul_pd(x3, y0));
+            c31 = _mm_add_pd(c31, _mm_mul_pd(x3, y1));
+        }
+        _mm_storeu_pd(p, c00);
+        _mm_storeu_pd(p.add(2), c01);
+        _mm_storeu_pd(p.add(4), c10);
+        _mm_storeu_pd(p.add(6), c11);
+        _mm_storeu_pd(p.add(8), c20);
+        _mm_storeu_pd(p.add(10), c21);
+        _mm_storeu_pd(p.add(12), c30);
+        _mm_storeu_pd(p.add(14), c31);
     }
-    _mm_storeu_pd(p, c00);
-    _mm_storeu_pd(p.add(2), c01);
-    _mm_storeu_pd(p.add(4), c10);
-    _mm_storeu_pd(p.add(6), c11);
-    _mm_storeu_pd(p.add(8), c20);
-    _mm_storeu_pd(p.add(10), c21);
-    _mm_storeu_pd(p.add(12), c30);
-    _mm_storeu_pd(p.add(14), c31);
 }
 
+// SAFETY (callers): the `sse2` target feature(s) must be enabled, and
+// the slice-length contract of the safe dispatch wrapper must hold
+// (it debug_asserts `bp`/`acc` against the tile geometry).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "sse2")]
 unsafe fn tile1_sse2(a: &[f64], bp: &[f64], acc: &mut [f64]) {
-    use core::arch::x86_64::*;
-    const NR: usize = 4;
-    let p = acc.as_mut_ptr();
-    let mut c0 = _mm_loadu_pd(p);
-    let mut c1 = _mm_loadu_pd(p.add(2));
-    let bpp = bp.as_ptr();
-    for (kk, &xv) in a.iter().enumerate() {
-        let x = _mm_set1_pd(xv);
-        let y0 = _mm_loadu_pd(bpp.add(kk * NR));
-        let y1 = _mm_loadu_pd(bpp.add(kk * NR + 2));
-        c0 = _mm_add_pd(c0, _mm_mul_pd(x, y0));
-        c1 = _mm_add_pd(c1, _mm_mul_pd(x, y1));
+    // SAFETY: the dispatcher established the target feature, and all
+    // raw loads/stores below stay inside `bp`/`acc` per the length
+    // contract debug_asserted by the safe wrapper; the unaligned
+    // intrinsics carry no alignment requirement.
+    unsafe {
+        use core::arch::x86_64::*;
+        const NR: usize = 4;
+        let p = acc.as_mut_ptr();
+        let mut c0 = _mm_loadu_pd(p);
+        let mut c1 = _mm_loadu_pd(p.add(2));
+        let bpp = bp.as_ptr();
+        for (kk, &xv) in a.iter().enumerate() {
+            let x = _mm_set1_pd(xv);
+            let y0 = _mm_loadu_pd(bpp.add(kk * NR));
+            let y1 = _mm_loadu_pd(bpp.add(kk * NR + 2));
+            c0 = _mm_add_pd(c0, _mm_mul_pd(x, y0));
+            c1 = _mm_add_pd(c1, _mm_mul_pd(x, y1));
+        }
+        _mm_storeu_pd(p, c0);
+        _mm_storeu_pd(p.add(2), c1);
     }
-    _mm_storeu_pd(p, c0);
-    _mm_storeu_pd(p.add(2), c1);
 }
 
+// SAFETY (callers): the `avx2` target feature(s) must be enabled, and
+// the slice-length contract of the safe dispatch wrapper must hold
+// (it debug_asserts `bp`/`acc` against the tile geometry).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn tile4_avx2(a: [&[f64]; 4], bp: &[f64], acc: &mut [f64]) {
-    use core::arch::x86_64::*;
-    const NR: usize = 8;
-    let kw = a[0].len();
-    let (a0, a1, a2, a3) = (a[0], a[1], a[2], a[3]);
-    let p = acc.as_mut_ptr();
-    let mut c00 = _mm256_loadu_pd(p);
-    let mut c01 = _mm256_loadu_pd(p.add(4));
-    let mut c10 = _mm256_loadu_pd(p.add(8));
-    let mut c11 = _mm256_loadu_pd(p.add(12));
-    let mut c20 = _mm256_loadu_pd(p.add(16));
-    let mut c21 = _mm256_loadu_pd(p.add(20));
-    let mut c30 = _mm256_loadu_pd(p.add(24));
-    let mut c31 = _mm256_loadu_pd(p.add(28));
-    let bpp = bp.as_ptr();
-    for kk in 0..kw {
-        let y0 = _mm256_loadu_pd(bpp.add(kk * NR));
-        let y1 = _mm256_loadu_pd(bpp.add(kk * NR + 4));
-        // mul then add, never _mm256_fmadd_pd: FMA's single rounding
-        // would diverge from the canonical scalar program.
-        let x0 = _mm256_set1_pd(a0[kk]);
-        c00 = _mm256_add_pd(c00, _mm256_mul_pd(x0, y0));
-        c01 = _mm256_add_pd(c01, _mm256_mul_pd(x0, y1));
-        let x1 = _mm256_set1_pd(a1[kk]);
-        c10 = _mm256_add_pd(c10, _mm256_mul_pd(x1, y0));
-        c11 = _mm256_add_pd(c11, _mm256_mul_pd(x1, y1));
-        let x2 = _mm256_set1_pd(a2[kk]);
-        c20 = _mm256_add_pd(c20, _mm256_mul_pd(x2, y0));
-        c21 = _mm256_add_pd(c21, _mm256_mul_pd(x2, y1));
-        let x3 = _mm256_set1_pd(a3[kk]);
-        c30 = _mm256_add_pd(c30, _mm256_mul_pd(x3, y0));
-        c31 = _mm256_add_pd(c31, _mm256_mul_pd(x3, y1));
+    // SAFETY: the dispatcher established the target feature, and all
+    // raw loads/stores below stay inside `bp`/`acc` per the length
+    // contract debug_asserted by the safe wrapper; the unaligned
+    // intrinsics carry no alignment requirement.
+    unsafe {
+        use core::arch::x86_64::*;
+        const NR: usize = 8;
+        let kw = a[0].len();
+        let (a0, a1, a2, a3) = (a[0], a[1], a[2], a[3]);
+        let p = acc.as_mut_ptr();
+        let mut c00 = _mm256_loadu_pd(p);
+        let mut c01 = _mm256_loadu_pd(p.add(4));
+        let mut c10 = _mm256_loadu_pd(p.add(8));
+        let mut c11 = _mm256_loadu_pd(p.add(12));
+        let mut c20 = _mm256_loadu_pd(p.add(16));
+        let mut c21 = _mm256_loadu_pd(p.add(20));
+        let mut c30 = _mm256_loadu_pd(p.add(24));
+        let mut c31 = _mm256_loadu_pd(p.add(28));
+        let bpp = bp.as_ptr();
+        for kk in 0..kw {
+            let y0 = _mm256_loadu_pd(bpp.add(kk * NR));
+            let y1 = _mm256_loadu_pd(bpp.add(kk * NR + 4));
+            // mul then add, never _mm256_fmadd_pd: FMA's single rounding
+            // would diverge from the canonical scalar program.
+            let x0 = _mm256_set1_pd(a0[kk]);
+            c00 = _mm256_add_pd(c00, _mm256_mul_pd(x0, y0));
+            c01 = _mm256_add_pd(c01, _mm256_mul_pd(x0, y1));
+            let x1 = _mm256_set1_pd(a1[kk]);
+            c10 = _mm256_add_pd(c10, _mm256_mul_pd(x1, y0));
+            c11 = _mm256_add_pd(c11, _mm256_mul_pd(x1, y1));
+            let x2 = _mm256_set1_pd(a2[kk]);
+            c20 = _mm256_add_pd(c20, _mm256_mul_pd(x2, y0));
+            c21 = _mm256_add_pd(c21, _mm256_mul_pd(x2, y1));
+            let x3 = _mm256_set1_pd(a3[kk]);
+            c30 = _mm256_add_pd(c30, _mm256_mul_pd(x3, y0));
+            c31 = _mm256_add_pd(c31, _mm256_mul_pd(x3, y1));
+        }
+        _mm256_storeu_pd(p, c00);
+        _mm256_storeu_pd(p.add(4), c01);
+        _mm256_storeu_pd(p.add(8), c10);
+        _mm256_storeu_pd(p.add(12), c11);
+        _mm256_storeu_pd(p.add(16), c20);
+        _mm256_storeu_pd(p.add(20), c21);
+        _mm256_storeu_pd(p.add(24), c30);
+        _mm256_storeu_pd(p.add(28), c31);
     }
-    _mm256_storeu_pd(p, c00);
-    _mm256_storeu_pd(p.add(4), c01);
-    _mm256_storeu_pd(p.add(8), c10);
-    _mm256_storeu_pd(p.add(12), c11);
-    _mm256_storeu_pd(p.add(16), c20);
-    _mm256_storeu_pd(p.add(20), c21);
-    _mm256_storeu_pd(p.add(24), c30);
-    _mm256_storeu_pd(p.add(28), c31);
 }
 
+// SAFETY (callers): the `avx2` target feature(s) must be enabled, and
+// the slice-length contract of the safe dispatch wrapper must hold
+// (it debug_asserts `bp`/`acc` against the tile geometry).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn tile1_avx2(a: &[f64], bp: &[f64], acc: &mut [f64]) {
-    use core::arch::x86_64::*;
-    const NR: usize = 8;
-    let p = acc.as_mut_ptr();
-    let mut c0 = _mm256_loadu_pd(p);
-    let mut c1 = _mm256_loadu_pd(p.add(4));
-    let bpp = bp.as_ptr();
-    for (kk, &xv) in a.iter().enumerate() {
-        let x = _mm256_set1_pd(xv);
-        let y0 = _mm256_loadu_pd(bpp.add(kk * NR));
-        let y1 = _mm256_loadu_pd(bpp.add(kk * NR + 4));
-        c0 = _mm256_add_pd(c0, _mm256_mul_pd(x, y0));
-        c1 = _mm256_add_pd(c1, _mm256_mul_pd(x, y1));
+    // SAFETY: the dispatcher established the target feature, and all
+    // raw loads/stores below stay inside `bp`/`acc` per the length
+    // contract debug_asserted by the safe wrapper; the unaligned
+    // intrinsics carry no alignment requirement.
+    unsafe {
+        use core::arch::x86_64::*;
+        const NR: usize = 8;
+        let p = acc.as_mut_ptr();
+        let mut c0 = _mm256_loadu_pd(p);
+        let mut c1 = _mm256_loadu_pd(p.add(4));
+        let bpp = bp.as_ptr();
+        for (kk, &xv) in a.iter().enumerate() {
+            let x = _mm256_set1_pd(xv);
+            let y0 = _mm256_loadu_pd(bpp.add(kk * NR));
+            let y1 = _mm256_loadu_pd(bpp.add(kk * NR + 4));
+            c0 = _mm256_add_pd(c0, _mm256_mul_pd(x, y0));
+            c1 = _mm256_add_pd(c1, _mm256_mul_pd(x, y1));
+        }
+        _mm256_storeu_pd(p, c0);
+        _mm256_storeu_pd(p.add(4), c1);
     }
-    _mm256_storeu_pd(p, c0);
-    _mm256_storeu_pd(p.add(4), c1);
 }
 
+// SAFETY (callers): the `avx2` + `fma` target feature(s) must be enabled, and
+// the slice-length contract of the safe dispatch wrapper must hold
+// (it debug_asserts `bp`/`acc` against the tile geometry).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 unsafe fn tile4_avx2_fma(a: [&[f64]; 4], bp: &[f64], acc: &mut [f64]) {
-    use core::arch::x86_64::*;
-    const NR: usize = 8;
-    let kw = a[0].len();
-    let (a0, a1, a2, a3) = (a[0], a[1], a[2], a[3]);
-    let p = acc.as_mut_ptr();
-    let mut c00 = _mm256_loadu_pd(p);
-    let mut c01 = _mm256_loadu_pd(p.add(4));
-    let mut c10 = _mm256_loadu_pd(p.add(8));
-    let mut c11 = _mm256_loadu_pd(p.add(12));
-    let mut c20 = _mm256_loadu_pd(p.add(16));
-    let mut c21 = _mm256_loadu_pd(p.add(20));
-    let mut c30 = _mm256_loadu_pd(p.add(24));
-    let mut c31 = _mm256_loadu_pd(p.add(28));
-    let bpp = bp.as_ptr();
-    for kk in 0..kw {
-        let y0 = _mm256_loadu_pd(bpp.add(kk * NR));
-        let y1 = _mm256_loadu_pd(bpp.add(kk * NR + 4));
-        // the FMA-mode program: one correctly-rounded fused op per step
-        let x0 = _mm256_set1_pd(a0[kk]);
-        c00 = _mm256_fmadd_pd(x0, y0, c00);
-        c01 = _mm256_fmadd_pd(x0, y1, c01);
-        let x1 = _mm256_set1_pd(a1[kk]);
-        c10 = _mm256_fmadd_pd(x1, y0, c10);
-        c11 = _mm256_fmadd_pd(x1, y1, c11);
-        let x2 = _mm256_set1_pd(a2[kk]);
-        c20 = _mm256_fmadd_pd(x2, y0, c20);
-        c21 = _mm256_fmadd_pd(x2, y1, c21);
-        let x3 = _mm256_set1_pd(a3[kk]);
-        c30 = _mm256_fmadd_pd(x3, y0, c30);
-        c31 = _mm256_fmadd_pd(x3, y1, c31);
+    // SAFETY: the dispatcher established the target feature, and all
+    // raw loads/stores below stay inside `bp`/`acc` per the length
+    // contract debug_asserted by the safe wrapper; the unaligned
+    // intrinsics carry no alignment requirement.
+    unsafe {
+        use core::arch::x86_64::*;
+        const NR: usize = 8;
+        let kw = a[0].len();
+        let (a0, a1, a2, a3) = (a[0], a[1], a[2], a[3]);
+        let p = acc.as_mut_ptr();
+        let mut c00 = _mm256_loadu_pd(p);
+        let mut c01 = _mm256_loadu_pd(p.add(4));
+        let mut c10 = _mm256_loadu_pd(p.add(8));
+        let mut c11 = _mm256_loadu_pd(p.add(12));
+        let mut c20 = _mm256_loadu_pd(p.add(16));
+        let mut c21 = _mm256_loadu_pd(p.add(20));
+        let mut c30 = _mm256_loadu_pd(p.add(24));
+        let mut c31 = _mm256_loadu_pd(p.add(28));
+        let bpp = bp.as_ptr();
+        for kk in 0..kw {
+            let y0 = _mm256_loadu_pd(bpp.add(kk * NR));
+            let y1 = _mm256_loadu_pd(bpp.add(kk * NR + 4));
+            // the FMA-mode program: one correctly-rounded fused op per step
+            let x0 = _mm256_set1_pd(a0[kk]);
+            c00 = _mm256_fmadd_pd(x0, y0, c00);
+            c01 = _mm256_fmadd_pd(x0, y1, c01);
+            let x1 = _mm256_set1_pd(a1[kk]);
+            c10 = _mm256_fmadd_pd(x1, y0, c10);
+            c11 = _mm256_fmadd_pd(x1, y1, c11);
+            let x2 = _mm256_set1_pd(a2[kk]);
+            c20 = _mm256_fmadd_pd(x2, y0, c20);
+            c21 = _mm256_fmadd_pd(x2, y1, c21);
+            let x3 = _mm256_set1_pd(a3[kk]);
+            c30 = _mm256_fmadd_pd(x3, y0, c30);
+            c31 = _mm256_fmadd_pd(x3, y1, c31);
+        }
+        _mm256_storeu_pd(p, c00);
+        _mm256_storeu_pd(p.add(4), c01);
+        _mm256_storeu_pd(p.add(8), c10);
+        _mm256_storeu_pd(p.add(12), c11);
+        _mm256_storeu_pd(p.add(16), c20);
+        _mm256_storeu_pd(p.add(20), c21);
+        _mm256_storeu_pd(p.add(24), c30);
+        _mm256_storeu_pd(p.add(28), c31);
     }
-    _mm256_storeu_pd(p, c00);
-    _mm256_storeu_pd(p.add(4), c01);
-    _mm256_storeu_pd(p.add(8), c10);
-    _mm256_storeu_pd(p.add(12), c11);
-    _mm256_storeu_pd(p.add(16), c20);
-    _mm256_storeu_pd(p.add(20), c21);
-    _mm256_storeu_pd(p.add(24), c30);
-    _mm256_storeu_pd(p.add(28), c31);
 }
 
+// SAFETY (callers): the `avx2` + `fma` target feature(s) must be enabled, and
+// the slice-length contract of the safe dispatch wrapper must hold
+// (it debug_asserts `bp`/`acc` against the tile geometry).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 unsafe fn tile1_avx2_fma(a: &[f64], bp: &[f64], acc: &mut [f64]) {
-    use core::arch::x86_64::*;
-    const NR: usize = 8;
-    let p = acc.as_mut_ptr();
-    let mut c0 = _mm256_loadu_pd(p);
-    let mut c1 = _mm256_loadu_pd(p.add(4));
-    let bpp = bp.as_ptr();
-    for (kk, &xv) in a.iter().enumerate() {
-        let x = _mm256_set1_pd(xv);
-        let y0 = _mm256_loadu_pd(bpp.add(kk * NR));
-        let y1 = _mm256_loadu_pd(bpp.add(kk * NR + 4));
-        c0 = _mm256_fmadd_pd(x, y0, c0);
-        c1 = _mm256_fmadd_pd(x, y1, c1);
+    // SAFETY: the dispatcher established the target feature, and all
+    // raw loads/stores below stay inside `bp`/`acc` per the length
+    // contract debug_asserted by the safe wrapper; the unaligned
+    // intrinsics carry no alignment requirement.
+    unsafe {
+        use core::arch::x86_64::*;
+        const NR: usize = 8;
+        let p = acc.as_mut_ptr();
+        let mut c0 = _mm256_loadu_pd(p);
+        let mut c1 = _mm256_loadu_pd(p.add(4));
+        let bpp = bp.as_ptr();
+        for (kk, &xv) in a.iter().enumerate() {
+            let x = _mm256_set1_pd(xv);
+            let y0 = _mm256_loadu_pd(bpp.add(kk * NR));
+            let y1 = _mm256_loadu_pd(bpp.add(kk * NR + 4));
+            c0 = _mm256_fmadd_pd(x, y0, c0);
+            c1 = _mm256_fmadd_pd(x, y1, c1);
+        }
+        _mm256_storeu_pd(p, c0);
+        _mm256_storeu_pd(p.add(4), c1);
     }
-    _mm256_storeu_pd(p, c0);
-    _mm256_storeu_pd(p.add(4), c1);
 }
 
 // --- aarch64: NEON (baseline) ----------------------------------------------
 
+// SAFETY (callers): the `neon` target feature(s) must be enabled, and
+// the slice-length contract of the safe dispatch wrapper must hold
+// (it debug_asserts `bp`/`acc` against the tile geometry).
 #[cfg(target_arch = "aarch64")]
 #[target_feature(enable = "neon")]
 unsafe fn tile4_neon(a: [&[f64]; 4], bp: &[f64], acc: &mut [f64]) {
-    use core::arch::aarch64::*;
-    const NR: usize = 4;
-    let kw = a[0].len();
-    let (a0, a1, a2, a3) = (a[0], a[1], a[2], a[3]);
-    let p = acc.as_mut_ptr();
-    let mut c00 = vld1q_f64(p);
-    let mut c01 = vld1q_f64(p.add(2));
-    let mut c10 = vld1q_f64(p.add(4));
-    let mut c11 = vld1q_f64(p.add(6));
-    let mut c20 = vld1q_f64(p.add(8));
-    let mut c21 = vld1q_f64(p.add(10));
-    let mut c30 = vld1q_f64(p.add(12));
-    let mut c31 = vld1q_f64(p.add(14));
-    let bpp = bp.as_ptr();
-    for kk in 0..kw {
-        let y0 = vld1q_f64(bpp.add(kk * NR));
-        let y1 = vld1q_f64(bpp.add(kk * NR + 2));
-        // vmulq + vaddq, never vfmaq: keep the two-rounding scalar program
-        let x0 = vdupq_n_f64(a0[kk]);
-        c00 = vaddq_f64(c00, vmulq_f64(x0, y0));
-        c01 = vaddq_f64(c01, vmulq_f64(x0, y1));
-        let x1 = vdupq_n_f64(a1[kk]);
-        c10 = vaddq_f64(c10, vmulq_f64(x1, y0));
-        c11 = vaddq_f64(c11, vmulq_f64(x1, y1));
-        let x2 = vdupq_n_f64(a2[kk]);
-        c20 = vaddq_f64(c20, vmulq_f64(x2, y0));
-        c21 = vaddq_f64(c21, vmulq_f64(x2, y1));
-        let x3 = vdupq_n_f64(a3[kk]);
-        c30 = vaddq_f64(c30, vmulq_f64(x3, y0));
-        c31 = vaddq_f64(c31, vmulq_f64(x3, y1));
+    // SAFETY: the dispatcher established the target feature, and all
+    // raw loads/stores below stay inside `bp`/`acc` per the length
+    // contract debug_asserted by the safe wrapper; the unaligned
+    // intrinsics carry no alignment requirement.
+    unsafe {
+        use core::arch::aarch64::*;
+        const NR: usize = 4;
+        let kw = a[0].len();
+        let (a0, a1, a2, a3) = (a[0], a[1], a[2], a[3]);
+        let p = acc.as_mut_ptr();
+        let mut c00 = vld1q_f64(p);
+        let mut c01 = vld1q_f64(p.add(2));
+        let mut c10 = vld1q_f64(p.add(4));
+        let mut c11 = vld1q_f64(p.add(6));
+        let mut c20 = vld1q_f64(p.add(8));
+        let mut c21 = vld1q_f64(p.add(10));
+        let mut c30 = vld1q_f64(p.add(12));
+        let mut c31 = vld1q_f64(p.add(14));
+        let bpp = bp.as_ptr();
+        for kk in 0..kw {
+            let y0 = vld1q_f64(bpp.add(kk * NR));
+            let y1 = vld1q_f64(bpp.add(kk * NR + 2));
+            // vmulq + vaddq, never vfmaq: keep the two-rounding scalar program
+            let x0 = vdupq_n_f64(a0[kk]);
+            c00 = vaddq_f64(c00, vmulq_f64(x0, y0));
+            c01 = vaddq_f64(c01, vmulq_f64(x0, y1));
+            let x1 = vdupq_n_f64(a1[kk]);
+            c10 = vaddq_f64(c10, vmulq_f64(x1, y0));
+            c11 = vaddq_f64(c11, vmulq_f64(x1, y1));
+            let x2 = vdupq_n_f64(a2[kk]);
+            c20 = vaddq_f64(c20, vmulq_f64(x2, y0));
+            c21 = vaddq_f64(c21, vmulq_f64(x2, y1));
+            let x3 = vdupq_n_f64(a3[kk]);
+            c30 = vaddq_f64(c30, vmulq_f64(x3, y0));
+            c31 = vaddq_f64(c31, vmulq_f64(x3, y1));
+        }
+        vst1q_f64(p, c00);
+        vst1q_f64(p.add(2), c01);
+        vst1q_f64(p.add(4), c10);
+        vst1q_f64(p.add(6), c11);
+        vst1q_f64(p.add(8), c20);
+        vst1q_f64(p.add(10), c21);
+        vst1q_f64(p.add(12), c30);
+        vst1q_f64(p.add(14), c31);
     }
-    vst1q_f64(p, c00);
-    vst1q_f64(p.add(2), c01);
-    vst1q_f64(p.add(4), c10);
-    vst1q_f64(p.add(6), c11);
-    vst1q_f64(p.add(8), c20);
-    vst1q_f64(p.add(10), c21);
-    vst1q_f64(p.add(12), c30);
-    vst1q_f64(p.add(14), c31);
 }
 
+// SAFETY (callers): the `neon` target feature(s) must be enabled, and
+// the slice-length contract of the safe dispatch wrapper must hold
+// (it debug_asserts `bp`/`acc` against the tile geometry).
 #[cfg(target_arch = "aarch64")]
 #[target_feature(enable = "neon")]
 unsafe fn tile1_neon(a: &[f64], bp: &[f64], acc: &mut [f64]) {
-    use core::arch::aarch64::*;
-    const NR: usize = 4;
-    let p = acc.as_mut_ptr();
-    let mut c0 = vld1q_f64(p);
-    let mut c1 = vld1q_f64(p.add(2));
-    let bpp = bp.as_ptr();
-    for (kk, &xv) in a.iter().enumerate() {
-        let x = vdupq_n_f64(xv);
-        let y0 = vld1q_f64(bpp.add(kk * NR));
-        let y1 = vld1q_f64(bpp.add(kk * NR + 2));
-        c0 = vaddq_f64(c0, vmulq_f64(x, y0));
-        c1 = vaddq_f64(c1, vmulq_f64(x, y1));
+    // SAFETY: the dispatcher established the target feature, and all
+    // raw loads/stores below stay inside `bp`/`acc` per the length
+    // contract debug_asserted by the safe wrapper; the unaligned
+    // intrinsics carry no alignment requirement.
+    unsafe {
+        use core::arch::aarch64::*;
+        const NR: usize = 4;
+        let p = acc.as_mut_ptr();
+        let mut c0 = vld1q_f64(p);
+        let mut c1 = vld1q_f64(p.add(2));
+        let bpp = bp.as_ptr();
+        for (kk, &xv) in a.iter().enumerate() {
+            let x = vdupq_n_f64(xv);
+            let y0 = vld1q_f64(bpp.add(kk * NR));
+            let y1 = vld1q_f64(bpp.add(kk * NR + 2));
+            c0 = vaddq_f64(c0, vmulq_f64(x, y0));
+            c1 = vaddq_f64(c1, vmulq_f64(x, y1));
+        }
+        vst1q_f64(p, c0);
+        vst1q_f64(p.add(2), c1);
     }
-    vst1q_f64(p, c0);
-    vst1q_f64(p.add(2), c1);
 }
 
+// SAFETY (callers): the `neon` target feature(s) must be enabled, and
+// the slice-length contract of the safe dispatch wrapper must hold
+// (it debug_asserts `bp`/`acc` against the tile geometry).
 #[cfg(target_arch = "aarch64")]
 #[target_feature(enable = "neon")]
 unsafe fn tile4_neon_fma(a: [&[f64]; 4], bp: &[f64], acc: &mut [f64]) {
-    use core::arch::aarch64::*;
-    const NR: usize = 4;
-    let kw = a[0].len();
-    let (a0, a1, a2, a3) = (a[0], a[1], a[2], a[3]);
-    let p = acc.as_mut_ptr();
-    let mut c00 = vld1q_f64(p);
-    let mut c01 = vld1q_f64(p.add(2));
-    let mut c10 = vld1q_f64(p.add(4));
-    let mut c11 = vld1q_f64(p.add(6));
-    let mut c20 = vld1q_f64(p.add(8));
-    let mut c21 = vld1q_f64(p.add(10));
-    let mut c30 = vld1q_f64(p.add(12));
-    let mut c31 = vld1q_f64(p.add(14));
-    let bpp = bp.as_ptr();
-    for kk in 0..kw {
-        let y0 = vld1q_f64(bpp.add(kk * NR));
-        let y1 = vld1q_f64(bpp.add(kk * NR + 2));
-        // vfmaq_f64(acc, x, y) = acc + x·y, fused — the FMA-mode program
-        let x0 = vdupq_n_f64(a0[kk]);
-        c00 = vfmaq_f64(c00, x0, y0);
-        c01 = vfmaq_f64(c01, x0, y1);
-        let x1 = vdupq_n_f64(a1[kk]);
-        c10 = vfmaq_f64(c10, x1, y0);
-        c11 = vfmaq_f64(c11, x1, y1);
-        let x2 = vdupq_n_f64(a2[kk]);
-        c20 = vfmaq_f64(c20, x2, y0);
-        c21 = vfmaq_f64(c21, x2, y1);
-        let x3 = vdupq_n_f64(a3[kk]);
-        c30 = vfmaq_f64(c30, x3, y0);
-        c31 = vfmaq_f64(c31, x3, y1);
+    // SAFETY: the dispatcher established the target feature, and all
+    // raw loads/stores below stay inside `bp`/`acc` per the length
+    // contract debug_asserted by the safe wrapper; the unaligned
+    // intrinsics carry no alignment requirement.
+    unsafe {
+        use core::arch::aarch64::*;
+        const NR: usize = 4;
+        let kw = a[0].len();
+        let (a0, a1, a2, a3) = (a[0], a[1], a[2], a[3]);
+        let p = acc.as_mut_ptr();
+        let mut c00 = vld1q_f64(p);
+        let mut c01 = vld1q_f64(p.add(2));
+        let mut c10 = vld1q_f64(p.add(4));
+        let mut c11 = vld1q_f64(p.add(6));
+        let mut c20 = vld1q_f64(p.add(8));
+        let mut c21 = vld1q_f64(p.add(10));
+        let mut c30 = vld1q_f64(p.add(12));
+        let mut c31 = vld1q_f64(p.add(14));
+        let bpp = bp.as_ptr();
+        for kk in 0..kw {
+            let y0 = vld1q_f64(bpp.add(kk * NR));
+            let y1 = vld1q_f64(bpp.add(kk * NR + 2));
+            // vfmaq_f64(acc, x, y) = acc + x·y, fused — the FMA-mode program
+            let x0 = vdupq_n_f64(a0[kk]);
+            c00 = vfmaq_f64(c00, x0, y0);
+            c01 = vfmaq_f64(c01, x0, y1);
+            let x1 = vdupq_n_f64(a1[kk]);
+            c10 = vfmaq_f64(c10, x1, y0);
+            c11 = vfmaq_f64(c11, x1, y1);
+            let x2 = vdupq_n_f64(a2[kk]);
+            c20 = vfmaq_f64(c20, x2, y0);
+            c21 = vfmaq_f64(c21, x2, y1);
+            let x3 = vdupq_n_f64(a3[kk]);
+            c30 = vfmaq_f64(c30, x3, y0);
+            c31 = vfmaq_f64(c31, x3, y1);
+        }
+        vst1q_f64(p, c00);
+        vst1q_f64(p.add(2), c01);
+        vst1q_f64(p.add(4), c10);
+        vst1q_f64(p.add(6), c11);
+        vst1q_f64(p.add(8), c20);
+        vst1q_f64(p.add(10), c21);
+        vst1q_f64(p.add(12), c30);
+        vst1q_f64(p.add(14), c31);
     }
-    vst1q_f64(p, c00);
-    vst1q_f64(p.add(2), c01);
-    vst1q_f64(p.add(4), c10);
-    vst1q_f64(p.add(6), c11);
-    vst1q_f64(p.add(8), c20);
-    vst1q_f64(p.add(10), c21);
-    vst1q_f64(p.add(12), c30);
-    vst1q_f64(p.add(14), c31);
 }
 
+// SAFETY (callers): the `neon` target feature(s) must be enabled, and
+// the slice-length contract of the safe dispatch wrapper must hold
+// (it debug_asserts `bp`/`acc` against the tile geometry).
 #[cfg(target_arch = "aarch64")]
 #[target_feature(enable = "neon")]
 unsafe fn tile1_neon_fma(a: &[f64], bp: &[f64], acc: &mut [f64]) {
-    use core::arch::aarch64::*;
-    const NR: usize = 4;
-    let p = acc.as_mut_ptr();
-    let mut c0 = vld1q_f64(p);
-    let mut c1 = vld1q_f64(p.add(2));
-    let bpp = bp.as_ptr();
-    for (kk, &xv) in a.iter().enumerate() {
-        let x = vdupq_n_f64(xv);
-        let y0 = vld1q_f64(bpp.add(kk * NR));
-        let y1 = vld1q_f64(bpp.add(kk * NR + 2));
-        c0 = vfmaq_f64(c0, x, y0);
-        c1 = vfmaq_f64(c1, x, y1);
+    // SAFETY: the dispatcher established the target feature, and all
+    // raw loads/stores below stay inside `bp`/`acc` per the length
+    // contract debug_asserted by the safe wrapper; the unaligned
+    // intrinsics carry no alignment requirement.
+    unsafe {
+        use core::arch::aarch64::*;
+        const NR: usize = 4;
+        let p = acc.as_mut_ptr();
+        let mut c0 = vld1q_f64(p);
+        let mut c1 = vld1q_f64(p.add(2));
+        let bpp = bp.as_ptr();
+        for (kk, &xv) in a.iter().enumerate() {
+            let x = vdupq_n_f64(xv);
+            let y0 = vld1q_f64(bpp.add(kk * NR));
+            let y1 = vld1q_f64(bpp.add(kk * NR + 2));
+            c0 = vfmaq_f64(c0, x, y0);
+            c1 = vfmaq_f64(c1, x, y1);
+        }
+        vst1q_f64(p, c0);
+        vst1q_f64(p.add(2), c1);
     }
-    vst1q_f64(p, c0);
-    vst1q_f64(p.add(2), c1);
 }
 
 // ---------------------------------------------------------------------------
@@ -854,10 +946,12 @@ fn tile4_f32_fma(be: Backend, a: [&[f32]; 4], bp: &[f32], acc: &mut [f32]) {
 fn tile1_f32_fma(be: Backend, a: &[f32], bp: &[f32], acc: &mut [f32]) {
     match be {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: avx2 selectable ⇒ available; fma_hw() just checked.
         Backend::Avx2 if fma_hw() => unsafe {
             tile1_f32_avx2_fma(a, bp, acc)
         },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON (incl. fused vfmaq) is baseline on aarch64.
         Backend::Neon => unsafe { tile1_f32_neon_fma(a, bp, acc) },
         other => tile1_f32_scalar_fma(a, bp, acc, other.nr32()),
     }
@@ -914,326 +1008,416 @@ fn tile1_f32_scalar_fma(a: &[f32], bp: &[f32], acc: &mut [f32], nr: usize) {
 
 // --- f32 x86_64: SSE2 (baseline) and AVX2 (runtime-detected) ---------------
 
+// SAFETY (callers): the `sse2` target feature(s) must be enabled, and
+// the slice-length contract of the safe dispatch wrapper must hold
+// (it debug_asserts `bp`/`acc` against the tile geometry).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "sse2")]
 unsafe fn tile4_f32_sse2(a: [&[f32]; 4], bp: &[f32], acc: &mut [f32]) {
-    use core::arch::x86_64::*;
-    const NR: usize = 8;
-    let kw = a[0].len();
-    let (a0, a1, a2, a3) = (a[0], a[1], a[2], a[3]);
-    let p = acc.as_mut_ptr();
-    let mut c00 = _mm_loadu_ps(p);
-    let mut c01 = _mm_loadu_ps(p.add(4));
-    let mut c10 = _mm_loadu_ps(p.add(8));
-    let mut c11 = _mm_loadu_ps(p.add(12));
-    let mut c20 = _mm_loadu_ps(p.add(16));
-    let mut c21 = _mm_loadu_ps(p.add(20));
-    let mut c30 = _mm_loadu_ps(p.add(24));
-    let mut c31 = _mm_loadu_ps(p.add(28));
-    let bpp = bp.as_ptr();
-    for kk in 0..kw {
-        let y0 = _mm_loadu_ps(bpp.add(kk * NR));
-        let y1 = _mm_loadu_ps(bpp.add(kk * NR + 4));
-        let x0 = _mm_set1_ps(a0[kk]);
-        c00 = _mm_add_ps(c00, _mm_mul_ps(x0, y0));
-        c01 = _mm_add_ps(c01, _mm_mul_ps(x0, y1));
-        let x1 = _mm_set1_ps(a1[kk]);
-        c10 = _mm_add_ps(c10, _mm_mul_ps(x1, y0));
-        c11 = _mm_add_ps(c11, _mm_mul_ps(x1, y1));
-        let x2 = _mm_set1_ps(a2[kk]);
-        c20 = _mm_add_ps(c20, _mm_mul_ps(x2, y0));
-        c21 = _mm_add_ps(c21, _mm_mul_ps(x2, y1));
-        let x3 = _mm_set1_ps(a3[kk]);
-        c30 = _mm_add_ps(c30, _mm_mul_ps(x3, y0));
-        c31 = _mm_add_ps(c31, _mm_mul_ps(x3, y1));
+    // SAFETY: the dispatcher established the target feature, and all
+    // raw loads/stores below stay inside `bp`/`acc` per the length
+    // contract debug_asserted by the safe wrapper; the unaligned
+    // intrinsics carry no alignment requirement.
+    unsafe {
+        use core::arch::x86_64::*;
+        const NR: usize = 8;
+        let kw = a[0].len();
+        let (a0, a1, a2, a3) = (a[0], a[1], a[2], a[3]);
+        let p = acc.as_mut_ptr();
+        let mut c00 = _mm_loadu_ps(p);
+        let mut c01 = _mm_loadu_ps(p.add(4));
+        let mut c10 = _mm_loadu_ps(p.add(8));
+        let mut c11 = _mm_loadu_ps(p.add(12));
+        let mut c20 = _mm_loadu_ps(p.add(16));
+        let mut c21 = _mm_loadu_ps(p.add(20));
+        let mut c30 = _mm_loadu_ps(p.add(24));
+        let mut c31 = _mm_loadu_ps(p.add(28));
+        let bpp = bp.as_ptr();
+        for kk in 0..kw {
+            let y0 = _mm_loadu_ps(bpp.add(kk * NR));
+            let y1 = _mm_loadu_ps(bpp.add(kk * NR + 4));
+            let x0 = _mm_set1_ps(a0[kk]);
+            c00 = _mm_add_ps(c00, _mm_mul_ps(x0, y0));
+            c01 = _mm_add_ps(c01, _mm_mul_ps(x0, y1));
+            let x1 = _mm_set1_ps(a1[kk]);
+            c10 = _mm_add_ps(c10, _mm_mul_ps(x1, y0));
+            c11 = _mm_add_ps(c11, _mm_mul_ps(x1, y1));
+            let x2 = _mm_set1_ps(a2[kk]);
+            c20 = _mm_add_ps(c20, _mm_mul_ps(x2, y0));
+            c21 = _mm_add_ps(c21, _mm_mul_ps(x2, y1));
+            let x3 = _mm_set1_ps(a3[kk]);
+            c30 = _mm_add_ps(c30, _mm_mul_ps(x3, y0));
+            c31 = _mm_add_ps(c31, _mm_mul_ps(x3, y1));
+        }
+        _mm_storeu_ps(p, c00);
+        _mm_storeu_ps(p.add(4), c01);
+        _mm_storeu_ps(p.add(8), c10);
+        _mm_storeu_ps(p.add(12), c11);
+        _mm_storeu_ps(p.add(16), c20);
+        _mm_storeu_ps(p.add(20), c21);
+        _mm_storeu_ps(p.add(24), c30);
+        _mm_storeu_ps(p.add(28), c31);
     }
-    _mm_storeu_ps(p, c00);
-    _mm_storeu_ps(p.add(4), c01);
-    _mm_storeu_ps(p.add(8), c10);
-    _mm_storeu_ps(p.add(12), c11);
-    _mm_storeu_ps(p.add(16), c20);
-    _mm_storeu_ps(p.add(20), c21);
-    _mm_storeu_ps(p.add(24), c30);
-    _mm_storeu_ps(p.add(28), c31);
 }
 
+// SAFETY (callers): the `sse2` target feature(s) must be enabled, and
+// the slice-length contract of the safe dispatch wrapper must hold
+// (it debug_asserts `bp`/`acc` against the tile geometry).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "sse2")]
 unsafe fn tile1_f32_sse2(a: &[f32], bp: &[f32], acc: &mut [f32]) {
-    use core::arch::x86_64::*;
-    const NR: usize = 8;
-    let p = acc.as_mut_ptr();
-    let mut c0 = _mm_loadu_ps(p);
-    let mut c1 = _mm_loadu_ps(p.add(4));
-    let bpp = bp.as_ptr();
-    for (kk, &xv) in a.iter().enumerate() {
-        let x = _mm_set1_ps(xv);
-        let y0 = _mm_loadu_ps(bpp.add(kk * NR));
-        let y1 = _mm_loadu_ps(bpp.add(kk * NR + 4));
-        c0 = _mm_add_ps(c0, _mm_mul_ps(x, y0));
-        c1 = _mm_add_ps(c1, _mm_mul_ps(x, y1));
+    // SAFETY: the dispatcher established the target feature, and all
+    // raw loads/stores below stay inside `bp`/`acc` per the length
+    // contract debug_asserted by the safe wrapper; the unaligned
+    // intrinsics carry no alignment requirement.
+    unsafe {
+        use core::arch::x86_64::*;
+        const NR: usize = 8;
+        let p = acc.as_mut_ptr();
+        let mut c0 = _mm_loadu_ps(p);
+        let mut c1 = _mm_loadu_ps(p.add(4));
+        let bpp = bp.as_ptr();
+        for (kk, &xv) in a.iter().enumerate() {
+            let x = _mm_set1_ps(xv);
+            let y0 = _mm_loadu_ps(bpp.add(kk * NR));
+            let y1 = _mm_loadu_ps(bpp.add(kk * NR + 4));
+            c0 = _mm_add_ps(c0, _mm_mul_ps(x, y0));
+            c1 = _mm_add_ps(c1, _mm_mul_ps(x, y1));
+        }
+        _mm_storeu_ps(p, c0);
+        _mm_storeu_ps(p.add(4), c1);
     }
-    _mm_storeu_ps(p, c0);
-    _mm_storeu_ps(p.add(4), c1);
 }
 
+// SAFETY (callers): the `avx2` target feature(s) must be enabled, and
+// the slice-length contract of the safe dispatch wrapper must hold
+// (it debug_asserts `bp`/`acc` against the tile geometry).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn tile4_f32_avx2(a: [&[f32]; 4], bp: &[f32], acc: &mut [f32]) {
-    use core::arch::x86_64::*;
-    const NR: usize = 16;
-    let kw = a[0].len();
-    let (a0, a1, a2, a3) = (a[0], a[1], a[2], a[3]);
-    let p = acc.as_mut_ptr();
-    let mut c00 = _mm256_loadu_ps(p);
-    let mut c01 = _mm256_loadu_ps(p.add(8));
-    let mut c10 = _mm256_loadu_ps(p.add(16));
-    let mut c11 = _mm256_loadu_ps(p.add(24));
-    let mut c20 = _mm256_loadu_ps(p.add(32));
-    let mut c21 = _mm256_loadu_ps(p.add(40));
-    let mut c30 = _mm256_loadu_ps(p.add(48));
-    let mut c31 = _mm256_loadu_ps(p.add(56));
-    let bpp = bp.as_ptr();
-    for kk in 0..kw {
-        let y0 = _mm256_loadu_ps(bpp.add(kk * NR));
-        let y1 = _mm256_loadu_ps(bpp.add(kk * NR + 8));
-        // mul then add, never _mm256_fmadd_ps: FMA's single rounding
-        // would diverge from the canonical scalar program.
-        let x0 = _mm256_set1_ps(a0[kk]);
-        c00 = _mm256_add_ps(c00, _mm256_mul_ps(x0, y0));
-        c01 = _mm256_add_ps(c01, _mm256_mul_ps(x0, y1));
-        let x1 = _mm256_set1_ps(a1[kk]);
-        c10 = _mm256_add_ps(c10, _mm256_mul_ps(x1, y0));
-        c11 = _mm256_add_ps(c11, _mm256_mul_ps(x1, y1));
-        let x2 = _mm256_set1_ps(a2[kk]);
-        c20 = _mm256_add_ps(c20, _mm256_mul_ps(x2, y0));
-        c21 = _mm256_add_ps(c21, _mm256_mul_ps(x2, y1));
-        let x3 = _mm256_set1_ps(a3[kk]);
-        c30 = _mm256_add_ps(c30, _mm256_mul_ps(x3, y0));
-        c31 = _mm256_add_ps(c31, _mm256_mul_ps(x3, y1));
+    // SAFETY: the dispatcher established the target feature, and all
+    // raw loads/stores below stay inside `bp`/`acc` per the length
+    // contract debug_asserted by the safe wrapper; the unaligned
+    // intrinsics carry no alignment requirement.
+    unsafe {
+        use core::arch::x86_64::*;
+        const NR: usize = 16;
+        let kw = a[0].len();
+        let (a0, a1, a2, a3) = (a[0], a[1], a[2], a[3]);
+        let p = acc.as_mut_ptr();
+        let mut c00 = _mm256_loadu_ps(p);
+        let mut c01 = _mm256_loadu_ps(p.add(8));
+        let mut c10 = _mm256_loadu_ps(p.add(16));
+        let mut c11 = _mm256_loadu_ps(p.add(24));
+        let mut c20 = _mm256_loadu_ps(p.add(32));
+        let mut c21 = _mm256_loadu_ps(p.add(40));
+        let mut c30 = _mm256_loadu_ps(p.add(48));
+        let mut c31 = _mm256_loadu_ps(p.add(56));
+        let bpp = bp.as_ptr();
+        for kk in 0..kw {
+            let y0 = _mm256_loadu_ps(bpp.add(kk * NR));
+            let y1 = _mm256_loadu_ps(bpp.add(kk * NR + 8));
+            // mul then add, never _mm256_fmadd_ps: FMA's single rounding
+            // would diverge from the canonical scalar program.
+            let x0 = _mm256_set1_ps(a0[kk]);
+            c00 = _mm256_add_ps(c00, _mm256_mul_ps(x0, y0));
+            c01 = _mm256_add_ps(c01, _mm256_mul_ps(x0, y1));
+            let x1 = _mm256_set1_ps(a1[kk]);
+            c10 = _mm256_add_ps(c10, _mm256_mul_ps(x1, y0));
+            c11 = _mm256_add_ps(c11, _mm256_mul_ps(x1, y1));
+            let x2 = _mm256_set1_ps(a2[kk]);
+            c20 = _mm256_add_ps(c20, _mm256_mul_ps(x2, y0));
+            c21 = _mm256_add_ps(c21, _mm256_mul_ps(x2, y1));
+            let x3 = _mm256_set1_ps(a3[kk]);
+            c30 = _mm256_add_ps(c30, _mm256_mul_ps(x3, y0));
+            c31 = _mm256_add_ps(c31, _mm256_mul_ps(x3, y1));
+        }
+        _mm256_storeu_ps(p, c00);
+        _mm256_storeu_ps(p.add(8), c01);
+        _mm256_storeu_ps(p.add(16), c10);
+        _mm256_storeu_ps(p.add(24), c11);
+        _mm256_storeu_ps(p.add(32), c20);
+        _mm256_storeu_ps(p.add(40), c21);
+        _mm256_storeu_ps(p.add(48), c30);
+        _mm256_storeu_ps(p.add(56), c31);
     }
-    _mm256_storeu_ps(p, c00);
-    _mm256_storeu_ps(p.add(8), c01);
-    _mm256_storeu_ps(p.add(16), c10);
-    _mm256_storeu_ps(p.add(24), c11);
-    _mm256_storeu_ps(p.add(32), c20);
-    _mm256_storeu_ps(p.add(40), c21);
-    _mm256_storeu_ps(p.add(48), c30);
-    _mm256_storeu_ps(p.add(56), c31);
 }
 
+// SAFETY (callers): the `avx2` target feature(s) must be enabled, and
+// the slice-length contract of the safe dispatch wrapper must hold
+// (it debug_asserts `bp`/`acc` against the tile geometry).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn tile1_f32_avx2(a: &[f32], bp: &[f32], acc: &mut [f32]) {
-    use core::arch::x86_64::*;
-    const NR: usize = 16;
-    let p = acc.as_mut_ptr();
-    let mut c0 = _mm256_loadu_ps(p);
-    let mut c1 = _mm256_loadu_ps(p.add(8));
-    let bpp = bp.as_ptr();
-    for (kk, &xv) in a.iter().enumerate() {
-        let x = _mm256_set1_ps(xv);
-        let y0 = _mm256_loadu_ps(bpp.add(kk * NR));
-        let y1 = _mm256_loadu_ps(bpp.add(kk * NR + 8));
-        c0 = _mm256_add_ps(c0, _mm256_mul_ps(x, y0));
-        c1 = _mm256_add_ps(c1, _mm256_mul_ps(x, y1));
+    // SAFETY: the dispatcher established the target feature, and all
+    // raw loads/stores below stay inside `bp`/`acc` per the length
+    // contract debug_asserted by the safe wrapper; the unaligned
+    // intrinsics carry no alignment requirement.
+    unsafe {
+        use core::arch::x86_64::*;
+        const NR: usize = 16;
+        let p = acc.as_mut_ptr();
+        let mut c0 = _mm256_loadu_ps(p);
+        let mut c1 = _mm256_loadu_ps(p.add(8));
+        let bpp = bp.as_ptr();
+        for (kk, &xv) in a.iter().enumerate() {
+            let x = _mm256_set1_ps(xv);
+            let y0 = _mm256_loadu_ps(bpp.add(kk * NR));
+            let y1 = _mm256_loadu_ps(bpp.add(kk * NR + 8));
+            c0 = _mm256_add_ps(c0, _mm256_mul_ps(x, y0));
+            c1 = _mm256_add_ps(c1, _mm256_mul_ps(x, y1));
+        }
+        _mm256_storeu_ps(p, c0);
+        _mm256_storeu_ps(p.add(8), c1);
     }
-    _mm256_storeu_ps(p, c0);
-    _mm256_storeu_ps(p.add(8), c1);
 }
 
+// SAFETY (callers): the `avx2` + `fma` target feature(s) must be enabled, and
+// the slice-length contract of the safe dispatch wrapper must hold
+// (it debug_asserts `bp`/`acc` against the tile geometry).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 unsafe fn tile4_f32_avx2_fma(a: [&[f32]; 4], bp: &[f32], acc: &mut [f32]) {
-    use core::arch::x86_64::*;
-    const NR: usize = 16;
-    let kw = a[0].len();
-    let (a0, a1, a2, a3) = (a[0], a[1], a[2], a[3]);
-    let p = acc.as_mut_ptr();
-    let mut c00 = _mm256_loadu_ps(p);
-    let mut c01 = _mm256_loadu_ps(p.add(8));
-    let mut c10 = _mm256_loadu_ps(p.add(16));
-    let mut c11 = _mm256_loadu_ps(p.add(24));
-    let mut c20 = _mm256_loadu_ps(p.add(32));
-    let mut c21 = _mm256_loadu_ps(p.add(40));
-    let mut c30 = _mm256_loadu_ps(p.add(48));
-    let mut c31 = _mm256_loadu_ps(p.add(56));
-    let bpp = bp.as_ptr();
-    for kk in 0..kw {
-        let y0 = _mm256_loadu_ps(bpp.add(kk * NR));
-        let y1 = _mm256_loadu_ps(bpp.add(kk * NR + 8));
-        // the FMA-mode program: one correctly-rounded fused op per step
-        let x0 = _mm256_set1_ps(a0[kk]);
-        c00 = _mm256_fmadd_ps(x0, y0, c00);
-        c01 = _mm256_fmadd_ps(x0, y1, c01);
-        let x1 = _mm256_set1_ps(a1[kk]);
-        c10 = _mm256_fmadd_ps(x1, y0, c10);
-        c11 = _mm256_fmadd_ps(x1, y1, c11);
-        let x2 = _mm256_set1_ps(a2[kk]);
-        c20 = _mm256_fmadd_ps(x2, y0, c20);
-        c21 = _mm256_fmadd_ps(x2, y1, c21);
-        let x3 = _mm256_set1_ps(a3[kk]);
-        c30 = _mm256_fmadd_ps(x3, y0, c30);
-        c31 = _mm256_fmadd_ps(x3, y1, c31);
+    // SAFETY: the dispatcher established the target feature, and all
+    // raw loads/stores below stay inside `bp`/`acc` per the length
+    // contract debug_asserted by the safe wrapper; the unaligned
+    // intrinsics carry no alignment requirement.
+    unsafe {
+        use core::arch::x86_64::*;
+        const NR: usize = 16;
+        let kw = a[0].len();
+        let (a0, a1, a2, a3) = (a[0], a[1], a[2], a[3]);
+        let p = acc.as_mut_ptr();
+        let mut c00 = _mm256_loadu_ps(p);
+        let mut c01 = _mm256_loadu_ps(p.add(8));
+        let mut c10 = _mm256_loadu_ps(p.add(16));
+        let mut c11 = _mm256_loadu_ps(p.add(24));
+        let mut c20 = _mm256_loadu_ps(p.add(32));
+        let mut c21 = _mm256_loadu_ps(p.add(40));
+        let mut c30 = _mm256_loadu_ps(p.add(48));
+        let mut c31 = _mm256_loadu_ps(p.add(56));
+        let bpp = bp.as_ptr();
+        for kk in 0..kw {
+            let y0 = _mm256_loadu_ps(bpp.add(kk * NR));
+            let y1 = _mm256_loadu_ps(bpp.add(kk * NR + 8));
+            // the FMA-mode program: one correctly-rounded fused op per step
+            let x0 = _mm256_set1_ps(a0[kk]);
+            c00 = _mm256_fmadd_ps(x0, y0, c00);
+            c01 = _mm256_fmadd_ps(x0, y1, c01);
+            let x1 = _mm256_set1_ps(a1[kk]);
+            c10 = _mm256_fmadd_ps(x1, y0, c10);
+            c11 = _mm256_fmadd_ps(x1, y1, c11);
+            let x2 = _mm256_set1_ps(a2[kk]);
+            c20 = _mm256_fmadd_ps(x2, y0, c20);
+            c21 = _mm256_fmadd_ps(x2, y1, c21);
+            let x3 = _mm256_set1_ps(a3[kk]);
+            c30 = _mm256_fmadd_ps(x3, y0, c30);
+            c31 = _mm256_fmadd_ps(x3, y1, c31);
+        }
+        _mm256_storeu_ps(p, c00);
+        _mm256_storeu_ps(p.add(8), c01);
+        _mm256_storeu_ps(p.add(16), c10);
+        _mm256_storeu_ps(p.add(24), c11);
+        _mm256_storeu_ps(p.add(32), c20);
+        _mm256_storeu_ps(p.add(40), c21);
+        _mm256_storeu_ps(p.add(48), c30);
+        _mm256_storeu_ps(p.add(56), c31);
     }
-    _mm256_storeu_ps(p, c00);
-    _mm256_storeu_ps(p.add(8), c01);
-    _mm256_storeu_ps(p.add(16), c10);
-    _mm256_storeu_ps(p.add(24), c11);
-    _mm256_storeu_ps(p.add(32), c20);
-    _mm256_storeu_ps(p.add(40), c21);
-    _mm256_storeu_ps(p.add(48), c30);
-    _mm256_storeu_ps(p.add(56), c31);
 }
 
+// SAFETY (callers): the `avx2` + `fma` target feature(s) must be enabled, and
+// the slice-length contract of the safe dispatch wrapper must hold
+// (it debug_asserts `bp`/`acc` against the tile geometry).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 unsafe fn tile1_f32_avx2_fma(a: &[f32], bp: &[f32], acc: &mut [f32]) {
-    use core::arch::x86_64::*;
-    const NR: usize = 16;
-    let p = acc.as_mut_ptr();
-    let mut c0 = _mm256_loadu_ps(p);
-    let mut c1 = _mm256_loadu_ps(p.add(8));
-    let bpp = bp.as_ptr();
-    for (kk, &xv) in a.iter().enumerate() {
-        let x = _mm256_set1_ps(xv);
-        let y0 = _mm256_loadu_ps(bpp.add(kk * NR));
-        let y1 = _mm256_loadu_ps(bpp.add(kk * NR + 8));
-        c0 = _mm256_fmadd_ps(x, y0, c0);
-        c1 = _mm256_fmadd_ps(x, y1, c1);
+    // SAFETY: the dispatcher established the target feature, and all
+    // raw loads/stores below stay inside `bp`/`acc` per the length
+    // contract debug_asserted by the safe wrapper; the unaligned
+    // intrinsics carry no alignment requirement.
+    unsafe {
+        use core::arch::x86_64::*;
+        const NR: usize = 16;
+        let p = acc.as_mut_ptr();
+        let mut c0 = _mm256_loadu_ps(p);
+        let mut c1 = _mm256_loadu_ps(p.add(8));
+        let bpp = bp.as_ptr();
+        for (kk, &xv) in a.iter().enumerate() {
+            let x = _mm256_set1_ps(xv);
+            let y0 = _mm256_loadu_ps(bpp.add(kk * NR));
+            let y1 = _mm256_loadu_ps(bpp.add(kk * NR + 8));
+            c0 = _mm256_fmadd_ps(x, y0, c0);
+            c1 = _mm256_fmadd_ps(x, y1, c1);
+        }
+        _mm256_storeu_ps(p, c0);
+        _mm256_storeu_ps(p.add(8), c1);
     }
-    _mm256_storeu_ps(p, c0);
-    _mm256_storeu_ps(p.add(8), c1);
 }
 
 // --- f32 aarch64: NEON (baseline) ------------------------------------------
 
+// SAFETY (callers): the `neon` target feature(s) must be enabled, and
+// the slice-length contract of the safe dispatch wrapper must hold
+// (it debug_asserts `bp`/`acc` against the tile geometry).
 #[cfg(target_arch = "aarch64")]
 #[target_feature(enable = "neon")]
 unsafe fn tile4_f32_neon(a: [&[f32]; 4], bp: &[f32], acc: &mut [f32]) {
-    use core::arch::aarch64::*;
-    const NR: usize = 8;
-    let kw = a[0].len();
-    let (a0, a1, a2, a3) = (a[0], a[1], a[2], a[3]);
-    let p = acc.as_mut_ptr();
-    let mut c00 = vld1q_f32(p);
-    let mut c01 = vld1q_f32(p.add(4));
-    let mut c10 = vld1q_f32(p.add(8));
-    let mut c11 = vld1q_f32(p.add(12));
-    let mut c20 = vld1q_f32(p.add(16));
-    let mut c21 = vld1q_f32(p.add(20));
-    let mut c30 = vld1q_f32(p.add(24));
-    let mut c31 = vld1q_f32(p.add(28));
-    let bpp = bp.as_ptr();
-    for kk in 0..kw {
-        let y0 = vld1q_f32(bpp.add(kk * NR));
-        let y1 = vld1q_f32(bpp.add(kk * NR + 4));
-        // vmulq + vaddq, never vfmaq: keep the two-rounding scalar program
-        let x0 = vdupq_n_f32(a0[kk]);
-        c00 = vaddq_f32(c00, vmulq_f32(x0, y0));
-        c01 = vaddq_f32(c01, vmulq_f32(x0, y1));
-        let x1 = vdupq_n_f32(a1[kk]);
-        c10 = vaddq_f32(c10, vmulq_f32(x1, y0));
-        c11 = vaddq_f32(c11, vmulq_f32(x1, y1));
-        let x2 = vdupq_n_f32(a2[kk]);
-        c20 = vaddq_f32(c20, vmulq_f32(x2, y0));
-        c21 = vaddq_f32(c21, vmulq_f32(x2, y1));
-        let x3 = vdupq_n_f32(a3[kk]);
-        c30 = vaddq_f32(c30, vmulq_f32(x3, y0));
-        c31 = vaddq_f32(c31, vmulq_f32(x3, y1));
+    // SAFETY: the dispatcher established the target feature, and all
+    // raw loads/stores below stay inside `bp`/`acc` per the length
+    // contract debug_asserted by the safe wrapper; the unaligned
+    // intrinsics carry no alignment requirement.
+    unsafe {
+        use core::arch::aarch64::*;
+        const NR: usize = 8;
+        let kw = a[0].len();
+        let (a0, a1, a2, a3) = (a[0], a[1], a[2], a[3]);
+        let p = acc.as_mut_ptr();
+        let mut c00 = vld1q_f32(p);
+        let mut c01 = vld1q_f32(p.add(4));
+        let mut c10 = vld1q_f32(p.add(8));
+        let mut c11 = vld1q_f32(p.add(12));
+        let mut c20 = vld1q_f32(p.add(16));
+        let mut c21 = vld1q_f32(p.add(20));
+        let mut c30 = vld1q_f32(p.add(24));
+        let mut c31 = vld1q_f32(p.add(28));
+        let bpp = bp.as_ptr();
+        for kk in 0..kw {
+            let y0 = vld1q_f32(bpp.add(kk * NR));
+            let y1 = vld1q_f32(bpp.add(kk * NR + 4));
+            // vmulq + vaddq, never vfmaq: keep the two-rounding scalar program
+            let x0 = vdupq_n_f32(a0[kk]);
+            c00 = vaddq_f32(c00, vmulq_f32(x0, y0));
+            c01 = vaddq_f32(c01, vmulq_f32(x0, y1));
+            let x1 = vdupq_n_f32(a1[kk]);
+            c10 = vaddq_f32(c10, vmulq_f32(x1, y0));
+            c11 = vaddq_f32(c11, vmulq_f32(x1, y1));
+            let x2 = vdupq_n_f32(a2[kk]);
+            c20 = vaddq_f32(c20, vmulq_f32(x2, y0));
+            c21 = vaddq_f32(c21, vmulq_f32(x2, y1));
+            let x3 = vdupq_n_f32(a3[kk]);
+            c30 = vaddq_f32(c30, vmulq_f32(x3, y0));
+            c31 = vaddq_f32(c31, vmulq_f32(x3, y1));
+        }
+        vst1q_f32(p, c00);
+        vst1q_f32(p.add(4), c01);
+        vst1q_f32(p.add(8), c10);
+        vst1q_f32(p.add(12), c11);
+        vst1q_f32(p.add(16), c20);
+        vst1q_f32(p.add(20), c21);
+        vst1q_f32(p.add(24), c30);
+        vst1q_f32(p.add(28), c31);
     }
-    vst1q_f32(p, c00);
-    vst1q_f32(p.add(4), c01);
-    vst1q_f32(p.add(8), c10);
-    vst1q_f32(p.add(12), c11);
-    vst1q_f32(p.add(16), c20);
-    vst1q_f32(p.add(20), c21);
-    vst1q_f32(p.add(24), c30);
-    vst1q_f32(p.add(28), c31);
 }
 
+// SAFETY (callers): the `neon` target feature(s) must be enabled, and
+// the slice-length contract of the safe dispatch wrapper must hold
+// (it debug_asserts `bp`/`acc` against the tile geometry).
 #[cfg(target_arch = "aarch64")]
 #[target_feature(enable = "neon")]
 unsafe fn tile1_f32_neon(a: &[f32], bp: &[f32], acc: &mut [f32]) {
-    use core::arch::aarch64::*;
-    const NR: usize = 8;
-    let p = acc.as_mut_ptr();
-    let mut c0 = vld1q_f32(p);
-    let mut c1 = vld1q_f32(p.add(4));
-    let bpp = bp.as_ptr();
-    for (kk, &xv) in a.iter().enumerate() {
-        let x = vdupq_n_f32(xv);
-        let y0 = vld1q_f32(bpp.add(kk * NR));
-        let y1 = vld1q_f32(bpp.add(kk * NR + 4));
-        c0 = vaddq_f32(c0, vmulq_f32(x, y0));
-        c1 = vaddq_f32(c1, vmulq_f32(x, y1));
+    // SAFETY: the dispatcher established the target feature, and all
+    // raw loads/stores below stay inside `bp`/`acc` per the length
+    // contract debug_asserted by the safe wrapper; the unaligned
+    // intrinsics carry no alignment requirement.
+    unsafe {
+        use core::arch::aarch64::*;
+        const NR: usize = 8;
+        let p = acc.as_mut_ptr();
+        let mut c0 = vld1q_f32(p);
+        let mut c1 = vld1q_f32(p.add(4));
+        let bpp = bp.as_ptr();
+        for (kk, &xv) in a.iter().enumerate() {
+            let x = vdupq_n_f32(xv);
+            let y0 = vld1q_f32(bpp.add(kk * NR));
+            let y1 = vld1q_f32(bpp.add(kk * NR + 4));
+            c0 = vaddq_f32(c0, vmulq_f32(x, y0));
+            c1 = vaddq_f32(c1, vmulq_f32(x, y1));
+        }
+        vst1q_f32(p, c0);
+        vst1q_f32(p.add(4), c1);
     }
-    vst1q_f32(p, c0);
-    vst1q_f32(p.add(4), c1);
 }
 
+// SAFETY (callers): the `neon` target feature(s) must be enabled, and
+// the slice-length contract of the safe dispatch wrapper must hold
+// (it debug_asserts `bp`/`acc` against the tile geometry).
 #[cfg(target_arch = "aarch64")]
 #[target_feature(enable = "neon")]
 unsafe fn tile4_f32_neon_fma(a: [&[f32]; 4], bp: &[f32], acc: &mut [f32]) {
-    use core::arch::aarch64::*;
-    const NR: usize = 8;
-    let kw = a[0].len();
-    let (a0, a1, a2, a3) = (a[0], a[1], a[2], a[3]);
-    let p = acc.as_mut_ptr();
-    let mut c00 = vld1q_f32(p);
-    let mut c01 = vld1q_f32(p.add(4));
-    let mut c10 = vld1q_f32(p.add(8));
-    let mut c11 = vld1q_f32(p.add(12));
-    let mut c20 = vld1q_f32(p.add(16));
-    let mut c21 = vld1q_f32(p.add(20));
-    let mut c30 = vld1q_f32(p.add(24));
-    let mut c31 = vld1q_f32(p.add(28));
-    let bpp = bp.as_ptr();
-    for kk in 0..kw {
-        let y0 = vld1q_f32(bpp.add(kk * NR));
-        let y1 = vld1q_f32(bpp.add(kk * NR + 4));
-        // vfmaq_f32(acc, x, y) = acc + x·y, fused — the FMA-mode program
-        let x0 = vdupq_n_f32(a0[kk]);
-        c00 = vfmaq_f32(c00, x0, y0);
-        c01 = vfmaq_f32(c01, x0, y1);
-        let x1 = vdupq_n_f32(a1[kk]);
-        c10 = vfmaq_f32(c10, x1, y0);
-        c11 = vfmaq_f32(c11, x1, y1);
-        let x2 = vdupq_n_f32(a2[kk]);
-        c20 = vfmaq_f32(c20, x2, y0);
-        c21 = vfmaq_f32(c21, x2, y1);
-        let x3 = vdupq_n_f32(a3[kk]);
-        c30 = vfmaq_f32(c30, x3, y0);
-        c31 = vfmaq_f32(c31, x3, y1);
+    // SAFETY: the dispatcher established the target feature, and all
+    // raw loads/stores below stay inside `bp`/`acc` per the length
+    // contract debug_asserted by the safe wrapper; the unaligned
+    // intrinsics carry no alignment requirement.
+    unsafe {
+        use core::arch::aarch64::*;
+        const NR: usize = 8;
+        let kw = a[0].len();
+        let (a0, a1, a2, a3) = (a[0], a[1], a[2], a[3]);
+        let p = acc.as_mut_ptr();
+        let mut c00 = vld1q_f32(p);
+        let mut c01 = vld1q_f32(p.add(4));
+        let mut c10 = vld1q_f32(p.add(8));
+        let mut c11 = vld1q_f32(p.add(12));
+        let mut c20 = vld1q_f32(p.add(16));
+        let mut c21 = vld1q_f32(p.add(20));
+        let mut c30 = vld1q_f32(p.add(24));
+        let mut c31 = vld1q_f32(p.add(28));
+        let bpp = bp.as_ptr();
+        for kk in 0..kw {
+            let y0 = vld1q_f32(bpp.add(kk * NR));
+            let y1 = vld1q_f32(bpp.add(kk * NR + 4));
+            // vfmaq_f32(acc, x, y) = acc + x·y, fused — the FMA-mode program
+            let x0 = vdupq_n_f32(a0[kk]);
+            c00 = vfmaq_f32(c00, x0, y0);
+            c01 = vfmaq_f32(c01, x0, y1);
+            let x1 = vdupq_n_f32(a1[kk]);
+            c10 = vfmaq_f32(c10, x1, y0);
+            c11 = vfmaq_f32(c11, x1, y1);
+            let x2 = vdupq_n_f32(a2[kk]);
+            c20 = vfmaq_f32(c20, x2, y0);
+            c21 = vfmaq_f32(c21, x2, y1);
+            let x3 = vdupq_n_f32(a3[kk]);
+            c30 = vfmaq_f32(c30, x3, y0);
+            c31 = vfmaq_f32(c31, x3, y1);
+        }
+        vst1q_f32(p, c00);
+        vst1q_f32(p.add(4), c01);
+        vst1q_f32(p.add(8), c10);
+        vst1q_f32(p.add(12), c11);
+        vst1q_f32(p.add(16), c20);
+        vst1q_f32(p.add(20), c21);
+        vst1q_f32(p.add(24), c30);
+        vst1q_f32(p.add(28), c31);
     }
-    vst1q_f32(p, c00);
-    vst1q_f32(p.add(4), c01);
-    vst1q_f32(p.add(8), c10);
-    vst1q_f32(p.add(12), c11);
-    vst1q_f32(p.add(16), c20);
-    vst1q_f32(p.add(20), c21);
-    vst1q_f32(p.add(24), c30);
-    vst1q_f32(p.add(28), c31);
 }
 
+// SAFETY (callers): the `neon` target feature(s) must be enabled, and
+// the slice-length contract of the safe dispatch wrapper must hold
+// (it debug_asserts `bp`/`acc` against the tile geometry).
 #[cfg(target_arch = "aarch64")]
 #[target_feature(enable = "neon")]
 unsafe fn tile1_f32_neon_fma(a: &[f32], bp: &[f32], acc: &mut [f32]) {
-    use core::arch::aarch64::*;
-    const NR: usize = 8;
-    let p = acc.as_mut_ptr();
-    let mut c0 = vld1q_f32(p);
-    let mut c1 = vld1q_f32(p.add(4));
-    let bpp = bp.as_ptr();
-    for (kk, &xv) in a.iter().enumerate() {
-        let x = vdupq_n_f32(xv);
-        let y0 = vld1q_f32(bpp.add(kk * NR));
-        let y1 = vld1q_f32(bpp.add(kk * NR + 4));
-        c0 = vfmaq_f32(c0, x, y0);
-        c1 = vfmaq_f32(c1, x, y1);
+    // SAFETY: the dispatcher established the target feature, and all
+    // raw loads/stores below stay inside `bp`/`acc` per the length
+    // contract debug_asserted by the safe wrapper; the unaligned
+    // intrinsics carry no alignment requirement.
+    unsafe {
+        use core::arch::aarch64::*;
+        const NR: usize = 8;
+        let p = acc.as_mut_ptr();
+        let mut c0 = vld1q_f32(p);
+        let mut c1 = vld1q_f32(p.add(4));
+        let bpp = bp.as_ptr();
+        for (kk, &xv) in a.iter().enumerate() {
+            let x = vdupq_n_f32(xv);
+            let y0 = vld1q_f32(bpp.add(kk * NR));
+            let y1 = vld1q_f32(bpp.add(kk * NR + 4));
+            c0 = vfmaq_f32(c0, x, y0);
+            c1 = vfmaq_f32(c1, x, y1);
+        }
+        vst1q_f32(p, c0);
+        vst1q_f32(p.add(4), c1);
     }
-    vst1q_f32(p, c0);
-    vst1q_f32(p.add(4), c1);
 }
 
 #[cfg(test)]

@@ -232,9 +232,23 @@ pub fn recycle_mat(m: Mat) {
 /// overlapping ranges would be UB.  Every use in this crate derives the
 /// ranges from a partition (row chunks, per-pair chunks), which is
 /// disjoint by construction.
+///
+/// Under the `checked` cargo feature this contract is *enforced*, not
+/// trusted: every claimed range is recorded in a lock-protected
+/// interval set for the lifetime of the wrapper (every call site
+/// constructs a fresh `SharedSlice` per parallel phase, so wrapper
+/// lifetime == phase lifetime), and any overlapping or out-of-bounds
+/// claim panics with both intervals.  With the feature off the field
+/// does not exist and `range` compiles to the raw pointer math alone.
 pub(crate) struct SharedSlice<'a, T> {
     ptr: *mut T,
     len: usize,
+    /// every `[start, end)` handed out so far (checked mode only)
+    // analyze: allow(forbidden-api): checked-mode race-detector
+    // instrumentation — the lock exists only under the `checked`
+    // feature and is never compiled into default builds.
+    #[cfg(feature = "checked")]
+    claims: std::sync::Mutex<Vec<(usize, usize)>>,
     _marker: std::marker::PhantomData<&'a mut [T]>,
 }
 
@@ -245,8 +259,15 @@ unsafe impl<T: Send> Sync for SharedSlice<'_, T> {}
 
 impl<'a, T> SharedSlice<'a, T> {
     pub fn new(s: &'a mut [T]) -> Self {
-        SharedSlice { ptr: s.as_mut_ptr(), len: s.len(),
-                      _marker: std::marker::PhantomData }
+        SharedSlice {
+            ptr: s.as_mut_ptr(),
+            len: s.len(),
+            #[cfg(feature = "checked")]
+            // analyze: allow(forbidden-api): checked-mode race-detector
+            // instrumentation, compiled out of default builds.
+            claims: std::sync::Mutex::new(Vec::new()),
+            _marker: std::marker::PhantomData,
+        }
     }
 
     /// The sub-slice `[start, end)`.
@@ -256,7 +277,34 @@ impl<'a, T> SharedSlice<'a, T> {
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn range(&self, start: usize, end: usize) -> &mut [T] {
         debug_assert!(start <= end && end <= self.len);
-        std::slice::from_raw_parts_mut(self.ptr.add(start), end - start)
+        #[cfg(feature = "checked")]
+        self.record_claim(start, end);
+        // SAFETY: `[start, end)` is in bounds of the wrapped slice
+        // (debug-asserted above, hard-checked under `checked`) and the
+        // caller's disjointness contract makes the `&mut` unique.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(start), end - start) }
+    }
+
+    /// Checked-mode race detector: record `[start, end)` and panic on
+    /// out-of-bounds or on overlap with any previously claimed range.
+    #[cfg(feature = "checked")]
+    fn record_claim(&self, start: usize, end: usize) {
+        assert!(
+            start <= end && end <= self.len,
+            "checked: out-of-bounds SharedSlice claim [{start}, {end}) of {}",
+            self.len
+        );
+        let mut claims = self.claims.lock().unwrap();
+        for &(s, e) in claims.iter() {
+            // empty ranges never overlap anything
+            if start < e && s < end {
+                panic!(
+                    "checked: overlapping SharedSlice claims [{s}, {e}) and \
+                     [{start}, {end}) — disjoint-write contract violated"
+                );
+            }
+        }
+        claims.push((start, end));
     }
 }
 
@@ -338,13 +386,70 @@ mod tests {
     fn shared_slice_disjoint_ranges() {
         let mut data = vec![0.0_f64; 10];
         let s = SharedSlice::new(&mut data);
-        // disjoint halves written "concurrently" (serial here; the pool
-        // tests cover the threaded case)
+        // SAFETY: disjoint halves written "concurrently" (serial here;
+        // the pool tests cover the threaded case)
         unsafe {
             s.range(0, 5).iter_mut().for_each(|x| *x = 1.0);
             s.range(5, 10).iter_mut().for_each(|x| *x = 2.0);
         }
         assert_eq!(&data[..5], &[1.0; 5]);
         assert_eq!(&data[5..], &[2.0; 5]);
+    }
+
+    /// Checked-mode race detector (`--features checked`): the
+    /// disjoint-write contract is enforced at runtime, so a seeded
+    /// overlap must panic and honest partitions must not.
+    #[cfg(feature = "checked")]
+    mod checked {
+        use super::super::SharedSlice;
+
+        #[test]
+        fn disjoint_claims_pass_under_checked() {
+            let mut buf = vec![0.0_f64; 12];
+            {
+                let s = SharedSlice::new(&mut buf);
+                // SAFETY: [0,4), [4,8), [8,12) partition the buffer.
+                unsafe {
+                    s.range(0, 4)[0] = 1.0;
+                    s.range(4, 8)[0] = 2.0;
+                    s.range(8, 12)[0] = 3.0;
+                }
+            }
+            assert_eq!((buf[0], buf[4], buf[8]), (1.0, 2.0, 3.0));
+        }
+
+        #[test]
+        fn adjacent_and_empty_claims_are_not_overlaps() {
+            let mut buf = vec![0.0_f64; 8];
+            let s = SharedSlice::new(&mut buf);
+            // SAFETY: adjacent ranges and empty ranges never alias.
+            unsafe {
+                let _ = s.range(0, 4);
+                let _ = s.range(4, 4);
+                let _ = s.range(4, 8);
+            }
+        }
+
+        #[test]
+        #[should_panic(expected = "overlapping SharedSlice claims")]
+        fn seeded_overlap_panics_under_checked() {
+            let mut buf = vec![0.0_f64; 8];
+            let s = SharedSlice::new(&mut buf);
+            // SAFETY: the first borrow is dropped before the second
+            // claim; the detector panics before any alias can exist.
+            let _ = unsafe { s.range(0, 5) };
+            // SAFETY: overlapping on purpose — the detector must
+            // panic on this claim before any aliased access exists.
+            let _ = unsafe { s.range(4, 8) };
+        }
+
+        #[test]
+        #[should_panic(expected = "out-of-bounds SharedSlice claim")]
+        fn out_of_bounds_claim_panics_under_checked() {
+            let mut buf = vec![0.0_f64; 4];
+            let s = SharedSlice::new(&mut buf);
+            // SAFETY: the detector panics before the slice is formed.
+            let _ = unsafe { s.range(2, 6) };
+        }
     }
 }

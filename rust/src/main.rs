@@ -12,6 +12,9 @@
 //!   soak [--fast] [--live]        deterministic synthetic-traffic soak:
 //!                                 Poisson arrivals, bursts, adversarial
 //!                                 deadlines, admission + shedding
+//!   analyze [paths..] [--deny-all] in-repo source lint: SAFETY-comment,
+//!                                 forbidden-API and module-layering
+//!                                 checks (what the CI analyze job runs)
 //!
 //! Global flags: `--threads N` sizes the compute pool (else the
 //! `LRC_THREADS` env var, else every core); `--simd B` pins the GEMM
@@ -79,6 +82,7 @@ fn main() {
         "bench-trend" => cmd_bench_trend(&args),
         "serve" => cmd_serve(&args),
         "soak" => cmd_soak(&args),
+        "analyze" => cmd_analyze(&args),
         _ => {
             print_help();
             Ok(())
@@ -94,7 +98,7 @@ fn print_help() {
     println!(
         "lrc — Low-Rank Correction for Quantized LLMs (rust coordinator)\n\
          \n\
-         USAGE: lrc <info|quantize|eval|serve> [flags]\n\
+         USAGE: lrc <info|quantize|eval|sweep|serve|soak|analyze> [flags]\n\
          \n\
          quantize --model small --method lrc|svd|quarot --pct 10\n\
          \x20        [--iters 1] [--group 32] [--weight-only] [--rtn]\n\
@@ -155,6 +159,17 @@ fn print_help() {
          \x20        against the real Batcher with real worker threads\n\
          \x20        (wall-clock throughput + p50/p95/p99; every admitted\n\
          \x20        request must receive exactly one outcome).\n\
+         analyze  [paths..] [--deny-all] [--json]\n\
+         \x20        In-repo source lint over .rs trees (default:\n\
+         \x20        rust/src): every `unsafe` needs a SAFETY comment,\n\
+         \x20        concurrency/wall-clock/mul_add APIs are fenced to\n\
+         \x20        the modules that own them, and cross-module\n\
+         \x20        `crate::` references must follow the layering map.\n\
+         \x20        Findings can be muted in place with\n\
+         \x20        `// analyze: allow(<rule>): <justification>`.\n\
+         \x20        --deny-all exits non-zero on any finding (what the\n\
+         \x20        CI analyze job runs); --json emits machine-readable\n\
+         \x20        findings instead of text.\n\
          \n\
          global flags:\n\
          \x20 --threads N   size of the persistent compute pool (parked\n\
@@ -584,6 +599,43 @@ fn cmd_soak(args: &Args) -> Result<()> {
                                 != {}", live.served, live.shed, live.rejected,
                                live.failed, cfg.n_requests));
         }
+    }
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    // paths after the subcommand; default to the crate source tree
+    // whether invoked from the repo root or from rust/
+    let mut paths: Vec<std::path::PathBuf> = args
+        .positional
+        .iter()
+        .skip(1)
+        .map(std::path::PathBuf::from)
+        .collect();
+    if paths.is_empty() {
+        for cand in ["rust/src", "src"] {
+            if std::path::Path::new(cand).is_dir() {
+                paths.push(cand.into());
+                break;
+            }
+        }
+        if paths.is_empty() {
+            return Err(anyhow!(
+                "analyze: no paths given and neither rust/src nor src exists"
+            ));
+        }
+    }
+    let (findings, nfiles) = lrc::analyze::analyze_paths(&paths)?;
+    if args.has("json") {
+        println!("{}", lrc::analyze::render_json(&findings));
+    } else {
+        print!("{}", lrc::analyze::render_text(&findings, nfiles));
+    }
+    if args.has("deny-all") && !findings.is_empty() {
+        return Err(anyhow!(
+            "analyze: {} finding(s) with --deny-all",
+            findings.len()
+        ));
     }
     Ok(())
 }

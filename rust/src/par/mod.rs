@@ -75,6 +75,8 @@
 //! `set_threads` keeps working after the env var has been cached: the
 //! override is consulted first on every [`threads`] call.
 
+pub mod model;
+
 use std::cell::Cell;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -214,6 +216,10 @@ impl Workers {
             body();
             return;
         }
+        // SAFETY: the lifetime erasure is sound per the doc above — this
+        // frame outlives every worker's use of the borrow because run()
+        // only returns after `active` reaches zero, and the claim budget
+        // is fully consumed before that can happen.
         let job = SendJob(unsafe {
             std::mem::transmute::<&(dyn Fn() + Sync), &'static (dyn Fn() + Sync)>(body)
         });
@@ -223,6 +229,22 @@ impl Workers {
             // for the board to free up before publishing
             while st.job.is_some() {
                 st = self.board.done.wait(st).unwrap();
+            }
+            #[cfg(feature = "checked")]
+            {
+                // protocol assertions (mirrored in `par::model`): the
+                // board must be clean before a new epoch is published
+                assert_eq!(
+                    st.active, 0,
+                    "checked: publishing over {} live claimant(s)",
+                    st.active
+                );
+                assert_eq!(
+                    st.claims, 0,
+                    "checked: {} unconsumed claim(s) left on the board",
+                    st.claims
+                );
+                assert!(!st.panicked, "checked: stale panic flag at publish");
             }
             st.epoch += 1;
             st.active = extra;
@@ -251,6 +273,15 @@ impl Workers {
             while st.active > 0 {
                 st = self.board.done.wait(st).unwrap();
             }
+            // claim-budget conservation: every dispatch slot was either
+            // claimed (and finished — active hit zero) or the budget
+            // math is broken; `claims` must already be zero here
+            #[cfg(feature = "checked")]
+            assert_eq!(
+                st.claims, 0,
+                "checked: claim budget not conserved — {} left at completion",
+                st.claims
+            );
             st.job = None;
             st.claims = 0;
             let p = st.panicked;
@@ -296,6 +327,15 @@ fn worker_loop(board: Arc<Board>) {
                 if st.epoch > seen {
                     if st.claims > 0 {
                         if let Some(j) = st.job {
+                            // no epoch reuse: the `epoch > seen` guard
+                            // means this worker never claims the same
+                            // generation twice
+                            #[cfg(feature = "checked")]
+                            assert!(
+                                st.epoch > seen,
+                                "checked: epoch reuse — re-claiming generation {}",
+                                st.epoch
+                            );
                             st.claims -= 1;
                             seen = st.epoch;
                             break j;
@@ -318,6 +358,13 @@ fn worker_loop(board: Arc<Board>) {
         if res.is_err() {
             st.panicked = true;
         }
+        // active-count underflow would mean a claimant the budget never
+        // granted (caught in release builds too under `checked`)
+        #[cfg(feature = "checked")]
+        assert!(
+            st.active > 0,
+            "checked: active-count underflow in the finish section"
+        );
         st.active -= 1;
         if st.active == 0 {
             board.done.notify_all();

@@ -1,0 +1,674 @@
+//! Exhaustive-interleaving model checker for the pool's job-board
+//! protocol.
+//!
+//! [`super`]'s liveness and exclusivity arguments (`Workers::run`,
+//! `worker_loop`) are prose in comments: "a notify_one can only be lost
+//! when no worker is parked", "the claim budget is always fully
+//! consumed before `active` can reach zero", and so on.  This module
+//! turns those arguments into a small state machine and *enumerates
+//! every schedule* of it: each Mutex critical section in the real code
+//! becomes one atomic transition, condvar waits become waitset
+//! membership (no spurious wakeups are modeled, so every wakeup in the
+//! model is one the protocol itself caused), and `notify_one` branches
+//! nondeterministically over the parked workers.  A memoized DFS then
+//! visits every reachable interleaving for ≤3 workers × ≤3 epochs and
+//! checks, at each transition:
+//!
+//! * **termination / no lost wakeup** — every non-terminal state has an
+//!   enabled transition (a lost wakeup shows up as a deadlock state);
+//! * **exactly-`extra` claimants** — each epoch completes with
+//!   `min(items-1, workers)` claims, no more, no fewer;
+//! * **claim-budget conservation** — `claims == 0` whenever `active`
+//!   reaches zero, and `active` never underflows;
+//! * **panic propagation** — a panicking claimant (or submitter body)
+//!   is observed by exactly that epoch's completion;
+//! * **bounded wakeups** — an epoch notifies at most `extra` parked
+//!   workers (surplus workers never leave the condvar), and a woken
+//!   worker that re-parks must have found the claim budget already
+//!   drained by an unparked "roaming" worker.  The checker *found* that
+//!   raced wakeup interleaving (a roaming worker that just finished the
+//!   previous epoch re-checks the board before a notified worker wakes,
+//!   and steals the claim), which is why the property is stated this
+//!   way and not as the naive "zero idle wakeups": the strong form is
+//!   falsified by a real, benign schedule — see
+//!   `tests/pool_model.rs::raced_wakeup_interleaving_exists`.
+//!
+//! [`Variant`] knobs re-introduce historical bug shapes (single wakeup
+//! per epoch, no claim budget, no re-entrancy guard) so the test suite
+//! can prove the checker actually detects protocol violations rather
+//! than vacuously passing.
+//!
+//! The scoped backend (`Pool::scoped` / `scoped_map`) shares no board —
+//! fresh threads drain a cursor — so its model ([`explore_scoped`])
+//! only has to show every chunk is claimed exactly once and the drain
+//! terminates under all schedules.
+
+use std::collections::HashSet;
+
+/// Model capacity: the checker covers pools with up to this many
+/// *parked* workers (a pool of `n` threads parks `n - 1`).
+pub const MAX_W: usize = 3;
+
+/// Who panics during an epoch, if anyone.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Panicker {
+    None,
+    /// the submitting thread's own share of the body panics
+    Submitter,
+    /// the k-th claimant (in claim order) panics; requires `k < extra`
+    Claimant(u8),
+}
+
+/// One `Workers::run` call: `items` work items, so
+/// `extra = min(items - 1, workers)` parked workers participate.
+#[derive(Clone, Copy, Debug)]
+pub struct EpochSpec {
+    pub items: u8,
+    pub panicker: Panicker,
+    /// claimant bodies perform a nested pool dispatch (exercises the
+    /// IN_POOL re-entrancy guard: inline when faithful, deadlock when
+    /// the guard is disabled via [`Variant`])
+    pub nested: bool,
+}
+
+impl EpochSpec {
+    pub fn plain(items: u8) -> Self {
+        EpochSpec { items, panicker: Panicker::None, nested: false }
+    }
+}
+
+/// Protocol variant knobs.  `faithful()` models the shipped code; each
+/// `false` re-introduces a bug shape the tests prove the checker catches.
+#[derive(Clone, Copy, Debug)]
+pub struct Variant {
+    /// true: publish wakes `extra` workers (notify_all when
+    /// `extra == workers`); false: a single notify_one per epoch — the
+    /// lost-wakeup bug shape
+    pub notify_per_claim: bool,
+    /// true: `claims = extra`; false: `claims = workers` — the
+    /// over-claim bug shape (surplus claimants underflow `active`)
+    pub claim_budget: bool,
+    /// true: nested dispatch from a claimant runs inline; false: it
+    /// tries to publish on the occupied board and blocks forever
+    pub reentry_guard: bool,
+}
+
+impl Variant {
+    pub fn faithful() -> Self {
+        Variant { notify_per_claim: true, claim_budget: true, reentry_guard: true }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    /// parked workers (pool size minus the submitting thread), 1..=3
+    pub workers: usize,
+    pub epochs: Vec<EpochSpec>,
+    pub variant: Variant,
+    /// accept the benign claim-steal raced wakeup (see module docs);
+    /// single-epoch scenarios that publish before any worker can roam
+    /// may set this false to assert the strong zero-idle-wakeup form
+    pub allow_raced_wakeups: bool,
+}
+
+impl Scenario {
+    pub fn faithful(workers: usize, epochs: Vec<EpochSpec>) -> Self {
+        Scenario {
+            workers,
+            epochs,
+            variant: Variant::faithful(),
+            allow_raced_wakeups: true,
+        }
+    }
+}
+
+/// Where a worker thread is, at critical-section granularity.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+enum Loc {
+    /// about to run the board-check critical section
+    Check,
+    /// in the `work` condvar waitset; runnable only after a notify
+    Parked,
+    /// claimed the epoch; body + finish section still pending
+    Run,
+    /// blocked forever (buggy-variant nested dispatch)
+    Stuck,
+    /// observed shutdown and returned
+    Exit,
+}
+
+/// Submitter program counter.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+enum SLoc {
+    Publish,
+    Body,
+    Complete,
+    Shutdown,
+    Join,
+    Done,
+}
+
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct State {
+    // job board (mirrors par::JobState)
+    epoch: u8,
+    job: bool,
+    active: u8,
+    claims: u8,
+    panicked: bool,
+    shutdown: bool,
+    // workers
+    loc: [Loc; MAX_W],
+    seen: [u8; MAX_W],
+    woken: [bool; MAX_W],
+    will_panic: [bool; MAX_W],
+    // submitter
+    ep_idx: u8,
+    sloc: SLoc,
+    s_waiting: bool,
+    local_panic: bool,
+    // per-epoch accounting for the exactly-`extra` property
+    claimed: u8,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct Stats {
+    /// distinct states visited
+    pub states: usize,
+    /// transitions taken (edges, counting re-entries to visited states)
+    pub transitions: usize,
+    /// distinct terminal states reached
+    pub terminals: usize,
+    /// benign raced wakeups observed (claim stolen by a roaming worker)
+    pub raced_wakeups: usize,
+}
+
+/// A property violation plus the exact schedule that produced it.
+#[derive(Debug)]
+pub struct Violation {
+    pub message: String,
+    pub trace: Vec<String>,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "{}", self.message)?;
+        for (i, t) in self.trace.iter().enumerate() {
+            writeln!(f, "  {i:3}: {t}")?;
+        }
+        Ok(())
+    }
+}
+
+fn extra_of(sc: &Scenario, idx: usize) -> u8 {
+    (sc.workers as u8).min(sc.epochs[idx].items.saturating_sub(1))
+}
+
+fn start_sloc(sc: &Scenario, idx: usize) -> SLoc {
+    if idx >= sc.epochs.len() {
+        SLoc::Shutdown
+    } else if extra_of(sc, idx) == 0 {
+        SLoc::Body
+    } else {
+        SLoc::Publish
+    }
+}
+
+/// All k-subsets of `items` (the nondeterministic notify_one targets).
+fn combinations(items: &[usize], k: usize) -> Vec<Vec<usize>> {
+    if k == 0 {
+        return vec![Vec::new()];
+    }
+    if items.len() < k {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for (i, &first) in items.iter().enumerate() {
+        for mut rest in combinations(&items[i + 1..], k - 1) {
+            rest.insert(0, first);
+            out.push(rest);
+        }
+    }
+    out
+}
+
+/// Enumerate every reachable schedule of `sc` and check all properties.
+pub fn explore(sc: &Scenario) -> Result<Stats, Violation> {
+    assert!(
+        (1..=MAX_W).contains(&sc.workers),
+        "model covers 1..={MAX_W} workers"
+    );
+    for (i, e) in sc.epochs.iter().enumerate() {
+        assert!(e.items >= 1, "epoch {i}: items must be >= 1");
+        if let Panicker::Claimant(k) = e.panicker {
+            assert!(
+                k < extra_of(sc, i),
+                "epoch {i}: panicking claimant {k} never claims (extra = {})",
+                extra_of(sc, i)
+            );
+        }
+        if e.nested {
+            assert!(extra_of(sc, i) >= 1, "epoch {i}: nested needs a claimant");
+        }
+    }
+
+    let mut init = State {
+        epoch: 0,
+        job: false,
+        active: 0,
+        claims: 0,
+        panicked: false,
+        shutdown: false,
+        loc: [Loc::Exit; MAX_W],
+        seen: [0; MAX_W],
+        woken: [false; MAX_W],
+        will_panic: [false; MAX_W],
+        ep_idx: 0,
+        sloc: start_sloc(sc, 0),
+        s_waiting: false,
+        local_panic: false,
+        claimed: 0,
+    };
+    // live workers start mid-loop (at the board check), which is what
+    // exposes the publish-before-first-park startup races
+    for w in 0..sc.workers {
+        init.loc[w] = Loc::Check;
+    }
+
+    let mut stats = Stats::default();
+    let mut visited: HashSet<State> = HashSet::new();
+    let mut path: Vec<String> = Vec::new();
+    visited.insert(init.clone());
+    dfs(sc, &init, &mut visited, &mut path, &mut stats)?;
+    Ok(stats)
+}
+
+fn dfs(
+    sc: &Scenario,
+    st: &State,
+    visited: &mut HashSet<State>,
+    path: &mut Vec<String>,
+    stats: &mut Stats,
+) -> Result<(), Violation> {
+    stats.states += 1;
+    if st.sloc == SLoc::Done {
+        // terminal invariants: clean board, everyone gone
+        let clean = !st.job
+            && st.active == 0
+            && st.claims == 0
+            && !st.s_waiting
+            && !st.panicked
+            && (0..sc.workers).all(|w| st.loc[w] == Loc::Exit);
+        if !clean {
+            return Err(Violation {
+                message: "terminal state with a dirty board".into(),
+                trace: path.clone(),
+            });
+        }
+        stats.terminals += 1;
+        return Ok(());
+    }
+    let succs = successors(sc, st, stats).map_err(|message| Violation {
+        message,
+        trace: path.clone(),
+    })?;
+    if succs.is_empty() {
+        return Err(Violation {
+            message: "deadlock: no enabled transition (lost wakeup)".into(),
+            trace: path.clone(),
+        });
+    }
+    for (label, s2) in succs {
+        stats.transitions += 1;
+        if visited.insert(s2.clone()) {
+            path.push(label);
+            dfs(sc, &s2, visited, path, stats)?;
+            path.pop();
+        }
+    }
+    Ok(())
+}
+
+/// Enabled transitions from `st`; `Err` is a property violated *by*
+/// taking a mandatory step (e.g. an assertion inside a critical
+/// section).
+#[allow(clippy::too_many_lines)]
+fn successors(
+    sc: &Scenario,
+    st: &State,
+    stats: &mut Stats,
+) -> Result<Vec<(String, State)>, String> {
+    let w_count = sc.workers;
+    let mut out: Vec<(String, State)> = Vec::new();
+
+    // ---- submitter ----
+    match st.sloc {
+        SLoc::Publish => {
+            let ex = extra_of(sc, st.ep_idx as usize);
+            if st.job || st.active != 0 || st.claims != 0 {
+                return Err(format!(
+                    "board not clean at publish (job={} active={} claims={})",
+                    st.job, st.active, st.claims
+                ));
+            }
+            let mut base = st.clone();
+            base.epoch += 1;
+            base.job = true;
+            base.active = ex;
+            base.claims = if sc.variant.claim_budget { ex } else { w_count as u8 };
+            base.panicked = false;
+            base.claimed = 0;
+            base.sloc = SLoc::Body;
+            let parked: Vec<usize> =
+                (0..w_count).filter(|&w| st.loc[w] == Loc::Parked).collect();
+            if sc.variant.notify_per_claim && ex as usize == w_count {
+                // full epoch: notify_all
+                let mut s2 = base.clone();
+                for &w in &parked {
+                    s2.loc[w] = Loc::Check;
+                    s2.woken[w] = true;
+                }
+                out.push((format!("S:publish e{} notify_all", base.epoch), s2));
+            } else {
+                // `extra` targeted notify_ones (1 in the buggy variant):
+                // each wakes one *currently parked* worker — extras are
+                // lost, which is safe exactly because roaming workers
+                // re-check before parking; the checker verifies that.
+                let n_notify = if sc.variant.notify_per_claim { ex as usize } else { 1 };
+                let k = n_notify.min(parked.len());
+                for subset in combinations(&parked, k) {
+                    let mut s2 = base.clone();
+                    for &w in &subset {
+                        s2.loc[w] = Loc::Check;
+                        s2.woken[w] = true;
+                    }
+                    out.push((
+                        format!("S:publish e{} wake {subset:?}", base.epoch),
+                        s2,
+                    ));
+                }
+            }
+        }
+        SLoc::Body => {
+            let spec = &sc.epochs[st.ep_idx as usize];
+            let ex = extra_of(sc, st.ep_idx as usize);
+            let mut s2 = st.clone();
+            if spec.panicker == Panicker::Submitter {
+                s2.local_panic = true;
+            }
+            if ex == 0 {
+                // inline epoch: never touches the board
+                let expected = spec.panicker != Panicker::None;
+                if s2.local_panic != expected {
+                    return Err("panic propagation failed on inline epoch".into());
+                }
+                s2.local_panic = false;
+                s2.ep_idx += 1;
+                s2.sloc = start_sloc(sc, s2.ep_idx as usize);
+                out.push((format!("S:inline epoch #{}", st.ep_idx), s2));
+            } else {
+                s2.sloc = SLoc::Complete;
+                out.push((format!("S:body done e{}", st.epoch), s2));
+            }
+        }
+        SLoc::Complete if !st.s_waiting => {
+            let mut s2 = st.clone();
+            if st.active > 0 {
+                s2.s_waiting = true;
+                out.push((format!("S:wait active={}", st.active), s2));
+            } else {
+                let ex = extra_of(sc, st.ep_idx as usize);
+                let spec = &sc.epochs[st.ep_idx as usize];
+                if st.claims != 0 {
+                    return Err(format!(
+                        "claim budget not conserved: {} claim(s) left at completion",
+                        st.claims
+                    ));
+                }
+                if st.claimed != ex {
+                    return Err(format!(
+                        "expected exactly {ex} claimant(s), saw {}",
+                        st.claimed
+                    ));
+                }
+                let observed = st.panicked || st.local_panic;
+                let expected = spec.panicker != Panicker::None;
+                if observed != expected {
+                    return Err(format!(
+                        "panic propagation failed (observed={observed}, expected={expected})"
+                    ));
+                }
+                s2.job = false;
+                s2.panicked = false;
+                s2.local_panic = false;
+                s2.claimed = 0;
+                s2.ep_idx += 1;
+                s2.sloc = start_sloc(sc, s2.ep_idx as usize);
+                out.push((format!("S:complete e{}", st.epoch), s2));
+            }
+        }
+        SLoc::Complete => {} // parked in the `done` waitset
+        SLoc::Shutdown => {
+            let mut s2 = st.clone();
+            s2.shutdown = true;
+            for w in 0..w_count {
+                if s2.loc[w] == Loc::Parked {
+                    s2.loc[w] = Loc::Check;
+                    s2.woken[w] = true;
+                }
+            }
+            s2.sloc = SLoc::Join;
+            out.push(("S:shutdown notify_all".into(), s2));
+        }
+        SLoc::Join => {
+            if (0..w_count).all(|w| st.loc[w] == Loc::Exit) {
+                let mut s2 = st.clone();
+                s2.sloc = SLoc::Done;
+                out.push(("S:join".into(), s2));
+            }
+        }
+        SLoc::Done => {}
+    }
+
+    // ---- workers ----
+    for w in 0..w_count {
+        match st.loc[w] {
+            Loc::Check => {
+                let mut s2 = st.clone();
+                s2.woken[w] = false;
+                if st.shutdown {
+                    s2.loc[w] = Loc::Exit;
+                    out.push((format!("w{w}:exit"), s2));
+                } else if st.epoch > st.seen[w] && st.claims > 0 {
+                    if !st.job {
+                        return Err("claims > 0 with no job on the board".into());
+                    }
+                    s2.claims -= 1;
+                    s2.seen[w] = st.epoch;
+                    let ord = st.claimed;
+                    s2.claimed += 1;
+                    let spec = &sc.epochs[st.ep_idx as usize];
+                    if spec.panicker == Panicker::Claimant(ord) {
+                        s2.will_panic[w] = true;
+                    }
+                    s2.loc[w] = Loc::Run;
+                    out.push((format!("w{w}:claim #{ord} e{}", st.epoch), s2));
+                } else {
+                    if st.epoch > st.seen[w] {
+                        s2.seen[w] = st.epoch;
+                    }
+                    s2.loc[w] = Loc::Parked;
+                    if st.woken[w] {
+                        if st.claims > 0 {
+                            return Err(
+                                "woken worker parked while claims were available"
+                                    .into(),
+                            );
+                        }
+                        if !sc.allow_raced_wakeups {
+                            return Err(
+                                "idle wakeup: woken worker found the budget \
+                                 already drained"
+                                    .into(),
+                            );
+                        }
+                        stats.raced_wakeups += 1;
+                    }
+                    out.push((format!("w{w}:park"), s2));
+                }
+            }
+            Loc::Run => {
+                let spec = &sc.epochs[st.ep_idx as usize];
+                let mut s2 = st.clone();
+                if spec.nested && !sc.variant.reentry_guard {
+                    // without the IN_POOL guard the nested run() waits
+                    // for the board it is itself occupying
+                    s2.loc[w] = Loc::Stuck;
+                    out.push((format!("w{w}:nested dispatch blocks on own board"), s2));
+                } else {
+                    // body (nested part runs inline under the guard,
+                    // touching nothing shared) + finish critical section
+                    if st.will_panic[w] {
+                        s2.panicked = true;
+                        s2.will_panic[w] = false;
+                    }
+                    if st.active == 0 {
+                        return Err("active-count underflow in finish section".into());
+                    }
+                    s2.active -= 1;
+                    if s2.active == 0 {
+                        // notify_all(done)
+                        s2.s_waiting = false;
+                    }
+                    s2.loc[w] = Loc::Check;
+                    out.push((format!("w{w}:finish e{}", st.epoch), s2));
+                }
+            }
+            Loc::Parked | Loc::Stuck | Loc::Exit => {}
+        }
+    }
+
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// Scoped backend model: fresh threads drain a shared cursor; no board.
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+enum SwLoc {
+    Fetch,
+    Work(u8),
+    Done,
+}
+
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct SState {
+    next: u8,
+    loc: [SwLoc; MAX_W],
+    done_mask: u16,
+}
+
+/// Enumerate every schedule of `workers` scoped threads draining
+/// `chunks` cursor items; asserts each chunk is claimed exactly once
+/// and the drain terminates.
+pub fn explore_scoped(workers: usize, chunks: u8) -> Result<Stats, Violation> {
+    assert!((1..=MAX_W).contains(&workers));
+    assert!(chunks as usize <= 12);
+    let mut init = SState { next: 0, loc: [SwLoc::Done; MAX_W], done_mask: 0 };
+    for w in 0..workers {
+        init.loc[w] = SwLoc::Fetch;
+    }
+    let mut stats = Stats::default();
+    let mut visited = HashSet::new();
+    let mut path = Vec::new();
+    visited.insert(init.clone());
+    scoped_dfs(workers, chunks, &init, &mut visited, &mut path, &mut stats)?;
+    Ok(stats)
+}
+
+fn scoped_dfs(
+    workers: usize,
+    chunks: u8,
+    st: &SState,
+    visited: &mut HashSet<SState>,
+    path: &mut Vec<String>,
+    stats: &mut Stats,
+) -> Result<(), Violation> {
+    stats.states += 1;
+    if (0..workers).all(|w| st.loc[w] == SwLoc::Done) {
+        if st.done_mask != (1u16 << chunks) - 1 {
+            return Err(Violation {
+                message: format!(
+                    "scoped drain terminated with chunks missing (mask {:#b})",
+                    st.done_mask
+                ),
+                trace: path.clone(),
+            });
+        }
+        stats.terminals += 1;
+        return Ok(());
+    }
+    let mut any = false;
+    for w in 0..workers {
+        let (label, s2) = match st.loc[w] {
+            SwLoc::Fetch => {
+                let mut s2 = st.clone();
+                if st.next < chunks {
+                    s2.loc[w] = SwLoc::Work(st.next);
+                    s2.next += 1;
+                    (format!("w{w}:fetch #{}", st.next), s2)
+                } else {
+                    s2.loc[w] = SwLoc::Done;
+                    (format!("w{w}:drained"), s2)
+                }
+            }
+            SwLoc::Work(c) => {
+                if st.done_mask & (1 << c) != 0 {
+                    return Err(Violation {
+                        message: format!("chunk {c} processed twice"),
+                        trace: path.clone(),
+                    });
+                }
+                let mut s2 = st.clone();
+                s2.done_mask |= 1 << c;
+                s2.loc[w] = SwLoc::Fetch;
+                (format!("w{w}:work #{c}"), s2)
+            }
+            SwLoc::Done => continue,
+        };
+        any = true;
+        stats.transitions += 1;
+        if visited.insert(s2.clone()) {
+            path.push(label);
+            scoped_dfs(workers, chunks, &s2, visited, path, stats)?;
+            path.pop();
+        }
+    }
+    if !any {
+        return Err(Violation {
+            message: "scoped drain deadlocked".into(),
+            trace: path.clone(),
+        });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_single_worker_single_epoch() {
+        let sc = Scenario::faithful(1, vec![EpochSpec::plain(2)]);
+        let stats = explore(&sc).unwrap_or_else(|v| panic!("{v}"));
+        assert!(stats.states > 3);
+        assert!(stats.terminals >= 1);
+    }
+
+    #[test]
+    fn smoke_scoped() {
+        let stats = explore_scoped(2, 3).unwrap_or_else(|v| panic!("{v}"));
+        assert!(stats.terminals >= 1);
+    }
+}

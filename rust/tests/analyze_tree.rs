@@ -1,0 +1,39 @@
+//! The crate's own source tree must be analyze-clean: zero findings
+//! from the SAFETY-comment, forbidden-API, layering and marker lints.
+//! This is the same check CI runs via `lrc analyze --deny-all rust/src`,
+//! kept as a test so a plain `cargo test` catches violations too.
+
+use std::path::PathBuf;
+
+#[test]
+fn crate_source_tree_has_zero_findings() {
+    let src = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src");
+    let (findings, nfiles) = lrc::analyze::analyze_paths(&[src]).unwrap();
+    assert!(
+        nfiles > 20,
+        "expected to scan the whole tree, got {nfiles} files"
+    );
+    assert!(
+        findings.is_empty(),
+        "source tree must be analyze-clean, found:\n{}",
+        lrc::analyze::render_text(&findings, nfiles)
+    );
+}
+
+/// The deny-by-default posture only means something if the lints still
+/// fire: a canned bad file (outside `src/`, so no allowlist credit)
+/// must produce findings from every family.
+#[test]
+fn lints_still_fire_on_a_bad_fixture() {
+    let bad = "\
+        use crate::coordinator::Batcher;\n\
+        fn f() { unsafe { g() } }\n\
+        static L: Mutex<()> = Mutex::new(());\n\
+        // analyze: allow(forbidden-api)\n\
+        fn t() { let t0 = Instant::now(); }\n";
+    let findings = lrc::analyze::lints::lint_file("fixture.rs", bad);
+    let rules: Vec<&str> = findings.iter().map(|f| f.rule).collect();
+    assert!(rules.contains(&lrc::analyze::lints::RULE_SAFETY));
+    assert!(rules.contains(&lrc::analyze::lints::RULE_API));
+    assert!(rules.contains(&lrc::analyze::lints::RULE_MARKER));
+}
