@@ -26,8 +26,8 @@ pub const RULE_MARKER: &str = "allow-marker";
 /// Crate modules the layering lint knows about (top-level only).
 const KNOWN_MODULES: &[&str] = &[
     "analyze", "bench", "coordinator", "data", "eval", "experiments",
-    "linalg", "lrc", "par", "pipeline", "quant", "rng", "runtime",
-    "sweep", "util",
+    "linalg", "lrc", "par", "pipeline", "quant", "registry", "rng",
+    "runtime", "sweep", "util",
 ];
 
 /// Module-layering contract: which sibling modules each top-level
@@ -45,9 +45,14 @@ fn allowed_deps(module: &str) -> Option<&'static [&'static str]> {
         "lrc" => &["linalg", "par", "quant", "rng", "util"],
         "data" => &["rng", "util"],
         "eval" => &["data", "rng", "util"],
+        // the registry is storage + wire protocol only: it may describe
+        // artifacts (quant configs, tensor bundles) but the compute
+        // stack must never reach *into* it — caching stays an optional
+        // layer above the math
+        "registry" => &["quant", "runtime", "util"],
         "pipeline" => &[
             "data", "eval", "experiments", "linalg", "lrc", "par", "quant",
-            "rng", "runtime", "util",
+            "registry", "rng", "runtime", "util",
         ],
         "runtime" => &[
             "data", "eval", "linalg", "lrc", "par", "pipeline", "quant",
@@ -59,7 +64,7 @@ fn allowed_deps(module: &str) -> Option<&'static [&'static str]> {
         ],
         "sweep" => &[
             "data", "eval", "experiments", "linalg", "lrc", "par",
-            "pipeline", "quant", "rng", "runtime", "util",
+            "pipeline", "quant", "registry", "rng", "runtime", "util",
         ],
         "coordinator" => &[
             "data", "eval", "linalg", "lrc", "par", "pipeline", "quant",

@@ -57,12 +57,29 @@
 //!                     bundle); the per-layer loop fans out on [`par`];
 //!                     split entry points let calibration be collected
 //!                     once and reused across many quantization runs
+//! * [`registry`]    — content-addressed artifact store: every quant
+//!                     bundle / sweep cell is keyed by
+//!                     sha256(model, method, QuantConfig, seed,
+//!                     calibration identity, code version) — hand-rolled
+//!                     SHA-256, canonical-JSON key material, atomic
+//!                     temp-file + rename publish, corruption-checked
+//!                     reads (a torn object is a counted miss, never a
+//!                     wrong answer), pluggable `RegistryBackend`;
+//!                     `registry::proto` + `registry::service` add the
+//!                     length-prefixed line protocol and the
+//!                     single-threaded non-blocking dispatcher / worker
+//!                     loops behind `lrc sweep --serve` /
+//!                     `lrc sweep-worker` (spec: `docs/REGISTRY.md`)
 //! * [`sweep`]       — declarative method × w_bits × rank_pct × group
 //!                     grid driver: shared calibration across cells,
 //!                     canonical fold order (byte-identical reports at
-//!                     any thread count), keyed JSON fragments for
-//!                     resume, built-in sanity assertions; runs on real
-//!                     artifacts or an engine-free synthetic model
+//!                     any thread count), resume through the
+//!                     content-addressed [`registry`] (legacy fragment
+//!                     dirs migrate in on first read), distributed
+//!                     claim/compute/publish workers whose merged report
+//!                     is byte-identical to a single-box run, built-in
+//!                     sanity assertions; runs on real artifacts or an
+//!                     engine-free synthetic model
 //! * [`coordinator`] — serving engine: bounded admission queue with
 //!                     typed backpressure (`PushError::Full`),
 //!                     deadline-aware load shedding (every request gets
@@ -111,6 +128,7 @@ pub mod lrc;
 pub mod par;
 pub mod pipeline;
 pub mod quant;
+pub mod registry;
 pub mod rng;
 pub mod runtime;
 pub mod sweep;

@@ -6,6 +6,11 @@
 //!   eval --model M --graph G      perplexity + task accuracy of a variant
 //!   sweep [--fast] [--model M]    method × bits × rank × group grid
 //!                                 driver with shared calibration + resume
+//!                                 through the content-addressed registry;
+//!                                 --serve ADDR dispatches the grid to
+//!                                 sweep-worker processes instead
+//!   sweep-worker --connect ADDR   claim/compute/publish cells against a
+//!                                 `sweep --serve` dispatcher
 //!   bench-trend --current J       compare a bench JSON against baseline
 //!                                 artifacts (the CI regression gate)
 //!   serve --model M               serving demo with the dynamic batcher
@@ -79,6 +84,7 @@ fn main() {
         "quantize" => cmd_quantize(&args),
         "eval" => cmd_eval(&args),
         "sweep" => cmd_sweep(&args),
+        "sweep-worker" => cmd_sweep_worker(&args),
         "bench-trend" => cmd_bench_trend(&args),
         "serve" => cmd_serve(&args),
         "soak" => cmd_soak(&args),
@@ -98,32 +104,52 @@ fn print_help() {
     println!(
         "lrc — Low-Rank Correction for Quantized LLMs (rust coordinator)\n\
          \n\
-         USAGE: lrc <info|quantize|eval|sweep|serve|soak|analyze> [flags]\n\
+         USAGE: lrc <info|quantize|eval|sweep|sweep-worker|serve|soak|\n\
+         \x20            analyze> [flags]\n\
          \n\
          quantize --model small --method lrc|svd|quarot --pct 10\n\
          \x20        [--iters 1] [--group 32] [--weight-only] [--rtn]\n\
-         \x20        [--calib 128] [--corpus wiki_syn]\n\
+         \x20        [--calib 128] [--corpus wiki_syn] [--registry <root>]\n\
+         \x20        With --registry, the content-addressed artifact store\n\
+         \x20        at <root> is consulted first: a hit re-materializes\n\
+         \x20        the published bundle with zero quantization compute\n\
+         \x20        (no engine, no calibration), a miss computes and then\n\
+         \x20        publishes bundle + report under the content digest.\n\
          eval     --model small --graph fwd_w4a4_r10_b8 [--quant <dir>]\n\
          \x20        [--fast] [--native]\n\
          sweep    [--fast] [--model small] [--methods rtn,quarot,svd,lrc]\n\
          \x20        [--bits 2,3,4,8] [--pcts 0,5,10,20,30]\n\
          \x20        [--groups none,32] [--iters 1] [--out <dir>]\n\
          \x20        [--no-resume] [--seed 2024] [--calib 128]\n\
-         \x20        [--corpus wiki_syn]\n\
+         \x20        [--corpus wiki_syn] [--registry <root>]\n\
+         \x20        [--serve <host:port>]\n\
          \x20        Grid driver over method x w_bits x rank_pct x group:\n\
          \x20        calibration stats are collected once per group value\n\
          \x20        and shared by every cell; independent cells fan out\n\
          \x20        on the compute pool in canonical order, so the grid\n\
          \x20        report (report.json + report.md under --out) is\n\
          \x20        byte-identical at any --threads.  Finished cells\n\
-         \x20        persist as keyed fragments under <out>/cells/ and\n\
-         \x20        are skipped on re-run (--no-resume recomputes).\n\
+         \x20        persist as content-addressed objects in the registry\n\
+         \x20        (--registry <root>, default <out>/registry; legacy\n\
+         \x20        <out>/cells/ fragments are migrated in on first read)\n\
+         \x20        and are skipped on re-run (--no-resume recomputes).\n\
+         \x20        --serve <host:port> turns the driver into a cell\n\
+         \x20        dispatcher: sweep-worker processes claim cells over\n\
+         \x20        the line protocol, results land in the same registry,\n\
+         \x20        and the merged report is byte-identical to a\n\
+         \x20        single-box run at any worker count.\n\
          \x20        Without --model the grid runs on a deterministic\n\
          \x20        in-memory synthetic model (no PJRT needed — what CI\n\
          \x20        runs); --fast is the 8-cell CI smoke grid.  Exits\n\
          \x20        non-zero if a built-in sanity assertion fails\n\
          \x20        (gptq<=rtn per cell, error non-increasing in rank,\n\
          \x20        size strictly increasing in bits).\n\
+         sweep-worker --connect <host:port>\n\
+         \x20        One distributed sweep worker: claims cells from a\n\
+         \x20        `sweep --serve` dispatcher, recomputes them on the\n\
+         \x20        local pool (same canonical math as single-box) and\n\
+         \x20        publishes the records back over the connection.\n\
+         \x20        Runs until the dispatcher reports the grid done.\n\
          bench-trend --current <bench.json> --baselines <dir>\n\
          \x20        [--threshold 25] [--summary <file>]\n\
          \x20        Compare the current bench JSON's per-measurement\n\
@@ -241,23 +267,7 @@ fn quant_config(args: &Args) -> QuantConfig {
     }
 }
 
-fn cmd_quantize(args: &Args) -> Result<()> {
-    let model = args.get_or("model", "small");
-    let method = Method::parse(&args.get_or("method", "lrc"))?;
-    let cfg = quant_config(args);
-    let pct = args.get_usize("pct", 10);
-    let graph = experiments::quant_graph_name(
-        pct, cfg.a_group, args.has("weight-only"), 8);
-    let corpus = load_corpus(&args.get_or("corpus", "wiki_syn"))?;
-    let engine = Engine::cpu()?;
-    let arts = ModelArtifacts::load(&lrc::artifacts_dir().join("models").join(&model))?;
-    let n_calib = args.get_usize("calib", 128);
-    println!("quantizing {model} with {} against {graph} ({n_calib} calib seqs)",
-             method.label(&cfg));
-    let (_bundle, report) = lrc::pipeline::quantize_and_save(
-        &engine, &arts, &corpus, &graph, method, &cfg, n_calib)?;
-    println!("calibration: {:.1}s, quantization: {:.1}s",
-             report.calib_seconds, report.quant_seconds);
+fn print_quant_report(report: &lrc::pipeline::PipelineReport) {
     println!("mean relative layer error: {:.4}", report.mean_rel_error());
     println!("packed size: {:.2} MB (int4 {:.2} MB + fp16 low-rank {:.2} MB + fp16 rest {:.2} MB)",
              report.size_bytes() as f64 / 1e6,
@@ -268,6 +278,65 @@ fn cmd_quantize(args: &Args) -> Result<()> {
         println!("  {:<16} k={:<3} relerr={:.5}", l.layer, l.rank, l.rel_error);
     }
     println!("  ... ({} layers total)", report.layers.len());
+}
+
+fn cmd_quantize(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "small");
+    let method = Method::parse(&args.get_or("method", "lrc"))?;
+    let cfg = quant_config(args);
+    let pct = args.get_usize("pct", 10);
+    let graph = experiments::quant_graph_name(
+        pct, cfg.a_group, args.has("weight-only"), 8);
+    let corpus_name = args.get_or("corpus", "wiki_syn");
+    let n_calib = args.get_usize("calib", 128);
+    let arts = ModelArtifacts::load(&lrc::artifacts_dir().join("models").join(&model))?;
+
+    // content key: model identity + method + full QuantConfig + the
+    // calibration identity (corpus, sequence count, fixed calib seed)
+    let registry = args.get("registry").map(|root| {
+        let reg = lrc::registry::Registry::local(std::path::Path::new(&root));
+        let key = lrc::registry::ObjectKey::new(
+            "quant-bundle", &model, method.name(), &cfg, 1234,
+            &format!("{corpus_name}-calib{n_calib}"));
+        (reg, key)
+    });
+
+    // registry hit: re-materialize the published bundle, touch neither
+    // the PJRT engine nor the calibration corpus
+    if let Some((reg, key)) = &registry {
+        if let Some((bundle, report)) =
+            lrc::pipeline::load_cached_quant(reg, key)?
+        {
+            let ginfo = arts.graph(&graph)?.clone();
+            let out = lrc::pipeline::save_quant_bundle(
+                &arts, &bundle, &ginfo, method, &cfg)?;
+            println!("registry hit {} ({}) — zero quantization compute, \
+                      bundle re-materialized at {out:?}",
+                     key.digest(), reg.describe());
+            print_quant_report(&report);
+            return Ok(());
+        }
+    }
+
+    let corpus = load_corpus(&corpus_name)?;
+    let engine = Engine::cpu()?;
+    println!("quantizing {model} with {} against {graph} ({n_calib} calib seqs)",
+             method.label(&cfg));
+    let (bundle, report) = lrc::pipeline::quantize_and_save(
+        &engine, &arts, &corpus, &graph, method, &cfg, n_calib)?;
+    println!("calibration: {:.1}s, quantization: {:.1}s",
+             report.calib_seconds, report.quant_seconds);
+    print_quant_report(&report);
+    if let Some((reg, key)) = &registry {
+        let (table, blob) = lrc::registry::bundle_to_blob(&bundle);
+        let payload = lrc::util::Json::obj(vec![
+            ("kind", lrc::util::Json::str("quant-bundle")),
+            ("report", lrc::pipeline::report_to_json(&report)),
+            ("tensors", table),
+        ]);
+        let digest = reg.publish(key, &payload, Some(&blob))?;
+        println!("published to registry: {digest}");
+    }
     Ok(())
 }
 
@@ -315,30 +384,63 @@ fn cmd_eval(args: &Args) -> Result<()> {
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {
-    use lrc::sweep::{self, SweepAxes};
+    use lrc::sweep::{self, SweepAxes, SweepStore};
     let axes = SweepAxes::from_args(args, args.has("fast"))?;
     let resume = !args.has("no-resume");
     let pool = lrc::par::global();
     let seed = args.get_usize("seed", 2024) as u64;
+    // --registry overrides where cell objects live; the default keeps
+    // them next to the report.  The old <out>/cells/ fragment dir is the
+    // migration source: records found there are adopted into the
+    // registry on first read.
+    let store_for = |out: &std::path::Path| -> SweepStore {
+        let root = args.get("registry").map(std::path::PathBuf::from)
+            .unwrap_or_else(|| out.join("registry"));
+        SweepStore::open(&root, Some(&out.join("cells")), seed)
+    };
 
     let outcome;
     let out_dir;
+    let store;
     match args.get("model") {
         None => {
             // engine-free: deterministic synthetic model + calibration
             let arts = sweep::synthetic_artifacts(seed);
-            let calib = sweep::synthetic_calib(&arts, seed, &axes.groups);
             out_dir = args.get("out").map(std::path::PathBuf::from)
                 .unwrap_or_else(|| lrc::artifacts_dir().join("sweep")
                                 .join(&arts.info.name));
+            store = store_for(&out_dir);
             println!("sweep: {} cells on synthetic model (seed {seed}), \
                       out {out_dir:?}", axes.cells().len());
             let run_tag = format!("synthetic-seed{seed}");
-            outcome = sweep::run_grid(&arts, &calib, &axes, &run_tag,
-                                      Some(&out_dir.join("cells")), resume,
-                                      pool, None)?;
+            outcome = match args.get("serve") {
+                Some(addr) => {
+                    // dispatcher mode: workers compute, we merge.  The
+                    // canonical CellKey order of the merge keeps the
+                    // report byte-identical to a single-box run.
+                    let listener = std::net::TcpListener::bind(addr)
+                        .map_err(|e| anyhow!("--serve: bind {addr}: {e}"))?;
+                    println!("sweep: dispatching on {} — start workers \
+                              with `lrc sweep-worker --connect {}`",
+                             listener.local_addr()?, listener.local_addr()?);
+                    sweep::serve_grid_distributed(
+                        &arts, &axes, &run_tag, &store, resume, &listener,
+                        |s| println!("{s}"))?
+                }
+                None => {
+                    let calib =
+                        sweep::synthetic_calib(&arts, seed, &axes.groups);
+                    sweep::run_grid(&arts, &calib, &axes, &run_tag,
+                                    Some(&store), resume, pool, None)?
+                }
+            };
         }
         Some(model) => {
+            if args.get("serve").is_some() {
+                return Err(anyhow!("--serve drives the engine-free \
+                    synthetic grid only (workers recompute cells from the \
+                    seed; real-model sweeps need the local engine)"));
+            }
             // real artifacts: calibrate once per group value via the
             // engine, reuse across every cell; NLL per cell where a
             // matching fwd graph exists (the fwd graphs consume
@@ -370,6 +472,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             out_dir = args.get("out").map(std::path::PathBuf::from)
                 .unwrap_or_else(|| lrc::artifacts_dir().join("sweep")
                                 .join(&arts.info.name));
+            store = store_for(&out_dir);
             println!("sweep: {} cells on model {model}, out {out_dir:?}",
                      axes.cells().len());
             let mut nll_eval = |key: &lrc::sweep::CellKey,
@@ -387,7 +490,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                 Ok(Some(ppl.ln()))
             };
             outcome = sweep::run_grid(&arts, &calib, &axes, &run_tag,
-                                      Some(&out_dir.join("cells")), resume,
+                                      Some(&store), resume,
                                       pool, Some(&mut nll_eval))?;
         }
     }
@@ -400,6 +503,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     println!("\n{}", outcome.markdown);
     println!("cells: {} computed, {} resumed; report under {out_dir:?}",
              outcome.computed, outcome.resumed);
+    let c = store.counters();
+    println!("registry {}: {} hit(s), {} published, {} corrupt",
+             store.describe(), c.hits, c.published, c.corrupt);
     if !outcome.violations.is_empty() {
         for v in &outcome.violations {
             eprintln!("sanity violation: {v}");
@@ -409,6 +515,18 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     }
     println!("sanity assertions: all hold (gptq<=rtn, rank monotone, \
               size strictly increasing in bits)");
+    Ok(())
+}
+
+fn cmd_sweep_worker(args: &Args) -> Result<()> {
+    let addr = args.get("connect")
+        .ok_or_else(|| anyhow!("--connect <host:port> of a `lrc sweep \
+                                --serve` dispatcher is required"))?;
+    let pool = lrc::par::global();
+    println!("sweep-worker: connecting to {addr}");
+    let computed = lrc::sweep::worker_loop(addr, pool,
+                                           |s| println!("{s}"))?;
+    println!("sweep-worker: grid done, {computed} cell(s) computed here");
     Ok(())
 }
 

@@ -25,6 +25,7 @@ use crate::lrc::{lrc, svd::svd_baseline, LayerStats};
 use crate::par::Pool;
 use crate::quant::pack::{model_size_bytes, PackedInts};
 use crate::quant::{search_act_clip, weight_scales, QuantConfig};
+use crate::registry::{ObjectKey, Registry};
 use crate::runtime::{Engine, GraphInfo, ModelArtifacts, ModelInfo, TensorBundle};
 use crate::util::Json;
 
@@ -53,6 +54,15 @@ impl Method {
             Method::Quarot => "QuaRot".into(),
             Method::Svd => "SVD".into(),
             Method::Lrc => format!("LRC ({})", cfg.iters),
+        }
+    }
+    /// Stable lowercase name — registry digests key on this, so it must
+    /// never change for an existing variant (round-trips `Method::parse`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Quarot => "quarot",
+            Method::Svd => "svd",
+            Method::Lrc => "lrc",
         }
     }
 }
@@ -141,17 +151,41 @@ pub struct CalibStats {
     pub seconds: f64,
 }
 
-/// Largest `acts_b*` batch bucket exported for this model — the bucket
-/// that amortizes session overhead best during calibration.
-fn largest_acts_graph(arts: &ModelArtifacts) -> Result<String> {
-    arts.bucket_graphs("acts")
-        .last()
-        .map(|(_, g)| g.name.clone())
-        .ok_or_else(|| {
-            anyhow!("model {} exports no acts_b* graph (have: {:?})",
-                    arts.info.name,
-                    arts.graphs.keys().collect::<Vec<_>>())
-        })
+/// Plan how `n_seqs` calibration sequences spread over the exported
+/// `acts_b*` batch buckets: greedily fill the largest bucket while a full
+/// batch remains, then hand the tail to the smallest bucket that still
+/// holds it — so a 41-sequence run over buckets {1, 8, 32} calibrates as
+/// 32 + 8 + 1 with **zero** padded rows, where the old largest-only
+/// policy padded 23 dead sequences into a second batch of 32.  Returns
+/// `(bucket, used)` entries in execution order (deterministic: largest
+/// first); `used < bucket` only ever in the final entry.
+pub fn plan_calib_buckets(n_seqs: usize, buckets: &[usize])
+                          -> Result<Vec<(usize, usize)>> {
+    if buckets.is_empty() {
+        return Err(anyhow!(
+            "no acts_b* batch buckets to plan calibration over"));
+    }
+    if buckets.contains(&0) {
+        return Err(anyhow!("zero-size acts bucket"));
+    }
+    let mut desc: Vec<usize> = buckets.to_vec();
+    desc.sort_unstable_by(|a, b| b.cmp(a));
+    desc.dedup();
+    let mut plan = Vec::new();
+    let mut remaining = n_seqs;
+    for &b in &desc {
+        while remaining >= b {
+            plan.push((b, b));
+            remaining -= b;
+        }
+    }
+    if remaining > 0 {
+        // after the descending pass, remaining < the smallest bucket, so
+        // every bucket can hold the tail; the smallest pads least
+        let b = *desc.last().expect("non-empty bucket list");
+        plan.push((b, remaining));
+    }
+    Ok(plan)
 }
 
 /// Build the calibration batch list for `collect_stats`, validating the
@@ -172,9 +206,17 @@ pub fn calib_batches(corpus: &Corpus, n_seqs: usize, seq_len: usize,
     Ok(crate::data::batch_sequences(&seqs, batch))
 }
 
-/// Stream `n_seqs` calibration sequences through the acts graph and
+/// Stream `n_seqs` calibration sequences through the acts graphs and
 /// accumulate Σ per activation (paper: 128 sequences).  Σ partials are
 /// folded on the process pool (see [`LayerStats::update_rows_f32_par`]).
+///
+/// Batches follow [`plan_calib_buckets`] over **every** exported
+/// `acts_b*` bucket — the old policy ran only the largest bucket and
+/// padded the tail up to it, silently burning forward passes on dead
+/// rows whenever `n_seqs` was not a multiple of the largest batch.  One
+/// session is compiled per distinct bucket the plan touches; the plan's
+/// order is fixed (largest bucket first), so the Σ accumulation order —
+/// and therefore every downstream bit — is deterministic.
 pub fn collect_stats(engine: &Engine, arts: &ModelArtifacts, corpus: &Corpus,
                      n_seqs: usize, seed: u64, a_bits: Option<u32>,
                      a_group: Option<usize>) -> Result<CalibStats> {
@@ -183,46 +225,72 @@ pub fn collect_stats(engine: &Engine, arts: &ModelArtifacts, corpus: &Corpus,
     // computed from model outputs, never from these seconds.
     let t0 = Instant::now();
     let pool = crate::par::global();
-    let gname = largest_acts_graph(arts)?;
-    let session = engine.session(arts, &gname, None)?;
-    let batches = calib_batches(corpus, n_seqs, arts.info.seq_len, seed,
-                                session.batch)?;
+    if n_seqs == 0 {
+        return Err(anyhow!(
+            "0 calibration sequences requested — calibration needs at \
+             least one (pass --calib N with N > 0; the paper uses 128)"));
+    }
+    let buckets: Vec<usize> = arts.bucket_graphs("acts")
+        .iter().map(|(b, _)| *b).collect();
+    if buckets.is_empty() {
+        return Err(anyhow!(
+            "model {} exports no acts_b* graph (have: {:?})",
+            arts.info.name, arts.graphs.keys().collect::<Vec<_>>()));
+    }
+    let plan = plan_calib_buckets(n_seqs, &buckets)?;
+    let seqs = corpus.calib_sequences(n_seqs, arts.info.seq_len, seed)?;
 
+    let mut sessions: BTreeMap<usize, crate::runtime::Session> =
+        BTreeMap::new();
     let mut stats: BTreeMap<String, LayerStats> = BTreeMap::new();
     let mut first = true;
-    for (flat, used) in &batches {
-        let out = session.run(flat)?;
-        for slice in &session.acts {
-            let rows_per_seq = slice.rows / session.batch;
-            let n_rows = used * rows_per_seq;
-            let seg = &out[slice.offset..slice.offset + slice.rows * slice.dim];
-            if first {
-                // clip search on the first batch (per-activation c);
-                // the transposed batch is workspace scratch shared with
-                // the Σ-update transposes that follow
-                let mut x = crate::linalg::workspace::take_mat(
-                    slice.dim, n_rows);
-                for r in 0..n_rows {
-                    for c in 0..slice.dim {
-                        x[(c, r)] = seg[r * slice.dim + c] as f64;
-                    }
-                }
-                let clip = match a_bits {
-                    Some(bits) => search_act_clip(&x, bits, a_group),
-                    None => 1.0,
-                };
-                crate::linalg::workspace::recycle_mat(x);
-                stats.insert(slice.name.clone(),
-                             LayerStats::new(slice.dim, a_bits, clip, a_group));
-            }
-            let st = stats.get_mut(&slice.name).ok_or_else(|| {
-                anyhow!("activation slice {:?} first appeared after the \
-                         first calibration batch — the acts graph output \
-                         set must be stable across batches", slice.name)
-            })?;
-            st.update_rows_f32_par(&seg[..n_rows * slice.dim], n_rows, pool);
+    let mut cursor = 0usize;
+    for (bucket, used) in plan {
+        if !sessions.contains_key(&bucket) {
+            let gname = format!("acts_b{bucket}");
+            sessions.insert(bucket, engine.session(arts, &gname, None)?);
         }
-        first = false;
+        let session = &sessions[&bucket];
+        let chunk = &seqs[cursor..cursor + used];
+        cursor += used;
+        for (flat, used) in &crate::data::batch_sequences(chunk, bucket) {
+            let out = session.run(flat)?;
+            for slice in &session.acts {
+                let rows_per_seq = slice.rows / session.batch;
+                let n_rows = used * rows_per_seq;
+                let seg =
+                    &out[slice.offset..slice.offset + slice.rows * slice.dim];
+                if first {
+                    // clip search on the first batch (per-activation c);
+                    // the transposed batch is workspace scratch shared
+                    // with the Σ-update transposes that follow
+                    let mut x = crate::linalg::workspace::take_mat(
+                        slice.dim, n_rows);
+                    for r in 0..n_rows {
+                        for c in 0..slice.dim {
+                            x[(c, r)] = seg[r * slice.dim + c] as f64;
+                        }
+                    }
+                    let clip = match a_bits {
+                        Some(bits) => search_act_clip(&x, bits, a_group),
+                        None => 1.0,
+                    };
+                    crate::linalg::workspace::recycle_mat(x);
+                    stats.insert(slice.name.clone(),
+                                 LayerStats::new(slice.dim, a_bits, clip,
+                                                 a_group));
+                }
+                let st = stats.get_mut(&slice.name).ok_or_else(|| {
+                    anyhow!("activation slice {:?} first appeared after the \
+                             first calibration batch — the acts graph \
+                             output set must be stable across batches and \
+                             buckets", slice.name)
+                })?;
+                st.update_rows_f32_par(&seg[..n_rows * slice.dim], n_rows,
+                                       pool);
+            }
+            first = false;
+        }
     }
     Ok(CalibStats { stats, seconds: t0.elapsed().as_secs_f64() })
 }
@@ -365,6 +433,115 @@ pub fn quantize_model_with_pool(arts: &ModelArtifacts, calib: &CalibStats,
         fp_params,
     };
     Ok((bundle, report))
+}
+
+/// Finite numbers serialize as themselves; NaN/Inf (pathological solves)
+/// as `null` — JSON has no spelling for them, and a registry object must
+/// always parse back.
+fn finite_or_null(v: f64) -> Json {
+    if v.is_finite() { Json::num(v) } else { Json::Null }
+}
+
+/// Canonical JSON for a [`PipelineReport`] — the registry payload form.
+/// Wall-clock seconds are deliberately **excluded**: registry objects
+/// are keyed by content and must be bit-identical across runs, and the
+/// timings are the one non-deterministic field a report carries.
+pub fn report_to_json(report: &PipelineReport) -> Json {
+    Json::obj(vec![
+        ("method", Json::str(report.method.name())),
+        ("layers", Json::Arr(report.layers.iter().map(|l| Json::obj(vec![
+            ("layer", Json::str(l.layer.clone())),
+            ("rank", Json::num(l.rank as f64)),
+            ("objective", finite_or_null(l.objective)),
+            ("rel_error", finite_or_null(l.rel_error)),
+            ("clip", finite_or_null(l.clip)),
+        ])).collect())),
+        ("packed_bytes", Json::num(report.packed_bytes as f64)),
+        ("lowrank_params", Json::num(report.lowrank_params as f64)),
+        ("fp_params", Json::num(report.fp_params as f64)),
+    ])
+}
+
+/// Rebuild a [`PipelineReport`] from its registry payload form.  The
+/// timing fields come back as zero (they were never stored — a cached
+/// artifact did no work).
+pub fn report_from_json(j: &Json) -> Result<PipelineReport> {
+    let method = Method::parse(j.get("method").and_then(|m| m.as_str())
+        .ok_or_else(|| anyhow!("cached report missing method"))?)?;
+    let fnum = |t: &Json, f: &str| {
+        t.get(f).and_then(|v| v.as_f64()).unwrap_or(f64::NAN)
+    };
+    let mut layers = Vec::new();
+    for l in j.get("layers").and_then(|l| l.as_arr())
+        .ok_or_else(|| anyhow!("cached report missing layers"))? {
+        layers.push(LayerReport {
+            layer: l.get("layer").and_then(|n| n.as_str())
+                .ok_or_else(|| anyhow!("cached layer report missing name"))?
+                .to_string(),
+            rank: l.get("rank").and_then(|r| r.as_usize())
+                .ok_or_else(|| anyhow!("cached layer report missing rank"))?,
+            objective: fnum(l, "objective"),
+            rel_error: fnum(l, "rel_error"),
+            clip: fnum(l, "clip"),
+        });
+    }
+    let unum = |f: &str| {
+        j.get(f).and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow!("cached report missing {f}"))
+    };
+    Ok(PipelineReport {
+        method,
+        layers,
+        calib_seconds: 0.0,
+        quant_seconds: 0.0,
+        packed_bytes: unum("packed_bytes")?,
+        lowrank_params: unum("lowrank_params")?,
+        fp_params: unum("fp_params")?,
+    })
+}
+
+/// Verified registry lookup for a quant artifact: `Ok(None)` is a miss
+/// (absent / corrupt / stale code version — compute it), `Ok(Some)` is
+/// the bit-exact bundle + report previously published under this key.
+/// This is checked **before** any engine or calibration work exists, so
+/// a warm hit skips stats collection entirely (see `cmd_quantize`).
+pub fn load_cached_quant(reg: &Registry, key: &ObjectKey)
+                         -> Result<Option<(TensorBundle, PipelineReport)>> {
+    let Some(obj) = reg.get(key)? else { return Ok(None) };
+    let payload = obj.payload()?;
+    let report = report_from_json(payload.get("report")
+        .ok_or_else(|| anyhow!("quant registry object missing report"))?)?;
+    let table = payload.get("tensors")
+        .ok_or_else(|| anyhow!("quant registry object missing tensors"))?;
+    let blob = obj.blob.as_deref()
+        .ok_or_else(|| anyhow!("quant registry object missing blob"))?;
+    let bundle = crate::registry::bundle_from_blob(table, blob)?;
+    Ok(Some((bundle, report)))
+}
+
+/// [`quantize_model_with_pool`] behind the registry: a hit returns the
+/// published bundle/report **without touching** `calib`, `graph` or the
+/// pool (zero quantization compute — the warm-re-run acceptance test in
+/// `tests/registry.rs` passes empty stats to prove it); a miss computes,
+/// publishes and returns.  The `bool` is `true` on a hit.
+pub fn quantize_model_cached(arts: &ModelArtifacts, calib: &CalibStats,
+                             graph: &GraphInfo, method: Method,
+                             cfg: &QuantConfig, pool: &Pool, reg: &Registry,
+                             key: &ObjectKey)
+                             -> Result<(TensorBundle, PipelineReport, bool)> {
+    if let Some((bundle, report)) = load_cached_quant(reg, key)? {
+        return Ok((bundle, report, true));
+    }
+    let (bundle, report) =
+        quantize_model_with_pool(arts, calib, graph, method, cfg, pool)?;
+    let (table, blob) = crate::registry::bundle_to_blob(&bundle);
+    let payload = Json::obj(vec![
+        ("kind", Json::str("quant-bundle")),
+        ("report", report_to_json(&report)),
+        ("tensors", table),
+    ]);
+    reg.publish(key, &payload, Some(&blob))?;
+    Ok((bundle, report, false))
 }
 
 /// [`collect_stats`] for the activation-quant config `graph` implies:
@@ -545,5 +722,114 @@ mod tests {
         assert_eq!(activation_source("blk1.wdown"), "blk1.ffn_had");
         assert_eq!(activation_source("blk0.e1.wgate"), "blk0.ln2_out");
         assert_eq!(activation_source("blk0.e1.wdown"), "blk0.e1.ffn_had");
+    }
+
+    #[test]
+    fn method_name_roundtrips() {
+        for m in [Method::Quarot, Method::Svd, Method::Lrc] {
+            assert_eq!(Method::parse(m.name()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn calib_plan_spreads_over_every_bucket() {
+        // regression: the old policy calibrated on the largest bucket
+        // only — 41 sequences over {1, 8, 32} ran 2×32 batches with 23
+        // padded dead rows; the plan covers all 41 with zero padding
+        let plan = plan_calib_buckets(41, &[1, 8, 32]).unwrap();
+        assert_eq!(plan, vec![(32, 32), (8, 8), (1, 1)]);
+        assert!(plan.iter().all(|(b, u)| u == b), "no padded entries");
+
+        // tail smaller than every bucket lands in the smallest (least
+        // padding), partially filled
+        assert_eq!(plan_calib_buckets(7, &[8, 32]).unwrap(), vec![(8, 7)]);
+        // a single bucket repeats until the sequences are consumed
+        assert_eq!(plan_calib_buckets(64, &[32]).unwrap(),
+                   vec![(32, 32), (32, 32)]);
+        // duplicates on the bucket axis fold away; order in is irrelevant
+        assert_eq!(plan_calib_buckets(9, &[8, 1, 8]).unwrap(),
+                   vec![(8, 8), (1, 1)]);
+        assert!(plan_calib_buckets(5, &[]).is_err());
+        assert!(plan_calib_buckets(5, &[0, 8]).is_err());
+    }
+
+    #[test]
+    fn calib_plan_on_a_multi_bucket_fixture() {
+        // drive the plan from a fixture's exported graphs, exactly as
+        // collect_stats does
+        let mk = |name: &str, batch: usize| GraphInfo {
+            name: name.into(),
+            file: std::path::PathBuf::new(),
+            params: Vec::new(),
+            batch,
+            ranks: BTreeMap::new(),
+            rank_pct: 0.0,
+            a_group: None,
+            weight_only: false,
+            acts: Vec::new(),
+        };
+        let mut graphs = BTreeMap::new();
+        for (n, b) in [("acts_b1", 1), ("acts_b8", 8), ("acts_b32", 32),
+                       ("fwd_fp_b8", 8)] {
+            graphs.insert(n.to_string(), mk(n, b));
+        }
+        let arts = ModelArtifacts {
+            dir: std::path::PathBuf::new(),
+            weights: TensorBundle::default(),
+            graphs,
+            info: ModelInfo {
+                name: "t".into(), d_model: 8, n_layers: 1, n_heads: 2,
+                d_ff: 16, n_experts: 0, seq_len: 4, vocab: 64,
+                param_count: 0,
+            },
+        };
+        let buckets: Vec<usize> = arts.bucket_graphs("acts")
+            .iter().map(|(b, _)| *b).collect();
+        assert_eq!(buckets, vec![1, 8, 32]);
+        let plan = plan_calib_buckets(128, &buckets).unwrap();
+        // the paper's 128 sequences: four full batches of 32, no padding
+        assert_eq!(plan, vec![(32, 32); 4]);
+        let covered: usize = plan.iter().map(|(_, u)| u).sum();
+        assert_eq!(covered, 128);
+    }
+
+    #[test]
+    fn report_json_roundtrip_drops_only_the_timings() {
+        let report = PipelineReport {
+            method: Method::Lrc,
+            layers: vec![
+                LayerReport { layer: "blk0.wq".into(), rank: 3,
+                              objective: 0.125, rel_error: 0.03125,
+                              clip: 0.97 },
+                LayerReport { layer: "blk0.wdown".into(), rank: 0,
+                              objective: f64::NAN, rel_error: 0.5,
+                              clip: 1.0 },
+            ],
+            calib_seconds: 12.5,
+            quant_seconds: 3.25,
+            packed_bytes: 4096,
+            lowrank_params: 128,
+            fp_params: 777,
+        };
+        let j = report_to_json(&report);
+        let text = j.to_string();
+        assert!(!text.contains("seconds"),
+                "wall-clock must not enter registry payloads: {text}");
+        let back = report_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.method, report.method);
+        assert_eq!(back.layers.len(), 2);
+        assert_eq!(back.layers[0].layer, "blk0.wq");
+        assert_eq!(back.layers[0].rank, 3);
+        // exact f64 round-trip (shortest-roundtrip formatting)
+        assert_eq!(back.layers[0].objective, 0.125);
+        assert_eq!(back.layers[0].rel_error, 0.03125);
+        // the NaN objective serialized as null and came back NaN
+        assert!(back.layers[1].objective.is_nan());
+        assert_eq!(back.packed_bytes, 4096);
+        assert_eq!(back.lowrank_params, 128);
+        assert_eq!(back.fp_params, 777);
+        assert_eq!(back.calib_seconds, 0.0);
+        assert_eq!(back.quant_seconds, 0.0);
+        assert_eq!(back.size_bytes(), report.size_bytes());
     }
 }

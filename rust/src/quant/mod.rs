@@ -44,6 +44,17 @@ pub enum Quantizer {
     Rtn,
 }
 
+impl Quantizer {
+    /// Stable lowercase name — registry digests and CLI round-trips key
+    /// on this, so it must never change for an existing variant.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Quantizer::Gptq => "gptq",
+            Quantizer::Rtn => "rtn",
+        }
+    }
+}
+
 impl Default for QuantConfig {
     fn default() -> Self {
         QuantConfig {

@@ -1,0 +1,539 @@
+//! Content-addressed artifact registry (spec: `docs/REGISTRY.md`).
+//!
+//! Every expensive artifact the pipeline produces — quant bundles, sweep
+//! cell records — is stored under a **content digest of its inputs**:
+//! `sha256` over the canonical JSON of `(kind, model-id, method,
+//! QuantConfig, seed, calib-identity, code-version)`.  Identical inputs
+//! → identical digest → the work is never done twice, on this machine or
+//! any machine sharing the store; any input changing (including
+//! [`CODE_VERSION`] when the math changes) changes the digest, so stale
+//! results can never be served.
+//!
+//! * [`ObjectKey`] / [`ObjectKey::digest`] — the digest recipe.
+//! * [`RegistryBackend`] — pluggable raw byte store (get/put by digest).
+//!   [`FsRegistry`] is the local-FS backend: `<root>/objects/<digest>.json`
+//!   (+ optional `.bin` blob), published atomically via temp-file +
+//!   rename so readers never observe a half-written object.
+//! * [`Registry`] — the verified façade: wraps a backend, seals every
+//!   object with integrity checksums on publish and re-verifies them on
+//!   read (a corrupt or truncated object is a **miss**, never an error,
+//!   and never trusted), and counts hits / misses / corruptions.
+//! * [`proto`] / [`service`] — the length-prefixed line protocol and the
+//!   dispatcher/worker loops that shard a sweep grid across processes
+//!   (`lrc sweep --serve` / `lrc sweep-worker`).
+//!
+//! Layering: the registry sits **above** the compute stack — `pipeline`
+//! and `sweep` may consult it, but nothing in `linalg`/`quant`/`lrc`
+//! depends on it (enforced by `lrc analyze`'s layering map), so the math
+//! stays desk-verifiable without any storage concerns.
+
+pub mod digest;
+pub mod proto;
+pub mod service;
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::quant::QuantConfig;
+use crate::runtime::TensorBundle;
+use crate::util::Json;
+
+pub use digest::sha256_hex;
+
+/// Object schema tag: bump together with any incompatible change to the
+/// meta layout below.
+pub const SCHEMA: &str = "lrc-registry-v1";
+
+/// Identity of the quantization *code*.  Part of every digest: bump it
+/// whenever a change alters what the solvers/packers compute for the
+/// same inputs, and every previously published artifact silently becomes
+/// a miss instead of a wrong hit.
+pub const CODE_VERSION: &str = "lrc-quant-v1";
+
+/// Canonical JSON for a [`QuantConfig`] — the digest's config component.
+/// BTreeMap-backed [`Json`] keeps key order (and therefore the digest)
+/// stable regardless of construction order.
+pub fn quant_config_json(cfg: &QuantConfig) -> Json {
+    Json::obj(vec![
+        ("w_bits", Json::num(cfg.w_bits as f64)),
+        ("a_bits", match cfg.a_bits {
+            None => Json::Null,
+            Some(b) => Json::num(b as f64),
+        }),
+        ("a_group", match cfg.a_group {
+            None => Json::Null,
+            Some(g) => Json::num(g as f64),
+        }),
+        ("quantizer", Json::str(cfg.quantizer.name())),
+        ("rank_pct", Json::num(cfg.rank_pct)),
+        ("iters", Json::num(cfg.iters as f64)),
+    ])
+}
+
+/// The full identity of one registry object — everything that determines
+/// the bytes of the artifact.  Two runs producing the same key *must*
+/// produce bit-identical artifacts (the crate's determinism contract),
+/// which is what makes sharing a registry between machines sound.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ObjectKey {
+    /// artifact kind: `"quant-bundle"` or `"sweep-cell"`
+    pub kind: String,
+    /// model identity (artifact dir name, or `"synthetic"`)
+    pub model: String,
+    /// method / sweep-method name (`"lrc"`, `"rtn"`, ...)
+    pub method: String,
+    /// the cell's full [`QuantConfig`] (canonical JSON)
+    pub config: Json,
+    /// RNG seed of the run (synthetic model seed or calibration seed)
+    pub seed: u64,
+    /// calibration identity: corpus + sequence count (or the sweep run
+    /// tag, which encodes the same)
+    pub calib: String,
+    /// [`CODE_VERSION`] at publish time
+    pub code: String,
+}
+
+impl ObjectKey {
+    pub fn new(kind: &str, model: &str, method: &str, cfg: &QuantConfig,
+               seed: u64, calib: &str) -> ObjectKey {
+        ObjectKey {
+            kind: kind.to_string(),
+            model: model.to_string(),
+            method: method.to_string(),
+            config: quant_config_json(cfg),
+            seed,
+            calib: calib.to_string(),
+            code: CODE_VERSION.to_string(),
+        }
+    }
+
+    /// The canonical key material the digest is computed over.
+    pub fn material(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str(self.kind.clone())),
+            ("model", Json::str(self.model.clone())),
+            ("method", Json::str(self.method.clone())),
+            ("config", self.config.clone()),
+            ("seed", Json::num(self.seed as f64)),
+            ("calib", Json::str(self.calib.clone())),
+            ("code", Json::str(self.code.clone())),
+        ])
+    }
+
+    /// `sha256(material)` — the object's address.
+    pub fn digest(&self) -> String {
+        sha256_hex(self.material().to_string().as_bytes())
+    }
+}
+
+/// A verified object read back from the registry.
+pub struct RegistryObject {
+    /// the full meta document (schema, key material, payload, checksums)
+    pub meta: Json,
+    /// the optional binary blob (quant bundles store tensor data here)
+    pub blob: Option<Vec<u8>>,
+}
+
+impl RegistryObject {
+    /// The publisher's payload document.
+    pub fn payload(&self) -> Result<&Json> {
+        self.meta.get("payload")
+            .ok_or_else(|| anyhow!("registry object missing payload"))
+    }
+}
+
+/// A raw byte store addressed by digest.  Implementations only move
+/// bytes; all integrity verification lives in [`Registry`], so a remote
+/// backend written against `docs/REGISTRY.md` gets the same corruption
+/// handling for free.
+pub trait RegistryBackend: Send + Sync {
+    /// Fetch `(meta bytes, optional blob bytes)`, `None` when absent.
+    fn get_raw(&self, digest: &str)
+               -> Result<Option<(Vec<u8>, Option<Vec<u8>>)>>;
+    /// Publish atomically: a concurrent `get_raw` sees either nothing or
+    /// the complete object, never a torn write.
+    fn put_raw(&self, digest: &str, meta: &[u8], blob: Option<&[u8]>)
+               -> Result<()>;
+    /// Human-readable location (log lines).
+    fn describe(&self) -> String;
+}
+
+/// Local-FS backend: `<root>/objects/<digest>.json` (+ `.bin`), with
+/// publishes staged under `<root>/tmp/` and `rename(2)`d into place —
+/// rename within one filesystem is atomic, so a reader races only
+/// against complete objects.
+pub struct FsRegistry {
+    root: PathBuf,
+}
+
+/// Process-wide staging counter so concurrent publishes (pool workers,
+/// several processes sharing a store) never collide on a temp name.
+static STAGE_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+impl FsRegistry {
+    pub fn new(root: &Path) -> FsRegistry {
+        FsRegistry { root: root.to_path_buf() }
+    }
+
+    /// Where an object's meta document lives (tests poke corruption in).
+    pub fn object_file(&self, digest: &str) -> PathBuf {
+        self.root.join("objects").join(format!("{digest}.json"))
+    }
+
+    /// Where an object's blob lives.
+    pub fn blob_file(&self, digest: &str) -> PathBuf {
+        self.root.join("objects").join(format!("{digest}.bin"))
+    }
+
+    fn stage(&self, bytes: &[u8], dest: &Path) -> Result<()> {
+        let tmp_dir = self.root.join("tmp");
+        std::fs::create_dir_all(&tmp_dir)?;
+        let tag = STAGE_COUNTER.fetch_add(1, Ordering::Relaxed);
+        let tmp = tmp_dir.join(format!(
+            "stage-{}-{}-{}", std::process::id(), tag,
+            dest.file_name().and_then(|n| n.to_str()).unwrap_or("obj")));
+        std::fs::write(&tmp, bytes)
+            .with_context(|| format!("stage {tmp:?}"))?;
+        std::fs::rename(&tmp, dest)
+            .with_context(|| format!("publish {dest:?}"))?;
+        Ok(())
+    }
+}
+
+impl RegistryBackend for FsRegistry {
+    fn get_raw(&self, digest: &str)
+               -> Result<Option<(Vec<u8>, Option<Vec<u8>>)>> {
+        let meta = match std::fs::read(self.object_file(digest)) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(None);
+            }
+            Err(e) => return Err(e).context("read registry object"),
+        };
+        let blob = match std::fs::read(self.blob_file(digest)) {
+            Ok(b) => Some(b),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => None,
+            Err(e) => return Err(e).context("read registry blob"),
+        };
+        Ok(Some((meta, blob)))
+    }
+
+    fn put_raw(&self, digest: &str, meta: &[u8], blob: Option<&[u8]>)
+               -> Result<()> {
+        std::fs::create_dir_all(self.root.join("objects"))?;
+        // blob first: the meta document is the commit point — a reader
+        // that sees meta always finds the blob it references
+        if let Some(b) = blob {
+            self.stage(b, &self.blob_file(digest))?;
+        }
+        self.stage(meta, &self.object_file(digest))
+    }
+
+    fn describe(&self) -> String {
+        format!("fs:{}", self.root.display())
+    }
+}
+
+/// Hit/miss/corruption counters for one registry handle (operator
+/// feedback + the "warm re-run did zero compute" acceptance test).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RegistryCounters {
+    pub hits: u64,
+    pub misses: u64,
+    pub corrupt: u64,
+    pub published: u64,
+}
+
+/// The verified registry façade over a [`RegistryBackend`].
+///
+/// `get` re-derives every checksum before trusting an object: schema and
+/// digest must match the request, the payload checksum must match the
+/// payload bytes, and a referenced blob must be present with the right
+/// length and checksum.  Any mismatch counts as `corrupt` and reads as a
+/// miss — the caller recomputes and republishes, it never errors on
+/// somebody else's torn write.
+pub struct Registry {
+    backend: Box<dyn RegistryBackend>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    corrupt: AtomicU64,
+    published: AtomicU64,
+}
+
+impl Registry {
+    /// Registry over the local-FS backend rooted at `root`.
+    pub fn local(root: &Path) -> Registry {
+        Registry::with_backend(Box::new(FsRegistry::new(root)))
+    }
+
+    pub fn with_backend(backend: Box<dyn RegistryBackend>) -> Registry {
+        Registry {
+            backend,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            corrupt: AtomicU64::new(0),
+            published: AtomicU64::new(0),
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        self.backend.describe()
+    }
+
+    pub fn counters(&self) -> RegistryCounters {
+        RegistryCounters {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            corrupt: self.corrupt.load(Ordering::Relaxed),
+            published: self.published.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Verified lookup.  `Ok(None)` covers absent, stale-schema and
+    /// corrupt objects alike — all of them mean "compute it".
+    pub fn get(&self, key: &ObjectKey) -> Result<Option<RegistryObject>> {
+        let digest = key.digest();
+        let Some((meta_bytes, blob)) = self.backend.get_raw(&digest)? else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return Ok(None);
+        };
+        match verify_object(&digest, &meta_bytes, blob) {
+            Some(obj) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Ok(Some(obj))
+            }
+            None => {
+                self.corrupt.fetch_add(1, Ordering::Relaxed);
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Ok(None)
+            }
+        }
+    }
+
+    /// Seal and publish `payload` (+ optional blob) under `key`.
+    /// Publishing the same key twice is fine — deterministic compute
+    /// makes the bytes identical, so the second publish is a no-op
+    /// overwrite.  Returns the object digest.
+    pub fn publish(&self, key: &ObjectKey, payload: &Json,
+                   blob: Option<&[u8]>) -> Result<String> {
+        let digest = key.digest();
+        let mut pairs = vec![
+            ("schema", Json::str(SCHEMA)),
+            ("digest", Json::str(digest.clone())),
+            ("key", key.material()),
+            ("payload", payload.clone()),
+            ("check", Json::str(sha256_hex(payload.to_string().as_bytes()))),
+        ];
+        if let Some(b) = blob {
+            pairs.push(("blob_len", Json::num(b.len() as f64)));
+            pairs.push(("blob_sha256", Json::str(sha256_hex(b))));
+        }
+        let meta = Json::obj(pairs).to_string();
+        self.backend.put_raw(&digest, meta.as_bytes(), blob)?;
+        self.published.fetch_add(1, Ordering::Relaxed);
+        Ok(digest)
+    }
+}
+
+/// Full integrity verification of a raw object; `None` = treat as miss.
+fn verify_object(digest: &str, meta_bytes: &[u8], blob: Option<Vec<u8>>)
+                 -> Option<RegistryObject> {
+    let text = std::str::from_utf8(meta_bytes).ok()?;
+    let meta = Json::parse(text).ok()?;
+    if meta.get("schema").and_then(|s| s.as_str()) != Some(SCHEMA) {
+        return None;
+    }
+    if meta.get("digest").and_then(|d| d.as_str()) != Some(digest) {
+        return None;
+    }
+    let payload = meta.get("payload")?;
+    let check = meta.get("check").and_then(|c| c.as_str())?;
+    if sha256_hex(payload.to_string().as_bytes()) != check {
+        return None;
+    }
+    let blob = match meta.get("blob_sha256").and_then(|s| s.as_str()) {
+        None => None,
+        Some(want) => {
+            let b = blob?;
+            let len = meta.get("blob_len").and_then(|l| l.as_usize())?;
+            if b.len() != len || sha256_hex(&b) != want {
+                return None;
+            }
+            Some(b)
+        }
+    };
+    Some(RegistryObject { meta, blob })
+}
+
+// ---------------------------------------------------------------------------
+// tensor-bundle <-> registry blob
+// ---------------------------------------------------------------------------
+
+/// Serialize a [`TensorBundle`] for registry storage: the tensor table
+/// (name/shape/offset, manifest order) goes into the object payload, the
+/// flat little-endian f32 stream into the blob — the same layout
+/// `TensorBundle::write` puts on disk, so the roundtrip is bit-exact.
+pub fn bundle_to_blob(bundle: &TensorBundle) -> (Json, Vec<u8>) {
+    let mut bin: Vec<u8> = Vec::new();
+    let mut table = Vec::new();
+    let mut offset = 0usize;
+    for name in &bundle.order {
+        let t = &bundle.tensors[name];
+        for v in &t.data {
+            bin.extend_from_slice(&v.to_le_bytes());
+        }
+        table.push(Json::obj(vec![
+            ("name", Json::str(name.clone())),
+            ("shape", Json::Arr(
+                t.shape.iter().map(|&s| Json::num(s as f64)).collect())),
+            ("offset", Json::num(offset as f64)),
+        ]));
+        offset += t.numel();
+    }
+    (Json::Arr(table), bin)
+}
+
+/// Rebuild a [`TensorBundle`] from a registry tensor table + blob.
+pub fn bundle_from_blob(table: &Json, blob: &[u8]) -> Result<TensorBundle> {
+    let mut bundle = TensorBundle::default();
+    for t in table.as_arr()
+        .ok_or_else(|| anyhow!("registry tensor table is not an array"))? {
+        let name = t.get("name").and_then(|n| n.as_str())
+            .ok_or_else(|| anyhow!("registry tensor missing name"))?;
+        let shape: Vec<usize> = t.get("shape").and_then(|s| s.as_arr())
+            .ok_or_else(|| anyhow!("registry tensor {name} missing shape"))?
+            .iter().filter_map(|v| v.as_usize()).collect();
+        let offset = t.get("offset").and_then(|o| o.as_usize())
+            .ok_or_else(|| anyhow!("registry tensor {name} missing offset"))?;
+        let numel: usize = shape.iter().product();
+        let (start, end) = (offset * 4, (offset + numel) * 4);
+        if end > blob.len() {
+            bail!("registry tensor {name} out of range ({end} > {} blob \
+                   bytes)", blob.len());
+        }
+        let data: Vec<f32> = blob[start..end]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        bundle.insert(name, shape, data);
+    }
+    Ok(bundle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::Quantizer;
+
+    fn key(seed: u64) -> ObjectKey {
+        ObjectKey::new("sweep-cell", "synthetic", "lrc",
+                       &QuantConfig::cell(4, None, Quantizer::Gptq, 0.10, 1),
+                       seed, "synthetic-seed2024")
+    }
+
+    #[test]
+    fn digest_is_stable_and_sensitive_to_every_field() {
+        let base = key(7);
+        assert_eq!(base.digest(), key(7).digest(),
+                   "same key material must digest identically");
+        let mut other = key(7);
+        other.model = "small".into();
+        assert_ne!(base.digest(), other.digest());
+        let mut other = key(7);
+        other.code = "lrc-quant-v2".into();
+        assert_ne!(base.digest(), other.digest(),
+                   "a code-version bump must move every digest");
+        assert_ne!(base.digest(), key(8).digest());
+        let cfg2 = QuantConfig::cell(2, None, Quantizer::Gptq, 0.10, 1);
+        let other = ObjectKey::new("sweep-cell", "synthetic", "lrc", &cfg2,
+                                   7, "synthetic-seed2024");
+        assert_ne!(base.digest(), other.digest());
+    }
+
+    #[test]
+    fn fs_roundtrip_hit_and_absent_miss() {
+        let root = std::env::temp_dir()
+            .join(format!("lrc_reg_unit_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let reg = Registry::local(&root);
+        let k = key(1);
+        assert!(reg.get(&k).unwrap().is_none(), "empty store must miss");
+        let payload = Json::obj(vec![("answer", Json::num(42.0))]);
+        let digest = reg.publish(&k, &payload, Some(b"blobbytes")).unwrap();
+        assert_eq!(digest, k.digest());
+        let obj = reg.get(&k).unwrap().expect("hit after publish");
+        assert_eq!(obj.payload().unwrap(), &payload);
+        assert_eq!(obj.blob.as_deref(), Some(&b"blobbytes"[..]));
+        let c = reg.counters();
+        assert_eq!((c.hits, c.misses, c.corrupt, c.published), (1, 1, 0, 1));
+        // staging area drains: publish leaves nothing behind in tmp/
+        let leftovers = std::fs::read_dir(root.join("tmp")).unwrap()
+            .flatten().count();
+        assert_eq!(leftovers, 0, "atomic publish must not leave temp files");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn corrupt_objects_read_as_misses() {
+        let root = std::env::temp_dir()
+            .join(format!("lrc_reg_corrupt_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let fs = FsRegistry::new(&root);
+        let reg = Registry::local(&root);
+        let k = key(2);
+        let payload = Json::obj(vec![("v", Json::num(1.0))]);
+        reg.publish(&k, &payload, Some(b"blob")).unwrap();
+
+        // torn meta
+        std::fs::write(fs.object_file(&k.digest()), "{not json").unwrap();
+        assert!(reg.get(&k).unwrap().is_none());
+        assert_eq!(reg.counters().corrupt, 1);
+
+        // valid JSON, wrong payload checksum
+        reg.publish(&k, &payload, Some(b"blob")).unwrap();
+        let text = std::fs::read_to_string(fs.object_file(&k.digest()))
+            .unwrap();
+        std::fs::write(fs.object_file(&k.digest()),
+                       text.replace("\"v\":1", "\"v\":2")).unwrap();
+        assert!(reg.get(&k).unwrap().is_none(),
+                "a tampered payload must fail its checksum");
+
+        // blob truncation
+        reg.publish(&k, &payload, Some(b"blob")).unwrap();
+        std::fs::write(fs.blob_file(&k.digest()), b"blo").unwrap();
+        assert!(reg.get(&k).unwrap().is_none(),
+                "a truncated blob must read as a miss");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn bundle_blob_roundtrip_is_bit_exact() {
+        let mut b = TensorBundle::default();
+        b.insert("blk0.wq", vec![2, 3],
+                 vec![1.5, -0.25, 3.0e-8, f32::MIN_POSITIVE, 0.0, -7.0]);
+        b.insert("blk0.clip", vec![1], vec![0.97]);
+        let (table, blob) = bundle_to_blob(&b);
+        let back = bundle_from_blob(&table, &blob).unwrap();
+        assert_eq!(back.order, b.order);
+        for name in &b.order {
+            let (t0, t1) = (&b.tensors[name], &back.tensors[name]);
+            assert_eq!(t0.shape, t1.shape);
+            assert_eq!(t0.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                       t1.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>());
+        }
+        // a table pointing past the blob is rejected, not mis-read
+        let (table, blob) = bundle_to_blob(&b);
+        assert!(bundle_from_blob(&table, &blob[..blob.len() - 4]).is_err());
+    }
+
+    #[test]
+    fn quant_config_json_is_canonical() {
+        let cfg = QuantConfig::cell(3, Some(32), Quantizer::Rtn, 0.20, 2);
+        let j = quant_config_json(&cfg);
+        assert_eq!(j.to_string(),
+                   "{\"a_bits\":4,\"a_group\":32,\"iters\":2,\
+                    \"quantizer\":\"rtn\",\"rank_pct\":0.2,\"w_bits\":3}");
+    }
+}

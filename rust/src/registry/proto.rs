@@ -1,0 +1,176 @@
+//! The sweep-worker wire format: length-prefixed JSON frames.
+//!
+//! One frame is `<decimal byte length>\n<payload>\n` where the length
+//! counts the payload only (not either newline) and the payload is one
+//! canonical-JSON document.  The prefix makes framing independent of the
+//! payload's contents, the trailing newline keeps a captured stream
+//! greppable, and the cap below bounds what a malformed peer can make
+//! the other side buffer.  The message vocabulary on top of the framing
+//! is specified in `docs/REGISTRY.md` (hello/welcome, claim/cell/wait/
+//! done, publish/ok, heartbeat, error).
+//!
+//! Everything here is pure bytes-in/bytes-out — the loops in
+//! [`crate::registry::service`] own the sockets — so the framing rules
+//! are unit-testable without any I/O.
+
+use anyhow::{bail, Result};
+
+use crate::util::Json;
+
+/// Upper bound on one frame's payload.  Sweep messages are tiny (cell
+/// keys and records); anything near this limit is a corrupted or hostile
+/// stream, not a bigger message.
+pub const MAX_FRAME: usize = 16 * 1024 * 1024;
+
+/// Encode one message as a frame.
+pub fn encode_frame(msg: &Json) -> Vec<u8> {
+    let body = msg.to_string();
+    let mut out = Vec::with_capacity(body.len() + 16);
+    out.extend_from_slice(body.len().to_string().as_bytes());
+    out.push(b'\n');
+    out.extend_from_slice(body.as_bytes());
+    out.push(b'\n');
+    out
+}
+
+/// Incremental frame decoder: feed it whatever the socket produced,
+/// drain complete messages.  Tolerates arbitrary fragmentation (one
+/// byte at a time) and coalescing (many frames per read).
+#[derive(Default)]
+pub struct FrameBuf {
+    buf: Vec<u8>,
+}
+
+impl FrameBuf {
+    pub fn new() -> FrameBuf {
+        FrameBuf::default()
+    }
+
+    /// Append raw bytes read from the peer.
+    pub fn extend(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Pop the next complete message, `Ok(None)` while one is still
+    /// partial.  Errors are not recoverable — a peer that breaks framing
+    /// once can never be resynchronized, so the connection must drop.
+    pub fn next(&mut self) -> Result<Option<Json>> {
+        let Some(nl) = self.buf.iter().position(|&b| b == b'\n') else {
+            if self.buf.len() > 32 {
+                bail!("frame length prefix too long (not this protocol?)");
+            }
+            return Ok(None);
+        };
+        let len: usize = std::str::from_utf8(&self.buf[..nl])
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow::anyhow!(
+                "bad frame length prefix {:?}",
+                String::from_utf8_lossy(&self.buf[..nl])))?;
+        if len > MAX_FRAME {
+            bail!("frame of {len} bytes exceeds the {MAX_FRAME} cap");
+        }
+        // prefix + '\n' + payload + '\n'
+        let total = nl + 1 + len + 1;
+        if self.buf.len() < total {
+            return Ok(None);
+        }
+        if self.buf[total - 1] != b'\n' {
+            bail!("frame missing its trailing newline");
+        }
+        let body = std::str::from_utf8(&self.buf[nl + 1..total - 1])
+            .map_err(|_| anyhow::anyhow!("frame payload is not UTF-8"))?;
+        let msg = Json::parse(body)
+            .map_err(|e| anyhow::anyhow!("frame payload parse: {e}"))?;
+        self.buf.drain(..total);
+        Ok(Some(msg))
+    }
+}
+
+/// The `op` field every message carries.
+pub fn op_of(msg: &Json) -> Result<&str> {
+    msg.get("op").and_then(|o| o.as_str())
+        .ok_or_else(|| anyhow::anyhow!("protocol message missing op: {}",
+                                       msg.to_string()))
+}
+
+/// `{"op": <op>}` shorthand for the payload-free messages.
+pub fn msg(op: &str) -> Json {
+    Json::obj(vec![("op", Json::str(op))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_single_frame() {
+        let m = Json::obj(vec![("op", Json::str("claim")),
+                               ("n", Json::num(3.0))]);
+        let mut fb = FrameBuf::new();
+        fb.extend(&encode_frame(&m));
+        assert_eq!(fb.next().unwrap(), Some(m));
+        assert_eq!(fb.next().unwrap(), None);
+    }
+
+    #[test]
+    fn byte_at_a_time_fragmentation() {
+        let m = Json::obj(vec![("op", Json::str("publish")),
+                               ("key", Json::str("lrc_w4_r10_gnone"))]);
+        let bytes = encode_frame(&m);
+        let mut fb = FrameBuf::new();
+        for (i, b) in bytes.iter().enumerate() {
+            fb.extend(std::slice::from_ref(b));
+            let got = fb.next().unwrap();
+            if i + 1 < bytes.len() {
+                assert!(got.is_none(), "complete frame before byte {i}");
+            } else {
+                assert_eq!(got, Some(m.clone()));
+            }
+        }
+    }
+
+    #[test]
+    fn coalesced_frames_drain_in_order() {
+        let a = msg("claim");
+        let b = Json::obj(vec![("op", Json::str("heartbeat")),
+                               ("key", Json::str("x"))]);
+        let mut stream = encode_frame(&a);
+        stream.extend_from_slice(&encode_frame(&b));
+        let mut fb = FrameBuf::new();
+        fb.extend(&stream);
+        assert_eq!(fb.next().unwrap(), Some(a));
+        assert_eq!(fb.next().unwrap(), Some(b));
+        assert_eq!(fb.next().unwrap(), None);
+    }
+
+    #[test]
+    fn framing_violations_are_fatal() {
+        // non-numeric prefix
+        let mut fb = FrameBuf::new();
+        fb.extend(b"nope\n{}\n");
+        assert!(fb.next().is_err());
+        // oversize declaration
+        let mut fb = FrameBuf::new();
+        fb.extend(format!("{}\n", MAX_FRAME + 1).as_bytes());
+        assert!(fb.next().is_err());
+        // missing trailing newline
+        let mut fb = FrameBuf::new();
+        fb.extend(b"2\n{}X");
+        assert!(fb.next().is_err());
+        // endless garbage with no newline trips the prefix guard
+        let mut fb = FrameBuf::new();
+        fb.extend(&[b'7'; 64]);
+        assert!(fb.next().is_err());
+        // payload must be one JSON document
+        let mut fb = FrameBuf::new();
+        fb.extend(b"3\n{],\n");
+        assert!(fb.next().is_err());
+    }
+
+    #[test]
+    fn op_accessor() {
+        assert_eq!(op_of(&msg("done")).unwrap(), "done");
+        assert!(op_of(&Json::obj(vec![("k", Json::num(1.0))])).is_err());
+    }
+}

@@ -1,0 +1,428 @@
+//! Distributed sweep: the dispatcher and worker halves of the
+//! `lrc sweep --serve` / `lrc sweep-worker` pair.
+//!
+//! The dispatcher owns the canonical cell list and hands cells out over
+//! the [`crate::registry::proto`] frame protocol; workers claim a cell,
+//! compute it with their own local pool, publish the record back and
+//! claim again.  Cells are independent and every cell's math is
+//! bit-identical on any machine/thread-count (the crate's determinism
+//! contract), so the dispatcher merely *collects* — merging the records
+//! in canonical key order afterwards reproduces the single-box report
+//! byte for byte.
+//!
+//! Concurrency model: the dispatcher is a **single-threaded non-blocking
+//! poll loop** — no threads, no locks, no wall clock (this module sits
+//! outside the `par`/`coordinator` concurrency fences and stays there).
+//! Liveness is the TCP connection itself: a worker that dies mid-cell
+//! drops its connection and the dispatcher requeues its claimed cells
+//! for the next claimant.  `heartbeat` frames are progress markers for
+//! the operator log, not a liveness timer.
+//!
+//! Failure stance: a peer that breaks *framing* or speaks the wrong
+//! protocol version is dropped (its cells requeue); a record that fails
+//! *validation* on publish is fatal for the whole run — that is a
+//! version-skewed or miscomputing worker, and silently dropping its
+//! result would hide it.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::proto::{encode_frame, msg, op_of, FrameBuf};
+use crate::util::Json;
+
+/// Protocol version, exchanged in hello/welcome; either side refuses a
+/// mismatch (a skewed worker must never publish into a newer grid).
+pub const PROTO_VERSION: &str = "lrc-sweep-worker-v1";
+
+/// Dispatcher poll-loop sleep between idle iterations.
+const POLL: Duration = Duration::from_millis(2);
+
+/// After the grid completes, the dispatcher keeps the socket open for at
+/// least this many poll iterations so a worker racing in right at the
+/// end gets a clean `done` answer instead of a reset connection...
+const GRACE_ITERS: usize = 250; // ≈0.5 s of 2 ms polls
+
+/// ...and at most this many, so a peer that connects and then stalls
+/// can't pin the dispatcher open forever.
+const LINGER_ITERS: usize = 1500; // ≈3 s of 2 ms polls
+
+/// How long a worker keeps retrying its initial connect (the dispatcher
+/// may still be collecting prefill when workers start).
+const CONNECT_ATTEMPTS: usize = 100;
+const CONNECT_BACKOFF: Duration = Duration::from_millis(100);
+
+/// What one `serve_grid` run collected.
+pub struct ServeOutcome {
+    /// every cell's record, keyed by cell id (prefilled + published)
+    pub records: BTreeMap<String, Json>,
+    /// cells computed by workers this run (not prefilled)
+    pub computed: usize,
+    /// distinct worker connections accepted
+    pub workers_seen: usize,
+}
+
+struct Conn {
+    stream: TcpStream,
+    fb: FrameBuf,
+    greeted: bool,
+    claimed: BTreeSet<String>,
+    alive: bool,
+}
+
+/// Write a frame to a non-blocking socket, absorbing `WouldBlock` with
+/// short sleeps — frames are tiny, so this converges immediately in
+/// practice and bounds nothing but a pathological peer.
+fn write_frame_nb(stream: &mut TcpStream, m: &Json) -> std::io::Result<()> {
+    let bytes = encode_frame(m);
+    let mut off = 0;
+    while off < bytes.len() {
+        match stream.write(&bytes[off..]) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::WriteZero, "peer stopped reading"));
+            }
+            Ok(n) => off += n,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(POLL);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+/// Serve one grid over `listener` until every cell in `cells` has a
+/// record.  `welcome` is the run-identity document sent to each worker
+/// (run tag, model, seed, iters — everything a worker needs to rebuild
+/// the identical inputs); `prefilled` seeds already-known records
+/// (registry hits), which are never handed out.  `on_publish` runs for
+/// every worker-published record (validation + registry write; an error
+/// is fatal for the run).  `progress` receives one line per notable
+/// event for the operator log.
+pub fn serve_grid(listener: &TcpListener, welcome: &Json, cells: &[String],
+                  prefilled: &BTreeMap<String, Json>,
+                  mut on_publish: impl FnMut(&str, &Json) -> Result<()>,
+                  mut progress: impl FnMut(String)) -> Result<ServeOutcome> {
+    listener.set_nonblocking(true)
+        .context("set dispatcher listener non-blocking")?;
+    let cell_set: BTreeSet<&str> = cells.iter().map(|s| s.as_str()).collect();
+    let mut done: BTreeMap<String, Json> = BTreeMap::new();
+    let mut pending: VecDeque<String> = VecDeque::new();
+    for c in cells {
+        match prefilled.get(c) {
+            Some(rec) => {
+                done.insert(c.clone(), rec.clone());
+            }
+            None => pending.push_back(c.clone()),
+        }
+    }
+    let mut welcome_msg = welcome.clone();
+    if let Json::Obj(m) = &mut welcome_msg {
+        m.insert("op".into(), Json::str("welcome"));
+        m.insert("proto".into(), Json::str(PROTO_VERSION));
+    } else {
+        bail!("serve_grid welcome must be a JSON object");
+    }
+
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut computed = 0usize;
+    let mut workers_seen = 0usize;
+    let mut linger = 0usize;
+    loop {
+        let mut activity = false;
+
+        // accept every waiting worker
+        loop {
+            match listener.accept() {
+                Ok((stream, peer)) => {
+                    stream.set_nonblocking(true)?;
+                    let _ = stream.set_nodelay(true);
+                    workers_seen += 1;
+                    progress(format!("worker connected from {peer}"));
+                    conns.push(Conn {
+                        stream,
+                        fb: FrameBuf::new(),
+                        greeted: false,
+                        claimed: BTreeSet::new(),
+                        alive: true,
+                    });
+                    activity = true;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) => return Err(e).context("dispatcher accept"),
+            }
+        }
+
+        // pump every connection
+        for conn in conns.iter_mut() {
+            let mut buf = [0u8; 4096];
+            loop {
+                match conn.stream.read(&mut buf) {
+                    Ok(0) => {
+                        conn.alive = false;
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.fb.extend(&buf[..n]);
+                        activity = true;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        break;
+                    }
+                    Err(e) if e.kind()
+                        == std::io::ErrorKind::Interrupted => {}
+                    Err(_) => {
+                        conn.alive = false;
+                        break;
+                    }
+                }
+            }
+            while conn.alive {
+                let m = match conn.fb.next() {
+                    Ok(Some(m)) => m,
+                    Ok(None) => break,
+                    Err(e) => {
+                        progress(format!("dropping worker (bad frame: {e})"));
+                        conn.alive = false;
+                        break;
+                    }
+                };
+                activity = true;
+                let grid_done = done.len() == cells.len();
+                // a peer whose message has no `op` falls into the
+                // unknown-op arm and is dropped — peer malformation is
+                // never fatal for the run
+                let reply = match op_of(&m).unwrap_or("<missing>") {
+                    "hello" => {
+                        let theirs = m.get("proto").and_then(|p| p.as_str())
+                            .unwrap_or("?");
+                        if theirs != PROTO_VERSION {
+                            progress(format!(
+                                "dropping worker (protocol {theirs:?}, \
+                                 want {PROTO_VERSION:?})"));
+                            let _ = write_frame_nb(
+                                &mut conn.stream,
+                                &Json::obj(vec![
+                                    ("op", Json::str("error")),
+                                    ("message", Json::str(format!(
+                                        "protocol mismatch: dispatcher \
+                                         speaks {PROTO_VERSION}"))),
+                                ]));
+                            conn.alive = false;
+                            continue;
+                        }
+                        conn.greeted = true;
+                        welcome_msg.clone()
+                    }
+                    "claim" if !conn.greeted => {
+                        conn.alive = false;
+                        continue; // claim before hello: not our worker
+                    }
+                    "claim" => match pending.pop_front() {
+                        Some(key) => {
+                            conn.claimed.insert(key.clone());
+                            Json::obj(vec![("op", Json::str("cell")),
+                                           ("key", Json::str(key))])
+                        }
+                        None if grid_done => msg("done"),
+                        None => msg("wait"),
+                    },
+                    "heartbeat" => {
+                        if let Some(k) = m.get("key").and_then(|k| k.as_str())
+                        {
+                            progress(format!("worker computing {k}"));
+                        }
+                        msg("ok")
+                    }
+                    "publish" => {
+                        let key = m.get("key").and_then(|k| k.as_str())
+                            .map(str::to_string);
+                        let (Some(key), Some(rec)) =
+                            (key, m.get("record").cloned())
+                        else {
+                            progress("dropping worker (publish without \
+                                      key/record)".to_string());
+                            conn.alive = false;
+                            continue;
+                        };
+                        if !cell_set.contains(key.as_str()) {
+                            bail!("worker published unknown cell {key}");
+                        }
+                        conn.claimed.remove(&key);
+                        if done.contains_key(&key) {
+                            // duplicate result (requeue race): the math
+                            // is deterministic, so it is the same bytes —
+                            // acknowledge and move on
+                            msg("ok")
+                        } else {
+                            on_publish(&key, &rec).with_context(
+                                || format!("publish of cell {key}"))?;
+                            pending.retain(|p| p != &key);
+                            done.insert(key.clone(), rec);
+                            computed += 1;
+                            progress(format!("cell {key} published \
+                                              ({}/{})", done.len(),
+                                             cells.len()));
+                            msg("ok")
+                        }
+                    }
+                    other => {
+                        progress(format!(
+                            "dropping worker (unknown op {other:?})"));
+                        conn.alive = false;
+                        continue;
+                    }
+                };
+                if write_frame_nb(&mut conn.stream, &reply).is_err() {
+                    conn.alive = false;
+                }
+            }
+        }
+
+        // reap dead connections; their claimed-but-unpublished cells go
+        // back to the front of the queue for the next claimant
+        for conn in conns.iter_mut().filter(|c| !c.alive) {
+            for key in std::mem::take(&mut conn.claimed) {
+                if !done.contains_key(&key) {
+                    progress(format!("requeueing {key} (worker lost)"));
+                    pending.push_front(key);
+                }
+            }
+        }
+        conns.retain(|c| c.alive);
+
+        if done.len() == cells.len() {
+            // grid complete: hold the socket through a short grace
+            // window (answering straggler claims with `done`), then
+            // exit once every connection has drained; the hard linger
+            // cap bounds a stalled peer
+            if (conns.is_empty() && linger >= GRACE_ITERS)
+                || linger >= LINGER_ITERS
+            {
+                break;
+            }
+            linger += 1;
+        }
+        if !activity {
+            std::thread::sleep(POLL);
+        }
+    }
+    Ok(ServeOutcome { records: done, computed, workers_seen })
+}
+
+/// Read one frame from a blocking socket.
+fn read_frame(stream: &mut TcpStream, fb: &mut FrameBuf) -> Result<Json> {
+    loop {
+        if let Some(m) = fb.next()? {
+            return Ok(m);
+        }
+        let mut buf = [0u8; 4096];
+        let n = stream.read(&mut buf)
+            .context("read from dispatcher")?;
+        if n == 0 {
+            bail!("dispatcher closed the connection");
+        }
+        fb.extend(&buf[..n]);
+    }
+}
+
+/// What one worker process accomplished.
+pub struct WorkerOutcome {
+    /// cells this worker computed and published
+    pub computed: usize,
+    /// the dispatcher's welcome document (run identity)
+    pub welcome: Json,
+}
+
+/// The worker loop: connect (with retries — workers usually start while
+/// the dispatcher is still prefilling), handshake, then claim → compute
+/// → publish until the dispatcher answers `done`.  `compute` receives
+/// the welcome document (run identity: model, seed, iters, run tag) and
+/// the claimed cell key, and must return the finished cell record.
+pub fn run_worker(addr: &str,
+                  mut compute: impl FnMut(&Json, &str) -> Result<Json>,
+                  mut progress: impl FnMut(String)) -> Result<WorkerOutcome> {
+    let mut stream = None;
+    for attempt in 0..CONNECT_ATTEMPTS {
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                stream = Some(s);
+                break;
+            }
+            Err(e) if attempt + 1 == CONNECT_ATTEMPTS => {
+                return Err(e).with_context(
+                    || format!("connect to dispatcher at {addr} \
+                                ({CONNECT_ATTEMPTS} attempts)"));
+            }
+            Err(_) => std::thread::sleep(CONNECT_BACKOFF),
+        }
+    }
+    // SAFETY of unwrap: the loop either set `stream` or returned
+    let mut stream = stream.unwrap();
+    let _ = stream.set_nodelay(true);
+    let mut fb = FrameBuf::new();
+
+    write_frame_nb(&mut stream, &Json::obj(vec![
+        ("op", Json::str("hello")),
+        ("proto", Json::str(PROTO_VERSION)),
+    ]))?;
+    let welcome = read_frame(&mut stream, &mut fb)?;
+    match op_of(&welcome)? {
+        "welcome" => {}
+        "error" => bail!("dispatcher refused: {}",
+                         welcome.get("message").and_then(|m| m.as_str())
+                         .unwrap_or("?")),
+        other => bail!("expected welcome, got {other:?}"),
+    }
+    progress(format!(
+        "connected to {addr}: run {}",
+        welcome.get("run").and_then(|r| r.as_str()).unwrap_or("?")));
+
+    let mut computed = 0usize;
+    loop {
+        write_frame_nb(&mut stream, &msg("claim"))?;
+        let reply = read_frame(&mut stream, &mut fb)?;
+        match op_of(&reply)? {
+            "cell" => {
+                let key = reply.get("key").and_then(|k| k.as_str())
+                    .ok_or_else(|| anyhow!("cell reply missing key"))?
+                    .to_string();
+                progress(format!("claimed {key}"));
+                // progress marker before the (long) compute; liveness
+                // itself is the TCP connection
+                write_frame_nb(&mut stream, &Json::obj(vec![
+                    ("op", Json::str("heartbeat")),
+                    ("key", Json::str(key.clone())),
+                ]))?;
+                let ack = read_frame(&mut stream, &mut fb)?;
+                if op_of(&ack)? != "ok" {
+                    bail!("heartbeat not acknowledged: {}", ack.to_string());
+                }
+                let record = compute(&welcome, &key)?;
+                write_frame_nb(&mut stream, &Json::obj(vec![
+                    ("op", Json::str("publish")),
+                    ("key", Json::str(key.clone())),
+                    ("record", record),
+                ]))?;
+                let ack = read_frame(&mut stream, &mut fb)?;
+                if op_of(&ack)? != "ok" {
+                    bail!("publish of {key} rejected: {}", ack.to_string());
+                }
+                computed += 1;
+            }
+            "wait" => std::thread::sleep(Duration::from_millis(25)),
+            "done" => break,
+            "error" => bail!("dispatcher error: {}",
+                             reply.get("message").and_then(|m| m.as_str())
+                             .unwrap_or("?")),
+            other => bail!("unexpected dispatcher reply {other:?}"),
+        }
+    }
+    progress(format!("done: {computed} cell(s) computed"));
+    Ok(WorkerOutcome { computed, welcome })
+}

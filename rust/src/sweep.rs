@@ -38,7 +38,8 @@
 //! graph); engine-free runs record it as `null`.
 
 use std::collections::{BTreeMap, BTreeSet};
-use std::path::Path;
+use std::net::TcpListener;
+use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -49,6 +50,8 @@ use crate::pipeline::{activation_source, cell_graph, quantize_model_with_pool,
                       quantized_layer_names, CalibStats, Method,
                       PipelineReport};
 use crate::quant::{search_act_clip, QuantConfig, Quantizer};
+use crate::registry::{service, FsRegistry, ObjectKey, Registry,
+                      RegistryCounters};
 use crate::rng::Rng;
 use crate::runtime::{ModelArtifacts, ModelInfo, TensorBundle};
 use crate::util::{render_table, Json};
@@ -175,6 +178,40 @@ impl CellKey {
         QuantConfig::cell(self.w_bits, self.a_group,
                           self.method.quantizer(),
                           self.rank_pct as f64 / 100.0, iters)
+    }
+
+    /// Inverse of [`CellKey::id`]: parse `lrc_w4_r10_gnone` back into its
+    /// coordinates.  This is how a sweep worker recovers the cell a
+    /// dispatcher assigned it — the wire protocol carries ids, not
+    /// structs.  Strict: the parsed key must re-render to the input, so
+    /// non-canonical spellings (`g0`, leading zeros) are rejected rather
+    /// than silently aliased onto another cell.
+    pub fn parse(id: &str) -> Result<CellKey> {
+        let parts: Vec<&str> = id.split('_').collect();
+        let [m, w, r, g] = parts[..] else {
+            bail!("malformed cell id {id:?} (want method_wN_rN_gG)");
+        };
+        let method = SweepMethod::parse(m)?;
+        let w_bits = w.strip_prefix('w').and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow!("bad w_bits in cell id {id:?}"))?;
+        let rank_pct = r.strip_prefix('r').and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow!("bad rank_pct in cell id {id:?}"))?;
+        let a_group = match g.strip_prefix('g')
+            .ok_or_else(|| anyhow!("bad group in cell id {id:?}"))? {
+            "none" => None,
+            t => match t.parse::<usize>() {
+                // group 0 is the ungrouped cell and spells "gnone"
+                Ok(0) | Err(_) => {
+                    bail!("bad group in cell id {id:?}");
+                }
+                Ok(n) => Some(n),
+            },
+        };
+        let key = CellKey { method, w_bits, rank_pct, a_group };
+        if key.id() != id {
+            bail!("non-canonical cell id {id:?} (canonical: {})", key.id());
+        }
+        Ok(key)
     }
 }
 
@@ -491,35 +528,128 @@ pub struct SweepOutcome {
     pub violations: Vec<String>,
 }
 
-/// Load a resume fragment if it exists, matches the cell id, was produced
-/// at the same iteration count (a changed `--iters` invalidates the whole
-/// fragment set — those cells really are different work) and carries the
-/// same run identity (a different model / synthetic seed / calibration
-/// setup writes a different `run` tag, so its fragments are never
-/// silently reused).
+/// Full validation of a cell record against the identity it is claimed
+/// for: parses as a record, and its embedded cell id / iteration count /
+/// run tag all match.  A record failing any of it (half-written file,
+/// older schema, different run pointed at the same store) is recomputed,
+/// never trusted — the same bar for registry objects, legacy fragments
+/// and worker-published records alike.
+fn valid_cell_record(j: &Json, key: &CellKey, iters: usize, run_tag: &str)
+                     -> bool {
+    parse_rec(j).is_ok()
+        && j.get("key").and_then(|v| v.as_str()) == Some(key.id().as_str())
+        && j.get("iters").and_then(|v| v.as_usize()) == Some(iters)
+        && j.get("run").and_then(|v| v.as_str()) == Some(run_tag)
+}
+
+/// Load a pre-registry resume fragment (`cells/<key>.json`) if it exists
+/// and validates.  Kept only as the migration source [`SweepStore::load`]
+/// adopts old fragments through — new runs never write fragments.
 fn load_fragment(dir: &Path, key: &CellKey, iters: usize, run_tag: &str)
                  -> Option<Json> {
     let text = std::fs::read_to_string(dir.join(format!("{}.json", key.id())))
         .ok()?;
     let j = Json::parse(&text).ok()?;
-    // a fragment that fails full record validation (half-written file,
-    // older schema) is recomputed, never trusted
-    parse_rec(&j).ok()?;
-    let id_ok = j.get("key").and_then(|v| v.as_str())
-        == Some(key.id().as_str());
-    let iters_ok = j.get("iters").and_then(|v| v.as_usize()) == Some(iters);
-    let run_ok = j.get("run").and_then(|v| v.as_str()) == Some(run_tag);
-    (id_ok && iters_ok && run_ok).then_some(j)
+    valid_cell_record(&j, key, iters, run_tag).then_some(j)
+}
+
+/// Where a sweep run persists and resumes its cells: a content-addressed
+/// [`Registry`] (kind `"sweep-cell"`, keyed by model × method ×
+/// full `QuantConfig` × seed × run tag × code version), plus an optional
+/// legacy `cells/` fragment dir that pre-registry runs wrote.  A legacy
+/// fragment is adopted **once** — validated, published into the registry
+/// under its content key — and the registry serves it from then on.
+///
+/// Shared freely across pool workers (`&self` everywhere; the registry's
+/// counters are atomic and FS publishes are temp-file + rename atomic).
+pub struct SweepStore {
+    registry: Registry,
+    root: PathBuf,
+    legacy: Option<PathBuf>,
+    seed: u64,
+}
+
+impl SweepStore {
+    /// Open (creating lazily on first publish) the registry at `root`.
+    /// `legacy` points at an old run's `cells/` dir to migrate from;
+    /// `seed` is the run's RNG seed — part of every cell's content key.
+    pub fn open(root: &Path, legacy: Option<&Path>, seed: u64) -> SweepStore {
+        SweepStore {
+            registry: Registry::local(root),
+            root: root.to_path_buf(),
+            legacy: legacy.map(|p| p.to_path_buf()),
+            seed,
+        }
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Hit/miss/corruption counters (operator feedback after a run).
+    pub fn counters(&self) -> RegistryCounters {
+        self.registry.counters()
+    }
+
+    pub fn describe(&self) -> String {
+        self.registry.describe()
+    }
+
+    /// The content key of one cell of one run.
+    pub fn cell_key(&self, model: &str, run_tag: &str, cell: &CellKey,
+                    iters: usize) -> ObjectKey {
+        ObjectKey::new("sweep-cell", model, cell.method.name(),
+                       &cell.quant_config(iters), self.seed, run_tag)
+    }
+
+    /// Where a cell's meta document lives on disk (tests poke corruption
+    /// in; the store itself never reads objects except through the
+    /// verified registry).
+    pub fn object_file(&self, model: &str, run_tag: &str, cell: &CellKey,
+                       iters: usize) -> PathBuf {
+        FsRegistry::new(&self.root)
+            .object_file(&self.cell_key(model, run_tag, cell, iters).digest())
+    }
+
+    /// Fetch a finished cell record, or `None` for "compute it" (absent,
+    /// corrupt, stale code version, or identity mismatch).  Falls back to
+    /// the legacy fragment dir on a registry miss, publishing any adopted
+    /// fragment so the next lookup hits the registry directly.
+    pub fn load(&self, model: &str, run_tag: &str, cell: &CellKey,
+                iters: usize) -> Option<Json> {
+        let okey = self.cell_key(model, run_tag, cell, iters);
+        if let Ok(Some(obj)) = self.registry.get(&okey) {
+            if let Ok(payload) = obj.payload() {
+                if valid_cell_record(payload, cell, iters, run_tag) {
+                    return Some(payload.clone());
+                }
+            }
+        }
+        let rec = load_fragment(self.legacy.as_deref()?, cell, iters,
+                                run_tag)?;
+        // adopted: publish under the content key (best-effort — the
+        // record itself is already good even if the write fails)
+        let _ = self.registry.publish(&okey, &rec, None);
+        Some(rec)
+    }
+
+    /// Persist a finished cell record under its content key.
+    pub fn publish(&self, model: &str, run_tag: &str, cell: &CellKey,
+                   iters: usize, record: &Json) -> Result<()> {
+        let okey = self.cell_key(model, run_tag, cell, iters);
+        self.registry.publish(&okey, record, None)?;
+        Ok(())
+    }
 }
 
 /// Quantize one cell against the shared stats — pure except for reading
 /// the shared calibration, so the pool can fan cells out freely.  When
-/// the record is already final (no NLL evaluator pending), the fragment
-/// is persisted here, from the worker — a killed grid run resumes from
-/// every cell that finished, not from nothing.
+/// the record is already final (no NLL evaluator pending), it is
+/// published to the store here, from the worker — a killed grid run
+/// resumes from every cell that finished, not from nothing.
 fn run_cell(arts: &ModelArtifacts, calib: &CalibStats, key: &CellKey,
             run_tag: &str, iters: usize, pool: &Pool, keep_bundle: bool,
-            frag_dir: Option<&Path>)
+            store: Option<&SweepStore>)
             -> Result<(Json, Option<TensorBundle>)> {
     let graph = cell_graph(arts, key.rank_pct, key.a_group, false, 8)?;
     let cfg = key.quant_config(iters);
@@ -527,37 +657,56 @@ fn run_cell(arts: &ModelArtifacts, calib: &CalibStats, key: &CellKey,
         arts, calib, &graph, key.method.pipeline_method(), &cfg, pool)?;
     let record = cell_record(key, run_tag, iters, &report, None);
     if !keep_bundle {
-        if let Some(dir) = frag_dir {
-            std::fs::write(dir.join(format!("{}.json", key.id())),
-                           record.to_string())?;
+        if let Some(store) = store {
+            store.publish(&arts.info.name, run_tag, key, iters, &record)?;
         }
     }
     Ok((record, keep_bundle.then_some(bundle)))
 }
 
+/// Assemble the canonical `lrc-sweep-v1` report (+ markdown table +
+/// sanity verdicts) from a full record set in canonical order.  Shared
+/// by the single-box driver and the distributed dispatcher — one
+/// assembly path is what makes a distributed `report.json` byte-identical
+/// to a single-box one.
+pub fn assemble_report(model: &str, run_tag: &str, iters: usize,
+                       records: &[Json])
+                       -> Result<(String, String, Vec<String>)> {
+    let report_json = Json::obj(vec![
+        ("schema", Json::str("lrc-sweep-v1")),
+        ("model", Json::str(model)),
+        ("run", Json::str(run_tag)),
+        ("iters", Json::num(iters as f64)),
+        ("cells", Json::Arr(records.to_vec())),
+    ]).to_string();
+    let markdown = markdown_table(records)?;
+    let violations = sanity_violations(records)?;
+    Ok((report_json, markdown, violations))
+}
+
 /// Run the grid: fan missing cells out on `pool` (finished cells are
-/// loaded from their fragments when `resume`), fold in canonical order,
+/// loaded from the store when `resume`), fold in canonical order,
 /// assemble report + markdown, and evaluate the built-in sanity
 /// assertions.
 ///
 /// `run_tag` is the run's identity (model + seed / calibration setup) —
-/// it is stamped into every fragment and only fragments carrying the same
-/// tag are resumed, so pointing two different runs at one cells dir can
-/// never silently mix their numbers.  `calib` maps each group-axis value
-/// to the [`CalibStats`] shared by every cell of that group.  `nll_eval`
+/// it is part of every cell's registry content key *and* stamped into
+/// the record, so pointing two different runs at one store can never
+/// silently mix their numbers.  `calib` maps each group-axis value to
+/// the [`CalibStats`] shared by every cell of that group.  `nll_eval`
 /// (optional, serial — PJRT sessions are not Sync) fills the per-cell NLL
 /// from a real engine; engine-free runs pass `None` and record `null`.
 ///
-/// Fragment persistence is incremental in the engine-free case (each
-/// worker writes its cell as it finishes — a killed run resumes from
-/// every finished cell).  With an evaluator, fragments are written at the
-/// serial fold instead (after NLL lands), and every computed cell's
-/// bundle is held until its fold slot — prefer grid subsets over one
-/// giant grid when memory matters there.
+/// Persistence is incremental in the engine-free case (each worker
+/// publishes its cell as it finishes — a killed run resumes from every
+/// finished cell).  With an evaluator, cells are published at the serial
+/// fold instead (after NLL lands), and every computed cell's bundle is
+/// held until its fold slot — prefer grid subsets over one giant grid
+/// when memory matters there.
 #[allow(clippy::too_many_arguments)]
 pub fn run_grid(arts: &ModelArtifacts,
                 calib: &BTreeMap<Option<usize>, CalibStats>,
-                axes: &SweepAxes, run_tag: &str, cells_dir: Option<&Path>,
+                axes: &SweepAxes, run_tag: &str, store: Option<&SweepStore>,
                 resume: bool, pool: &Pool,
                 mut nll_eval: Option<&mut dyn FnMut(&CellKey, &TensorBundle)
                                        -> Result<Option<f64>>>)
@@ -570,14 +719,13 @@ pub fn run_grid(arts: &ModelArtifacts,
                   c.a_group, c.id());
         }
     }
-    if let Some(dir) = cells_dir {
-        std::fs::create_dir_all(dir)?;
-    }
+    let model = arts.info.name.clone();
 
-    // resume: adopt valid fragments, in canonical order
+    // resume: adopt valid store records (registry, else migrated legacy
+    // fragments), in canonical order
     let existing: Vec<Option<Json>> = cells.iter()
-        .map(|c| match (resume, cells_dir) {
-            (true, Some(dir)) => load_fragment(dir, c, axes.iters, run_tag),
+        .map(|c| match (resume, store) {
+            (true, Some(s)) => s.load(&model, run_tag, c, axes.iters),
             _ => None,
         })
         .collect();
@@ -590,11 +738,11 @@ pub fn run_grid(arts: &ModelArtifacts,
                 return None;
             }
             Some(run_cell(arts, &calib[&cells[i].a_group], &cells[i],
-                          run_tag, axes.iters, pool, keep_bundle, cells_dir))
+                          run_tag, axes.iters, pool, keep_bundle, store))
         });
 
-    // serial fold: NLL evaluation, evaluator-path fragment persistence,
-    // record assembly
+    // serial fold: NLL evaluation, evaluator-path persistence, record
+    // assembly
     let mut records = Vec::with_capacity(cells.len());
     let (mut computed, mut resumed) = (0usize, 0usize);
     for ((cell, prior), fresh) in cells.iter().zip(existing).zip(fresh) {
@@ -611,10 +759,9 @@ pub fn run_grid(arts: &ModelArtifacts,
                             m.insert("nll".into(), finite_num(nll));
                         }
                     }
-                    if let Some(dir) = cells_dir {
-                        std::fs::write(dir.join(format!("{}.json",
-                                                        cell.id())),
-                                       record.to_string())?;
+                    if let Some(s) = store {
+                        s.publish(&model, run_tag, cell, axes.iters,
+                                  &record)?;
                     }
                 }
                 computed += 1;
@@ -625,17 +772,130 @@ pub fn run_grid(arts: &ModelArtifacts,
         records.push(record);
     }
 
-    let report_json = Json::obj(vec![
-        ("schema", Json::str("lrc-sweep-v1")),
-        ("model", Json::str(arts.info.name.clone())),
-        ("run", Json::str(run_tag)),
-        ("iters", Json::num(axes.iters as f64)),
-        ("cells", Json::Arr(records.clone())),
-    ]).to_string();
-    let markdown = markdown_table(&records)?;
-    let violations = sanity_violations(&records)?;
+    let (report_json, markdown, violations) =
+        assemble_report(&model, run_tag, axes.iters, &records)?;
     Ok(SweepOutcome { records, report_json, markdown, computed, resumed,
                       violations })
+}
+
+// ---------------------------------------------------------------------------
+// distributed sweep: dispatcher + worker entry points
+// ---------------------------------------------------------------------------
+
+/// Serve the grid over `listener` instead of computing it locally: cells
+/// already in the store are prefilled (never handed out), the rest are
+/// claimed and computed by `lrc sweep-worker` processes, and every
+/// published record is validated and persisted through the store before
+/// it is acknowledged.  The merged outcome folds in canonical
+/// [`CellKey`] order, so the distributed `report.json` is byte-identical
+/// to the single-box one (every cell's math is bit-identical on any
+/// machine — the crate's determinism contract).
+///
+/// Currently serves synthetic grids: the welcome document carries
+/// `(run, model, seed, iters)`, which is everything a worker needs to
+/// rebuild synthetic inputs; real-model grids keep the single-box path
+/// (their calibration stats live in one process's engine).
+pub fn serve_grid_distributed(arts: &ModelArtifacts, axes: &SweepAxes,
+                              run_tag: &str, store: &SweepStore,
+                              resume: bool, listener: &TcpListener,
+                              mut progress: impl FnMut(String))
+                              -> Result<SweepOutcome> {
+    axes.validate()?;
+    let cells = axes.cells();
+    let ids: Vec<String> = cells.iter().map(|c| c.id()).collect();
+    let model = arts.info.name.clone();
+
+    let mut prefilled: BTreeMap<String, Json> = BTreeMap::new();
+    if resume {
+        for c in &cells {
+            if let Some(rec) = store.load(&model, run_tag, c, axes.iters) {
+                prefilled.insert(c.id(), rec);
+            }
+        }
+    }
+    let resumed = prefilled.len();
+    progress(format!("serving {} cell(s) ({} prefilled) on {}",
+                     ids.len(), resumed,
+                     listener.local_addr()
+                         .map(|a| a.to_string())
+                         .unwrap_or_else(|_| "?".into())));
+
+    let welcome = Json::obj(vec![
+        ("run", Json::str(run_tag)),
+        ("model", Json::str(model.clone())),
+        ("seed", Json::num(store.seed() as f64)),
+        ("iters", Json::num(axes.iters as f64)),
+    ]);
+    let outcome = service::serve_grid(
+        listener, &welcome, &ids, &prefilled,
+        |id, rec| {
+            let cell = CellKey::parse(id)?;
+            if !valid_cell_record(rec, &cell, axes.iters, run_tag) {
+                bail!("worker record for {id} failed validation (wrong \
+                       run/iters or malformed — version skew?)");
+            }
+            store.publish(&model, run_tag, &cell, axes.iters, rec)
+        },
+        &mut progress)?;
+
+    // fold in canonical order — identical to the single-box fold
+    let records: Vec<Json> = ids.iter()
+        .map(|id| outcome.records.get(id).cloned()
+             .ok_or_else(|| anyhow!("dispatcher finished without cell {id}")))
+        .collect::<Result<Vec<_>>>()?;
+    let (report_json, markdown, violations) =
+        assemble_report(&model, run_tag, axes.iters, &records)?;
+    Ok(SweepOutcome { records, report_json, markdown,
+                      computed: outcome.computed, resumed, violations })
+}
+
+/// The `lrc sweep-worker` loop: connect to a dispatcher, rebuild the
+/// run's inputs from its welcome document, then claim → quantize →
+/// publish until the grid is done.  Returns the number of cells this
+/// worker computed.
+///
+/// The model artifacts and per-group calibration stats are rebuilt
+/// lazily from the welcome seed and cached across cells — exactly the
+/// shared-calibration structure of the single-box driver, so a worker's
+/// records are bit-identical to locally computed ones.
+pub fn worker_loop(addr: &str, pool: &Pool,
+                   mut progress: impl FnMut(String)) -> Result<usize> {
+    let mut arts: Option<ModelArtifacts> = None;
+    let mut calib: BTreeMap<Option<usize>, CalibStats> = BTreeMap::new();
+    let outcome = service::run_worker(addr, |welcome, id| {
+        let get_str = |f: &str| {
+            welcome.get(f).and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("dispatcher welcome missing {f}"))
+        };
+        let run_tag = get_str("run")?;
+        let model = get_str("model")?;
+        let seed = welcome.get("seed").and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow!("dispatcher welcome missing seed"))?
+            as u64;
+        let iters = welcome.get("iters").and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow!("dispatcher welcome missing iters"))?;
+        if model != "synthetic" {
+            bail!("sweep-worker serves synthetic grids only (the \
+                   dispatcher announced model {model:?}); run real-model \
+                   grids single-box");
+        }
+        let cell = CellKey::parse(id)?;
+        let arts = arts.get_or_insert_with(|| synthetic_artifacts(seed));
+        if !calib.contains_key(&cell.a_group) {
+            let built = synthetic_calib(arts, seed, &[cell.a_group])
+                .remove(&cell.a_group)
+                .ok_or_else(|| anyhow!("no calib for group {:?}",
+                                       cell.a_group))?;
+            calib.insert(cell.a_group, built);
+        }
+        let graph = cell_graph(arts, cell.rank_pct, cell.a_group, false, 8)?;
+        let cfg = cell.quant_config(iters);
+        let (_bundle, report) = quantize_model_with_pool(
+            arts, &calib[&cell.a_group], &graph,
+            cell.method.pipeline_method(), &cfg, pool)?;
+        Ok(cell_record(&cell, run_tag, iters, &report, None))
+    }, &mut progress)?;
+    Ok(outcome.computed)
 }
 
 /// The aligned Table-3-style view of the grid.
@@ -847,6 +1107,29 @@ mod tests {
         assert_eq!(cfg.rank_pct, 0.20);
         assert_eq!(cfg.iters, 2);
         assert_eq!(cfg.quantizer, Quantizer::Gptq);
+    }
+
+    #[test]
+    fn cell_key_parse_roundtrips_every_grid_cell() {
+        let mut axes = SweepAxes::full();
+        axes.groups = vec![None, Some(32)];
+        for cell in axes.cells() {
+            assert_eq!(CellKey::parse(&cell.id()).unwrap(), cell,
+                       "id {} must parse back to its key", cell.id());
+        }
+    }
+
+    #[test]
+    fn cell_key_parse_rejects_malformed_and_non_canonical_ids() {
+        for bad in ["", "lrc", "lrc_w4_r10", "lrc_w4_r10_gnone_x",
+                    "fp16_w4_r10_gnone", "lrc_wx_r10_gnone",
+                    "lrc_w4_rx_gnone", "lrc_w4_r10_g",
+                    // "g0" aliases Some(0) onto a distinct spelling of
+                    // the ungrouped cell — canonical form is "gnone"
+                    "lrc_w4_r10_g0",
+                    "lrc_w04_r10_gnone"] {
+            assert!(CellKey::parse(bad).is_err(), "{bad:?} must not parse");
+        }
     }
 
     #[test]

@@ -1,0 +1,268 @@
+//! The content-addressed artifact registry, end to end (engine-free):
+//!
+//!   * verified get/publish: absent, corrupt and stale-code-version
+//!     objects all read as misses (never as errors, never as answers);
+//!   * a warm `quantize_model_cached` re-run is a registry hit with
+//!     **zero** quantization compute — proven by handing the warm call
+//!     empty calibration stats, which any compute path would trip over;
+//!   * a sweep grid dispatched to {1, 2, 3} `sweep-worker` loops over
+//!     the wire protocol produces a report **byte-identical** to the
+//!     single-box run;
+//!   * pre-registry `cells/<key>.json` fragment dirs migrate into the
+//!     registry on first read and are served from it afterwards.
+//!
+//! Threads are used freely here: this tree is not under the
+//! `lrc analyze` concurrency fences, which bind `rust/src` only.
+
+use std::net::TcpListener;
+use std::path::PathBuf;
+
+use lrc::par::Pool;
+use lrc::pipeline::{cell_graph, quantize_model_cached, report_to_json,
+                    CalibStats, Method};
+use lrc::quant::{QuantConfig, Quantizer};
+use lrc::registry::{FsRegistry, ObjectKey, Registry};
+use lrc::sweep::{run_grid, serve_grid_distributed, synthetic_artifacts,
+                 synthetic_calib, worker_loop, SweepAxes, SweepStore};
+use lrc::util::Json;
+
+const SEED: u64 = 2024;
+const TAG: &str = "synthetic-seed2024";
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("lrc_registry_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn test_cfg() -> QuantConfig {
+    QuantConfig {
+        w_bits: 4,
+        a_bits: Some(4),
+        a_group: None,
+        quantizer: Quantizer::Gptq,
+        rank_pct: 0.10,
+        iters: 1,
+    }
+}
+
+#[test]
+fn get_publish_corrupt_and_stale_code_version() {
+    let dir = tmp_dir("basics");
+    let reg = Registry::local(&dir);
+    let key = ObjectKey::new("sweep-cell", "synthetic", "lrc", &test_cfg(),
+                             7, "test-run");
+
+    // absent object: a plain miss
+    assert!(reg.get(&key).unwrap().is_none());
+    assert_eq!(reg.counters().misses, 1);
+
+    // publish + verified read-back, payload and blob bit-exact
+    let payload = Json::obj(vec![("answer", Json::num(42.0))]);
+    let digest = reg.publish(&key, &payload, Some(b"\x00\x01\xfe")).unwrap();
+    let obj = reg.get(&key).unwrap().expect("published object must read");
+    assert_eq!(obj.payload().unwrap(), &payload);
+    assert_eq!(obj.blob.as_deref(), Some(&b"\x00\x01\xfe"[..]));
+    assert_eq!(reg.counters().hits, 1);
+
+    // a flipped bit in the blob fails the checksum: counted corrupt,
+    // read as a miss
+    let blob_file = FsRegistry::new(&dir).blob_file(&digest);
+    let mut blob = std::fs::read(&blob_file).unwrap();
+    blob[1] ^= 0x80;
+    std::fs::write(&blob_file, &blob).unwrap();
+    assert!(reg.get(&key).unwrap().is_none());
+    assert_eq!(reg.counters().corrupt, 1);
+
+    // garbage over the meta document: the same
+    std::fs::write(FsRegistry::new(&dir).object_file(&digest),
+                   "not a registry object").unwrap();
+    assert!(reg.get(&key).unwrap().is_none());
+    assert_eq!(reg.counters().corrupt, 2);
+
+    // republish heals both files
+    reg.publish(&key, &payload, Some(b"\x00\x01\xfe")).unwrap();
+    assert!(reg.get(&key).unwrap().is_some());
+
+    // a stale code version is a *different address*: bumping the code
+    // field orphans every old object instead of serving it
+    let mut stale = key.clone();
+    stale.code = "lrc-quant-v0".to_string();
+    assert_ne!(stale.digest(), key.digest());
+    assert!(reg.get(&stale).unwrap().is_none());
+
+    // so is any other key component
+    let other_seed = ObjectKey::new("sweep-cell", "synthetic", "lrc",
+                                    &test_cfg(), 8, "test-run");
+    assert_ne!(other_seed.digest(), key.digest());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn warm_quantize_rerun_is_a_hit_with_zero_compute() {
+    let arts = synthetic_artifacts(SEED);
+    let calib = synthetic_calib(&arts, SEED, &[None]);
+    let graph = cell_graph(&arts, 10, None, false, 8).unwrap();
+    let cfg = test_cfg();
+    let pool = Pool::new(2);
+    let dir = tmp_dir("warm");
+    let reg = Registry::local(&dir);
+    let key = ObjectKey::new("quant-bundle", "synthetic", "lrc", &cfg, SEED,
+                             "synthetic-calib");
+
+    // cold: computes and publishes
+    let (bundle, report, hit) = quantize_model_cached(
+        &arts, &calib[&None], &graph, Method::Lrc, &cfg, &pool, &reg, &key)
+        .unwrap();
+    assert!(!hit);
+    assert_eq!(reg.counters().published, 1);
+    assert_eq!(reg.counters().misses, 1);
+
+    // warm: the stats are EMPTY — any code path that tried to quantize
+    // would fail on the first layer lookup, so a clean return here *is*
+    // the zero-compute proof
+    let empty = CalibStats { stats: Default::default(), seconds: 0.0 };
+    let (cached, cached_report, hit) = quantize_model_cached(
+        &arts, &empty, &graph, Method::Lrc, &cfg, &pool, &reg, &key)
+        .unwrap();
+    assert!(hit, "second run must be served from the registry");
+    assert_eq!(reg.counters().hits, 1);
+    assert_eq!(reg.counters().published, 1, "a hit publishes nothing");
+
+    // and the cached artifact is bit-exact
+    assert_eq!(bundle.order, cached.order);
+    for name in &bundle.order {
+        let (a, b) = (&bundle.tensors[name], &cached.tensors[name]);
+        assert_eq!(a.shape, b.shape, "{name}");
+        let bits = |t: &[f32]| t.iter().map(|v| v.to_bits())
+            .collect::<Vec<u32>>();
+        assert_eq!(bits(&a.data), bits(&b.data), "tensor {name} not \
+                    bit-exact through the registry");
+    }
+    assert_eq!(report_to_json(&report).to_string(),
+               report_to_json(&cached_report).to_string());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn distributed_sweep_report_is_byte_identical_to_single_box() {
+    let axes = SweepAxes::fast();
+    let arts = synthetic_artifacts(SEED);
+    let calib = synthetic_calib(&arts, SEED, &axes.groups);
+    let single = run_grid(&arts, &calib, &axes, TAG, None, false,
+                          &Pool::new(2), None).unwrap();
+
+    for n_workers in [1usize, 2, 3] {
+        let dir = tmp_dir(&format!("dist{n_workers}"));
+        let store = SweepStore::open(&dir.join("registry"), None, SEED);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+
+        let d_arts = synthetic_artifacts(SEED);
+        let d_axes = axes.clone();
+        let dispatcher = std::thread::spawn(move || {
+            serve_grid_distributed(&d_arts, &d_axes, TAG, &store, false,
+                                   &listener, |_| {})
+        });
+        let workers: Vec<_> = (0..n_workers).map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let pool = Pool::new(1);
+                worker_loop(&addr, &pool, |_| {})
+            })
+        }).collect();
+
+        let outcome = dispatcher.join().unwrap().unwrap();
+        let computed_by_workers: usize = workers.into_iter()
+            .map(|w| w.join().unwrap().unwrap())
+            .sum();
+        assert_eq!(outcome.report_json, single.report_json,
+                   "distributed report differs at {n_workers} worker(s)");
+        assert_eq!(outcome.markdown, single.markdown);
+        assert_eq!(outcome.computed, axes.cells().len());
+        assert_eq!(outcome.resumed, 0);
+        assert_eq!(computed_by_workers, axes.cells().len(),
+                   "every cell is computed exactly once across workers");
+        assert!(outcome.violations.is_empty(), "{:?}", outcome.violations);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn distributed_resume_serves_finished_cells_without_recompute() {
+    let axes = SweepAxes::fast();
+    let arts = synthetic_artifacts(SEED);
+    let calib = synthetic_calib(&arts, SEED, &axes.groups);
+    let dir = tmp_dir("dist_resume");
+
+    // single-box run fills the registry...
+    let store = SweepStore::open(&dir.join("registry"), None, SEED);
+    let full = run_grid(&arts, &calib, &axes, TAG, Some(&store), false,
+                        &Pool::new(2), None).unwrap();
+
+    // ...then a dispatcher over the same registry has nothing left to
+    // hand out: the worker is told "done" and computes zero cells
+    let store = SweepStore::open(&dir.join("registry"), None, SEED);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let d_arts = synthetic_artifacts(SEED);
+    let d_axes = axes.clone();
+    let dispatcher = std::thread::spawn(move || {
+        serve_grid_distributed(&d_arts, &d_axes, TAG, &store, true,
+                               &listener, |_| {})
+    });
+    let worker = std::thread::spawn(move || {
+        let pool = Pool::new(1);
+        worker_loop(&addr, &pool, |_| {})
+    });
+    let outcome = dispatcher.join().unwrap().unwrap();
+    assert_eq!(worker.join().unwrap().unwrap(), 0,
+               "a fully-resumed grid must not recompute on workers");
+    assert_eq!(outcome.computed, 0);
+    assert_eq!(outcome.resumed, axes.cells().len());
+    assert_eq!(outcome.report_json, full.report_json);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn legacy_fragment_dirs_migrate_into_the_registry() {
+    let axes = SweepAxes::fast();
+    let arts = synthetic_artifacts(SEED);
+    let calib = synthetic_calib(&arts, SEED, &axes.groups);
+    let fresh = run_grid(&arts, &calib, &axes, TAG, None, false,
+                         &Pool::new(2), None).unwrap();
+
+    // handcraft a pre-registry layout: one <cells>/<key>.json per record
+    let dir = tmp_dir("migrate");
+    let cells_dir = dir.join("cells");
+    std::fs::create_dir_all(&cells_dir).unwrap();
+    for rec in &fresh.records {
+        let id = rec.get("key").unwrap().as_str().unwrap();
+        std::fs::write(cells_dir.join(format!("{id}.json")),
+                       rec.to_string()).unwrap();
+    }
+
+    // a store pointed at the legacy dir resumes every cell and adopts
+    // each fragment into the registry as it reads it
+    let store = SweepStore::open(&dir.join("registry"), Some(&cells_dir),
+                                 SEED);
+    let resumed = run_grid(&arts, &calib, &axes, TAG, Some(&store), true,
+                           &Pool::new(2), None).unwrap();
+    assert_eq!(resumed.computed, 0, "fragments must satisfy every cell");
+    assert_eq!(resumed.resumed, axes.cells().len());
+    assert_eq!(resumed.report_json, fresh.report_json);
+    assert_eq!(store.counters().published as usize, axes.cells().len(),
+               "every adopted fragment is published under its content key");
+
+    // after migration the registry alone (no legacy dir) serves the grid
+    std::fs::remove_dir_all(&cells_dir).unwrap();
+    let store = SweepStore::open(&dir.join("registry"), None, SEED);
+    let again = run_grid(&arts, &calib, &axes, TAG, Some(&store), true,
+                         &Pool::new(2), None).unwrap();
+    assert_eq!(again.computed, 0);
+    assert_eq!(again.resumed, axes.cells().len());
+    assert_eq!(again.report_json, fresh.report_json);
+    assert_eq!(store.counters().hits as usize, axes.cells().len());
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -6,8 +6,10 @@
 //!     (re)collected stats, at pool sizes {1, 4} — sharing calibration
 //!     is a pure wall-clock optimization, never a math change;
 //!   * resume-after-partial-run produces a byte-identical final report,
-//!     loading finished cells from their fragments instead of
+//!     loading finished cells from the registry store instead of
 //!     recomputing them;
+//!   * corrupt registry objects and records from a different run
+//!     identity / iteration count are recomputed, never trusted;
 //!   * the built-in sanity assertions hold on the CI smoke grid.
 
 use std::path::PathBuf;
@@ -15,7 +17,7 @@ use std::path::PathBuf;
 use lrc::par::Pool;
 use lrc::pipeline::{cell_graph, quantize_model_with_pool};
 use lrc::sweep::{cell_record, run_grid, synthetic_artifacts, synthetic_calib,
-                 SweepAxes, SweepMethod};
+                 CellKey, SweepAxes, SweepMethod, SweepStore};
 
 const SEED: u64 = 2024;
 const TAG: &str = "synthetic-seed2024";
@@ -27,6 +29,18 @@ fn tmp_dir(tag: &str) -> PathBuf {
     dir
 }
 
+fn store_at(dir: &PathBuf) -> SweepStore {
+    SweepStore::open(&dir.join("registry"), None, SEED)
+}
+
+/// Count the published cell objects in a store's registry.
+fn object_count(dir: &PathBuf) -> usize {
+    std::fs::read_dir(dir.join("registry").join("objects")).unwrap()
+        .flatten()
+        .filter(|e| e.path().extension().is_some_and(|x| x == "json"))
+        .count()
+}
+
 #[test]
 fn shared_stats_grid_matches_independent_per_cell_runs_at_1_and_4_threads() {
     let axes = SweepAxes::fast();
@@ -36,9 +50,11 @@ fn shared_stats_grid_matches_independent_per_cell_runs_at_1_and_4_threads() {
     // the same grid at 1 and 4 threads: byte-identical reports
     let dir1 = tmp_dir("t1");
     let dir4 = tmp_dir("t4");
-    let out1 = run_grid(&arts, &calib, &axes, TAG, Some(&dir1.join("cells")),
+    let store1 = store_at(&dir1);
+    let store4 = store_at(&dir4);
+    let out1 = run_grid(&arts, &calib, &axes, TAG, Some(&store1),
                         false, &Pool::new(1), None).unwrap();
-    let out4 = run_grid(&arts, &calib, &axes, TAG, Some(&dir4.join("cells")),
+    let out4 = run_grid(&arts, &calib, &axes, TAG, Some(&store4),
                         false, &Pool::new(4), None).unwrap();
     assert_eq!(out1.report_json, out4.report_json,
                "grid report must be byte-identical across thread counts");
@@ -76,20 +92,23 @@ fn resume_after_partial_run_reproduces_the_identical_report() {
 
     // reference: one fresh full run
     let ref_dir = tmp_dir("resume_ref");
-    let full = run_grid(&arts, &calib, &axes, TAG, Some(&ref_dir.join("cells")),
+    let ref_store = store_at(&ref_dir);
+    let full = run_grid(&arts, &calib, &axes, TAG, Some(&ref_store),
                         false, &Pool::new(4), None).unwrap();
 
-    // partial run: only the rtn slice of the grid, into a new dir
+    // partial run: only the rtn slice of the grid, into a new store
     let mut partial_axes = axes.clone();
     partial_axes.methods = vec![SweepMethod::Rtn];
     let dir = tmp_dir("resume");
+    let store = store_at(&dir);
     let partial = run_grid(&arts, &calib, &partial_axes, TAG,
-                           Some(&dir.join("cells")), true, &Pool::new(4),
+                           Some(&store), true, &Pool::new(4),
                            None).unwrap();
     assert_eq!(partial.computed, partial_axes.cells().len());
 
-    // resumed full run: rtn cells load from fragments, the rest compute
-    let resumed = run_grid(&arts, &calib, &axes, TAG, Some(&dir.join("cells")),
+    // resumed full run: rtn cells load from the registry, the rest
+    // compute
+    let resumed = run_grid(&arts, &calib, &axes, TAG, Some(&store),
                            true, &Pool::new(4), None).unwrap();
     assert_eq!(resumed.resumed, partial_axes.cells().len());
     assert_eq!(resumed.computed,
@@ -98,25 +117,26 @@ fn resume_after_partial_run_reproduces_the_identical_report() {
                "resumed report must be byte-identical to a fresh one");
     assert_eq!(resumed.markdown, full.markdown);
 
-    // a second re-run resumes everything and still matches
-    let rerun = run_grid(&arts, &calib, &axes, TAG, Some(&dir.join("cells")),
+    // a second re-run resumes everything and still matches; the store's
+    // counters show the all-hit run
+    let rerun_store = store_at(&dir);
+    let rerun = run_grid(&arts, &calib, &axes, TAG, Some(&rerun_store),
                          true, &Pool::new(1), None).unwrap();
     assert_eq!(rerun.computed, 0);
     assert_eq!(rerun.resumed, axes.cells().len());
     assert_eq!(rerun.report_json, full.report_json);
+    assert_eq!(rerun_store.counters().hits as usize, axes.cells().len());
+    assert_eq!(rerun_store.counters().published, 0,
+               "an all-hit run must publish nothing");
 
-    // every cell left a fragment behind
-    let n_fragments = std::fs::read_dir(dir.join("cells")).unwrap()
-        .flatten()
-        .filter(|e| e.path().extension().is_some_and(|x| x == "json"))
-        .count();
-    assert_eq!(n_fragments, axes.cells().len());
+    // every cell left a registry object behind
+    assert_eq!(object_count(&dir), axes.cells().len());
     let _ = std::fs::remove_dir_all(&ref_dir);
     let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
-fn corrupt_or_stale_fragments_are_recomputed_not_trusted() {
+fn corrupt_or_stale_records_are_recomputed_not_trusted() {
     let mut axes = SweepAxes::fast();
     axes.methods = vec![SweepMethod::Lrc];
     axes.w_bits = vec![4];
@@ -124,42 +144,44 @@ fn corrupt_or_stale_fragments_are_recomputed_not_trusted() {
     let calib = synthetic_calib(&arts, SEED, &axes.groups);
 
     let dir = tmp_dir("corrupt");
-    let full = run_grid(&arts, &calib, &axes, TAG, Some(&dir.join("cells")),
+    let store = store_at(&dir);
+    let full = run_grid(&arts, &calib, &axes, TAG, Some(&store),
                         false, &Pool::new(2), None).unwrap();
     assert_eq!(full.computed, 2);
 
-    // garbage in one fragment: that cell recomputes, the report matches
-    let victim = dir.join("cells").join("lrc_w4_r0_gnone.json");
-    assert!(victim.is_file(), "expected fragment at {victim:?}");
+    // garbage in one object: that cell recomputes, the report matches
+    let victim_key = CellKey::parse("lrc_w4_r0_gnone").unwrap();
+    let victim = store.object_file("synthetic", TAG, &victim_key,
+                                   axes.iters);
+    assert!(victim.is_file(), "expected registry object at {victim:?}");
     std::fs::write(&victim, "not json at all").unwrap();
-    let healed = run_grid(&arts, &calib, &axes, TAG, Some(&dir.join("cells")),
+    let heal_store = store_at(&dir);
+    let healed = run_grid(&arts, &calib, &axes, TAG, Some(&heal_store),
                           true, &Pool::new(2), None).unwrap();
     assert_eq!(healed.computed, 1);
     assert_eq!(healed.resumed, 1);
     assert_eq!(healed.report_json, full.report_json);
+    assert_eq!(heal_store.counters().corrupt, 1,
+               "the torn object must be counted, not errored on");
 
-    // fragments from a *different run* (other model / seed / calibration
-    // setup) must never be silently reused: re-run the same grid with
-    // another run tag against the same cells dir
+    // records from a *different run* (other model / seed / calibration
+    // setup) must never be reused: same grid, another run tag, same
+    // store — every content key differs, so nothing resumes
     let other = run_grid(&arts, &calib, &axes, "synthetic-seed777",
-                         Some(&dir.join("cells")), true, &Pool::new(2),
-                         None).unwrap();
+                         Some(&store), true, &Pool::new(2), None).unwrap();
     assert_eq!(other.resumed, 0,
-               "a different run identity must invalidate every fragment");
+               "a different run identity must invalidate every record");
     assert_eq!(other.computed, 2);
 
-    // a fragment recorded at a different --iters is stale work, not a hit
-    // (the tag run above rewrote the fragments under its own tag, so
-    // switch back to TAG fragments first)
-    let _ = run_grid(&arts, &calib, &axes, TAG, Some(&dir.join("cells")),
-                     true, &Pool::new(2), None).unwrap();
+    // a record published at a different --iters is different work, not a
+    // hit — the iteration count is part of the content key
     let mut deeper = axes.clone();
     deeper.iters = 2;
     let recomputed = run_grid(&arts, &calib, &deeper, TAG,
-                              Some(&dir.join("cells")), true, &Pool::new(2),
+                              Some(&store), true, &Pool::new(2),
                               None).unwrap();
     assert_eq!(recomputed.resumed, 0,
-               "iters change must invalidate every fragment");
+               "iters change must invalidate every record");
     assert_eq!(recomputed.computed, 2);
     let _ = std::fs::remove_dir_all(&dir);
 }
