@@ -25,9 +25,9 @@ pub const RULE_MARKER: &str = "allow-marker";
 
 /// Crate modules the layering lint knows about (top-level only).
 const KNOWN_MODULES: &[&str] = &[
-    "analyze", "bench", "coordinator", "data", "eval", "experiments",
-    "linalg", "lrc", "par", "pipeline", "quant", "registry", "rng",
-    "runtime", "sweep", "util",
+    "analyze", "bench", "chaos", "coordinator", "data", "eval",
+    "experiments", "linalg", "lrc", "par", "pipeline", "quant", "registry",
+    "rng", "runtime", "sweep", "util",
 ];
 
 /// Module-layering contract: which sibling modules each top-level
@@ -48,8 +48,14 @@ fn allowed_deps(module: &str) -> Option<&'static [&'static str]> {
         // the registry is storage + wire protocol only: it may describe
         // artifacts (quant configs, tensor bundles) but the compute
         // stack must never reach *into* it — caching stays an optional
-        // layer above the math
-        "registry" => &["quant", "runtime", "util"],
+        // layer above the math (`rng` seeds the fault-plan generator and
+        // the worker backoff jitter, nothing numerical)
+        "registry" => &["quant", "rng", "runtime", "util"],
+        // the chaos harness drives fleets end-to-end: sweep grids over
+        // the registry wire protocol under injected faults
+        "chaos" => &[
+            "par", "pipeline", "quant", "registry", "rng", "sweep", "util",
+        ],
         "pipeline" => &[
             "data", "eval", "experiments", "linalg", "lrc", "par", "quant",
             "registry", "rng", "runtime", "util",
@@ -85,13 +91,15 @@ struct ApiRule {
 const API_RULES: &[ApiRule] = &[
     ApiRule {
         pattern: &["thread", "::", "spawn"],
-        allowed: &["par/", "coordinator/"],
-        why: "thread management belongs to the pool and the serving engine",
+        allowed: &["par/", "coordinator/", "chaos.rs"],
+        why: "thread management belongs to the pool, the serving engine \
+              and the in-process chaos fleets",
     },
     ApiRule {
         pattern: &["thread", "::", "Builder"],
-        allowed: &["par/", "coordinator/"],
-        why: "thread management belongs to the pool and the serving engine",
+        allowed: &["par/", "coordinator/", "chaos.rs"],
+        why: "thread management belongs to the pool, the serving engine \
+              and the in-process chaos fleets",
     },
     ApiRule {
         pattern: &["Mutex"],

@@ -1,0 +1,404 @@
+//! `lrc chaos` — deterministic fault-injection harness for the
+//! distributed sweep fleet.
+//!
+//! The harness generates a seeded [`FaultPlan`], runs in-process fleets
+//! (one dispatcher thread + N worker threads per run, real TCP on
+//! loopback) under it, and asserts the robustness contract the fleet
+//! claims:
+//!
+//! 1. **Transient faults are invisible.**  Under connection resets,
+//!    truncated/delayed frames, worker crashes mid-compute, transient
+//!    compute failures and torn registry writes, the merged
+//!    `report.json` is byte-identical to the fault-free single-box run,
+//!    at every worker count, with nothing quarantined and no worker
+//!    process lost.
+//! 2. **Poison cells are contained.**  A cell that fails every attempt
+//!    is quarantined after `quarantine_after` failures; the remaining
+//!    grid completes, the quarantined set is identical at every worker
+//!    count, every surviving record matches the fault-free run, and the
+//!    poison report itself is byte-identical across worker counts.
+//! 3. **Torn writes read as misses.**  Re-running single-box over the
+//!    last fleet's registry (clean store, resume on) recomputes exactly
+//!    the torn objects — broken metas as *counted* corruptions, missing
+//!    metas as plain misses — and reproduces the baseline report.
+//!
+//! Which faults actually fire depends on how workers interleave (the
+//! *plan* is a pure function of the seed; the *claim order* is not), so
+//! every assertion here is interleaving-independent: report bytes,
+//! quarantine sets, survival.  `run_chaos` returns counts of what fired
+//! for operator eyes, and bails on the first broken invariant.
+
+use std::collections::BTreeMap;
+use std::net::TcpListener;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::par::Pool;
+use crate::registry::faults::{FaultPlan, TornCounters, TornWriteBackend};
+use crate::registry::service::{self, ServeOpts};
+use crate::registry::Registry;
+use crate::sweep::{self, SweepAxes, SweepOutcome, SweepStore};
+
+/// Everything one chaos run sweeps.  All fields are plain data so a
+/// config is trivially reproducible from a CLI invocation.
+#[derive(Clone, Debug)]
+pub struct ChaosConfig {
+    pub seed: u64,
+    /// The grid under test (the CI smoke grid by default — chaos stresses
+    /// the protocol, not the math, so small cells are the point).
+    pub axes: SweepAxes,
+    /// Fleet sizes to run; byte-identity is asserted across all of them.
+    pub worker_counts: Vec<usize>,
+    /// Poison cells (fail on every attempt) in the quarantine phase.
+    pub poison: usize,
+    /// Dispatcher claim lease in poll iterations (~2 ms each).
+    pub lease_polls: usize,
+    /// Failed attempts before a cell is quarantined.
+    pub quarantine_after: usize,
+}
+
+impl ChaosConfig {
+    /// The CI smoke shape: 8-cell grid, fleets of 1/2/3, one poison
+    /// cell, quarantine on the second failure, ~1 s lease.
+    pub fn fast(seed: u64) -> ChaosConfig {
+        ChaosConfig {
+            seed,
+            axes: SweepAxes::fast(),
+            worker_counts: vec![1, 2, 3],
+            poison: 1,
+            lease_polls: 500,
+            quarantine_after: 2,
+        }
+    }
+
+    /// The default (non-`--fast`) shape: same grid, wider fleets, two
+    /// poison cells, a longer lease and a higher quarantine bar.
+    pub fn full(seed: u64) -> ChaosConfig {
+        ChaosConfig {
+            seed,
+            axes: SweepAxes::fast(),
+            worker_counts: vec![1, 2, 4],
+            poison: 2,
+            lease_polls: 1000,
+            quarantine_after: 3,
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        self.axes.validate()?;
+        if self.worker_counts.is_empty() {
+            bail!("chaos needs at least one fleet size");
+        }
+        if self.worker_counts.contains(&0) {
+            bail!("a fleet of 0 workers never drains the grid");
+        }
+        let cells = self.axes.cells().len();
+        if self.poison >= cells {
+            bail!("{} poison cells would leave nothing of the {cells}-cell \
+                   grid", self.poison);
+        }
+        if self.poison > 0 && self.quarantine_after == 0 {
+            bail!("poison cells with quarantine disabled \
+                   (--quarantine-after 0) would retry forever");
+        }
+        Ok(())
+    }
+}
+
+/// What the harness observed (all assertions already passed if this is
+/// returned at all).
+pub struct ChaosOutcome {
+    /// grid size
+    pub cells: usize,
+    /// fleet runs executed (transient + poison phases)
+    pub fleets: usize,
+    /// per-worker wire/compute faults that actually fired, total
+    pub fired: usize,
+    /// torn registry writes applied in the transient phase's last fleet
+    pub torn_fired: u64,
+    /// cells recomputed by the single-box resume over the torn registry
+    pub torn_recomputed: usize,
+    /// worker sessions re-established after injected transport faults
+    pub reconnects: usize,
+    /// `failed` frames sent (transient + poison compute failures)
+    pub failures: usize,
+    /// duplicate publishes absorbed from requeue races
+    pub duplicates: usize,
+    /// `(cell id, error)` quarantined in the poison phase, canonical
+    /// order — identical at every worker count
+    pub quarantined: Vec<(String, String)>,
+    /// the fault-free single-box report (the oracle)
+    pub baseline_report: String,
+    /// the last transient fleet's merged report — byte-identical to
+    /// `baseline_report`, written by `lrc chaos --out` for CI `cmp`
+    pub merged_report: String,
+    pub merged_markdown: String,
+}
+
+/// Process-unique scratch root (no wall clock in this module — the
+/// analyze fences keep `SystemTime` out, and determinism doesn't want
+/// it anyway).
+fn scratch_dir(tag: &str) -> PathBuf {
+    static NEXT: AtomicU64 = AtomicU64::new(0);
+    std::env::temp_dir().join(format!(
+        "lrc_chaos_{}_{}_{tag}", std::process::id(),
+        NEXT.fetch_add(1, Ordering::SeqCst)))
+}
+
+/// First byte offset where two reports diverge — failure context only.
+fn first_diff(a: &str, b: &str) -> usize {
+    a.bytes().zip(b.bytes()).take_while(|(x, y)| x == y).count()
+}
+
+fn ensure_identical(what: &str, got: &str, want: &str) -> Result<()> {
+    if got != want {
+        bail!("{what}: diverged from the fault-free report at byte {} \
+               (got {} bytes, want {})",
+              first_diff(got, want), got.len(), want.len());
+    }
+    Ok(())
+}
+
+/// Index a report's records by cell id (record bytes, canonical form).
+fn records_by_id(out: &SweepOutcome) -> Result<BTreeMap<String, String>> {
+    let mut m = BTreeMap::new();
+    for rec in &out.records {
+        let id = rec.get("key").and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("record without a cell id"))?;
+        m.insert(id.to_string(), rec.to_string());
+    }
+    Ok(m)
+}
+
+/// One in-process fleet: a dispatcher thread serving `cells` over
+/// loopback TCP through a torn-write registry, plus one worker thread
+/// per name, each computing through its slice of the fault plan.
+/// Returns the merged outcome, per-worker outcomes, total shim faults
+/// fired and the torn-write counters for `registry_root`.
+fn run_fleet(cfg: &ChaosConfig, run_tag: &str, plan: &FaultPlan,
+             names: &[String], registry_root: &Path)
+             -> Result<(SweepOutcome, Vec<service::WorkerOutcome>, usize,
+                        TornCounters)> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    let backend = TornWriteBackend::new(registry_root, plan.torn.clone());
+    let torn = backend.counters();
+    let store = SweepStore::with_registry(
+        Registry::with_backend(Box::new(backend)), cfg.seed);
+    let opts = ServeOpts {
+        lease_polls: cfg.lease_polls,
+        quarantine_after: cfg.quarantine_after,
+    };
+
+    let seed = cfg.seed;
+    let axes = cfg.axes.clone();
+    let tag = run_tag.to_string();
+    let dispatcher = std::thread::spawn(move || -> Result<SweepOutcome> {
+        let arts = sweep::synthetic_artifacts(seed);
+        sweep::serve_grid_distributed(&arts, &axes, &tag, &store,
+                                      false, &listener, opts, |_| {})
+    });
+
+    let mut handles = Vec::new();
+    for name in names {
+        let addr = addr.clone();
+        let name = name.clone();
+        let mut shim = plan.shim_for(&name);
+        handles.push(std::thread::spawn(
+            move || -> Result<(service::WorkerOutcome, usize)> {
+                let pool = Pool::new(1);
+                let out = service::run_worker(
+                    &addr, &name, Some(&mut shim),
+                    sweep::synthetic_cell_compute(&pool), |_| {})?;
+                Ok((out, shim.fired))
+            }));
+    }
+
+    let merged = dispatcher.join()
+        .map_err(|_| anyhow!("dispatcher thread panicked"))??;
+    let mut workers = Vec::new();
+    let mut fired = 0usize;
+    for (h, name) in handles.into_iter().zip(names) {
+        let (out, f) = h.join()
+            .map_err(|_| anyhow!("worker {name} panicked"))?
+            .map_err(|e| anyhow!("worker {name} died: {e:#}"))?;
+        fired += f;
+        workers.push(out);
+    }
+    Ok((merged, workers, fired, torn))
+}
+
+/// Run the whole harness; every invariant violation is an `Err`.
+pub fn run_chaos(cfg: &ChaosConfig, pool: &Pool,
+                 mut progress: impl FnMut(String)) -> Result<ChaosOutcome> {
+    cfg.validate()?;
+    let seed = cfg.seed;
+    let run_tag = format!("synthetic-seed{seed}");
+    let cells: Vec<String> =
+        cfg.axes.cells().iter().map(|c| c.id()).collect();
+    let scratch = scratch_dir("fleet");
+
+    // ---- phase 1: the oracle — fault-free, single-box, storeless
+    progress(format!("chaos: baseline — {} cells single-box, seed {seed}",
+                     cells.len()));
+    let arts = sweep::synthetic_artifacts(seed);
+    let calib = sweep::synthetic_calib(&arts, seed, &cfg.axes.groups);
+    let baseline = sweep::run_grid(&arts, &calib, &cfg.axes, &run_tag,
+                                   None, false, pool, None)?;
+    let base_recs = records_by_id(&baseline)?;
+
+    let mut fleets = 0usize;
+    let mut fired = 0usize;
+    let mut reconnects = 0usize;
+    let mut failures = 0usize;
+    let mut duplicates = 0usize;
+
+    // ---- phase 2: transient faults at every fleet size
+    let mut merged_report = baseline.report_json.clone();
+    let mut merged_markdown = baseline.markdown.clone();
+    let mut last_torn: Option<(PathBuf, TornCounters)> = None;
+    for &n in &cfg.worker_counts {
+        let names: Vec<String> =
+            (0..n).map(|i| format!("chaos-w{i}")).collect();
+        let plan = FaultPlan::generate(seed, &names, &cells, 0);
+        let root = scratch.join(format!("transient{n}"));
+        progress(format!(
+            "chaos: transient fleet of {n} — {} scheduled fault(s), \
+             {} torn write(s)", plan.total_faults(), plan.torn.len()));
+        let (out, workers, f, torn) =
+            run_fleet(cfg, &run_tag, &plan, &names, &root)?;
+        fleets += 1;
+        fired += f;
+        duplicates += out.duplicates;
+        for w in &workers {
+            reconnects += w.reconnects;
+            failures += w.failed;
+        }
+        ensure_identical(
+            &format!("transient fleet of {n}"),
+            &out.report_json, &baseline.report_json)?;
+        ensure_identical(
+            &format!("transient fleet of {n} (markdown)"),
+            &out.markdown, &baseline.markdown)?;
+        if !out.quarantined.is_empty() {
+            bail!("transient fleet of {n} quarantined {:?} — transient \
+                   faults must never quarantine", out.quarantined);
+        }
+        progress(format!(
+            "chaos: transient fleet of {n} OK — report identical, \
+             {f} fault(s) fired, {} torn, {} duplicate(s)",
+            torn.fired(), out.duplicates));
+        merged_report = out.report_json;
+        merged_markdown = out.markdown;
+        last_torn = Some((root, torn));
+    }
+
+    // ---- phase 3: poison cells at every fleet size
+    let mut quarantined: Vec<(String, String)> = Vec::new();
+    let mut poison_report: Option<String> = None;
+    if cfg.poison > 0 {
+        for &n in &cfg.worker_counts {
+            let names: Vec<String> =
+                (0..n).map(|i| format!("chaos-w{i}")).collect();
+            // a different seed stream than phase 2, same grid — the
+            // plan (and so the poison set) is still pure (seed, cells)
+            let plan = FaultPlan::generate(
+                seed ^ 0x0DDB_A11_u64, &names, &cells, cfg.poison);
+            let root = scratch.join(format!("poison{n}"));
+            progress(format!(
+                "chaos: poison fleet of {n} — {} poison cell(s), \
+                 quarantine after {}", plan.poison.len(),
+                cfg.quarantine_after));
+            let (out, workers, f, _torn) =
+                run_fleet(cfg, &run_tag, &plan, &names, &root)?;
+            fleets += 1;
+            fired += f;
+            duplicates += out.duplicates;
+            for w in &workers {
+                reconnects += w.reconnects;
+                failures += w.failed;
+            }
+            // the quarantined set is exactly the plan's poison set
+            let got: Vec<&String> =
+                out.quarantined.iter().map(|(id, _)| id).collect();
+            let mut want: Vec<&String> = plan.poison.iter().collect();
+            let mut got_sorted = got.clone();
+            got_sorted.sort();
+            want.sort();
+            if got_sorted != want {
+                bail!("poison fleet of {n}: quarantined {got:?}, \
+                       expected exactly the poison set {want:?}");
+            }
+            // every surviving record matches the fault-free run, and
+            // nothing besides the poison set is missing
+            let recs = records_by_id(&out)?;
+            for (id, rec) in &recs {
+                if plan.poison.contains(id) {
+                    bail!("poison fleet of {n}: quarantined cell {id} \
+                           still has a record");
+                }
+                if base_recs.get(id) != Some(rec) {
+                    bail!("poison fleet of {n}: record for {id} differs \
+                           from the fault-free run");
+                }
+            }
+            if recs.len() + plan.poison.len() != cells.len() {
+                bail!("poison fleet of {n}: {} records + {} poison != \
+                       {} cells", recs.len(), plan.poison.len(),
+                      cells.len());
+            }
+            // and the whole report is byte-identical across fleet sizes
+            match &poison_report {
+                None => poison_report = Some(out.report_json.clone()),
+                Some(first) => ensure_identical(
+                    &format!("poison fleet of {n}"),
+                    &out.report_json, first)?,
+            }
+            quarantined = out.quarantined;
+            progress(format!(
+                "chaos: poison fleet of {n} OK — {} quarantined, \
+                 all workers survived", quarantined.len()));
+        }
+    }
+
+    // ---- phase 4: the torn registry resumes as misses, nothing worse
+    let (torn_root, torn) = last_torn.expect("phase 2 always runs");
+    let expected_recompute = torn.fired() as usize;
+    progress(format!(
+        "chaos: resuming single-box over the torn registry — expecting \
+         {expected_recompute} recompute(s), {} counted corruption(s)",
+        torn.corrupt()));
+    let store = SweepStore::open(&torn_root, None, seed);
+    let resumed = sweep::run_grid(&arts, &calib, &cfg.axes, &run_tag,
+                                  Some(&store), true, pool, None)?;
+    ensure_identical("torn-registry resume", &resumed.report_json,
+                     &baseline.report_json)?;
+    if resumed.computed != expected_recompute {
+        bail!("torn-registry resume recomputed {} cell(s), expected \
+               exactly the {expected_recompute} torn object(s)",
+              resumed.computed);
+    }
+    if store.counters().corrupt != torn.corrupt() {
+        bail!("torn-registry resume counted {} corruption(s), expected \
+               {} (every truncated meta must be a *counted* miss)",
+              store.counters().corrupt, torn.corrupt());
+    }
+
+    std::fs::remove_dir_all(&scratch).ok();
+    Ok(ChaosOutcome {
+        cells: cells.len(),
+        fleets,
+        fired,
+        torn_fired: torn.fired(),
+        torn_recomputed: resumed.computed,
+        reconnects,
+        failures,
+        duplicates,
+        quarantined,
+        baseline_report: baseline.report_json,
+        merged_report,
+        merged_markdown,
+    })
+}

@@ -69,7 +69,13 @@
 //!                     length-prefixed line protocol and the
 //!                     single-threaded non-blocking dispatcher / worker
 //!                     loops behind `lrc sweep --serve` /
-//!                     `lrc sweep-worker` (spec: `docs/REGISTRY.md`)
+//!                     `lrc sweep-worker` — `lrc-sweep-worker-v2`:
+//!                     worker reconnect with run-identity re-validation,
+//!                     `failed` frames, claim leases, poison-cell
+//!                     quarantine (spec: `docs/REGISTRY.md`);
+//!                     `registry::faults` is the seeded deterministic
+//!                     fault-injection layer (wire shims + torn-write
+//!                     backend) behind `lrc chaos`
 //! * [`sweep`]       — declarative method × w_bits × rank_pct × group
 //!                     grid driver: shared calibration across cells,
 //!                     canonical fold order (byte-identical reports at
@@ -80,6 +86,13 @@
 //!                     is byte-identical to a single-box run, built-in
 //!                     sanity assertions; runs on real artifacts or an
 //!                     engine-free synthetic model
+//! * [`chaos`]       — `lrc chaos`: deterministic fault-injection
+//!                     harness for the distributed sweep — in-process
+//!                     fleets run under a seeded `FaultPlan`; merged
+//!                     reports must be byte-identical to the fault-free
+//!                     single-box run, poison-cell quarantine identical
+//!                     at every worker count, torn registries resume as
+//!                     counted misses
 //! * [`coordinator`] — serving engine: bounded admission queue with
 //!                     typed backpressure (`PushError::Full`),
 //!                     deadline-aware load shedding (every request gets
@@ -119,6 +132,7 @@
 
 pub mod analyze;
 pub mod bench;
+pub mod chaos;
 pub mod coordinator;
 pub mod data;
 pub mod eval;

@@ -17,6 +17,14 @@
 //!   soak [--fast] [--live]        deterministic synthetic-traffic soak:
 //!                                 Poisson arrivals, bursts, adversarial
 //!                                 deadlines, admission + shedding
+//!   chaos [--fast]                deterministic fault-injection harness:
+//!                                 in-process sweep fleets run under a
+//!                                 seeded FaultPlan (resets, torn writes,
+//!                                 crashes, poison cells); the merged
+//!                                 report must be byte-identical to the
+//!                                 fault-free single-box run
+//!   registry ls --root R          inspect a content-addressed registry:
+//!                                 list objects with verify status
 //!   analyze [paths..] [--deny-all] in-repo source lint: SAFETY-comment,
 //!                                 forbidden-API and module-layering
 //!                                 checks (what the CI analyze job runs)
@@ -88,6 +96,8 @@ fn main() {
         "bench-trend" => cmd_bench_trend(&args),
         "serve" => cmd_serve(&args),
         "soak" => cmd_soak(&args),
+        "chaos" => cmd_chaos(&args),
+        "registry" => cmd_registry(&args),
         "analyze" => cmd_analyze(&args),
         _ => {
             print_help();
@@ -105,7 +115,7 @@ fn print_help() {
         "lrc — Low-Rank Correction for Quantized LLMs (rust coordinator)\n\
          \n\
          USAGE: lrc <info|quantize|eval|sweep|sweep-worker|serve|soak|\n\
-         \x20            analyze> [flags]\n\
+         \x20            chaos|registry|analyze> [flags]\n\
          \n\
          quantize --model small --method lrc|svd|quarot --pct 10\n\
          \x20        [--iters 1] [--group 32] [--weight-only] [--rtn]\n\
@@ -122,7 +132,8 @@ fn print_help() {
          \x20        [--groups none,32] [--iters 1] [--out <dir>]\n\
          \x20        [--no-resume] [--seed 2024] [--calib 128]\n\
          \x20        [--corpus wiki_syn] [--registry <root>]\n\
-         \x20        [--serve <host:port>]\n\
+         \x20        [--serve <host:port>] [--lease 30000]\n\
+         \x20        [--quarantine-after 3]\n\
          \x20        Grid driver over method x w_bits x rank_pct x group:\n\
          \x20        calibration stats are collected once per group value\n\
          \x20        and shared by every cell; independent cells fan out\n\
@@ -137,19 +148,31 @@ fn print_help() {
          \x20        dispatcher: sweep-worker processes claim cells over\n\
          \x20        the line protocol, results land in the same registry,\n\
          \x20        and the merged report is byte-identical to a\n\
-         \x20        single-box run at any worker count.\n\
+         \x20        single-box run at any worker count.  A claim held\n\
+         \x20        longer than --lease poll iterations (2 ms each;\n\
+         \x20        0 = no lease) is requeued, and a cell failed by\n\
+         \x20        workers --quarantine-after times (0 = never) is\n\
+         \x20        quarantined: pulled from the grid, listed in the\n\
+         \x20        summary, exit is non-zero.\n\
          \x20        Without --model the grid runs on a deterministic\n\
          \x20        in-memory synthetic model (no PJRT needed — what CI\n\
          \x20        runs); --fast is the 8-cell CI smoke grid.  Exits\n\
          \x20        non-zero if a built-in sanity assertion fails\n\
          \x20        (gptq<=rtn per cell, error non-increasing in rank,\n\
          \x20        size strictly increasing in bits).\n\
-         sweep-worker --connect <host:port>\n\
+         sweep-worker --connect <host:port> [--name <id>]\n\
          \x20        One distributed sweep worker: claims cells from a\n\
          \x20        `sweep --serve` dispatcher, recomputes them on the\n\
          \x20        local pool (same canonical math as single-box) and\n\
          \x20        publishes the records back over the connection.\n\
          \x20        Runs until the dispatcher reports the grid done.\n\
+         \x20        A dropped connection is retried with capped\n\
+         \x20        exponential backoff and the fresh welcome is\n\
+         \x20        checked against the original run identity; a cell\n\
+         \x20        that fails to compute is reported with a `failed`\n\
+         \x20        frame instead of killing the process.  --name\n\
+         \x20        labels this worker in dispatcher logs (default\n\
+         \x20        w<pid>).\n\
          bench-trend --current <bench.json> --baselines <dir>\n\
          \x20        [--threshold 25] [--summary <file>]\n\
          \x20        Compare the current bench JSON's per-measurement\n\
@@ -185,6 +208,25 @@ fn print_help() {
          \x20        against the real Batcher with real worker threads\n\
          \x20        (wall-clock throughput + p50/p95/p99; every admitted\n\
          \x20        request must receive exactly one outcome).\n\
+         chaos    [--fast] [--seed 2024] [--workers 1,2,3] [--poison 1]\n\
+         \x20        [--lease 500] [--quarantine-after 2] [--out <dir>]\n\
+         \x20        Deterministic fault-injection harness over the\n\
+         \x20        distributed sweep: generates a seeded FaultPlan\n\
+         \x20        (connection resets, truncated/delayed frames, torn\n\
+         \x20        registry writes, worker crashes, transient + poison\n\
+         \x20        compute failures), runs in-process fleets at each\n\
+         \x20        --workers count, and asserts the merged report.json\n\
+         \x20        is byte-identical to the fault-free single-box run,\n\
+         \x20        quarantined cells identical at every worker count,\n\
+         \x20        no worker process lost, and torn objects resumed as\n\
+         \x20        counted misses.  Exits non-zero on any divergence.\n\
+         \x20        --out writes the merged fleet report for CI cmp.\n\
+         registry ls --root <dir> [--kind K] [--model M] [--method Q]\n\
+         \x20        List a content-addressed registry's objects with\n\
+         \x20        digest, key fields, payload size and verify status\n\
+         \x20        (ok | corrupt | orphan-blob) — corrupt objects read\n\
+         \x20        as counted misses, orphan blobs are a torn write's\n\
+         \x20        leftover, invisible to readers.\n\
          analyze  [paths..] [--deny-all] [--json]\n\
          \x20        In-repo source lint over .rs trees (default:\n\
          \x20        rust/src): every `unsafe` needs a SAFETY comment,\n\
@@ -423,9 +465,15 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                     println!("sweep: dispatching on {} — start workers \
                               with `lrc sweep-worker --connect {}`",
                              listener.local_addr()?, listener.local_addr()?);
+                    let mut opts = lrc::registry::service::ServeOpts::default();
+                    opts.lease_polls = args.get_usize("lease",
+                                                      opts.lease_polls);
+                    opts.quarantine_after =
+                        args.get_usize("quarantine-after",
+                                       opts.quarantine_after);
                     sweep::serve_grid_distributed(
                         &arts, &axes, &run_tag, &store, resume, &listener,
-                        |s| println!("{s}"))?
+                        opts, |s| println!("{s}"))?
                 }
                 None => {
                     let calib =
@@ -506,6 +554,20 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let c = store.counters();
     println!("registry {}: {} hit(s), {} published, {} corrupt",
              store.describe(), c.hits, c.published, c.corrupt);
+    if outcome.duplicates > 0 {
+        println!("distributed: {} duplicate publish(es) absorbed from \
+                  requeue races (each verified byte-identical)",
+                 outcome.duplicates);
+    }
+    if !outcome.quarantined.is_empty() {
+        for (id, err) in &outcome.quarantined {
+            eprintln!("quarantined cell {id}: {err}");
+        }
+        return Err(anyhow!(
+            "{} cell(s) quarantined after repeated worker failures \
+             (report written without them under {out_dir:?})",
+            outcome.quarantined.len()));
+    }
     if !outcome.violations.is_empty() {
         for v in &outcome.violations {
             eprintln!("sanity violation: {v}");
@@ -522,11 +584,14 @@ fn cmd_sweep_worker(args: &Args) -> Result<()> {
     let addr = args.get("connect")
         .ok_or_else(|| anyhow!("--connect <host:port> of a `lrc sweep \
                                 --serve` dispatcher is required"))?;
+    let name = args.get("name").map(str::to_string)
+        .unwrap_or_else(|| format!("w{}", std::process::id()));
     let pool = lrc::par::global();
-    println!("sweep-worker: connecting to {addr}");
-    let computed = lrc::sweep::worker_loop(addr, pool,
-                                           |s| println!("{s}"))?;
-    println!("sweep-worker: grid done, {computed} cell(s) computed here");
+    println!("sweep-worker {name}: connecting to {addr}");
+    let out = lrc::sweep::worker_loop(addr, &name, pool,
+                                      |s| println!("{s}"))?;
+    println!("sweep-worker {name}: grid done — {} computed, {} failed, \
+              {} reconnect(s)", out.computed, out.failed, out.reconnects);
     Ok(())
 }
 
@@ -718,6 +783,90 @@ fn cmd_soak(args: &Args) -> Result<()> {
                                live.failed, cfg.n_requests));
         }
     }
+    Ok(())
+}
+
+fn cmd_chaos(args: &Args) -> Result<()> {
+    use lrc::chaos::{self, ChaosConfig};
+    let seed = args.get_usize("seed", 2024) as u64;
+    let mut cfg = if args.has("fast") {
+        ChaosConfig::fast(seed)
+    } else {
+        ChaosConfig::full(seed)
+    };
+    if let Some(w) = args.get("workers") {
+        cfg.worker_counts = w.split(',')
+            .map(|s| s.trim().parse::<usize>()
+                 .map_err(|_| anyhow!("bad --workers entry {s:?}")))
+            .collect::<Result<Vec<_>>>()?;
+    }
+    cfg.poison = args.get_usize("poison", cfg.poison);
+    cfg.lease_polls = args.get_usize("lease", cfg.lease_polls);
+    cfg.quarantine_after =
+        args.get_usize("quarantine-after", cfg.quarantine_after);
+    let outcome = chaos::run_chaos(&cfg, lrc::par::global(),
+                                   |s| println!("{s}"))?;
+    // the merged fleet report (asserted byte-identical to the fault-free
+    // single-box run) — what the CI chaos-smoke job cmp's against a
+    // plain `lrc sweep` report
+    if let Some(out) = args.get("out") {
+        let dir = std::path::Path::new(out);
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join("report.json"), &outcome.merged_report)?;
+        std::fs::write(dir.join("report.md"), &outcome.merged_markdown)?;
+        println!("merged fleet report written under {dir:?}");
+    }
+    println!(
+        "chaos: OK — {} fleet run(s) over {} cells survived {} injected \
+         wire/compute fault(s) + {} torn write(s); {} reconnect(s), \
+         {} failed frame(s), {} duplicate publish(es), {} quarantined \
+         poison cell(s), {} torn object(s) recomputed on resume; every \
+         merged report byte-identical to the fault-free run",
+        outcome.fleets, outcome.cells, outcome.fired, outcome.torn_fired,
+        outcome.reconnects, outcome.failures, outcome.duplicates,
+        outcome.quarantined.len(), outcome.torn_recomputed);
+    Ok(())
+}
+
+fn cmd_registry(args: &Args) -> Result<()> {
+    match args.positional.get(1).map(|s| s.as_str()) {
+        Some("ls") => {}
+        _ => {
+            return Err(anyhow!("usage: lrc registry ls --root <dir> \
+                                [--kind K] [--model M] [--method Q]"));
+        }
+    }
+    let root = args.get("root")
+        .ok_or_else(|| anyhow!("--root <registry dir> is required"))?;
+    let rows = lrc::registry::list_objects(std::path::Path::new(root))?;
+    let total = rows.len();
+    let mut corrupt = 0usize;
+    let mut table: Vec<Vec<String>> = Vec::new();
+    for r in &rows {
+        if args.get("kind").is_some_and(|k| r.kind != k)
+            || args.get("model").is_some_and(|m| r.model != m)
+            || args.get("method").is_some_and(|q| r.method != q)
+        {
+            continue;
+        }
+        if r.status != "ok" {
+            corrupt += 1;
+        }
+        table.push(vec![
+            r.digest.clone(),
+            r.kind.clone(),
+            r.model.clone(),
+            r.method.clone(),
+            r.blob_len.map(|n| n.to_string())
+                .unwrap_or_else(|| "-".into()),
+            r.status.to_string(),
+        ]);
+    }
+    print!("{}", render_table(
+        &["Digest", "Kind", "Model", "Method", "Blob (B)", "Status"],
+        &table));
+    println!("{} object(s) shown of {total} in store; {corrupt} \
+              non-verifying (read as counted misses)", table.len());
     Ok(())
 }
 

@@ -1,0 +1,722 @@
+//! Deterministic fault injection for the distributed sweep fleet
+//! (spec: `docs/REGISTRY.md`, harness: `lrc chaos` in [`crate::chaos`]).
+//!
+//! A [`FaultPlan`] is a *seeded, serializable schedule* of every fault a
+//! run will suffer: connection resets at chosen protocol steps, truncated
+//! and delayed (split) frames, worker crashes mid-compute, per-cell
+//! compute failures (one-shot transients and always-failing poison
+//! cells), and torn registry object writes.  The plan is pure data —
+//! generated from a seed via [`crate::rng::Rng`], round-trippable through
+//! JSON — so any observed failure reproduces from `(seed, plan)` alone.
+//!
+//! Injection points:
+//!
+//! * [`WorkerShim`] sits at the worker's frame-I/O boundary
+//!   ([`super::service::run_worker`] consults it before every frame write
+//!   / read and before every cell compute) and answers with a
+//!   [`WriteFault`] / [`ReadFault`] / [`ComputeFault`].  Schedules are
+//!   indexed by monotonic per-worker counters (frames written, frames
+//!   read, cells computed), so each scheduled fault fires at most once.
+//! * [`TornWriteBackend`] wraps the local-FS [`FsRegistry`] and tears
+//!   chosen publishes *after* the atomic rename: deletes the meta
+//!   document ([`TornMode::BlobWithoutMeta`]), deletes a referenced blob
+//!   ([`TornMode::MetaWithoutBlob`]) or truncates the meta document
+//!   ([`TornMode::TruncatedMeta`]).  Read-side verification must turn
+//!   every one of these into a counted miss — never an error, never a
+//!   wrong answer.
+//!
+//! Determinism caveat, stated honestly: the *plan* is a pure function of
+//! the seed, but **which** scheduled faults fire depends on the claim
+//! interleaving (a worker that never reaches frame 17 never suffers the
+//! fault scheduled there).  Every assertion the chaos harness makes is
+//! therefore interleaving-independent: the merged report bytes, the
+//! quarantined cell set, and worker survival do not depend on which
+//! subset of the schedule fired.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::rng::Rng;
+use crate::util::Json;
+
+use super::{FsRegistry, RegistryBackend};
+
+/// Fault-plan document schema tag.
+pub const PLAN_SCHEMA: &str = "lrc-fault-plan-v1";
+
+/// Fault applied to one outgoing frame.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WriteFault {
+    /// Write the frame normally.
+    None,
+    /// Drop the connection instead of writing (peer sees a reset).
+    Reset,
+    /// Write only the first `keep` bytes of the frame, then drop the
+    /// connection — the peer's decoder is left holding a partial frame.
+    Truncate(usize),
+    /// Write the first half, sleep `ms`, write the rest — the frame
+    /// arrives whole but split across arbitrary read boundaries.
+    Split(u64),
+}
+
+/// Fault applied to one incoming-frame read.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ReadFault {
+    /// Read normally.
+    None,
+    /// Drop the connection before reading the reply.
+    Reset,
+}
+
+/// Fault applied to one cell compute.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ComputeFault {
+    /// Compute normally.
+    None,
+    /// Fail the compute with this error (the worker reports a `failed`
+    /// frame and lives on).
+    Fail(String),
+    /// Crash mid-compute: abandon the session without publishing or
+    /// reporting — the dispatcher only learns from the dead socket.
+    Crash,
+    /// Sleep `ms` before computing (exercises claim-lease expiry).
+    Stall(u64),
+}
+
+/// How one registry publish is torn.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TornMode {
+    /// Blob present, meta document missing: the commit point never
+    /// landed, so the object must read as a plain miss.
+    BlobWithoutMeta,
+    /// Meta present, referenced blob missing: verification must fail —
+    /// a counted corrupt, read as a miss.
+    MetaWithoutBlob,
+    /// Meta document cut in half: unparseable — counted corrupt.
+    TruncatedMeta,
+}
+
+impl TornMode {
+    fn name(self) -> &'static str {
+        match self {
+            TornMode::BlobWithoutMeta => "blob-without-meta",
+            TornMode::MetaWithoutBlob => "meta-without-blob",
+            TornMode::TruncatedMeta => "truncated-meta",
+        }
+    }
+
+    fn parse(s: &str) -> Result<TornMode> {
+        Ok(match s {
+            "blob-without-meta" => TornMode::BlobWithoutMeta,
+            "meta-without-blob" => TornMode::MetaWithoutBlob,
+            "truncated-meta" => TornMode::TruncatedMeta,
+            other => bail!("unknown torn mode {other:?}"),
+        })
+    }
+}
+
+/// The full fault schedule for one chaos run.  Every field is keyed by
+/// deterministic identities (worker name, monotonic counter index, cell
+/// key), never by wall-clock time, so the plan serializes canonically
+/// and replays exactly.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Seed the plan was generated from (recorded for provenance).
+    pub seed: u64,
+    /// `(worker, frame-write index)` pairs that reset the connection.
+    pub write_resets: BTreeSet<(String, usize)>,
+    /// `(worker, frame-write index)` → bytes to keep before dropping.
+    pub write_truncs: BTreeMap<(String, usize), usize>,
+    /// `(worker, frame-write index)` → split delay in milliseconds.
+    pub write_splits: BTreeMap<(String, usize), u64>,
+    /// `(worker, frame-read index)` pairs that reset the connection.
+    pub read_resets: BTreeSet<(String, usize)>,
+    /// `(worker, compute index)` pairs that crash mid-compute.
+    pub crashes: BTreeSet<(String, usize)>,
+    /// `(worker, compute index)` → stall in milliseconds before compute.
+    pub stalls: BTreeMap<(String, usize), u64>,
+    /// cell key → the one worker that fails it exactly once (a
+    /// transient: a retry by anyone, including the same worker, succeeds).
+    pub transient: BTreeMap<String, String>,
+    /// cell keys every worker fails every time — quarantine fodder.
+    pub poison: BTreeSet<String>,
+    /// registry publish index → how that publish is torn.
+    pub torn: BTreeMap<usize, TornMode>,
+}
+
+impl FaultPlan {
+    /// An empty plan (no faults) carrying just the seed.
+    pub fn empty(seed: u64) -> FaultPlan {
+        FaultPlan { seed, ..FaultPlan::default() }
+    }
+
+    /// Deterministically generate a plan for `workers` named workers
+    /// over `cells`, poisoning `poison_count` of them.  Identical
+    /// arguments always yield an identical plan.
+    ///
+    /// Two invariants the chaos harness leans on:
+    ///
+    /// * the **cell-level** selections (poison, transient cells, torn
+    ///   publishes) are drawn from RNG streams seeded independently of
+    ///   the worker list, so they are a pure function of
+    ///   `(seed, cells, poison_count)` — quarantine reporting is
+    ///   therefore identical at any worker count;
+    /// * the schedule is front-loaded (faults land in the first few
+    ///   dozen frames / first few computes, so short `--fast` grids
+    ///   actually reach them) and every per-connection fault fires at
+    ///   most once, so the run always converges.
+    pub fn generate(seed: u64, workers: &[String], cells: &[String],
+                    poison_count: usize) -> FaultPlan {
+        let mut worker_rng = Rng::new(seed);
+        let mut cell_rng = Rng::new(seed ^ 0x5EED_CE11_5EED_CE11);
+        let mut torn_rng = Rng::new(seed ^ 0x7042_F1A9_0000_0001);
+        let mut plan = FaultPlan::empty(seed);
+        for w in workers {
+            // frame indices 0/1 are the hello/welcome handshake; start
+            // injection at 2 so each session usually gets far enough to
+            // validate run identity before the wire misbehaves
+            for _ in 0..2 {
+                plan.write_resets.insert(
+                    (w.clone(), 2 + worker_rng.below(40)));
+            }
+            plan.write_truncs.insert((w.clone(), 2 + worker_rng.below(40)),
+                                     1 + worker_rng.below(8));
+            for _ in 0..2 {
+                plan.write_splits.insert(
+                    (w.clone(), 2 + worker_rng.below(40)),
+                    1 + worker_rng.below(4) as u64);
+            }
+            plan.read_resets.insert((w.clone(), 2 + worker_rng.below(40)));
+            plan.crashes.insert((w.clone(), worker_rng.below(3)));
+            plan.stalls.insert((w.clone(), worker_rng.below(4)),
+                               1 + worker_rng.below(5) as u64);
+        }
+        // poison first, transients from the untouched remainder — a cell
+        // is never both; which *worker* fails a transient comes from the
+        // worker stream (it may legitimately vary with the fleet shape)
+        let mut idx: Vec<usize> = (0..cells.len()).collect();
+        cell_rng.shuffle(&mut idx);
+        let n_poison = poison_count.min(cells.len());
+        for &i in idx.iter().take(n_poison) {
+            plan.poison.insert(cells[i].clone());
+        }
+        if !workers.is_empty() {
+            let n_transient = 2.min(cells.len().saturating_sub(n_poison));
+            for &i in idx.iter().skip(n_poison).take(n_transient) {
+                let w = workers[worker_rng.below(workers.len())].clone();
+                plan.transient.insert(cells[i].clone(), w);
+            }
+        }
+        // tear roughly a third of the publishes the run will make (one
+        // publish per non-poison cell), alternating tear modes; sweep
+        // cells carry no blob, so the meta-side tears are the ones that
+        // can actually fire
+        let n_puts = cells.len().saturating_sub(n_poison);
+        if n_puts > 0 {
+            let n_torn = (n_puts / 3).max(1);
+            let mut puts: Vec<usize> = (0..n_puts).collect();
+            torn_rng.shuffle(&mut puts);
+            for (k, &i) in puts.iter().take(n_torn).enumerate() {
+                let mode = if k % 2 == 0 { TornMode::BlobWithoutMeta }
+                           else { TornMode::TruncatedMeta };
+                plan.torn.insert(i, mode);
+            }
+        }
+        plan
+    }
+
+    /// Total number of scheduled fault sites (an upper bound on how many
+    /// can fire; operator-log material).
+    pub fn total_faults(&self) -> usize {
+        self.write_resets.len() + self.write_truncs.len()
+            + self.write_splits.len() + self.read_resets.len()
+            + self.crashes.len() + self.stalls.len()
+            + self.transient.len() + self.poison.len() + self.torn.len()
+    }
+
+    /// Canonical JSON document (`lrc-fault-plan-v1`).
+    pub fn to_json(&self) -> Json {
+        let site = |w: &String, i: usize| Json::obj(vec![
+            ("frame", Json::num(i as f64)),
+            ("worker", Json::str(w.clone())),
+        ]);
+        let sites = |s: &BTreeSet<(String, usize)>| Json::Arr(
+            s.iter().map(|(w, i)| site(w, *i)).collect());
+        let sized = |m: &BTreeMap<(String, usize), usize>| Json::Arr(
+            m.iter().map(|((w, i), v)| Json::obj(vec![
+                ("frame", Json::num(*i as f64)),
+                ("value", Json::num(*v as f64)),
+                ("worker", Json::str(w.clone())),
+            ])).collect());
+        let timed = |m: &BTreeMap<(String, usize), u64>| Json::Arr(
+            m.iter().map(|((w, i), v)| Json::obj(vec![
+                ("frame", Json::num(*i as f64)),
+                ("value", Json::num(*v as f64)),
+                ("worker", Json::str(w.clone())),
+            ])).collect());
+        Json::obj(vec![
+            ("schema", Json::str(PLAN_SCHEMA)),
+            ("seed", Json::num(self.seed as f64)),
+            ("write_resets", sites(&self.write_resets)),
+            ("write_truncs", sized(&self.write_truncs)),
+            ("write_splits", timed(&self.write_splits)),
+            ("read_resets", sites(&self.read_resets)),
+            ("crashes", sites(&self.crashes)),
+            ("stalls", timed(&self.stalls)),
+            ("transient", Json::Arr(self.transient.iter().map(|(c, w)|
+                Json::obj(vec![
+                    ("cell", Json::str(c.clone())),
+                    ("worker", Json::str(w.clone())),
+                ])).collect())),
+            ("poison", Json::Arr(
+                self.poison.iter().map(|c| Json::str(c.clone())).collect())),
+            ("torn", Json::Arr(self.torn.iter().map(|(i, m)|
+                Json::obj(vec![
+                    ("mode", Json::str(m.name())),
+                    ("put", Json::num(*i as f64)),
+                ])).collect())),
+        ])
+    }
+
+    /// Parse a plan document back; strict about schema and shapes so a
+    /// stale plan file fails loudly instead of silently injecting the
+    /// wrong faults.
+    pub fn from_json(doc: &Json) -> Result<FaultPlan> {
+        if doc.get("schema").and_then(|s| s.as_str()) != Some(PLAN_SCHEMA) {
+            bail!("not a {PLAN_SCHEMA} document");
+        }
+        let seed = doc.get("seed").and_then(|s| s.as_f64())
+            .ok_or_else(|| anyhow::anyhow!("fault plan missing seed"))?
+            as u64;
+        let arr = |field: &str| -> Result<&[Json]> {
+            doc.get(field).and_then(|a| a.as_arr())
+                .ok_or_else(|| anyhow::anyhow!(
+                    "fault plan field {field} missing or not an array"))
+        };
+        let site = |e: &Json, field: &str| -> Result<(String, usize)> {
+            let w = e.get("worker").and_then(|w| w.as_str())
+                .ok_or_else(|| anyhow::anyhow!("{field}: missing worker"))?;
+            let i = e.get("frame").and_then(|f| f.as_usize())
+                .ok_or_else(|| anyhow::anyhow!("{field}: missing frame"))?;
+            Ok((w.to_string(), i))
+        };
+        let mut plan = FaultPlan::empty(seed);
+        for e in arr("write_resets")? {
+            plan.write_resets.insert(site(e, "write_resets")?);
+        }
+        for e in arr("write_truncs")? {
+            let v = e.get("value").and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow::anyhow!("write_truncs: missing \
+                                                value"))?;
+            plan.write_truncs.insert(site(e, "write_truncs")?, v);
+        }
+        for e in arr("write_splits")? {
+            let v = e.get("value").and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow::anyhow!("write_splits: missing \
+                                                value"))?;
+            plan.write_splits.insert(site(e, "write_splits")?, v as u64);
+        }
+        for e in arr("read_resets")? {
+            plan.read_resets.insert(site(e, "read_resets")?);
+        }
+        for e in arr("crashes")? {
+            plan.crashes.insert(site(e, "crashes")?);
+        }
+        for e in arr("stalls")? {
+            let v = e.get("value").and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow::anyhow!("stalls: missing value"))?;
+            plan.stalls.insert(site(e, "stalls")?, v as u64);
+        }
+        for e in arr("transient")? {
+            let c = e.get("cell").and_then(|c| c.as_str())
+                .ok_or_else(|| anyhow::anyhow!("transient: missing cell"))?;
+            let w = e.get("worker").and_then(|w| w.as_str())
+                .ok_or_else(|| anyhow::anyhow!("transient: missing \
+                                                worker"))?;
+            plan.transient.insert(c.to_string(), w.to_string());
+        }
+        for e in arr("poison")? {
+            let c = e.as_str()
+                .ok_or_else(|| anyhow::anyhow!("poison: not a string"))?;
+            plan.poison.insert(c.to_string());
+        }
+        for e in arr("torn")? {
+            let i = e.get("put").and_then(|p| p.as_usize())
+                .ok_or_else(|| anyhow::anyhow!("torn: missing put"))?;
+            let m = e.get("mode").and_then(|m| m.as_str())
+                .ok_or_else(|| anyhow::anyhow!("torn: missing mode"))?;
+            plan.torn.insert(i, TornMode::parse(m)?);
+        }
+        Ok(plan)
+    }
+
+    /// The fault schedule projected onto one named worker — what
+    /// [`super::service::run_worker`] consults.
+    pub fn shim_for(&self, worker: &str) -> WorkerShim {
+        let mut shim = WorkerShim {
+            write: BTreeMap::new(),
+            read: BTreeMap::new(),
+            crashes: BTreeSet::new(),
+            stalls: BTreeMap::new(),
+            transient: BTreeSet::new(),
+            transient_fired: BTreeSet::new(),
+            poison: self.poison.clone(),
+            frames_written: 0,
+            frames_read: 0,
+            computes: 0,
+            fired: 0,
+        };
+        for (w, i) in &self.write_resets {
+            if w == worker {
+                shim.write.insert(*i, WriteFault::Reset);
+            }
+        }
+        for ((w, i), keep) in &self.write_truncs {
+            if w == worker {
+                shim.write.insert(*i, WriteFault::Truncate(*keep));
+            }
+        }
+        for ((w, i), ms) in &self.write_splits {
+            if w == worker {
+                shim.write.insert(*i, WriteFault::Split(*ms));
+            }
+        }
+        for (w, i) in &self.read_resets {
+            if w == worker {
+                shim.read.insert(*i, ReadFault::Reset);
+            }
+        }
+        for (w, i) in &self.crashes {
+            if w == worker {
+                shim.crashes.insert(*i);
+            }
+        }
+        for ((w, i), ms) in &self.stalls {
+            if w == worker {
+                shim.stalls.insert(*i, *ms);
+            }
+        }
+        for (cell, w) in &self.transient {
+            if w == worker {
+                shim.transient.insert(cell.clone());
+            }
+        }
+        shim
+    }
+}
+
+/// One worker's live view of a [`FaultPlan`]: monotonic counters over
+/// frame writes, frame reads and cell computes index into the schedule,
+/// so every scheduled fault fires at most once and the whole object is
+/// deterministic given the sequence of calls.
+#[derive(Clone, Debug)]
+pub struct WorkerShim {
+    write: BTreeMap<usize, WriteFault>,
+    read: BTreeMap<usize, ReadFault>,
+    crashes: BTreeSet<usize>,
+    stalls: BTreeMap<usize, u64>,
+    transient: BTreeSet<String>,
+    transient_fired: BTreeSet<String>,
+    poison: BTreeSet<String>,
+    frames_written: usize,
+    frames_read: usize,
+    computes: usize,
+    /// How many scheduled faults this shim has actually fired.
+    pub fired: usize,
+}
+
+impl WorkerShim {
+    /// Consult the schedule for the next outgoing frame.
+    pub fn on_write(&mut self) -> WriteFault {
+        let i = self.frames_written;
+        self.frames_written += 1;
+        match self.write.get(&i) {
+            Some(f) => {
+                self.fired += 1;
+                f.clone()
+            }
+            None => WriteFault::None,
+        }
+    }
+
+    /// Consult the schedule for the next incoming-frame read.
+    pub fn on_read(&mut self) -> ReadFault {
+        let i = self.frames_read;
+        self.frames_read += 1;
+        match self.read.get(&i) {
+            Some(f) => {
+                self.fired += 1;
+                f.clone()
+            }
+            None => ReadFault::None,
+        }
+    }
+
+    /// Consult the schedule for the next cell compute.  Poison beats
+    /// everything (its error string is a pure function of the cell key,
+    /// so quarantine reporting is identical no matter which workers hit
+    /// it); transients fire exactly once per shim.
+    pub fn on_compute(&mut self, cell: &str) -> ComputeFault {
+        let i = self.computes;
+        self.computes += 1;
+        if self.poison.contains(cell) {
+            self.fired += 1;
+            return ComputeFault::Fail(
+                format!("injected fault: poison cell {cell}"));
+        }
+        if self.crashes.contains(&i) {
+            self.fired += 1;
+            return ComputeFault::Crash;
+        }
+        if self.transient.contains(cell)
+            && !self.transient_fired.contains(cell) {
+            self.transient_fired.insert(cell.to_string());
+            self.fired += 1;
+            return ComputeFault::Fail(
+                format!("injected fault: transient failure on {cell}"));
+        }
+        if let Some(&ms) = self.stalls.get(&i) {
+            self.fired += 1;
+            return ComputeFault::Stall(ms);
+        }
+        ComputeFault::None
+    }
+}
+
+/// Shared tear counters, cloned out of a [`TornWriteBackend`] before it
+/// disappears into a `Box<dyn RegistryBackend>`.
+#[derive(Clone)]
+pub struct TornCounters {
+    /// Tears that leave the object absent (meta removed): read back as a
+    /// plain miss.
+    pub missing: Arc<AtomicU64>,
+    /// Tears that leave a broken object behind (blob removed, meta
+    /// truncated): read back as a counted corrupt.
+    pub corrupt: Arc<AtomicU64>,
+}
+
+impl TornCounters {
+    pub fn missing(&self) -> u64 {
+        self.missing.load(Ordering::SeqCst)
+    }
+
+    pub fn corrupt(&self) -> u64 {
+        self.corrupt.load(Ordering::SeqCst)
+    }
+
+    /// Total tears actually applied.
+    pub fn fired(&self) -> u64 {
+        self.missing() + self.corrupt()
+    }
+}
+
+/// A [`RegistryBackend`] that publishes through a real [`FsRegistry`]
+/// and then tears chosen publishes apart, by monotonic publish index.
+/// The tear happens *after* the atomic rename — exactly the artifact a
+/// crashed publisher or a lost partial upload leaves behind — and
+/// `put_raw` still reports success, so the writer never learns.  Reads
+/// pass straight through: the read-side verification above the backend
+/// is the thing under test.
+pub struct TornWriteBackend {
+    inner: FsRegistry,
+    torn: BTreeMap<usize, TornMode>,
+    puts: AtomicU64,
+    counters: TornCounters,
+}
+
+impl TornWriteBackend {
+    pub fn new(root: &Path, torn: BTreeMap<usize, TornMode>)
+               -> TornWriteBackend {
+        TornWriteBackend {
+            inner: FsRegistry::new(root),
+            torn,
+            puts: AtomicU64::new(0),
+            counters: TornCounters {
+                missing: Arc::new(AtomicU64::new(0)),
+                corrupt: Arc::new(AtomicU64::new(0)),
+            },
+        }
+    }
+
+    /// Clone the tear counters out (the backend itself is about to be
+    /// boxed behind the `RegistryBackend` trait).
+    pub fn counters(&self) -> TornCounters {
+        self.counters.clone()
+    }
+}
+
+impl RegistryBackend for TornWriteBackend {
+    fn get_raw(&self, digest: &str)
+               -> Result<Option<(Vec<u8>, Option<Vec<u8>>)>> {
+        self.inner.get_raw(digest)
+    }
+
+    fn put_raw(&self, digest: &str, meta: &[u8], blob: Option<&[u8]>)
+               -> Result<()> {
+        self.inner.put_raw(digest, meta, blob)?;
+        let i = self.puts.fetch_add(1, Ordering::SeqCst) as usize;
+        if let Some(mode) = self.torn.get(&i) {
+            match mode {
+                TornMode::BlobWithoutMeta => {
+                    let _ = std::fs::remove_file(
+                        self.inner.object_file(digest));
+                    self.counters.missing.fetch_add(1, Ordering::SeqCst);
+                }
+                TornMode::MetaWithoutBlob => {
+                    // only meaningful when a blob exists to lose
+                    if blob.is_some() {
+                        let _ = std::fs::remove_file(
+                            self.inner.blob_file(digest));
+                        self.counters.corrupt.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+                TornMode::TruncatedMeta => {
+                    let path = self.inner.object_file(digest);
+                    if let Ok(bytes) = std::fs::read(&path) {
+                        let _ = std::fs::write(&path,
+                                               &bytes[..bytes.len() / 2]);
+                        self.counters.corrupt.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn describe(&self) -> String {
+        format!("torn({} tears over {})", self.torn.len(),
+                self.inner.describe())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn names(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("w{i}")).collect()
+    }
+
+    fn cells() -> Vec<String> {
+        (0..8).map(|i| format!("cell_{i}")).collect()
+    }
+
+    #[test]
+    fn generate_is_deterministic_and_seed_sensitive() {
+        let a = FaultPlan::generate(7, &names(3), &cells(), 2);
+        let b = FaultPlan::generate(7, &names(3), &cells(), 2);
+        assert_eq!(a, b, "same seed must yield the same plan");
+        let c = FaultPlan::generate(8, &names(3), &cells(), 2);
+        assert_ne!(a, c, "a different seed must move the plan");
+        assert_eq!(a.poison.len(), 2);
+        assert!(a.total_faults() > 0);
+        // poison and transient never overlap
+        for cell in a.transient.keys() {
+            assert!(!a.poison.contains(cell),
+                    "{cell} is both poison and transient");
+        }
+        // cell-level selections are a pure function of (seed, cells,
+        // poison_count): changing the fleet shape must not move them,
+        // or quarantine reporting would differ across worker counts
+        let d = FaultPlan::generate(7, &names(5), &cells(), 2);
+        assert_eq!(a.poison, d.poison,
+                   "poison set must not depend on worker count");
+        assert_eq!(a.torn, d.torn,
+                   "torn schedule must not depend on worker count");
+        assert_eq!(a.transient.keys().collect::<Vec<_>>(),
+                   d.transient.keys().collect::<Vec<_>>(),
+                   "transient cells must not depend on worker count");
+    }
+
+    #[test]
+    fn plan_roundtrips_through_json() {
+        let plan = FaultPlan::generate(42, &names(2), &cells(), 1);
+        let doc = plan.to_json();
+        let text = doc.to_string();
+        let back = FaultPlan::from_json(&Json::parse(&text).unwrap())
+            .unwrap();
+        assert_eq!(plan, back, "plan must survive a JSON roundtrip");
+        // and serialization itself is canonical
+        assert_eq!(text, back.to_json().to_string());
+        // a wrong schema tag is rejected loudly
+        let bad = text.replace(PLAN_SCHEMA, "lrc-fault-plan-v0");
+        assert!(FaultPlan::from_json(&Json::parse(&bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn shim_fires_each_scheduled_fault_exactly_once() {
+        let mut plan = FaultPlan::empty(0);
+        plan.write_resets.insert(("w0".into(), 2));
+        plan.write_truncs.insert(("w0".into(), 4), 3);
+        plan.read_resets.insert(("w0".into(), 1));
+        plan.write_resets.insert(("w1".into(), 0));
+        let mut shim = plan.shim_for("w0");
+        let writes: Vec<WriteFault> =
+            (0..6).map(|_| shim.on_write()).collect();
+        assert_eq!(writes, vec![
+            WriteFault::None, WriteFault::None, WriteFault::Reset,
+            WriteFault::None, WriteFault::Truncate(3), WriteFault::None,
+        ]);
+        assert_eq!(shim.on_read(), ReadFault::None);
+        assert_eq!(shim.on_read(), ReadFault::Reset);
+        assert_eq!(shim.on_read(), ReadFault::None);
+        assert_eq!(shim.fired, 3, "w1's faults must not leak into w0");
+    }
+
+    #[test]
+    fn transient_fails_once_poison_fails_always() {
+        let mut plan = FaultPlan::empty(0);
+        plan.transient.insert("cell_t".into(), "w0".into());
+        plan.poison.insert("cell_p".into());
+        let mut shim = plan.shim_for("w0");
+        match shim.on_compute("cell_t") {
+            ComputeFault::Fail(e) => assert!(e.contains("transient")),
+            other => panic!("expected transient failure, got {other:?}"),
+        }
+        assert_eq!(shim.on_compute("cell_t"), ComputeFault::None,
+                   "a transient retried by the same worker succeeds");
+        for _ in 0..3 {
+            match shim.on_compute("cell_p") {
+                ComputeFault::Fail(e) => assert_eq!(
+                    e, "injected fault: poison cell cell_p",
+                    "poison error strings are a pure function of the key"),
+                other => panic!("poison must always fail, got {other:?}"),
+            }
+        }
+        // the transient is invisible to other workers
+        let mut other = plan.shim_for("w1");
+        assert_eq!(other.on_compute("cell_t"), ComputeFault::None);
+    }
+
+    #[test]
+    fn torn_backend_tears_exactly_the_scheduled_puts() {
+        let root = std::env::temp_dir().join(format!(
+            "lrc_torn_unit_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let mut torn = BTreeMap::new();
+        torn.insert(0usize, TornMode::BlobWithoutMeta);
+        torn.insert(2usize, TornMode::TruncatedMeta);
+        let backend = TornWriteBackend::new(&root, torn);
+        let counters = backend.counters();
+        let fs = FsRegistry::new(&root);
+        for i in 0..3 {
+            let digest = format!("{i:064}");
+            backend.put_raw(&digest, b"{\"meta\":\"document\"}", None)
+                .unwrap();
+        }
+        assert!(!fs.object_file(&format!("{:064}", 0)).exists(),
+                "put 0: meta removed");
+        assert!(fs.object_file(&format!("{:064}", 1)).exists(),
+                "put 1: untouched");
+        let truncated =
+            std::fs::read(fs.object_file(&format!("{:064}", 2))).unwrap();
+        assert_eq!(truncated.len(), b"{\"meta\":\"document\"}".len() / 2,
+                   "put 2: meta cut in half");
+        assert_eq!((counters.missing(), counters.corrupt()), (1, 1));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

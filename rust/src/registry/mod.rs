@@ -21,6 +21,9 @@
 //! * [`proto`] / [`service`] — the length-prefixed line protocol and the
 //!   dispatcher/worker loops that shard a sweep grid across processes
 //!   (`lrc sweep --serve` / `lrc sweep-worker`).
+//! * [`faults`] — seeded, serializable fault injection (connection
+//!   resets, truncated/split frames, compute failures, torn writes) for
+//!   the `lrc chaos` harness; [`list_objects`] backs `lrc registry ls`.
 //!
 //! Layering: the registry sits **above** the compute stack — `pipeline`
 //! and `sweep` may consult it, but nothing in `linalg`/`quant`/`lrc`
@@ -28,9 +31,11 @@
 //! stays desk-verifiable without any storage concerns.
 
 pub mod digest;
+pub mod faults;
 pub mod proto;
 pub mod service;
 
+use std::collections::BTreeSet;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -365,6 +370,110 @@ fn verify_object(digest: &str, meta_bytes: &[u8], blob: Option<Vec<u8>>)
         }
     };
     Some(RegistryObject { meta, blob })
+}
+
+// ---------------------------------------------------------------------------
+// store introspection (`lrc registry ls`)
+// ---------------------------------------------------------------------------
+
+/// One object row for `lrc registry ls`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LsRow {
+    /// Object digest (the filename stem under `objects/`).
+    pub digest: String,
+    /// Key fields from the meta document (`"?"` when unreadable).
+    pub kind: String,
+    pub model: String,
+    pub method: String,
+    /// `"ok"` (verifies), `"corrupt"` (fails verification — reads as a
+    /// miss) or `"orphan-blob"` (a `.bin` with no meta document: a torn
+    /// write's leftover, invisible to readers).
+    pub status: &'static str,
+    /// Blob byte length when one exists.
+    pub blob_len: Option<usize>,
+}
+
+/// Walk a local-FS store and classify every object, in digest order —
+/// the operator's view of a fleet's shared registry.  Each meta document
+/// runs the full read-side verification, so the `status` column reports
+/// exactly what a reader would experience.  A missing store is an empty
+/// listing, not an error.
+pub fn list_objects(root: &Path) -> Result<Vec<LsRow>> {
+    let fs = FsRegistry::new(root);
+    let mut metas: Vec<String> = Vec::new();
+    let mut blobs: BTreeSet<String> = BTreeSet::new();
+    let dir = match std::fs::read_dir(root.join("objects")) {
+        Ok(dir) => dir,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(Vec::new());
+        }
+        Err(e) => return Err(e).context("list registry objects"),
+    };
+    for entry in dir {
+        let name = entry?.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if let Some(stem) = name.strip_suffix(".json") {
+            metas.push(stem.to_string());
+        } else if let Some(stem) = name.strip_suffix(".bin") {
+            blobs.insert(stem.to_string());
+        }
+    }
+    metas.sort();
+    let mut rows = Vec::new();
+    for digest in &metas {
+        // tolerate a concurrent writer deleting between listing and read
+        let meta_bytes = match std::fs::read(fs.object_file(digest)) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => continue,
+            Err(e) => return Err(e).context("read registry object"),
+        };
+        let blob = std::fs::read(fs.blob_file(digest)).ok();
+        let blob_len = blob.as_ref().map(|b| b.len());
+        let field = |meta: &Json, name: &str| -> String {
+            meta.get("key").and_then(|k| k.get(name))
+                .and_then(|v| v.as_str()).unwrap_or("?").to_string()
+        };
+        let row = match verify_object(digest, &meta_bytes, blob) {
+            Some(obj) => LsRow {
+                digest: digest.clone(),
+                kind: field(&obj.meta, "kind"),
+                model: field(&obj.meta, "model"),
+                method: field(&obj.meta, "method"),
+                status: "ok",
+                blob_len,
+            },
+            None => {
+                // best-effort key fields off the (possibly torn) meta
+                let meta = std::str::from_utf8(&meta_bytes).ok()
+                    .and_then(|t| Json::parse(t).ok())
+                    .unwrap_or(Json::Null);
+                LsRow {
+                    digest: digest.clone(),
+                    kind: field(&meta, "kind"),
+                    model: field(&meta, "model"),
+                    method: field(&meta, "method"),
+                    status: "corrupt",
+                    blob_len,
+                }
+            }
+        };
+        rows.push(row);
+    }
+    for digest in &blobs {
+        if metas.binary_search(digest).is_err() {
+            let blob_len = std::fs::metadata(fs.blob_file(digest))
+                .map(|m| m.len() as usize).ok();
+            rows.push(LsRow {
+                digest: digest.clone(),
+                kind: "?".to_string(),
+                model: "?".to_string(),
+                method: "?".to_string(),
+                status: "orphan-blob",
+                blob_len,
+            });
+        }
+    }
+    Ok(rows)
 }
 
 // ---------------------------------------------------------------------------

@@ -7,7 +7,7 @@
 //! greppable, and the cap below bounds what a malformed peer can make
 //! the other side buffer.  The message vocabulary on top of the framing
 //! is specified in `docs/REGISTRY.md` (hello/welcome, claim/cell/wait/
-//! done, publish/ok, heartbeat, error).
+//! done, publish/ok, failed/ok, heartbeat, error).
 //!
 //! Everything here is pure bytes-in/bytes-out — the loops in
 //! [`crate::registry::service`] own the sockets — so the framing rules
@@ -166,6 +166,90 @@ mod tests {
         let mut fb = FrameBuf::new();
         fb.extend(b"3\n{],\n");
         assert!(fb.next().is_err());
+    }
+
+    #[test]
+    fn every_split_point_across_two_coalesced_frames() {
+        // the exact shape the fault injector's frame-split fault
+        // produces: one write delivered as two arbitrary chunks.  Every
+        // cut point of a two-frame stream must decode to the same two
+        // messages, with completeness flipping exactly at frame ends.
+        let a = Json::obj(vec![("op", Json::str("cell")),
+                               ("key", Json::str("lrc_w4_r10_gnone"))]);
+        let b = Json::obj(vec![("op", Json::str("failed")),
+                               ("error", Json::str("injected"))]);
+        let mut stream = encode_frame(&a);
+        let first_len = stream.len();
+        stream.extend_from_slice(&encode_frame(&b));
+        for cut in 0..=stream.len() {
+            let mut fb = FrameBuf::new();
+            fb.extend(&stream[..cut]);
+            let mut got = Vec::new();
+            while let Some(m) = fb.next().unwrap() {
+                got.push(m);
+            }
+            assert_eq!(got.len(),
+                       usize::from(cut >= first_len)
+                       + usize::from(cut >= stream.len()),
+                       "wrong frame count at cut {cut}");
+            fb.extend(&stream[cut..]);
+            while let Some(m) = fb.next().unwrap() {
+                got.push(m);
+            }
+            assert_eq!(got, vec![a.clone(), b.clone()],
+                       "stream split at {cut} decoded differently");
+        }
+    }
+
+    #[test]
+    fn truncated_length_line_stays_incomplete_until_the_newline() {
+        // a length prefix cut mid-digit is an incomplete frame, not a
+        // framing error — the rest of the digits may still arrive
+        let m = msg("claim");
+        let frame = encode_frame(&m);
+        let mut fb = FrameBuf::new();
+        fb.extend(&frame[..1]); // first digit only, no newline yet
+        assert_eq!(fb.next().unwrap(), None);
+        fb.extend(&frame[1..]);
+        assert_eq!(fb.next().unwrap(), Some(m));
+    }
+
+    #[test]
+    fn declared_length_exactly_at_the_cap_is_not_an_error() {
+        // the cap rejects frames *beyond* MAX_FRAME; a declaration of
+        // exactly MAX_FRAME is a legal (if absurd) frame still waiting
+        // for its payload
+        let mut fb = FrameBuf::new();
+        fb.extend(format!("{MAX_FRAME}\n").as_bytes());
+        assert_eq!(fb.next().unwrap(), None, "at-cap length must wait \
+                    for payload, not error");
+        // one byte over trips it
+        let mut fb = FrameBuf::new();
+        fb.extend(format!("{}\n", MAX_FRAME + 1).as_bytes());
+        assert!(fb.next().is_err());
+    }
+
+    #[test]
+    fn resume_after_partial_read_keeps_the_stream_aligned() {
+        // a partial payload (what a torn/truncated write delivers before
+        // the connection drops) parks in the buffer; when the remainder
+        // arrives the frame completes, and the *next* frame on the same
+        // buffer still decodes — no desync after the stall
+        let a = Json::obj(vec![("op", Json::str("publish")),
+                               ("rec", Json::num(7.0))]);
+        let b = msg("ok");
+        let bytes_a = encode_frame(&a);
+        let split = bytes_a.len() - 3; // inside the payload
+        let mut fb = FrameBuf::new();
+        fb.extend(&bytes_a[..split]);
+        assert_eq!(fb.next().unwrap(), None);
+        assert_eq!(fb.next().unwrap(), None, "polling again must not \
+                    consume the parked partial frame");
+        fb.extend(&bytes_a[split..]);
+        fb.extend(&encode_frame(&b));
+        assert_eq!(fb.next().unwrap(), Some(a));
+        assert_eq!(fb.next().unwrap(), Some(b));
+        assert_eq!(fb.next().unwrap(), None);
     }
 
     #[test]

@@ -13,16 +13,34 @@
 //! Concurrency model: the dispatcher is a **single-threaded non-blocking
 //! poll loop** — no threads, no locks, no wall clock (this module sits
 //! outside the `par`/`coordinator` concurrency fences and stays there).
-//! Liveness is the TCP connection itself: a worker that dies mid-cell
-//! drops its connection and the dispatcher requeues its claimed cells
-//! for the next claimant.  `heartbeat` frames are progress markers for
-//! the operator log, not a liveness timer.
+//! Liveness is layered: a worker that dies mid-cell drops its connection
+//! and the dispatcher requeues its claimed cells immediately; a worker
+//! that *stalls* while its socket stays open is bounded by the claim
+//! **lease**, measured in poll-loop iterations (never `Instant`) — a
+//! cell held past [`ServeOpts::lease_polls`] without a `heartbeat`
+//! requeues for the next claimant, and the eventual late publish is
+//! counted as a verified-identical `duplicate`.
 //!
-//! Failure stance: a peer that breaks *framing* or speaks the wrong
-//! protocol version is dropped (its cells requeue); a record that fails
-//! *validation* on publish is fatal for the whole run — that is a
-//! version-skewed or miscomputing worker, and silently dropping its
-//! result would hide it.
+//! Failure stance (`lrc-sweep-worker-v2`):
+//!
+//! * a peer that breaks *framing* or speaks the wrong protocol version
+//!   is dropped (its cells requeue); peer malformation is never fatal
+//!   for the run;
+//! * a record that fails *validation* on publish is fatal for the whole
+//!   run — that is a version-skewed or miscomputing worker, and silently
+//!   dropping its result would hide it;
+//! * a *compute failure* is a first-class `failed` frame (error string
+//!   included), not a dead worker: the cell requeues for another
+//!   attempt, and a cell failed [`ServeOpts::quarantine_after`] times is
+//!   **quarantined** — pulled from the grid and surfaced in the merged
+//!   report instead of stalling the fleet forever;
+//! * workers reconnect with capped exponential backoff after any
+//!   transport fault and re-validate the run identity from the fresh
+//!   welcome before mixing results.
+//!
+//! Deterministic fault injection for all of the above lives in
+//! [`super::faults`]; `run_worker` consults an optional
+//! [`WorkerShim`] at every frame write, frame read and cell compute.
 
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::io::{Read, Write};
@@ -31,12 +49,16 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use super::faults::{ComputeFault, ReadFault, WorkerShim, WriteFault};
 use super::proto::{encode_frame, msg, op_of, FrameBuf};
+use crate::rng::Rng;
 use crate::util::Json;
 
 /// Protocol version, exchanged in hello/welcome; either side refuses a
 /// mismatch (a skewed worker must never publish into a newer grid).
-pub const PROTO_VERSION: &str = "lrc-sweep-worker-v1";
+/// v2 over v1: hello carries a `worker` name, workers may report a
+/// `failed` op, and both ends survive reconnects.
+pub const PROTO_VERSION: &str = "lrc-sweep-worker-v2";
 
 /// Dispatcher poll-loop sleep between idle iterations.
 const POLL: Duration = Duration::from_millis(2);
@@ -50,19 +72,79 @@ const GRACE_ITERS: usize = 250; // ≈0.5 s of 2 ms polls
 /// can't pin the dispatcher open forever.
 const LINGER_ITERS: usize = 1500; // ≈3 s of 2 ms polls
 
-/// How long a worker keeps retrying its initial connect (the dispatcher
-/// may still be collecting prefill when workers start).
+/// How long a worker keeps retrying its *initial* connect (the
+/// dispatcher may still be collecting prefill when workers start).
 const CONNECT_ATTEMPTS: usize = 100;
 const CONNECT_BACKOFF: Duration = Duration::from_millis(100);
 
+/// Reconnect-after-fault backoff: capped exponential, much tighter than
+/// the initial connect — the dispatcher was just there.
+const RECONNECT_ATTEMPTS: usize = 12;
+const RECONNECT_BACKOFF_START: Duration = Duration::from_millis(10);
+const RECONNECT_BACKOFF_CAP: Duration = Duration::from_millis(200);
+
+/// A worker gives up after this many consecutive sessions that die
+/// before completing the handshake — that is not a transient.
+const MAX_BARREN_SESSIONS: usize = 10;
+
+/// `wait` backoff: capped, jittered, exponential — a near-drained grid
+/// with many workers must not hammer the dispatcher in lockstep.
+const WAIT_BACKOFF_START_MS: u64 = 5;
+const WAIT_BACKOFF_CAP_MS: u64 = 200;
+
+/// Dispatcher robustness knobs.  Both are counted in poll-loop
+/// iterations / attempts — pure logical time, reproducible anywhere.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOpts {
+    /// A claim not refreshed by a `heartbeat` within this many poll
+    /// iterations requeues for the next claimant (`0` disables leases —
+    /// liveness is then the TCP connection alone, as in v1).
+    pub lease_polls: usize,
+    /// A cell reported `failed` this many times is quarantined: pulled
+    /// from the grid and surfaced in the merged report (`0` disables
+    /// quarantine — a poison cell then retries forever).
+    pub quarantine_after: usize,
+}
+
+impl Default for ServeOpts {
+    fn default() -> ServeOpts {
+        ServeOpts {
+            lease_polls: 30_000, // ≈60 s of 2 ms idle polls
+            quarantine_after: 3,
+        }
+    }
+}
+
+/// A cell pulled from the grid after repeated compute failures.
+#[derive(Clone, Debug)]
+pub struct QuarantinedCell {
+    /// Lexicographically smallest error string across the failed
+    /// attempts — deterministic even when attempts interleave
+    /// differently across runs.
+    pub error: String,
+    /// Failed attempts recorded when quarantine tripped.
+    pub attempts: usize,
+    /// Names of the workers that reported failures (operator log
+    /// material; interleaving-dependent, so reports must not embed it).
+    pub workers: BTreeSet<String>,
+}
+
 /// What one `serve_grid` run collected.
 pub struct ServeOutcome {
-    /// every cell's record, keyed by cell id (prefilled + published)
+    /// every completed cell's record, keyed by cell id (prefilled +
+    /// published; quarantined cells are *absent* here)
     pub records: BTreeMap<String, Json>,
     /// cells computed by workers this run (not prefilled)
     pub computed: usize,
-    /// distinct worker connections accepted
+    /// distinct worker connections accepted (reconnects count again)
     pub workers_seen: usize,
+    /// duplicate publishes absorbed from requeue races, each verified
+    /// byte-identical to the first record
+    pub duplicates: usize,
+    /// cells requeued (worker lost, lease expired, or compute failed)
+    pub requeues: usize,
+    /// cells pulled from the grid after repeated compute failures
+    pub quarantined: BTreeMap<String, QuarantinedCell>,
 }
 
 struct Conn {
@@ -71,13 +153,22 @@ struct Conn {
     greeted: bool,
     claimed: BTreeSet<String>,
     alive: bool,
+    /// stable connection id — claim ownership survives `conns` reindexing
+    seq: u64,
+    /// worker-reported name from `hello` (operator log)
+    name: String,
 }
 
-/// Write a frame to a non-blocking socket, absorbing `WouldBlock` with
+/// One cell claim: who holds it and for how many poll iterations.
+struct Claim {
+    owner: u64,
+    age: usize,
+}
+
+/// Write raw bytes to a non-blocking socket, absorbing `WouldBlock` with
 /// short sleeps — frames are tiny, so this converges immediately in
 /// practice and bounds nothing but a pathological peer.
-fn write_frame_nb(stream: &mut TcpStream, m: &Json) -> std::io::Result<()> {
-    let bytes = encode_frame(m);
+fn write_all_nb(stream: &mut TcpStream, bytes: &[u8]) -> std::io::Result<()> {
     let mut off = 0;
     while off < bytes.len() {
         match stream.write(&bytes[off..]) {
@@ -96,16 +187,20 @@ fn write_frame_nb(stream: &mut TcpStream, m: &Json) -> std::io::Result<()> {
     Ok(())
 }
 
+fn write_frame_nb(stream: &mut TcpStream, m: &Json) -> std::io::Result<()> {
+    write_all_nb(stream, &encode_frame(m))
+}
+
 /// Serve one grid over `listener` until every cell in `cells` has a
-/// record.  `welcome` is the run-identity document sent to each worker
-/// (run tag, model, seed, iters — everything a worker needs to rebuild
-/// the identical inputs); `prefilled` seeds already-known records
-/// (registry hits), which are never handed out.  `on_publish` runs for
-/// every worker-published record (validation + registry write; an error
-/// is fatal for the run).  `progress` receives one line per notable
-/// event for the operator log.
+/// record or sits in quarantine.  `welcome` is the run-identity document
+/// sent to each worker (run tag, model, seed, iters — everything a
+/// worker needs to rebuild the identical inputs); `prefilled` seeds
+/// already-known records (registry hits), which are never handed out.
+/// `on_publish` runs for every worker-published record (validation +
+/// registry write; an error is fatal for the run).  `progress` receives
+/// one line per notable event for the operator log.
 pub fn serve_grid(listener: &TcpListener, welcome: &Json, cells: &[String],
-                  prefilled: &BTreeMap<String, Json>,
+                  prefilled: &BTreeMap<String, Json>, opts: ServeOpts,
                   mut on_publish: impl FnMut(&str, &Json) -> Result<()>,
                   mut progress: impl FnMut(String)) -> Result<ServeOutcome> {
     listener.set_nonblocking(true)
@@ -130,8 +225,14 @@ pub fn serve_grid(listener: &TcpListener, welcome: &Json, cells: &[String],
     }
 
     let mut conns: Vec<Conn> = Vec::new();
+    let mut claims: BTreeMap<String, Claim> = BTreeMap::new();
+    let mut failures: BTreeMap<String, QuarantinedCell> = BTreeMap::new();
+    let mut quarantined: BTreeMap<String, QuarantinedCell> = BTreeMap::new();
     let mut computed = 0usize;
     let mut workers_seen = 0usize;
+    let mut duplicates = 0usize;
+    let mut requeues = 0usize;
+    let mut next_seq = 0u64;
     let mut linger = 0usize;
     loop {
         let mut activity = false;
@@ -143,6 +244,7 @@ pub fn serve_grid(listener: &TcpListener, welcome: &Json, cells: &[String],
                     stream.set_nonblocking(true)?;
                     let _ = stream.set_nodelay(true);
                     workers_seen += 1;
+                    next_seq += 1;
                     progress(format!("worker connected from {peer}"));
                     conns.push(Conn {
                         stream,
@@ -150,6 +252,8 @@ pub fn serve_grid(listener: &TcpListener, welcome: &Json, cells: &[String],
                         greeted: false,
                         claimed: BTreeSet::new(),
                         alive: true,
+                        seq: next_seq,
+                        name: format!("conn#{next_seq}"),
                     });
                     activity = true;
                 }
@@ -187,13 +291,15 @@ pub fn serve_grid(listener: &TcpListener, welcome: &Json, cells: &[String],
                     Ok(Some(m)) => m,
                     Ok(None) => break,
                     Err(e) => {
-                        progress(format!("dropping worker (bad frame: {e})"));
+                        progress(format!("dropping worker {} (bad frame: \
+                                          {e})", conn.name));
                         conn.alive = false;
                         break;
                     }
                 };
                 activity = true;
-                let grid_done = done.len() == cells.len();
+                let grid_done =
+                    done.len() + quarantined.len() == cells.len();
                 // a peer whose message has no `op` falls into the
                 // unknown-op arm and is dropped — peer malformation is
                 // never fatal for the run
@@ -216,6 +322,10 @@ pub fn serve_grid(listener: &TcpListener, welcome: &Json, cells: &[String],
                             conn.alive = false;
                             continue;
                         }
+                        if let Some(n) = m.get("worker")
+                            .and_then(|w| w.as_str()) {
+                            conn.name = n.to_string();
+                        }
                         conn.greeted = true;
                         welcome_msg.clone()
                     }
@@ -226,6 +336,8 @@ pub fn serve_grid(listener: &TcpListener, welcome: &Json, cells: &[String],
                     "claim" => match pending.pop_front() {
                         Some(key) => {
                             conn.claimed.insert(key.clone());
+                            claims.insert(key.clone(),
+                                          Claim { owner: conn.seq, age: 0 });
                             Json::obj(vec![("op", Json::str("cell")),
                                            ("key", Json::str(key))])
                         }
@@ -235,9 +347,80 @@ pub fn serve_grid(listener: &TcpListener, welcome: &Json, cells: &[String],
                     "heartbeat" => {
                         if let Some(k) = m.get("key").and_then(|k| k.as_str())
                         {
-                            progress(format!("worker computing {k}"));
+                            if let Some(claim) = claims.get_mut(k) {
+                                if claim.owner == conn.seq {
+                                    claim.age = 0; // lease refreshed
+                                }
+                            }
+                            progress(format!("worker {} computing {k}",
+                                             conn.name));
                         }
                         msg("ok")
+                    }
+                    "failed" if !conn.greeted => {
+                        conn.alive = false;
+                        continue;
+                    }
+                    "failed" => {
+                        let Some(key) = m.get("key").and_then(|k| k.as_str())
+                            .map(str::to_string)
+                        else {
+                            progress(format!("dropping worker {} (failed \
+                                              without key)", conn.name));
+                            conn.alive = false;
+                            continue;
+                        };
+                        if !cell_set.contains(key.as_str()) {
+                            bail!("worker {} reported failure for unknown \
+                                   cell {key}", conn.name);
+                        }
+                        let error = m.get("error").and_then(|e| e.as_str())
+                            .unwrap_or("worker reported no error detail")
+                            .to_string();
+                        conn.claimed.remove(&key);
+                        if claims.get(&key).map(|c| c.owner)
+                            == Some(conn.seq) {
+                            claims.remove(&key);
+                        }
+                        if done.contains_key(&key)
+                            || quarantined.contains_key(&key) {
+                            // stale failure from a requeue race: the
+                            // cell's fate is already decided
+                            msg("ok")
+                        } else {
+                            let info = failures.entry(key.clone())
+                                .or_insert_with(|| QuarantinedCell {
+                                    error: error.clone(),
+                                    attempts: 0,
+                                    workers: BTreeSet::new(),
+                                });
+                            info.attempts += 1;
+                            info.workers.insert(conn.name.clone());
+                            if error < info.error {
+                                // keep the lexicographically smallest
+                                // error so the reported string never
+                                // depends on attempt interleaving
+                                info.error = error.clone();
+                            }
+                            progress(format!(
+                                "cell {key} failed by {} (attempt {}): \
+                                 {error}", conn.name, info.attempts));
+                            if opts.quarantine_after > 0
+                                && info.attempts >= opts.quarantine_after {
+                                pending.retain(|p| p != &key);
+                                claims.remove(&key);
+                                quarantined.insert(key.clone(),
+                                                   info.clone());
+                                progress(format!(
+                                    "quarantining {key} after {} failed \
+                                     attempt(s)", info.attempts));
+                            } else if !pending.contains(&key)
+                                && !claims.contains_key(&key) {
+                                requeues += 1;
+                                pending.push_back(key.clone());
+                            }
+                            msg("ok")
+                        }
                     }
                     "publish" => {
                         let key = m.get("key").and_then(|k| k.as_str())
@@ -254,15 +437,36 @@ pub fn serve_grid(listener: &TcpListener, welcome: &Json, cells: &[String],
                             bail!("worker published unknown cell {key}");
                         }
                         conn.claimed.remove(&key);
-                        if done.contains_key(&key) {
+                        if claims.get(&key).map(|c| c.owner)
+                            == Some(conn.seq) {
+                            claims.remove(&key);
+                        }
+                        if let Some(first) = done.get(&key) {
                             // duplicate result (requeue race): the math
-                            // is deterministic, so it is the same bytes —
-                            // acknowledge and move on
+                            // is deterministic, so the bytes must be
+                            // identical — observe the race explicitly
+                            // and hold the worker to the contract
+                            duplicates += 1;
+                            if rec.to_string() != first.to_string() {
+                                bail!("duplicate publish of {key} by {} \
+                                       differs from the first record — \
+                                       non-deterministic worker",
+                                      conn.name);
+                            }
+                            progress(format!(
+                                "duplicate publish of {key} by {} \
+                                 (requeue race; bytes verified \
+                                 identical)", conn.name));
                             msg("ok")
                         } else {
                             on_publish(&key, &rec).with_context(
                                 || format!("publish of cell {key}"))?;
                             pending.retain(|p| p != &key);
+                            if quarantined.remove(&key).is_some() {
+                                progress(format!(
+                                    "cell {key} recovered after \
+                                     quarantine"));
+                            }
                             done.insert(key.clone(), rec);
                             computed += 1;
                             progress(format!("cell {key} published \
@@ -284,19 +488,56 @@ pub fn serve_grid(listener: &TcpListener, welcome: &Json, cells: &[String],
             }
         }
 
+        // age every live claim; a cell held past the lease without a
+        // heartbeat requeues at the *back* (its slow holder may yet
+        // publish — that publish will be counted as a duplicate)
+        if opts.lease_polls > 0 {
+            let mut expired: Vec<String> = Vec::new();
+            for (key, claim) in claims.iter_mut() {
+                claim.age += 1;
+                if claim.age > opts.lease_polls {
+                    expired.push(key.clone());
+                }
+            }
+            for key in expired {
+                let claim = claims.remove(&key)
+                    .expect("expired claim must still be present");
+                for conn in conns.iter_mut() {
+                    if conn.seq == claim.owner {
+                        conn.claimed.remove(&key);
+                    }
+                }
+                if !done.contains_key(&key)
+                    && !quarantined.contains_key(&key)
+                    && !pending.contains(&key) {
+                    progress(format!(
+                        "requeueing {key} (lease expired after {} \
+                         polls)", opts.lease_polls));
+                    requeues += 1;
+                    pending.push_back(key);
+                }
+            }
+        }
+
         // reap dead connections; their claimed-but-unpublished cells go
         // back to the front of the queue for the next claimant
         for conn in conns.iter_mut().filter(|c| !c.alive) {
+            claims.retain(|_, c| c.owner != conn.seq);
             for key in std::mem::take(&mut conn.claimed) {
-                if !done.contains_key(&key) {
-                    progress(format!("requeueing {key} (worker lost)"));
+                if !done.contains_key(&key)
+                    && !quarantined.contains_key(&key)
+                    && !pending.contains(&key)
+                    && !claims.contains_key(&key) {
+                    progress(format!("requeueing {key} (worker {} lost)",
+                                     conn.name));
+                    requeues += 1;
                     pending.push_front(key);
                 }
             }
         }
         conns.retain(|c| c.alive);
 
-        if done.len() == cells.len() {
+        if done.len() + quarantined.len() == cells.len() {
             // grid complete: hold the socket through a short grace
             // window (answering straggler claims with `done`), then
             // exit once every connection has drained; the hard linger
@@ -312,48 +553,110 @@ pub fn serve_grid(listener: &TcpListener, welcome: &Json, cells: &[String],
             std::thread::sleep(POLL);
         }
     }
-    Ok(ServeOutcome { records: done, computed, workers_seen })
-}
-
-/// Read one frame from a blocking socket.
-fn read_frame(stream: &mut TcpStream, fb: &mut FrameBuf) -> Result<Json> {
-    loop {
-        if let Some(m) = fb.next()? {
-            return Ok(m);
-        }
-        let mut buf = [0u8; 4096];
-        let n = stream.read(&mut buf)
-            .context("read from dispatcher")?;
-        if n == 0 {
-            bail!("dispatcher closed the connection");
-        }
-        fb.extend(&buf[..n]);
+    if !quarantined.is_empty() {
+        progress(format!("{} cell(s) quarantined: {}", quarantined.len(),
+                         quarantined.keys().cloned()
+                         .collect::<Vec<_>>().join(", ")));
     }
+    Ok(ServeOutcome {
+        records: done,
+        computed,
+        workers_seen,
+        duplicates,
+        requeues,
+        quarantined,
+    })
 }
 
 /// What one worker process accomplished.
 pub struct WorkerOutcome {
     /// cells this worker computed and published
     pub computed: usize,
+    /// cells whose compute failed (reported via `failed`, worker lived)
+    pub failed: usize,
+    /// sessions re-established after a transport fault
+    pub reconnects: usize,
     /// the dispatcher's welcome document (run identity)
     pub welcome: Json,
 }
 
-/// The worker loop: connect (with retries — workers usually start while
-/// the dispatcher is still prefilling), handshake, then claim → compute
-/// → publish until the dispatcher answers `done`.  `compute` receives
-/// the welcome document (run identity: model, seed, iters, run tag) and
-/// the claimed cell key, and must return the finished cell record.
-pub fn run_worker(addr: &str,
-                  mut compute: impl FnMut(&Json, &str) -> Result<Json>,
-                  mut progress: impl FnMut(String)) -> Result<WorkerOutcome> {
-    let mut stream = None;
+/// One worker-side I/O step either produced a value or lost the
+/// session — the caller reconnects and resumes; only protocol-level
+/// breakage (dispatcher framing, rejected frames) is fatal.
+enum IoStep<T> {
+    Done(T),
+    Dropped,
+}
+
+/// Send one frame through the (optional) fault schedule.
+fn shim_write(stream: &mut TcpStream, shim: &mut Option<&mut WorkerShim>,
+              m: &Json) -> IoStep<()> {
+    let fault = match shim.as_deref_mut() {
+        Some(s) => s.on_write(),
+        None => WriteFault::None,
+    };
+    match fault {
+        WriteFault::None => match write_frame_nb(stream, m) {
+            Ok(()) => IoStep::Done(()),
+            Err(_) => IoStep::Dropped,
+        },
+        WriteFault::Reset => IoStep::Dropped,
+        WriteFault::Truncate(keep) => {
+            let bytes = encode_frame(m);
+            let keep = keep.min(bytes.len().saturating_sub(1));
+            let _ = write_all_nb(stream, &bytes[..keep]);
+            IoStep::Dropped
+        }
+        WriteFault::Split(ms) => {
+            let bytes = encode_frame(m);
+            let half = bytes.len() / 2;
+            if write_all_nb(stream, &bytes[..half]).is_err() {
+                return IoStep::Dropped;
+            }
+            std::thread::sleep(Duration::from_millis(ms));
+            match write_all_nb(stream, &bytes[half..]) {
+                Ok(()) => IoStep::Done(()),
+                Err(_) => IoStep::Dropped,
+            }
+        }
+    }
+}
+
+/// Read one frame from a blocking socket through the (optional) fault
+/// schedule.  Transport loss is `Dropped` (reconnectable); broken
+/// *framing* from the dispatcher is fatal — the stream cannot be
+/// resynchronized and the dispatcher is the trusted end.
+fn shim_read(stream: &mut TcpStream, fb: &mut FrameBuf,
+             shim: &mut Option<&mut WorkerShim>) -> Result<IoStep<Json>> {
+    if let Some(s) = shim.as_deref_mut() {
+        if s.on_read() == ReadFault::Reset {
+            return Ok(IoStep::Dropped);
+        }
+    }
+    loop {
+        match fb.next() {
+            Ok(Some(m)) => return Ok(IoStep::Done(m)),
+            Ok(None) => {}
+            Err(e) => {
+                return Err(e).context("dispatcher framing broken");
+            }
+        }
+        let mut buf = [0u8; 4096];
+        match stream.read(&mut buf) {
+            Ok(0) => return Ok(IoStep::Dropped),
+            Ok(n) => fb.extend(&buf[..n]),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return Ok(IoStep::Dropped),
+        }
+    }
+}
+
+/// Generous linear retry for the first connect — the dispatcher may
+/// still be prefilling its grid when workers start.
+fn connect_initial(addr: &str) -> Result<TcpStream> {
     for attempt in 0..CONNECT_ATTEMPTS {
         match TcpStream::connect(addr) {
-            Ok(s) => {
-                stream = Some(s);
-                break;
-            }
+            Ok(s) => return Ok(s),
             Err(e) if attempt + 1 == CONNECT_ATTEMPTS => {
                 return Err(e).with_context(
                     || format!("connect to dispatcher at {addr} \
@@ -362,67 +665,234 @@ pub fn run_worker(addr: &str,
             Err(_) => std::thread::sleep(CONNECT_BACKOFF),
         }
     }
-    // SAFETY of unwrap: the loop either set `stream` or returned
-    let mut stream = stream.unwrap();
-    let _ = stream.set_nodelay(true);
-    let mut fb = FrameBuf::new();
+    unreachable!("connect loop returns on success or final attempt")
+}
 
-    write_frame_nb(&mut stream, &Json::obj(vec![
-        ("op", Json::str("hello")),
-        ("proto", Json::str(PROTO_VERSION)),
-    ]))?;
-    let welcome = read_frame(&mut stream, &mut fb)?;
-    match op_of(&welcome)? {
-        "welcome" => {}
-        "error" => bail!("dispatcher refused: {}",
-                         welcome.get("message").and_then(|m| m.as_str())
-                         .unwrap_or("?")),
-        other => bail!("expected welcome, got {other:?}"),
-    }
-    progress(format!(
-        "connected to {addr}: run {}",
-        welcome.get("run").and_then(|r| r.as_str()).unwrap_or("?")));
-
-    let mut computed = 0usize;
-    loop {
-        write_frame_nb(&mut stream, &msg("claim"))?;
-        let reply = read_frame(&mut stream, &mut fb)?;
-        match op_of(&reply)? {
-            "cell" => {
-                let key = reply.get("key").and_then(|k| k.as_str())
-                    .ok_or_else(|| anyhow!("cell reply missing key"))?
-                    .to_string();
-                progress(format!("claimed {key}"));
-                // progress marker before the (long) compute; liveness
-                // itself is the TCP connection
-                write_frame_nb(&mut stream, &Json::obj(vec![
-                    ("op", Json::str("heartbeat")),
-                    ("key", Json::str(key.clone())),
-                ]))?;
-                let ack = read_frame(&mut stream, &mut fb)?;
-                if op_of(&ack)? != "ok" {
-                    bail!("heartbeat not acknowledged: {}", ack.to_string());
-                }
-                let record = compute(&welcome, &key)?;
-                write_frame_nb(&mut stream, &Json::obj(vec![
-                    ("op", Json::str("publish")),
-                    ("key", Json::str(key.clone())),
-                    ("record", record),
-                ]))?;
-                let ack = read_frame(&mut stream, &mut fb)?;
-                if op_of(&ack)? != "ok" {
-                    bail!("publish of {key} rejected: {}", ack.to_string());
-                }
-                computed += 1;
+/// Capped exponential backoff for reconnects after a transport fault.
+fn connect_backoff(addr: &str) -> Result<TcpStream> {
+    let mut delay = RECONNECT_BACKOFF_START;
+    for attempt in 0..RECONNECT_ATTEMPTS {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) if attempt + 1 == RECONNECT_ATTEMPTS => {
+                return Err(e).with_context(
+                    || format!("reconnect to dispatcher at {addr} \
+                                ({RECONNECT_ATTEMPTS} attempts, capped \
+                                 exponential backoff)"));
             }
-            "wait" => std::thread::sleep(Duration::from_millis(25)),
-            "done" => break,
-            "error" => bail!("dispatcher error: {}",
-                             reply.get("message").and_then(|m| m.as_str())
-                             .unwrap_or("?")),
-            other => bail!("unexpected dispatcher reply {other:?}"),
+            Err(_) => {
+                std::thread::sleep(delay);
+                delay = (delay * 2).min(RECONNECT_BACKOFF_CAP);
+            }
         }
     }
-    progress(format!("done: {computed} cell(s) computed"));
-    Ok(WorkerOutcome { computed, welcome })
+    unreachable!("reconnect loop returns on success or final attempt")
+}
+
+/// The worker loop: connect (with retries — workers usually start while
+/// the dispatcher is still prefilling), handshake, then claim → compute
+/// → publish/fail until the dispatcher answers `done`.  `compute`
+/// receives the welcome document (run identity: model, seed, iters, run
+/// tag) and the claimed cell key, and must return the finished cell
+/// record; a compute `Err` is reported to the dispatcher as a `failed`
+/// frame and the worker lives on.  Any transport fault (including every
+/// fault an optional [`WorkerShim`] injects) drops the session and the
+/// worker reconnects with capped exponential backoff, re-validating the
+/// run identity from the fresh welcome before continuing.
+pub fn run_worker(addr: &str, name: &str,
+                  mut shim: Option<&mut WorkerShim>,
+                  mut compute: impl FnMut(&Json, &str) -> Result<Json>,
+                  mut progress: impl FnMut(String)) -> Result<WorkerOutcome> {
+    let mut computed = 0usize;
+    let mut failed = 0usize;
+    let mut reconnects = 0usize;
+    let mut sessions = 0usize;
+    let mut barren = 0usize;
+    // the run identity from the first welcome, canonical bytes — every
+    // later session must present the identical document
+    let mut first_welcome: Option<String> = None;
+    let mut welcome_doc: Option<Json> = None;
+    // per-worker jitter stream (seeded from the name, so a fleet's
+    // backoffs decorrelate deterministically)
+    let mut jitter = Rng::new(name.bytes().fold(
+        0xC0FF_EE00_u64, |h, b| h.wrapping_mul(31).wrapping_add(b as u64)));
+    let mut wait_ms = WAIT_BACKOFF_START_MS;
+
+    'session: loop {
+        sessions += 1;
+        barren += 1;
+        if barren > MAX_BARREN_SESSIONS {
+            bail!("giving up on {addr}: {MAX_BARREN_SESSIONS} consecutive \
+                   sessions died before completing the handshake");
+        }
+        let mut stream = if sessions == 1 {
+            connect_initial(addr)?
+        } else {
+            reconnects += 1;
+            connect_backoff(addr)?
+        };
+        let _ = stream.set_nodelay(true);
+        let mut fb = FrameBuf::new();
+
+        match shim_write(&mut stream, &mut shim, &Json::obj(vec![
+            ("op", Json::str("hello")),
+            ("proto", Json::str(PROTO_VERSION)),
+            ("worker", Json::str(name)),
+        ])) {
+            IoStep::Done(()) => {}
+            IoStep::Dropped => continue 'session,
+        }
+        let welcome = match shim_read(&mut stream, &mut fb, &mut shim)? {
+            IoStep::Done(m) => m,
+            IoStep::Dropped => continue 'session,
+        };
+        match op_of(&welcome)? {
+            "welcome" => {}
+            "error" => bail!("dispatcher refused: {}",
+                             welcome.get("message").and_then(|m| m.as_str())
+                             .unwrap_or("?")),
+            other => bail!("expected welcome, got {other:?}"),
+        }
+        let canon = welcome.to_string();
+        match &first_welcome {
+            None => {
+                progress(format!(
+                    "connected to {addr}: run {}",
+                    welcome.get("run").and_then(|r| r.as_str())
+                        .unwrap_or("?")));
+                first_welcome = Some(canon);
+                welcome_doc = Some(welcome);
+            }
+            Some(prev) if *prev == canon => {
+                progress(format!(
+                    "reconnected to {addr} (session {sessions})"));
+            }
+            Some(_) => bail!("run identity changed across reconnect to \
+                              {addr} — refusing to mix results between \
+                              different runs"),
+        }
+        barren = 0;
+        // SAFETY of unwrap: `welcome_doc` was set on the first
+        // successful handshake, and we only get here through one
+        let identity = welcome_doc.clone().unwrap();
+
+        loop {
+            match shim_write(&mut stream, &mut shim, &msg("claim")) {
+                IoStep::Done(()) => {}
+                IoStep::Dropped => continue 'session,
+            }
+            let reply = match shim_read(&mut stream, &mut fb, &mut shim)? {
+                IoStep::Done(m) => m,
+                IoStep::Dropped => continue 'session,
+            };
+            match op_of(&reply)? {
+                "cell" => {
+                    wait_ms = WAIT_BACKOFF_START_MS; // grid is active
+                    let key = reply.get("key").and_then(|k| k.as_str())
+                        .ok_or_else(|| anyhow!("cell reply missing key"))?
+                        .to_string();
+                    progress(format!("claimed {key}"));
+                    // progress marker (and lease refresh) before the
+                    // (long) compute
+                    match shim_write(&mut stream, &mut shim,
+                                     &Json::obj(vec![
+                        ("op", Json::str("heartbeat")),
+                        ("key", Json::str(key.clone())),
+                    ])) {
+                        IoStep::Done(()) => {}
+                        IoStep::Dropped => continue 'session,
+                    }
+                    let ack =
+                        match shim_read(&mut stream, &mut fb, &mut shim)? {
+                            IoStep::Done(m) => m,
+                            IoStep::Dropped => continue 'session,
+                        };
+                    if op_of(&ack)? != "ok" {
+                        bail!("heartbeat not acknowledged: {}",
+                              ack.to_string());
+                    }
+                    let result = match shim.as_deref_mut()
+                        .map(|s| s.on_compute(&key))
+                        .unwrap_or(ComputeFault::None)
+                    {
+                        ComputeFault::Crash => {
+                            progress(format!(
+                                "injected crash mid-compute on {key}"));
+                            continue 'session;
+                        }
+                        ComputeFault::Fail(e) => Err(anyhow!(e)),
+                        ComputeFault::Stall(ms) => {
+                            std::thread::sleep(Duration::from_millis(ms));
+                            compute(&identity, &key)
+                        }
+                        ComputeFault::None => compute(&identity, &key),
+                    };
+                    match result {
+                        Ok(record) => {
+                            match shim_write(&mut stream, &mut shim,
+                                             &Json::obj(vec![
+                                ("op", Json::str("publish")),
+                                ("key", Json::str(key.clone())),
+                                ("record", record),
+                            ])) {
+                                IoStep::Done(()) => {}
+                                IoStep::Dropped => continue 'session,
+                            }
+                            let ack = match shim_read(&mut stream, &mut fb,
+                                                      &mut shim)? {
+                                IoStep::Done(m) => m,
+                                IoStep::Dropped => continue 'session,
+                            };
+                            if op_of(&ack)? != "ok" {
+                                bail!("publish of {key} rejected: {}",
+                                      ack.to_string());
+                            }
+                            computed += 1;
+                        }
+                        Err(e) => {
+                            failed += 1;
+                            progress(format!("cell {key} failed: {e:#}"));
+                            match shim_write(&mut stream, &mut shim,
+                                             &Json::obj(vec![
+                                ("op", Json::str("failed")),
+                                ("key", Json::str(key.clone())),
+                                ("error", Json::str(format!("{e:#}"))),
+                            ])) {
+                                IoStep::Done(()) => {}
+                                IoStep::Dropped => continue 'session,
+                            }
+                            let ack = match shim_read(&mut stream, &mut fb,
+                                                      &mut shim)? {
+                                IoStep::Done(m) => m,
+                                IoStep::Dropped => continue 'session,
+                            };
+                            if op_of(&ack)? != "ok" {
+                                bail!("failure report for {key} rejected: \
+                                       {}", ack.to_string());
+                            }
+                        }
+                    }
+                }
+                "wait" => {
+                    // capped jittered exponential backoff: a fleet
+                    // polling a near-drained grid spreads out instead
+                    // of hammering the dispatcher in lockstep
+                    let ms = ((wait_ms as f64)
+                              * (0.5 + jitter.uniform())) as u64;
+                    std::thread::sleep(Duration::from_millis(ms.max(1)));
+                    wait_ms = (wait_ms * 2).min(WAIT_BACKOFF_CAP_MS);
+                }
+                "done" => break 'session,
+                "error" => bail!("dispatcher error: {}",
+                                 reply.get("message")
+                                 .and_then(|m| m.as_str()).unwrap_or("?")),
+                other => bail!("unexpected dispatcher reply {other:?}"),
+            }
+        }
+    }
+    progress(format!("done: {computed} computed, {failed} failed, \
+                      {reconnects} reconnect(s)"));
+    // SAFETY of expect: `done` is only reachable after a handshake
+    let welcome = welcome_doc.expect("done implies a completed handshake");
+    Ok(WorkerOutcome { computed, failed, reconnects, welcome })
 }

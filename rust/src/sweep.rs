@@ -526,6 +526,12 @@ pub struct SweepOutcome {
     pub resumed: usize,
     /// built-in sanity assertion failures (empty = all hold)
     pub violations: Vec<String>,
+    /// duplicate worker publishes absorbed from requeue races (each one
+    /// verified byte-identical to the first record); always 0 single-box
+    pub duplicates: usize,
+    /// `(cell id, error)` for cells quarantined after repeated worker
+    /// compute failures, in canonical cell order; always empty single-box
+    pub quarantined: Vec<(String, String)>,
 }
 
 /// Full validation of a cell record against the identity it is claimed
@@ -578,6 +584,18 @@ impl SweepStore {
             registry: Registry::local(root),
             root: root.to_path_buf(),
             legacy: legacy.map(|p| p.to_path_buf()),
+            seed,
+        }
+    }
+
+    /// A store over an already-built [`Registry`] (custom backend — the
+    /// chaos harness injects torn writes this way).  No legacy dir, and
+    /// [`SweepStore::object_file`] is meaningless for non-FS backends.
+    pub fn with_registry(registry: Registry, seed: u64) -> SweepStore {
+        SweepStore {
+            registry,
+            root: PathBuf::new(),
+            legacy: None,
             seed,
         }
     }
@@ -669,17 +687,38 @@ fn run_cell(arts: &ModelArtifacts, calib: &CalibStats, key: &CellKey,
 /// by the single-box driver and the distributed dispatcher — one
 /// assembly path is what makes a distributed `report.json` byte-identical
 /// to a single-box one.
+///
+/// `quarantined` lists `(cell id, error)` pairs for cells pulled from
+/// the grid after repeated worker failures, in canonical cell order.  A
+/// `quarantined` field is added to the report **only when non-empty**,
+/// so a fault-free distributed run's bytes are identical to the
+/// single-box run's (which always passes `&[]`).
 pub fn assemble_report(model: &str, run_tag: &str, iters: usize,
-                       records: &[Json])
+                       records: &[Json], quarantined: &[(String, String)])
                        -> Result<(String, String, Vec<String>)> {
-    let report_json = Json::obj(vec![
+    let mut pairs = vec![
         ("schema", Json::str("lrc-sweep-v1")),
         ("model", Json::str(model)),
         ("run", Json::str(run_tag)),
         ("iters", Json::num(iters as f64)),
         ("cells", Json::Arr(records.to_vec())),
-    ]).to_string();
-    let markdown = markdown_table(records)?;
+    ];
+    if !quarantined.is_empty() {
+        pairs.push(("quarantined", Json::Arr(
+            quarantined.iter().map(|(id, err)| Json::obj(vec![
+                ("error", Json::str(err.clone())),
+                ("key", Json::str(id.clone())),
+            ])).collect())));
+    }
+    let report_json = Json::obj(pairs).to_string();
+    let mut markdown = markdown_table(records)?;
+    if !quarantined.is_empty() {
+        markdown.push_str("\nQuarantined cells (no record; repeated \
+                           worker failures):\n");
+        for (id, err) in quarantined {
+            markdown.push_str(&format!("  {id}: {err}\n"));
+        }
+    }
     let violations = sanity_violations(records)?;
     Ok((report_json, markdown, violations))
 }
@@ -773,9 +812,9 @@ pub fn run_grid(arts: &ModelArtifacts,
     }
 
     let (report_json, markdown, violations) =
-        assemble_report(&model, run_tag, axes.iters, &records)?;
+        assemble_report(&model, run_tag, axes.iters, &records, &[])?;
     Ok(SweepOutcome { records, report_json, markdown, computed, resumed,
-                      violations })
+                      violations, duplicates: 0, quarantined: Vec::new() })
 }
 
 // ---------------------------------------------------------------------------
@@ -798,6 +837,7 @@ pub fn run_grid(arts: &ModelArtifacts,
 pub fn serve_grid_distributed(arts: &ModelArtifacts, axes: &SweepAxes,
                               run_tag: &str, store: &SweepStore,
                               resume: bool, listener: &TcpListener,
+                              opts: service::ServeOpts,
                               mut progress: impl FnMut(String))
                               -> Result<SweepOutcome> {
     axes.validate()?;
@@ -827,7 +867,7 @@ pub fn serve_grid_distributed(arts: &ModelArtifacts, axes: &SweepAxes,
         ("iters", Json::num(axes.iters as f64)),
     ]);
     let outcome = service::serve_grid(
-        listener, &welcome, &ids, &prefilled,
+        listener, &welcome, &ids, &prefilled, opts,
         |id, rec| {
             let cell = CellKey::parse(id)?;
             if !valid_cell_record(rec, &cell, axes.iters, run_tag) {
@@ -838,31 +878,45 @@ pub fn serve_grid_distributed(arts: &ModelArtifacts, axes: &SweepAxes,
         },
         &mut progress)?;
 
-    // fold in canonical order — identical to the single-box fold
+    // fold in canonical order — identical to the single-box fold;
+    // quarantined cells have no record and are surfaced separately (in
+    // the same canonical order, so the report is deterministic at any
+    // worker count)
+    let quarantined: Vec<(String, String)> = ids.iter()
+        .filter_map(|id| outcome.quarantined.get(id)
+                    .map(|q| (id.clone(), q.error.clone())))
+        .collect();
     let records: Vec<Json> = ids.iter()
+        .filter(|id| !outcome.quarantined.contains_key(id.as_str()))
         .map(|id| outcome.records.get(id).cloned()
              .ok_or_else(|| anyhow!("dispatcher finished without cell {id}")))
         .collect::<Result<Vec<_>>>()?;
     let (report_json, markdown, violations) =
-        assemble_report(&model, run_tag, axes.iters, &records)?;
+        assemble_report(&model, run_tag, axes.iters, &records,
+                        &quarantined)?;
     Ok(SweepOutcome { records, report_json, markdown,
-                      computed: outcome.computed, resumed, violations })
+                      computed: outcome.computed, resumed, violations,
+                      duplicates: outcome.duplicates, quarantined })
 }
 
-/// The `lrc sweep-worker` loop: connect to a dispatcher, rebuild the
-/// run's inputs from its welcome document, then claim → quantize →
-/// publish until the grid is done.  Returns the number of cells this
-/// worker computed.
+/// The per-cell compute a synthetic-grid worker runs: rebuild the run's
+/// inputs *only* from the dispatcher's welcome document (run tag, model,
+/// seed, iters — never local flags, which could skew the identity),
+/// quantize the claimed cell, return its record.  Model artifacts and
+/// per-group calibration stats are built lazily on the first cell and
+/// cached across cells — exactly the shared-calibration structure of the
+/// single-box driver, so a worker's records are bit-identical to locally
+/// computed ones.
 ///
-/// The model artifacts and per-group calibration stats are rebuilt
-/// lazily from the welcome seed and cached across cells — exactly the
-/// shared-calibration structure of the single-box driver, so a worker's
-/// records are bit-identical to locally computed ones.
-pub fn worker_loop(addr: &str, pool: &Pool,
-                   mut progress: impl FnMut(String)) -> Result<usize> {
+/// Shared by [`worker_loop`] and the chaos harness, which drives
+/// [`service::run_worker`] directly with a fault shim wrapped around
+/// this same compute.
+pub fn synthetic_cell_compute(pool: &Pool)
+                              -> impl FnMut(&Json, &str) -> Result<Json>
+                                 + '_ {
     let mut arts: Option<ModelArtifacts> = None;
     let mut calib: BTreeMap<Option<usize>, CalibStats> = BTreeMap::new();
-    let outcome = service::run_worker(addr, |welcome, id| {
+    move |welcome, id| {
         let get_str = |f: &str| {
             welcome.get(f).and_then(|v| v.as_str())
                 .ok_or_else(|| anyhow!("dispatcher welcome missing {f}"))
@@ -894,8 +948,18 @@ pub fn worker_loop(addr: &str, pool: &Pool,
             arts, &calib[&cell.a_group], &graph,
             cell.method.pipeline_method(), &cfg, pool)?;
         Ok(cell_record(&cell, run_tag, iters, &report, None))
-    }, &mut progress)?;
-    Ok(outcome.computed)
+    }
+}
+
+/// The `lrc sweep-worker` loop: connect to a dispatcher as `name`,
+/// rebuild the run's inputs from its welcome document, then claim →
+/// quantize → publish (or report `failed`) until the grid is done,
+/// reconnecting through transport faults.
+pub fn worker_loop(addr: &str, name: &str, pool: &Pool,
+                   mut progress: impl FnMut(String))
+                   -> Result<service::WorkerOutcome> {
+    service::run_worker(addr, name, None, synthetic_cell_compute(pool),
+                        &mut progress)
 }
 
 /// The aligned Table-3-style view of the grid.

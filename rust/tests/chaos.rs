@@ -1,0 +1,190 @@
+//! Fault injection + fleet robustness, end to end:
+//!
+//!   * the full `lrc chaos --fast` harness converges: transient faults
+//!     leave the merged report byte-identical to the fault-free run,
+//!     poison cells quarantine identically at every worker count, torn
+//!     registry objects resume as counted misses;
+//!   * at the service layer: an expired claim lease requeues the cell
+//!     and the resulting duplicate publish is absorbed (counted, byte-
+//!     verified) rather than papered over;
+//!   * a poison cell is quarantined after the configured number of
+//!     `failed` frames while every worker process survives, with the
+//!     same outcome for 1-worker and 2-worker fleets;
+//!   * a worker rides out injected connection resets by reconnecting
+//!     and re-validating run identity, and the grid still completes.
+//!
+//! Threads are used freely here: this tree is not under the
+//! `lrc analyze` concurrency fences, which bind `rust/src` only.
+
+use std::collections::BTreeMap;
+use std::net::TcpListener;
+
+use anyhow::Result;
+use lrc::chaos::{run_chaos, ChaosConfig};
+use lrc::par::Pool;
+use lrc::registry::faults::FaultPlan;
+use lrc::registry::service::{run_worker, serve_grid, ServeOpts,
+                             ServeOutcome};
+use lrc::sweep::SweepAxes;
+use lrc::util::Json;
+
+fn rec_for(id: &str) -> Json {
+    Json::obj(vec![("key", Json::str(id)), ("v", Json::num(1.0))])
+}
+
+fn svc_welcome() -> Json {
+    Json::obj(vec![("run", Json::str("svc-test"))])
+}
+
+/// Service-level fleet: trivial compute, full control over faults and
+/// per-cell behavior.  Returns the dispatcher outcome and each worker's
+/// `(computed, failed, reconnects)`.
+fn svc_fleet(cells: &[&str], opts: ServeOpts, n_workers: usize,
+             plan: &FaultPlan,
+             slow_ms: impl Fn(&str) -> u64 + Clone + Send + 'static,
+             fail: impl Fn(&str) -> bool + Clone + Send + 'static)
+             -> (ServeOutcome, Vec<(usize, usize, usize)>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let cell_vec: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+    let dispatcher = std::thread::spawn(move || {
+        serve_grid(&listener, &svc_welcome(), &cell_vec, &BTreeMap::new(),
+                   opts, |_, _| Ok(()), |_| {})
+    });
+    let workers: Vec<_> = (0..n_workers).map(|i| {
+        let addr = addr.clone();
+        let name = format!("w{i}");
+        let mut shim = plan.shim_for(&name);
+        let slow_ms = slow_ms.clone();
+        let fail = fail.clone();
+        std::thread::spawn(move || -> Result<(usize, usize, usize)> {
+            let out = run_worker(&addr, &name, Some(&mut shim),
+                                 |_w: &Json, id: &str| {
+                let ms = slow_ms(id);
+                if ms > 0 {
+                    std::thread::sleep(
+                        std::time::Duration::from_millis(ms));
+                }
+                if fail(id) {
+                    anyhow::bail!("boom: {id} always fails");
+                }
+                Ok(rec_for(id))
+            }, |_| {})?;
+            Ok((out.computed, out.failed, out.reconnects))
+        })
+    }).collect();
+    let outcome = dispatcher.join().unwrap().unwrap();
+    let stats = workers.into_iter()
+        .map(|w| w.join().unwrap().expect("worker process must survive"))
+        .collect();
+    (outcome, stats)
+}
+
+#[test]
+fn chaos_fast_harness_converges_with_byte_identical_reports() {
+    let cfg = ChaosConfig {
+        worker_counts: vec![1, 2], // trimmed from --fast for test time
+        ..ChaosConfig::fast(2024)
+    };
+    let out = run_chaos(&cfg, &Pool::new(2), |_| {}).unwrap();
+    assert_eq!(out.cells, SweepAxes::fast().cells().len());
+    assert_eq!(out.fleets, 4, "2 transient + 2 poison fleets");
+    assert!(out.fired > 0, "the schedule must actually fire faults");
+    assert!(out.torn_fired > 0, "at least one publish must be torn");
+    // run_chaos already asserted byte-identity internally; re-check the
+    // surfaced artifacts anyway
+    assert_eq!(out.merged_report, out.baseline_report);
+    assert_eq!(out.torn_recomputed as u64, out.torn_fired,
+               "resume recomputes exactly the torn objects");
+    assert_eq!(out.quarantined.len(), 1, "--fast poisons one cell");
+    assert!(out.quarantined[0].1.contains("poison"),
+            "quarantine reason must carry the injected error: {:?}",
+            out.quarantined[0]);
+    assert!(out.failures >= out.quarantined.len() * cfg.quarantine_after,
+            "each quarantine takes {} failed frames", cfg.quarantine_after);
+}
+
+#[test]
+fn expired_lease_requeues_and_duplicate_publish_is_absorbed() {
+    // whoever claims "slow" sleeps far past the lease without
+    // heartbeating, so the dispatcher requeues it and a second worker
+    // publishes first; the straggler's publish must be absorbed as a
+    // byte-verified duplicate, never an error, never a wrong report
+    let opts = ServeOpts { lease_polls: 25, quarantine_after: 0 };
+    let plan = FaultPlan::empty(0);
+    let (out, stats) = svc_fleet(
+        &["fast1", "fast2", "slow"], opts, 2, &plan,
+        |id| if id == "slow" { 600 } else { 0 },
+        |_| false);
+    assert_eq!(out.records.len(), 3, "every cell completes");
+    for id in ["fast1", "fast2", "slow"] {
+        assert_eq!(out.records.get(id), Some(&rec_for(id)));
+    }
+    assert!(out.requeues >= 1, "the expired lease must requeue the cell");
+    assert!(out.duplicates >= 1,
+            "the straggler's publish must be counted as a duplicate");
+    assert!(out.quarantined.is_empty());
+    let computed: usize = stats.iter().map(|s| s.0).sum();
+    assert!(computed >= 3, "unique publishes plus absorbed duplicates");
+}
+
+#[test]
+fn poison_cell_quarantines_identically_while_workers_survive() {
+    let opts = ServeOpts { lease_polls: 0, quarantine_after: 2 };
+    let plan = FaultPlan::empty(0);
+    let mut seen: Option<(Vec<String>, String)> = None;
+    for n_workers in [1usize, 2] {
+        let (out, stats) = svc_fleet(
+            &["good1", "poison", "good2"], opts, n_workers, &plan,
+            |_| 0,
+            |id| id == "poison");
+        // the grid completes without the poison cell
+        let keys: Vec<&String> = out.records.keys().collect();
+        assert_eq!(keys, ["good1", "good2"],
+                   "poison must be pulled, the rest must finish \
+                    ({n_workers} workers)");
+        assert_eq!(out.quarantined.len(), 1);
+        let q = &out.quarantined["poison"];
+        assert_eq!(q.attempts, 2,
+                   "quarantine trips on the configured attempt count");
+        assert!(q.error.contains("boom"),
+                "the worker's error string must surface: {:?}", q.error);
+        // every worker lived through it and reported via `failed`
+        let failed: usize = stats.iter().map(|s| s.1).sum();
+        assert_eq!(failed, 2, "exactly quarantine_after failed frames");
+        // deterministic across fleet sizes: same quarantined set, same
+        // surviving records
+        let shape = (out.quarantined.keys().cloned().collect::<Vec<_>>(),
+                     out.records.iter()
+                     .map(|(k, v)| format!("{k}={v}",
+                                           v = v.to_string()))
+                     .collect::<Vec<_>>().join(";"));
+        match &seen {
+            None => seen = Some(shape),
+            Some(first) => assert_eq!(&shape, first,
+                "quarantine outcome must not depend on worker count"),
+        }
+    }
+}
+
+#[test]
+fn worker_reconnects_through_injected_resets_and_grid_completes() {
+    // a hand-written plan: session 1 loses its first publish mid-write,
+    // and a later read is reset too — the worker must reconnect (twice),
+    // re-validate the welcome and still drain the grid
+    let mut plan = FaultPlan::empty(7);
+    plan.write_resets.insert(("w0".to_string(), 3));
+    plan.read_resets.insert(("w0".to_string(), 8));
+    let opts = ServeOpts { lease_polls: 0, quarantine_after: 2 };
+    let (out, stats) = svc_fleet(
+        &["a", "b", "c", "d"], opts, 1, &plan,
+        |_| 0,
+        |_| false);
+    assert_eq!(out.records.len(), 4, "every cell completes despite resets");
+    let (_, failed, reconnects) = stats[0];
+    assert!(reconnects >= 2, "both injected faults drop the session \
+            (got {reconnects} reconnects)");
+    assert_eq!(failed, 0, "transport faults are not compute failures");
+    assert!(out.workers_seen >= 3,
+            "each reconnect shows up as a fresh connection");
+}

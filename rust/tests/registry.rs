@@ -21,7 +21,8 @@ use lrc::par::Pool;
 use lrc::pipeline::{cell_graph, quantize_model_cached, report_to_json,
                     CalibStats, Method};
 use lrc::quant::{QuantConfig, Quantizer};
-use lrc::registry::{FsRegistry, ObjectKey, Registry};
+use lrc::registry::service::ServeOpts;
+use lrc::registry::{list_objects, FsRegistry, ObjectKey, Registry};
 use lrc::sweep::{run_grid, serve_grid_distributed, synthetic_artifacts,
                  synthetic_calib, worker_loop, SweepAxes, SweepStore};
 use lrc::util::Json;
@@ -163,19 +164,19 @@ fn distributed_sweep_report_is_byte_identical_to_single_box() {
         let d_axes = axes.clone();
         let dispatcher = std::thread::spawn(move || {
             serve_grid_distributed(&d_arts, &d_axes, TAG, &store, false,
-                                   &listener, |_| {})
+                                   &listener, ServeOpts::default(), |_| {})
         });
-        let workers: Vec<_> = (0..n_workers).map(|_| {
+        let workers: Vec<_> = (0..n_workers).map(|i| {
             let addr = addr.clone();
             std::thread::spawn(move || {
                 let pool = Pool::new(1);
-                worker_loop(&addr, &pool, |_| {})
+                worker_loop(&addr, &format!("w{i}"), &pool, |_| {})
             })
         }).collect();
 
         let outcome = dispatcher.join().unwrap().unwrap();
         let computed_by_workers: usize = workers.into_iter()
-            .map(|w| w.join().unwrap().unwrap())
+            .map(|w| w.join().unwrap().unwrap().computed)
             .sum();
         assert_eq!(outcome.report_json, single.report_json,
                    "distributed report differs at {n_workers} worker(s)");
@@ -210,14 +211,14 @@ fn distributed_resume_serves_finished_cells_without_recompute() {
     let d_axes = axes.clone();
     let dispatcher = std::thread::spawn(move || {
         serve_grid_distributed(&d_arts, &d_axes, TAG, &store, true,
-                               &listener, |_| {})
+                               &listener, ServeOpts::default(), |_| {})
     });
     let worker = std::thread::spawn(move || {
         let pool = Pool::new(1);
-        worker_loop(&addr, &pool, |_| {})
+        worker_loop(&addr, "w0", &pool, |_| {})
     });
     let outcome = dispatcher.join().unwrap().unwrap();
-    assert_eq!(worker.join().unwrap().unwrap(), 0,
+    assert_eq!(worker.join().unwrap().unwrap().computed, 0,
                "a fully-resumed grid must not recompute on workers");
     assert_eq!(outcome.computed, 0);
     assert_eq!(outcome.resumed, axes.cells().len());
@@ -264,5 +265,80 @@ fn legacy_fragment_dirs_migrate_into_the_registry() {
     assert_eq!(again.resumed, axes.cells().len());
     assert_eq!(again.report_json, fresh.report_json);
     assert_eq!(store.counters().hits as usize, axes.cells().len());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn torn_objects_in_both_orderings_read_as_counted_misses() {
+    let dir = tmp_dir("torn");
+    let reg = Registry::local(&dir);
+    let fs = FsRegistry::new(&dir);
+    let key = ObjectKey::new("sweep-cell", "synthetic", "lrc", &test_cfg(),
+                             11, "torn-run");
+    let payload = Json::obj(vec![("v", Json::num(1.0))]);
+
+    // ordering 1: blob present, meta missing — the commit point (the
+    // meta rename) never happened, so the orphan blob is invisible and
+    // reads as a *plain* miss, not a corruption
+    let digest = reg.publish(&key, &payload, Some(b"blobdata")).unwrap();
+    std::fs::remove_file(fs.object_file(&digest)).unwrap();
+    assert!(reg.get(&key).unwrap().is_none(),
+            "an orphan blob must never surface");
+    assert_eq!(reg.counters().misses, 1);
+    assert_eq!(reg.counters().corrupt, 0,
+               "a missing meta is absence, not corruption");
+
+    // ordering 2: meta present, blob missing — the meta promises a blob
+    // that isn't there, which is a *counted* corruption (and still a
+    // miss, never an error or a blobless answer)
+    reg.publish(&key, &payload, Some(b"blobdata")).unwrap();
+    std::fs::remove_file(fs.blob_file(&digest)).unwrap();
+    assert!(reg.get(&key).unwrap().is_none(),
+            "a meta without its blob must read as a miss");
+    assert_eq!(reg.counters().corrupt, 1,
+               "a dangling meta is a counted corruption");
+    assert_eq!(reg.counters().misses, 2);
+
+    // a republish over either tear heals the object completely
+    reg.publish(&key, &payload, Some(b"blobdata")).unwrap();
+    let obj = reg.get(&key).unwrap().expect("healed object must read");
+    assert_eq!(obj.payload().unwrap(), &payload);
+    assert_eq!(obj.blob.as_deref(), Some(&b"blobdata"[..]));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn registry_ls_classifies_ok_corrupt_and_orphan_objects() {
+    let dir = tmp_dir("ls");
+    let reg = Registry::local(&dir);
+    let fs = FsRegistry::new(&dir);
+    let payload = Json::obj(vec![("v", Json::num(3.0))]);
+
+    // an empty (even absent) store lists cleanly
+    assert!(list_objects(&dir).unwrap().is_empty());
+
+    let k_ok = ObjectKey::new("sweep-cell", "synthetic", "lrc", &test_cfg(),
+                              1, "ls-run");
+    let k_bad = ObjectKey::new("sweep-cell", "synthetic", "rtn", &test_cfg(),
+                               2, "ls-run");
+    let k_orphan = ObjectKey::new("quant-bundle", "synthetic", "svd",
+                                  &test_cfg(), 3, "ls-run");
+    let d_ok = reg.publish(&k_ok, &payload, Some(b"good")).unwrap();
+    let d_bad = reg.publish(&k_bad, &payload, None).unwrap();
+    let d_orphan = reg.publish(&k_orphan, &payload, Some(b"orphan")).unwrap();
+    // corrupt the second meta, orphan the third's blob
+    std::fs::write(fs.object_file(&d_bad), "garbage").unwrap();
+    std::fs::remove_file(fs.object_file(&d_orphan)).unwrap();
+
+    let rows = list_objects(&dir).unwrap();
+    assert_eq!(rows.len(), 3);
+    let by_digest = |d: &str| rows.iter().find(|r| r.digest == d).unwrap();
+    let ok = by_digest(&d_ok);
+    assert_eq!((ok.status, ok.kind.as_str(), ok.method.as_str(),
+                ok.blob_len),
+               ("ok", "sweep-cell", "lrc", Some(4)));
+    assert_eq!(by_digest(&d_bad).status, "corrupt");
+    let orphan = by_digest(&d_orphan);
+    assert_eq!((orphan.status, orphan.blob_len), ("orphan-blob", Some(6)));
     let _ = std::fs::remove_dir_all(&dir);
 }
